@@ -1,0 +1,77 @@
+//! Location-aware planning over a worldwide camera fleet (the Fig-4/Fig-6
+//! setting): shows the coverage-circle effect and compares NL / ARMVAC / GCL.
+//!
+//! Run: `cargo run --release --offline --example global_cameras`
+
+use camflow::bench::Table;
+use camflow::cameras::scenarios;
+use camflow::catalog::Catalog;
+use camflow::coordinator::{Planner, PlannerConfig};
+use camflow::geo;
+use camflow::util::fmt_usd;
+
+fn main() -> camflow::Result<()> {
+    let catalog = Catalog::builtin();
+
+    // Part 1 — Fig 4: the six cameras and their coverage circles.
+    println!("== Fig 4: coverage circles ==");
+    let cams = scenarios::fig4_cameras();
+    for fps in [20.0, 3.0] {
+        let radius = geo::coverage_radius_km(fps);
+        println!("\ndesired {fps} fps -> max RTT {:.0} ms -> radius {:.0} km", geo::rtt_budget_ms(fps), radius);
+        let mut covered_by: Vec<Vec<&str>> = Vec::new();
+        for cam in &cams {
+            let regions: Vec<&str> = catalog
+                .regions
+                .iter()
+                .filter(|r| geo::reachable(&cam.location, &r.location, fps))
+                .map(|r| r.id)
+                .collect();
+            println!("  {:<12} reachable regions: {}", cam.city, regions.join(", "));
+            covered_by.push(regions);
+        }
+    }
+
+    // Part 2 — Fig 6 snapshot: NL / ARMVAC / GCL at a mid-band frame rate.
+    println!("\n== Fig 6 snapshot: 30 cameras at 4 fps ==");
+    let requests = scenarios::fig6_workload(30, 4.0, 1);
+    let mut t = Table::new(&["Manager", "Instances", "Regions", "Cost $/h", "vs NL"]);
+    let mut nl_cost = None;
+    for (name, cfg) in [
+        ("NL", PlannerConfig::nl()),
+        ("ARMVAC", PlannerConfig::armvac()),
+        ("GCL", PlannerConfig::gcl()),
+    ] {
+        let plan = Planner::new(catalog.clone(), cfg).plan(&requests)?;
+        let base = *nl_cost.get_or_insert(plan.cost_per_hour);
+        t.row(&[
+            name.to_string(),
+            plan.instances.len().to_string(),
+            plan.regions_used().to_string(),
+            format!("{:.3}", plan.cost_per_hour),
+            format!("{:.0}%", (1.0 - plan.cost_per_hour / base) * 100.0),
+        ]);
+    }
+    t.print();
+
+    // Part 3 — where does GCL send the Tokyo cameras?
+    println!("\n== GCL placements ==");
+    let plan = Planner::new(catalog.clone(), PlannerConfig::gcl()).plan(&requests)?;
+    for inst in plan.instances.iter().take(8) {
+        let cities: Vec<String> = inst
+            .streams
+            .iter()
+            .map(|&s| requests[s].camera.city.clone())
+            .collect();
+        println!(
+            "  {} ({}) <- {}",
+            inst.label,
+            fmt_usd(inst.hourly_cost),
+            cities.join(", ")
+        );
+    }
+    if plan.instances.len() > 8 {
+        println!("  ... and {} more instances", plan.instances.len() - 8);
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: plan the paper's Fig-3 Scenario 1 with all three strategies.
+//!
+//! Run: `cargo run --release --offline --example quickstart`
+
+use camflow::bench::Table;
+use camflow::cameras::scenarios;
+use camflow::catalog::Catalog;
+use camflow::coordinator::{Planner, PlannerConfig};
+use camflow::util::fmt_usd;
+
+fn main() -> camflow::Result<()> {
+    // The Fig-3 instance pool: the paper's $0.419 CPU box and $0.650 GPU box.
+    let catalog =
+        Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+
+    let scenario = scenarios::fig3_scenario1();
+    println!("{}: {} streams", scenario.name, scenario.requests.len());
+    for r in &scenario.requests {
+        println!(
+            "  {} ({}, native {} fps)",
+            r.label(),
+            r.camera.resolution,
+            r.camera.native_fps
+        );
+    }
+    println!();
+
+    let mut table = Table::new(&["Strategy", "Non-GPU", "GPU", "Hourly cost", "Savings"]);
+    let configs = [
+        ("ST1 (CPU only)", PlannerConfig::st1()),
+        ("ST2 (GPU only)", PlannerConfig::st2()),
+        ("ST3 (CPU+GPU packing)", PlannerConfig::st3()),
+    ];
+    let mut costs = Vec::new();
+    for (name, cfg) in configs {
+        let plan = Planner::new(catalog.clone(), cfg).plan(&scenario.requests)?;
+        costs.push((name, plan.non_gpu, plan.gpu, plan.cost_per_hour));
+    }
+    let worst = costs.iter().map(|c| c.3).fold(0.0, f64::max);
+    for (name, non_gpu, gpu, cost) in costs {
+        table.row(&[
+            name.to_string(),
+            non_gpu.to_string(),
+            gpu.to_string(),
+            fmt_usd(cost),
+            format!("{:.0}%", (1.0 - cost / worst) * 100.0),
+        ]);
+    }
+    table.print();
+    println!("\n(The paper's Fig 3, Scenario 1 row: ST1 4x non-GPU $1.676, ST2/ST3 1x GPU $0.650, 61% saving.)");
+    Ok(())
+}

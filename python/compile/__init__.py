@@ -1,0 +1,3 @@
+"""camflow compile path — L2 JAX models + L1 Pallas kernels, AOT-lowered to HLO
+text consumed by the Rust PJRT runtime. Build-time only; never on the request
+path."""

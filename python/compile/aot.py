@@ -1,0 +1,105 @@
+"""AOT compile path: lower every (analysis program, batch size) variant to HLO
+*text* and export parameters + a manifest for the Rust runtime.
+
+HLO text (NOT ``lowered.compiler_ir(...).serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--models vgg16,zf]
+                              [--batches 1,4,8] [--seed 0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import numpy as np
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_params(arch: str, seed: int, out_dir: str) -> str:
+    """Concatenate all parameters (row-major f32 LE) into <arch>.params.bin."""
+    params = M.init_params(arch, seed)
+    path = os.path.join(out_dir, f"{arch}.params.bin")
+    with open(path, "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+    return os.path.basename(path)
+
+
+def lower_model(arch: str, batch: int, out_dir: str) -> dict:
+    import jax
+
+    fn, specs = M.make_jit(arch, batch)
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{arch}_b{batch}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_shape = M.output_shape(arch, batch)
+    return {
+        "name": arch,
+        "batch": batch,
+        "hlo": fname,
+        "params_bin": f"{arch}.params.bin",
+        "param_shapes": [list(s) for s in M.param_shapes(arch)],
+        "input_shape": [batch, M.INPUT_SIZE, M.INPUT_SIZE, 3],
+        "output_shape": list(out_shape),
+        "flops_per_frame": M.flops_per_frame(arch),
+        "hlo_chars": len(text),
+    }
+
+
+def main(argv: List[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="vgg16,zf")
+    ap.add_argument("--batches", default="1,4,8")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    batches = [int(b) for b in args.batches.split(",") if b.strip()]
+
+    entries = []
+    for arch in models:
+        export_params(arch, args.seed, args.out_dir)
+        for batch in batches:
+            entry = lower_model(arch, batch, args.out_dir)
+            entries.append(entry)
+            print(
+                f"lowered {arch} b{batch}: {entry['hlo_chars']} chars, "
+                f"{entry['flops_per_frame'] / 1e6:.1f} MFLOP/frame"
+            )
+
+    manifest = {
+        "version": 1,
+        "input_size": M.INPUT_SIZE,
+        "num_classes": M.NUM_CLASSES,
+        "num_anchors": M.NUM_ANCHORS,
+        "seed": args.seed,
+        "models": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(entries)} model variants to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

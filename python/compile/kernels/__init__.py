@@ -1,0 +1,13 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from . import ref  # noqa: F401
+from .matmul import (  # noqa: F401
+    matmul,
+    vmem_bytes,
+    mxu_utilization,
+    block_report,
+    VMEM_BUDGET,
+    DEFAULT_BM,
+    DEFAULT_BK,
+    DEFAULT_BN,
+)

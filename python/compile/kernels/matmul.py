@@ -1,0 +1,195 @@
+"""L1 — Pallas tiled matmul kernel (the compute hot-spot of every analysis program).
+
+The paper's analysis programs (VGG16 / ZF object detectors) spend essentially all
+of their time in convolutions, which we lower as im2col + matmul. This module
+implements that matmul as a single Pallas kernel with a fused bias+ReLU epilogue,
+tiled for the TPU MXU (128x128 systolic array).
+
+Hardware adaptation (paper ran CUDA/Caffe on EC2 GPUs):
+  * threadblock K-loop + shared-memory staging  ->  grid K dimension + VMEM
+    BlockSpec tiles (the accumulator lives in the output ref across K steps),
+  * warp epilogue fusion                        ->  bias+ReLU on the final K step,
+  * tensor-core WMMA tiles                      ->  MXU-shaped blocks (multiples
+    of (8, 128) for f32).
+
+Kernels are lowered with ``interpret=True`` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); real-TPU performance is estimated from the VMEM footprint
+and MXU utilization of the chosen block shapes (see ``vmem_bytes`` /
+``mxu_utilization`` and DESIGN.md section "Perf").
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly defaults: f32 operands tile as (8, 128) in VMEM; 128x128 blocks
+# keep the systolic array fully fed while 3 tiles x 64KiB stays far below VMEM.
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+# TPU v4-class VMEM budget per core (bytes). Used only for static estimates.
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, relu: bool, has_bias: bool):
+    """Grid = (M/bm, N/bn, K/bk); K innermost so o_ref accumulates in VMEM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if has_bias:
+            acc = acc + b_ref[...]
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest power-of-two block <= pref that keeps padding overhead sane."""
+    b = pref
+    while b > 8 and b > dim:
+        b //= 2
+    return max(b, 8)
+
+
+def _pick_bm(m: int, bk: int, bn: int) -> int:
+    """Row-block size: grow with M (fewer grid steps) within the VMEM budget.
+
+    Perf note (EXPERIMENTS.md §Perf/L1): every grid step materializes the
+    output block, so tiny row blocks make the M-loop overhead quadratic in M
+    on the interpret/CPU path and waste prefetch bandwidth on TPU. Growing bm
+    until the working set nears half of VMEM cut end-to-end inference time
+    ~3-8x at batch 8 while keeping (8, 128)-aligned MXU tiles.
+    """
+    bm = _pick_block(m, DEFAULT_BM)
+    while bm < 8192 and bm < m and vmem_bytes(bm * 2, bk, bn) <= VMEM_BUDGET // 2:
+        bm *= 2
+    return bm
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    relu: bool = False,
+    bm: Optional[int] = None,
+    bk: Optional[int] = None,
+    bn: Optional[int] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``maximum(x @ w + b, 0)`` (bias/ReLU optional) via the Pallas kernel.
+
+    Shapes: x (M, K), w (K, N), b (N,) or (1, N). Arbitrary M/K/N — inputs are
+    zero-padded up to block multiples and the result is sliced back.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects rank-2 operands, got {x.shape} @ {w.shape}")
+    M, K = x.shape
+    K2, N = w.shape
+    if K != K2:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
+
+    bk = bk or _pick_block(K, DEFAULT_BK)
+    bn = bn or _pick_block(N, DEFAULT_BN)
+    bm = bm or _pick_bm(M, bk, bn)
+
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, bk), 1, bn)
+    has_bias = b is not None
+    if has_bias:
+        bb = jnp.asarray(b, jnp.float32).reshape(1, -1)
+        if bb.shape[1] != N:
+            raise ValueError(f"bias shape {b.shape} incompatible with N={N}")
+        bp = _pad_to(bb, 1, bn)
+    else:
+        bp = jnp.zeros((1, bn), jnp.float32)
+
+    Mp, Kp = xp.shape
+    _, Np = wp.shape
+    nk = Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk, relu=relu, has_bias=has_bias),
+        grid=(Mp // bm, Np // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Static TPU performance estimates (structure-level; interpret-mode wallclock
+# is CPU-numpy time and NOT a TPU proxy — see DESIGN.md "Perf").
+# ---------------------------------------------------------------------------
+
+def vmem_bytes(bm: int, bk: int, bn: int, dtype_bytes: int = 4) -> int:
+    """Resident VMEM per grid step: x tile + w tile + bias tile + out/acc tile.
+
+    Double-buffered inputs (Pallas prefetches the next block while computing)
+    double the x/w/bias contribution.
+    """
+    x_tile = bm * bk * dtype_bytes
+    w_tile = bk * bn * dtype_bytes
+    b_tile = bn * dtype_bytes
+    o_tile = bm * bn * 4  # accumulator is always f32
+    return 2 * (x_tile + w_tile + b_tile) + o_tile
+
+
+def mxu_utilization(bm: int, bk: int, bn: int) -> float:
+    """Fraction of MXU issue slots used by one (bm, bk, bn) block product.
+
+    The 128x128 MXU retires one 128x128x8 f32 MACC block per 8 cycles
+    (f32 runs at 1/8 the bf16 rate through pass-through mode); a block that is
+    not a multiple of the native tile wastes the remainder lanes.
+    """
+    eff = (bm * bn * bk)
+    padded = (
+        -(-bm // 128) * 128 * -(-bn // 128) * 128 * -(-bk // 8) * 8
+    )
+    return eff / padded
+
+
+def block_report(bm: int, bk: int, bn: int) -> dict:
+    """Summary dict used by tests and the perf log."""
+    vb = vmem_bytes(bm, bk, bn)
+    return {
+        "bm": bm,
+        "bk": bk,
+        "bn": bn,
+        "vmem_bytes": vb,
+        "vmem_frac": vb / VMEM_BUDGET,
+        "fits_vmem": vb <= VMEM_BUDGET,
+        "mxu_utilization": mxu_utilization(bm, bk, bn),
+    }

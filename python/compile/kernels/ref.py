@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels and the model layers.
+
+This is the correctness ground truth: every kernel and every composite layer in
+``model.py`` is pytest-checked against these reference implementations at build
+time (before any artifact ships to the Rust runtime).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    relu: bool = False,
+) -> jnp.ndarray:
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        out = out + jnp.asarray(b, jnp.float32).reshape(1, -1)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def conv2d_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    relu: bool = False,
+) -> jnp.ndarray:
+    """NHWC x HWIO -> NHWC convolution via lax.conv_general_dilated."""
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + jnp.asarray(b, jnp.float32).reshape(1, 1, 1, -1)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def maxpool_ref(x: jnp.ndarray, window: int = 2, stride: int = 2) -> jnp.ndarray:
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def softmax_ref(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    x = x - jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=axis, keepdims=True)

@@ -1,0 +1,217 @@
+"""L2 — JAX analysis programs (compact VGG16-style and ZF-style detectors).
+
+The paper analyzes camera streams with two object-detection programs, VGG16
+[Simonyan & Zisserman] and ZF [Zeiler & Fergus]. We build compact versions of
+both (64x64x3 input, single-scale detection head) whose every conv / dense layer
+routes through the L1 Pallas matmul kernel via im2col, so the whole network
+lowers into one HLO module containing the kernel.
+
+Design notes:
+  * Parameters are *inputs* of the lowered function (not baked constants) —
+    they are exported once to ``<name>.params.bin`` and fed by the Rust runtime
+    at session load. This keeps the HLO text small and lets one artifact serve
+    any weight set.
+  * ``im2col`` is written as a static stack of shifted slices so the patch
+    ordering exactly matches a row-major reshape of HWIO weights — no
+    layout-fixup transposes in the lowered module (see DESIGN.md "Perf" L2).
+  * Detection head: 1x1 conv -> A*(5+C) channels over the final grid, reshaped
+    to (N, cells*A, 5+C): [tx, ty, tw, th, objectness, class logits...].
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul
+
+# Detection head geometry (shared by both programs).
+NUM_ANCHORS = 2
+NUM_CLASSES = 4  # person, vehicle, cyclist, other — the CAM2 tracking classes
+HEAD_CH = NUM_ANCHORS * (5 + NUM_CLASSES)
+
+INPUT_SIZE = 64  # HxW of the analysis frame fed to either program
+
+
+# ---------------------------------------------------------------------------
+# Layers (all matmuls go through the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int, same: bool) -> jnp.ndarray:
+    """NHWC -> (N, Ho, Wo, kh*kw*C) patch tensor with static slicing.
+
+    Patch ordering is (di, dj, c) row-major, matching ``w.reshape(kh*kw*C, O)``
+    for HWIO weights.
+    """
+    n, h, w_, c = x.shape
+    if same:
+        # SAME padding; clamp at 0 (kernels smaller than the stride need none).
+        ph = max(0, ((h - 1) // stride) * stride + kh - h)
+        pw = max(0, ((w_ - 1) // stride) * stride + kw - w_)
+        pt, pb = ph // 2, ph - ph // 2
+        pl_, pr = pw // 2, pw - pw // 2
+        x = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+        h, w_ = h + ph, w_ + pw
+    ho = (h - kh) // stride + 1
+    wo = (w_ - kw) // stride + 1
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            cols.append(
+                x[:, di : di + stride * ho : stride, dj : dj + stride * wo : stride, :]
+            )
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    stride: int = 1,
+    same: bool = True,
+    relu: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """NHWC conv through im2col + the Pallas matmul kernel. w is HWIO."""
+    kh, kw, cin, cout = w.shape
+    cols = im2col(x, kh, kw, stride, same)
+    n, ho, wo, k = cols.shape
+    flat = cols.reshape(n * ho * wo, k)
+    out = matmul(flat, w.reshape(kh * kw * cin, cout), b, relu=relu, interpret=interpret)
+    return out.reshape(n, ho, wo, cout)
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2/2 max pool via reshape (H, W must be even)."""
+    n, h, w, c = x.shape
+    return x.reshape(n, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def dense(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *, relu: bool, interpret: bool = True
+) -> jnp.ndarray:
+    return matmul(x, w, b, relu=relu, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Architectures
+# ---------------------------------------------------------------------------
+# Spec entries: ("conv", kh, kw, cout, stride) | ("pool",) — ReLU after every conv.
+# The final entry is always the linear 1x1 detection head (added automatically).
+
+ARCHS: Dict[str, List[tuple]] = {
+    # Compact VGG16: 3x3 conv stacks + 2x2 pools, 64 -> 8 spatial.
+    "vgg16": [
+        ("conv", 3, 3, 8, 1),
+        ("conv", 3, 3, 8, 1),
+        ("pool",),
+        ("conv", 3, 3, 16, 1),
+        ("conv", 3, 3, 16, 1),
+        ("pool",),
+        ("conv", 3, 3, 32, 1),
+        ("conv", 3, 3, 32, 1),
+        ("pool",),
+    ],
+    # Compact ZF: large stride-2 first filter, then 3x3 stacks. 64 -> 8 spatial.
+    "zf": [
+        ("conv", 7, 7, 8, 2),
+        ("pool",),
+        ("conv", 3, 3, 16, 1),
+        ("conv", 3, 3, 32, 1),
+        ("pool",),
+    ],
+}
+
+
+def _he_init(key, shape) -> jnp.ndarray:
+    fan_in = 1
+    for d in shape[:-1]:
+        fan_in *= d
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def init_params(arch: str, seed: int = 0) -> List[jnp.ndarray]:
+    """Deterministic parameter list [w0, b0, w1, b1, ..., w_head, b_head]."""
+    if arch not in ARCHS:
+        raise ValueError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
+    key = jax.random.PRNGKey(seed)
+    params: List[jnp.ndarray] = []
+    cin = 3
+    for spec in ARCHS[arch]:
+        if spec[0] == "pool":
+            continue
+        _, kh, kw, cout, _ = spec
+        key, k1 = jax.random.split(key)
+        params.append(_he_init(k1, (kh, kw, cin, cout)))
+        params.append(jnp.zeros((cout,), jnp.float32))
+        cin = cout
+    key, k1 = jax.random.split(key)
+    params.append(_he_init(k1, (1, 1, cin, HEAD_CH)))
+    params.append(jnp.zeros((HEAD_CH,), jnp.float32))
+    return params
+
+
+def param_shapes(arch: str) -> List[Tuple[int, ...]]:
+    return [tuple(p.shape) for p in init_params(arch)]
+
+
+def forward(
+    arch: str, params: Sequence[jnp.ndarray], x: jnp.ndarray, *, interpret: bool = True
+) -> jnp.ndarray:
+    """Run the detector. x: (N, 64, 64, 3) f32 in [0,1].
+
+    Returns detections (N, cells*A, 5+C) raw (logits, un-decoded boxes).
+    """
+    i = 0
+    for spec in ARCHS[arch]:
+        if spec[0] == "pool":
+            x = maxpool2(x)
+            continue
+        _, _, _, _, stride = spec
+        x = conv2d(x, params[i], params[i + 1], stride=stride, relu=True, interpret=interpret)
+        i += 2
+    # Detection head: 1x1 conv, linear.
+    x = conv2d(x, params[i], params[i + 1], stride=1, relu=False, interpret=interpret)
+    n, h, w, _ = x.shape
+    return x.reshape(n, h * w * NUM_ANCHORS, 5 + NUM_CLASSES)
+
+
+def output_shape(arch: str, batch: int) -> Tuple[int, int, int]:
+    dummy_cells = {"vgg16": 8 * 8, "zf": 8 * 8}[arch]
+    return (batch, dummy_cells * NUM_ANCHORS, 5 + NUM_CLASSES)
+
+
+def flops_per_frame(arch: str) -> int:
+    """MACs*2 of all convs + head for one 64x64 frame (analytic)."""
+    h = w = INPUT_SIZE
+    cin = 3
+    total = 0
+    for spec in ARCHS[arch]:
+        if spec[0] == "pool":
+            h //= 2
+            w //= 2
+            continue
+        _, kh, kw, cout, stride = spec
+        ho, wo = h // stride, w // stride
+        total += 2 * ho * wo * kh * kw * cin * cout
+        h, w, cin = ho, wo, cout
+    total += 2 * h * w * cin * HEAD_CH
+    return total
+
+
+def make_jit(arch: str, batch: int):
+    """A jitted closure (params..., x) -> detections, plus its arg specs."""
+    nparams = len(param_shapes(arch))
+
+    @functools.partial(jax.jit)
+    def fn(*args):
+        params, x = args[:nparams], args[nparams]
+        return (forward(arch, params, x),)
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in param_shapes(arch)]
+    specs.append(jax.ShapeDtypeStruct((batch, INPUT_SIZE, INPUT_SIZE, 3), jnp.float32))
+    return fn, specs

@@ -1,0 +1,67 @@
+"""AOT path: HLO text emission, params export, manifest integrity."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def out_dir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    aot.main(["--out-dir", str(d), "--models", "zf", "--batches", "1,2"])
+    return str(d)
+
+
+def test_manifest_contents(out_dir):
+    with open(os.path.join(out_dir, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert man["input_size"] == M.INPUT_SIZE
+    assert len(man["models"]) == 2
+    for entry in man["models"]:
+        assert entry["name"] == "zf"
+        assert entry["input_shape"] == [entry["batch"], 64, 64, 3]
+        assert entry["output_shape"] == list(M.output_shape("zf", entry["batch"]))
+        assert os.path.exists(os.path.join(out_dir, entry["hlo"]))
+        assert os.path.exists(os.path.join(out_dir, entry["params_bin"]))
+
+
+def test_hlo_text_is_parseable_hlo(out_dir):
+    with open(os.path.join(out_dir, "zf_b1.hlo.txt")) as f:
+        text = f.read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # params are inputs, not baked constants: expect one parameter per weight + x
+    nparams = len(M.param_shapes("zf")) + 1
+    assert text.count("parameter(") >= nparams
+
+
+def test_params_bin_size_and_values(out_dir):
+    params = M.init_params("zf", seed=0)
+    want = np.concatenate([np.asarray(p, "<f4").ravel() for p in params])
+    with open(os.path.join(out_dir, "zf.params.bin"), "rb") as f:
+        raw = f.read()
+    got = np.frombuffer(raw, "<f4")
+    assert got.size == want.size == sum(int(np.prod(s)) for s in M.param_shapes("zf"))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_relower_is_deterministic(tmp_path):
+    e1 = aot.lower_model("zf", 1, str(tmp_path))
+    t1 = open(tmp_path / "zf_b1.hlo.txt").read()
+    e2 = aot.lower_model("zf", 1, str(tmp_path))
+    t2 = open(tmp_path / "zf_b1.hlo.txt").read()
+    assert e1["hlo_chars"] == e2["hlo_chars"]
+    assert t1 == t2
+
+
+def test_flops_recorded(out_dir):
+    with open(os.path.join(out_dir, "manifest.json")) as f:
+        man = json.load(f)
+    for entry in man["models"]:
+        assert entry["flops_per_frame"] == M.flops_per_frame(entry["name"])

@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas matmul kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/epilogue flags; every case asserts allclose
+against ref.matmul_ref. This is the core correctness signal for the artifacts
+shipped to the Rust runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, block_report, vmem_bytes, mxu_utilization, VMEM_BUDGET
+from compile.kernels.ref import matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    relu=st.booleans(),
+    bias=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_shapes(m, k, n, relu, bias, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), jnp.float32)
+    w = _rand(rng, (k, n), jnp.float32)
+    b = _rand(rng, (n,), jnp.float32) if bias else None
+    got = matmul(x, w, b, relu=relu)
+    want = matmul_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    m=st.integers(4, 40),
+    k=st.integers(4, 40),
+    n=st.integers(4, 40),
+)
+def test_matmul_dtype_inputs_accumulate_f32(dtype, m, k, n):
+    rng = np.random.default_rng(42)
+    x = _rand(rng, (m, k), dtype)
+    w = _rand(rng, (k, n), dtype)
+    got = matmul(x, w)
+    want = matmul_ref(x, w)
+    assert got.dtype == jnp.float32
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (16, 32, 8), (32, 16, 64), (128, 128, 128)])
+def test_matmul_explicit_blocks(bm, bk, bn):
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (50, 37), jnp.float32)
+    w = _rand(rng, (37, 29), jnp.float32)
+    b = _rand(rng, (29,), jnp.float32)
+    got = matmul(x, w, b, relu=True, bm=bm, bk=bk, bn=bn)
+    want = matmul_ref(x, w, b, relu=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 3))
+    with pytest.raises(ValueError):
+        matmul(x, w)
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((4,)), w)
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((4, 6)), jnp.zeros((6, 3)), jnp.zeros((5,)))
+
+
+def test_matmul_relu_clamps_negative():
+    x = -jnp.ones((8, 8))
+    w = jnp.eye(8)
+    out = matmul(x, w, relu=True)
+    assert float(jnp.min(out)) == 0.0
+
+
+def test_matmul_zero_bias_equals_no_bias():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (17, 23), jnp.float32)
+    w = _rand(rng, (23, 11), jnp.float32)
+    a = matmul(x, w)
+    b = matmul(x, w, jnp.zeros((11,)))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+# --- static TPU estimates ---------------------------------------------------
+
+def test_default_blocks_fit_vmem():
+    rep = block_report(128, 128, 128)
+    assert rep["fits_vmem"]
+    assert rep["vmem_bytes"] == vmem_bytes(128, 128, 128)
+    # 2*(64k+64k+512)+64k bytes * 4 -> well under 16 MiB
+    assert rep["vmem_frac"] < 0.1
+
+
+def test_mxu_utilization_native_tile_is_full():
+    assert mxu_utilization(128, 8, 128) == 1.0
+    assert mxu_utilization(128, 128, 128) == 1.0
+
+
+def test_mxu_utilization_penalizes_ragged_blocks():
+    assert mxu_utilization(100, 8, 128) < 1.0
+    assert mxu_utilization(128, 7, 128) < 1.0
+
+
+@given(
+    bm=st.integers(8, 256), bk=st.integers(8, 256), bn=st.integers(8, 256)
+)
+@settings(max_examples=50, deadline=None)
+def test_vmem_bytes_monotone(bm, bk, bn):
+    base = vmem_bytes(bm, bk, bn)
+    assert vmem_bytes(bm + 8, bk, bn) > base
+    assert vmem_bytes(bm, bk + 8, bn) > base
+    assert vmem_bytes(bm, bk, bn + 8) > base
+    assert 0.0 < mxu_utilization(bm, bk, bn) <= 1.0

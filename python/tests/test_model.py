@@ -1,0 +1,115 @@
+"""L2 correctness: composite layers vs lax references; model shape contracts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels.ref import conv2d_ref, maxpool_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    hw=st.sampled_from([8, 12, 16]),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 6),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    relu=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+def test_conv2d_matches_lax(n, hw, cin, cout, k, stride, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, hw, hw, cin)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, k, cin, cout)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((cout,)), jnp.float32)
+    got = M.conv2d(x, w, b, stride=stride, relu=relu)
+    want = conv2d_ref(x, w, b, stride=stride, padding="SAME", relu=relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_stride2_even_kernel_7x7():
+    # The ZF first layer: 7x7 stride-2 on 64x64.
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 64, 64, 3)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((7, 7, 3, 8)), jnp.float32)
+    b = jnp.zeros((8,))
+    got = M.conv2d(x, w, b, stride=2, relu=True)
+    want = conv2d_ref(x, w, b, stride=2, padding="SAME", relu=True)
+    assert got.shape == (1, 32, 32, 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_maxpool2_matches_lax():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 16, 16, 5)), jnp.float32)
+    got = M.maxpool2(x)
+    want = maxpool_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_im2col_ordering_matches_hwio_reshape():
+    # conv via explicit im2col must equal the lax conv for a delta filter.
+    x = jnp.arange(2 * 6 * 6 * 2, dtype=jnp.float32).reshape(2, 6, 6, 2)
+    w = jnp.zeros((3, 3, 2, 1)).at[1, 1, 0, 0].set(1.0)  # pick center, channel 0
+    out = M.conv2d(x, w, jnp.zeros((1,)), relu=False)
+    np.testing.assert_allclose(np.asarray(out[..., 0]), np.asarray(x[..., 0]))
+
+
+@pytest.mark.parametrize("arch", ["vgg16", "zf"])
+@pytest.mark.parametrize("batch", [1, 3])
+def test_forward_output_shape(arch, batch):
+    params = M.init_params(arch)
+    x = jnp.zeros((batch, 64, 64, 3))
+    out = M.forward(arch, params, x)
+    assert out.shape == M.output_shape(arch, batch)
+
+
+@pytest.mark.parametrize("arch", ["vgg16", "zf"])
+def test_init_params_deterministic(arch):
+    a = M.init_params(arch, seed=0)
+    b = M.init_params(arch, seed=0)
+    c = M.init_params(arch, seed=1)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    assert any(
+        not np.array_equal(np.asarray(pa), np.asarray(pc)) for pa, pc in zip(a, c)
+    )
+
+
+@pytest.mark.parametrize("arch", ["vgg16", "zf"])
+def test_forward_finite_and_nonconstant(arch):
+    rng = np.random.default_rng(9)
+    params = M.init_params(arch)
+    x = jnp.asarray(rng.random((2, 64, 64, 3)), jnp.float32)
+    out = np.asarray(M.forward(arch, params, x))
+    assert np.isfinite(out).all()
+    assert out.std() > 0
+
+
+def test_flops_per_frame_sane():
+    v = M.flops_per_frame("vgg16")
+    z = M.flops_per_frame("zf")
+    assert v > z > 0  # VGG is the heavier program, as in the paper
+
+
+@pytest.mark.parametrize("arch", ["vgg16", "zf"])
+def test_make_jit_runs_and_matches_forward(arch):
+    fn, specs = M.make_jit(arch, 1)
+    params = M.init_params(arch)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.random((1, 64, 64, 3)), jnp.float32)
+    (out,) = fn(*params, x)
+    want = M.forward(arch, params, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert len(specs) == len(params) + 1
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(ValueError):
+        M.init_params("resnet")

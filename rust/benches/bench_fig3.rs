@@ -1,0 +1,110 @@
+//! Fig 3 — three scenarios x three instance-selection strategies.
+//!
+//! Regenerates the paper's Fig-3 table: number of selected non-GPU/GPU
+//! instances, hourly cost, and savings per (scenario, strategy) cell, and
+//! checks every cell against the published values. Also times each solve.
+
+use camflow::bench::{Bench, Table};
+use camflow::cameras::scenarios::{self, ExpectedOutcome};
+use camflow::catalog::Catalog;
+use camflow::coordinator::{Planner, PlannerConfig};
+use camflow::util::round_dp;
+
+fn main() {
+    // The paper's Fig-3 evaluation pool: the $0.419 c4.2xlarge-class CPU box
+    // and the $0.650 g2.2xlarge GPU box (us-east-2 prices).
+    let catalog =
+        Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+    let scns = scenarios::fig3_scenarios();
+    let expected = scenarios::fig3_expected();
+    let bench = Bench::new(1, 5);
+
+    let mut table = Table::new(&[
+        "Scenario", "Strategy", "Non-GPU", "GPU", "Hourly Cost (US$)", "Cost Savings", "Paper", "Match", "Solve ms",
+    ]);
+    let mut matches = 0;
+    let mut cells = 0;
+
+    for (si, scn) in scns.iter().enumerate() {
+        // Savings baseline = the most expensive feasible strategy (paper's convention).
+        let costs: Vec<Option<f64>> = [PlannerConfig::st1(), PlannerConfig::st2(), PlannerConfig::st3()]
+            .into_iter()
+            .map(|cfg| Planner::new(catalog.clone(), cfg).plan(&scn.requests).ok().map(|p| p.cost_per_hour))
+            .collect();
+        let worst = costs.iter().flatten().cloned().fold(0.0, f64::max);
+
+        for (ci, cfg) in [PlannerConfig::st1(), PlannerConfig::st2(), PlannerConfig::st3()]
+            .into_iter()
+            .enumerate()
+        {
+            cells += 1;
+            let planner = Planner::new(catalog.clone(), cfg);
+            let timing = bench.run("solve", || {
+                let _ = planner.plan(&scn.requests);
+            });
+            let result = planner.plan(&scn.requests);
+            let (row, matched): ([String; 6], bool) = match (&result, &expected[si][ci]) {
+                (Err(_), ExpectedOutcome::Fail) => (
+                    ["Fail".into(), "Fail".into(), "Fail".into(), "Fail".into(), "Fail".into(), "yes".into()],
+                    true,
+                ),
+                (Ok(plan), ExpectedOutcome::Selected { non_gpu, gpu, hourly_cost }) => {
+                    let savings = (1.0 - plan.cost_per_hour / worst) * 100.0;
+                    let m = plan.non_gpu == *non_gpu
+                        && plan.gpu == *gpu
+                        && round_dp(plan.cost_per_hour, 3) == *hourly_cost;
+                    (
+                        [
+                            format!("{}", plan.non_gpu),
+                            format!("{}", plan.gpu),
+                            format!("${:.3}", plan.cost_per_hour),
+                            format!("{savings:.0}%"),
+                            format!("${hourly_cost:.3}"),
+                            (if m { "yes" } else { "NO" }).into(),
+                        ],
+                        m,
+                    )
+                }
+                (Ok(plan), ExpectedOutcome::Fail) => (
+                    [
+                        format!("{}", plan.non_gpu),
+                        format!("{}", plan.gpu),
+                        format!("${:.3}", plan.cost_per_hour),
+                        "-".into(),
+                        "Fail".into(),
+                        "NO".into(),
+                    ],
+                    false,
+                ),
+                (Err(e), ExpectedOutcome::Selected { hourly_cost, .. }) => (
+                    [
+                        "Err".into(),
+                        "Err".into(),
+                        format!("{e}"),
+                        "-".into(),
+                        format!("${hourly_cost:.3}"),
+                        "NO".into(),
+                    ],
+                    false,
+                ),
+            };
+            if matched {
+                matches += 1;
+            }
+            table.row(&[
+                scn.name.clone(),
+                format!("ST{}", ci + 1),
+                row[0].clone(),
+                row[1].clone(),
+                row[2].clone(),
+                row[3].clone(),
+                row[4].clone(),
+                row[5].clone(),
+                format!("{:.1}", timing.mean_ms),
+            ]);
+        }
+    }
+    table.print();
+    println!("\n{matches}/{cells} cells match the paper's Fig-3 table.");
+    assert_eq!(matches, cells, "Fig-3 reproduction drifted");
+}

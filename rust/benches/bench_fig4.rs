@@ -1,0 +1,101 @@
+//! Fig 4 — instances needed vs desired frame rate for six worldwide cameras.
+//!
+//! The paper: at high frame rates the RTT circles around the cameras do not
+//! overlap any common data center, so six instances are needed; at lower
+//! rates the circles grow and three (or fewer) instances suffice. This bench
+//! computes the minimal number of instance sites (exact set cover over the
+//! catalog's regions) across a frame-rate sweep.
+
+use camflow::bench::Table;
+use camflow::cameras::scenarios::fig4_cameras;
+use camflow::catalog::Catalog;
+use camflow::geo;
+
+/// Exact minimum set cover (6 cameras -> trivially small search).
+fn min_cover(masks: &[u64], universe: u64) -> usize {
+    // masks: per region, the set of cameras it covers.
+    let mut best = usize::MAX;
+    // BFS over number of regions.
+    fn rec(masks: &[u64], covered: u64, universe: u64, used: usize, best: &mut usize) {
+        if covered == universe {
+            *best = (*best).min(used);
+            return;
+        }
+        if used + 1 >= *best {
+            return;
+        }
+        // Pick an uncovered camera, try all regions covering it.
+        let missing = (!covered) & universe;
+        let cam = missing.trailing_zeros();
+        for m in masks {
+            if m & (1 << cam) != 0 {
+                rec(masks, covered | m, universe, used + 1, best);
+            }
+        }
+    }
+    rec(masks, 0, universe, 0, &mut best);
+    best
+}
+
+fn main() {
+    let catalog = Catalog::builtin();
+    let cams = fig4_cameras();
+    let universe = (1u64 << cams.len()) - 1;
+
+    let mut t = Table::new(&["fps", "RTT budget ms", "radius km", "min instances", "example regions"]);
+    let mut results = Vec::new();
+    for fps in [30.0, 25.0, 20.0, 16.0, 12.0, 8.0, 6.0, 4.0, 2.0, 1.0] {
+        let masks: Vec<u64> = catalog
+            .regions
+            .iter()
+            .map(|r| {
+                cams.iter()
+                    .enumerate()
+                    .filter(|(_, c)| geo::reachable(&c.location, &r.location, fps))
+                    .fold(0u64, |m, (i, _)| m | (1 << i))
+            })
+            .collect();
+        let infeasible = (0..cams.len()).any(|i| masks.iter().all(|m| m & (1 << i) == 0));
+        let n = if infeasible { usize::MAX } else { min_cover(&masks, universe) };
+        // A witness cover for display: greedy.
+        let mut covered = 0u64;
+        let mut witness = Vec::new();
+        while covered != universe && !infeasible {
+            let (ri, m) = masks
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, m)| (*m & !covered).count_ones())
+                .map(|(i, m)| (i, *m))
+                .unwrap();
+            if m & !covered == 0 {
+                break;
+            }
+            covered |= m;
+            witness.push(catalog.regions[ri].id);
+        }
+        t.row(&[
+            format!("{fps}"),
+            format!("{:.0}", geo::rtt_budget_ms(fps)),
+            format!("{:.0}", geo::coverage_radius_km(fps)),
+            if infeasible { "-".into() } else { n.to_string() },
+            witness.join(", "),
+        ]);
+        results.push((fps, n));
+    }
+    t.print();
+
+    // Shape checks (the paper's (a) high fps -> 6, (b) lower fps -> 3).
+    let at = |fps: f64| results.iter().find(|r| r.0 == fps).unwrap().1;
+    assert_eq!(at(30.0), 6, "at 30 fps each camera needs its own instance");
+    assert!(
+        (2..=3).contains(&at(8.0)),
+        "by 8 fps a few instances cover all cameras (got {})",
+        at(8.0)
+    );
+    let counts: Vec<usize> = results.iter().map(|r| r.1).collect();
+    assert!(
+        counts.windows(2).all(|w| w[0] >= w[1]),
+        "instance count must not increase as fps drops: {counts:?}"
+    );
+    println!("\nShape OK: 6 instances at 30 fps -> {} at 8 fps -> {} at 1 fps.", at(8.0), at(1.0));
+}

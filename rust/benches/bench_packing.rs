@@ -1,0 +1,129 @@
+//! Packing machinery benchmarks:
+//!   * the paper's sidebar arc-flow instance (graph build + compression),
+//!   * Fig 2's three-streams / four-instances example,
+//!   * FFD vs exact (arc-flow + B&B) cost gap and runtime scaling.
+
+use camflow::bench::{Bench, Table};
+use camflow::catalog::Dims;
+use camflow::packing::arcflow::{self, QuantItem};
+use camflow::packing::heuristic::{self, simple_problem};
+use camflow::packing::mcvbp::{solve, SolveOptions};
+use camflow::packing::{BinType, ItemGroup, PackingProblem};
+use camflow::util::Rng;
+
+fn sidebar() {
+    println!("== Sidebar: arc-flow graph for truck (7,3); A(5,1)x1 B(3,1)x1 C(2,1)x2 ==");
+    let cap = vec![7, 3];
+    let items = vec![
+        QuantItem { sizes: vec![5, 1], count: 1 },
+        QuantItem { sizes: vec![3, 1], count: 1 },
+        QuantItem { sizes: vec![2, 1], count: 2 },
+    ];
+    let g = arcflow::build(&cap, &items, 10_000).unwrap();
+    let (cg, stats) = arcflow::compress(&g);
+    let packs = arcflow::enumerate_packings(&cg, 3);
+    let mut t = Table::new(&["Stage", "Nodes", "Arcs"]);
+    t.row(&["raw".into(), stats.nodes_before.to_string(), stats.arcs_before.to_string()]);
+    t.row(&["compressed".into(), stats.nodes_after.to_string(), stats.arcs_after.to_string()]);
+    t.print();
+    println!("feasible single-truck packings: {packs:?}");
+    println!(
+        "compression: {:.0}% nodes, {:.0}% arcs retained\n",
+        stats.node_ratio() * 100.0,
+        stats.arc_ratio() * 100.0
+    );
+    let max_boxes: usize = packs.iter().map(|p| p.iter().sum()).max().unwrap();
+    assert_eq!(max_boxes, 3, "best single truck holds B + 2C");
+}
+
+fn fig2() {
+    println!("== Fig 2: three stream types x four instance choices ==");
+    // Streams A, B, C with (CPU, mem, GPU) demands; four instance choices.
+    let bins = vec![
+        BinType { label: "I1 cpu-small".into(), capacity: Dims::new(4.0, 8.0, 0.0, 0.0), cost: 1.0, type_idx: 0, region_idx: 0, has_gpu: false },
+        BinType { label: "I2 cpu-big".into(), capacity: Dims::new(16.0, 32.0, 0.0, 0.0), cost: 3.0, type_idx: 1, region_idx: 0, has_gpu: false },
+        BinType { label: "I3 gpu".into(), capacity: Dims::new(8.0, 16.0, 1.0, 8.0), cost: 2.5, type_idx: 2, region_idx: 0, has_gpu: true },
+        BinType { label: "I4 gpu-big".into(), capacity: Dims::new(16.0, 64.0, 4.0, 32.0), cost: 7.0, type_idx: 3, region_idx: 0, has_gpu: true },
+    ];
+    let mk = |cpu: f64, mem: f64, gcpu: f64, gmem: f64, ggpu: f64, count: usize, label: &str| ItemGroup {
+        label: label.into(),
+        count,
+        demand_per_bin: vec![
+            Some(Dims::new(cpu, mem, 0.0, 0.0)),
+            Some(Dims::new(cpu, mem, 0.0, 0.0)),
+            Some(Dims::new(gcpu, gmem, ggpu, 2.0)),
+            Some(Dims::new(gcpu, gmem, ggpu, 2.0)),
+        ],
+    };
+    let items = vec![
+        mk(2.0, 3.0, 0.4, 1.0, 0.3, 2, "A"),
+        mk(3.0, 2.0, 0.5, 1.0, 0.4, 2, "B"),
+        mk(1.0, 1.5, 0.3, 0.8, 0.2, 2, "C"),
+    ];
+    let problem = PackingProblem::new(items, bins);
+    let (packing, stats) = solve(&problem, &SolveOptions::default()).unwrap();
+    let mut t = Table::new(&["Bin", "A", "B", "C", "cost"]);
+    for b in &packing.bins {
+        t.row(&[
+            problem.bins[b.bin_type].label.clone(),
+            b.counts[0].to_string(),
+            b.counts[1].to_string(),
+            b.counts[2].to_string(),
+            format!("{:.1}", problem.bins[b.bin_type].cost),
+        ]);
+    }
+    t.print();
+    println!(
+        "total ${:.2}/h via {:?} ({} B&B nodes)\n",
+        packing.total_cost(&problem),
+        stats.method,
+        stats.milp_nodes
+    );
+    packing.validate(&problem).unwrap();
+}
+
+fn scaling() {
+    println!("== FFD vs exact: cost gap and runtime scaling ==");
+    let bench = Bench::new(1, 5);
+    let mut t = Table::new(&["streams", "groups", "FFD $", "exact $", "gap", "FFD ms", "exact ms", "graph nodes", "milp vars"]);
+    let mut rng = Rng::new(2024);
+    for &(groups, per) in &[(2usize, 4usize), (3, 6), (4, 8), (5, 10), (6, 12)] {
+        let items: Vec<(f64, f64, usize)> = (0..groups)
+            .map(|_| (rng.range_f64(0.5, 5.5), rng.range_f64(0.5, 6.0), per))
+            .collect();
+        let p = simple_problem(
+            &items,
+            &[(8.0, 15.0, 0.419), (16.0, 30.0, 0.796), (36.0, 60.0, 1.591)],
+        );
+        let ffd = heuristic::first_fit_decreasing(&p).unwrap();
+        let tf = bench.run("ffd", || {
+            let _ = heuristic::first_fit_decreasing(&p);
+        });
+        let (exact, stats) = solve(&p, &SolveOptions::default()).unwrap();
+        let te = bench.run("exact", || {
+            let _ = solve(&p, &SolveOptions::default());
+        });
+        let fc = ffd.total_cost(&p);
+        let ec = exact.total_cost(&p);
+        t.row(&[
+            (groups * per).to_string(),
+            groups.to_string(),
+            format!("{fc:.3}"),
+            format!("{ec:.3}"),
+            format!("{:.0}%", (1.0 - ec / fc) * 100.0),
+            format!("{:.2}", tf.mean_ms),
+            format!("{:.1}", te.mean_ms),
+            stats.graph_nodes_after.to_string(),
+            stats.milp_vars.to_string(),
+        ]);
+        assert!(ec <= fc + 1e-9);
+    }
+    t.print();
+}
+
+fn main() {
+    sidebar();
+    fig2();
+    scaling();
+    println!("\nbench_packing OK");
+}

@@ -1,0 +1,72 @@
+//! Runtime benchmarks: PJRT inference latency/throughput per (model, batch),
+//! the dynamic-batching benefit, and end-to-end serving throughput.
+//!
+//! Requires `make artifacts`.
+
+use camflow::bench::{Bench, Table};
+use camflow::runtime::Engine;
+use camflow::util::Rng;
+
+fn frames(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * 64 * 64 * 3).map(|_| rng.f32()).collect()
+}
+
+fn main() {
+    // cargo bench passes a trailing "--bench" flag; ignore dash-args.
+    let artifacts = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    println!("loading all model variants (PJRT CPU)...");
+    let t0 = std::time::Instant::now();
+    let engine = Engine::load(&artifacts).expect("run `make artifacts` first");
+    println!("loaded {:?} in {:.1}s\n", engine.loaded_variants(), t0.elapsed().as_secs_f64());
+
+    let bench = Bench::new(3, 15);
+    let mut t = Table::new(&["model", "batch", "mean ms/batch", "p99 ms", "ms/frame", "frames/s", "MFLOP/frame"]);
+    for name in ["vgg16", "zf"] {
+        for &batch in &[1usize, 4, 8] {
+            let input = frames(batch, 7);
+            let timing = bench.run(&format!("{name} b{batch}"), || {
+                let _ = engine.infer(name, batch, &input).unwrap();
+            });
+            let entry = engine.manifest.find(name, batch).unwrap();
+            t.row(&[
+                name.into(),
+                batch.to_string(),
+                format!("{:.2}", timing.mean_ms),
+                format!("{:.2}", timing.p99_ms),
+                format!("{:.2}", timing.mean_ms / batch as f64),
+                format!("{:.1}", batch as f64 / (timing.mean_ms / 1e3)),
+                format!("{:.1}", entry.flops_per_frame / 1e6),
+            ]);
+        }
+    }
+    t.print();
+
+    // Batching benefit: per-frame time at b=8 vs b=1.
+    let one = {
+        let input = frames(1, 9);
+        bench.run("zf b1", || {
+            let _ = engine.infer("zf", 1, &input).unwrap();
+        })
+    };
+    let eight = {
+        let input = frames(8, 9);
+        bench.run("zf b8", || {
+            let _ = engine.infer("zf", 8, &input).unwrap();
+        })
+    };
+    let speedup = one.mean_ms / (eight.mean_ms / 8.0);
+    println!(
+        "\ndynamic batching (zf): b1 {:.2} ms/frame vs b8 {:.2} ms/frame -> {speedup:.2}x",
+        one.mean_ms,
+        eight.mean_ms / 8.0
+    );
+    // On the CPU interpret path batching mostly amortizes dispatch (no MXU
+    // to fill); it must at least stay within 2x of single-frame efficiency.
+    // Real-TPU batching benefit is estimated statically (DESIGN.md §Perf).
+    assert!(speedup > 0.5, "batched path pathologically slow: {speedup:.2}x");
+    println!("bench_runtime OK");
+}

@@ -1,0 +1,86 @@
+//! Table I — prices of EC2 and Azure instances at different locations.
+//!
+//! Regenerates the paper's Table I rows from the built-in catalog and checks
+//! them against the published values.
+
+use camflow::bench::Table;
+use camflow::catalog::Catalog;
+
+fn cell(c: &Catalog, ty: &str, region: &str) -> String {
+    let t = c.type_by_name(ty).expect("type");
+    let r = c.region_by_id(region).expect("region");
+    match c.price(t, r) {
+        Some(p) => format!("{p:.3}"),
+        None => "N/A".to_string(),
+    }
+}
+
+fn main() {
+    let c = Catalog::builtin();
+    println!("== Table I: prices of cloud instances at different locations ==\n");
+
+    let mut ec2 = Table::new(&["Vendor", "Instance", "Cores", "Memory (GiB)", "GPU", "Virginia", "London", "Singapore"]);
+    for ty in ["c4.2xlarge", "c4.8xlarge", "g3.8xlarge"] {
+        let t = c.type_by_name(ty).unwrap();
+        let cap = c.types[t].capacity;
+        ec2.row(&[
+            "EC2".into(),
+            ty.into(),
+            format!("{}", cap.vcpus as u64),
+            format!("{}", cap.mem_gib),
+            format!("{}", cap.gpus as u64),
+            cell(&c, ty, "us-east-1"),
+            cell(&c, ty, "eu-west-2"),
+            cell(&c, ty, "ap-southeast-1"),
+        ]);
+    }
+    ec2.print();
+
+    let mut az = Table::new(&["Vendor", "Instance", "Cores", "Memory (GiB)", "GPU", "US East", "West Europe", "East Asia"]);
+    for ty in ["D8_v3", "NC24r"] {
+        let t = c.type_by_name(ty).unwrap();
+        let cap = c.types[t].capacity;
+        az.row(&[
+            "Azure".into(),
+            ty.into(),
+            format!("{}", cap.vcpus as u64),
+            format!("{}", cap.mem_gib),
+            format!("{}", cap.gpus as u64),
+            cell(&c, ty, "az-us-east"),
+            cell(&c, ty, "az-west-europe"),
+            cell(&c, ty, "az-east-asia"),
+        ]);
+    }
+    println!();
+    az.print();
+
+    // Validation against the paper's printed numbers.
+    let expected = [
+        ("c4.2xlarge", "us-east-1", "0.398"),
+        ("c4.2xlarge", "eu-west-2", "0.476"),
+        ("c4.2xlarge", "ap-southeast-1", "0.462"),
+        ("c4.8xlarge", "us-east-1", "1.591"),
+        ("c4.8xlarge", "eu-west-2", "1.902"),
+        ("c4.8xlarge", "ap-southeast-1", "1.848"),
+        ("g3.8xlarge", "us-east-1", "2.280"),
+        ("g3.8xlarge", "eu-west-2", "N/A"),
+        ("g3.8xlarge", "ap-southeast-1", "3.340"),
+        ("D8_v3", "az-us-east", "0.384"),
+        ("D8_v3", "az-west-europe", "0.480"),
+        ("D8_v3", "az-east-asia", "0.625"),
+        ("NC24r", "az-us-east", "3.960"),
+        ("NC24r", "az-west-europe", "5.132"),
+        ("NC24r", "az-east-asia", "N/A"),
+    ];
+    let mut ok = 0;
+    for (ty, rg, want) in expected {
+        let got = cell(&c, ty, rg);
+        assert_eq!(got, want, "{ty}@{rg}");
+        ok += 1;
+    }
+    println!("\nAll {ok}/15 Table-I cells match the paper.");
+    println!(
+        "Paper's 63% observation: D8_v3 East-Asia/US-East = {:.2}",
+        0.625 / 0.384
+    );
+}

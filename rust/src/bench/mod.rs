@@ -1,0 +1,158 @@
+//! Minimal benchmark harness (criterion is not vendored in this image).
+//!
+//! Benches are `harness = false` binaries that use [`Bench`] to run warmup +
+//! timed iterations and print a fixed-width table — the same rows/series the
+//! paper's tables and figures report.
+
+use crate::util::Summary;
+use std::time::Instant;
+
+/// One benchmark runner.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, measure_iters: 10 }
+    }
+}
+
+/// Result of a timed run.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub iters: usize,
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup_iters: warmup, measure_iters: iters }
+    }
+
+    /// Time `f` (called once per iteration).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Timing {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            s.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        Timing {
+            name: name.to_string(),
+            mean_ms: s.mean(),
+            p50_ms: s.p50(),
+            p99_ms: s.p99(),
+            min_ms: s.min(),
+            max_ms: s.max(),
+            iters: self.measure_iters,
+        }
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} mean {:>9.3} ms  p50 {:>9.3}  p99 {:>9.3}  min {:>9.3}  max {:>9.3}  (n={})",
+            self.name, self.mean_ms, self.p50_ms, self.p99_ms, self.min_ms, self.max_ms, self.iters
+        )
+    }
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_added(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:<w$} | ", w = w));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&sep, &widths));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bench::new(1, 5);
+        let mut count = 0;
+        let t = b.run("noop", || count += 1);
+        assert_eq!(count, 6); // warmup + measured
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_ms >= 0.0);
+        assert!(t.min_ms <= t.max_ms);
+        assert!(t.to_string().contains("noop"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Strategy", "Cost"]);
+        t.row(&["ST1".to_string(), "$1.676".to_string()]);
+        t.row(&["ST3".to_string(), "$0.650".to_string()]);
+        let s = t.render();
+        assert!(s.contains("Strategy"));
+        assert!(s.contains("$0.650"));
+        assert_eq!(s.lines().count(), 4);
+        assert_eq!(t.rows_added(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["A", "B"]);
+        t.row(&["only-one".to_string()]);
+    }
+}

@@ -1,0 +1,212 @@
+//! Camera database + analysis workloads (the CAM² substrate).
+//!
+//! The paper's CAM² platform maintains a database of public network cameras
+//! (geographic location, frame rate, resolution, snapshot vs video). That
+//! data is not redistributable, so this module synthesizes an equivalent
+//! database over real city coordinates — the resource manager consumes only
+//! the (location, fps, resolution, program) tuple either way.
+
+pub mod scenarios;
+
+use crate::geo::{cities, GeoPoint};
+use crate::profiles::{Program, Resolution};
+use crate::util::Rng;
+
+/// Video vs snapshot cameras (CAM² supports both).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CameraMode {
+    Video,
+    Snapshot,
+}
+
+/// One network camera.
+#[derive(Clone, Debug)]
+pub struct Camera {
+    pub id: u64,
+    pub city: String,
+    pub location: GeoPoint,
+    pub resolution: Resolution,
+    /// The camera's native capture rate (fps); analyses may request less.
+    pub native_fps: f64,
+    pub mode: CameraMode,
+}
+
+/// An analysis request: run `program` on `camera`'s stream at `desired_fps`.
+/// This is the paper's unit of work — the "box" of the packing problem.
+#[derive(Clone, Debug)]
+pub struct StreamRequest {
+    pub camera: Camera,
+    pub program: Program,
+    pub desired_fps: f64,
+}
+
+impl StreamRequest {
+    pub fn new(camera: Camera, program: Program, desired_fps: f64) -> Self {
+        assert!(desired_fps > 0.0, "desired_fps must be positive");
+        StreamRequest { camera, program, desired_fps }
+    }
+
+    /// Short human label, e.g. "ZF@8.00fps/Tokyo".
+    pub fn label(&self) -> String {
+        format!(
+            "{}@{:.2}fps/{}",
+            self.program.name(),
+            self.desired_fps,
+            self.camera.city
+        )
+    }
+}
+
+/// The synthetic camera database.
+#[derive(Clone, Debug, Default)]
+pub struct CameraDb {
+    cameras: Vec<Camera>,
+}
+
+impl CameraDb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Generate `n` cameras spread over the built-in world cities with
+    /// jittered positions and realistic resolution / frame-rate mixes.
+    pub fn synthetic(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let resolutions = [
+            Resolution::VGA,
+            Resolution::XGA,
+            Resolution::HD720,
+            Resolution::HD900,
+            Resolution::FHD,
+        ];
+        let cameras = (0..n)
+            .map(|i| {
+                let (city, base) = *rng.choose(cities::ALL);
+                // Jitter within ~30 km of the city center.
+                let lat = base.lat + rng.normal() * 0.15;
+                let lon = base.lon + rng.normal() * 0.15;
+                let mode = if rng.bool(0.7) { CameraMode::Video } else { CameraMode::Snapshot };
+                let native_fps = match mode {
+                    CameraMode::Video => *rng.choose(&[8.0, 15.0, 25.0, 30.0]),
+                    CameraMode::Snapshot => rng.range_f64(0.2, 1.0),
+                };
+                Camera {
+                    id: i as u64,
+                    city: city.to_string(),
+                    location: GeoPoint::new(lat, lon),
+                    resolution: *rng.choose(&resolutions),
+                    native_fps,
+                    mode,
+                }
+            })
+            .collect();
+        CameraDb { cameras }
+    }
+
+    pub fn push(&mut self, cam: Camera) {
+        self.cameras.push(cam);
+    }
+
+    pub fn cameras(&self) -> &[Camera] {
+        &self.cameras
+    }
+
+    pub fn len(&self) -> usize {
+        self.cameras.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cameras.is_empty()
+    }
+
+    /// Cameras within `radius_km` of a point.
+    pub fn near(&self, p: &GeoPoint, radius_km: f64) -> Vec<&Camera> {
+        self.cameras
+            .iter()
+            .filter(|c| c.location.distance_km(p) <= radius_km)
+            .collect()
+    }
+
+    /// Build an analysis workload: each camera gets `program` at
+    /// min(desired_fps, native_fps).
+    pub fn workload(&self, program: Program, desired_fps: f64) -> Vec<StreamRequest> {
+        self.cameras
+            .iter()
+            .map(|c| StreamRequest::new(c.clone(), program, desired_fps.min(c.native_fps)))
+            .collect()
+    }
+}
+
+/// Convenience constructor for scenario tables.
+pub fn camera_at(id: u64, city: &str, location: GeoPoint, resolution: Resolution, native_fps: f64) -> Camera {
+    Camera {
+        id,
+        city: city.to_string(),
+        location,
+        resolution,
+        native_fps,
+        mode: CameraMode::Video,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_db_deterministic() {
+        let a = CameraDb::synthetic(20, 7);
+        let b = CameraDb::synthetic(20, 7);
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.cameras().iter().zip(b.cameras()) {
+            assert_eq!(x.city, y.city);
+            assert_eq!(x.location, y.location);
+            assert_eq!(x.resolution, y.resolution);
+        }
+    }
+
+    #[test]
+    fn synthetic_db_has_variety() {
+        let db = CameraDb::synthetic(100, 3);
+        let cities: std::collections::HashSet<_> =
+            db.cameras().iter().map(|c| c.city.clone()).collect();
+        assert!(cities.len() > 5);
+        let has_video = db.cameras().iter().any(|c| c.mode == CameraMode::Video);
+        let has_snap = db.cameras().iter().any(|c| c.mode == CameraMode::Snapshot);
+        assert!(has_video && has_snap);
+    }
+
+    #[test]
+    fn near_filters_by_distance() {
+        let db = CameraDb::synthetic(200, 11);
+        let near = db.near(&cities::TOKYO, 100.0);
+        for c in &near {
+            assert!(c.location.distance_km(&cities::TOKYO) <= 100.0);
+        }
+        let far = db.near(&cities::TOKYO, 20000.0);
+        assert_eq!(far.len(), 200);
+    }
+
+    #[test]
+    fn workload_caps_at_native_fps() {
+        let mut db = CameraDb::new();
+        db.push(camera_at(0, "X", cities::LONDON, Resolution::VGA, 5.0));
+        let w = db.workload(Program::Zf, 30.0);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].desired_fps, 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_fps_request_rejected() {
+        let cam = camera_at(0, "X", cities::LONDON, Resolution::VGA, 5.0);
+        let _ = StreamRequest::new(cam, Program::Zf, 0.0);
+    }
+
+    #[test]
+    fn label_format() {
+        let cam = camera_at(0, "Tokyo", cities::TOKYO, Resolution::VGA, 30.0);
+        let r = StreamRequest::new(cam, Program::Zf, 8.0);
+        assert_eq!(r.label(), "ZF@8.00fps/Tokyo");
+    }
+}

@@ -1,0 +1,237 @@
+//! The paper's evaluation scenarios, expressed as data.
+//!
+//! * Fig 3 — three scenarios over the CAM² ten-camera testbed: combinations
+//!   of VGG16 / ZF at different frame rates and camera counts, evaluated
+//!   against the Fig-3 instance pool (the $0.419 c4.2xlarge-class CPU box and
+//!   the $0.650 g2.2xlarge GPU box in us-east-2).
+//! * Fig 4 — six cameras geographically distributed in America, Europe, and
+//!   Asia/Oceania, used for the location-coverage experiment.
+//! * Fig 6 — a worldwide workload sweep used to compare NL / ARMVAC / GCL.
+
+use super::{camera_at, Camera, StreamRequest};
+use crate::geo::cities;
+use crate::profiles::{Program, Resolution};
+use crate::util::Rng;
+
+/// One Fig-3 scenario: a named set of stream requests.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub requests: Vec<StreamRequest>,
+}
+
+/// Expected Fig-3 row for validation: (#non-GPU, #GPU, hourly cost) or Fail.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ExpectedOutcome {
+    Selected { non_gpu: usize, gpu: usize, hourly_cost: f64 },
+    Fail,
+}
+
+/// Fig 3, Scenario 1: VGG16 @0.25 fps ×1 camera + ZF @0.55 fps ×3 cameras.
+/// Cameras are 1600x900 street cameras (the CAM² testbed mixes resolutions;
+/// resolution per scenario is part of the Fig-3 calibration — DESIGN.md).
+pub fn fig3_scenario1() -> Scenario {
+    let res = Resolution::HD900;
+    let mut requests = vec![StreamRequest::new(
+        camera_at(100, "New York", cities::NEW_YORK, res, 30.0),
+        Program::Vgg16,
+        0.25,
+    )];
+    for (i, city, loc) in [
+        (101u64, "Chicago", cities::CHICAGO),
+        (102, "Houston", cities::HOUSTON),
+        (103, "West Lafayette", cities::WEST_LAFAYETTE),
+    ] {
+        requests.push(StreamRequest::new(
+            camera_at(i, city, loc, res, 30.0),
+            Program::Zf,
+            0.55,
+        ));
+    }
+    Scenario { name: "Scenario 1".into(), requests }
+}
+
+/// Fig 3, Scenario 2: VGG16 @0.20 ×1 + ZF @0.50 ×1 (1024x768 cameras).
+pub fn fig3_scenario2() -> Scenario {
+    let res = Resolution::XGA;
+    Scenario {
+        name: "Scenario 2".into(),
+        requests: vec![
+            StreamRequest::new(
+                camera_at(200, "New York", cities::NEW_YORK, res, 30.0),
+                Program::Vgg16,
+                0.20,
+            ),
+            StreamRequest::new(
+                camera_at(201, "Chicago", cities::CHICAGO, res, 30.0),
+                Program::Zf,
+                0.50,
+            ),
+        ],
+    }
+}
+
+/// Fig 3, Scenario 3: VGG16 @0.20 ×2 + ZF @8.00 ×10 (1280x720 cameras).
+pub fn fig3_scenario3() -> Scenario {
+    let res = Resolution::HD720;
+    let mut requests = Vec::new();
+    for i in 0..2u64 {
+        requests.push(StreamRequest::new(
+            camera_at(300 + i, "New York", cities::NEW_YORK, res, 30.0),
+            Program::Vgg16,
+            0.20,
+        ));
+    }
+    for i in 0..10u64 {
+        requests.push(StreamRequest::new(
+            camera_at(310 + i, "Chicago", cities::CHICAGO, res, 30.0),
+            Program::Zf,
+            8.0,
+        ));
+    }
+    Scenario { name: "Scenario 3".into(), requests }
+}
+
+pub fn fig3_scenarios() -> Vec<Scenario> {
+    vec![fig3_scenario1(), fig3_scenario2(), fig3_scenario3()]
+}
+
+/// The paper's Fig-3 table, used by tests and the bench to validate output.
+/// Rows are (scenario, strategy) -> expected outcome; savings are derived.
+pub fn fig3_expected() -> [[ExpectedOutcome; 3]; 3] {
+    use ExpectedOutcome::*;
+    [
+        // Scenario 1: ST1, ST2, ST3
+        [
+            Selected { non_gpu: 4, gpu: 0, hourly_cost: 1.676 },
+            Selected { non_gpu: 0, gpu: 1, hourly_cost: 0.650 },
+            Selected { non_gpu: 0, gpu: 1, hourly_cost: 0.650 },
+        ],
+        // Scenario 2
+        [
+            Selected { non_gpu: 1, gpu: 0, hourly_cost: 0.419 },
+            Selected { non_gpu: 0, gpu: 1, hourly_cost: 0.650 },
+            Selected { non_gpu: 1, gpu: 0, hourly_cost: 0.419 },
+        ],
+        // Scenario 3
+        [
+            Fail,
+            Selected { non_gpu: 0, gpu: 11, hourly_cost: 7.150 },
+            Selected { non_gpu: 1, gpu: 10, hourly_cost: 6.919 },
+        ],
+    ]
+}
+
+/// Fig 4: six cameras distributed across America, Europe, Asia, Oceania.
+pub fn fig4_cameras() -> Vec<Camera> {
+    vec![
+        camera_at(400, "New York", cities::NEW_YORK, Resolution::VGA, 30.0),
+        camera_at(401, "Los Angeles", cities::LOS_ANGELES, Resolution::VGA, 30.0),
+        camera_at(402, "Sao Paulo", cities::SAO_PAULO, Resolution::VGA, 30.0),
+        camera_at(403, "London", cities::LONDON, Resolution::VGA, 30.0),
+        camera_at(404, "Tokyo", cities::TOKYO, Resolution::VGA, 30.0),
+        camera_at(405, "Sydney", cities::SYDNEY, Resolution::VGA, 30.0),
+    ]
+}
+
+/// Fig 6 workload: `n` cameras weighted toward expensive-region metros
+/// (São Paulo, Tokyo, Sydney, Hong Kong) so location choice matters, running
+/// a VGG16/ZF mix. All requests share `target_fps` (the sweep variable).
+pub fn fig6_workload(n: usize, target_fps: f64, seed: u64) -> Vec<StreamRequest> {
+    let mut rng = Rng::new(seed);
+    // (city, location, weight): expensive regions get more cameras.
+    let sites = [
+        ("Sao Paulo", cities::SAO_PAULO, 4.0),
+        ("Tokyo", cities::TOKYO, 4.0),
+        ("Sydney", cities::SYDNEY, 3.0),
+        ("Hong Kong", cities::HONG_KONG, 2.0),
+        ("Seoul", cities::SEOUL, 2.0),
+        ("London", cities::LONDON, 2.0),
+        ("Paris", cities::PARIS, 1.0),
+        ("New York", cities::NEW_YORK, 1.0),
+        ("Chicago", cities::CHICAGO, 1.0),
+        ("Mexico City", cities::MEXICO_CITY, 1.0),
+    ];
+    let total_w: f64 = sites.iter().map(|s| s.2).sum();
+    let mut requests = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut pick = rng.f64() * total_w;
+        let mut site = &sites[0];
+        for s in &sites {
+            if pick < s.2 {
+                site = s;
+                break;
+            }
+            pick -= s.2;
+        }
+        let program = if rng.bool(0.5) { Program::Vgg16 } else { Program::Zf };
+        let res = *rng.choose(&[Resolution::VGA, Resolution::XGA, Resolution::HD720]);
+        let cam = camera_at(500 + i as u64, site.0, site.1, res, 30.0);
+        requests.push(StreamRequest::new(cam, program, target_fps));
+    }
+    requests
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_scenario_shapes() {
+        let s = fig3_scenarios();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].requests.len(), 4); // 1 VGG + 3 ZF
+        assert_eq!(s[1].requests.len(), 2);
+        assert_eq!(s[2].requests.len(), 12); // 2 VGG + 10 ZF
+    }
+
+    #[test]
+    fn fig3_scenario_programs_and_rates() {
+        let s1 = fig3_scenario1();
+        assert_eq!(s1.requests[0].program, Program::Vgg16);
+        assert_eq!(s1.requests[0].desired_fps, 0.25);
+        assert!(s1.requests[1..].iter().all(|r| r.program == Program::Zf));
+        assert!(s1.requests[1..].iter().all(|r| r.desired_fps == 0.55));
+
+        let s3 = fig3_scenario3();
+        let zf8 = s3
+            .requests
+            .iter()
+            .filter(|r| r.program == Program::Zf && r.desired_fps == 8.0)
+            .count();
+        assert_eq!(zf8, 10);
+    }
+
+    #[test]
+    fn fig4_six_cameras_three_continents() {
+        let cams = fig4_cameras();
+        assert_eq!(cams.len(), 6);
+        // America (lon < -30), Europe (-30..60), Asia/Oceania (> 60).
+        assert!(cams.iter().any(|c| c.location.lon < -30.0));
+        assert!(cams.iter().any(|c| (-30.0..60.0).contains(&c.location.lon)));
+        assert!(cams.iter().any(|c| c.location.lon > 60.0));
+    }
+
+    #[test]
+    fn fig6_workload_deterministic_and_sized() {
+        let a = fig6_workload(50, 4.0, 1);
+        let b = fig6_workload(50, 4.0, 1);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.camera.city, y.camera.city);
+            assert_eq!(x.program, y.program);
+        }
+        assert!(a.iter().all(|r| r.desired_fps == 4.0));
+        // Both programs present.
+        assert!(a.iter().any(|r| r.program == Program::Vgg16));
+        assert!(a.iter().any(|r| r.program == Program::Zf));
+    }
+
+    #[test]
+    fn fig3_expected_cost_identity() {
+        // 4 x 0.419 = 1.676 and 11 x 0.650 = 7.150, as in the paper.
+        assert!((4.0_f64 * 0.419 - 1.676).abs() < 1e-9);
+        assert!((11.0_f64 * 0.650 - 7.150).abs() < 1e-9);
+        assert!((0.419_f64 + 10.0 * 0.650 - 6.919).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,354 @@
+//! Cloud instance catalog: instance types, regions, and per-region prices.
+//!
+//! Reproduces Table I of the paper (EC2 c4.2xlarge / c4.8xlarge / g3.8xlarge,
+//! Azure D8 v3 / NC24r at Virginia/London/Singapore resp. US-East/W-Europe/
+//! E-Asia) plus the instances quoted in prose (c5d.9xlarge $1.728, p3.2xlarge
+//! $3.06, p3.8xlarge $12.24) and the Fig-3 experiment pool (a $0.419 CPU box
+//! and the $0.650 g2.2xlarge GPU box).
+//!
+//! Resource dimensions follow Kaseb et al. \[7\]: vCPUs, memory (GiB), GPUs,
+//! GPU memory (GiB) — the 4-dimensional vector bin packing space.
+
+pub mod prices;
+
+use crate::geo::GeoPoint;
+
+/// The paper's four resource dimensions (Kaseb et al. \[7\]).
+pub const NUM_DIMS: usize = 4;
+
+/// A demand or capacity vector over (vCPU, mem GiB, GPU, GPU-mem GiB).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Dims {
+    pub vcpus: f64,
+    pub mem_gib: f64,
+    pub gpus: f64,
+    pub gpu_mem_gib: f64,
+}
+
+impl Dims {
+    pub const fn new(vcpus: f64, mem_gib: f64, gpus: f64, gpu_mem_gib: f64) -> Self {
+        Dims { vcpus, mem_gib, gpus, gpu_mem_gib }
+    }
+
+    pub fn as_array(&self) -> [f64; NUM_DIMS] {
+        [self.vcpus, self.mem_gib, self.gpus, self.gpu_mem_gib]
+    }
+
+    pub fn from_array(a: [f64; NUM_DIMS]) -> Self {
+        Dims::new(a[0], a[1], a[2], a[3])
+    }
+
+    /// Component-wise `self + other`.
+    pub fn add(&self, other: &Dims) -> Dims {
+        Dims::new(
+            self.vcpus + other.vcpus,
+            self.mem_gib + other.mem_gib,
+            self.gpus + other.gpus,
+            self.gpu_mem_gib + other.gpu_mem_gib,
+        )
+    }
+
+    /// Component-wise scale.
+    pub fn scale(&self, k: f64) -> Dims {
+        Dims::new(self.vcpus * k, self.mem_gib * k, self.gpus * k, self.gpu_mem_gib * k)
+    }
+
+    /// True iff every component of `self` fits within `cap`.
+    pub fn fits_in(&self, cap: &Dims) -> bool {
+        const EPS: f64 = 1e-9;
+        self.vcpus <= cap.vcpus + EPS
+            && self.mem_gib <= cap.mem_gib + EPS
+            && self.gpus <= cap.gpus + EPS
+            && self.gpu_mem_gib <= cap.gpu_mem_gib + EPS
+    }
+
+    /// Max over dimensions of self/cap (utilization); dims with zero capacity
+    /// count as infinite when demanded.
+    pub fn max_utilization(&self, cap: &Dims) -> f64 {
+        let mut m: f64 = 0.0;
+        for (d, c) in self.as_array().iter().zip(cap.as_array()) {
+            if *d <= 0.0 {
+                continue;
+            }
+            if c <= 0.0 {
+                return f64::INFINITY;
+            }
+            m = m.max(d / c);
+        }
+        m
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.as_array().iter().all(|&v| v == 0.0)
+    }
+}
+
+/// Cloud vendor (the paper evaluates EC2 and quotes Azure prices).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Vendor {
+    Ec2,
+    Azure,
+}
+
+impl std::fmt::Display for Vendor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Vendor::Ec2 => write!(f, "EC2"),
+            Vendor::Azure => write!(f, "Azure"),
+        }
+    }
+}
+
+/// An instance *type* (configuration): capacity vector + vendor + name.
+#[derive(Clone, Debug)]
+pub struct InstanceType {
+    pub vendor: Vendor,
+    pub name: &'static str,
+    pub capacity: Dims,
+    /// GPU generation speed multiplier relative to the profiling baseline
+    /// (g2-class K520 = 1.0; g3-class M60 ≈ 2.5; p3-class V100 ≈ 8). A
+    /// stream's GPU-time demand is divided by this factor on that type.
+    pub gpu_speed: f64,
+}
+
+impl InstanceType {
+    pub fn has_gpu(&self) -> bool {
+        self.capacity.gpus > 0.0
+    }
+}
+
+/// A cloud data-center region with geographic coordinates.
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub id: &'static str,
+    pub vendor: Vendor,
+    pub city: &'static str,
+    pub location: GeoPoint,
+}
+
+/// A priced offering: (instance type, region, hourly USD).
+#[derive(Clone, Copy, Debug)]
+pub struct Offering {
+    pub type_idx: usize,
+    pub region_idx: usize,
+    pub hourly_usd: f64,
+}
+
+/// The full catalog.
+#[derive(Clone, Debug)]
+pub struct Catalog {
+    pub types: Vec<InstanceType>,
+    pub regions: Vec<Region>,
+    pub offerings: Vec<Offering>,
+}
+
+impl Catalog {
+    /// The built-in catalog (see module docs / prices.rs).
+    pub fn builtin() -> Catalog {
+        prices::build()
+    }
+
+    pub fn type_by_name(&self, name: &str) -> Option<usize> {
+        self.types.iter().position(|t| t.name == name)
+    }
+
+    pub fn region_by_id(&self, id: &str) -> Option<usize> {
+        self.regions.iter().position(|r| r.id == id)
+    }
+
+    /// Price of a type in a region, if offered there.
+    pub fn price(&self, type_idx: usize, region_idx: usize) -> Option<f64> {
+        self.offerings
+            .iter()
+            .find(|o| o.type_idx == type_idx && o.region_idx == region_idx)
+            .map(|o| o.hourly_usd)
+    }
+
+    /// All offerings in a region.
+    pub fn offerings_in(&self, region_idx: usize) -> Vec<Offering> {
+        self.offerings
+            .iter()
+            .copied()
+            .filter(|o| o.region_idx == region_idx)
+            .collect()
+    }
+
+    /// Restrict to a subset of type names and/or region ids (None = keep all).
+    /// Offerings are filtered consistently; indices are re-mapped.
+    pub fn restrict(&self, type_names: Option<&[&str]>, region_ids: Option<&[&str]>) -> Catalog {
+        let keep_type: Vec<bool> = self
+            .types
+            .iter()
+            .map(|t| type_names.map_or(true, |ns| ns.contains(&t.name)))
+            .collect();
+        let keep_region: Vec<bool> = self
+            .regions
+            .iter()
+            .map(|r| region_ids.map_or(true, |ids| ids.contains(&r.id)))
+            .collect();
+        let mut type_map = vec![usize::MAX; self.types.len()];
+        let mut region_map = vec![usize::MAX; self.regions.len()];
+        let mut types = Vec::new();
+        let mut regions = Vec::new();
+        for (i, t) in self.types.iter().enumerate() {
+            if keep_type[i] {
+                type_map[i] = types.len();
+                types.push(t.clone());
+            }
+        }
+        for (i, r) in self.regions.iter().enumerate() {
+            if keep_region[i] {
+                region_map[i] = regions.len();
+                regions.push(r.clone());
+            }
+        }
+        let offerings = self
+            .offerings
+            .iter()
+            .filter(|o| keep_type[o.type_idx] && keep_region[o.region_idx])
+            .map(|o| Offering {
+                type_idx: type_map[o.type_idx],
+                region_idx: region_map[o.region_idx],
+                hourly_usd: o.hourly_usd,
+            })
+            .collect();
+        Catalog { types, regions, offerings }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_fits_and_add() {
+        let a = Dims::new(2.0, 4.0, 0.0, 0.0);
+        let b = Dims::new(1.0, 1.0, 1.0, 2.0);
+        let cap = Dims::new(4.0, 8.0, 1.0, 4.0);
+        assert!(a.fits_in(&cap));
+        assert!(a.add(&b).fits_in(&cap));
+        assert!(!a.add(&b).add(&b).fits_in(&cap));
+    }
+
+    #[test]
+    fn dims_utilization() {
+        let d = Dims::new(4.0, 4.0, 0.0, 0.0);
+        let cap = Dims::new(8.0, 16.0, 0.0, 0.0);
+        assert!((d.max_utilization(&cap) - 0.5).abs() < 1e-12);
+        let g = Dims::new(0.0, 0.0, 0.5, 0.0);
+        assert!(g.max_utilization(&cap).is_infinite());
+    }
+
+    #[test]
+    fn builtin_has_table1_types() {
+        let c = Catalog::builtin();
+        for name in ["c4.2xlarge", "c4.8xlarge", "g3.8xlarge", "D8_v3", "NC24r"] {
+            assert!(c.type_by_name(name).is_some(), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn table1_prices_exact() {
+        // Table I of the paper, verbatim.
+        let c = Catalog::builtin();
+        let cases = [
+            ("c4.2xlarge", "us-east-1", Some(0.398)),
+            ("c4.2xlarge", "eu-west-2", Some(0.476)),
+            ("c4.2xlarge", "ap-southeast-1", Some(0.462)),
+            ("c4.8xlarge", "us-east-1", Some(1.591)),
+            ("c4.8xlarge", "eu-west-2", Some(1.902)),
+            ("c4.8xlarge", "ap-southeast-1", Some(1.848)),
+            ("g3.8xlarge", "us-east-1", Some(2.280)),
+            ("g3.8xlarge", "eu-west-2", None), // N/A in Table I
+            ("g3.8xlarge", "ap-southeast-1", Some(3.340)),
+            ("D8_v3", "az-us-east", Some(0.384)),
+            ("D8_v3", "az-west-europe", Some(0.480)),
+            ("D8_v3", "az-east-asia", Some(0.625)),
+            ("NC24r", "az-us-east", Some(3.960)),
+            ("NC24r", "az-west-europe", Some(5.132)),
+            ("NC24r", "az-east-asia", None), // N/A in Table I
+        ];
+        for (ty, rg, want) in cases {
+            let t = c.type_by_name(ty).unwrap();
+            let r = c.region_by_id(rg).unwrap();
+            let got = c.price(t, r);
+            match want {
+                Some(p) => assert_eq!(got, Some(p), "{ty}@{rg}"),
+                None => assert_eq!(got, None, "{ty}@{rg} should be N/A"),
+            }
+        }
+    }
+
+    #[test]
+    fn prose_prices_exact() {
+        let c = Catalog::builtin();
+        let cases = [
+            ("c5d.9xlarge", "us-east-1", 1.728),
+            ("p3.2xlarge", "us-east-1", 3.06),
+            ("p3.8xlarge", "us-east-1", 12.24),
+            ("g2.2xlarge", "us-east-2", 0.650),
+            ("c4.2xlarge", "us-east-2", 0.419),
+        ];
+        for (ty, rg, want) in cases {
+            let t = c.type_by_name(ty).unwrap();
+            let r = c.region_by_id(rg).unwrap();
+            assert_eq!(c.price(t, r), Some(want), "{ty}@{rg}");
+        }
+    }
+
+    #[test]
+    fn azure_d8v3_singapore_premium_is_63_percent() {
+        // The paper: Azure D8 v3 costs 63% more in (East Asia) than in US East:
+        // 0.625 / 0.384 = 1.63.
+        let c = Catalog::builtin();
+        let t = c.type_by_name("D8_v3").unwrap();
+        let hi = c.price(t, c.region_by_id("az-east-asia").unwrap()).unwrap();
+        let lo = c.price(t, c.region_by_id("az-us-east").unwrap()).unwrap();
+        assert!((hi / lo - 1.63).abs() < 0.01);
+    }
+
+    #[test]
+    fn gpu_flags() {
+        let c = Catalog::builtin();
+        assert!(c.types[c.type_by_name("g3.8xlarge").unwrap()].has_gpu());
+        assert!(c.types[c.type_by_name("p3.2xlarge").unwrap()].has_gpu());
+        assert!(!c.types[c.type_by_name("c4.2xlarge").unwrap()].has_gpu());
+    }
+
+    #[test]
+    fn restrict_remaps_consistently() {
+        let c = Catalog::builtin();
+        let small = c.restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        assert_eq!(small.types.len(), 2);
+        assert_eq!(small.regions.len(), 1);
+        assert!(!small.offerings.is_empty());
+        for o in &small.offerings {
+            assert!(o.type_idx < small.types.len());
+            assert_eq!(o.region_idx, 0);
+        }
+        let t = small.type_by_name("c4.2xlarge").unwrap();
+        assert_eq!(small.price(t, 0), Some(0.419));
+    }
+
+    #[test]
+    fn bigger_cpu_instances_cheaper_per_core() {
+        // c4.8xlarge undercuts c4.2xlarge per vCPU — the Fig-5 effect.
+        let c = Catalog::builtin();
+        let r = c.region_by_id("us-east-1").unwrap();
+        let t2 = c.type_by_name("c4.2xlarge").unwrap();
+        let t8 = c.type_by_name("c4.8xlarge").unwrap();
+        let per_core_2 = c.price(t2, r).unwrap() / c.types[t2].capacity.vcpus;
+        let per_core_8 = c.price(t8, r).unwrap() / c.types[t8].capacity.vcpus;
+        assert!(per_core_8 < per_core_2);
+    }
+
+    #[test]
+    fn every_offering_indexes_valid() {
+        let c = Catalog::builtin();
+        for o in &c.offerings {
+            assert!(o.type_idx < c.types.len());
+            assert!(o.region_idx < c.regions.len());
+            assert!(o.hourly_usd > 0.0);
+        }
+    }
+}

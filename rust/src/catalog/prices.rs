@@ -1,0 +1,137 @@
+//! Built-in instance types, regions, and prices.
+//!
+//! Table I rows are pinned verbatim; other (type, region) prices follow the
+//! vendor's regional multiplier pattern of the era. `us-east-2` carries the
+//! Fig-3 experiment pool prices ($0.419 CPU box, $0.650 g2.2xlarge) quoted by
+//! the paper's evaluation table.
+
+use super::{Catalog, Dims, InstanceType, Offering, Region, Vendor};
+use crate::geo::GeoPoint;
+
+/// (id, vendor, city, lat, lon, regional price multiplier vs us-east-1)
+const REGIONS: &[(&str, Vendor, &str, f64, f64, f64)] = &[
+    ("us-east-1", Vendor::Ec2, "Virginia", 38.95, -77.45, 1.000),
+    ("us-east-2", Vendor::Ec2, "Ohio", 39.96, -82.99, 1.0528), // Fig-3 pool
+    ("us-west-1", Vendor::Ec2, "N. California", 37.35, -121.96, 1.170),
+    ("us-west-2", Vendor::Ec2, "Oregon", 45.84, -119.70, 1.000),
+    ("eu-west-1", Vendor::Ec2, "Ireland", 53.34, -6.27, 1.110),
+    ("eu-west-2", Vendor::Ec2, "London", 51.51, -0.13, 1.196),
+    ("eu-central-1", Vendor::Ec2, "Frankfurt", 50.11, 8.68, 1.150),
+    ("ap-southeast-1", Vendor::Ec2, "Singapore", 1.35, 103.82, 1.161),
+    ("ap-southeast-2", Vendor::Ec2, "Sydney", -33.87, 151.21, 1.250),
+    ("ap-northeast-1", Vendor::Ec2, "Tokyo", 35.68, 139.69, 1.260),
+    ("ap-south-1", Vendor::Ec2, "Mumbai", 19.08, 72.88, 1.060),
+    ("sa-east-1", Vendor::Ec2, "Sao Paulo", -23.55, -46.63, 1.560),
+    ("az-us-east", Vendor::Azure, "Virginia (Azure)", 38.80, -78.20, 1.000),
+    ("az-west-europe", Vendor::Azure, "Amsterdam", 52.37, 4.90, 1.250),
+    ("az-east-asia", Vendor::Azure, "Hong Kong", 22.32, 114.17, 1.628),
+];
+
+/// (name, vendor, vCPU, mem GiB, GPUs, GPU mem GiB, base price us-east-1,
+///  gpu generation speed factor vs the g2/K520 profiling baseline)
+const TYPES: &[(&str, Vendor, f64, f64, f64, f64, f64, f64)] = &[
+    // Table I EC2 rows.
+    ("c4.2xlarge", Vendor::Ec2, 8.0, 15.0, 0.0, 0.0, 0.398, 1.0),
+    ("c4.8xlarge", Vendor::Ec2, 36.0, 60.0, 0.0, 0.0, 1.591, 1.0),
+    ("g3.8xlarge", Vendor::Ec2, 32.0, 244.0, 2.0, 16.0, 2.280, 2.5),
+    // Prose-quoted EC2 instances.
+    ("c5d.9xlarge", Vendor::Ec2, 36.0, 72.0, 0.0, 0.0, 1.728, 1.0),
+    ("p3.2xlarge", Vendor::Ec2, 8.0, 61.0, 1.0, 16.0, 3.06, 8.0),
+    ("p3.8xlarge", Vendor::Ec2, 32.0, 244.0, 4.0, 64.0, 12.24, 8.0),
+    // The Fig-3 evaluation pool GPU box (K520-era g2).
+    ("g2.2xlarge", Vendor::Ec2, 8.0, 15.0, 1.0, 4.0, 0.6173, 1.0),
+    // Smaller CPU boxes for location experiments (same c4 family pricing).
+    ("c4.large", Vendor::Ec2, 2.0, 3.75, 0.0, 0.0, 0.100, 1.0),
+    ("c4.xlarge", Vendor::Ec2, 4.0, 7.5, 0.0, 0.0, 0.199, 1.0),
+    ("c4.4xlarge", Vendor::Ec2, 16.0, 30.0, 0.0, 0.0, 0.796, 1.0),
+    // Table I Azure rows.
+    ("D8_v3", Vendor::Azure, 8.0, 32.0, 0.0, 0.0, 0.384, 1.0),
+    ("NC24r", Vendor::Azure, 24.0, 224.0, 4.0, 48.0, 3.960, 4.0),
+    // Additional Azure family members (2018-era price points) so Azure-only
+    // coverage areas can host CPU-heavy and GPU-heavy streams.
+    ("D16_v3", Vendor::Azure, 16.0, 64.0, 0.0, 0.0, 0.768, 1.0),
+    ("D32_v3", Vendor::Azure, 32.0, 128.0, 0.0, 0.0, 1.536, 1.0),
+    ("NC6", Vendor::Azure, 6.0, 56.0, 1.0, 12.0, 0.90, 1.5),
+    ("NC12", Vendor::Azure, 12.0, 112.0, 2.0, 24.0, 1.80, 1.5),
+    ("NC6s_v3", Vendor::Azure, 6.0, 112.0, 1.0, 16.0, 3.06, 8.0),
+    ("NC24s_v3", Vendor::Azure, 24.0, 448.0, 4.0, 64.0, 12.24, 8.0),
+];
+
+/// Exact Table-I (and prose) overrides: (type, region) -> price.
+/// A negative price marks an explicit N/A (offering withheld in that region).
+const OVERRIDES: &[(&str, &str, f64)] = &[
+    // Table I, EC2 London / Singapore columns.
+    ("c4.2xlarge", "eu-west-2", 0.476),
+    ("c4.2xlarge", "ap-southeast-1", 0.462),
+    ("c4.8xlarge", "eu-west-2", 1.902),
+    ("c4.8xlarge", "ap-southeast-1", 1.848),
+    ("g3.8xlarge", "eu-west-2", -1.0), // N/A
+    ("g3.8xlarge", "ap-southeast-1", 3.340),
+    // Table I, Azure columns.
+    ("D8_v3", "az-west-europe", 0.480),
+    ("D8_v3", "az-east-asia", 0.625),
+    ("NC24r", "az-west-europe", 5.132),
+    ("NC24r", "az-east-asia", -1.0), // N/A
+    // Fig-3 pool (us-east-2): the paper's $0.419 CPU box and $0.650 GPU box.
+    ("c4.2xlarge", "us-east-2", 0.419),
+    ("g2.2xlarge", "us-east-2", 0.650),
+];
+
+/// Azure types are offered only in Azure regions and vice versa; GPU types are
+/// not offered everywhere (mirrors the paper's N/A cells).
+fn offered(ty: &InstanceType, region: &Region) -> bool {
+    if ty.vendor != region.vendor {
+        return false;
+    }
+    true
+}
+
+pub fn build() -> Catalog {
+    let regions: Vec<Region> = REGIONS
+        .iter()
+        .map(|&(id, vendor, city, lat, lon, _)| Region {
+            id,
+            vendor,
+            city,
+            location: GeoPoint::new(lat, lon),
+        })
+        .collect();
+    let types: Vec<InstanceType> = TYPES
+        .iter()
+        .map(|&(name, vendor, vcpus, mem, gpus, gpu_mem, _, gpu_speed)| InstanceType {
+            vendor,
+            name,
+            capacity: Dims::new(vcpus, mem, gpus, gpu_mem),
+            gpu_speed,
+        })
+        .collect();
+
+    let mut offerings = Vec::new();
+    for (ti, (tname, _, _, _, _, _, base, _)) in TYPES.iter().enumerate() {
+        for (ri, (rid, _, _, _, _, mult)) in REGIONS.iter().enumerate() {
+            if !offered(&types[ti], &regions[ri]) {
+                continue;
+            }
+            let mut price = base * mult;
+            let mut skip = false;
+            for &(oty, org, op) in OVERRIDES {
+                if oty == *tname && org == *rid {
+                    if op < 0.0 {
+                        skip = true;
+                    } else {
+                        price = op;
+                    }
+                }
+            }
+            if skip {
+                continue;
+            }
+            offerings.push(Offering {
+                type_idx: ti,
+                region_idx: ri,
+                hourly_usd: (price * 10000.0).round() / 10000.0,
+            });
+        }
+    }
+    Catalog { types, regions, offerings }
+}

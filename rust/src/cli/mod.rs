@@ -1,0 +1,124 @@
+//! Minimal argument parser (clap is not vendored in this image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (excluding argv\[0\]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: everything after is positional.
+                    out.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|_| {
+                Error::config(format!("cannot parse --{name} value '{s}'"))
+            }),
+        }
+    }
+
+    /// First positional argument (the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_subcommand() {
+        let a = parse(&["plan", "extra"]);
+        assert_eq!(a.subcommand(), Some("plan"));
+        assert_eq!(a.positional, vec!["plan", "extra"]);
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse(&["serve", "--fps", "2.5", "--exact", "--mode=fast"]);
+        assert_eq!(a.opt("fps"), Some("2.5"));
+        assert!(a.flag("exact"));
+        assert_eq!(a.opt("mode"), Some("fast"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn typed_parse_with_default() {
+        let a = parse(&["x", "--n", "12"]);
+        assert_eq!(a.opt_parse("n", 0usize).unwrap(), 12);
+        assert_eq!(a.opt_parse("m", 7usize).unwrap(), 7);
+        let bad = parse(&["x", "--n", "abc"]);
+        assert!(bad.opt_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["run", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["run", "--not-a-flag"]);
+        assert!(!a.flag("not-a-flag"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse(&["x", "--delta", "-3"]);
+        // "-3" doesn't start with --, so it's consumed as the value.
+        assert_eq!(a.opt("delta"), Some("-3"));
+    }
+}

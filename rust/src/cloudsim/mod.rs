@@ -1,0 +1,332 @@
+//! Simulated cloud provider (the AWS/Azure stand-in).
+//!
+//! The paper's experiments provision real EC2 instances; this simulator
+//! reproduces the parts the resource manager interacts with: provisioning
+//! with boot latency, hourly billing, per-dimension load/utilization
+//! tracking, and the >90%-utilization performance degradation the 90% rule
+//! guards against. Driven by `bench_adaptive`, `examples/adaptive_day`, and
+//! the serving layer.
+
+use crate::catalog::{Catalog, Dims};
+use crate::coordinator::Plan;
+use crate::error::{Error, Result};
+
+/// Boot latency of a fresh instance (seconds). EC2-era instances took on the
+/// order of a minute to become available.
+pub const DEFAULT_BOOT_DELAY_S: f64 = 60.0;
+
+/// Throughput factor once any dimension exceeds the degradation threshold
+/// (the paper: "when any dimension is more than 90% utilized, the
+/// performance starts to degrade").
+pub const DEGRADATION_THRESHOLD: f64 = 0.90;
+
+/// Instance id.
+pub type InstanceId = u64;
+
+/// One simulated instance.
+#[derive(Clone, Debug)]
+pub struct SimInstance {
+    pub id: InstanceId,
+    pub type_idx: usize,
+    pub region_idx: usize,
+    pub label: String,
+    pub hourly_usd: f64,
+    pub launched_at: f64,
+    pub ready_at: f64,
+    pub terminated_at: Option<f64>,
+    /// Current resource load (set by the serving layer / plan application).
+    pub load: Dims,
+    pub capacity: Dims,
+}
+
+impl SimInstance {
+    pub fn alive(&self) -> bool {
+        self.terminated_at.is_none()
+    }
+
+    pub fn ready(&self, now: f64) -> bool {
+        self.alive() && now >= self.ready_at
+    }
+
+    pub fn utilization(&self) -> f64 {
+        let u = self.load.max_utilization(&self.capacity);
+        if u.is_finite() {
+            u
+        } else {
+            1.0
+        }
+    }
+
+    /// Effective throughput multiplier: 1.0 below the threshold, then a
+    /// linear penalty down to 0.5 at 100% (saturating).
+    pub fn degradation_factor(&self) -> f64 {
+        let u = self.utilization();
+        if u <= DEGRADATION_THRESHOLD {
+            1.0
+        } else {
+            let over = ((u - DEGRADATION_THRESHOLD) / (1.0 - DEGRADATION_THRESHOLD)).min(1.0);
+            1.0 - 0.5 * over
+        }
+    }
+}
+
+/// The simulator.
+pub struct CloudSim {
+    pub catalog: Catalog,
+    pub boot_delay_s: f64,
+    clock_s: f64,
+    next_id: InstanceId,
+    instances: Vec<SimInstance>,
+    accrued_usd: f64,
+}
+
+impl CloudSim {
+    pub fn new(catalog: Catalog) -> Self {
+        CloudSim {
+            catalog,
+            boot_delay_s: DEFAULT_BOOT_DELAY_S,
+            clock_s: 0.0,
+            next_id: 0,
+            instances: Vec::new(),
+            accrued_usd: 0.0,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// Advance the clock, accruing cost for every alive instance
+    /// (billing is linear $/hour, as the paper's hourly prices).
+    pub fn advance(&mut self, dt_s: f64) {
+        assert!(dt_s >= 0.0);
+        for inst in &self.instances {
+            if inst.alive() {
+                self.accrued_usd += inst.hourly_usd * dt_s / 3600.0;
+            }
+        }
+        self.clock_s += dt_s;
+    }
+
+    /// Provision an instance of `type_idx` in `region_idx`.
+    pub fn provision(&mut self, type_idx: usize, region_idx: usize) -> Result<InstanceId> {
+        let price = self
+            .catalog
+            .price(type_idx, region_idx)
+            .ok_or_else(|| {
+                Error::config(format!(
+                    "no offering for type {type_idx} in region {region_idx}"
+                ))
+            })?;
+        let ty = &self.catalog.types[type_idx];
+        let rg = &self.catalog.regions[region_idx];
+        let id = self.next_id;
+        self.next_id += 1;
+        self.instances.push(SimInstance {
+            id,
+            type_idx,
+            region_idx,
+            label: format!("{}@{}", ty.name, rg.id),
+            hourly_usd: price,
+            launched_at: self.clock_s,
+            ready_at: self.clock_s + self.boot_delay_s,
+            terminated_at: None,
+            load: Dims::default(),
+            capacity: ty.capacity,
+        });
+        Ok(id)
+    }
+
+    pub fn terminate(&mut self, id: InstanceId) -> Result<()> {
+        let now = self.clock_s;
+        let inst = self
+            .instances
+            .iter_mut()
+            .find(|i| i.id == id && i.alive())
+            .ok_or_else(|| Error::config(format!("instance {id} not alive")))?;
+        inst.terminated_at = Some(now);
+        inst.load = Dims::default();
+        Ok(())
+    }
+
+    pub fn set_load(&mut self, id: InstanceId, load: Dims) -> Result<()> {
+        let inst = self
+            .instances
+            .iter_mut()
+            .find(|i| i.id == id && i.alive())
+            .ok_or_else(|| Error::config(format!("instance {id} not alive")))?;
+        inst.load = load;
+        Ok(())
+    }
+
+    pub fn get(&self, id: InstanceId) -> Option<&SimInstance> {
+        self.instances.iter().find(|i| i.id == id)
+    }
+
+    pub fn alive(&self) -> Vec<&SimInstance> {
+        self.instances.iter().filter(|i| i.alive()).collect()
+    }
+
+    pub fn accrued_usd(&self) -> f64 {
+        self.accrued_usd
+    }
+
+    /// Hourly burn rate of the current fleet.
+    pub fn hourly_rate(&self) -> f64 {
+        self.instances
+            .iter()
+            .filter(|i| i.alive())
+            .map(|i| i.hourly_usd)
+            .sum()
+    }
+
+    /// Reconcile the fleet with a plan: terminate surplus instances, keep
+    /// matching ones, provision the rest. Returns ids aligned with
+    /// `plan.instances` order.
+    pub fn apply_plan(&mut self, plan: &Plan) -> Result<Vec<InstanceId>> {
+        // Pool alive instances by label.
+        let mut pool: std::collections::BTreeMap<String, Vec<InstanceId>> =
+            std::collections::BTreeMap::new();
+        for inst in self.instances.iter().filter(|i| i.alive()) {
+            pool.entry(inst.label.clone()).or_default().push(inst.id);
+        }
+        let mut assigned = Vec::with_capacity(plan.instances.len());
+        let mut to_provision = Vec::new();
+        for planned in &plan.instances {
+            match pool.get_mut(&planned.label).and_then(|v| v.pop()) {
+                Some(id) => assigned.push(Some(id)),
+                None => {
+                    assigned.push(None);
+                    to_provision.push((planned.type_idx, planned.region_idx));
+                }
+            }
+        }
+        // Terminate leftovers.
+        let leftovers: Vec<InstanceId> = pool.values().flatten().copied().collect();
+        for id in leftovers {
+            self.terminate(id)?;
+        }
+        // Provision the gaps.
+        let mut fresh = to_provision
+            .into_iter()
+            .map(|(t, r)| self.provision(t, r))
+            .collect::<Result<Vec<_>>>()?
+            .into_iter();
+        let ids: Vec<InstanceId> = assigned
+            .into_iter()
+            .map(|slot| slot.unwrap_or_else(|| fresh.next().expect("fresh instance")))
+            .collect();
+        // Set loads from the plan's packing.
+        let loads: Vec<Dims> = plan
+            .packing
+            .bins
+            .iter()
+            .map(|b| b.total_demand(&plan.problem))
+            .collect();
+        for (id, load) in ids.iter().zip(loads) {
+            self.set_load(*id, load)?;
+        }
+        Ok(ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cameras::{camera_at, StreamRequest};
+    use crate::coordinator::{Planner, PlannerConfig};
+    use crate::geo::cities;
+    use crate::profiles::{Program, Resolution};
+
+    fn sim() -> CloudSim {
+        CloudSim::new(Catalog::builtin())
+    }
+
+    #[test]
+    fn billing_is_linear_in_time() {
+        let mut s = sim();
+        let t = s.catalog.type_by_name("c4.2xlarge").unwrap();
+        let r = s.catalog.region_by_id("us-east-1").unwrap();
+        s.provision(t, r).unwrap();
+        s.advance(3600.0);
+        assert!((s.accrued_usd() - 0.398).abs() < 1e-9);
+        s.advance(1800.0);
+        assert!((s.accrued_usd() - 0.398 * 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn terminated_instances_stop_billing() {
+        let mut s = sim();
+        let t = s.catalog.type_by_name("c4.2xlarge").unwrap();
+        let r = s.catalog.region_by_id("us-east-1").unwrap();
+        let id = s.provision(t, r).unwrap();
+        s.advance(3600.0);
+        s.terminate(id).unwrap();
+        let before = s.accrued_usd();
+        s.advance(3600.0);
+        assert_eq!(s.accrued_usd(), before);
+        assert!(s.terminate(id).is_err(), "double-terminate must fail");
+    }
+
+    #[test]
+    fn boot_delay_respected() {
+        let mut s = sim();
+        let t = s.catalog.type_by_name("c4.2xlarge").unwrap();
+        let r = s.catalog.region_by_id("us-east-1").unwrap();
+        let id = s.provision(t, r).unwrap();
+        assert!(!s.get(id).unwrap().ready(s.now()));
+        s.advance(DEFAULT_BOOT_DELAY_S + 1.0);
+        assert!(s.get(id).unwrap().ready(s.now()));
+    }
+
+    #[test]
+    fn degradation_kicks_in_above_threshold() {
+        let mut s = sim();
+        let t = s.catalog.type_by_name("c4.2xlarge").unwrap();
+        let r = s.catalog.region_by_id("us-east-1").unwrap();
+        let id = s.provision(t, r).unwrap();
+        s.set_load(id, Dims::new(4.0, 4.0, 0.0, 0.0)).unwrap(); // 50%
+        assert_eq!(s.get(id).unwrap().degradation_factor(), 1.0);
+        s.set_load(id, Dims::new(7.6, 4.0, 0.0, 0.0)).unwrap(); // 95%
+        let f = s.get(id).unwrap().degradation_factor();
+        assert!(f < 1.0 && f >= 0.5, "factor={f}");
+    }
+
+    #[test]
+    fn apply_plan_reconciles_fleet() {
+        let catalog =
+            Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let planner = Planner::new(catalog.clone(), PlannerConfig::st3());
+        let mut s = CloudSim::new(catalog);
+
+        let mk = |fps: f64, n: usize| -> Vec<StreamRequest> {
+            (0..n)
+                .map(|i| {
+                    StreamRequest::new(
+                        camera_at(i as u64, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0),
+                        Program::Zf,
+                        fps,
+                    )
+                })
+                .collect()
+        };
+
+        let plan_low = planner.plan(&mk(0.5, 4)).unwrap();
+        let ids1 = s.apply_plan(&plan_low).unwrap();
+        assert_eq!(ids1.len(), plan_low.instances.len());
+        let n1 = s.alive().len();
+
+        // Rush hour: more/different instances.
+        let plan_high = planner.plan(&mk(8.0, 4)).unwrap();
+        s.apply_plan(&plan_high).unwrap();
+        assert_eq!(s.alive().len(), plan_high.instances.len());
+        assert!(s.alive().len() >= n1);
+
+        // Back to calm: surplus terminated.
+        let ids3 = s.apply_plan(&plan_low).unwrap();
+        assert_eq!(s.alive().len(), plan_low.instances.len());
+        assert_eq!(ids3.len(), plan_low.instances.len());
+        // Hourly rate matches the plan's cost.
+        assert!((s.hourly_rate() - plan_low.cost_per_hour).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,243 @@
+//! Typed run configuration: JSON-backed, used by the CLI and examples.
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+use std::path::Path;
+
+/// Which paper strategy to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyName {
+    St1,
+    St2,
+    St3,
+    Nl,
+    Armvac,
+    Gcl,
+}
+
+impl StrategyName {
+    pub const ALL: [StrategyName; 6] = [
+        StrategyName::St1,
+        StrategyName::St2,
+        StrategyName::St3,
+        StrategyName::Nl,
+        StrategyName::Armvac,
+        StrategyName::Gcl,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StrategyName::St1 => "st1",
+            StrategyName::St2 => "st2",
+            StrategyName::St3 => "st3",
+            StrategyName::Nl => "nl",
+            StrategyName::Armvac => "armvac",
+            StrategyName::Gcl => "gcl",
+        }
+    }
+
+    pub fn to_planner_config(self) -> crate::coordinator::PlannerConfig {
+        use crate::coordinator::PlannerConfig as P;
+        match self {
+            StrategyName::St1 => P::st1(),
+            StrategyName::St2 => P::st2(),
+            StrategyName::St3 => P::st3(),
+            StrategyName::Nl => P::nl(),
+            StrategyName::Armvac => P::armvac(),
+            StrategyName::Gcl => P::gcl(),
+        }
+    }
+}
+
+impl std::str::FromStr for StrategyName {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "st1" => Ok(StrategyName::St1),
+            "st2" => Ok(StrategyName::St2),
+            "st3" => Ok(StrategyName::St3),
+            "nl" => Ok(StrategyName::Nl),
+            "armvac" => Ok(StrategyName::Armvac),
+            "gcl" => Ok(StrategyName::Gcl),
+            other => Err(Error::config(format!(
+                "unknown strategy '{other}' (st1|st2|st3|nl|armvac|gcl)"
+            ))),
+        }
+    }
+}
+
+/// End-to-end run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub strategy: StrategyName,
+    /// Fig-3 scenario number (1..=3) or 0 for a synthetic workload.
+    pub scenario: usize,
+    /// Synthetic-workload knobs (used when scenario == 0).
+    pub num_cameras: usize,
+    pub target_fps: f64,
+    pub seed: u64,
+    /// Serving knobs.
+    pub artifacts_dir: String,
+    pub duration_s: f64,
+    pub time_scale: f64,
+    pub batch_window_ms: u64,
+    /// Restrict to the Fig-3 instance pool.
+    pub fig3_pool: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            strategy: StrategyName::St3,
+            scenario: 1,
+            num_cameras: 10,
+            target_fps: 1.0,
+            seed: 0,
+            artifacts_dir: "artifacts".into(),
+            duration_s: 30.0,
+            time_scale: 30.0,
+            batch_window_ms: 30,
+            fig3_pool: true,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("strategy", Value::str(self.strategy.as_str())),
+            ("scenario", Value::num(self.scenario as f64)),
+            ("num_cameras", Value::num(self.num_cameras as f64)),
+            ("target_fps", Value::num(self.target_fps)),
+            ("seed", Value::num(self.seed as f64)),
+            ("artifacts_dir", Value::str(self.artifacts_dir.clone())),
+            ("duration_s", Value::num(self.duration_s)),
+            ("time_scale", Value::num(self.time_scale)),
+            ("batch_window_ms", Value::num(self.batch_window_ms as f64)),
+            ("fig3_pool", Value::Bool(self.fig3_pool)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = RunConfig::default();
+        let get_or = |key: &str, default: f64| -> f64 {
+            v.get_f64(key).unwrap_or(default)
+        };
+        Ok(RunConfig {
+            strategy: match v.get_str("strategy") {
+                Ok(s) => s.parse()?,
+                Err(_) => d.strategy,
+            },
+            scenario: get_or("scenario", d.scenario as f64) as usize,
+            num_cameras: get_or("num_cameras", d.num_cameras as f64) as usize,
+            target_fps: get_or("target_fps", d.target_fps),
+            seed: get_or("seed", d.seed as f64) as u64,
+            artifacts_dir: v
+                .get_str("artifacts_dir")
+                .map(|s| s.to_string())
+                .unwrap_or(d.artifacts_dir),
+            duration_s: get_or("duration_s", d.duration_s),
+            time_scale: get_or("time_scale", d.time_scale),
+            batch_window_ms: get_or("batch_window_ms", d.batch_window_ms as f64) as u64,
+            fig3_pool: v
+                .get("fig3_pool")
+                .ok()
+                .and_then(|b| b.as_bool())
+                .unwrap_or(d.fig3_pool),
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, json::to_string_pretty(&self.to_json()))?;
+        Ok(())
+    }
+
+    /// Materialize the workload this config describes.
+    pub fn requests(&self) -> Result<Vec<crate::cameras::StreamRequest>> {
+        use crate::cameras::scenarios;
+        Ok(match self.scenario {
+            0 => scenarios::fig6_workload(self.num_cameras, self.target_fps, self.seed),
+            1 => scenarios::fig3_scenario1().requests,
+            2 => scenarios::fig3_scenario2().requests,
+            3 => scenarios::fig3_scenario3().requests,
+            other => {
+                return Err(Error::config(format!(
+                    "scenario {other} out of range (0..=3)"
+                )))
+            }
+        })
+    }
+
+    /// The catalog this config plans against.
+    pub fn catalog(&self) -> crate::catalog::Catalog {
+        let c = crate::catalog::Catalog::builtin();
+        if self.fig3_pool {
+            c.restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]))
+        } else {
+            c
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip() {
+        let cfg = RunConfig::default();
+        let v = cfg.to_json();
+        let back = RunConfig::from_json(&v).unwrap();
+        assert_eq!(back.strategy, cfg.strategy);
+        assert_eq!(back.scenario, cfg.scenario);
+        assert_eq!(back.duration_s, cfg.duration_s);
+        assert_eq!(back.fig3_pool, cfg.fig3_pool);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("camflow-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.json");
+        let mut cfg = RunConfig::default();
+        cfg.strategy = StrategyName::Gcl;
+        cfg.scenario = 0;
+        cfg.num_cameras = 42;
+        cfg.save(&path).unwrap();
+        let back = RunConfig::load(&path).unwrap();
+        assert_eq!(back.strategy, StrategyName::Gcl);
+        assert_eq!(back.num_cameras, 42);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let v = json::parse(r#"{"strategy": "nl"}"#).unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.strategy, StrategyName::Nl);
+        assert_eq!(cfg.scenario, RunConfig::default().scenario);
+    }
+
+    #[test]
+    fn strategy_parse_errors() {
+        assert!("bogus".parse::<StrategyName>().is_err());
+        for s in StrategyName::ALL {
+            assert_eq!(s.as_str().parse::<StrategyName>().unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn scenario_materialization() {
+        for scn in 1..=3usize {
+            let cfg = RunConfig { scenario: scn, ..Default::default() };
+            assert!(!cfg.requests().unwrap().is_empty());
+        }
+        let bad = RunConfig { scenario: 9, ..Default::default() };
+        assert!(bad.requests().is_err());
+    }
+}

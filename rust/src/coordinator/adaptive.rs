@@ -1,0 +1,197 @@
+//! Adaptive resource management ("the resource manager is dynamic and its
+//! decisions may change over time because the demands may vary").
+//!
+//! The manager keeps the current plan; when the workload changes (rush-hour
+//! frame-rate increases, cameras joining/leaving, program swaps) it re-plans
+//! and computes the **migration diff**: which instances to keep, provision,
+//! terminate, and which streams move. Re-plan latency is benchmarked in
+//! `bench_adaptive` (the paper: "These methods can make resource decisions
+//! quickly and be applied during runtime", cf. Kaseb et al. \[14\]).
+
+use super::{Plan, Planner};
+use crate::cameras::StreamRequest;
+use crate::error::Result;
+
+/// What changes when moving from one plan to the next.
+#[derive(Clone, Debug, Default)]
+pub struct MigrationReport {
+    /// Instance labels to provision (counts).
+    pub provision: Vec<(String, usize)>,
+    /// Instance labels to terminate (counts).
+    pub terminate: Vec<(String, usize)>,
+    /// Number of instances carried over unchanged (same type+location).
+    pub kept: usize,
+    /// Streams whose host instance type/location changed.
+    pub streams_moved: usize,
+    /// Hourly cost before/after.
+    pub cost_before: f64,
+    pub cost_after: f64,
+}
+
+impl MigrationReport {
+    pub fn cost_delta(&self) -> f64 {
+        self.cost_after - self.cost_before
+    }
+}
+
+/// Count instances by label.
+fn census(plan: &Plan) -> std::collections::BTreeMap<String, usize> {
+    let mut m = std::collections::BTreeMap::new();
+    for inst in &plan.instances {
+        *m.entry(inst.label.clone()).or_insert(0) += 1;
+    }
+    m
+}
+
+/// Per-stream host label (keyed by the request's camera id + program), used
+/// to detect stream moves across re-plans even when request order changes.
+fn stream_hosts(
+    plan: &Plan,
+    requests: &[StreamRequest],
+) -> std::collections::BTreeMap<(u64, &'static str), String> {
+    let mut m = std::collections::BTreeMap::new();
+    for inst in &plan.instances {
+        for &s in &inst.streams {
+            let r = &requests[s];
+            m.insert((r.camera.id, r.program.name()), inst.label.clone());
+        }
+    }
+    m
+}
+
+/// The adaptive manager: owns the current plan and re-plans on demand drift.
+pub struct AdaptiveManager {
+    pub planner: Planner,
+    pub current: Option<(Vec<StreamRequest>, Plan)>,
+}
+
+impl AdaptiveManager {
+    pub fn new(planner: Planner) -> Self {
+        AdaptiveManager { planner, current: None }
+    }
+
+    pub fn current_plan(&self) -> Option<&Plan> {
+        self.current.as_ref().map(|(_, p)| p)
+    }
+
+    /// Re-plan for a new workload; returns the migration diff.
+    pub fn replan(&mut self, requests: Vec<StreamRequest>) -> Result<MigrationReport> {
+        let new_plan = self.planner.plan(&requests)?;
+        let mut report = MigrationReport {
+            cost_after: new_plan.cost_per_hour,
+            ..Default::default()
+        };
+
+        if let Some((old_requests, old_plan)) = &self.current {
+            report.cost_before = old_plan.cost_per_hour;
+            let old_census = census(old_plan);
+            let new_census = census(&new_plan);
+            for (label, &n_new) in &new_census {
+                let n_old = old_census.get(label).copied().unwrap_or(0);
+                if n_new > n_old {
+                    report.provision.push((label.clone(), n_new - n_old));
+                }
+                report.kept += n_new.min(n_old);
+            }
+            for (label, &n_old) in &old_census {
+                let n_new = new_census.get(label).copied().unwrap_or(0);
+                if n_old > n_new {
+                    report.terminate.push((label.clone(), n_old - n_new));
+                }
+            }
+            // Stream moves: host label changed for a surviving stream.
+            let old_hosts = stream_hosts(old_plan, old_requests);
+            let new_hosts = stream_hosts(&new_plan, &requests);
+            for (key, new_label) in &new_hosts {
+                if let Some(old_label) = old_hosts.get(key) {
+                    if old_label != new_label {
+                        report.streams_moved += 1;
+                    }
+                }
+            }
+        } else {
+            // Cold start: everything is a provision.
+            for (label, n) in census(&new_plan) {
+                report.provision.push((label, n));
+            }
+        }
+
+        self.current = Some((requests, new_plan));
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cameras::{camera_at, StreamRequest};
+    use crate::catalog::Catalog;
+    use crate::coordinator::PlannerConfig;
+    use crate::geo::cities;
+    use crate::profiles::{Program, Resolution};
+
+    fn planner() -> Planner {
+        let catalog =
+            Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        Planner::new(catalog, PlannerConfig::st3())
+    }
+
+    fn workload(fps: f64, n: usize) -> Vec<StreamRequest> {
+        (0..n)
+            .map(|i| {
+                StreamRequest::new(
+                    camera_at(i as u64, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0),
+                    Program::Zf,
+                    fps,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cold_start_provisions_everything() {
+        let mut mgr = AdaptiveManager::new(planner());
+        let report = mgr.replan(workload(0.5, 4)).unwrap();
+        assert!(report.provision.iter().map(|(_, n)| n).sum::<usize>() >= 1);
+        assert!(report.terminate.is_empty());
+        assert_eq!(report.cost_before, 0.0);
+        assert!(report.cost_after > 0.0);
+    }
+
+    #[test]
+    fn rush_hour_scales_up_then_down() {
+        let mut mgr = AdaptiveManager::new(planner());
+        mgr.replan(workload(0.5, 4)).unwrap();
+        let calm_cost = mgr.current_plan().unwrap().cost_per_hour;
+
+        // Rush hour: 8 fps requires GPUs -> cost rises, instances provisioned.
+        let up = mgr.replan(workload(8.0, 4)).unwrap();
+        assert!(up.cost_delta() > 0.0);
+        assert!(!up.provision.is_empty());
+
+        // Calm again: cost returns, terminations issued.
+        let down = mgr.replan(workload(0.5, 4)).unwrap();
+        assert!(down.cost_delta() < 0.0);
+        assert!(!down.terminate.is_empty());
+        assert!((mgr.current_plan().unwrap().cost_per_hour - calm_cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identical_workload_is_stable() {
+        let mut mgr = AdaptiveManager::new(planner());
+        mgr.replan(workload(1.0, 6)).unwrap();
+        let report = mgr.replan(workload(1.0, 6)).unwrap();
+        assert!(report.provision.is_empty(), "{report:?}");
+        assert!(report.terminate.is_empty(), "{report:?}");
+        assert_eq!(report.cost_delta(), 0.0);
+    }
+
+    #[test]
+    fn camera_departure_releases_capacity() {
+        let mut mgr = AdaptiveManager::new(planner());
+        mgr.replan(workload(8.0, 6)).unwrap();
+        let report = mgr.replan(workload(8.0, 2)).unwrap();
+        assert!(report.cost_delta() < 0.0);
+        assert!(!report.terminate.is_empty());
+    }
+}

@@ -1,0 +1,620 @@
+//! The resource manager — the paper's contribution.
+//!
+//! Given a set of [`StreamRequest`]s (camera × analysis program × desired
+//! fps), a [`Catalog`] of priced instance offerings, and the program
+//! [`profiles`](crate::profiles), the planner:
+//!
+//! 1. derives each stream's **eligible locations** from the RTT/frame-rate
+//!    coupling (Fig 4: the coverage circle around each camera),
+//! 2. builds the **multi-dimensional multiple-choice packing problem**
+//!    (streams = boxes with CPU-path and GPU-path demand vectors; offerings
+//!    = trucks), applying the 90% utilization headroom rule,
+//! 3. solves it with the configured strategy:
+//!    * hardware filter — ST1 (CPU-only), ST2 (GPU-only), ST3 (both,
+//!      Kaseb et al. \[7\]),
+//!    * location policy — NL (nearest location), ARMVAC (RTT filter +
+//!      cheapest-fill, Mohan et al. \[6\]), GCL (RTT filter + exact arc-flow
+//!      packing, Mohan et al. \[8\]),
+//! 4. expands the packing into per-instance stream assignments for the
+//!    serving layer.
+
+pub mod adaptive;
+
+use crate::cameras::StreamRequest;
+use crate::catalog::Catalog;
+use crate::error::{Error, Result};
+use crate::geo;
+use crate::packing::mcvbp::{self, SolveMethod, SolveOptions};
+use crate::packing::{heuristic, BinType, ItemGroup, Packing, PackingProblem};
+
+/// ST1 / ST2 / ST3 hardware filters (Fig 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HardwareFilter {
+    /// ST1: instances with only CPUs.
+    CpuOnly,
+    /// ST2: instances with GPUs.
+    GpuOnly,
+    /// ST3: select freely between CPU and GPU instances (Kaseb's method).
+    Both,
+}
+
+/// Location policies (Fig 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocationPolicy {
+    /// No geographic restriction (single-region experiments, Fig 3).
+    Unrestricted,
+    /// NL: each stream may only use its nearest region.
+    NearestOnly,
+    /// ARMVAC/GCL: regions within the RTT budget for the desired fps;
+    /// falls back to the nearest region (with degraded fps) if none qualify.
+    RttFiltered,
+}
+
+/// Packing algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Exact arc-flow + branch-and-bound (with FFD incumbent).
+    Exact,
+    /// ARMVAC's cheapest-instance-first greedy fill.
+    ArmvacGreedy,
+    /// First-fit-decreasing by cost-efficiency.
+    Ffd,
+}
+
+/// Full planner configuration.
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    pub hardware: HardwareFilter,
+    pub location: LocationPolicy,
+    pub solver: SolverKind,
+    /// Per-dimension utilization cap (paper: 0.90).
+    pub headroom: f64,
+    pub solve_opts: SolveOptions,
+}
+
+impl PlannerConfig {
+    fn preset(hardware: HardwareFilter, location: LocationPolicy, solver: SolverKind) -> Self {
+        PlannerConfig {
+            hardware,
+            location,
+            solver,
+            headroom: crate::packing::DEFAULT_HEADROOM,
+            solve_opts: SolveOptions::default(),
+        }
+    }
+
+    /// Fig 3 ST1: CPU-only instances.
+    pub fn st1() -> Self {
+        Self::preset(HardwareFilter::CpuOnly, LocationPolicy::Unrestricted, SolverKind::Exact)
+    }
+    /// Fig 3 ST2: GPU-only instances.
+    pub fn st2() -> Self {
+        Self::preset(HardwareFilter::GpuOnly, LocationPolicy::Unrestricted, SolverKind::Exact)
+    }
+    /// Fig 3 ST3: Kaseb's CPU+GPU multiple-choice method.
+    pub fn st3() -> Self {
+        Self::preset(HardwareFilter::Both, LocationPolicy::Unrestricted, SolverKind::Exact)
+    }
+    /// Fig 6 NL: nearest location only (same greedy fill rule as ARMVAC —
+    /// the baseline manager differs from ARMVAC only in location choice).
+    pub fn nl() -> Self {
+        Self::preset(HardwareFilter::Both, LocationPolicy::NearestOnly, SolverKind::ArmvacGreedy)
+    }
+    /// Fig 6 ARMVAC: RTT filter + cheapest-instance greedy fill.
+    pub fn armvac() -> Self {
+        Self::preset(HardwareFilter::Both, LocationPolicy::RttFiltered, SolverKind::ArmvacGreedy)
+    }
+    /// Fig 6 GCL: RTT filter + exact multiple-choice packing.
+    pub fn gcl() -> Self {
+        Self::preset(HardwareFilter::Both, LocationPolicy::RttFiltered, SolverKind::Exact)
+    }
+}
+
+/// One provisioned instance in a plan.
+#[derive(Clone, Debug)]
+pub struct PlannedInstance {
+    /// Index into `plan.problem.bins`.
+    pub bin_type: usize,
+    /// Catalog indices + label for display / provisioning.
+    pub type_idx: usize,
+    pub region_idx: usize,
+    pub label: String,
+    pub hourly_cost: f64,
+    pub has_gpu: bool,
+    /// Indices into the request slice handed to `plan()`.
+    pub streams: Vec<usize>,
+}
+
+/// The planner's output.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub problem: PackingProblem,
+    pub packing: Packing,
+    pub instances: Vec<PlannedInstance>,
+    pub cost_per_hour: f64,
+    pub non_gpu: usize,
+    pub gpu: usize,
+    /// Requests that could not meet their desired fps from any eligible
+    /// region (served from the nearest region at a capped rate).
+    pub degraded: Vec<usize>,
+    pub method: SolveMethod,
+    /// Region coordinates (from the catalog) for delivered-fps accounting.
+    pub region_locations: Vec<geo::GeoPoint>,
+}
+
+impl Plan {
+    /// The per-request delivered fps (equals desired unless degraded).
+    pub fn delivered_fps(&self, requests: &[StreamRequest]) -> Vec<f64> {
+        requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                if self.degraded.contains(&i) {
+                    let inst = self
+                        .instances
+                        .iter()
+                        .find(|inst| inst.streams.contains(&i))
+                        .expect("stream not assigned");
+                    let rtt = r
+                        .camera
+                        .location
+                        .rtt_ms(&self.region_locations[inst.region_idx]);
+                    geo::fps_cap(rtt).min(r.desired_fps)
+                } else {
+                    r.desired_fps
+                }
+            })
+            .collect()
+    }
+
+    /// Number of distinct regions used.
+    pub fn regions_used(&self) -> usize {
+        let mut rs: Vec<usize> = self.instances.iter().map(|i| i.region_idx).collect();
+        rs.sort_unstable();
+        rs.dedup();
+        rs.len()
+    }
+}
+
+/// The resource manager.
+#[derive(Clone)]
+pub struct Planner {
+    pub catalog: Catalog,
+    pub config: PlannerConfig,
+}
+
+impl Planner {
+    pub fn new(catalog: Catalog, config: PlannerConfig) -> Self {
+        Planner { catalog, config }
+    }
+
+    /// Compute the eligible-region bitmask for one request, plus the
+    /// degraded flag (no region inside the coverage circle).
+    fn eligibility(&self, req: &StreamRequest) -> (Vec<bool>, bool) {
+        let n = self.catalog.regions.len();
+        match self.config.location {
+            LocationPolicy::Unrestricted => (vec![true; n], false),
+            LocationPolicy::NearestOnly => {
+                // Nearest data center of each vendor (a camera operator can
+                // pick either provider's closest region).
+                let nearest = self.nearest_regions_per_vendor(req);
+                let mut mask = vec![false; n];
+                let mut any_ok = false;
+                for &r in &nearest {
+                    mask[r] = true;
+                    any_ok |= geo::reachable(
+                        &req.camera.location,
+                        &self.catalog.regions[r].location,
+                        req.desired_fps,
+                    );
+                }
+                (mask, !any_ok)
+            }
+            LocationPolicy::RttFiltered => {
+                let mut mask: Vec<bool> = self
+                    .catalog
+                    .regions
+                    .iter()
+                    .map(|r| geo::reachable(&req.camera.location, &r.location, req.desired_fps))
+                    .collect();
+                if mask.iter().any(|&m| m) {
+                    (mask, false)
+                } else {
+                    // Best effort: nearest regions, degraded fps.
+                    mask = vec![false; n];
+                    for r in self.nearest_regions_per_vendor(req) {
+                        mask[r] = true;
+                    }
+                    (mask, true)
+                }
+            }
+        }
+    }
+
+    /// Nearest region of each vendor present in the catalog.
+    fn nearest_regions_per_vendor(&self, req: &StreamRequest) -> Vec<usize> {
+        let mut best: std::collections::BTreeMap<&'static str, (usize, f64)> =
+            std::collections::BTreeMap::new();
+        for (i, r) in self.catalog.regions.iter().enumerate() {
+            let d = req.camera.location.distance_km(&r.location);
+            let key = match r.vendor {
+                crate::catalog::Vendor::Ec2 => "ec2",
+                crate::catalog::Vendor::Azure => "azure",
+            };
+            let e = best.entry(key).or_insert((i, d));
+            if d < e.1 {
+                *e = (i, d);
+            }
+        }
+        best.values().map(|&(i, _)| i).collect()
+    }
+
+    /// Build the packing problem. Returns (problem, group members, degraded).
+    pub fn build_problem(
+        &self,
+        requests: &[StreamRequest],
+    ) -> Result<(PackingProblem, Vec<Vec<usize>>, Vec<usize>)> {
+        if requests.is_empty() {
+            return Err(Error::config("no stream requests"));
+        }
+        // Bin types: offerings passing the hardware filter.
+        let bins: Vec<BinType> = self
+            .catalog
+            .offerings
+            .iter()
+            .filter(|o| {
+                let has_gpu = self.catalog.types[o.type_idx].has_gpu();
+                match self.config.hardware {
+                    HardwareFilter::CpuOnly => !has_gpu,
+                    HardwareFilter::GpuOnly => has_gpu,
+                    HardwareFilter::Both => true,
+                }
+            })
+            .map(|o| {
+                let ty = &self.catalog.types[o.type_idx];
+                let rg = &self.catalog.regions[o.region_idx];
+                BinType {
+                    label: format!("{}@{}", ty.name, rg.id),
+                    capacity: ty.capacity,
+                    cost: o.hourly_usd,
+                    type_idx: o.type_idx,
+                    region_idx: o.region_idx,
+                    has_gpu: ty.has_gpu(),
+                }
+            })
+            .collect();
+        if bins.is_empty() {
+            return Err(Error::infeasible("no instance offerings pass the hardware filter"));
+        }
+
+        // Group requests by (program, fps, resolution, eligibility mask).
+        struct Key {
+            program: crate::profiles::Program,
+            fps_milli: u64,
+            res: crate::profiles::Resolution,
+            mask: Vec<bool>,
+            degraded: bool,
+        }
+        let mut keys: Vec<Key> = Vec::new();
+        let mut members: Vec<Vec<usize>> = Vec::new();
+        let mut degraded_requests: Vec<usize> = Vec::new();
+        for (i, req) in requests.iter().enumerate() {
+            let (mask, degraded) = self.eligibility(req);
+            if degraded {
+                degraded_requests.push(i);
+            }
+            let fps_milli = (req.desired_fps * 1000.0).round() as u64;
+            let pos = keys.iter().position(|k| {
+                k.program == req.program
+                    && k.fps_milli == fps_milli
+                    && k.res == req.camera.resolution
+                    && k.mask == mask
+                    && k.degraded == degraded
+            });
+            match pos {
+                Some(g) => members[g].push(i),
+                None => {
+                    keys.push(Key {
+                        program: req.program,
+                        fps_milli,
+                        res: req.camera.resolution,
+                        mask,
+                        degraded,
+                    });
+                    members.push(vec![i]);
+                }
+            }
+        }
+
+        // Demand vectors per (group, bin type).
+        let items: Vec<ItemGroup> = keys
+            .iter()
+            .zip(&members)
+            .map(|(key, mem)| {
+                let profile = key.program.profile();
+                let rep = &requests[mem[0]];
+                let demand_per_bin = bins
+                    .iter()
+                    .map(|b| {
+                        if !key.mask[b.region_idx] {
+                            return None;
+                        }
+                        // Delivered fps: capped by the region's RTT when the
+                        // stream is degraded (best-effort nearest region).
+                        let fps = if key.degraded {
+                            let rtt = rep
+                                .camera
+                                .location
+                                .rtt_ms(&self.catalog.regions[b.region_idx].location);
+                            geo::fps_cap(rtt).min(rep.desired_fps)
+                        } else {
+                            rep.desired_fps
+                        };
+                        Some(if b.has_gpu {
+                            // Newer GPU generations (g3/p3-class) process the
+                            // same stream in proportionally less GPU time.
+                            let mut d = profile.demand_gpu(fps, key.res);
+                            d.gpus /= self.catalog.types[b.type_idx].gpu_speed;
+                            d
+                        } else {
+                            profile.demand_cpu(fps, key.res)
+                        })
+                    })
+                    .collect();
+                ItemGroup {
+                    label: format!("{}x{}", rep.label(), mem.len()),
+                    count: mem.len(),
+                    demand_per_bin,
+                }
+            })
+            .collect();
+
+        let mut problem = PackingProblem::new(items, bins);
+        problem.headroom = self.config.headroom;
+        Ok((problem, members, degraded_requests))
+    }
+
+    /// Produce a full plan for the request set.
+    ///
+    /// For the GCL configuration (RTT-filtered + exact), the NL and ARMVAC
+    /// solutions are also evaluated as candidate incumbents: both are
+    /// feasible points of GCL's search space (nearest-location assignments
+    /// respect the RTT circles), so GCL returns the cheapest of the three —
+    /// exactly the "globally cheapest" semantics of Mohan et al. \[8\], and it
+    /// keeps GCL ≤ ARMVAC ≤-ish NL even when the exact phase must fall back
+    /// to a heuristic on very large instances.
+    pub fn plan(&self, requests: &[StreamRequest]) -> Result<Plan> {
+        let mut best = self.plan_single(requests)?;
+        if self.config.location == LocationPolicy::RttFiltered
+            && self.config.solver == SolverKind::Exact
+        {
+            for (hw, loc, solver) in [
+                (self.config.hardware, LocationPolicy::RttFiltered, SolverKind::ArmvacGreedy),
+                (self.config.hardware, LocationPolicy::NearestOnly, SolverKind::Exact),
+            ] {
+                let alt = Planner::new(
+                    self.catalog.clone(),
+                    PlannerConfig {
+                        hardware: hw,
+                        location: loc,
+                        solver,
+                        headroom: self.config.headroom,
+                        solve_opts: self.config.solve_opts.clone(),
+                    },
+                );
+                if let Ok(p) = alt.plan_single(requests) {
+                    if p.cost_per_hour < best.cost_per_hour {
+                        best = p;
+                    }
+                }
+            }
+        }
+        Ok(best)
+    }
+
+    /// Plan with exactly this configuration (no candidate portfolio).
+    pub fn plan_single(&self, requests: &[StreamRequest]) -> Result<Plan> {
+        let (problem, members, degraded) = self.build_problem(requests)?;
+
+        let (packing, method) = match self.config.solver {
+            SolverKind::Exact => {
+                let (p, stats) = mcvbp::solve(&problem, &self.config.solve_opts)?;
+                (p, stats.method)
+            }
+            SolverKind::ArmvacGreedy => {
+                (heuristic::armvac_fill(&problem)?, SolveMethod::Heuristic)
+            }
+            SolverKind::Ffd => {
+                (heuristic::first_fit_decreasing(&problem)?, SolveMethod::Heuristic)
+            }
+        };
+        packing.validate(&problem)?;
+
+        // Expand group counts into per-instance stream lists.
+        let mut unassigned: Vec<std::collections::VecDeque<usize>> = members
+            .iter()
+            .map(|m| m.iter().copied().collect())
+            .collect();
+        let mut instances = Vec::with_capacity(packing.bins.len());
+        for bin in &packing.bins {
+            let bt = &problem.bins[bin.bin_type];
+            let mut streams = Vec::new();
+            for (g, &c) in bin.counts.iter().enumerate() {
+                for _ in 0..c {
+                    let idx = unassigned[g]
+                        .pop_front()
+                        .ok_or_else(|| Error::solver("packing/member mismatch"))?;
+                    streams.push(idx);
+                }
+            }
+            instances.push(PlannedInstance {
+                bin_type: bin.bin_type,
+                type_idx: bt.type_idx,
+                region_idx: bt.region_idx,
+                label: bt.label.clone(),
+                hourly_cost: bt.cost,
+                has_gpu: bt.has_gpu,
+                streams,
+            });
+        }
+        debug_assert!(unassigned.iter().all(|q| q.is_empty()));
+
+        let cost = packing.total_cost(&problem);
+        let (non_gpu, gpu) = packing.count_by_gpu(&problem);
+        Ok(Plan {
+            problem,
+            packing,
+            instances,
+            cost_per_hour: cost,
+            non_gpu,
+            gpu,
+            degraded,
+            method,
+            region_locations: self.catalog.regions.iter().map(|r| r.location).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cameras::scenarios;
+    use crate::util::round_dp;
+
+    /// The Fig-3 experiment pool: the paper's $0.419 CPU box + $0.650 GPU box.
+    fn fig3_catalog() -> Catalog {
+        Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]))
+    }
+
+    fn run(scn: &scenarios::Scenario, cfg: PlannerConfig) -> Result<Plan> {
+        Planner::new(fig3_catalog(), cfg).plan(&scn.requests)
+    }
+
+    #[test]
+    fn fig3_full_table_reproduces() {
+        // The paper's Fig-3 table, all nine (scenario, strategy) cells.
+        let scns = scenarios::fig3_scenarios();
+        let expected = scenarios::fig3_expected();
+        let configs = [PlannerConfig::st1(), PlannerConfig::st2(), PlannerConfig::st3()];
+        for (si, scn) in scns.iter().enumerate() {
+            for (ci, cfg) in configs.iter().enumerate() {
+                let got = run(scn, cfg.clone());
+                match expected[si][ci] {
+                    scenarios::ExpectedOutcome::Fail => {
+                        assert!(got.is_err(), "{} ST{} should fail", scn.name, ci + 1);
+                    }
+                    scenarios::ExpectedOutcome::Selected { non_gpu, gpu, hourly_cost } => {
+                        let plan = got.unwrap_or_else(|e| {
+                            panic!("{} ST{}: unexpected failure: {e}", scn.name, ci + 1)
+                        });
+                        assert_eq!(
+                            (plan.non_gpu, plan.gpu),
+                            (non_gpu, gpu),
+                            "{} ST{}: instance mix",
+                            scn.name,
+                            ci + 1
+                        );
+                        assert_eq!(
+                            round_dp(plan.cost_per_hour, 3),
+                            hourly_cost,
+                            "{} ST{}: hourly cost",
+                            scn.name,
+                            ci + 1
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig3_savings_match_paper() {
+        // Savings of each scenario's best strategy vs its worst:
+        // S1 61%, S2 36%, S3 3% (paper's savings column).
+        let scns = scenarios::fig3_scenarios();
+        let mut savings = Vec::new();
+        for scn in &scns {
+            let costs: Vec<f64> = [PlannerConfig::st1(), PlannerConfig::st2(), PlannerConfig::st3()]
+                .into_iter()
+                .filter_map(|cfg| run(scn, cfg).ok().map(|p| p.cost_per_hour))
+                .collect();
+            let max = costs.iter().cloned().fold(0.0, f64::max);
+            let min = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+            savings.push(((1.0 - min / max) * 100.0).round() as i64);
+        }
+        assert_eq!(savings, vec![61, 36, 3]);
+    }
+
+    #[test]
+    fn plan_assigns_every_stream_exactly_once() {
+        let scn = scenarios::fig3_scenario3();
+        let plan = run(&scn, PlannerConfig::st3()).unwrap();
+        let mut seen = vec![0usize; scn.requests.len()];
+        for inst in &plan.instances {
+            for &s in &inst.streams {
+                seen[s] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "assignments: {seen:?}");
+    }
+
+    #[test]
+    fn st1_never_uses_gpu_and_st2_never_cpu() {
+        let scn = scenarios::fig3_scenario1();
+        let p1 = run(&scn, PlannerConfig::st1()).unwrap();
+        assert_eq!(p1.gpu, 0);
+        let p2 = run(&scn, PlannerConfig::st2()).unwrap();
+        assert_eq!(p2.non_gpu, 0);
+    }
+
+    #[test]
+    fn empty_request_set_rejected() {
+        let planner = Planner::new(fig3_catalog(), PlannerConfig::st3());
+        assert!(planner.plan(&[]).is_err());
+    }
+
+    #[test]
+    fn unrestricted_location_has_no_degraded_streams() {
+        let scn = scenarios::fig3_scenario1();
+        let plan = run(&scn, PlannerConfig::st3()).unwrap();
+        assert!(plan.degraded.is_empty());
+        assert_eq!(plan.delivered_fps(&scn.requests), vec![0.25, 0.55, 0.55, 0.55]);
+    }
+
+    #[test]
+    fn location_policies_order_costs() {
+        // GCL <= ARMVAC and GCL <= NL on a worldwide workload.
+        let requests = scenarios::fig6_workload(24, 4.0, 5);
+        let catalog = Catalog::builtin();
+        let nl = Planner::new(catalog.clone(), PlannerConfig::nl()).plan(&requests).unwrap();
+        let armvac = Planner::new(catalog.clone(), PlannerConfig::armvac()).plan(&requests).unwrap();
+        let gcl = Planner::new(catalog, PlannerConfig::gcl()).plan(&requests).unwrap();
+        assert!(gcl.cost_per_hour <= armvac.cost_per_hour + 1e-9);
+        assert!(gcl.cost_per_hour <= nl.cost_per_hour + 1e-9);
+    }
+
+    #[test]
+    fn rtt_filter_restricts_regions() {
+        // A single Tokyo camera at 20 fps: eligible regions are near Japan.
+        let requests = vec![crate::cameras::StreamRequest::new(
+            crate::cameras::camera_at(
+                0,
+                "Tokyo",
+                crate::geo::cities::TOKYO,
+                crate::profiles::Resolution::VGA,
+                30.0,
+            ),
+            crate::profiles::Program::Zf,
+            20.0,
+        )];
+        let plan = Planner::new(Catalog::builtin(), PlannerConfig::gcl())
+            .plan(&requests)
+            .unwrap();
+        assert_eq!(plan.instances.len(), 1);
+        let region = plan.instances[0].region_idx;
+        let loc = plan.region_locations[region];
+        assert!(
+            crate::geo::cities::TOKYO.distance_km(&loc) < crate::geo::coverage_radius_km(20.0)
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for all camflow subsystems.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Bin-packing / planning found no feasible assignment (the paper's
+    /// "Fail" rows in Fig 3: e.g. CPU-only strategy at 8 fps ZF).
+    #[error("infeasible: {0}")]
+    Infeasible(String),
+
+    /// Malformed configuration, scenario, or manifest.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// JSON parse/serialize failure.
+    #[error("json error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    /// LP/MILP solver failure (unbounded, iteration limit, numerical).
+    #[error("solver error: {0}")]
+    Solver(String),
+
+    /// PJRT runtime failure (artifact load, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Serving-layer failure (channel closed, worker died).
+    #[error("serving error: {0}")]
+    Serving(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Convenience constructor used across modules.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn infeasible(msg: impl Into<String>) -> Self {
+        Error::Infeasible(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+    pub fn solver(msg: impl Into<String>) -> Self {
+        Error::Solver(msg.into())
+    }
+    pub fn serving(msg: impl Into<String>) -> Self {
+        Error::Serving(msg.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

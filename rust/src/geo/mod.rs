@@ -1,0 +1,212 @@
+//! Geography + network model: distances, RTT, and the frame-rate/RTT coupling.
+//!
+//! The paper (following Chen et al. \[5\]) observes that the achievable frame
+//! rate of a camera→instance stream drops as the network round-trip time
+//! grows: frames are fetched request/response, so the fetch loop completes at
+//! most ~1/RTT iterations per second (plus protocol overhead). We model:
+//!
+//! * distance: haversine great-circle km,
+//! * RTT: `RTT_ms = BASE + distance_km * MS_PER_100KM / 100` — a straight-line
+//!   fiber model with a routing-inflation factor, calibrated so NY↔London
+//!   (~5 570 km) lands near the observed ~75 ms,
+//! * frame-rate cap: `fps_max(RTT) = FPS_K / RTT_ms` (Chen et al.'s inverse
+//!   relationship), hence a *desired* fps implies a *maximum acceptable RTT*
+//!   `rtt_budget(fps) = FPS_K / fps` and therefore a coverage circle around
+//!   each camera (Fig 4).
+
+/// Fixed per-hop/protocol RTT overhead (ms).
+pub const RTT_BASE_MS: f64 = 2.0;
+/// RTT milliseconds added per 100 km of great-circle distance. Speed of light
+/// in fiber is ~100 km/ms one-way (0.5 ms RTT per 100 km); 1.3 ms per 100 km
+/// RTT accounts for routing inflation (~1.3x straight-line).
+pub const RTT_MS_PER_100KM: f64 = 1.3;
+/// Frame-rate constant: fps_max * RTT_ms ≈ FPS_K (Chen et al. \[5\] shape;
+/// the runtime pipelines a handful of parallel fetches per stream, so the
+/// achievable rate is several frames per round trip).
+pub const FPS_K: f64 = 1200.0;
+
+/// Mean Earth radius (km).
+const EARTH_RADIUS_KM: f64 = 6371.0;
+
+/// A point on the globe (degrees).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GeoPoint {
+    pub lat: f64,
+    pub lon: f64,
+}
+
+impl GeoPoint {
+    pub const fn new(lat: f64, lon: f64) -> Self {
+        GeoPoint { lat, lon }
+    }
+
+    /// Great-circle distance in km (haversine).
+    pub fn distance_km(&self, other: &GeoPoint) -> f64 {
+        let (la1, lo1) = (self.lat.to_radians(), self.lon.to_radians());
+        let (la2, lo2) = (other.lat.to_radians(), other.lon.to_radians());
+        let dlat = la2 - la1;
+        let dlon = lo2 - lo1;
+        let a = (dlat / 2.0).sin().powi(2) + la1.cos() * la2.cos() * (dlon / 2.0).sin().powi(2);
+        2.0 * EARTH_RADIUS_KM * a.sqrt().asin()
+    }
+
+    /// Modeled round-trip time to another point (ms).
+    pub fn rtt_ms(&self, other: &GeoPoint) -> f64 {
+        rtt_for_distance_km(self.distance_km(other))
+    }
+}
+
+/// RTT (ms) for a given great-circle distance.
+pub fn rtt_for_distance_km(d_km: f64) -> f64 {
+    RTT_BASE_MS + d_km * RTT_MS_PER_100KM / 100.0
+}
+
+/// Maximum achievable frame rate over a link with the given RTT.
+pub fn fps_cap(rtt_ms: f64) -> f64 {
+    FPS_K / rtt_ms.max(RTT_BASE_MS)
+}
+
+/// Maximum acceptable RTT (ms) for a desired frame rate — the Fig-4 circle.
+pub fn rtt_budget_ms(fps: f64) -> f64 {
+    assert!(fps > 0.0, "fps must be positive");
+    FPS_K / fps
+}
+
+/// Radius (km) of the Fig-4 coverage circle for a desired frame rate:
+/// the farthest an instance may be while still sustaining `fps`.
+pub fn coverage_radius_km(fps: f64) -> f64 {
+    let budget = rtt_budget_ms(fps);
+    if budget <= RTT_BASE_MS {
+        return 0.0;
+    }
+    (budget - RTT_BASE_MS) * 100.0 / RTT_MS_PER_100KM
+}
+
+/// True iff an instance at `site` can serve a camera at `cam` at `fps`.
+pub fn reachable(cam: &GeoPoint, site: &GeoPoint, fps: f64) -> bool {
+    cam.rtt_ms(site) <= rtt_budget_ms(fps) + 1e-9
+}
+
+/// Well-known city coordinates used by scenarios, tests, and benches.
+pub mod cities {
+    use super::GeoPoint;
+
+    pub const NEW_YORK: GeoPoint = GeoPoint::new(40.71, -74.01);
+    pub const LOS_ANGELES: GeoPoint = GeoPoint::new(34.05, -118.24);
+    pub const CHICAGO: GeoPoint = GeoPoint::new(41.88, -87.63);
+    pub const HOUSTON: GeoPoint = GeoPoint::new(29.76, -95.37);
+    pub const WEST_LAFAYETTE: GeoPoint = GeoPoint::new(40.43, -86.91);
+    pub const SAO_PAULO: GeoPoint = GeoPoint::new(-23.55, -46.63);
+    pub const LONDON: GeoPoint = GeoPoint::new(51.51, -0.13);
+    pub const PARIS: GeoPoint = GeoPoint::new(48.86, 2.35);
+    pub const BERLIN: GeoPoint = GeoPoint::new(52.52, 13.41);
+    pub const MADRID: GeoPoint = GeoPoint::new(40.42, -3.70);
+    pub const ROME: GeoPoint = GeoPoint::new(41.90, 12.50);
+    pub const MOSCOW: GeoPoint = GeoPoint::new(55.76, 37.62);
+    pub const CAIRO: GeoPoint = GeoPoint::new(30.04, 31.24);
+    pub const MUMBAI: GeoPoint = GeoPoint::new(19.08, 72.88);
+    pub const SINGAPORE: GeoPoint = GeoPoint::new(1.35, 103.82);
+    pub const HONG_KONG: GeoPoint = GeoPoint::new(22.32, 114.17);
+    pub const TOKYO: GeoPoint = GeoPoint::new(35.68, 139.69);
+    pub const SEOUL: GeoPoint = GeoPoint::new(37.57, 126.98);
+    pub const SYDNEY: GeoPoint = GeoPoint::new(-33.87, 151.21);
+    pub const MEXICO_CITY: GeoPoint = GeoPoint::new(19.43, -99.13);
+
+    pub const ALL: &[(&str, GeoPoint)] = &[
+        ("New York", NEW_YORK),
+        ("Los Angeles", LOS_ANGELES),
+        ("Chicago", CHICAGO),
+        ("Houston", HOUSTON),
+        ("West Lafayette", WEST_LAFAYETTE),
+        ("Sao Paulo", SAO_PAULO),
+        ("London", LONDON),
+        ("Paris", PARIS),
+        ("Berlin", BERLIN),
+        ("Madrid", MADRID),
+        ("Rome", ROME),
+        ("Moscow", MOSCOW),
+        ("Cairo", CAIRO),
+        ("Mumbai", MUMBAI),
+        ("Singapore", SINGAPORE),
+        ("Hong Kong", HONG_KONG),
+        ("Tokyo", TOKYO),
+        ("Seoul", SEOUL),
+        ("Sydney", SYDNEY),
+        ("Mexico City", MEXICO_CITY),
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::cities::*;
+    use super::*;
+
+    #[test]
+    fn haversine_known_distances() {
+        // NY <-> London ~5 570 km; NY <-> LA ~3 940 km; London <-> Paris ~344 km.
+        let d = NEW_YORK.distance_km(&LONDON);
+        assert!((d - 5570.0).abs() < 60.0, "NY-London {d}");
+        let d = NEW_YORK.distance_km(&LOS_ANGELES);
+        assert!((d - 3940.0).abs() < 60.0, "NY-LA {d}");
+        let d = LONDON.distance_km(&PARIS);
+        assert!((d - 344.0).abs() < 15.0, "London-Paris {d}");
+    }
+
+    #[test]
+    fn distance_symmetric_and_zero_on_self() {
+        let d1 = TOKYO.distance_km(&SYDNEY);
+        let d2 = SYDNEY.distance_km(&TOKYO);
+        assert!((d1 - d2).abs() < 1e-9);
+        assert!(TOKYO.distance_km(&TOKYO) < 1e-9);
+    }
+
+    #[test]
+    fn rtt_ny_london_realistic() {
+        let rtt = NEW_YORK.rtt_ms(&LONDON);
+        assert!((60.0..100.0).contains(&rtt), "rtt={rtt}");
+    }
+
+    #[test]
+    fn fps_cap_decreases_with_rtt() {
+        assert!(fps_cap(10.0) > fps_cap(50.0));
+        assert!(fps_cap(50.0) > fps_cap(200.0));
+    }
+
+    #[test]
+    fn rtt_budget_inverse_of_fps_cap() {
+        for fps in [0.5, 1.0, 5.0, 20.0] {
+            let budget = rtt_budget_ms(fps);
+            assert!((fps_cap(budget) - fps).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn coverage_circle_shrinks_with_fps() {
+        // Fig 4: higher desired fps -> smaller circle.
+        let r_high = coverage_radius_km(20.0);
+        let r_low = coverage_radius_km(3.0);
+        assert!(r_high < r_low);
+        assert!(r_high > 0.0);
+    }
+
+    #[test]
+    fn reachable_respects_circle() {
+        // At 20 fps budget is 20 ms -> radius ~1 385 km: NY cannot reach London.
+        assert!(!reachable(&NEW_YORK, &LONDON, 20.0));
+        // At 1 fps budget is 400 ms -> everywhere on Earth reachable.
+        assert!(reachable(&NEW_YORK, &SYDNEY, 1.0));
+        // Nearby always reachable at moderate rates.
+        assert!(reachable(&LONDON, &PARIS, 20.0));
+    }
+
+    #[test]
+    fn fig4_circle_radii_bracket_the_regimes() {
+        // At 30 fps the circle is continental-scale (~3 000 km): London
+        // cannot reach an instance in Virginia. At 2 fps the circle spans
+        // most of the planet.
+        let r_high = coverage_radius_km(30.0);
+        assert!(r_high < LONDON.distance_km(&NEW_YORK));
+        let r_low = coverage_radius_km(2.0);
+        assert!(r_low > TOKYO.distance_km(&NEW_YORK));
+    }
+}

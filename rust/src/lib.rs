@@ -1,0 +1,41 @@
+//! # camflow
+//!
+//! Reproduction of *"Cloud Resource Optimization for Processing Multiple
+//! Streams of Visual Data"* (Kapach et al., IEEE MultiMedia 2019).
+//!
+//! camflow is a three-layer system:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a cloud **resource
+//!   manager** that selects the cheapest set of cloud instances (type ×
+//!   location) able to analyze many network-camera streams, formulated as
+//!   multi-dimensional multiple-choice vector bin packing (arc-flow + MILP),
+//!   with location-aware strategies (NL / ARMVAC / GCL) and adaptive runtime
+//!   re-packing. It also owns the serving runtime: stream router, dynamic
+//!   batcher, simulated cloud, metrics, CLI.
+//! * **L2 (python/compile/model.py, build-time)** — the analysis programs
+//!   (compact VGG16 / ZF detectors) written in JAX and AOT-lowered to HLO
+//!   text.
+//! * **L1 (python/compile/kernels/, build-time)** — the Pallas tiled matmul
+//!   kernel backing every conv/dense layer of the analysis programs.
+//!
+//! The request path is pure Rust: artifacts produced by `make artifacts` are
+//! loaded via the PJRT C API (`xla` crate) and executed in-process.
+
+pub mod bench;
+pub mod cameras;
+pub mod catalog;
+pub mod cli;
+pub mod cloudsim;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod geo;
+pub mod metrics;
+pub mod packing;
+pub mod profiles;
+pub mod runtime;
+pub mod server;
+pub mod solver;
+pub mod util;
+
+pub use error::{Error, Result};

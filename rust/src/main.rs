@@ -1,0 +1,282 @@
+//! camflow — CLI for the cloud resource manager.
+//!
+//! Subcommands:
+//!   catalog            Print the instance catalog (Table I + extensions).
+//!   plan               Plan a scenario/workload with a strategy.
+//!   sweep              Cost-vs-fps sweep across NL/ARMVAC/GCL (Fig 6 data).
+//!   serve              Plan then serve the workload end-to-end via PJRT.
+//!   simulate           24h adaptive-manager simulation on the cloud sim.
+//!
+//! Run `camflow <cmd> --help` for per-command options.
+
+use camflow::bench::Table;
+use camflow::cameras::scenarios;
+use camflow::catalog::Catalog;
+use camflow::cli::Args;
+use camflow::config::{RunConfig, StrategyName};
+use camflow::coordinator::{adaptive::AdaptiveManager, Planner};
+use camflow::error::Result;
+use camflow::util::fmt_usd;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("catalog") => cmd_catalog(args),
+        Some("plan") => cmd_plan(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("serve") => cmd_serve(args),
+        Some("simulate") => cmd_simulate(args),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+camflow — cloud resource optimization for multi-stream visual analytics
+  (reproduction of Kapach et al., IEEE MultiMedia 2019)
+
+USAGE: camflow <command> [options]
+
+COMMANDS:
+  catalog                         print the instance catalog (Table I)
+  plan     [--scenario N] [--strategy st1|st2|st3|nl|armvac|gcl]
+           [--cameras N --fps F --seed S]   plan a workload, print the plan
+  sweep    [--cameras N] [--seed S]         Fig-6 cost sweep NL/ARMVAC/GCL
+  serve    [--scenario N] [--strategy S] [--duration SEC] [--scale X]
+           [--artifacts DIR]                plan + serve end-to-end via PJRT
+  simulate [--hours H] [--cameras N]        adaptive manager on the cloud sim
+";
+
+fn cmd_catalog(_args: &Args) -> Result<()> {
+    let c = Catalog::builtin();
+    let mut t = Table::new(&["Vendor", "Instance", "Cores", "Memory (GiB)", "GPU", "Region", "Price/h (US$)"]);
+    for o in &c.offerings {
+        let ty = &c.types[o.type_idx];
+        let rg = &c.regions[o.region_idx];
+        t.row(&[
+            ty.vendor.to_string(),
+            ty.name.to_string(),
+            format!("{}", ty.capacity.vcpus as u64),
+            format!("{}", ty.capacity.mem_gib),
+            format!("{}", ty.capacity.gpus as u64),
+            format!("{} ({})", rg.id, rg.city),
+            format!("{:.3}", o.hourly_usd),
+        ]);
+    }
+    t.print();
+    println!("\n{} types x {} regions, {} offerings", c.types.len(), c.regions.len(), c.offerings.len());
+    Ok(())
+}
+
+fn load_run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(s) = args.opt("strategy") {
+        cfg.strategy = s.parse()?;
+    }
+    cfg.scenario = args.opt_parse("scenario", cfg.scenario)?;
+    cfg.num_cameras = args.opt_parse("cameras", cfg.num_cameras)?;
+    cfg.target_fps = args.opt_parse("fps", cfg.target_fps)?;
+    cfg.seed = args.opt_parse("seed", cfg.seed)?;
+    cfg.duration_s = args.opt_parse("duration", cfg.duration_s)?;
+    cfg.time_scale = args.opt_parse("scale", cfg.time_scale)?;
+    if let Some(d) = args.opt("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    // Location strategies need the full worldwide catalog.
+    if matches!(cfg.strategy, StrategyName::Nl | StrategyName::Armvac | StrategyName::Gcl)
+        || cfg.scenario == 0
+    {
+        cfg.fig3_pool = false;
+    }
+    Ok(cfg)
+}
+
+fn print_plan(plan: &camflow::coordinator::Plan, requests: &[camflow::cameras::StreamRequest]) {
+    let mut t = Table::new(&["Instance", "Region", "Price/h", "Streams", "Assigned"]);
+    for inst in &plan.instances {
+        let names: Vec<String> = inst
+            .streams
+            .iter()
+            .map(|&s| requests[s].label())
+            .collect();
+        t.row(&[
+            inst.label.clone(),
+            format!("{}", inst.region_idx),
+            fmt_usd(inst.hourly_cost),
+            format!("{}", inst.streams.len()),
+            names.join(", "),
+        ]);
+    }
+    t.print();
+    println!(
+        "\ntotal: {} instances ({} CPU-only, {} GPU), {}/hour, method={:?}, degraded={}",
+        plan.instances.len(),
+        plan.non_gpu,
+        plan.gpu,
+        fmt_usd(plan.cost_per_hour),
+        plan.method,
+        plan.degraded.len()
+    );
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let cfg = load_run_config(args)?;
+    let requests = cfg.requests()?;
+    let planner = Planner::new(cfg.catalog(), cfg.strategy.to_planner_config());
+    let plan = planner.plan(&requests)?;
+    println!(
+        "workload: {} streams, strategy {}",
+        requests.len(),
+        cfg.strategy.as_str()
+    );
+    print_plan(&plan, &requests);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let n = args.opt_parse("cameras", 30usize)?;
+    let seed = args.opt_parse("seed", 1u64)?;
+    let catalog = Catalog::builtin();
+    let mut t = Table::new(&["fps", "NL $/h", "ARMVAC $/h", "GCL $/h", "GCL vs NL", "GCL vs ARMVAC"]);
+    for fps in [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 12.0, 16.0, 20.0, 25.0, 30.0] {
+        let requests = scenarios::fig6_workload(n, fps, seed);
+        let cost = |s: StrategyName| -> Result<f64> {
+            Planner::new(catalog.clone(), s.to_planner_config())
+                .plan(&requests)
+                .map(|p| p.cost_per_hour)
+        };
+        let nl = cost(StrategyName::Nl)?;
+        let armvac = cost(StrategyName::Armvac)?;
+        let gcl = cost(StrategyName::Gcl)?;
+        t.row(&[
+            format!("{fps}"),
+            format!("{nl:.3}"),
+            format!("{armvac:.3}"),
+            format!("{gcl:.3}"),
+            format!("{:.0}%", (1.0 - gcl / nl) * 100.0),
+            format!("{:.0}%", (1.0 - gcl / armvac) * 100.0),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_run_config(args)?;
+    let requests = cfg.requests()?;
+    let planner = Planner::new(cfg.catalog(), cfg.strategy.to_planner_config());
+    let plan = planner.plan(&requests)?;
+    print_plan(&plan, &requests);
+
+    let serve_cfg = camflow::server::ServeConfig {
+        artifacts_dir: cfg.artifacts_dir.clone().into(),
+        duration_s: cfg.duration_s,
+        time_scale: cfg.time_scale,
+        batch_window_ms: cfg.batch_window_ms,
+        queue_capacity: 256,
+        seed: cfg.seed,
+    };
+    let fps = plan.delivered_fps(&requests);
+    println!(
+        "\nserving {} virtual seconds at {}x time compression...",
+        cfg.duration_s, cfg.time_scale
+    );
+    let report = camflow::server::serve(&plan, &requests, &fps, &serve_cfg)?;
+    let mut t = Table::new(&["Instance", "Streams", "Frames", "Dropped", "Batches", "Mean batch", "Infer ms", "p50 ms", "p99 ms"]);
+    for i in &report.instances {
+        t.row(&[
+            i.label.clone(),
+            format!("{}", i.streams),
+            format!("{}", i.frames_analyzed),
+            format!("{}", i.frames_dropped),
+            format!("{}", i.batches),
+            format!("{:.2}", i.mean_batch),
+            format!("{:.2}", i.infer_mean_ms),
+            format!("{:.2}", i.e2e_p50_ms),
+            format!("{:.2}", i.e2e_p99_ms),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nanalyzed {} frames ({:.2} virtual fps), dropped {} ({:.1}%), detections {}, plan cost {}/h, wall {:.1}s",
+        report.total_frames_analyzed,
+        report.virtual_throughput_fps,
+        report.total_frames_dropped,
+        report.drop_rate() * 100.0,
+        report.detections,
+        fmt_usd(report.plan_cost_per_hour),
+        report.real_duration_s,
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    use camflow::cloudsim::CloudSim;
+    let hours = args.opt_parse("hours", 24usize)?;
+    let n = args.opt_parse("cameras", 12usize)?;
+    let seed = args.opt_parse("seed", 3u64)?;
+
+    let catalog = Catalog::builtin();
+    let planner = Planner::new(catalog.clone(), StrategyName::Gcl.to_planner_config());
+    let mut mgr = AdaptiveManager::new(planner);
+    let mut sim = CloudSim::new(catalog);
+
+    let db = camflow::cameras::CameraDb::synthetic(n, seed);
+    let mut t = Table::new(&["hour", "fps", "instances", "$/h", "provisioned", "terminated", "moved"]);
+    let mut static_cost = 0.0f64;
+    let mut peak_rate = 0.0f64;
+    for h in 0..hours {
+        // Rush hours (7-9, 16-18 local) need 8 fps tracking; nights 0.2 fps.
+        let fps = match h % 24 {
+            7..=9 | 16..=18 => 8.0,
+            22 | 23 | 0..=5 => 0.2,
+            _ => 1.0,
+        };
+        let requests = db.workload(camflow::profiles::Program::Zf, fps);
+        let report = mgr.replan(requests)?;
+        let plan = mgr.current_plan().unwrap();
+        sim.apply_plan(plan)?;
+        sim.advance(3600.0);
+        peak_rate = peak_rate.max(plan.cost_per_hour);
+        t.row(&[
+            format!("{h}"),
+            format!("{fps}"),
+            format!("{}", plan.instances.len()),
+            format!("{:.3}", plan.cost_per_hour),
+            format!("{}", report.provision.iter().map(|(_, n)| n).sum::<usize>()),
+            format!("{}", report.terminate.iter().map(|(_, n)| n).sum::<usize>()),
+            format!("{}", report.streams_moved),
+        ]);
+        static_cost += peak_rate; // static provisioning pays peak all day
+    }
+    t.print();
+    println!(
+        "\nadaptive total: {}  |  static-peak provisioning: {}  |  saving {:.0}%",
+        fmt_usd(sim.accrued_usd()),
+        fmt_usd(static_cost),
+        (1.0 - sim.accrued_usd() / static_cost) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,263 @@
+//! Serving metrics: counters, gauges, and latency histograms.
+//!
+//! Thread-safe (the serving layer is multi-threaded); histograms use
+//! logarithmic buckets (HDR-style) so p99 of microsecond-to-second latencies
+//! stays accurate without unbounded memory.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic counter.
+#[derive(Default, Debug)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous gauge (bit-cast f64).
+#[derive(Default, Debug)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Log-bucketed latency histogram: buckets at `MIN_US * GROWTH^i`.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Bucket upper bounds in microseconds.
+    bounds_us: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 1us .. ~137s with 10% growth: 64 buckets cover it comfortably.
+        let mut bounds = Vec::new();
+        let mut b = 1.0f64;
+        while b < 2.0e8 {
+            bounds.push(b);
+            b *= 1.35;
+        }
+        let n = bounds.len();
+        Histogram {
+            bounds_us: bounds,
+            counts: (0..=n).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_us(&self, us: f64) {
+        let idx = self
+            .bounds_us
+            .partition_point(|&b| b < us)
+            .min(self.counts.len() - 1);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us.max(0.0) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.max_us.fetch_max(us.max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return f64::NAN;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64
+    }
+
+    /// Approximate percentile (bucket upper bound), q in [0, 100].
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = ((q / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return if i < self.bounds_us.len() {
+                    self.bounds_us[i]
+                } else {
+                    self.max_us()
+                };
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// A named set of serving metrics.
+#[derive(Default)]
+pub struct ServingMetrics {
+    pub frames_in: Counter,
+    pub frames_analyzed: Counter,
+    pub frames_dropped: Counter,
+    pub batches: Counter,
+    pub detections: Counter,
+    pub queue_depth: Gauge,
+    pub batch_latency: Histogram,
+    pub e2e_latency: Histogram,
+    pub infer_latency: Histogram,
+    pub batch_sizes: Mutex<Vec<usize>>,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch_size(&self, n: usize) {
+        self.batches.inc();
+        self.batch_sizes.lock().unwrap().push(n);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let v = self.batch_sizes.lock().unwrap();
+        if v.is_empty() {
+            return f64::NAN;
+        }
+        v.iter().sum::<usize>() as f64 / v.len() as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "frames_in={} analyzed={} dropped={} batches={} mean_batch={:.2} \
+             e2e_p50={:.1}ms e2e_p99={:.1}ms infer_mean={:.1}ms",
+            self.frames_in.get(),
+            self.frames_analyzed.get(),
+            self.frames_dropped.get(),
+            self.batches.get(),
+            self.mean_batch_size(),
+            self.e2e_latency.percentile_us(50.0) / 1e3,
+            self.e2e_latency.percentile_us(99.0) / 1e3,
+            self.infer_latency.mean_us() / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64 * 100.0); // 100us .. 100ms
+        }
+        let p50 = h.percentile_us(50.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p99);
+        // Log buckets: within 35% of the true value.
+        assert!((p50 / 50_000.0) < 1.4 && (p50 / 50_000.0) > 0.7, "p50={p50}");
+        assert!((p99 / 99_000.0) < 1.4 && (p99 / 99_000.0) > 0.7, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_mean_and_max() {
+        let h = Histogram::new();
+        h.record_us(100.0);
+        h.record_us(300.0);
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_us() - 200.0).abs() < 1.0);
+        assert_eq!(h.max_us(), 300.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_nan() {
+        let h = Histogram::new();
+        assert!(h.percentile_us(50.0).is_nan());
+        assert!(h.mean_us().is_nan());
+    }
+
+    #[test]
+    fn histogram_thread_safety() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    h.record_us((t * 1000 + i) as f64);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn serving_metrics_summary_renders() {
+        let m = ServingMetrics::new();
+        m.frames_in.add(10);
+        m.frames_analyzed.add(9);
+        m.record_batch_size(3);
+        m.e2e_latency.record_us(1500.0);
+        let s = m.summary();
+        assert!(s.contains("frames_in=10"));
+        assert!(s.contains("mean_batch=3.00"));
+    }
+}

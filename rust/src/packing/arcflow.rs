@@ -1,0 +1,373 @@
+//! Arc-flow graph for vector bin packing (Brandão & Pedroso \[9\], \[10\]).
+//!
+//! As in the paper's sidebar: for one bin ("truck") type, nodes represent
+//! partial fill states; placing a box of item type `g` is an arc; any path
+//! source→sink is a feasible single-bin packing. Item types are added in a
+//! fixed order, each up to its demand — "First, box A is added as many times
+//! as the demand requires without over-filling the truck. Then, box B ...".
+//!
+//! After construction the graph is **compressed**: nodes with identical
+//! outgoing behaviour are merged (partition refinement / bisimulation), the
+//! multi-dimensional analogue of Brandão–Pedroso level merging. The
+//! compressed graph has the same set of source→sink item-label paths but far
+//! fewer nodes/arcs — "this in turn will result in time saved when solving
+//! the graph".
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// A quantized item type: integer sizes per dimension + demanded count.
+#[derive(Clone, Debug)]
+pub struct QuantItem {
+    pub sizes: Vec<i64>,
+    pub count: usize,
+}
+
+/// An arc. `item == None` marks the "finish" arc to the sink (loss arc).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Arc {
+    pub from: usize,
+    pub to: usize,
+    pub item: Option<usize>,
+}
+
+/// The arc-flow graph of one bin type.
+#[derive(Clone, Debug)]
+pub struct ArcFlow {
+    pub num_nodes: usize,
+    pub source: usize,
+    pub sink: usize,
+    pub arcs: Vec<Arc>,
+}
+
+/// Compression statistics (reported by `bench_packing --sidebar`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompressionStats {
+    pub nodes_before: usize,
+    pub arcs_before: usize,
+    pub nodes_after: usize,
+    pub arcs_after: usize,
+}
+
+impl CompressionStats {
+    pub fn node_ratio(&self) -> f64 {
+        self.nodes_after as f64 / self.nodes_before.max(1) as f64
+    }
+    pub fn arc_ratio(&self) -> f64 {
+        self.arcs_after as f64 / self.arcs_before.max(1) as f64
+    }
+}
+
+/// Build the arc-flow graph for a bin with integer capacity `cap` over
+/// `items` (in the given order). Fails if the state space exceeds
+/// `max_nodes` (callers fall back to the heuristic packer).
+pub fn build(cap: &[i64], items: &[QuantItem], max_nodes: usize) -> Result<ArcFlow> {
+    let dims = cap.len();
+    for it in items {
+        if it.sizes.len() != dims {
+            return Err(Error::config("item dimensionality mismatch"));
+        }
+    }
+
+    // State: (usage vector, last item group, count of that group used).
+    type State = (Vec<i64>, usize, usize);
+    let mut index: HashMap<State, usize> = HashMap::new();
+    let mut states: Vec<State> = Vec::new();
+    let mut arcs: Vec<Arc> = Vec::new();
+
+    let source_state: State = (vec![0; dims], usize::MAX, 0);
+    index.insert(source_state.clone(), 0);
+    states.push(source_state);
+
+    let fits = |usage: &[i64], sizes: &[i64]| -> bool {
+        usage.iter().zip(sizes).zip(cap).all(|((u, s), c)| u + s <= *c)
+    };
+
+    let mut frontier = vec![0usize];
+    while let Some(u) = frontier.pop() {
+        let (usage, g, k) = states[u].clone();
+        // Next placements: more of group g (if any left), or the first
+        // placement of any later group.
+        let start_group = if g == usize::MAX { 0 } else { g };
+        for (g2, item) in items.iter().enumerate().skip(start_group) {
+            if item.count == 0 {
+                continue;
+            }
+            let k2 = if g2 == g { k + 1 } else { 1 };
+            if k2 > item.count || !fits(&usage, &item.sizes) {
+                continue;
+            }
+            let mut usage2 = usage.clone();
+            let mut ok = true;
+            for (u2, s) in usage2.iter_mut().zip(&item.sizes) {
+                *u2 += s;
+            }
+            for (u2, c) in usage2.iter().zip(cap) {
+                if u2 > c {
+                    ok = false;
+                    break;
+                }
+            }
+            if !ok {
+                continue;
+            }
+            let st: State = (usage2, g2, k2);
+            let v = match index.get(&st) {
+                Some(&v) => v,
+                None => {
+                    let v = states.len();
+                    if v >= max_nodes {
+                        return Err(Error::solver(format!(
+                            "arc-flow state space exceeds {max_nodes} nodes"
+                        )));
+                    }
+                    index.insert(st.clone(), v);
+                    states.push(st);
+                    frontier.push(v);
+                    v
+                }
+            };
+            arcs.push(Arc { from: u, to: v, item: Some(g2) });
+        }
+    }
+
+    // Finish arcs: every state (including the empty source, representing an
+    // unopened bin slot — removed below for source) can close the bin.
+    let sink = states.len();
+    for u in 0..states.len() {
+        arcs.push(Arc { from: u, to: sink, item: None });
+    }
+    // Drop the source->sink loss arc: an empty bin is never opened.
+    arcs.retain(|a| !(a.from == 0 && a.to == sink && a.item.is_none()));
+
+    Ok(ArcFlow { num_nodes: sink + 1, source: 0, sink, arcs })
+}
+
+/// Merge nodes with identical outgoing behaviour (partition refinement).
+/// Preserves the multiset of source→sink item-label paths.
+pub fn compress(g: &ArcFlow) -> (ArcFlow, CompressionStats) {
+    let before = CompressionStats {
+        nodes_before: g.num_nodes,
+        arcs_before: g.arcs.len(),
+        nodes_after: 0,
+        arcs_after: 0,
+    };
+
+    // Initial partition: {sink}, {source}, {everything else}.
+    let mut class = vec![1usize; g.num_nodes];
+    class[g.sink] = 0;
+    class[g.source] = 2;
+
+    let mut out: Vec<Vec<(Option<usize>, usize)>> = vec![Vec::new(); g.num_nodes];
+    for a in &g.arcs {
+        out[a.from].push((a.item, a.to));
+    }
+
+    loop {
+        // Signature: sorted (item, class-of-target) pairs.
+        let mut sig_index: HashMap<(usize, Vec<(Option<usize>, usize)>), usize> = HashMap::new();
+        let mut new_class = vec![0usize; g.num_nodes];
+        let mut next = 0usize;
+        for u in 0..g.num_nodes {
+            let mut sig: Vec<(Option<usize>, usize)> =
+                out[u].iter().map(|&(item, v)| (item, class[v])).collect();
+            sig.sort_unstable();
+            sig.dedup();
+            let key = (class[u], sig);
+            let c = *sig_index.entry(key).or_insert_with(|| {
+                let c = next;
+                next += 1;
+                c
+            });
+            new_class[u] = c;
+        }
+        if new_class == class {
+            break;
+        }
+        class = new_class;
+    }
+
+    // Rebuild: representative node per class.
+    let num_classes = class.iter().max().unwrap() + 1;
+    let mut new_arcs: Vec<Arc> = Vec::new();
+    let mut seen: std::collections::HashSet<(usize, usize, Option<usize>)> =
+        std::collections::HashSet::new();
+    for a in &g.arcs {
+        let key = (class[a.from], class[a.to], a.item);
+        if seen.insert(key) {
+            new_arcs.push(Arc { from: class[a.from], to: class[a.to], item: a.item });
+        }
+    }
+
+    let compressed = ArcFlow {
+        num_nodes: num_classes,
+        source: class[g.source],
+        sink: class[g.sink],
+        arcs: new_arcs,
+    };
+    let stats = CompressionStats {
+        nodes_after: compressed.num_nodes,
+        arcs_after: compressed.arcs.len(),
+        ..before
+    };
+    (compressed, stats)
+}
+
+/// Enumerate all distinct source→sink paths as item-count vectors
+/// (test/diagnostic helper; exponential in general, fine for sidebar-scale).
+pub fn enumerate_packings(g: &ArcFlow, num_items: usize) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<(Option<usize>, usize)>> = vec![Vec::new(); g.num_nodes];
+    for a in &g.arcs {
+        out[a.from].push((a.item, a.to));
+    }
+    let mut results = Vec::new();
+    let mut stack = vec![(g.source, vec![0usize; num_items])];
+    while let Some((u, counts)) = stack.pop() {
+        if u == g.sink {
+            if counts.iter().any(|&c| c > 0) {
+                results.push(counts);
+            }
+            continue;
+        }
+        for &(item, v) in &out[u] {
+            let mut c2 = counts.clone();
+            if let Some(i) = item {
+                c2[i] += 1;
+            }
+            stack.push((v, c2));
+        }
+    }
+    results.sort();
+    results.dedup();
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's sidebar instance: truck (7,3); A (5,1)×1, B (3,1)×1,
+    /// C (2,1)×2.
+    fn sidebar() -> (Vec<i64>, Vec<QuantItem>) {
+        (
+            vec![7, 3],
+            vec![
+                QuantItem { sizes: vec![5, 1], count: 1 },
+                QuantItem { sizes: vec![3, 1], count: 1 },
+                QuantItem { sizes: vec![2, 1], count: 2 },
+            ],
+        )
+    }
+
+    #[test]
+    fn sidebar_graph_builds() {
+        let (cap, items) = sidebar();
+        let g = build(&cap, &items, 10_000).unwrap();
+        assert!(g.num_nodes > 2);
+        assert!(g.arcs.iter().any(|a| a.item == Some(0)));
+        assert!(g.arcs.iter().any(|a| a.item.is_none()));
+    }
+
+    #[test]
+    fn sidebar_packings_are_exactly_the_feasible_ones() {
+        let (cap, items) = sidebar();
+        let g = build(&cap, &items, 10_000).unwrap();
+        let packs = enumerate_packings(&g, 3);
+        // Feasibility oracle: 5a + 3b + 2c <= 7 and a + b + c <= 3, bounded
+        // by demands (a<=1, b<=1, c<=2).
+        let mut expected = Vec::new();
+        for a in 0..=1usize {
+            for b in 0..=1usize {
+                for c in 0..=2usize {
+                    if a + b + c == 0 {
+                        continue;
+                    }
+                    if 5 * a + 3 * b + 2 * c <= 7 && a + b + c <= 3 {
+                        expected.push(vec![a, b, c]);
+                    }
+                }
+            }
+        }
+        expected.sort();
+        assert_eq!(packs, expected);
+        // Max boxes in one truck = 3 (B + 2C), as in the sidebar narrative.
+        let max_boxes = packs.iter().map(|p| p.iter().sum::<usize>()).max().unwrap();
+        assert_eq!(max_boxes, 3);
+    }
+
+    #[test]
+    fn sidebar_compression_shrinks_and_preserves_paths() {
+        let (cap, items) = sidebar();
+        let g = build(&cap, &items, 10_000).unwrap();
+        let before = enumerate_packings(&g, 3);
+        let (cg, stats) = compress(&g);
+        let after = enumerate_packings(&cg, 3);
+        assert_eq!(before, after, "compression must preserve packings");
+        assert!(stats.nodes_after <= stats.nodes_before);
+        assert!(stats.arcs_after <= stats.arcs_before);
+        assert!(stats.nodes_after < stats.nodes_before, "expected real merging");
+    }
+
+    #[test]
+    fn item_order_canonicalization_no_permuted_duplicates() {
+        // Two identical items: placing them is order-canonical, so the graph
+        // has exactly one path with count 2 (not two permutations).
+        let cap = vec![4];
+        let items = vec![QuantItem { sizes: vec![2], count: 2 }];
+        let g = build(&cap, &items, 1000).unwrap();
+        let packs = enumerate_packings(&g, 1);
+        assert_eq!(packs, vec![vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn oversize_item_produces_no_arc() {
+        let cap = vec![3];
+        let items = vec![QuantItem { sizes: vec![5], count: 1 }];
+        let g = build(&cap, &items, 1000).unwrap();
+        assert!(enumerate_packings(&g, 1).is_empty());
+    }
+
+    #[test]
+    fn max_nodes_guard_trips() {
+        // Many distinct small items in 3 dims -> big state space.
+        let cap = vec![50, 50, 50];
+        let items: Vec<QuantItem> = (1..=10)
+            .map(|i| QuantItem { sizes: vec![i, 11 - i, (i % 3) + 1], count: 5 })
+            .collect();
+        assert!(build(&cap, &items, 50).is_err());
+    }
+
+    #[test]
+    fn property_every_path_fits_capacity() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let dims = 1 + rng.index(3);
+            let cap: Vec<i64> = (0..dims).map(|_| 4 + rng.index(8) as i64).collect();
+            let n_items = 1 + rng.index(3);
+            let items: Vec<QuantItem> = (0..n_items)
+                .map(|_| QuantItem {
+                    sizes: (0..dims).map(|_| 1 + rng.index(5) as i64).collect(),
+                    count: 1 + rng.index(3),
+                })
+                .collect();
+            let g = match build(&cap, &items, 20_000) {
+                Ok(g) => g,
+                Err(_) => continue,
+            };
+            for pack in enumerate_packings(&g, n_items) {
+                for d in 0..dims {
+                    let used: i64 = pack
+                        .iter()
+                        .zip(&items)
+                        .map(|(&c, it)| c as i64 * it.sizes[d])
+                        .sum();
+                    assert!(used <= cap[d], "pack {pack:?} violates dim {d}");
+                }
+                for (c, it) in pack.iter().zip(&items) {
+                    assert!(*c <= it.count);
+                }
+            }
+        }
+    }
+}

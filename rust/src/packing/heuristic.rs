@@ -1,0 +1,258 @@
+//! Greedy packers: first-fit-decreasing (FFD) over cost-efficiency-ranked
+//! bins, and the ARMVAC fill rule ("pick the lowest-cost eligible instance,
+//! fill it with as many streams as fit, repeat").
+//!
+//! These provide (a) warm-start incumbents for the exact branch-and-bound
+//! solver, (b) the behaviour of the paper's baseline resource managers, and
+//! (c) a fallback when an instance is too large for exact solving.
+
+use super::{BinType, ItemGroup, Packing, PackedBin, PackingProblem};
+use crate::catalog::Dims;
+use crate::error::{Error, Result};
+
+/// Normalized "size" of a demand vector w.r.t. a capacity: the max dimension
+/// fraction. Items that demand a scarce dimension rank large.
+fn norm_size(demand: &Dims, cap: &Dims) -> f64 {
+    demand.max_utilization(cap)
+}
+
+/// Component-wise max of all bin types' effective capacities — the global
+/// reference scale that makes packed volumes comparable across bin types.
+fn reference_capacity(problem: &PackingProblem) -> Dims {
+    let mut r = Dims::default();
+    for t in 0..problem.bins.len() {
+        let c = problem.effective_capacity(t);
+        r = Dims::new(
+            r.vcpus.max(c.vcpus),
+            r.mem_gib.max(c.mem_gib),
+            r.gpus.max(c.gpus),
+            r.gpu_mem_gib.max(c.gpu_mem_gib),
+        );
+    }
+    r
+}
+
+/// Simulate greedily filling ONE bin of type `t` from `remaining` counts.
+/// Returns (counts per group, packed volume normalized by `reference`).
+fn fill_one_bin(
+    problem: &PackingProblem,
+    t: usize,
+    remaining: &[usize],
+    reference: &Dims,
+) -> (Vec<usize>, f64) {
+    let cap = problem.effective_capacity(t);
+    // Order groups by decreasing normalized size in this bin.
+    let mut order: Vec<usize> = (0..problem.items.len())
+        .filter(|&g| remaining[g] > 0 && problem.compatible(g, t))
+        .collect();
+    order.sort_by(|&a, &b| {
+        let sa = norm_size(&problem.items[a].demand_per_bin[t].unwrap(), &cap);
+        let sb = norm_size(&problem.items[b].demand_per_bin[t].unwrap(), &cap);
+        sb.partial_cmp(&sa).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut counts = vec![0usize; problem.items.len()];
+    let mut used = Dims::default();
+    let mut volume = 0.0;
+    for &g in &order {
+        let d = problem.items[g].demand_per_bin[t].unwrap();
+        for _ in 0..remaining[g] {
+            let next = used.add(&d);
+            if next.fits_in(&cap) {
+                used = next;
+                counts[g] += 1;
+                volume += norm_size(&d, reference);
+            } else {
+                break;
+            }
+        }
+    }
+    (counts, volume)
+}
+
+/// First-fit-decreasing over cost-efficiency: repeatedly open the bin type
+/// with the best (cost / packed-volume) ratio for the remaining items.
+pub fn first_fit_decreasing(problem: &PackingProblem) -> Result<Packing> {
+    problem.check_feasible_items()?;
+    let reference = reference_capacity(problem);
+    let mut remaining: Vec<usize> = problem.items.iter().map(|g| g.count).collect();
+    let mut packing = Packing::default();
+
+    while remaining.iter().any(|&c| c > 0) {
+        let mut best: Option<(usize, Vec<usize>, f64)> = None; // (t, counts, score)
+        for t in 0..problem.bins.len() {
+            let (counts, volume) = fill_one_bin(problem, t, &remaining, &reference);
+            if volume <= 0.0 {
+                continue;
+            }
+            let score = problem.bins[t].cost / volume;
+            if best.as_ref().is_none_or(|(_, _, s)| score < *s) {
+                best = Some((t, counts, score));
+            }
+        }
+        let (t, counts, _) = best.ok_or_else(|| {
+            Error::infeasible("remaining streams fit in no instance type")
+        })?;
+        for (g, &c) in counts.iter().enumerate() {
+            remaining[g] -= c;
+        }
+        packing.bins.push(PackedBin { bin_type: t, counts });
+    }
+    packing.validate(problem)?;
+    Ok(packing)
+}
+
+/// The ARMVAC fill rule (Mohan et al. \[6\], \[8\]): select the *lowest-cost*
+/// eligible instance type, send as many streams to it as fit, repeat.
+/// (Cheapest-first rather than efficiency-first: this is exactly the
+/// behaviour the paper says underperforms in the 1–20 fps band.)
+pub fn armvac_fill(problem: &PackingProblem) -> Result<Packing> {
+    problem.check_feasible_items()?;
+    let mut remaining: Vec<usize> = problem.items.iter().map(|g| g.count).collect();
+    let mut packing = Packing::default();
+
+    // Bin types sorted by absolute hourly cost, cheapest first.
+    let mut order: Vec<usize> = (0..problem.bins.len()).collect();
+    order.sort_by(|&a, &b| {
+        problem.bins[a]
+            .cost
+            .partial_cmp(&problem.bins[b].cost)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    let reference = reference_capacity(problem);
+    while remaining.iter().any(|&c| c > 0) {
+        let mut progressed = false;
+        for &t in &order {
+            let (counts, volume) = fill_one_bin(problem, t, &remaining, &reference);
+            if volume > 0.0 {
+                for (g, &c) in counts.iter().enumerate() {
+                    remaining[g] -= c;
+                }
+                packing.bins.push(PackedBin { bin_type: t, counts });
+                progressed = true;
+                break;
+            }
+        }
+        if !progressed {
+            return Err(Error::infeasible(
+                "ARMVAC: remaining streams fit in no instance type",
+            ));
+        }
+    }
+    packing.validate(problem)?;
+    Ok(packing)
+}
+
+/// Helper for tests/benches: single-bin-kind problem builder.
+pub fn simple_problem(
+    item_sizes: &[(f64, f64, usize)], // (cpu, mem, count)
+    bins: &[(f64, f64, f64)],         // (cpu cap, mem cap, cost)
+) -> PackingProblem {
+    let bin_types: Vec<BinType> = bins
+        .iter()
+        .enumerate()
+        .map(|(i, &(c, m, cost))| BinType {
+            label: format!("bin{i}"),
+            capacity: Dims::new(c, m, 0.0, 0.0),
+            cost,
+            type_idx: i,
+            region_idx: 0,
+            has_gpu: false,
+        })
+        .collect();
+    let items = item_sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &(c, m, count))| ItemGroup {
+            label: format!("item{i}"),
+            count,
+            demand_per_bin: vec![Some(Dims::new(c, m, 0.0, 0.0)); bin_types.len()],
+        })
+        .collect();
+    PackingProblem::new(items, bin_types)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ffd_packs_everything() {
+        let p = simple_problem(
+            &[(2.0, 1.0, 5), (3.0, 2.0, 3)],
+            &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.8)],
+        );
+        let packing = first_fit_decreasing(&p).unwrap();
+        packing.validate(&p).unwrap();
+        assert_eq!(
+            packing.bins.iter().map(|b| b.num_streams()).sum::<usize>(),
+            8
+        );
+    }
+
+    #[test]
+    fn ffd_prefers_cost_efficient_bin() {
+        // Big bin is cheaper per unit: 16 cores for 1.5 vs 8 cores for 1.0.
+        let p = simple_problem(&[(1.0, 0.5, 12)], &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.5)]);
+        let packing = first_fit_decreasing(&p).unwrap();
+        // 12 items of 1 core: 90% of 16 = 14.4 -> one big bin suffices.
+        assert_eq!(packing.num_bins(), 1);
+        assert_eq!(packing.bins[0].bin_type, 1);
+    }
+
+    #[test]
+    fn armvac_prefers_cheapest_bin() {
+        // Same instance: ARMVAC opens the cheap small bin first.
+        let p = simple_problem(&[(1.0, 0.5, 12)], &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.5)]);
+        let packing = armvac_fill(&p).unwrap();
+        assert_eq!(packing.bins[0].bin_type, 0);
+        // 7 items fit in 7.2 cores; needs 2 bins of the small type.
+        assert_eq!(packing.num_bins(), 2);
+        // ARMVAC cost (2.0) exceeds FFD cost (1.5): the paper's 1–20 fps gap.
+        let ffd = first_fit_decreasing(&p).unwrap();
+        assert!(packing.total_cost(&p) > ffd.total_cost(&p));
+    }
+
+    #[test]
+    fn infeasible_when_item_too_big() {
+        let p = simple_problem(&[(100.0, 1.0, 1)], &[(8.0, 15.0, 1.0)]);
+        assert!(first_fit_decreasing(&p).is_err());
+        assert!(armvac_fill(&p).is_err());
+    }
+
+    #[test]
+    fn headroom_respected() {
+        // One item of exactly 7.3 cores does NOT fit an 8-core bin at 90%.
+        let p = simple_problem(&[(7.3, 1.0, 1)], &[(8.0, 15.0, 1.0)]);
+        assert!(first_fit_decreasing(&p).is_err());
+        // 7.1 does.
+        let p = simple_problem(&[(7.1, 1.0, 1)], &[(8.0, 15.0, 1.0)]);
+        assert!(first_fit_decreasing(&p).is_ok());
+    }
+
+    #[test]
+    fn property_ffd_never_overfills() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(42);
+        for _ in 0..50 {
+            let n_groups = 1 + rng.index(4);
+            let items: Vec<(f64, f64, usize)> = (0..n_groups)
+                .map(|_| {
+                    (
+                        rng.range_f64(0.2, 6.0),
+                        rng.range_f64(0.2, 10.0),
+                        1 + rng.index(6),
+                    )
+                })
+                .collect();
+            let p = simple_problem(
+                &items,
+                &[(8.0, 15.0, 1.0), (36.0, 60.0, 4.0), (16.0, 30.0, 2.1)],
+            );
+            if let Ok(packing) = first_fit_decreasing(&p) {
+                packing.validate(&p).unwrap();
+                assert!(packing.peak_utilization(&p) <= p.headroom + 1e-9);
+            }
+        }
+    }
+}

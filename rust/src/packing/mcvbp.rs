@@ -1,0 +1,547 @@
+//! Exact multiple-choice vector bin packing: one arc-flow graph per bin type
+//! (Brandão & Pedroso's multiple-choice method \[10\] — "a graph is constructed
+//! for each truck type, and then solved using the Gurobi solver"), assembled
+//! into a joint min-cost integer flow and solved by branch-and-bound.
+//!
+//! Demands are quantized (rounded *up*) onto a per-bin grid, so any packing
+//! valid on the quantized instance is valid on the original. An FFD packing
+//! of the quantized instance provides the incumbent; the exact solve can only
+//! improve it.
+
+use super::arcflow::{self, QuantItem};
+use super::heuristic;
+use super::{Packing, PackedBin, PackingProblem};
+use crate::catalog::{Dims, NUM_DIMS};
+use crate::error::{Error, Result};
+use crate::solver::{solve_milp, Lp, Milp, MilpOptions, Op};
+
+/// Exact-solve configuration.
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    /// Quantization levels per dimension (grid = effective capacity / quant).
+    pub quant: i64,
+    /// Per-bin-type arc-flow node budget; exceeded -> heuristic fallback.
+    pub max_graph_nodes: usize,
+    /// Joint-ILP variable budget; exceeded -> heuristic fallback.
+    pub max_milp_vars: usize,
+    /// Branch-and-bound limits.
+    pub milp: MilpOptions,
+    /// If false, skip the exact phase entirely (best-of heuristics).
+    pub exact: bool,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            quant: 60,
+            max_graph_nodes: 6_000,
+            max_milp_vars: 600,
+            milp: MilpOptions { max_nodes: 2_000, ..Default::default() },
+            exact: true,
+        }
+    }
+}
+
+/// How the returned packing was obtained.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveMethod {
+    Heuristic,
+    ExactArcFlow,
+}
+
+/// Diagnostics for benches and EXPERIMENTS.md.
+#[derive(Clone, Debug)]
+pub struct SolveStats {
+    pub method: SolveMethod,
+    pub ffd_cost: f64,
+    pub final_cost: f64,
+    pub milp_nodes: usize,
+    pub graph_nodes_before: usize,
+    pub graph_arcs_before: usize,
+    pub graph_nodes_after: usize,
+    pub graph_arcs_after: usize,
+    pub milp_vars: usize,
+    pub milp_constraints: usize,
+}
+
+/// Quantize each item's demand up to the bin-type grid; `None` stays `None`,
+/// and demands that cannot fit become `None` (incompatible).
+fn quantize_problem(problem: &PackingProblem, quant: i64) -> PackingProblem {
+    let mut q = problem.clone();
+    for t in 0..problem.bins.len() {
+        let eff = problem.effective_capacity(t);
+        let caps = eff.as_array();
+        for item in q.items.iter_mut() {
+            if let Some(d) = item.demand_per_bin[t] {
+                let mut qd = [0.0f64; NUM_DIMS];
+                let mut ok = true;
+                for (i, (dv, cv)) in d.as_array().iter().zip(caps.iter()).enumerate() {
+                    if *dv <= 0.0 {
+                        qd[i] = 0.0;
+                        continue;
+                    }
+                    if *cv <= 0.0 {
+                        ok = false;
+                        break;
+                    }
+                    let unit = cv / quant as f64;
+                    let cells = (dv / unit).ceil();
+                    if cells > quant as f64 {
+                        ok = false;
+                        break;
+                    }
+                    qd[i] = cells * unit;
+                }
+                item.demand_per_bin[t] = if ok { Some(Dims::from_array(qd)) } else { None };
+            }
+        }
+    }
+    q
+}
+
+/// Integer cell counts of a quantized demand on bin `t`'s grid.
+fn cells(problem: &PackingProblem, t: usize, d: &Dims, quant: i64) -> Vec<i64> {
+    let eff = problem.effective_capacity(t);
+    d.as_array()
+        .iter()
+        .zip(eff.as_array())
+        .map(|(dv, cv)| {
+            if *dv <= 0.0 || cv <= 0.0 {
+                0
+            } else {
+                ((dv / (cv / quant as f64)).round()) as i64
+            }
+        })
+        .collect()
+}
+
+/// Solve the MCVBP. Returns the packing plus diagnostics.
+pub fn solve(problem: &PackingProblem, opts: &SolveOptions) -> Result<(Packing, SolveStats)> {
+    // Quantize once; all phases work on the conservative instance so the
+    // result is valid for the original problem.
+    let qp = quantize_problem(problem, opts.quant);
+    qp.check_feasible_items()?;
+
+    // Heuristic candidates: FFD on the quantized instance (safe incumbent
+    // for the exact phase), plus FFD and ARMVAC-fill on the original problem
+    // (the round-up can cost a slot per bin, so the unquantized packings are
+    // sometimes strictly better). All are valid for the original problem.
+    let ffd = heuristic::first_fit_decreasing(&qp)?;
+    let ffd_cost = ffd.total_cost(&qp);
+    let mut best_heuristic = ffd.clone();
+    let mut best_heuristic_cost = ffd_cost;
+    for cand in [
+        heuristic::first_fit_decreasing(problem).ok(),
+        heuristic::armvac_fill(problem).ok(),
+    ]
+    .into_iter()
+    .flatten()
+    {
+        let c = cand.total_cost(problem);
+        if c < best_heuristic_cost {
+            best_heuristic = cand;
+            best_heuristic_cost = c;
+        }
+    }
+
+    let mut stats = SolveStats {
+        method: SolveMethod::Heuristic,
+        ffd_cost: best_heuristic_cost,
+        final_cost: best_heuristic_cost,
+        milp_nodes: 0,
+        graph_nodes_before: 0,
+        graph_arcs_before: 0,
+        graph_nodes_after: 0,
+        graph_arcs_after: 0,
+        milp_vars: 0,
+        milp_constraints: 0,
+    };
+    if !opts.exact {
+        return Ok((best_heuristic, stats));
+    }
+
+    // Build one arc-flow graph per bin type over its compatible item groups.
+    // A *cumulative* node budget bounds total build work: when the joint ILP
+    // would be too large to solve anyway (see max_milp_vars), bail out to the
+    // heuristic before burning time constructing hundreds of graphs.
+    let mut graphs = Vec::with_capacity(qp.bins.len());
+    let mut remaining_nodes = opts.max_graph_nodes;
+    for t in 0..qp.bins.len() {
+        // Map: local item index -> global group index.
+        let groups: Vec<usize> = (0..qp.items.len())
+            .filter(|&g| qp.items[g].count > 0 && qp.compatible(g, t))
+            .collect();
+        if groups.is_empty() {
+            graphs.push(None);
+            continue;
+        }
+        let cap = vec![opts.quant; NUM_DIMS];
+        let items: Vec<QuantItem> = groups
+            .iter()
+            .map(|&g| QuantItem {
+                sizes: cells(&qp, t, &qp.items[g].demand_per_bin[t].unwrap(), opts.quant),
+                count: qp.items[g].count,
+            })
+            .collect();
+        match arcflow::build(&cap, &items, remaining_nodes) {
+            Ok(g) => {
+                remaining_nodes = remaining_nodes.saturating_sub(g.num_nodes);
+                stats.graph_nodes_before += g.num_nodes;
+                stats.graph_arcs_before += g.arcs.len();
+                let (cg, _) = arcflow::compress(&g);
+                stats.graph_nodes_after += cg.num_nodes;
+                stats.graph_arcs_after += cg.arcs.len();
+                graphs.push(Some((cg, groups)));
+            }
+            Err(_) => {
+                // Cumulative state budget exhausted: heuristic fallback.
+                return Ok((best_heuristic, stats));
+            }
+        }
+    }
+
+    // Assemble the joint min-cost integer flow.
+    // Variables: one per arc (all graphs), integral.
+    let mut var_arc: Vec<(usize, usize)> = Vec::new(); // (bin type, arc idx)
+    let mut var_offset = vec![0usize; qp.bins.len() + 1];
+    for (t, g) in graphs.iter().enumerate() {
+        var_offset[t] = var_arc.len();
+        if let Some((graph, _)) = g {
+            for a in 0..graph.arcs.len() {
+                var_arc.push((t, a));
+            }
+        }
+    }
+    var_offset[qp.bins.len()] = var_arc.len();
+    let num_vars = var_arc.len();
+    if num_vars == 0 || num_vars > opts.max_milp_vars {
+        return Ok((best_heuristic, stats));
+    }
+
+    let mut lp = Lp::new(num_vars);
+    // Objective: bin cost on arcs leaving the source.
+    for (v, &(t, a)) in var_arc.iter().enumerate() {
+        let (graph, _) = graphs[t].as_ref().unwrap();
+        if graph.arcs[a].from == graph.source {
+            lp.set_objective(v, qp.bins[t].cost);
+        }
+    }
+    // Conservation at internal nodes.
+    for (t, g) in graphs.iter().enumerate() {
+        let Some((graph, _)) = g else { continue };
+        for node in 0..graph.num_nodes {
+            if node == graph.source || node == graph.sink {
+                continue;
+            }
+            let mut coeffs: Vec<(usize, f64)> = Vec::new();
+            for (a, arc) in graph.arcs.iter().enumerate() {
+                let v = var_offset[t] + a;
+                if arc.to == node {
+                    coeffs.push((v, 1.0));
+                }
+                if arc.from == node {
+                    coeffs.push((v, -1.0));
+                }
+            }
+            if !coeffs.is_empty() {
+                lp.add_constraint(coeffs, Op::Eq, 0.0);
+            }
+        }
+    }
+    // Demand coverage per item group.
+    for (g_idx, item) in qp.items.iter().enumerate() {
+        if item.count == 0 {
+            continue;
+        }
+        let mut coeffs: Vec<(usize, f64)> = Vec::new();
+        for (t, g) in graphs.iter().enumerate() {
+            let Some((graph, groups)) = g else { continue };
+            let Some(local) = groups.iter().position(|&x| x == g_idx) else {
+                continue;
+            };
+            for (a, arc) in graph.arcs.iter().enumerate() {
+                if arc.item == Some(local) {
+                    coeffs.push((var_offset[t] + a, 1.0));
+                }
+            }
+        }
+        if coeffs.is_empty() {
+            return Err(Error::infeasible(format!(
+                "stream group '{}' unplaceable in exact phase",
+                item.label
+            )));
+        }
+        lp.add_constraint(coeffs, Op::Ge, item.count as f64);
+    }
+    // Incumbent cut: never exceed the FFD cost.
+    {
+        let coeffs: Vec<(usize, f64)> = var_arc
+            .iter()
+            .enumerate()
+            .filter_map(|(v, &(t, a))| {
+                let (graph, _) = graphs[t].as_ref().unwrap();
+                (graph.arcs[a].from == graph.source).then_some((v, qp.bins[t].cost))
+            })
+            .collect();
+        lp.add_constraint(coeffs, Op::Le, ffd_cost + 1e-6);
+    }
+
+    stats.milp_vars = num_vars;
+    stats.milp_constraints = lp.constraints.len();
+
+    let milp = Milp { lp, integer_vars: (0..num_vars).collect() };
+    // Branch on source arcs first (they decide how many bins of each type
+    // open), and scale the node budget down for large ILPs so planning
+    // latency stays bounded ("resource decisions quickly, during runtime").
+    let mut milp_opts = opts.milp.clone();
+    milp_opts.priority_vars = var_arc
+        .iter()
+        .enumerate()
+        .filter_map(|(v, &(t, a))| {
+            let (graph, _) = graphs[t].as_ref().unwrap();
+            (graph.arcs[a].from == graph.source).then_some(v)
+        })
+        .collect();
+    milp_opts.max_nodes = milp_opts
+        .max_nodes
+        .min((200_000 / num_vars.max(1)).max(50));
+    let sol = match solve_milp(&milp, &milp_opts) {
+        Ok(s) => s,
+        Err(_) => return Ok((best_heuristic, stats)), // exact phase failed
+    };
+    stats.milp_nodes = sol.nodes;
+
+    // Decompose flows into source->sink paths per graph -> bins.
+    let mut packing = Packing::default();
+    for (t, g) in graphs.iter().enumerate() {
+        let Some((graph, groups)) = g else { continue };
+        let mut flow: Vec<i64> = (0..graph.arcs.len())
+            .map(|a| sol.x[var_offset[t] + a].round() as i64)
+            .collect();
+        let mut out_arcs: Vec<Vec<usize>> = vec![Vec::new(); graph.num_nodes];
+        for (a, arc) in graph.arcs.iter().enumerate() {
+            out_arcs[arc.from].push(a);
+        }
+        loop {
+            // Start a new path if any source arc still carries flow.
+            let Some(&start) = out_arcs[graph.source].iter().find(|&&a| flow[a] > 0) else {
+                break;
+            };
+            let mut counts = vec![0usize; qp.items.len()];
+            let mut a = start;
+            let mut guard = 0;
+            loop {
+                flow[a] -= 1;
+                if let Some(local) = graph.arcs[a].item {
+                    counts[groups[local]] += 1;
+                }
+                let node = graph.arcs[a].to;
+                if node == graph.sink {
+                    break;
+                }
+                a = match out_arcs[node].iter().find(|&&x| flow[x] > 0) {
+                    Some(&x) => x,
+                    None => {
+                        return Err(Error::solver(
+                            "flow decomposition stuck (conservation violated)",
+                        ))
+                    }
+                };
+                guard += 1;
+                if guard > graph.arcs.len() * (problem.total_items() + 2) {
+                    return Err(Error::solver("flow decomposition cycle"));
+                }
+            }
+            if counts.iter().any(|&c| c > 0) {
+                packing.bins.push(PackedBin { bin_type: t, counts });
+            }
+        }
+    }
+
+    // Trim over-coverage (Ge slack) and drop empty bins.
+    let mut placed = vec![0usize; qp.items.len()];
+    for b in &packing.bins {
+        for (g, &c) in b.counts.iter().enumerate() {
+            placed[g] += c;
+        }
+    }
+    for g in 0..qp.items.len() {
+        let mut extra = placed[g].saturating_sub(qp.items[g].count);
+        if extra == 0 {
+            continue;
+        }
+        for b in packing.bins.iter_mut() {
+            while extra > 0 && b.counts[g] > 0 {
+                b.counts[g] -= 1;
+                extra -= 1;
+            }
+        }
+    }
+    packing.bins.retain(|b| b.num_streams() > 0);
+
+    packing.validate(&qp)?;
+    let exact_cost = packing.total_cost(&qp);
+
+    if exact_cost <= best_heuristic_cost + 1e-9 {
+        stats.method = SolveMethod::ExactArcFlow;
+        stats.final_cost = exact_cost;
+        Ok((packing, stats))
+    } else {
+        Ok((best_heuristic, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::heuristic::simple_problem;
+    use crate::packing::{BinType, ItemGroup};
+
+    #[test]
+    fn exact_matches_ffd_on_trivial() {
+        let p = simple_problem(&[(2.0, 1.0, 3)], &[(8.0, 15.0, 1.0)]);
+        let (packing, stats) = solve(&p, &SolveOptions::default()).unwrap();
+        packing.validate(&p).unwrap();
+        assert_eq!(packing.num_bins(), 1);
+        assert!(stats.final_cost <= stats.ffd_cost + 1e-9);
+    }
+
+    #[test]
+    fn exact_beats_greedy_where_it_should() {
+        // 3 items of 3 cores; bins: 8-core@1.0, 12-core@1.15.
+        // Greedy-by-efficiency opens the 12-core (3 items = 9 <= 10.8): cost
+        // 1.15, which is also optimal — sanity that exact agrees.
+        let p = simple_problem(&[(3.0, 1.0, 3)], &[(8.0, 15.0, 1.0), (12.0, 20.0, 1.15)]);
+        let (packing, _) = solve(&p, &SolveOptions::default()).unwrap();
+        assert!((packing.total_cost(&p) - 1.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_fixes_ffd_suboptimality() {
+        // The Fig-3 S1 pattern in miniature: one "CPU" bin fits only one item
+        // (score looks good), but a single "GPU" bin holds all items cheaper.
+        // items: CPU demand 6 cores, GPU demand 0.2 gpu.
+        let bins = vec![
+            BinType {
+                label: "cpu".into(),
+                capacity: Dims::new(8.0, 15.0, 0.0, 0.0),
+                cost: 0.419,
+                type_idx: 0,
+                region_idx: 0,
+                has_gpu: false,
+            },
+            BinType {
+                label: "gpu".into(),
+                capacity: Dims::new(8.0, 15.0, 1.0, 4.0),
+                cost: 0.65,
+                type_idx: 1,
+                region_idx: 0,
+                has_gpu: true,
+            },
+        ];
+        let items = vec![ItemGroup {
+            label: "stream".into(),
+            count: 4,
+            demand_per_bin: vec![
+                Some(Dims::new(6.0, 1.0, 0.0, 0.0)),
+                Some(Dims::new(0.2, 0.5, 0.2, 0.7)),
+            ],
+        }];
+        let p = PackingProblem::new(items, bins);
+        let ffd = heuristic::first_fit_decreasing(&p).unwrap();
+        // FFD picks cpu bins one by one: 4 x 0.419 = 1.676.
+        assert!((ffd.total_cost(&p) - 1.676).abs() < 1e-9);
+        let (packing, stats) = solve(&p, &SolveOptions::default()).unwrap();
+        assert_eq!(stats.method, SolveMethod::ExactArcFlow);
+        assert!((packing.total_cost(&p) - 0.65).abs() < 1e-9, "exact should pick 1 GPU bin");
+        packing.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn infeasible_reported_as_fail() {
+        let p = simple_problem(&[(100.0, 1.0, 1)], &[(8.0, 15.0, 1.0)]);
+        assert!(solve(&p, &SolveOptions::default()).is_err());
+    }
+
+    #[test]
+    fn quantization_is_conservative() {
+        // An item at exactly the effective capacity still fits (rounding up
+        // to the full grid), one epsilon above does not.
+        let p = simple_problem(&[(7.2, 1.0, 1)], &[(8.0, 15.0, 1.0)]);
+        let (packing, _) = solve(&p, &SolveOptions::default()).unwrap();
+        packing.validate(&p).unwrap();
+        let p2 = simple_problem(&[(7.21, 1.0, 1)], &[(8.0, 15.0, 1.0)]);
+        assert!(solve(&p2, &SolveOptions::default()).is_err());
+    }
+
+    #[test]
+    fn multi_choice_demand_vectors() {
+        // Item demands differ per bin: 4 cores on cpu-bin, 0.5 gpu on gpu-bin.
+        // Optimal: all 3 on one gpu bin (cost 1.0) vs 2 cpu bins (1.6)?
+        // gpu capacity 2 gpus * 0.9 = 1.8 -> 3 x 0.5 = 1.5 fits. cpu: 7.2/4 =
+        // 1 each -> 3 bins = 2.4. Exact must choose gpu.
+        let bins = vec![
+            BinType {
+                label: "cpu".into(),
+                capacity: Dims::new(8.0, 16.0, 0.0, 0.0),
+                cost: 0.8,
+                type_idx: 0,
+                region_idx: 0,
+                has_gpu: false,
+            },
+            BinType {
+                label: "gpu".into(),
+                capacity: Dims::new(4.0, 16.0, 2.0, 8.0),
+                cost: 1.0,
+                type_idx: 1,
+                region_idx: 0,
+                has_gpu: true,
+            },
+        ];
+        let items = vec![ItemGroup {
+            label: "s".into(),
+            count: 3,
+            demand_per_bin: vec![
+                Some(Dims::new(4.0, 1.0, 0.0, 0.0)),
+                Some(Dims::new(0.2, 1.0, 0.5, 1.0)),
+            ],
+        }];
+        let p = PackingProblem::new(items, bins);
+        let (packing, _) = solve(&p, &SolveOptions::default()).unwrap();
+        assert!((packing.total_cost(&p) - 1.0).abs() < 1e-9);
+        let (non_gpu, gpu) = packing.count_by_gpu(&p);
+        assert_eq!((non_gpu, gpu), (0, 1));
+    }
+
+    #[test]
+    fn property_exact_never_worse_than_ffd() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(31);
+        for round in 0..15 {
+            let n_groups = 1 + rng.index(3);
+            let items: Vec<(f64, f64, usize)> = (0..n_groups)
+                .map(|_| {
+                    (
+                        rng.range_f64(0.5, 6.0),
+                        rng.range_f64(0.5, 8.0),
+                        1 + rng.index(4),
+                    )
+                })
+                .collect();
+            let p = simple_problem(
+                &items,
+                &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.7), (36.0, 60.0, 3.4)],
+            );
+            let Ok((packing, stats)) = solve(&p, &SolveOptions::default()) else {
+                continue;
+            };
+            packing.validate(&p).unwrap();
+            assert!(
+                stats.final_cost <= stats.ffd_cost + 1e-9,
+                "round {round}: exact {} > ffd {}",
+                stats.final_cost,
+                stats.ffd_cost
+            );
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Multi-dimensional multiple-choice vector bin packing (MCVBP).
+//!
+//! The paper's core formulation (sidebar + Fig 2): analysis streams are
+//! "boxes" with a 4-dimensional resource demand; cloud instance types are
+//! "trucks" with capacities and hourly costs; the *multiple-choice* aspect is
+//! twofold — several truck types exist, **and** a stream's demand vector
+//! depends on the truck it lands in (CPU demand on CPU boxes, GPU demand on
+//! GPU boxes, per Kaseb et al. \[7\]).
+//!
+//! * [`heuristic`] — first-fit-decreasing style greedy packer (warm starts,
+//!   large instances, the ARMVAC fill rule),
+//! * [`arcflow`] — the Brandão–Pedroso arc-flow graph with compression,
+//! * [`mcvbp`] — the exact solver: one arc-flow graph per bin type, a joint
+//!   min-cost integer flow solved by branch-and-bound (the Gurobi role).
+
+pub mod arcflow;
+pub mod heuristic;
+pub mod mcvbp;
+
+use crate::catalog::Dims;
+use crate::error::{Error, Result};
+
+/// The paper's 90% rule: "when any dimension is more than 90% utilized, the
+/// performance starts to degrade. Thus, the method keeps the utilization of
+/// each dimension below 90%."
+pub const DEFAULT_HEADROOM: f64 = 0.90;
+
+/// A group of identical streams (same program, fps, resolution, and
+/// location-eligibility), with a per-bin-type demand vector.
+#[derive(Clone, Debug)]
+pub struct ItemGroup {
+    pub label: String,
+    pub count: usize,
+    /// `demand_per_bin[t]` = demand vector when placed in bin type `t`;
+    /// `None` = this item may not be placed in that bin type (wrong hardware
+    /// or outside the RTT circle).
+    pub demand_per_bin: Vec<Option<Dims>>,
+}
+
+/// A bin type: one instance type at one location, at an hourly cost.
+#[derive(Clone, Debug)]
+pub struct BinType {
+    pub label: String,
+    pub capacity: Dims,
+    pub cost: f64,
+    /// Opaque back-references for the coordinator (catalog indices).
+    pub type_idx: usize,
+    pub region_idx: usize,
+    pub has_gpu: bool,
+}
+
+/// The packing instance.
+#[derive(Clone, Debug)]
+pub struct PackingProblem {
+    pub items: Vec<ItemGroup>,
+    pub bins: Vec<BinType>,
+    /// Per-dimension utilization cap (paper: 0.90).
+    pub headroom: f64,
+}
+
+impl PackingProblem {
+    pub fn new(items: Vec<ItemGroup>, bins: Vec<BinType>) -> Self {
+        PackingProblem { items, bins, headroom: DEFAULT_HEADROOM }
+    }
+
+    /// Usable capacity of bin type `t` after the 90% rule.
+    pub fn effective_capacity(&self, t: usize) -> Dims {
+        self.bins[t].capacity.scale(self.headroom)
+    }
+
+    /// Total stream count.
+    pub fn total_items(&self) -> usize {
+        self.items.iter().map(|g| g.count).sum()
+    }
+
+    /// True iff item group `g` can ever be placed in bin type `t`.
+    pub fn compatible(&self, g: usize, t: usize) -> bool {
+        match &self.items[g].demand_per_bin[t] {
+            Some(d) => d.fits_in(&self.effective_capacity(t)),
+            None => None::<()>.is_some(),
+        }
+    }
+
+    /// Quick infeasibility check: every item group must fit *somewhere*.
+    pub fn check_feasible_items(&self) -> Result<()> {
+        for (g, item) in self.items.iter().enumerate() {
+            if item.count == 0 {
+                continue;
+            }
+            if !(0..self.bins.len()).any(|t| self.compatible(g, t)) {
+                return Err(Error::infeasible(format!(
+                    "stream group '{}' fits in no available instance type",
+                    item.label
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One provisioned bin: a bin type plus per-item-group counts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedBin {
+    pub bin_type: usize,
+    /// `counts[g]` = number of streams of item group g placed here.
+    pub counts: Vec<usize>,
+}
+
+impl PackedBin {
+    pub fn total_demand(&self, problem: &PackingProblem) -> Dims {
+        let mut total = Dims::default();
+        for (g, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                let d = problem.items[g].demand_per_bin[self.bin_type]
+                    .expect("packed incompatible item");
+                total = total.add(&d.scale(c as f64));
+            }
+        }
+        total
+    }
+
+    pub fn num_streams(&self) -> usize {
+        self.counts.iter().sum()
+    }
+}
+
+/// A complete packing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Packing {
+    pub bins: Vec<PackedBin>,
+}
+
+impl Packing {
+    pub fn total_cost(&self, problem: &PackingProblem) -> f64 {
+        self.bins.iter().map(|b| problem.bins[b.bin_type].cost).sum()
+    }
+
+    pub fn num_bins(&self) -> usize {
+        self.bins.len()
+    }
+
+    /// Bins split by hardware class — the Fig-3 table columns.
+    pub fn count_by_gpu(&self, problem: &PackingProblem) -> (usize, usize) {
+        let gpu = self
+            .bins
+            .iter()
+            .filter(|b| problem.bins[b.bin_type].has_gpu)
+            .count();
+        (self.bins.len() - gpu, gpu)
+    }
+
+    /// Verify capacity limits and exact demand coverage.
+    pub fn validate(&self, problem: &PackingProblem) -> Result<()> {
+        let mut placed = vec![0usize; problem.items.len()];
+        for (i, bin) in self.bins.iter().enumerate() {
+            if bin.counts.len() != problem.items.len() {
+                return Err(Error::config(format!("bin {i}: counts length mismatch")));
+            }
+            for (g, &c) in bin.counts.iter().enumerate() {
+                if c > 0 && problem.items[g].demand_per_bin[bin.bin_type].is_none() {
+                    return Err(Error::config(format!(
+                        "bin {i}: item '{}' incompatible with bin type '{}'",
+                        problem.items[g].label, problem.bins[bin.bin_type].label
+                    )));
+                }
+                placed[g] += c;
+            }
+            let demand = bin.total_demand(problem);
+            let cap = problem.effective_capacity(bin.bin_type);
+            if !demand.fits_in(&cap) {
+                return Err(Error::config(format!(
+                    "bin {i} ('{}') over capacity: demand {demand:?} > cap {cap:?}",
+                    problem.bins[bin.bin_type].label
+                )));
+            }
+        }
+        for (g, item) in problem.items.iter().enumerate() {
+            if placed[g] != item.count {
+                return Err(Error::config(format!(
+                    "item '{}': placed {} of {}",
+                    item.label, placed[g], item.count
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Max per-dimension utilization over all bins (vs *raw* capacity) —
+    /// must stay below the headroom by construction.
+    pub fn peak_utilization(&self, problem: &PackingProblem) -> f64 {
+        self.bins
+            .iter()
+            .map(|b| {
+                b.total_demand(problem)
+                    .max_utilization(&problem.bins[b.bin_type].capacity)
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cpu_bin(cost: f64) -> BinType {
+        BinType {
+            label: format!("cpu@{cost}"),
+            capacity: Dims::new(8.0, 15.0, 0.0, 0.0),
+            cost,
+            type_idx: 0,
+            region_idx: 0,
+            has_gpu: false,
+        }
+    }
+
+    fn item(label: &str, count: usize, cpu: f64, mem: f64) -> ItemGroup {
+        ItemGroup {
+            label: label.into(),
+            count,
+            demand_per_bin: vec![Some(Dims::new(cpu, mem, 0.0, 0.0))],
+        }
+    }
+
+    #[test]
+    fn effective_capacity_applies_headroom() {
+        let p = PackingProblem::new(vec![], vec![cpu_bin(1.0)]);
+        let eff = p.effective_capacity(0);
+        assert!((eff.vcpus - 7.2).abs() < 1e-12);
+        assert!((eff.mem_gib - 13.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_catches_overflow() {
+        let p = PackingProblem::new(vec![item("a", 2, 4.0, 1.0)], vec![cpu_bin(1.0)]);
+        let packing = Packing {
+            bins: vec![PackedBin { bin_type: 0, counts: vec![2] }], // 8.0 > 7.2
+        };
+        assert!(packing.validate(&p).is_err());
+    }
+
+    #[test]
+    fn validate_catches_missing_items() {
+        let p = PackingProblem::new(vec![item("a", 2, 3.0, 1.0)], vec![cpu_bin(1.0)]);
+        let packing = Packing {
+            bins: vec![PackedBin { bin_type: 0, counts: vec![1] }],
+        };
+        assert!(packing.validate(&p).is_err());
+    }
+
+    #[test]
+    fn validate_accepts_good_packing() {
+        let p = PackingProblem::new(vec![item("a", 2, 3.0, 1.0)], vec![cpu_bin(1.0)]);
+        let packing = Packing {
+            bins: vec![PackedBin { bin_type: 0, counts: vec![2] }],
+        };
+        packing.validate(&p).unwrap();
+        assert_eq!(packing.total_cost(&p), 1.0);
+        assert!(packing.peak_utilization(&p) <= DEFAULT_HEADROOM + 1e-9);
+    }
+
+    #[test]
+    fn infeasible_item_detected() {
+        let p = PackingProblem::new(vec![item("huge", 1, 100.0, 1.0)], vec![cpu_bin(1.0)]);
+        assert!(p.check_feasible_items().is_err());
+    }
+
+    #[test]
+    fn incompatible_item_not_placeable() {
+        let mut it = item("gpu-only", 1, 1.0, 1.0);
+        it.demand_per_bin = vec![None];
+        let p = PackingProblem::new(vec![it], vec![cpu_bin(1.0)]);
+        assert!(p.check_feasible_items().is_err());
+    }
+}

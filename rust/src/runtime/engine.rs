@@ -1,0 +1,280 @@
+//! The inference engine: PJRT CPU client + compiled executables + pre-staged
+//! parameter buffers.
+//!
+//! HLO **text** is the interchange format (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
+//! instruction ids, avoiding the 64-bit-id incompatibility between jax ≥ 0.5
+//! and xla_extension 0.5.1.
+
+use super::manifest::{load_params, Manifest, ModelEntry};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Raw detections for a batch: `(batch, cells*anchors, 5 + classes)`.
+#[derive(Clone, Debug)]
+pub struct Detections {
+    pub data: Vec<f32>,
+    pub shape: [usize; 3],
+}
+
+impl Detections {
+    /// Objectness score (index 4) of cell `c` in frame `b`.
+    pub fn objectness(&self, b: usize, c: usize) -> f32 {
+        let stride = self.shape[2];
+        self.data[(b * self.shape[1] + c) * stride + 4]
+    }
+
+    /// Count of cells whose objectness exceeds `thresh` for frame `b`.
+    pub fn count_above(&self, b: usize, thresh: f32) -> usize {
+        (0..self.shape[1])
+            .filter(|&c| self.objectness(b, c) > thresh)
+            .count()
+    }
+}
+
+struct LoadedModel {
+    entry: ModelEntry,
+    exe: xla::PjRtLoadedExecutable,
+    param_bufs: Vec<xla::PjRtBuffer>,
+}
+
+/// The engine. NOT `Sync` (PJRT wrappers hold raw pointers); the serving
+/// layer gives each executor thread its own engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    models: HashMap<(String, usize), LoadedModel>,
+}
+
+impl Engine {
+    /// Load every model variant in the manifest.
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        Self::load_filtered(artifacts_dir, None)
+    }
+
+    /// Load only selected (name, batch) variants (None = all). Loading fewer
+    /// variants cuts XLA compile time at startup.
+    pub fn load_filtered(
+        artifacts_dir: impl AsRef<std::path::Path>,
+        keep: Option<&[(&str, usize)]>,
+    ) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PJRT client: {e}")))?;
+        let mut models = HashMap::new();
+        for entry in &manifest.models {
+            if let Some(keep) = keep {
+                if !keep.iter().any(|(n, b)| *n == entry.name && *b == entry.batch) {
+                    continue;
+                }
+            }
+            let model = Self::load_model(&client, entry)?;
+            models.insert((entry.name.clone(), entry.batch), model);
+        }
+        if models.is_empty() {
+            return Err(Error::config("no model variants loaded"));
+        }
+        Ok(Engine { client, manifest, models })
+    }
+
+    fn load_model(client: &xla::PjRtClient, entry: &ModelEntry) -> Result<LoadedModel> {
+        let hlo_path = entry
+            .hlo_path
+            .to_str()
+            .ok_or_else(|| Error::config("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .map_err(|e| Error::runtime(format!("parse {hlo_path}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| Error::runtime(format!("compile {}: {e}", entry.name)))?;
+        // Pre-stage parameters on the device once.
+        let params = load_params(entry)?;
+        let mut param_bufs = Vec::with_capacity(params.len());
+        for (data, shape) in params.iter().zip(&entry.param_shapes) {
+            let buf = client
+                .buffer_from_host_buffer::<f32>(data, shape, None)
+                .map_err(|e| Error::runtime(format!("stage params: {e}")))?;
+            param_bufs.push(buf);
+        }
+        Ok(LoadedModel { entry: entry.clone(), exe, param_bufs })
+    }
+
+    pub fn has(&self, name: &str, batch: usize) -> bool {
+        self.models.contains_key(&(name.to_string(), batch))
+    }
+
+    pub fn loaded_variants(&self) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Run one batch. `frames` must contain exactly `batch × 64 × 64 × 3`
+    /// f32 values in [0, 1], NHWC.
+    pub fn infer(&self, name: &str, batch: usize, frames: &[f32]) -> Result<Detections> {
+        let model = self
+            .models
+            .get(&(name.to_string(), batch))
+            .ok_or_else(|| Error::runtime(format!("model {name} b{batch} not loaded")))?;
+        let entry = &model.entry;
+        if frames.len() != entry.input_len() {
+            return Err(Error::runtime(format!(
+                "input has {} floats, {} b{batch} expects {}",
+                frames.len(),
+                name,
+                entry.input_len()
+            )));
+        }
+        let input = self
+            .client
+            .buffer_from_host_buffer::<f32>(frames, &entry.input_shape, None)
+            .map_err(|e| Error::runtime(format!("stage input: {e}")))?;
+        let mut args: Vec<&xla::PjRtBuffer> = model.param_bufs.iter().collect();
+        args.push(&input);
+        let result = model
+            .exe
+            .execute_b(&args)
+            .map_err(|e| Error::runtime(format!("execute: {e}")))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("fetch result: {e}")))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = literal
+            .to_tuple1()
+            .map_err(|e| Error::runtime(format!("untuple: {e}")))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| Error::runtime(format!("read result: {e}")))?;
+        if data.len() != entry.output_len() {
+            return Err(Error::runtime(format!(
+                "output has {} floats, expected {}",
+                data.len(),
+                entry.output_len()
+            )));
+        }
+        Ok(Detections {
+            data,
+            shape: [entry.output_shape[0], entry.output_shape[1], entry.output_shape[2]],
+        })
+    }
+
+    /// Pad a short frame set up to `batch` frames (repeating the last frame)
+    /// and run it; returns detections for the first `n` frames only.
+    pub fn infer_padded(
+        &self,
+        name: &str,
+        batch: usize,
+        frames: &[f32],
+        n: usize,
+    ) -> Result<Detections> {
+        let per_frame = {
+            let entry = self
+                .manifest
+                .find(name, batch)
+                .ok_or_else(|| Error::runtime(format!("unknown model {name} b{batch}")))?;
+            entry.input_len() / entry.batch
+        };
+        if n == 0 || frames.len() != n * per_frame {
+            return Err(Error::runtime("bad frame count for infer_padded"));
+        }
+        let mut padded = frames.to_vec();
+        let last = frames[frames.len() - per_frame..].to_vec();
+        for _ in n..batch {
+            padded.extend_from_slice(&last);
+        }
+        let mut det = self.infer(name, batch, &padded)?;
+        det.shape[0] = n;
+        det.data.truncate(n * det.shape[1] * det.shape[2]);
+        Ok(det)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Engine {
+        Engine::load_filtered(artifacts_dir(), Some(&[("zf", 1), ("zf", 4), ("vgg16", 1)]))
+            .expect("engine load")
+    }
+
+    fn frame(seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::Rng::new(seed);
+        (0..64 * 64 * 3).map(|_| rng.f32()).collect()
+    }
+
+    #[test]
+    fn infer_shapes_and_finiteness() {
+        let e = engine();
+        let det = e.infer("zf", 1, &frame(1)).unwrap();
+        assert_eq!(det.shape, [1, 128, 9]); // 8x8 cells x 2 anchors, 5+4
+        assert_eq!(det.data.len(), 128 * 9);
+        assert!(det.data.iter().all(|v| v.is_finite()));
+
+        let v = e.infer("vgg16", 1, &frame(2)).unwrap();
+        assert_eq!(v.shape, [1, 128, 9]);
+    }
+
+    #[test]
+    fn inference_is_deterministic() {
+        let e = engine();
+        let f = frame(3);
+        let a = e.infer("zf", 1, &f).unwrap();
+        let b = e.infer("zf", 1, &f).unwrap();
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn batched_matches_single() {
+        let e = engine();
+        let f0 = frame(10);
+        let f1 = frame(11);
+        let mut batch = f0.clone();
+        batch.extend_from_slice(&f1);
+        batch.extend_from_slice(&f0);
+        batch.extend_from_slice(&f1);
+        let b = e.infer("zf", 4, &batch).unwrap();
+        let s0 = e.infer("zf", 1, &f0).unwrap();
+        let s1 = e.infer("zf", 1, &f1).unwrap();
+        let stride = 128 * 9;
+        for (i, single) in [&s0, &s1, &s0, &s1].iter().enumerate() {
+            for j in 0..stride {
+                let d = (b.data[i * stride + j] - single.data[j]).abs();
+                assert!(d < 1e-4, "frame {i} elem {j}: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn infer_padded_truncates() {
+        let e = engine();
+        let mut frames = frame(20);
+        frames.extend_from_slice(&frame(21));
+        let det = e.infer_padded("zf", 4, &frames, 2).unwrap();
+        assert_eq!(det.shape[0], 2);
+        assert_eq!(det.data.len(), 2 * 128 * 9);
+    }
+
+    #[test]
+    fn wrong_input_size_rejected() {
+        let e = engine();
+        assert!(e.infer("zf", 1, &[0.0; 10]).is_err());
+        assert!(e.infer("zf", 9, &frame(1)).is_err());
+        assert!(e.infer("nope", 1, &frame(1)).is_err());
+    }
+
+    #[test]
+    fn detections_accessors() {
+        let e = engine();
+        let det = e.infer("zf", 1, &frame(5)).unwrap();
+        let n_hot = det.count_above(0, 0.0);
+        assert!(n_hot <= 128);
+        let _ = det.objectness(0, 0);
+    }
+}

@@ -1,0 +1,194 @@
+//! `artifacts/manifest.json` loader (produced by `python -m compile.aot`).
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled model variant.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub batch: usize,
+    pub hlo_path: PathBuf,
+    pub params_path: PathBuf,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub flops_per_frame: f64,
+}
+
+impl ModelEntry {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+    pub fn param_len(&self) -> usize {
+        self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// The artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub input_size: usize,
+    pub num_classes: usize,
+    pub num_anchors: usize,
+    pub models: Vec<ModelEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and resolve artifact paths.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::config(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let v = json::parse(&text)?;
+        Self::from_value(&v, dir)
+    }
+
+    pub fn from_value(v: &Value, dir: &Path) -> Result<Manifest> {
+        let version = v.get_usize("version")?;
+        if version != 1 {
+            return Err(Error::config(format!("unsupported manifest version {version}")));
+        }
+        let parse_shape = |val: &Value| -> Result<Vec<usize>> {
+            val.as_arr()
+                .ok_or_else(|| Error::config("shape is not an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| Error::config("bad shape dim")))
+                .collect()
+        };
+        let mut models = Vec::new();
+        for m in v.get_arr("models")? {
+            let param_shapes = m
+                .get_arr("param_shapes")?
+                .iter()
+                .map(&parse_shape)
+                .collect::<Result<Vec<_>>>()?;
+            models.push(ModelEntry {
+                name: m.get_str("name")?.to_string(),
+                batch: m.get_usize("batch")?,
+                hlo_path: dir.join(m.get_str("hlo")?),
+                params_path: dir.join(m.get_str("params_bin")?),
+                param_shapes,
+                input_shape: parse_shape(m.get("input_shape")?)?,
+                output_shape: parse_shape(m.get("output_shape")?)?,
+                flops_per_frame: m.get_f64("flops_per_frame")?,
+            });
+        }
+        if models.is_empty() {
+            return Err(Error::config("manifest has no models"));
+        }
+        Ok(Manifest {
+            input_size: v.get_usize("input_size")?,
+            num_classes: v.get_usize("num_classes")?,
+            num_anchors: v.get_usize("num_anchors")?,
+            models,
+        })
+    }
+
+    pub fn find(&self, name: &str, batch: usize) -> Option<&ModelEntry> {
+        self.models.iter().find(|m| m.name == name && m.batch == batch)
+    }
+
+    /// Available batch sizes for a model, ascending.
+    pub fn batches_for(&self, name: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .models
+            .iter()
+            .filter(|m| m.name == name)
+            .map(|m| m.batch)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+
+    /// Smallest available batch >= n, else the largest available.
+    pub fn batch_for(&self, name: &str, n: usize) -> Option<usize> {
+        let batches = self.batches_for(name);
+        batches.iter().copied().find(|&b| b >= n).or(batches.last().copied())
+    }
+}
+
+/// Load a params .bin (little-endian f32 concat) and split per shape.
+pub fn load_params(entry: &ModelEntry) -> Result<Vec<Vec<f32>>> {
+    let raw = std::fs::read(&entry.params_path)?;
+    if raw.len() % 4 != 0 {
+        return Err(Error::config("params bin length not a multiple of 4"));
+    }
+    let floats: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    if floats.len() != entry.param_len() {
+        return Err(Error::config(format!(
+            "params bin has {} floats, manifest expects {}",
+            floats.len(),
+            entry.param_len()
+        )));
+    }
+    let mut out = Vec::with_capacity(entry.param_shapes.len());
+    let mut off = 0;
+    for shape in &entry.param_shapes {
+        let n: usize = shape.iter().product();
+        out.push(floats[off..off + n].to_vec());
+        off += n;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert_eq!(m.input_size, 64);
+        assert!(m.find("vgg16", 1).is_some());
+        assert!(m.find("zf", 1).is_some());
+        for e in &m.models {
+            assert!(e.hlo_path.exists(), "{:?}", e.hlo_path);
+            assert!(e.params_path.exists());
+            assert_eq!(e.input_shape[0], e.batch);
+        }
+    }
+
+    #[test]
+    fn params_blob_round_trips() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let e = m.find("zf", 1).unwrap();
+        let params = load_params(e).unwrap();
+        assert_eq!(params.len(), e.param_shapes.len());
+        for (p, s) in params.iter().zip(&e.param_shapes) {
+            assert_eq!(p.len(), s.iter().product::<usize>());
+            assert!(p.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn batch_selection() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert_eq!(m.batches_for("vgg16"), vec![1, 4, 8]);
+        assert_eq!(m.batch_for("vgg16", 1), Some(1));
+        assert_eq!(m.batch_for("vgg16", 3), Some(4));
+        assert_eq!(m.batch_for("vgg16", 100), Some(8));
+        assert_eq!(m.batch_for("nonexistent", 1), None);
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT artifacts (HLO text + parameter blobs) and execute
+//! the analysis programs from the Rust request path.
+//!
+//! Python is **never** involved here — `make artifacts` ran once at build
+//! time; this module loads `artifacts/manifest.json`, compiles each HLO
+//! module on the PJRT CPU client, pre-uploads the parameter buffers, and
+//! serves `infer()` calls.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Detections, Engine};
+pub use manifest::{Manifest, ModelEntry};

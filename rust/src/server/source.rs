@@ -1,0 +1,130 @@
+//! Synthetic frame sources.
+//!
+//! Network cameras are not reachable from this environment, so each stream
+//! gets a deterministic synthetic scene: a moving bright blob over low-level
+//! noise, downscaled to the analysis input size. The content changes frame
+//! to frame (the blob moves), exercising the full fetch→decode→analyze path
+//! with non-constant data.
+
+use crate::profiles::Resolution;
+use crate::util::Rng;
+
+/// Generates analysis-ready frames (input_size × input_size × 3, f32 in `[0,1]`).
+pub struct FrameSource {
+    rng: Rng,
+    input_size: usize,
+    /// Blob position/velocity in unit coordinates.
+    x: f64,
+    y: f64,
+    dx: f64,
+    dy: f64,
+    /// Native resolution drives the noise texture period (cameras with more
+    /// pixels yield smoother downscaled frames).
+    smoothing: f64,
+    frame_no: u64,
+}
+
+impl FrameSource {
+    pub fn new(seed: u64, native: Resolution, input_size: usize) -> Self {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xCAFE);
+        let x = rng.f64();
+        let y = rng.f64();
+        let dx = rng.range_f64(-0.05, 0.05);
+        let dy = rng.range_f64(-0.05, 0.05);
+        FrameSource {
+            rng,
+            input_size,
+            x,
+            y,
+            dx,
+            dy,
+            smoothing: (native.megapixels() / 0.3).clamp(0.5, 8.0),
+            frame_no: 0,
+        }
+    }
+
+    /// Produce the next frame (row-major HWC).
+    pub fn next_frame(&mut self) -> Vec<f32> {
+        let n = self.input_size;
+        let mut out = vec![0.0f32; n * n * 3];
+        // Background noise, dimmed by smoothing.
+        let noise_amp = (0.25 / self.smoothing) as f32;
+        for v in out.iter_mut() {
+            *v = self.rng.f32() * noise_amp + 0.1;
+        }
+        // Moving blob (a Gaussian bump) — the "object" detectors look at.
+        let cx = self.x * n as f64;
+        let cy = self.y * n as f64;
+        let sigma = n as f64 / 8.0;
+        for r in 0..n {
+            for c in 0..n {
+                let d2 = (r as f64 - cy).powi(2) + (c as f64 - cx).powi(2);
+                let b = (-(d2) / (2.0 * sigma * sigma)).exp() as f32;
+                let base = (r * n + c) * 3;
+                out[base] += 0.8 * b;
+                out[base + 1] += 0.6 * b;
+                out[base + 2] += 0.4 * b;
+            }
+        }
+        for v in out.iter_mut() {
+            *v = v.clamp(0.0, 1.0);
+        }
+        // Advance the blob, bouncing at the borders.
+        self.x += self.dx;
+        self.y += self.dy;
+        if !(0.05..=0.95).contains(&self.x) {
+            self.dx = -self.dx;
+            self.x = self.x.clamp(0.05, 0.95);
+        }
+        if !(0.05..=0.95).contains(&self.y) {
+            self.dy = -self.dy;
+            self.y = self.y.clamp(0.05, 0.95);
+        }
+        self.frame_no += 1;
+        out
+    }
+
+    pub fn frames_produced(&self) -> u64 {
+        self.frame_no
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_are_valid_and_sized() {
+        let mut s = FrameSource::new(1, Resolution::VGA, 64);
+        let f = s.next_frame();
+        assert_eq!(f.len(), 64 * 64 * 3);
+        assert!(f.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = FrameSource::new(5, Resolution::VGA, 64);
+        let mut b = FrameSource::new(5, Resolution::VGA, 64);
+        assert_eq!(a.next_frame(), b.next_frame());
+        let mut c = FrameSource::new(6, Resolution::VGA, 64);
+        assert_ne!(a.next_frame(), c.next_frame());
+    }
+
+    #[test]
+    fn content_changes_between_frames() {
+        let mut s = FrameSource::new(2, Resolution::HD720, 64);
+        let f1 = s.next_frame();
+        let f2 = s.next_frame();
+        assert_ne!(f1, f2);
+        assert_eq!(s.frames_produced(), 2);
+    }
+
+    #[test]
+    fn blob_brightens_center_region() {
+        // The frame must contain a clearly bright region (the blob).
+        let mut s = FrameSource::new(3, Resolution::VGA, 64);
+        let f = s.next_frame();
+        let max = f.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max > 0.5, "max={max}");
+    }
+}

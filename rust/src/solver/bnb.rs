@@ -1,0 +1,315 @@
+//! Best-first branch-and-bound MILP over the simplex LP relaxation.
+//!
+//! Branching adds simple bound rows (`x_i ≤ ⌊v⌋` / `x_i ≥ ⌈v⌉`) to the parent
+//! LP; nodes are explored best-bound-first. An optional warm-start incumbent
+//! (e.g. an FFD packing) prunes from the start — the same role heuristic
+//! solutions play in the paper's Gurobi branch-and-cut runs.
+
+use super::simplex::{solve_lp, Lp, LpOutcome, Op};
+use crate::error::{Error, Result};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A mixed-integer program: `lp` plus integrality on `integer_vars`.
+#[derive(Clone, Debug)]
+pub struct Milp {
+    pub lp: Lp,
+    pub integer_vars: Vec<usize>,
+}
+
+/// Search limits / tolerances.
+#[derive(Clone, Debug)]
+pub struct MilpOptions {
+    /// Max branch-and-bound nodes before giving up with the incumbent.
+    pub max_nodes: usize,
+    /// Integrality tolerance.
+    pub int_tol: f64,
+    /// Optional warm-start incumbent (x must be feasible & integral).
+    pub warm_start: Option<(Vec<f64>, f64)>,
+    /// Stop when the gap between incumbent and best bound is below this.
+    pub rel_gap: f64,
+    /// Variables to branch on first while fractional (e.g. the per-bin-type
+    /// "number of bins" arcs in the arc-flow ILP — branching there decides
+    /// the macro structure before micro flow routing).
+    pub priority_vars: Vec<usize>,
+}
+
+impl Default for MilpOptions {
+    fn default() -> Self {
+        MilpOptions {
+            max_nodes: 50_000,
+            int_tol: 1e-6,
+            warm_start: None,
+            rel_gap: 1e-9,
+            priority_vars: Vec::new(),
+        }
+    }
+}
+
+/// Result of the search.
+#[derive(Clone, Debug)]
+pub struct MilpSolution {
+    pub x: Vec<f64>,
+    pub objective: f64,
+    /// Number of B&B nodes explored.
+    pub nodes: usize,
+    /// True if optimality was proven (node limit not hit).
+    pub proven_optimal: bool,
+}
+
+struct Node {
+    bound: f64,
+    /// Extra bound rows: (var, op, rhs).
+    extra: Vec<(usize, Op, f64)>,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    // Min-heap on bound via reversed comparison (BinaryHeap is a max-heap).
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .bound
+            .partial_cmp(&self.bound)
+            .unwrap_or(Ordering::Equal)
+    }
+}
+
+fn most_fractional(x: &[f64], int_vars: &[usize], tol: f64) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64, f64)> = None; // (var, value, dist-from-half)
+    for &i in int_vars {
+        let v = x[i];
+        let frac = v - v.floor();
+        if frac > tol && frac < 1.0 - tol {
+            let score = (frac - 0.5).abs();
+            if best.is_none_or(|(_, _, s)| score < s) {
+                best = Some((i, v, score));
+            }
+        }
+    }
+    best.map(|(i, v, _)| (i, v))
+}
+
+/// Solve `min c·x` with integrality. Returns `Error::Infeasible` if no
+/// integral solution exists (and none was warm-started).
+pub fn solve_milp(milp: &Milp, opts: &MilpOptions) -> Result<MilpSolution> {
+    let mut incumbent: Option<(Vec<f64>, f64)> = opts.warm_start.clone();
+    let mut nodes_explored = 0usize;
+
+    let root = Node { bound: f64::NEG_INFINITY, extra: Vec::new() };
+    let mut heap = BinaryHeap::new();
+    heap.push(root);
+    let mut proven = true;
+
+    while let Some(node) = heap.pop() {
+        // Bound-based pruning against the incumbent.
+        if let Some((_, inc_obj)) = &incumbent {
+            if node.bound > *inc_obj - opts.rel_gap * inc_obj.abs().max(1.0) {
+                continue;
+            }
+        }
+        if nodes_explored >= opts.max_nodes {
+            proven = false;
+            break;
+        }
+        nodes_explored += 1;
+
+        // Build the node LP = base + branch bound rows.
+        let mut lp = milp.lp.clone();
+        for &(var, op, rhs) in &node.extra {
+            lp.add_constraint(vec![(var, 1.0)], op, rhs);
+        }
+        let sol = match solve_lp(&lp)? {
+            LpOutcome::Optimal(s) => s,
+            LpOutcome::Infeasible => continue,
+            LpOutcome::Unbounded => {
+                return Err(Error::solver("MILP relaxation unbounded"));
+            }
+        };
+        if let Some((_, inc_obj)) = &incumbent {
+            if sol.objective > *inc_obj - opts.rel_gap * inc_obj.abs().max(1.0) {
+                continue;
+            }
+        }
+
+        let branch_var = most_fractional(&sol.x, &opts.priority_vars, opts.int_tol)
+            .or_else(|| most_fractional(&sol.x, &milp.integer_vars, opts.int_tol));
+        match branch_var {
+            None => {
+                // Integral: candidate incumbent.
+                let obj = sol.objective;
+                if incumbent.as_ref().is_none_or(|(_, b)| obj < *b) {
+                    incumbent = Some((sol.x, obj));
+                }
+            }
+            Some((var, val)) => {
+                let mut lo = node.extra.clone();
+                lo.push((var, Op::Le, val.floor()));
+                let mut hi = node.extra;
+                hi.push((var, Op::Ge, val.ceil()));
+                heap.push(Node { bound: sol.objective, extra: lo });
+                heap.push(Node { bound: sol.objective, extra: hi });
+            }
+        }
+    }
+
+    match incumbent {
+        Some((x, objective)) => Ok(MilpSolution {
+            // Snap near-integral values.
+            x: x.iter()
+                .enumerate()
+                .map(|(i, &v)| {
+                    if milp.integer_vars.contains(&i) {
+                        v.round()
+                    } else {
+                        v
+                    }
+                })
+                .collect(),
+            objective,
+            nodes: nodes_explored,
+            proven_optimal: proven,
+        }),
+        None => Err(Error::infeasible("MILP has no integral solution")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn milp(num_vars: usize) -> Milp {
+        Milp { lp: Lp::new(num_vars), integer_vars: (0..num_vars).collect() }
+    }
+
+    #[test]
+    fn knapsack_small() {
+        // max 10a + 6b + 4c s.t. a+b+c<=2 (integer, binary-ish via <=1 rows)
+        let mut m = milp(3);
+        m.lp.set_objective(0, -10.0);
+        m.lp.set_objective(1, -6.0);
+        m.lp.set_objective(2, -4.0);
+        m.lp.add_constraint(vec![(0, 1.0), (1, 1.0), (2, 1.0)], Op::Le, 2.0);
+        for v in 0..3 {
+            m.lp.add_constraint(vec![(v, 1.0)], Op::Le, 1.0);
+        }
+        let s = solve_milp(&m, &MilpOptions::default()).unwrap();
+        assert!((s.objective + 16.0).abs() < 1e-6);
+        assert_eq!(s.x[0], 1.0);
+        assert_eq!(s.x[1], 1.0);
+        assert_eq!(s.x[2], 0.0);
+        assert!(s.proven_optimal);
+    }
+
+    #[test]
+    fn integer_rounding_matters() {
+        // min z1 + z2 s.t. z1 + z2 >= 1.5 -> LP 1.5, MILP 2.
+        let mut m = milp(2);
+        m.lp.set_objective(0, 1.0);
+        m.lp.set_objective(1, 1.0);
+        m.lp.add_constraint(vec![(0, 1.0), (1, 1.0)], Op::Ge, 1.5);
+        let s = solve_milp(&m, &MilpOptions::default()).unwrap();
+        assert!((s.objective - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bin_packing_integral() {
+        // Cover 10 units: bin A (cap 2, cost 1), bin B (cap 5, cost 1.8).
+        // LP: 2xB = 3.6; MILP: 2xB = 3.6 (already integral).
+        let mut m = milp(2);
+        m.lp.set_objective(0, 1.0);
+        m.lp.set_objective(1, 1.8);
+        m.lp.add_constraint(vec![(0, 2.0), (1, 5.0)], Op::Ge, 10.0);
+        let s = solve_milp(&m, &MilpOptions::default()).unwrap();
+        assert!((s.objective - 3.6).abs() < 1e-6);
+        assert_eq!(s.x[1], 2.0);
+    }
+
+    #[test]
+    fn bin_packing_fractional_lp_integral_fix() {
+        // Cover 11 units with bin B (cap 5, cost 1.8) only: LP 2.2 bins=3.96,
+        // MILP 3 bins = 5.4.
+        let mut m = milp(1);
+        m.lp.set_objective(0, 1.8);
+        m.lp.add_constraint(vec![(0, 5.0)], Op::Ge, 11.0);
+        let s = solve_milp(&m, &MilpOptions::default()).unwrap();
+        assert!((s.objective - 5.4).abs() < 1e-6);
+        assert_eq!(s.x[0], 3.0);
+    }
+
+    #[test]
+    fn infeasible_reported() {
+        let mut m = milp(1);
+        m.lp.set_objective(0, 1.0);
+        m.lp.add_constraint(vec![(0, 1.0)], Op::Ge, 2.0);
+        m.lp.add_constraint(vec![(0, 1.0)], Op::Le, 1.0);
+        assert!(solve_milp(&m, &MilpOptions::default()).is_err());
+    }
+
+    #[test]
+    fn warm_start_used_when_node_limit_zero() {
+        let mut m = milp(1);
+        m.lp.set_objective(0, 1.0);
+        m.lp.add_constraint(vec![(0, 1.0)], Op::Ge, 3.0);
+        let opts = MilpOptions {
+            max_nodes: 0,
+            warm_start: Some((vec![5.0], 5.0)),
+            ..Default::default()
+        };
+        let s = solve_milp(&m, &opts).unwrap();
+        assert_eq!(s.objective, 5.0);
+        assert!(!s.proven_optimal);
+    }
+
+    #[test]
+    fn warm_start_improved_upon() {
+        let mut m = milp(1);
+        m.lp.set_objective(0, 1.0);
+        m.lp.add_constraint(vec![(0, 1.0)], Op::Ge, 3.0);
+        let opts = MilpOptions {
+            warm_start: Some((vec![10.0], 10.0)),
+            ..Default::default()
+        };
+        let s = solve_milp(&m, &opts).unwrap();
+        assert_eq!(s.objective, 3.0);
+    }
+
+    #[test]
+    fn property_milp_at_least_lp() {
+        // For random covering problems, MILP objective >= LP objective.
+        use crate::solver::simplex::{solve_lp, LpOutcome};
+        use crate::util::Rng;
+        let mut rng = Rng::new(77);
+        for _ in 0..20 {
+            let n = 4 + rng.index(4);
+            let mut m = milp(n);
+            for j in 0..n {
+                m.lp.set_objective(j, rng.range_f64(1.0, 3.0));
+            }
+            for _ in 0..3 {
+                let coeffs: Vec<(usize, f64)> =
+                    (0..n).map(|j| (j, rng.range_f64(0.5, 2.0))).collect();
+                m.lp.add_constraint(coeffs, Op::Ge, rng.range_f64(1.0, 6.0));
+            }
+            let lp_obj = match solve_lp(&m.lp).unwrap() {
+                LpOutcome::Optimal(s) => s.objective,
+                _ => continue,
+            };
+            let s = solve_milp(&m, &MilpOptions::default()).unwrap();
+            assert!(s.objective >= lp_obj - 1e-6);
+            // Integrality holds.
+            for &i in &m.integer_vars {
+                assert!((s.x[i] - s.x[i].round()).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Linear and integer programming substrate (the Gurobi 5.0 stand-in).
+//!
+//! The paper solves the arc-flow formulation of multiple-choice vector bin
+//! packing with a Gurobi branch-and-cut solver. Gurobi is proprietary and not
+//! available offline, so this module implements:
+//!
+//! * [`simplex`] — a dense two-phase primal simplex for LP relaxations,
+//! * [`bnb`] — best-first branch-and-bound over fractional integer variables
+//!   with warm-start incumbents (heuristic upper bounds, exactly the role the
+//!   paper's FFD-style warm starts play in branch-and-cut).
+//!
+//! Paper-scale instances (tens of stream groups × a dozen instance choices)
+//! solve in milliseconds; see `benches/bench_packing.rs` for scaling curves.
+
+pub mod bnb;
+pub mod simplex;
+
+pub use bnb::{solve_milp, Milp, MilpOptions, MilpSolution};
+pub use simplex::{solve_lp, Constraint, Lp, LpOutcome, LpSolution, Op};

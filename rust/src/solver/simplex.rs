@@ -1,0 +1,443 @@
+//! Dense two-phase primal simplex.
+//!
+//! Solves `min c·x  s.t.  A x (≤|≥|=) b,  x ≥ 0`. Suited to the small/medium
+//! dense LPs produced by the packing formulations (≤ a few thousand
+//! variables). Uses Dantzig pricing with a Bland's-rule fallback to guarantee
+//! termination under degeneracy.
+
+use crate::error::{Error, Result};
+
+/// Constraint sense.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// A sparse row: Σ coeffs · x (op) rhs.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    pub coeffs: Vec<(usize, f64)>,
+    pub op: Op,
+    pub rhs: f64,
+}
+
+impl Constraint {
+    pub fn new(coeffs: Vec<(usize, f64)>, op: Op, rhs: f64) -> Self {
+        Constraint { coeffs, op, rhs }
+    }
+}
+
+/// `min objective·x` subject to `constraints`, `x ≥ 0`.
+#[derive(Clone, Debug, Default)]
+pub struct Lp {
+    pub num_vars: usize,
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+}
+
+impl Lp {
+    pub fn new(num_vars: usize) -> Self {
+        Lp { num_vars, objective: vec![0.0; num_vars], constraints: Vec::new() }
+    }
+
+    pub fn set_objective(&mut self, var: usize, coeff: f64) {
+        self.objective[var] = coeff;
+    }
+
+    pub fn add_constraint(&mut self, coeffs: Vec<(usize, f64)>, op: Op, rhs: f64) {
+        debug_assert!(coeffs.iter().all(|&(i, _)| i < self.num_vars));
+        self.constraints.push(Constraint::new(coeffs, op, rhs));
+    }
+}
+
+/// A primal-feasible optimum.
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    pub x: Vec<f64>,
+    pub objective: f64,
+}
+
+/// Solve outcome.
+#[derive(Clone, Debug)]
+pub enum LpOutcome {
+    Optimal(LpSolution),
+    Infeasible,
+    Unbounded,
+}
+
+const EPS: f64 = 1e-9;
+/// Iterations of Dantzig pricing before switching to Bland's rule.
+const BLAND_AFTER: usize = 5_000;
+const MAX_ITERS: usize = 200_000;
+
+struct Tableau {
+    /// (m+1) x (n+1): rows 0..m constraints, last row objective (reduced costs);
+    /// column n is the RHS.
+    a: Vec<Vec<f64>>,
+    m: usize,
+    n: usize,
+    basis: Vec<usize>,
+}
+
+impl Tableau {
+    fn pivot(&mut self, row: usize, col: usize) {
+        let piv = self.a[row][col];
+        debug_assert!(piv.abs() > EPS);
+        let inv = 1.0 / piv;
+        for v in self.a[row].iter_mut() {
+            *v *= inv;
+        }
+        for r in 0..=self.m {
+            if r == row {
+                continue;
+            }
+            let factor = self.a[r][col];
+            if factor.abs() < EPS {
+                continue;
+            }
+            // Row operation: a[r] -= factor * a[row]. Manual split-borrow.
+            let (pivot_row, target_row) = if r < row {
+                let (lo, hi) = self.a.split_at_mut(row);
+                (&hi[0], &mut lo[r])
+            } else {
+                let (lo, hi) = self.a.split_at_mut(r);
+                (&lo[row], &mut hi[0])
+            };
+            for (tv, pv) in target_row.iter_mut().zip(pivot_row.iter()) {
+                *tv -= factor * pv;
+            }
+        }
+        self.basis[row] = col;
+    }
+
+    /// Run simplex iterations on the current objective row. Returns false if
+    /// unbounded.
+    fn optimize(&mut self) -> Result<bool> {
+        for iter in 0..MAX_ITERS {
+            let bland = iter >= BLAND_AFTER;
+            // Entering column: most negative reduced cost (Dantzig) or first
+            // negative (Bland).
+            let mut col = None;
+            let mut best = -EPS;
+            for j in 0..self.n {
+                let rc = self.a[self.m][j];
+                if rc < -EPS {
+                    if bland {
+                        col = Some(j);
+                        break;
+                    }
+                    if rc < best {
+                        best = rc;
+                        col = Some(j);
+                    }
+                }
+            }
+            let col = match col {
+                Some(c) => c,
+                None => return Ok(true), // optimal
+            };
+            // Leaving row: min ratio test (Bland tie-break on basis index).
+            let mut row = None;
+            let mut best_ratio = f64::INFINITY;
+            for r in 0..self.m {
+                let a = self.a[r][col];
+                if a > EPS {
+                    let ratio = self.a[r][self.n] / a;
+                    let better = ratio < best_ratio - EPS
+                        || (ratio < best_ratio + EPS
+                            && row.is_some_and(|pr: usize| self.basis[r] < self.basis[pr]));
+                    if better {
+                        best_ratio = ratio;
+                        row = Some(r);
+                    }
+                }
+            }
+            match row {
+                Some(r) => self.pivot(r, col),
+                None => return Ok(false), // unbounded
+            }
+        }
+        Err(Error::solver("simplex iteration limit exceeded"))
+    }
+}
+
+/// Solve the LP; returns `Optimal`, `Infeasible`, or `Unbounded`.
+pub fn solve_lp(lp: &Lp) -> Result<LpOutcome> {
+    let n0 = lp.num_vars;
+    let m = lp.constraints.len();
+
+    // Normalize rows to rhs >= 0 and count auxiliary columns.
+    let mut rows: Vec<(Vec<(usize, f64)>, Op, f64)> = Vec::with_capacity(m);
+    for c in &lp.constraints {
+        let mut coeffs = c.coeffs.clone();
+        let mut op = c.op;
+        let mut rhs = c.rhs;
+        if rhs < 0.0 {
+            for (_, v) in coeffs.iter_mut() {
+                *v = -*v;
+            }
+            rhs = -rhs;
+            op = match op {
+                Op::Le => Op::Ge,
+                Op::Ge => Op::Le,
+                Op::Eq => Op::Eq,
+            };
+        }
+        rows.push((coeffs, op, rhs));
+    }
+
+    let num_slack = rows.iter().filter(|r| r.1 != Op::Eq).count();
+    let num_art = rows.iter().filter(|r| r.1 != Op::Le).count();
+    let n = n0 + num_slack + num_art;
+
+    let mut a = vec![vec![0.0; n + 1]; m + 1];
+    let mut basis = vec![0usize; m];
+    let mut slack_idx = n0;
+    let mut art_idx = n0 + num_slack;
+    let mut art_cols = Vec::with_capacity(num_art);
+
+    for (r, (coeffs, op, rhs)) in rows.iter().enumerate() {
+        for &(j, v) in coeffs {
+            a[r][j] += v;
+        }
+        a[r][n] = *rhs;
+        match op {
+            Op::Le => {
+                a[r][slack_idx] = 1.0;
+                basis[r] = slack_idx;
+                slack_idx += 1;
+            }
+            Op::Ge => {
+                a[r][slack_idx] = -1.0;
+                slack_idx += 1;
+                a[r][art_idx] = 1.0;
+                basis[r] = art_idx;
+                art_cols.push(art_idx);
+                art_idx += 1;
+            }
+            Op::Eq => {
+                a[r][art_idx] = 1.0;
+                basis[r] = art_idx;
+                art_cols.push(art_idx);
+                art_idx += 1;
+            }
+        }
+    }
+
+    let mut t = Tableau { a, m, n, basis };
+
+    // Phase 1: minimize sum of artificials.
+    if num_art > 0 {
+        for &c in &art_cols {
+            t.a[m][c] = 1.0;
+        }
+        // Make reduced costs consistent with the starting basis (price out
+        // basic artificials).
+        for r in 0..m {
+            if art_cols.contains(&t.basis[r]) {
+                let factor = t.a[m][t.basis[r]];
+                if factor.abs() > EPS {
+                    let row_vals: Vec<f64> = t.a[r].clone();
+                    for (obj_v, row_v) in t.a[m].iter_mut().zip(row_vals.iter()) {
+                        *obj_v -= factor * row_v;
+                    }
+                }
+            }
+        }
+        if !t.optimize()? {
+            return Err(Error::solver("phase-1 unbounded (internal error)"));
+        }
+        if t.a[m][n] < -1e-7 {
+            return Ok(LpOutcome::Infeasible);
+        }
+        // Drive remaining artificials out of the basis where possible.
+        for r in 0..m {
+            if art_cols.contains(&t.basis[r]) {
+                if let Some(col) = (0..n0 + num_slack).find(|&j| t.a[r][j].abs() > 1e-7) {
+                    t.pivot(r, col);
+                }
+                // If no pivot exists the row is redundant (all-zero); leave it.
+            }
+        }
+        // Forbid artificials from re-entering: zero their columns.
+        for &c in &art_cols {
+            for r in 0..=m {
+                t.a[r][c] = 0.0;
+            }
+        }
+    }
+
+    // Phase 2: original objective.
+    for v in t.a[m].iter_mut() {
+        *v = 0.0;
+    }
+    for j in 0..n0 {
+        t.a[m][j] = lp.objective[j];
+    }
+    for &c in &art_cols {
+        t.a[m][c] = 0.0;
+    }
+    // Price out basic variables.
+    for r in 0..m {
+        let b = t.basis[r];
+        let factor = t.a[m][b];
+        if factor.abs() > EPS {
+            let row_vals: Vec<f64> = t.a[r].clone();
+            for (obj_v, row_v) in t.a[m].iter_mut().zip(row_vals.iter()) {
+                *obj_v -= factor * row_v;
+            }
+        }
+    }
+
+    if !t.optimize()? {
+        return Ok(LpOutcome::Unbounded);
+    }
+
+    let mut x = vec![0.0; n0];
+    for r in 0..m {
+        if t.basis[r] < n0 {
+            x[t.basis[r]] = t.a[r][n];
+        }
+    }
+    let objective = lp.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+    Ok(LpOutcome::Optimal(LpSolution { x, objective }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn optimal(lp: &Lp) -> LpSolution {
+        match solve_lp(lp).unwrap() {
+            LpOutcome::Optimal(s) => s,
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn simple_2d_max_as_min() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18 => min -3x-5y; opt (2,6)=36.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -3.0);
+        lp.set_objective(1, -5.0);
+        lp.add_constraint(vec![(0, 1.0)], Op::Le, 4.0);
+        lp.add_constraint(vec![(1, 2.0)], Op::Le, 12.0);
+        lp.add_constraint(vec![(0, 3.0), (1, 2.0)], Op::Le, 18.0);
+        let s = optimal(&lp);
+        assert!((s.x[0] - 2.0).abs() < 1e-6);
+        assert!((s.x[1] - 6.0).abs() < 1e-6);
+        assert!((s.objective + 36.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ge_and_eq_constraints() {
+        // min x + 2y s.t. x + y = 10, x >= 3, y >= 2 -> x=8, y=2, obj=12.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.set_objective(1, 2.0);
+        lp.add_constraint(vec![(0, 1.0), (1, 1.0)], Op::Eq, 10.0);
+        lp.add_constraint(vec![(0, 1.0)], Op::Ge, 3.0);
+        lp.add_constraint(vec![(1, 1.0)], Op::Ge, 2.0);
+        let s = optimal(&lp);
+        assert!((s.x[0] - 8.0).abs() < 1e-6);
+        assert!((s.x[1] - 2.0).abs() < 1e-6);
+        assert!((s.objective - 12.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        // x >= 5 and x <= 3.
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, 1.0);
+        lp.add_constraint(vec![(0, 1.0)], Op::Ge, 5.0);
+        lp.add_constraint(vec![(0, 1.0)], Op::Le, 3.0);
+        assert!(matches!(solve_lp(&lp).unwrap(), LpOutcome::Infeasible));
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        // min -x, x >= 0 unconstrained above.
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, -1.0);
+        lp.add_constraint(vec![(0, 1.0)], Op::Ge, 0.0);
+        assert!(matches!(solve_lp(&lp).unwrap(), LpOutcome::Unbounded));
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // min x s.t. -x <= -4  (i.e. x >= 4).
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, 1.0);
+        lp.add_constraint(vec![(0, -1.0)], Op::Le, -4.0);
+        let s = optimal(&lp);
+        assert!((s.x[0] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // Classic degeneracy: multiple constraints active at the optimum.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -1.0);
+        lp.set_objective(1, -1.0);
+        lp.add_constraint(vec![(0, 1.0), (1, 1.0)], Op::Le, 1.0);
+        lp.add_constraint(vec![(0, 1.0)], Op::Le, 1.0);
+        lp.add_constraint(vec![(1, 1.0)], Op::Le, 1.0);
+        lp.add_constraint(vec![(0, 1.0), (1, 2.0)], Op::Le, 2.0);
+        let s = optimal(&lp);
+        assert!((s.objective + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn covering_lp_fractional() {
+        // min z1 + z2 s.t. z1 + z2 >= 1.5 -> obj 1.5 (fractional; B&B fixes).
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.set_objective(1, 1.0);
+        lp.add_constraint(vec![(0, 1.0), (1, 1.0)], Op::Ge, 1.5);
+        let s = optimal(&lp);
+        assert!((s.objective - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bin_packing_relaxation() {
+        // 2 bin types: cost 1 holds 2 units, cost 1.8 holds 5 units; need 10
+        // units. LP picks the 1.8 bin: 2 of them = 3.6.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.set_objective(1, 1.8);
+        lp.add_constraint(vec![(0, 2.0), (1, 5.0)], Op::Ge, 10.0);
+        let s = optimal(&lp);
+        assert!((s.objective - 3.6).abs() < 1e-6);
+        assert!((s.x[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn larger_random_lp_sane() {
+        // Random feasible covering LP: objective stays finite & nonnegative.
+        use crate::util::Rng;
+        let mut rng = Rng::new(123);
+        let n = 40;
+        let m = 25;
+        let mut lp = Lp::new(n);
+        for j in 0..n {
+            lp.set_objective(j, rng.range_f64(0.5, 2.0));
+        }
+        for _ in 0..m {
+            let mut coeffs: Vec<(usize, f64)> = Vec::new();
+            for j in 0..n {
+                if rng.bool(0.3) {
+                    coeffs.push((j, rng.range_f64(0.1, 1.0)));
+                }
+            }
+            if coeffs.is_empty() {
+                continue;
+            }
+            lp.add_constraint(coeffs, Op::Ge, rng.range_f64(0.5, 3.0));
+        }
+        let s = optimal(&lp);
+        assert!(s.objective >= 0.0 && s.objective.is_finite());
+        assert!(s.x.iter().all(|&v| v >= -1e-9));
+    }
+}

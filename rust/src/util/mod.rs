@@ -1,0 +1,42 @@
+//! Small self-contained substrates: PRNG, statistics, JSON, property testing.
+//!
+//! The build image has no network access and only the `xla` crate's dependency
+//! closure vendored, so the usual ecosystem crates (`rand`, `serde`,
+//! `proptest`, `criterion`) are re-implemented here at the scale this project
+//! needs. See DESIGN.md "Substitutions".
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;
+
+/// Format a dollar amount the way the paper's tables do (`$1.676`).
+pub fn fmt_usd(v: f64) -> String {
+    format!("${:.3}", v)
+}
+
+/// Round to `d` decimal places (used when comparing costs to paper rows).
+pub fn round_dp(v: f64, d: u32) -> f64 {
+    let m = 10f64.powi(d as i32);
+    (v * m).round() / m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_usd_matches_paper_style() {
+        assert_eq!(fmt_usd(1.676), "$1.676");
+        assert_eq!(fmt_usd(0.65), "$0.650");
+    }
+
+    #[test]
+    fn round_dp_works() {
+        assert_eq!(round_dp(1.23456, 2), 1.23);
+        assert_eq!(round_dp(0.4191, 3), 0.419);
+    }
+}

@@ -1,0 +1,212 @@
+//! Tiny property-testing harness (the `proptest` crate is not vendored).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` random inputs; on
+//! failure it performs greedy shrinking via the input's `Shrink` impl and
+//! panics with the minimal counterexample and the reproducing seed.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Types that can propose structurally smaller variants of themselves.
+pub trait Shrink: Sized {
+    /// Candidate smaller values, roughly ordered by aggressiveness.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|v| v as usize).collect()
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+            out.push(self.trunc());
+        }
+        out
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Halve, drop one element, shrink one element.
+        out.push(self[..self.len() / 2].to_vec());
+        for i in 0..self.len().min(4) {
+            let mut v = self.clone();
+            v.remove(i);
+            out.push(v);
+        }
+        for (i, x) in self.iter().enumerate().take(4) {
+            for sx in x.shrink() {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`; shrink on failure.
+///
+/// `prop` returns `Err(reason)` (or panics) to signal failure.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Clone + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> std::result::Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(reason) = run_guarded(&prop, &input) {
+            let (min_input, min_reason) = shrink_loop(&prop, input, reason);
+            panic!(
+                "property failed (seed={seed}, case={case}): {min_reason}\n\
+                 minimal counterexample: {min_input:?}"
+            );
+        }
+    }
+}
+
+fn run_guarded<T, P>(prop: &P, input: &T) -> std::result::Result<(), String>
+where
+    T: Debug,
+    P: Fn(&T) -> std::result::Result<(), String>,
+{
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(input))) {
+        Ok(r) => r,
+        Err(e) => {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "panic".to_string());
+            Err(format!("panicked: {msg}"))
+        }
+    }
+}
+
+fn shrink_loop<T, P>(prop: &P, mut input: T, mut reason: String) -> (T, String)
+where
+    T: Shrink + Clone + Debug,
+    P: Fn(&T) -> std::result::Result<(), String>,
+{
+    // Greedy: take the first shrunk candidate that still fails; stop when no
+    // candidate fails or after a bounded number of rounds.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in input.shrink() {
+            if let Err(r) = run_guarded(prop, &cand) {
+                input = cand;
+                reason = r;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (input, reason)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            1,
+            200,
+            |r| r.range_u64(0, 1000),
+            |&x| {
+                if x.wrapping_add(1) > x || x == u64::MAX {
+                    Ok(())
+                } else {
+                    Err("overflow".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks_and_panics() {
+        check(
+            2,
+            200,
+            |r| r.range_u64(0, 1000),
+            |&x| if x < 10 { Ok(()) } else { Err(format!("{x} >= 10")) },
+        );
+    }
+
+    #[test]
+    fn vec_shrink_produces_smaller() {
+        let v = vec![5u64, 6, 7, 8];
+        let shrunk = v.shrink();
+        assert!(shrunk.iter().any(|s| s.len() < v.len()));
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Property "sum < 100" fails; shrinker should find a small vec.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                3,
+                100,
+                |r| (0..20).map(|_| r.range_u64(0, 50)).collect::<Vec<u64>>(),
+                |v| {
+                    if v.iter().sum::<u64>() < 100 {
+                        Ok(())
+                    } else {
+                        Err("sum too big".into())
+                    }
+                },
+            )
+        });
+        let msg = match result {
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(()) => panic!("expected failure"),
+        };
+        assert!(msg.contains("minimal counterexample"));
+    }
+}

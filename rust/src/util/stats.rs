@@ -1,0 +1,147 @@
+//! Summary statistics used by the bench harness, metrics, and experiments.
+
+/// Online + batch summary of a sample set.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut s = Self::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn var(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile via nearest-rank (`⌈q/100·n⌉`-th sorted sample); q in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let rank = ((q / 100.0) * n as f64).ceil() as isize - 1;
+        self.samples[rank.clamp(0, n as isize - 1) as usize]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+}
+
+/// Relative difference |a-b| / max(|a|,|b|,eps) — used when comparing measured
+/// ratios against the paper's reported ones.
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    (a - b).abs() / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_of_known_set() {
+        let s = Summary::from_slice(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.var() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Summary::from_slice(&(1..=100).map(|x| x as f64).collect::<Vec<_>>());
+        assert_eq!(s.p50(), 50.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.p99(), 99.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.p50().is_nan());
+    }
+
+    #[test]
+    fn min_max() {
+        let s = Summary::from_slice(&[3.0, -1.0, 7.5]);
+        assert_eq!(s.min(), -1.0);
+        assert_eq!(s.max(), 7.5);
+    }
+
+    #[test]
+    fn rel_diff_symmetric() {
+        assert!(rel_diff(10.0, 11.0) > 0.0);
+        assert_eq!(rel_diff(5.0, 5.0), 0.0);
+        assert!((rel_diff(10.0, 11.0) - rel_diff(11.0, 10.0)).abs() < 1e-15);
+    }
+}

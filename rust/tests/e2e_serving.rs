@@ -1,0 +1,110 @@
+//! End-to-end test: the full three-layer stack — plan (L3 coordinator) →
+//! load AOT artifacts (L2 jax model containing the L1 Pallas kernel) →
+//! serve synthetic camera streams through the dynamic batcher on the PJRT
+//! CPU client — in one process, with assertions on throughput and routing.
+//!
+//! Requires `make artifacts` (skipped gracefully if missing so `cargo test`
+//! stays runnable from a clean checkout).
+
+use camflow::cameras::{camera_at, StreamRequest};
+use camflow::catalog::Catalog;
+use camflow::coordinator::{Planner, PlannerConfig};
+use camflow::geo::cities;
+use camflow::profiles::{Program, Resolution};
+use camflow::server::{serve, ServeConfig};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn requests() -> Vec<StreamRequest> {
+    vec![
+        StreamRequest::new(
+            camera_at(0, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+            Program::Zf,
+            3.0,
+        ),
+        StreamRequest::new(
+            camera_at(1, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+            Program::Zf,
+            2.0,
+        ),
+        StreamRequest::new(
+            camera_at(2, "New York", cities::NEW_YORK, Resolution::VGA, 30.0),
+            Program::Vgg16,
+            1.0,
+        ),
+    ]
+}
+
+#[test]
+fn three_layer_stack_serves_planned_workload() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let requests = requests();
+    let catalog =
+        Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+    let plan = Planner::new(catalog, PlannerConfig::st3()).plan(&requests).unwrap();
+    assert!(!plan.instances.is_empty());
+
+    let cfg = ServeConfig {
+        artifacts_dir: artifacts,
+        duration_s: 8.0,
+        time_scale: 10.0,
+        batch_window_ms: 25,
+        queue_capacity: 128,
+        seed: 13,
+    };
+    let fps = plan.delivered_fps(&requests);
+    let report = serve(&plan, &requests, &fps, &cfg).unwrap();
+
+    // Expected ~ (3+2+1) fps x 8 s = 48 frames.
+    let expected = (fps.iter().sum::<f64>() * cfg.duration_s) as u64;
+    assert!(
+        report.total_frames_analyzed >= expected * 7 / 10,
+        "analyzed {} of ~{expected}",
+        report.total_frames_analyzed
+    );
+    assert!(report.drop_rate() < 0.25, "drop rate {}", report.drop_rate());
+    assert!(report.detections > 0, "detectors returned nothing");
+    // Per-instance accounting adds up.
+    let per_inst: u64 = report.instances.iter().map(|i| i.frames_analyzed).sum();
+    assert_eq!(per_inst, report.total_frames_analyzed);
+    // Latency is recorded and sane (sub-second p99 at this load).
+    for i in &report.instances {
+        if i.frames_analyzed > 0 {
+            assert!(i.e2e_p99_ms > 0.0 && i.e2e_p99_ms < 5_000.0, "{i:?}");
+        }
+    }
+}
+
+#[test]
+fn serving_respects_planned_routing() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    // Two streams, ST1 -> CPU-only plan; both streams on CPU instances.
+    let requests = requests()[..2].to_vec();
+    let catalog =
+        Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+    let plan = Planner::new(catalog, PlannerConfig::st1()).plan(&requests).unwrap();
+    assert!(plan.instances.iter().all(|i| !i.has_gpu));
+
+    let cfg = ServeConfig {
+        artifacts_dir: artifacts,
+        duration_s: 4.0,
+        time_scale: 10.0,
+        batch_window_ms: 20,
+        queue_capacity: 64,
+        seed: 5,
+    };
+    let fps = plan.delivered_fps(&requests);
+    let report = serve(&plan, &requests, &fps, &cfg).unwrap();
+    assert!(report.total_frames_analyzed > 0);
+    assert_eq!(report.instances.len(), plan.instances.len());
+}

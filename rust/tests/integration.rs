@@ -1,0 +1,258 @@
+//! Integration tests over the public API: planner ↔ cloud simulator ↔
+//! runtime ↔ config, plus exact-solver cross-validation against brute force.
+
+use camflow::cameras::{camera_at, scenarios, StreamRequest};
+use camflow::catalog::{Catalog, Dims};
+use camflow::cloudsim::CloudSim;
+use camflow::config::{RunConfig, StrategyName};
+use camflow::coordinator::{Planner, PlannerConfig};
+use camflow::geo::cities;
+use camflow::packing::heuristic::simple_problem;
+use camflow::packing::mcvbp::{solve, SolveOptions};
+use camflow::packing::{Packing, PackedBin};
+use camflow::profiles::{Program, Resolution};
+use camflow::util::Rng;
+
+fn fig3_catalog() -> Catalog {
+    Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]))
+}
+
+#[test]
+fn config_drives_full_planning_pipeline() {
+    for scenario in 1..=3usize {
+        for strategy in [StrategyName::St1, StrategyName::St2, StrategyName::St3] {
+            let cfg = RunConfig { scenario, strategy, ..Default::default() };
+            let requests = cfg.requests().unwrap();
+            let planner = Planner::new(cfg.catalog(), cfg.strategy.to_planner_config());
+            match planner.plan(&requests) {
+                Ok(plan) => {
+                    assert!(plan.cost_per_hour > 0.0);
+                    let assigned: usize = plan.instances.iter().map(|i| i.streams.len()).sum();
+                    assert_eq!(assigned, requests.len());
+                }
+                Err(e) => {
+                    // Only the paper's Fail cell may fail: S3 x ST1.
+                    assert!(
+                        scenario == 3 && strategy == StrategyName::St1,
+                        "unexpected failure {scenario}/{strategy:?}: {e}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_to_cloudsim_billing_consistency() {
+    let planner = Planner::new(fig3_catalog(), PlannerConfig::st3());
+    let scn = scenarios::fig3_scenario1();
+    let plan = planner.plan(&scn.requests).unwrap();
+
+    let mut sim = CloudSim::new(fig3_catalog());
+    let ids = sim.apply_plan(&plan).unwrap();
+    assert_eq!(ids.len(), plan.instances.len());
+    assert!((sim.hourly_rate() - plan.cost_per_hour).abs() < 1e-9);
+
+    sim.advance(7200.0);
+    assert!((sim.accrued_usd() - 2.0 * plan.cost_per_hour).abs() < 1e-9);
+
+    // Utilization stays below the degradation threshold by construction.
+    for id in ids {
+        let inst = sim.get(id).unwrap();
+        assert!(inst.utilization() <= 0.9 + 1e-9, "util {}", inst.utilization());
+        assert_eq!(inst.degradation_factor(), 1.0);
+    }
+}
+
+/// Brute-force optimal packing for tiny single-demand-vector instances.
+fn brute_force_cost(items: &[(f64, f64, usize)], bins: &[(f64, f64, f64)]) -> Option<f64> {
+    // Expand items into individual units.
+    let mut units = Vec::new();
+    for (i, &(c, m, n)) in items.iter().enumerate() {
+        for _ in 0..n {
+            units.push((i, c, m));
+        }
+    }
+    let nu = units.len();
+    assert!(nu <= 7, "brute force limited");
+    // Assign each unit to a bin instance; bins open lazily. Search over
+    // partitions via recursive assignment to at most nu bins x bin types.
+    fn rec(
+        u: usize,
+        units: &[(usize, f64, f64)],
+        bins: &[(f64, f64, f64)],
+        open: &mut Vec<(usize, f64, f64)>, // (type, used cpu, used mem)
+        best: &mut f64,
+        cur: f64,
+    ) {
+        if cur >= *best {
+            return;
+        }
+        if u == units.len() {
+            *best = cur;
+            return;
+        }
+        let (_, c, m) = units[u];
+        for i in 0..open.len() {
+            let (t, uc, um) = open[i];
+            let (bc, bm, _) = bins[t];
+            if uc + c <= 0.9 * bc + 1e-9 && um + m <= 0.9 * bm + 1e-9 {
+                open[i] = (t, uc + c, um + m);
+                rec(u + 1, units, bins, open, best, cur);
+                open[i] = (t, uc, um);
+            }
+        }
+        for (t, &(bc, bm, cost)) in bins.iter().enumerate() {
+            if c <= 0.9 * bc + 1e-9 && m <= 0.9 * bm + 1e-9 {
+                open.push((t, c, m));
+                rec(u + 1, units, bins, open, best, cur + cost);
+                open.pop();
+            }
+        }
+    }
+    let mut best = f64::INFINITY;
+    rec(0, &units, bins, &mut Vec::new(), &mut best, 0.0);
+    best.is_finite().then_some(best)
+}
+
+#[test]
+fn exact_solver_matches_brute_force_on_random_instances() {
+    let mut rng = Rng::new(555);
+    let mut checked = 0;
+    for round in 0..25 {
+        let n_groups = 1 + rng.index(3);
+        let mut items = Vec::new();
+        let mut total = 0usize;
+        for _ in 0..n_groups {
+            let n = 1 + rng.index(3);
+            if total + n > 6 {
+                break;
+            }
+            total += n;
+            items.push((rng.range_f64(0.5, 6.0), rng.range_f64(0.5, 8.0), n));
+        }
+        if items.is_empty() {
+            continue;
+        }
+        let bins = [(8.0, 15.0, 1.0), (16.0, 30.0, 1.7), (4.0, 8.0, 0.55)];
+        let p = simple_problem(&items, &bins);
+        let Ok((packing, _)) = solve(&p, &SolveOptions::default()) else {
+            continue;
+        };
+        let Some(opt) = brute_force_cost(&items, &bins) else {
+            continue;
+        };
+        let got = packing.total_cost(&p);
+        // Quantization may cost at most one grid cell per item per dim; allow
+        // one small-bin step of slack, but never better than optimal.
+        assert!(got >= opt - 1e-9, "round {round}: beat brute force?!");
+        assert!(
+            got <= opt + 0.56,
+            "round {round}: exact {got} far above optimal {opt} (items {items:?})"
+        );
+        checked += 1;
+    }
+    assert!(checked >= 10, "too few instances exercised ({checked})");
+}
+
+#[test]
+fn location_strategies_cost_ordering_holds_across_seeds() {
+    let catalog = Catalog::builtin();
+    for seed in [2, 9, 33] {
+        let requests = scenarios::fig6_workload(18, 2.0, seed);
+        let nl = Planner::new(catalog.clone(), PlannerConfig::nl()).plan(&requests).unwrap();
+        let armvac =
+            Planner::new(catalog.clone(), PlannerConfig::armvac()).plan(&requests).unwrap();
+        let gcl = Planner::new(catalog.clone(), PlannerConfig::gcl()).plan(&requests).unwrap();
+        assert!(gcl.cost_per_hour <= armvac.cost_per_hour + 1e-9, "seed {seed}");
+        assert!(gcl.cost_per_hour <= nl.cost_per_hour + 1e-9, "seed {seed}");
+    }
+}
+
+#[test]
+fn degraded_streams_get_capped_fps() {
+    // A camera far from every region demanding a very high rate.
+    let requests = vec![StreamRequest::new(
+        camera_at(0, "Mexico City", cities::MEXICO_CITY, Resolution::VGA, 60.0),
+        Program::Zf,
+        60.0,
+    )];
+    let planner = Planner::new(Catalog::builtin(), PlannerConfig::gcl());
+    let plan = planner.plan(&requests).unwrap();
+    assert_eq!(plan.degraded, vec![0]);
+    let fps = plan.delivered_fps(&requests);
+    assert!(fps[0] < 60.0, "delivered fps must be capped, got {}", fps[0]);
+    assert!(fps[0] > 0.0);
+}
+
+#[test]
+fn packing_validation_rejects_corrupted_plans() {
+    let p = simple_problem(&[(2.0, 1.0, 2)], &[(8.0, 15.0, 1.0)]);
+    // Overfull bin.
+    let bad = Packing {
+        bins: vec![PackedBin { bin_type: 0, counts: vec![9] }],
+    };
+    assert!(bad.validate(&p).is_err());
+    // Wrong counts length.
+    let bad = Packing {
+        bins: vec![PackedBin { bin_type: 0, counts: vec![1, 1] }],
+    };
+    assert!(bad.validate(&p).is_err());
+}
+
+#[test]
+fn adaptive_manager_full_cycle_with_sim() {
+    let planner = Planner::new(fig3_catalog(), PlannerConfig::st3());
+    let mut mgr = camflow::coordinator::adaptive::AdaptiveManager::new(planner);
+    let mut sim = CloudSim::new(fig3_catalog());
+
+    let mk = |fps: f64| -> Vec<StreamRequest> {
+        (0..4)
+            .map(|i| {
+                StreamRequest::new(
+                    camera_at(i, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0),
+                    Program::Zf,
+                    fps,
+                )
+            })
+            .collect()
+    };
+
+    let mut total_by_hour = Vec::new();
+    for (hour, fps) in [(0, 0.5), (1, 8.0), (2, 8.0), (3, 0.5)] {
+        let _ = hour;
+        mgr.replan(mk(fps)).unwrap();
+        sim.apply_plan(mgr.current_plan().unwrap()).unwrap();
+        sim.advance(3600.0);
+        total_by_hour.push(sim.accrued_usd());
+    }
+    // Rush hours cost more than calm hours.
+    let calm1 = total_by_hour[0];
+    let rush = total_by_hour[2] - total_by_hour[1];
+    let calm2 = total_by_hour[3] - total_by_hour[2];
+    assert!(rush > calm1, "rush {rush} calm {calm1}");
+    assert!((calm2 - calm1).abs() < 1e-6, "calm hours should cost the same");
+}
+
+#[test]
+fn dims_catalog_geo_contract() {
+    // Capacity vectors in the catalog are internally consistent with the
+    // 4-dimensional packing space.
+    let c = Catalog::builtin();
+    for t in &c.types {
+        assert!(t.capacity.vcpus > 0.0);
+        assert!(t.capacity.mem_gib > 0.0);
+        assert_eq!(t.has_gpu(), t.capacity.gpus > 0.0);
+        if t.has_gpu() {
+            assert!(t.capacity.gpu_mem_gib > 0.0);
+            assert!(t.gpu_speed >= 1.0);
+        }
+        let arr = t.capacity.as_array();
+        assert_eq!(Dims::from_array(arr), t.capacity);
+    }
+    // All regions at plausible coordinates.
+    for r in &c.regions {
+        assert!((-60.0..=65.0).contains(&r.location.lat), "{}", r.id);
+        assert!((-180.0..=180.0).contains(&r.location.lon));
+    }
+}

@@ -1,0 +1,241 @@
+//! Property-based tests over coordinator/packing/solver invariants, driven
+//! by the in-crate property harness (`util::proptest`).
+
+use camflow::cameras::{camera_at, StreamRequest};
+use camflow::catalog::{Catalog, Dims};
+use camflow::coordinator::{Planner, PlannerConfig};
+use camflow::geo::{self, cities, GeoPoint};
+use camflow::packing::heuristic::{self, simple_problem};
+use camflow::packing::mcvbp::{solve, SolveOptions};
+use camflow::profiles::{Program, Resolution};
+use camflow::util::json;
+use camflow::util::proptest::check;
+use camflow::util::Rng;
+
+/// Any feasible FFD packing respects headroom, covers every stream exactly
+/// once, and the exact solver never costs more.
+#[test]
+fn prop_packing_invariants() {
+    check(
+        0xFACADE,
+        60,
+        |rng: &mut Rng| {
+            // Flat encoding: triples of (cpu*100, mem*100, count).
+            let groups = 1 + rng.index(4);
+            let mut v = Vec::with_capacity(groups * 3);
+            for _ in 0..groups {
+                v.push((rng.range_f64(0.3, 6.5) * 100.0).round() as u64);
+                v.push((rng.range_f64(0.3, 9.0) * 100.0).round() as u64);
+                v.push(1 + rng.index(5) as u64);
+            }
+            v
+        },
+        |items: &Vec<u64>| {
+            let spec: Vec<(f64, f64, usize)> = items
+                .chunks_exact(3)
+                .filter(|c| c[0] > 0 && c[1] > 0 && c[2] > 0)
+                .map(|c| (c[0] as f64 / 100.0, c[1] as f64 / 100.0, c[2] as usize))
+                .collect();
+            if spec.is_empty() {
+                return Ok(());
+            }
+            let p = simple_problem(
+                &spec,
+                &[(8.0, 15.0, 0.419), (16.0, 30.0, 0.796), (36.0, 60.0, 1.591)],
+            );
+            match heuristic::first_fit_decreasing(&p) {
+                Err(_) => Ok(()), // infeasible is legal for oversized items
+                Ok(ffd) => {
+                    ffd.validate(&p).map_err(|e| format!("ffd invalid: {e}"))?;
+                    if ffd.peak_utilization(&p) > p.headroom + 1e-9 {
+                        return Err("headroom violated".into());
+                    }
+                    let (exact, stats) =
+                        solve(&p, &SolveOptions::default()).map_err(|e| e.to_string())?;
+                    exact.validate(&p).map_err(|e| format!("exact invalid: {e}"))?;
+                    if stats.final_cost > ffd.total_cost(&p) + 1e-9 {
+                        return Err(format!(
+                            "exact {} worse than ffd {}",
+                            stats.final_cost,
+                            ffd.total_cost(&p)
+                        ));
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+/// Plans assign each request exactly once and respect the hardware filter.
+#[test]
+fn prop_plan_assignment_invariants() {
+    let catalog =
+        Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+    check(
+        0xBEEF,
+        25,
+        |rng: &mut Rng| {
+            // Flat encoding: pairs of (is_vgg, fps*100 in the low Fig-3 regime).
+            let n = 1 + rng.index(6);
+            let mut v = Vec::with_capacity(n * 2);
+            for _ in 0..n {
+                v.push(rng.index(2) as u64);
+                v.push((rng.range_f64(0.2, 1.2) * 100.0).round() as u64);
+            }
+            v
+        },
+        |spec: &Vec<u64>| {
+            let requests: Vec<StreamRequest> = spec
+                .chunks_exact(2)
+                .filter(|c| c[1] > 0)
+                .enumerate()
+                .map(|(i, c)| {
+                    StreamRequest::new(
+                        camera_at(i as u64, "Chicago", cities::CHICAGO, Resolution::XGA, 30.0),
+                        if c[0] == 1 { Program::Vgg16 } else { Program::Zf },
+                        c[1] as f64 / 100.0,
+                    )
+                })
+                .collect();
+            if requests.is_empty() {
+                return Ok(());
+            }
+            for cfg in [PlannerConfig::st1(), PlannerConfig::st2(), PlannerConfig::st3()] {
+                let gpu_only = cfg.hardware == camflow::coordinator::HardwareFilter::GpuOnly;
+                let cpu_only = cfg.hardware == camflow::coordinator::HardwareFilter::CpuOnly;
+                let Ok(plan) = Planner::new(catalog.clone(), cfg).plan(&requests) else {
+                    continue;
+                };
+                let mut seen = vec![0usize; requests.len()];
+                for inst in &plan.instances {
+                    if gpu_only && !inst.has_gpu {
+                        return Err("ST2 placed a CPU instance".into());
+                    }
+                    if cpu_only && inst.has_gpu {
+                        return Err("ST1 placed a GPU instance".into());
+                    }
+                    for &s in &inst.streams {
+                        seen[s] += 1;
+                    }
+                }
+                if seen.iter().any(|&c| c != 1) {
+                    return Err(format!("bad assignment multiplicity {seen:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Geo invariants: symmetry, triangle-ish behavior of RTT, circle monotone.
+#[test]
+fn prop_geo_invariants() {
+    check(
+        0x6E0,
+        100,
+        |rng: &mut Rng| {
+            vec![
+                (rng.range_f64(-60.0, 65.0) * 1000.0).round(),
+                (rng.range_f64(-180.0, 180.0) * 1000.0).round(),
+                (rng.range_f64(-60.0, 65.0) * 1000.0).round(),
+                (rng.range_f64(-180.0, 180.0) * 1000.0).round(),
+                (rng.range_f64(0.3, 30.0) * 1000.0).round(),
+            ]
+        },
+        |v| {
+            let a = GeoPoint::new(v[0] / 1000.0, v[1] / 1000.0);
+            let b = GeoPoint::new(v[2] / 1000.0, v[3] / 1000.0);
+            let fps = v[4] / 1000.0;
+            let d1 = a.distance_km(&b);
+            let d2 = b.distance_km(&a);
+            if (d1 - d2).abs() > 1e-6 {
+                return Err("distance asymmetric".into());
+            }
+            if !(0.0..=20040.0).contains(&d1) {
+                return Err(format!("distance out of range: {d1}"));
+            }
+            if a.rtt_ms(&b) < geo::RTT_BASE_MS {
+                return Err("rtt below base".into());
+            }
+            // Reachability is monotone in fps: reachable at high fps implies
+            // reachable at any lower fps.
+            if geo::reachable(&a, &b, fps) && !geo::reachable(&a, &b, fps / 2.0) {
+                return Err("reachability not monotone".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// JSON round-trip for machine-generated values.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> json::Value {
+        match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.bool(0.5)),
+            2 => json::Value::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => json::Value::Str(format!("s{}-é✓", rng.next_u64() % 1000)),
+            4 => json::Value::Arr((0..rng.index(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => json::Value::obj(
+                (0..rng.index(4))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                    .map(|(k, v)| (Box::leak(k.into_boxed_str()) as &str, v))
+                    .collect(),
+            ),
+        }
+    }
+    check(
+        0x15,
+        100,
+        |rng: &mut Rng| vec![rng.next_u64()],
+        |seed| {
+            let mut rng = Rng::new(seed[0]);
+            let v = gen_value(&mut rng, 3);
+            let s = json::to_string_pretty(&v);
+            let back = json::parse(&s).map_err(|e| e.to_string())?;
+            if back != v {
+                return Err(format!("roundtrip mismatch: {s}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Dims arithmetic is componentwise and headroom scaling is linear.
+#[test]
+fn prop_dims_arithmetic() {
+    check(
+        7,
+        100,
+        |rng: &mut Rng| {
+            (0..8)
+                .map(|_| (rng.range_f64(0.0, 50.0) * 10.0).round() / 10.0)
+                .collect::<Vec<f64>>()
+        },
+        |v| {
+            let a = Dims::new(v[0], v[1], v[2], v[3]);
+            let b = Dims::new(v[4], v[5], v[6], v[7]);
+            let sum = a.add(&b);
+            for ((x, y), s) in a
+                .as_array()
+                .iter()
+                .zip(b.as_array())
+                .zip(sum.as_array())
+            {
+                if (x + y - s).abs() > 1e-12 {
+                    return Err("add not componentwise".into());
+                }
+            }
+            if !a.fits_in(&sum) || !b.fits_in(&sum) {
+                return Err("a must fit in a+b".into());
+            }
+            let scaled = a.scale(0.9);
+            if !scaled.fits_in(&a) && !a.is_zero() {
+                return Err("0.9-scaled must fit".into());
+            }
+            Ok(())
+        },
+    );
+}
