@@ -1,8 +1,10 @@
 //! Adaptive resource management over a simulated day (the paper's runtime
 //! adaptation experiment, cf. Kaseb et al. [14]): demand swings between
 //! night (0.2 fps weather watching), day (1 fps), and rush hours (8 fps
-//! object tracking); the manager re-plans hourly and the cloud simulator
-//! bills the fleet.
+//! object tracking); the manager re-plans hourly — incrementally, through
+//! the staged pipeline's persistent caches — and the cloud simulator bills
+//! the fleet. The `reuse` column shows how much of each re-plan was served
+//! from cached stage artifacts.
 //!
 //! Run: `cargo run --release --offline --example adaptive_day`
 
@@ -36,7 +38,8 @@ fn main() -> camflow::Result<()> {
         cs.len()
     });
 
-    let mut t = Table::new(&["hour", "fps", "instances", "$/h", "+prov", "-term", "moved"]);
+    let mut t =
+        Table::new(&["hour", "fps", "instances", "$/h", "+prov", "-term", "moved", "reuse"]);
     let mut peak_rate = 0.0f64;
     for h in 0..24 {
         let fps = fps_for_hour(h);
@@ -54,6 +57,7 @@ fn main() -> camflow::Result<()> {
             report.provision.iter().map(|(_, n)| n).sum::<usize>().to_string(),
             report.terminate.iter().map(|(_, n)| n).sum::<usize>().to_string(),
             report.streams_moved.to_string(),
+            format!("{:.0}%", report.pipeline.reuse_ratio() * 100.0),
         ]);
     }
     t.print();

@@ -1,18 +1,25 @@
 //! Adaptive-manager benchmarks (the runtime-adaptation experiment, [14]):
 //!   * re-plan latency vs fleet size ("these methods can make resource
 //!     decisions quickly and be applied during runtime"),
+//!   * warm-start incremental re-plan vs cold re-plan on a ≤5%-perturbed
+//!     workload (the staged pipeline's reuse path),
 //!   * 24-hour rush-hour simulation: adaptive vs static-peak provisioning
 //!     (the paper's ">50% cost reduction for real workloads" claim).
+//!
+//! Emits `BENCH_adaptive.json` so the perf trajectory is tracked across PRs.
 
 use camflow::bench::{Bench, Table};
-use camflow::cameras::CameraDb;
+use camflow::cameras::{CameraDb, StreamRequest};
 use camflow::catalog::Catalog;
 use camflow::cloudsim::CloudSim;
+use camflow::coordinator::pipeline::ReplanContext;
 use camflow::coordinator::{adaptive::AdaptiveManager, Planner, PlannerConfig};
 use camflow::profiles::Program;
+use camflow::util::json::Value;
+use std::time::Instant;
 
-fn replan_latency() {
-    println!("== Re-plan latency vs fleet size (GCL) ==");
+fn replan_latency(out: &mut Vec<Value>) {
+    println!("== Re-plan latency vs fleet size (GCL, cold) ==");
     let catalog = Catalog::builtin();
     let bench = Bench::new(1, 5);
     let mut t = Table::new(&["cameras", "streams", "plan ms", "instances", "$/h"]);
@@ -31,6 +38,13 @@ fn replan_latency() {
             plan.instances.len().to_string(),
             format!("{:.3}", plan.cost_per_hour),
         ]);
+        out.push(Value::obj(vec![
+            ("cameras", Value::num(n as f64)),
+            ("streams", Value::num(requests.len() as f64)),
+            ("cold_plan_ms", Value::num(timing.mean_ms)),
+            ("instances", Value::num(plan.instances.len() as f64)),
+            ("usd_per_hour", Value::num(plan.cost_per_hour)),
+        ]));
         // "Quickly applied during runtime": stay well under a second at
         // paper scale (tens of cameras), a few seconds at hundreds.
         if n <= 50 {
@@ -40,7 +54,133 @@ fn replan_latency() {
     t.print();
 }
 
-fn day_simulation() {
+/// Perturb ≤5% of the requests: every 20th stream doubles its rate.
+fn perturb(base: &[StreamRequest]) -> Vec<StreamRequest> {
+    base.iter()
+        .enumerate()
+        .map(|(i, r)| {
+            if i % 20 == 0 {
+                StreamRequest::new(r.camera.clone(), r.program, r.desired_fps * 2.0)
+            } else {
+                r.clone()
+            }
+        })
+        .collect()
+}
+
+fn warm_vs_cold(out: &mut Vec<Value>) {
+    println!("\n== Warm incremental vs cold re-plan, ≤5% perturbed workload (GCL) ==");
+    let catalog = Catalog::builtin();
+    let mut t = Table::new(&[
+        "streams", "cold ms", "warm ms", "speedup", "cold $/h", "warm $/h", "reuse",
+    ]);
+    let rounds = 5usize;
+    let mut largest_speedup = 0.0f64;
+    let mut largest_cold_ms = 0.0f64;
+    for &n in &[50usize, 200, 1000] {
+        let db = CameraDb::synthetic(n, 11);
+        let base = db.workload(Program::Zf, 1.0);
+        let perturbed = perturb(&base);
+        let planner = Planner::new(catalog.clone(), PlannerConfig::gcl());
+
+        // Cold: plan the perturbed workload from scratch.
+        let mut cold_ms = 0.0;
+        let mut cold_cost = 0.0;
+        for _ in 0..rounds {
+            let t0 = Instant::now();
+            let plan = planner.plan(&perturbed).unwrap();
+            cold_ms += t0.elapsed().as_secs_f64() * 1000.0;
+            cold_cost = plan.cost_per_hour;
+        }
+        cold_ms /= rounds as f64;
+
+        // Warm: prime the context with the base workload (untimed), then
+        // re-plan the perturbation through the persistent context.
+        let mut warm_ms = 0.0;
+        let mut warm_cost = 0.0;
+        let mut reuse = 0.0;
+        for _ in 0..rounds {
+            let mut ctx = ReplanContext::new();
+            planner.plan_with(&base, &mut ctx).unwrap();
+            let t0 = Instant::now();
+            let plan = planner.plan_with(&perturbed, &mut ctx).unwrap();
+            warm_ms += t0.elapsed().as_secs_f64() * 1000.0;
+            warm_cost = plan.cost_per_hour;
+            reuse = plan.pipeline.reuse_ratio();
+        }
+        warm_ms /= rounds as f64;
+
+        let speedup = cold_ms / warm_ms.max(1e-9);
+        t.row(&[
+            base.len().to_string(),
+            format!("{cold_ms:.1}"),
+            format!("{warm_ms:.1}"),
+            format!("{speedup:.1}x"),
+            format!("{cold_cost:.3}"),
+            format!("{warm_cost:.3}"),
+            format!("{:.0}%", reuse * 100.0),
+        ]);
+        out.push(Value::obj(vec![
+            ("streams", Value::num(base.len() as f64)),
+            ("cold_ms", Value::num(cold_ms)),
+            ("warm_ms", Value::num(warm_ms)),
+            ("speedup", Value::num(speedup)),
+            ("cold_usd_per_hour", Value::num(cold_cost)),
+            ("warm_usd_per_hour", Value::num(warm_cost)),
+            ("reuse_ratio", Value::num(reuse)),
+        ]));
+
+        // At budget-bound scales the exact phase can fall back to heuristics,
+        // where the warm incumbent legitimately *beats* the cold plan; the
+        // invariant is therefore warm <= cold. Bit-equality is asserted on
+        // the paper-scale Fig 6 scenarios below, where exact solves complete.
+        assert!(
+            warm_cost <= cold_cost + 1e-6,
+            "warm re-plan cost {warm_cost} worse than cold {cold_cost} at {n} cameras"
+        );
+        largest_speedup = speedup;
+        largest_cold_ms = cold_ms;
+    }
+    t.print();
+    // The acceptance bar: on the largest workload, where solve time dominates
+    // fixed overheads, the incremental re-plan must be at least 2x faster.
+    if largest_cold_ms >= 5.0 {
+        assert!(
+            largest_speedup >= 2.0,
+            "warm re-plan speedup {largest_speedup:.2}x < 2x at the largest size"
+        );
+    }
+}
+
+fn fig6_warm_cost_parity(out: &mut Vec<Value>) {
+    println!("\n== Fig 6 scenarios: warm re-plan cost == cold cost ==");
+    use camflow::cameras::scenarios;
+    let catalog = Catalog::builtin();
+    let mut checked = 0usize;
+    for fps in [0.5, 2.0, 8.0] {
+        let requests = scenarios::fig6_workload(24, fps, 5);
+        let planner = Planner::new(catalog.clone(), PlannerConfig::gcl());
+        let cold = planner.plan(&requests).unwrap();
+        let mut ctx = ReplanContext::new();
+        planner.plan_with(&requests, &mut ctx).unwrap();
+        let warm = planner.plan_with(&requests, &mut ctx).unwrap();
+        assert!(
+            (warm.cost_per_hour - cold.cost_per_hour).abs() < 1e-9,
+            "fig6 fps={fps}: warm {} != cold {}",
+            warm.cost_per_hour,
+            cold.cost_per_hour
+        );
+        checked += 1;
+        out.push(Value::obj(vec![
+            ("fps", Value::num(fps)),
+            ("cold_usd_per_hour", Value::num(cold.cost_per_hour)),
+            ("warm_usd_per_hour", Value::num(warm.cost_per_hour)),
+        ]));
+    }
+    println!("cost parity holds on {checked} Fig 6 workloads");
+}
+
+fn day_simulation(out: &mut Vec<(&'static str, Value)>) {
     println!("\n== 24 h adaptive vs static-peak provisioning ==");
     let catalog = Catalog::builtin();
     let planner = Planner::new(catalog.clone(), PlannerConfig::gcl());
@@ -50,6 +190,7 @@ fn day_simulation() {
 
     let mut peak = 0.0f64;
     let mut moved_total = 0usize;
+    let t0 = Instant::now();
     for h in 0..24 {
         let fps = match h % 24 {
             7..=9 | 16..=18 => 8.0,
@@ -63,18 +204,49 @@ fn day_simulation() {
         sim.advance(3600.0);
         peak = peak.max(plan.cost_per_hour);
     }
+    let day_ms = t0.elapsed().as_secs_f64() * 1000.0;
     let adaptive = sim.accrued_usd();
     let static_peak = peak * 24.0;
     let saving = 1.0 - adaptive / static_peak;
     println!(
-        "adaptive: ${adaptive:.2}  static-peak: ${static_peak:.2}  saving: {:.0}%  streams moved: {moved_total}",
+        "adaptive: ${adaptive:.2}  static-peak: ${static_peak:.2}  saving: {:.0}%  streams moved: {moved_total}  ({day_ms:.0} ms for 24 warm re-plans)",
         saving * 100.0
     );
     assert!(saving > 0.5, "paper claims >50% cost reduction for real (varying) workloads");
+    out.push((
+        "day_simulation",
+        Value::obj(vec![
+            ("adaptive_usd", Value::num(adaptive)),
+            ("static_peak_usd", Value::num(static_peak)),
+            ("saving", Value::num(saving)),
+            ("streams_moved", Value::num(moved_total as f64)),
+            ("total_replan_ms", Value::num(day_ms)),
+        ]),
+    ));
 }
 
 fn main() {
-    replan_latency();
-    day_simulation();
+    let mut latency = Vec::new();
+    let mut warm = Vec::new();
+    let mut fig6 = Vec::new();
+    let mut extra = Vec::new();
+
+    replan_latency(&mut latency);
+    warm_vs_cold(&mut warm);
+    fig6_warm_cost_parity(&mut fig6);
+    day_simulation(&mut extra);
+
+    let mut pairs = vec![
+        ("bench", Value::str("adaptive")),
+        ("replan_latency", Value::arr(latency)),
+        ("warm_vs_cold", Value::arr(warm)),
+        ("fig6_cost_parity", Value::arr(fig6)),
+    ];
+    pairs.extend(extra);
+    let doc = Value::obj(pairs);
+    let path = "BENCH_adaptive.json";
+    std::fs::write(path, camflow::util::json::to_string_pretty(&doc))
+        .expect("write BENCH_adaptive.json");
+    println!("\nwrote {path}");
     println!("\nbench_adaptive OK");
 }

@@ -77,6 +77,10 @@ pub struct CloudSim {
     clock_s: f64,
     next_id: InstanceId,
     instances: Vec<SimInstance>,
+    /// id → index into `instances`: long-running adaptive simulations
+    /// accumulate an unbounded terminated-instance history, so per-id
+    /// lookups must not scan it.
+    by_id: std::collections::BTreeMap<InstanceId, usize>,
     accrued_usd: f64,
 }
 
@@ -88,6 +92,7 @@ impl CloudSim {
             clock_s: 0.0,
             next_id: 0,
             instances: Vec::new(),
+            by_id: std::collections::BTreeMap::new(),
             accrued_usd: 0.0,
         }
     }
@@ -122,6 +127,7 @@ impl CloudSim {
         let rg = &self.catalog.regions[region_idx];
         let id = self.next_id;
         self.next_id += 1;
+        self.by_id.insert(id, self.instances.len());
         self.instances.push(SimInstance {
             id,
             type_idx,
@@ -137,30 +143,31 @@ impl CloudSim {
         Ok(id)
     }
 
+    /// The instance with `id` iff it is alive.
+    fn get_alive_mut(&mut self, id: InstanceId) -> Result<&mut SimInstance> {
+        let idx = self.by_id.get(&id).copied();
+        match idx {
+            Some(i) if self.instances[i].alive() => Ok(&mut self.instances[i]),
+            _ => Err(Error::config(format!("instance {id} not alive"))),
+        }
+    }
+
     pub fn terminate(&mut self, id: InstanceId) -> Result<()> {
         let now = self.clock_s;
-        let inst = self
-            .instances
-            .iter_mut()
-            .find(|i| i.id == id && i.alive())
-            .ok_or_else(|| Error::config(format!("instance {id} not alive")))?;
+        let inst = self.get_alive_mut(id)?;
         inst.terminated_at = Some(now);
         inst.load = Dims::default();
         Ok(())
     }
 
     pub fn set_load(&mut self, id: InstanceId, load: Dims) -> Result<()> {
-        let inst = self
-            .instances
-            .iter_mut()
-            .find(|i| i.id == id && i.alive())
-            .ok_or_else(|| Error::config(format!("instance {id} not alive")))?;
+        let inst = self.get_alive_mut(id)?;
         inst.load = load;
         Ok(())
     }
 
     pub fn get(&self, id: InstanceId) -> Option<&SimInstance> {
-        self.instances.iter().find(|i| i.id == id)
+        self.by_id.get(&id).map(|&idx| &self.instances[idx])
     }
 
     pub fn alive(&self) -> Vec<&SimInstance> {

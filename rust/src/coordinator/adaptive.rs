@@ -1,13 +1,19 @@
 //! Adaptive resource management ("the resource manager is dynamic and its
 //! decisions may change over time because the demands may vary").
 //!
-//! The manager keeps the current plan; when the workload changes (rush-hour
-//! frame-rate increases, cameras joining/leaving, program swaps) it re-plans
-//! and computes the **migration diff**: which instances to keep, provision,
-//! terminate, and which streams move. Re-plan latency is benchmarked in
-//! `bench_adaptive` (the paper: "These methods can make resource decisions
-//! quickly and be applied during runtime", cf. Kaseb et al. \[14\]).
+//! The manager keeps the current plan **and** a persistent
+//! [`ReplanContext`]: when the workload changes (rush-hour frame-rate
+//! increases, cameras joining/leaving, program swaps) it re-plans
+//! *incrementally* — unchanged cameras keep their cached eligibility masks
+//! and demand vectors, unchanged region clusters reuse their arc-flow
+//! graphs, and the previous packing seeds branch-and-bound as the incumbent
+//! instead of the cold FFD start — then computes the **migration diff**:
+//! which instances to keep, provision, terminate, and which streams move.
+//! Warm vs cold re-plan latency is benchmarked in `bench_adaptive` (the
+//! paper: "These methods can make resource decisions quickly and be applied
+//! during runtime", cf. Kaseb et al. \[14\]).
 
+use super::pipeline::{PipelineStats, ReplanContext};
 use super::{Plan, Planner};
 use crate::cameras::StreamRequest;
 use crate::error::Result;
@@ -26,6 +32,9 @@ pub struct MigrationReport {
     /// Hourly cost before/after.
     pub cost_before: f64,
     pub cost_after: f64,
+    /// Pipeline telemetry of the re-plan (cache reuse, warm start,
+    /// decomposition width).
+    pub pipeline: PipelineStats,
 }
 
 impl MigrationReport {
@@ -59,15 +68,26 @@ fn stream_hosts(
     m
 }
 
-/// The adaptive manager: owns the current plan and re-plans on demand drift.
+/// The adaptive manager: owns the current plan, the persistent pipeline
+/// context, and re-plans on demand drift.
 pub struct AdaptiveManager {
     pub planner: Planner,
     pub current: Option<(Vec<StreamRequest>, Plan)>,
+    /// Persistent stage caches + previous solution for warm re-plans.
+    pub ctx: ReplanContext,
+    /// When false, every re-plan runs cold (fresh context) — the A/B lever
+    /// used by `bench_adaptive` and `camflow simulate --cold`.
+    pub warm: bool,
 }
 
 impl AdaptiveManager {
     pub fn new(planner: Planner) -> Self {
-        AdaptiveManager { planner, current: None }
+        AdaptiveManager { planner, current: None, ctx: ReplanContext::new(), warm: true }
+    }
+
+    /// A manager that re-plans from scratch every time (the seed behaviour).
+    pub fn cold(planner: Planner) -> Self {
+        AdaptiveManager { warm: false, ..AdaptiveManager::new(planner) }
     }
 
     pub fn current_plan(&self) -> Option<&Plan> {
@@ -76,9 +96,14 @@ impl AdaptiveManager {
 
     /// Re-plan for a new workload; returns the migration diff.
     pub fn replan(&mut self, requests: Vec<StreamRequest>) -> Result<MigrationReport> {
-        let new_plan = self.planner.plan(&requests)?;
+        let new_plan = if self.warm {
+            self.planner.plan_with(&requests, &mut self.ctx)?
+        } else {
+            self.planner.plan(&requests)?
+        };
         let mut report = MigrationReport {
             cost_after: new_plan.cost_per_hour,
+            pipeline: new_plan.pipeline.clone(),
             ..Default::default()
         };
 
@@ -156,6 +181,7 @@ mod tests {
         assert!(report.terminate.is_empty());
         assert_eq!(report.cost_before, 0.0);
         assert!(report.cost_after > 0.0);
+        assert!(!report.pipeline.warm_started, "first plan has no seed");
     }
 
     #[test]
@@ -184,6 +210,8 @@ mod tests {
         assert!(report.provision.is_empty(), "{report:?}");
         assert!(report.terminate.is_empty(), "{report:?}");
         assert_eq!(report.cost_delta(), 0.0);
+        assert!(report.pipeline.warm_started, "second re-plan must warm-start");
+        assert!(report.pipeline.elig_cache_hits > 0);
     }
 
     #[test]
@@ -193,5 +221,19 @@ mod tests {
         let report = mgr.replan(workload(8.0, 2)).unwrap();
         assert!(report.cost_delta() < 0.0);
         assert!(!report.terminate.is_empty());
+    }
+
+    #[test]
+    fn warm_and_cold_managers_agree_over_a_demand_swing() {
+        let mut warm = AdaptiveManager::new(planner());
+        let mut cold = AdaptiveManager::cold(planner());
+        for fps in [0.5, 8.0, 8.0, 1.0, 0.5] {
+            let w = warm.replan(workload(fps, 5)).unwrap();
+            let c = cold.replan(workload(fps, 5)).unwrap();
+            assert!(
+                (w.cost_after - c.cost_after).abs() < 1e-9,
+                "warm {w:?} diverged from cold {c:?} at {fps} fps"
+            );
+        }
     }
 }

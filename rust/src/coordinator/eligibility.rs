@@ -1,0 +1,230 @@
+//! Pipeline stage 1 — **Eligibility**: derive each request's eligible-region
+//! mask from the RTT/frame-rate coupling (Fig 4: the coverage circle around
+//! each camera) and coalesce identical requests into [`ItemGroup`]-shaped
+//! groups.
+//!
+//! The stage's artifact is a [`GroupSet`]; per-request eligibility results
+//! are memoized in an [`EligCache`] owned by the caller's
+//! [`PlanContext`](super::pipeline::PlanContext) — a camera that has not
+//! moved and still requests the same rate never recomputes its coverage
+//! circle across re-plans.
+//!
+//! [`ItemGroup`]: crate::packing::ItemGroup
+
+use super::LocationPolicy;
+use crate::cameras::StreamRequest;
+use crate::catalog::Catalog;
+use crate::geo;
+use crate::profiles::{Program, Resolution};
+use std::collections::HashMap;
+
+/// Identity of a stream group: requests with equal keys are interchangeable
+/// for the packing problem (same program, rate, resolution, and
+/// eligible-region mask), so they share one demand vector.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct GroupKey {
+    pub program: Program,
+    /// Desired fps in milli-fps (rounded), making the key hashable.
+    pub fps_milli: u64,
+    pub res: Resolution,
+    /// Eligible-region bitmask over `catalog.regions`.
+    pub mask: Vec<bool>,
+    /// True if no region satisfies the RTT budget (best-effort nearest
+    /// region at a capped rate).
+    pub degraded: bool,
+}
+
+/// Stage-1 artifact: the request grouping plus degraded-request indices.
+#[derive(Clone, Debug, Default)]
+pub struct GroupSet {
+    /// One key per group, in first-seen request order.
+    pub keys: Vec<GroupKey>,
+    /// `members[g]` = indices (into the request slice) of group `g`.
+    pub members: Vec<Vec<usize>>,
+    /// Requests that could not meet their desired fps from any eligible
+    /// region, in request order.
+    pub degraded: Vec<usize>,
+}
+
+/// Memo of per-request eligibility: (lat bits, lon bits, fps bits) →
+/// (mask, degraded). Valid for one (catalog, location policy) pair — the
+/// owning `PlanContext` clears it when either changes.
+pub type EligCache = HashMap<(u64, u64, u64), (Vec<bool>, bool)>;
+
+/// Stage output: the grouping plus cache telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct EligibilityOutcome {
+    pub groups: GroupSet,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+}
+
+/// Compute the eligible-region bitmask for one request, plus the degraded
+/// flag (no region inside the coverage circle).
+pub fn eligibility(
+    catalog: &Catalog,
+    policy: LocationPolicy,
+    req: &StreamRequest,
+) -> (Vec<bool>, bool) {
+    let n = catalog.regions.len();
+    match policy {
+        LocationPolicy::Unrestricted => (vec![true; n], false),
+        LocationPolicy::NearestOnly => {
+            // Nearest data center of each vendor (a camera operator can
+            // pick either provider's closest region).
+            let nearest = nearest_regions_per_vendor(catalog, req);
+            let mut mask = vec![false; n];
+            let mut any_ok = false;
+            for &r in &nearest {
+                mask[r] = true;
+                any_ok |= geo::reachable(
+                    &req.camera.location,
+                    &catalog.regions[r].location,
+                    req.desired_fps,
+                );
+            }
+            (mask, !any_ok)
+        }
+        LocationPolicy::RttFiltered => {
+            let mut mask: Vec<bool> = catalog
+                .regions
+                .iter()
+                .map(|r| geo::reachable(&req.camera.location, &r.location, req.desired_fps))
+                .collect();
+            if mask.iter().any(|&m| m) {
+                (mask, false)
+            } else {
+                // Best effort: nearest regions, degraded fps.
+                mask = vec![false; n];
+                for r in nearest_regions_per_vendor(catalog, req) {
+                    mask[r] = true;
+                }
+                (mask, true)
+            }
+        }
+    }
+}
+
+/// Nearest region of each vendor present in the catalog.
+pub fn nearest_regions_per_vendor(catalog: &Catalog, req: &StreamRequest) -> Vec<usize> {
+    let mut best: std::collections::BTreeMap<&'static str, (usize, f64)> =
+        std::collections::BTreeMap::new();
+    for (i, r) in catalog.regions.iter().enumerate() {
+        let d = req.camera.location.distance_km(&r.location);
+        let key = match r.vendor {
+            crate::catalog::Vendor::Ec2 => "ec2",
+            crate::catalog::Vendor::Azure => "azure",
+        };
+        let e = best.entry(key).or_insert((i, d));
+        if d < e.1 {
+            *e = (i, d);
+        }
+    }
+    best.values().map(|&(i, _)| i).collect()
+}
+
+/// Run the stage: eligibility (memoized) + grouping.
+pub fn run(
+    catalog: &Catalog,
+    policy: LocationPolicy,
+    requests: &[StreamRequest],
+    cache: &mut EligCache,
+) -> EligibilityOutcome {
+    let mut out = EligibilityOutcome::default();
+    let mut index: HashMap<GroupKey, usize> = HashMap::new();
+    for (i, req) in requests.iter().enumerate() {
+        let memo_key = (
+            req.camera.location.lat.to_bits(),
+            req.camera.location.lon.to_bits(),
+            req.desired_fps.to_bits(),
+        );
+        let (mask, degraded) = match cache.get(&memo_key) {
+            Some(hit) => {
+                out.cache_hits += 1;
+                hit.clone()
+            }
+            None => {
+                out.cache_misses += 1;
+                let fresh = eligibility(catalog, policy, req);
+                cache.insert(memo_key, fresh.clone());
+                fresh
+            }
+        };
+        if degraded {
+            out.groups.degraded.push(i);
+        }
+        let key = GroupKey {
+            program: req.program,
+            fps_milli: (req.desired_fps * 1000.0).round() as u64,
+            res: req.camera.resolution,
+            mask,
+            degraded,
+        };
+        match index.get(&key) {
+            Some(&g) => out.groups.members[g].push(i),
+            None => {
+                let g = out.groups.keys.len();
+                index.insert(key.clone(), g);
+                out.groups.keys.push(key);
+                out.groups.members.push(vec![i]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cameras::camera_at;
+    use crate::geo::cities;
+
+    fn req(id: u64, city: crate::geo::GeoPoint, fps: f64) -> StreamRequest {
+        StreamRequest::new(
+            camera_at(id, "c", city, Resolution::VGA, 30.0),
+            Program::Zf,
+            fps,
+        )
+    }
+
+    #[test]
+    fn unrestricted_masks_everything() {
+        let catalog = Catalog::builtin();
+        let (mask, degraded) =
+            eligibility(&catalog, LocationPolicy::Unrestricted, &req(0, cities::CHICAGO, 1.0));
+        assert!(mask.iter().all(|&m| m));
+        assert!(!degraded);
+    }
+
+    #[test]
+    fn grouping_coalesces_identical_requests() {
+        let catalog = Catalog::builtin();
+        let requests = vec![
+            req(0, cities::CHICAGO, 1.0),
+            req(1, cities::CHICAGO, 1.0),
+            req(2, cities::CHICAGO, 2.0),
+        ];
+        let mut cache = EligCache::new();
+        let out = run(&catalog, LocationPolicy::RttFiltered, &requests, &mut cache);
+        assert_eq!(out.groups.keys.len(), 2);
+        assert_eq!(out.groups.members[0], vec![0, 1]);
+        assert_eq!(out.groups.members[1], vec![2]);
+        // Same-location same-fps requests hit the memo.
+        assert_eq!((out.cache_hits, out.cache_misses), (1, 2));
+        // A second run over the same workload is all hits.
+        let again = run(&catalog, LocationPolicy::RttFiltered, &requests, &mut cache);
+        assert_eq!((again.cache_hits, again.cache_misses), (3, 0));
+        assert_eq!(again.groups.keys, out.groups.keys);
+    }
+
+    #[test]
+    fn far_camera_at_high_fps_degrades_to_nearest() {
+        let catalog = Catalog::builtin();
+        let mut cache = EligCache::new();
+        let requests = vec![req(0, cities::MEXICO_CITY, 60.0)];
+        let out = run(&catalog, LocationPolicy::RttFiltered, &requests, &mut cache);
+        assert_eq!(out.groups.degraded, vec![0]);
+        assert!(out.groups.keys[0].degraded);
+        assert!(out.groups.keys[0].mask.iter().any(|&m| m), "nearest fallback");
+    }
+}

@@ -1,0 +1,99 @@
+//! Pipeline stage 4 — **Expand**: turn the solved packing's per-group counts
+//! into per-instance stream assignments for the serving layer.
+//!
+//! Purely mechanical: each packed bin becomes one [`PlannedInstance`]; group
+//! counts are drawn from the group membership queues in request order, so
+//! the expansion is deterministic given (packing, members).
+
+use super::PlannedInstance;
+use crate::error::{Error, Result};
+use crate::packing::{Packing, PackingProblem};
+
+/// Expand group counts into per-instance stream lists.
+pub fn run(
+    problem: &PackingProblem,
+    packing: &Packing,
+    members: &[Vec<usize>],
+) -> Result<Vec<PlannedInstance>> {
+    let mut unassigned: Vec<std::collections::VecDeque<usize>> = members
+        .iter()
+        .map(|m| m.iter().copied().collect())
+        .collect();
+    let mut instances = Vec::with_capacity(packing.bins.len());
+    for bin in &packing.bins {
+        let bt = &problem.bins[bin.bin_type];
+        let mut streams = Vec::new();
+        for (g, &c) in bin.counts.iter().enumerate() {
+            for _ in 0..c {
+                let idx = unassigned[g]
+                    .pop_front()
+                    .ok_or_else(|| Error::solver("packing/member mismatch"))?;
+                streams.push(idx);
+            }
+        }
+        instances.push(PlannedInstance {
+            bin_type: bin.bin_type,
+            type_idx: bt.type_idx,
+            region_idx: bt.region_idx,
+            label: bt.label.clone(),
+            hourly_cost: bt.cost,
+            has_gpu: bt.has_gpu,
+            streams,
+        });
+    }
+    debug_assert!(unassigned.iter().all(|q| q.is_empty()));
+    Ok(instances)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::Dims;
+    use crate::packing::{BinType, ItemGroup, PackedBin};
+
+    fn tiny_problem() -> PackingProblem {
+        PackingProblem::new(
+            vec![ItemGroup {
+                label: "g".into(),
+                count: 3,
+                demand_per_bin: vec![Some(Dims::new(1.0, 1.0, 0.0, 0.0))],
+            }],
+            vec![BinType {
+                label: "cpu@r".into(),
+                capacity: Dims::new(8.0, 15.0, 0.0, 0.0),
+                cost: 1.0,
+                type_idx: 4,
+                region_idx: 2,
+                has_gpu: false,
+            }],
+        )
+    }
+
+    #[test]
+    fn expansion_assigns_members_in_request_order() {
+        let problem = tiny_problem();
+        let packing = Packing {
+            bins: vec![
+                PackedBin { bin_type: 0, counts: vec![2] },
+                PackedBin { bin_type: 0, counts: vec![1] },
+            ],
+        };
+        let members = vec![vec![7, 9, 11]];
+        let instances = run(&problem, &packing, &members).unwrap();
+        assert_eq!(instances.len(), 2);
+        assert_eq!(instances[0].streams, vec![7, 9]);
+        assert_eq!(instances[1].streams, vec![11]);
+        assert_eq!(instances[0].type_idx, 4);
+        assert_eq!(instances[0].region_idx, 2);
+    }
+
+    #[test]
+    fn count_overrun_is_an_error() {
+        let problem = tiny_problem();
+        let packing = Packing {
+            bins: vec![PackedBin { bin_type: 0, counts: vec![4] }],
+        };
+        let members = vec![vec![0, 1, 2]];
+        assert!(run(&problem, &packing, &members).is_err());
+    }
+}

@@ -1,31 +1,42 @@
 //! The resource manager — the paper's contribution.
 //!
-//! Given a set of [`StreamRequest`]s (camera × analysis program × desired
-//! fps), a [`Catalog`] of priced instance offerings, and the program
-//! [`profiles`](crate::profiles), the planner:
+//! Planning runs as an explicit staged pipeline (see [`pipeline`]):
 //!
-//! 1. derives each stream's **eligible locations** from the RTT/frame-rate
-//!    coupling (Fig 4: the coverage circle around each camera),
-//! 2. builds the **multi-dimensional multiple-choice packing problem**
-//!    (streams = boxes with CPU-path and GPU-path demand vectors; offerings
-//!    = trucks), applying the 90% utilization headroom rule,
-//! 3. solves it with the configured strategy:
+//! 1. [`eligibility`] — derive each stream's **eligible locations** from the
+//!    RTT/frame-rate coupling (Fig 4: the coverage circle around each
+//!    camera) and group identical requests,
+//! 2. [`pipeline`]'s ProblemBuild stage — build the **multi-dimensional
+//!    multiple-choice packing problem** (streams = boxes with CPU-path and
+//!    GPU-path demand vectors; offerings = trucks), applying the 90%
+//!    utilization headroom rule,
+//! 3. [`pipeline`]'s Solve stage — decompose into independent per-region
+//!    subproblems, solve each in parallel with the configured strategy:
 //!    * hardware filter — ST1 (CPU-only), ST2 (GPU-only), ST3 (both,
 //!      Kaseb et al. \[7\]),
 //!    * location policy — NL (nearest location), ARMVAC (RTT filter +
 //!      cheapest-fill, Mohan et al. \[6\]), GCL (RTT filter + exact arc-flow
 //!      packing, Mohan et al. \[8\]),
-//! 4. expands the packing into per-instance stream assignments for the
-//!    serving layer.
+//! 4. [`expand`] — expand the packing into per-instance stream assignments
+//!    for the serving layer.
+//!
+//! Each stage's artifact is cached in a [`pipeline::PlanContext`], so the
+//! dynamic manager ([`adaptive`]) re-plans incrementally: unchanged cameras
+//! keep their eligibility masks and demand vectors, unchanged region
+//! clusters keep their arc-flow graphs, and the previous packing seeds
+//! branch-and-bound as the incumbent instead of a cold FFD start.
 
 pub mod adaptive;
+pub mod eligibility;
+pub mod expand;
+pub mod pipeline;
 
 use crate::cameras::StreamRequest;
 use crate::catalog::Catalog;
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::geo;
-use crate::packing::mcvbp::{self, SolveMethod, SolveOptions};
-use crate::packing::{heuristic, BinType, ItemGroup, Packing, PackingProblem};
+use crate::packing::mcvbp::{SolveMethod, SolveOptions};
+use crate::packing::{Packing, PackingProblem};
+use pipeline::{PipelineStats, PlanContext, ReplanContext};
 
 /// ST1 / ST2 / ST3 hardware filters (Fig 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,6 +81,8 @@ pub struct PlannerConfig {
     /// Per-dimension utilization cap (paper: 0.90).
     pub headroom: f64,
     pub solve_opts: SolveOptions,
+    /// Solve independent per-region subproblems on parallel threads.
+    pub parallel_regions: bool,
 }
 
 impl PlannerConfig {
@@ -80,6 +93,7 @@ impl PlannerConfig {
             solver,
             headroom: crate::packing::DEFAULT_HEADROOM,
             solve_opts: SolveOptions::default(),
+            parallel_regions: true,
         }
     }
 
@@ -140,6 +154,8 @@ pub struct Plan {
     pub method: SolveMethod,
     /// Region coordinates (from the catalog) for delivered-fps accounting.
     pub region_locations: Vec<geo::GeoPoint>,
+    /// Pipeline telemetry: stage-cache reuse, decomposition, warm start.
+    pub pipeline: PipelineStats,
 }
 
 impl Plan {
@@ -188,193 +204,18 @@ impl Planner {
         Planner { catalog, config }
     }
 
-    /// Compute the eligible-region bitmask for one request, plus the
-    /// degraded flag (no region inside the coverage circle).
-    fn eligibility(&self, req: &StreamRequest) -> (Vec<bool>, bool) {
-        let n = self.catalog.regions.len();
-        match self.config.location {
-            LocationPolicy::Unrestricted => (vec![true; n], false),
-            LocationPolicy::NearestOnly => {
-                // Nearest data center of each vendor (a camera operator can
-                // pick either provider's closest region).
-                let nearest = self.nearest_regions_per_vendor(req);
-                let mut mask = vec![false; n];
-                let mut any_ok = false;
-                for &r in &nearest {
-                    mask[r] = true;
-                    any_ok |= geo::reachable(
-                        &req.camera.location,
-                        &self.catalog.regions[r].location,
-                        req.desired_fps,
-                    );
-                }
-                (mask, !any_ok)
-            }
-            LocationPolicy::RttFiltered => {
-                let mut mask: Vec<bool> = self
-                    .catalog
-                    .regions
-                    .iter()
-                    .map(|r| geo::reachable(&req.camera.location, &r.location, req.desired_fps))
-                    .collect();
-                if mask.iter().any(|&m| m) {
-                    (mask, false)
-                } else {
-                    // Best effort: nearest regions, degraded fps.
-                    mask = vec![false; n];
-                    for r in self.nearest_regions_per_vendor(req) {
-                        mask[r] = true;
-                    }
-                    (mask, true)
-                }
-            }
-        }
-    }
-
-    /// Nearest region of each vendor present in the catalog.
-    fn nearest_regions_per_vendor(&self, req: &StreamRequest) -> Vec<usize> {
-        let mut best: std::collections::BTreeMap<&'static str, (usize, f64)> =
-            std::collections::BTreeMap::new();
-        for (i, r) in self.catalog.regions.iter().enumerate() {
-            let d = req.camera.location.distance_km(&r.location);
-            let key = match r.vendor {
-                crate::catalog::Vendor::Ec2 => "ec2",
-                crate::catalog::Vendor::Azure => "azure",
-            };
-            let e = best.entry(key).or_insert((i, d));
-            if d < e.1 {
-                *e = (i, d);
-            }
-        }
-        best.values().map(|&(i, _)| i).collect()
-    }
-
     /// Build the packing problem. Returns (problem, group members, degraded).
+    ///
+    /// Compatibility wrapper over the pipeline's Eligibility + ProblemBuild
+    /// stages with a throwaway context.
     pub fn build_problem(
         &self,
         requests: &[StreamRequest],
     ) -> Result<(PackingProblem, Vec<Vec<usize>>, Vec<usize>)> {
-        if requests.is_empty() {
-            return Err(Error::config("no stream requests"));
-        }
-        // Bin types: offerings passing the hardware filter.
-        let bins: Vec<BinType> = self
-            .catalog
-            .offerings
-            .iter()
-            .filter(|o| {
-                let has_gpu = self.catalog.types[o.type_idx].has_gpu();
-                match self.config.hardware {
-                    HardwareFilter::CpuOnly => !has_gpu,
-                    HardwareFilter::GpuOnly => has_gpu,
-                    HardwareFilter::Both => true,
-                }
-            })
-            .map(|o| {
-                let ty = &self.catalog.types[o.type_idx];
-                let rg = &self.catalog.regions[o.region_idx];
-                BinType {
-                    label: format!("{}@{}", ty.name, rg.id),
-                    capacity: ty.capacity,
-                    cost: o.hourly_usd,
-                    type_idx: o.type_idx,
-                    region_idx: o.region_idx,
-                    has_gpu: ty.has_gpu(),
-                }
-            })
-            .collect();
-        if bins.is_empty() {
-            return Err(Error::infeasible("no instance offerings pass the hardware filter"));
-        }
-
-        // Group requests by (program, fps, resolution, eligibility mask).
-        struct Key {
-            program: crate::profiles::Program,
-            fps_milli: u64,
-            res: crate::profiles::Resolution,
-            mask: Vec<bool>,
-            degraded: bool,
-        }
-        let mut keys: Vec<Key> = Vec::new();
-        let mut members: Vec<Vec<usize>> = Vec::new();
-        let mut degraded_requests: Vec<usize> = Vec::new();
-        for (i, req) in requests.iter().enumerate() {
-            let (mask, degraded) = self.eligibility(req);
-            if degraded {
-                degraded_requests.push(i);
-            }
-            let fps_milli = (req.desired_fps * 1000.0).round() as u64;
-            let pos = keys.iter().position(|k| {
-                k.program == req.program
-                    && k.fps_milli == fps_milli
-                    && k.res == req.camera.resolution
-                    && k.mask == mask
-                    && k.degraded == degraded
-            });
-            match pos {
-                Some(g) => members[g].push(i),
-                None => {
-                    keys.push(Key {
-                        program: req.program,
-                        fps_milli,
-                        res: req.camera.resolution,
-                        mask,
-                        degraded,
-                    });
-                    members.push(vec![i]);
-                }
-            }
-        }
-
-        // Demand vectors per (group, bin type).
-        let items: Vec<ItemGroup> = keys
-            .iter()
-            .zip(&members)
-            .map(|(key, mem)| {
-                let profile = key.program.profile();
-                let rep = &requests[mem[0]];
-                let demand_per_bin = bins
-                    .iter()
-                    .map(|b| {
-                        if !key.mask[b.region_idx] {
-                            return None;
-                        }
-                        // Delivered fps: capped by the region's RTT when the
-                        // stream is degraded (best-effort nearest region).
-                        let fps = if key.degraded {
-                            let rtt = rep
-                                .camera
-                                .location
-                                .rtt_ms(&self.catalog.regions[b.region_idx].location);
-                            geo::fps_cap(rtt).min(rep.desired_fps)
-                        } else {
-                            rep.desired_fps
-                        };
-                        Some(if b.has_gpu {
-                            // Newer GPU generations (g3/p3-class) process the
-                            // same stream in proportionally less GPU time.
-                            let mut d = profile.demand_gpu(fps, key.res);
-                            d.gpus /= self.catalog.types[b.type_idx].gpu_speed;
-                            d
-                        } else {
-                            profile.demand_cpu(fps, key.res)
-                        })
-                    })
-                    .collect();
-                ItemGroup {
-                    label: format!("{}x{}", rep.label(), mem.len()),
-                    count: mem.len(),
-                    demand_per_bin,
-                }
-            })
-            .collect();
-
-        let mut problem = PackingProblem::new(items, bins);
-        problem.headroom = self.config.headroom;
-        Ok((problem, members, degraded_requests))
+        pipeline::build_problem(&self.catalog, &self.config, requests)
     }
 
-    /// Produce a full plan for the request set.
+    /// Produce a full plan for the request set (cold start: no reuse).
     ///
     /// For the GCL configuration (RTT-filtered + exact), the NL and ARMVAC
     /// solutions are also evaluated as candidate incumbents: both are
@@ -384,25 +225,35 @@ impl Planner {
     /// keeps GCL ≤ ARMVAC ≤-ish NL even when the exact phase must fall back
     /// to a heuristic on very large instances.
     pub fn plan(&self, requests: &[StreamRequest]) -> Result<Plan> {
-        let mut best = self.plan_single(requests)?;
+        self.plan_with(requests, &mut ReplanContext::new())
+    }
+
+    /// Plan through a persistent [`ReplanContext`]: identical semantics to
+    /// [`Planner::plan`], but intermediate artifacts (eligibility masks,
+    /// demand vectors, arc-flow graphs, the previous packing) are reused
+    /// across calls — the warm-start incremental re-plan path.
+    pub fn plan_with(&self, requests: &[StreamRequest], ctx: &mut ReplanContext) -> Result<Plan> {
+        let mut best =
+            pipeline::plan_with_context(&self.catalog, &self.config, requests, &mut ctx.main)?;
         if self.config.location == LocationPolicy::RttFiltered
             && self.config.solver == SolverKind::Exact
         {
-            for (hw, loc, solver) in [
-                (self.config.hardware, LocationPolicy::RttFiltered, SolverKind::ArmvacGreedy),
-                (self.config.hardware, LocationPolicy::NearestOnly, SolverKind::Exact),
-            ] {
-                let alt = Planner::new(
-                    self.catalog.clone(),
-                    PlannerConfig {
-                        hardware: hw,
-                        location: loc,
-                        solver,
-                        headroom: self.config.headroom,
-                        solve_opts: self.config.solve_opts.clone(),
-                    },
-                );
-                if let Ok(p) = alt.plan_single(requests) {
+            let alts: [(&mut PlanContext, LocationPolicy, SolverKind); 2] = [
+                (&mut ctx.alt_rtt_greedy, LocationPolicy::RttFiltered, SolverKind::ArmvacGreedy),
+                (&mut ctx.alt_nearest_exact, LocationPolicy::NearestOnly, SolverKind::Exact),
+            ];
+            for (alt_ctx, location, solver) in alts {
+                let alt_config = PlannerConfig {
+                    hardware: self.config.hardware,
+                    location,
+                    solver,
+                    headroom: self.config.headroom,
+                    solve_opts: self.config.solve_opts.clone(),
+                    parallel_regions: self.config.parallel_regions,
+                };
+                if let Ok(p) =
+                    pipeline::plan_with_context(&self.catalog, &alt_config, requests, alt_ctx)
+                {
                     if p.cost_per_hour < best.cost_per_hour {
                         best = p;
                     }
@@ -414,64 +265,7 @@ impl Planner {
 
     /// Plan with exactly this configuration (no candidate portfolio).
     pub fn plan_single(&self, requests: &[StreamRequest]) -> Result<Plan> {
-        let (problem, members, degraded) = self.build_problem(requests)?;
-
-        let (packing, method) = match self.config.solver {
-            SolverKind::Exact => {
-                let (p, stats) = mcvbp::solve(&problem, &self.config.solve_opts)?;
-                (p, stats.method)
-            }
-            SolverKind::ArmvacGreedy => {
-                (heuristic::armvac_fill(&problem)?, SolveMethod::Heuristic)
-            }
-            SolverKind::Ffd => {
-                (heuristic::first_fit_decreasing(&problem)?, SolveMethod::Heuristic)
-            }
-        };
-        packing.validate(&problem)?;
-
-        // Expand group counts into per-instance stream lists.
-        let mut unassigned: Vec<std::collections::VecDeque<usize>> = members
-            .iter()
-            .map(|m| m.iter().copied().collect())
-            .collect();
-        let mut instances = Vec::with_capacity(packing.bins.len());
-        for bin in &packing.bins {
-            let bt = &problem.bins[bin.bin_type];
-            let mut streams = Vec::new();
-            for (g, &c) in bin.counts.iter().enumerate() {
-                for _ in 0..c {
-                    let idx = unassigned[g]
-                        .pop_front()
-                        .ok_or_else(|| Error::solver("packing/member mismatch"))?;
-                    streams.push(idx);
-                }
-            }
-            instances.push(PlannedInstance {
-                bin_type: bin.bin_type,
-                type_idx: bt.type_idx,
-                region_idx: bt.region_idx,
-                label: bt.label.clone(),
-                hourly_cost: bt.cost,
-                has_gpu: bt.has_gpu,
-                streams,
-            });
-        }
-        debug_assert!(unassigned.iter().all(|q| q.is_empty()));
-
-        let cost = packing.total_cost(&problem);
-        let (non_gpu, gpu) = packing.count_by_gpu(&problem);
-        Ok(Plan {
-            problem,
-            packing,
-            instances,
-            cost_per_hour: cost,
-            non_gpu,
-            gpu,
-            degraded,
-            method,
-            region_locations: self.catalog.regions.iter().map(|r| r.location).collect(),
-        })
+        pipeline::plan_with_context(&self.catalog, &self.config, requests, &mut PlanContext::new())
     }
 }
 
@@ -616,5 +410,18 @@ mod tests {
         assert!(
             crate::geo::cities::TOKYO.distance_km(&loc) < crate::geo::coverage_radius_km(20.0)
         );
+    }
+
+    #[test]
+    fn plan_with_context_portfolio_matches_cold_plan() {
+        // Warm portfolio re-plans keep GCL's best-of-three semantics.
+        let requests = scenarios::fig6_workload(18, 2.0, 9);
+        let catalog = Catalog::builtin();
+        let planner = Planner::new(catalog, PlannerConfig::gcl());
+        let cold = planner.plan(&requests).unwrap();
+        let mut ctx = ReplanContext::new();
+        planner.plan_with(&requests, &mut ctx).unwrap();
+        let warm = planner.plan_with(&requests, &mut ctx).unwrap();
+        assert!((warm.cost_per_hour - cold.cost_per_hour).abs() < 1e-9);
     }
 }

@@ -1,38 +1,65 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the build image has
+//! no network access, so the crate stays dependency-free by default.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for all camflow subsystems.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Bin-packing / planning found no feasible assignment (the paper's
     /// "Fail" rows in Fig 3: e.g. CPU-only strategy at 8 fps ZF).
-    #[error("infeasible: {0}")]
     Infeasible(String),
 
     /// Malformed configuration, scenario, or manifest.
-    #[error("config error: {0}")]
     Config(String),
 
     /// JSON parse/serialize failure.
-    #[error("json error at byte {offset}: {message}")]
     Json { offset: usize, message: String },
 
     /// LP/MILP solver failure (unbounded, iteration limit, numerical).
-    #[error("solver error: {0}")]
     Solver(String),
 
     /// PJRT runtime failure (artifact load, compile, execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Serving-layer failure (channel closed, worker died).
-    #[error("serving error: {0}")]
     Serving(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Infeasible(m) => write!(f, "infeasible: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Json { offset, message } => {
+                write!(f, "json error at byte {offset}: {message}")
+            }
+            Error::Solver(m) => write!(f, "solver error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Serving(m) => write!(f, "serving error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {

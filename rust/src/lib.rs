@@ -18,8 +18,41 @@
 //! * **L1 (python/compile/kernels/, build-time)** — the Pallas tiled matmul
 //!   kernel backing every conv/dense layer of the analysis programs.
 //!
-//! The request path is pure Rust: artifacts produced by `make artifacts` are
-//! loaded via the PJRT C API (`xla` crate) and executed in-process.
+//! ## The staged planning pipeline
+//!
+//! Planning is an explicit four-stage pipeline
+//! ([`coordinator::pipeline`]): **Eligibility → ProblemBuild → Solve →
+//! Expand**. Each stage emits a cacheable artifact, and a
+//! [`PlanContext`](coordinator::pipeline::PlanContext) persists those
+//! artifacts across re-plans so the *dynamic* manager
+//! ([`coordinator::adaptive`]) works incrementally:
+//!
+//! * per-camera eligibility masks are memoized by (location, fps) in the
+//!   context's eligibility cache ([`coordinator::eligibility`]),
+//! * per-group demand vectors are memoized by group identity in the
+//!   context's demand cache,
+//! * compressed arc-flow graphs are memoized by (capacity grid, quantized
+//!   item multiset) in a shared [`packing::arcflow::GraphCache`],
+//! * the previous packing is translated onto the new problem and seeds both
+//!   the greedy warm-start fill ([`packing::heuristic::warm_start_fill`])
+//!   and the exact solver's incumbent cut
+//!   ([`packing::mcvbp::solve_with`]).
+//!
+//! The Solve stage additionally decomposes the packing problem into
+//! independent per-region-cluster subproblems (streams whose RTT circles
+//! cannot overlap never share an instance) and solves them on parallel
+//! `std::thread` scopes — the decomposition is exact, so plan costs are
+//! unchanged wherever the monolithic exact solve completed within budget
+//! (and only ever improve where it had to fall back to a heuristic),
+//! while wall-clock drops on worldwide workloads.
+//!
+//! ## Features
+//!
+//! The request path (PJRT artifact loading + serving) is gated behind the
+//! `pjrt` feature because it needs the vendored `xla` crate and `make
+//! artifacts`; the default build is dependency-free and every planning,
+//! packing, solver, and simulation test runs without it. The end-to-end
+//! serving tests additionally sit behind `pjrt-tests`.
 
 pub mod bench;
 pub mod cameras;
@@ -33,7 +66,9 @@ pub mod geo;
 pub mod metrics;
 pub mod packing;
 pub mod profiles;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod solver;
 pub mod util;

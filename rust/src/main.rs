@@ -63,7 +63,10 @@ COMMANDS:
   sweep    [--cameras N] [--seed S]         Fig-6 cost sweep NL/ARMVAC/GCL
   serve    [--scenario N] [--strategy S] [--duration SEC] [--scale X]
            [--artifacts DIR]                plan + serve end-to-end via PJRT
-  simulate [--hours H] [--cameras N]        adaptive manager on the cloud sim
+                                            (requires --features pjrt)
+  simulate [--hours H] [--cameras N] [--cold]
+                                            adaptive manager on the cloud sim;
+                                            --cold disables incremental re-planning
 ";
 
 fn cmd_catalog(_args: &Args) -> Result<()> {
@@ -183,6 +186,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) -> Result<()> {
+    Err(camflow::Error::config(
+        "this build has no PJRT serving layer; rebuild with `--features pjrt` \
+         (requires the vendored xla crate and `make artifacts`)",
+    ))
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_run_config(args)?;
     let requests = cfg.requests()?;
@@ -237,14 +249,22 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let hours = args.opt_parse("hours", 24usize)?;
     let n = args.opt_parse("cameras", 12usize)?;
     let seed = args.opt_parse("seed", 3u64)?;
+    let cold = args.flag("cold");
 
     let catalog = Catalog::builtin();
     let planner = Planner::new(catalog.clone(), StrategyName::Gcl.to_planner_config());
-    let mut mgr = AdaptiveManager::new(planner);
+    let mut mgr = if cold {
+        AdaptiveManager::cold(planner)
+    } else {
+        AdaptiveManager::new(planner)
+    };
     let mut sim = CloudSim::new(catalog);
 
     let db = camflow::cameras::CameraDb::synthetic(n, seed);
-    let mut t = Table::new(&["hour", "fps", "instances", "$/h", "provisioned", "terminated", "moved"]);
+    let mut t = Table::new(&[
+        "hour", "fps", "instances", "$/h", "provisioned", "terminated", "moved", "plan ms",
+        "reuse",
+    ]);
     let mut static_cost = 0.0f64;
     let mut peak_rate = 0.0f64;
     for h in 0..hours {
@@ -255,7 +275,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             _ => 1.0,
         };
         let requests = db.workload(camflow::profiles::Program::Zf, fps);
+        let t0 = std::time::Instant::now();
         let report = mgr.replan(requests)?;
+        let plan_ms = t0.elapsed().as_secs_f64() * 1000.0;
         let plan = mgr.current_plan().unwrap();
         sim.apply_plan(plan)?;
         sim.advance(3600.0);
@@ -268,15 +290,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             format!("{}", report.provision.iter().map(|(_, n)| n).sum::<usize>()),
             format!("{}", report.terminate.iter().map(|(_, n)| n).sum::<usize>()),
             format!("{}", report.streams_moved),
+            format!("{plan_ms:.1}"),
+            format!("{:.0}%", report.pipeline.reuse_ratio() * 100.0),
         ]);
         static_cost += peak_rate; // static provisioning pays peak all day
     }
     t.print();
     println!(
-        "\nadaptive total: {}  |  static-peak provisioning: {}  |  saving {:.0}%",
+        "\nadaptive total: {}  |  static-peak provisioning: {}  |  saving {:.0}%  ({} re-plans)",
         fmt_usd(sim.accrued_usd()),
         fmt_usd(static_cost),
-        (1.0 - sim.accrued_usd() / static_cost) * 100.0
+        (1.0 - sim.accrued_usd() / static_cost) * 100.0,
+        if cold { "cold" } else { "warm incremental" }
     );
     Ok(())
 }

@@ -15,6 +15,8 @@
 
 use crate::error::{Error, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// A quantized item type: integer sizes per dimension + demanded count.
 #[derive(Clone, Debug)]
@@ -213,6 +215,72 @@ pub fn compress(g: &ArcFlow) -> (ArcFlow, CompressionStats) {
     (compressed, stats)
 }
 
+/// Exact cache key for a bin type's arc-flow graph: the graph is fully
+/// determined by the (ordered) quantized item list and the integer capacity.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct GraphKey {
+    cap: Vec<i64>,
+    items: Vec<(Vec<i64>, usize)>,
+}
+
+/// Cross-replan cache of compressed arc-flow graphs.
+///
+/// Re-planning with a lightly perturbed workload leaves most bin types'
+/// compatible item sets untouched, so their graphs can be reused verbatim.
+/// The cache is `Sync`: lookups take a short lock, builds run outside it so
+/// parallel per-region solves don't serialize on graph construction (a
+/// duplicate concurrent build of the same key is possible but harmless).
+#[derive(Default)]
+pub struct GraphCache {
+    map: Mutex<HashMap<GraphKey, Arc<(ArcFlow, CompressionStats)>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+/// Soft cap on cached graphs; reaching it clears the cache (simple, bounded).
+const GRAPH_CACHE_CAPACITY: usize = 512;
+
+impl GraphCache {
+    pub fn new() -> Self {
+        GraphCache::default()
+    }
+
+    /// (hits, misses) since creation.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Return the compressed graph for `(cap, items)` plus whether it was a
+    /// cache hit, building (and caching) it on a miss. Build failures
+    /// (state-space budget exceeded) are not cached: a later call with a
+    /// larger budget may succeed.
+    pub fn get_or_build(
+        &self,
+        cap: &[i64],
+        items: &[QuantItem],
+        max_nodes: usize,
+    ) -> Result<(Arc<(ArcFlow, CompressionStats)>, bool)> {
+        let key = GraphKey {
+            cap: cap.to_vec(),
+            items: items.iter().map(|it| (it.sizes.clone(), it.count)).collect(),
+        };
+        if let Some(hit) = self.map.lock().unwrap().get(&key).cloned() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((hit, true));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let g = build(cap, items, max_nodes)?;
+        let (cg, stats) = compress(&g);
+        let entry = Arc::new((cg, stats));
+        let mut map = self.map.lock().unwrap();
+        if map.len() >= GRAPH_CACHE_CAPACITY {
+            map.clear();
+        }
+        map.insert(key, entry.clone());
+        Ok((entry, false))
+    }
+}
+
 /// Enumerate all distinct source→sink paths as item-count vectors
 /// (test/diagnostic helper; exponential in general, fine for sidebar-scale).
 pub fn enumerate_packings(g: &ArcFlow, num_items: usize) -> Vec<Vec<usize>> {
@@ -335,6 +403,29 @@ mod tests {
             .map(|i| QuantItem { sizes: vec![i, 11 - i, (i % 3) + 1], count: 5 })
             .collect();
         assert!(build(&cap, &items, 50).is_err());
+    }
+
+    #[test]
+    fn graph_cache_hits_on_identical_inputs() {
+        let (cap, items) = sidebar();
+        let cache = GraphCache::new();
+        let (g1, hit1) = cache.get_or_build(&cap, &items, 10_000).unwrap();
+        let (g2, hit2) = cache.get_or_build(&cap, &items, 10_000).unwrap();
+        assert!(!hit1 && hit2);
+        assert!(Arc::ptr_eq(&g1, &g2), "second lookup must hit the cache");
+        assert_eq!(cache.stats(), (1, 1));
+        // A different capacity is a different key.
+        let other_cap = vec![8, 3];
+        let (g3, hit3) = cache.get_or_build(&other_cap, &items, 10_000).unwrap();
+        assert!(!hit3);
+        assert!(!Arc::ptr_eq(&g1, &g3));
+        assert_eq!(cache.stats(), (1, 2));
+        // Cached graph enumerates the same packings as a fresh build.
+        let fresh = build(&cap, &items, 10_000).unwrap();
+        assert_eq!(
+            enumerate_packings(&g1.0, 3),
+            enumerate_packings(&compress(&fresh).0, 3)
+        );
     }
 
     #[test]

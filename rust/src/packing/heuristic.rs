@@ -1,10 +1,12 @@
 //! Greedy packers: first-fit-decreasing (FFD) over cost-efficiency-ranked
-//! bins, and the ARMVAC fill rule ("pick the lowest-cost eligible instance,
-//! fill it with as many streams as fit, repeat").
+//! bins, the ARMVAC fill rule ("pick the lowest-cost eligible instance,
+//! fill it with as many streams as fit, repeat"), and a warm-start fill that
+//! repairs a previous packing against a perturbed problem.
 //!
 //! These provide (a) warm-start incumbents for the exact branch-and-bound
-//! solver, (b) the behaviour of the paper's baseline resource managers, and
-//! (c) a fallback when an instance is too large for exact solving.
+//! solver, (b) the behaviour of the paper's baseline resource managers,
+//! (c) a fallback when an instance is too large for exact solving, and
+//! (d) the incremental re-plan seed used by `coordinator::pipeline`.
 
 use super::{BinType, ItemGroup, Packing, PackedBin, PackingProblem};
 use crate::catalog::Dims;
@@ -32,13 +34,15 @@ fn reference_capacity(problem: &PackingProblem) -> Dims {
     r
 }
 
-/// Simulate greedily filling ONE bin of type `t` from `remaining` counts.
+/// Simulate greedily filling ONE bin of type `t` from `remaining` counts,
+/// starting from an already-used `used0` footprint (zero for a fresh bin).
 /// Returns (counts per group, packed volume normalized by `reference`).
-fn fill_one_bin(
+fn fill_one_bin_from(
     problem: &PackingProblem,
     t: usize,
     remaining: &[usize],
     reference: &Dims,
+    used0: Dims,
 ) -> (Vec<usize>, f64) {
     let cap = problem.effective_capacity(t);
     // Order groups by decreasing normalized size in this bin.
@@ -51,7 +55,7 @@ fn fill_one_bin(
         sb.partial_cmp(&sa).unwrap_or(std::cmp::Ordering::Equal)
     });
     let mut counts = vec![0usize; problem.items.len()];
-    let mut used = Dims::default();
+    let mut used = used0;
     let mut volume = 0.0;
     for &g in &order {
         let d = problem.items[g].demand_per_bin[t].unwrap();
@@ -69,18 +73,27 @@ fn fill_one_bin(
     (counts, volume)
 }
 
-/// First-fit-decreasing over cost-efficiency: repeatedly open the bin type
-/// with the best (cost / packed-volume) ratio for the remaining items.
-pub fn first_fit_decreasing(problem: &PackingProblem) -> Result<Packing> {
-    problem.check_feasible_items()?;
-    let reference = reference_capacity(problem);
-    let mut remaining: Vec<usize> = problem.items.iter().map(|g| g.count).collect();
-    let mut packing = Packing::default();
+fn fill_one_bin(
+    problem: &PackingProblem,
+    t: usize,
+    remaining: &[usize],
+    reference: &Dims,
+) -> (Vec<usize>, f64) {
+    fill_one_bin_from(problem, t, remaining, reference, Dims::default())
+}
 
+/// The FFD inner loop as a continuation: pack every count left in
+/// `remaining` into fresh bins appended to `packing`.
+fn ffd_fill(
+    problem: &PackingProblem,
+    remaining: &mut [usize],
+    packing: &mut Packing,
+) -> Result<()> {
+    let reference = reference_capacity(problem);
     while remaining.iter().any(|&c| c > 0) {
         let mut best: Option<(usize, Vec<usize>, f64)> = None; // (t, counts, score)
         for t in 0..problem.bins.len() {
-            let (counts, volume) = fill_one_bin(problem, t, &remaining, &reference);
+            let (counts, volume) = fill_one_bin(problem, t, remaining, &reference);
             if volume <= 0.0 {
                 continue;
             }
@@ -97,6 +110,93 @@ pub fn first_fit_decreasing(problem: &PackingProblem) -> Result<Packing> {
         }
         packing.bins.push(PackedBin { bin_type: t, counts });
     }
+    Ok(())
+}
+
+/// First-fit-decreasing over cost-efficiency: repeatedly open the bin type
+/// with the best (cost / packed-volume) ratio for the remaining items.
+pub fn first_fit_decreasing(problem: &PackingProblem) -> Result<Packing> {
+    problem.check_feasible_items()?;
+    let mut remaining: Vec<usize> = problem.items.iter().map(|g| g.count).collect();
+    let mut packing = Packing::default();
+    ffd_fill(problem, &mut remaining, &mut packing)?;
+    packing.validate(problem)?;
+    Ok(packing)
+}
+
+/// Warm-start fill: rebuild a packing for `problem` starting from the bins
+/// of a previous solution (already translated to this problem's group/bin
+/// indices by the caller).
+///
+/// Each seed bin is admitted with its counts clamped to the still-unpacked
+/// demand and its incompatible placements dropped; bins that no longer fit
+/// the (possibly changed) demand vectors are discarded. Leftover demand is
+/// then topped up into the admitted bins' spare capacity and finally packed
+/// into fresh bins with the FFD rule. On an unchanged problem this
+/// reproduces the seed packing exactly — the property the incremental
+/// re-planner relies on.
+pub fn warm_start_fill(problem: &PackingProblem, seeds: &[PackedBin]) -> Result<Packing> {
+    problem.check_feasible_items()?;
+    let reference = reference_capacity(problem);
+    let mut remaining: Vec<usize> = problem.items.iter().map(|g| g.count).collect();
+    let mut packing = Packing::default();
+
+    // Pass 1: admit seed bins (clamped to unpacked demand, capacity-checked).
+    // Admission must finish before any top-up, otherwise spare capacity in an
+    // early bin would steal items destined for a later seed bin and an
+    // unchanged problem would not round-trip.
+    let mut admitted: Vec<Dims> = Vec::new(); // per admitted bin: used footprint
+    for seed in seeds {
+        if seed.bin_type >= problem.bins.len() || seed.counts.len() != problem.items.len() {
+            continue;
+        }
+        let t = seed.bin_type;
+        let cap = problem.effective_capacity(t);
+        let mut counts = vec![0usize; problem.items.len()];
+        let mut used = Dims::default();
+        for (g, &c) in seed.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let Some(d) = problem.items[g].demand_per_bin[t] else {
+                continue;
+            };
+            let mut take = c.min(remaining[g]);
+            while take > 0 {
+                let next = used.add(&d.scale(take as f64));
+                if next.fits_in(&cap) {
+                    used = next;
+                    counts[g] = take;
+                    break;
+                }
+                take -= 1;
+            }
+        }
+        if counts.iter().all(|&c| c == 0) {
+            continue;
+        }
+        for (g, &c) in counts.iter().enumerate() {
+            remaining[g] -= c;
+        }
+        packing.bins.push(PackedBin { bin_type: t, counts });
+        admitted.push(used);
+    }
+
+    // Pass 2: top up admitted bins' spare capacity with leftover demand.
+    for (bin_idx, used) in admitted.into_iter().enumerate() {
+        if remaining.iter().all(|&c| c == 0) {
+            break;
+        }
+        let t = packing.bins[bin_idx].bin_type;
+        let (extra, _) = fill_one_bin_from(problem, t, &remaining, &reference, used);
+        for (g, &c) in extra.iter().enumerate() {
+            packing.bins[bin_idx].counts[g] += c;
+            remaining[g] -= c;
+        }
+    }
+
+    // Pass 3: whatever is left opens fresh bins under the FFD rule.
+    ffd_fill(problem, &mut remaining, &mut packing)?;
     packing.validate(problem)?;
     Ok(packing)
 }
@@ -228,6 +328,95 @@ mod tests {
         // 7.1 does.
         let p = simple_problem(&[(7.1, 1.0, 1)], &[(8.0, 15.0, 1.0)]);
         assert!(first_fit_decreasing(&p).is_ok());
+    }
+
+    #[test]
+    fn warm_start_round_trips_unchanged_problem() {
+        let p = simple_problem(
+            &[(2.0, 1.0, 5), (3.0, 2.0, 3)],
+            &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.8)],
+        );
+        let cold = first_fit_decreasing(&p).unwrap();
+        let warm = warm_start_fill(&p, &cold.bins).unwrap();
+        assert_eq!(warm, cold, "unchanged problem must reproduce the seed");
+    }
+
+    #[test]
+    fn warm_start_absorbs_small_growth_without_extra_bins() {
+        // 10 one-core items fill a 16-core bin to 10/14.4; one more item must
+        // slot into the same bin on re-plan.
+        let p0 = simple_problem(&[(1.0, 0.5, 10)], &[(16.0, 30.0, 1.5)]);
+        let seed = first_fit_decreasing(&p0).unwrap();
+        assert_eq!(seed.num_bins(), 1);
+        let p1 = simple_problem(&[(1.0, 0.5, 11)], &[(16.0, 30.0, 1.5)]);
+        let warm = warm_start_fill(&p1, &seed.bins).unwrap();
+        warm.validate(&p1).unwrap();
+        assert_eq!(warm.num_bins(), 1, "growth should be absorbed via top-up");
+    }
+
+    #[test]
+    fn warm_start_drops_shrunk_demand() {
+        let p0 = simple_problem(&[(2.0, 1.0, 6)], &[(8.0, 15.0, 1.0)]);
+        let seed = first_fit_decreasing(&p0).unwrap();
+        let p1 = simple_problem(&[(2.0, 1.0, 2)], &[(8.0, 15.0, 1.0)]);
+        let warm = warm_start_fill(&p1, &seed.bins).unwrap();
+        warm.validate(&p1).unwrap();
+        assert_eq!(
+            warm.bins.iter().map(|b| b.num_streams()).sum::<usize>(),
+            2
+        );
+    }
+
+    #[test]
+    fn warm_start_with_stale_seed_shapes_is_ignored() {
+        // Seeds from an incompatible problem (wrong counts length / bin index)
+        // must be skipped, not crash.
+        let p = simple_problem(&[(2.0, 1.0, 3)], &[(8.0, 15.0, 1.0)]);
+        let stale = vec![
+            PackedBin { bin_type: 7, counts: vec![3] },
+            PackedBin { bin_type: 0, counts: vec![1, 1] },
+        ];
+        let warm = warm_start_fill(&p, &stale).unwrap();
+        warm.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn property_warm_start_valid_on_perturbed_problems() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(77);
+        for _ in 0..30 {
+            let n_groups = 1 + rng.index(3);
+            let items: Vec<(f64, f64, usize)> = (0..n_groups)
+                .map(|_| {
+                    (
+                        rng.range_f64(0.3, 5.0),
+                        rng.range_f64(0.3, 8.0),
+                        1 + rng.index(6),
+                    )
+                })
+                .collect();
+            let bins = [(8.0, 15.0, 1.0), (16.0, 30.0, 1.8)];
+            let p0 = simple_problem(&items, &bins);
+            let Ok(seed) = first_fit_decreasing(&p0) else {
+                continue;
+            };
+            // Perturb counts by ±1.
+            let perturbed: Vec<(f64, f64, usize)> = items
+                .iter()
+                .map(|&(c, m, n)| {
+                    let n2 = match rng.index(3) {
+                        0 => n + 1,
+                        1 => n.saturating_sub(1).max(1),
+                        _ => n,
+                    };
+                    (c, m, n2)
+                })
+                .collect();
+            let p1 = simple_problem(&perturbed, &bins);
+            let warm = warm_start_fill(&p1, &seed.bins).unwrap();
+            warm.validate(&p1).unwrap();
+            assert!(warm.peak_utilization(&p1) <= p1.headroom + 1e-9);
+        }
     }
 
     #[test]

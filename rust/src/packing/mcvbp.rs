@@ -8,7 +8,7 @@
 //! of the quantized instance provides the incumbent; the exact solve can only
 //! improve it.
 
-use super::arcflow::{self, QuantItem};
+use super::arcflow::{self, GraphCache, QuantItem};
 use super::heuristic;
 use super::{Packing, PackedBin, PackingProblem};
 use crate::catalog::{Dims, NUM_DIMS};
@@ -62,6 +62,11 @@ pub struct SolveStats {
     pub graph_arcs_after: usize,
     pub milp_vars: usize,
     pub milp_constraints: usize,
+    /// Arc-flow graphs reused from / inserted into a [`GraphCache`].
+    pub graph_cache_hits: usize,
+    pub graph_cache_misses: usize,
+    /// True if a warm-start incumbent participated in this solve.
+    pub warm_started: bool,
 }
 
 /// Quantize each item's demand up to the bin-type grid; `None` stays `None`,
@@ -117,6 +122,29 @@ fn cells(problem: &PackingProblem, t: usize, d: &Dims, quant: i64) -> Vec<i64> {
 
 /// Solve the MCVBP. Returns the packing plus diagnostics.
 pub fn solve(problem: &PackingProblem, opts: &SolveOptions) -> Result<(Packing, SolveStats)> {
+    solve_with(problem, opts, None, None)
+}
+
+/// Solve the MCVBP with optional cross-replan state:
+///
+/// * `cache` — a [`GraphCache`] of compressed arc-flow graphs; bin types
+///   whose compatible item set is unchanged since the last re-plan reuse
+///   their graph instead of rebuilding it,
+/// * `incumbent` — a previous packing (translated to this problem's
+///   indices). If it validates it competes as a final candidate, and its
+///   quantized cost tightens the ILP's incumbent cut so branch-and-bound
+///   starts from the old plan's cost rather than the cold FFD bound.
+///
+/// With `cache = None, incumbent = None` this is exactly the cold solve; on
+/// identical inputs the warm solve returns the same cost (the cached graphs
+/// are bit-identical and the incumbent can only match, never beat, the
+/// optimum the cold solve found).
+pub fn solve_with(
+    problem: &PackingProblem,
+    opts: &SolveOptions,
+    cache: Option<&GraphCache>,
+    incumbent: Option<&Packing>,
+) -> Result<(Packing, SolveStats)> {
     // Quantize once; all phases work on the conservative instance so the
     // result is valid for the original problem.
     let qp = quantize_problem(problem, opts.quant);
@@ -126,13 +154,17 @@ pub fn solve(problem: &PackingProblem, opts: &SolveOptions) -> Result<(Packing, 
     // for the exact phase), plus FFD and ARMVAC-fill on the original problem
     // (the round-up can cost a slot per bin, so the unquantized packings are
     // sometimes strictly better). All are valid for the original problem.
+    // A warm-start incumbent that still validates joins the contest.
     let ffd = heuristic::first_fit_decreasing(&qp)?;
     let ffd_cost = ffd.total_cost(&qp);
+    let valid_incumbent =
+        incumbent.filter(|inc| inc.validate(problem).is_ok());
     let mut best_heuristic = ffd.clone();
     let mut best_heuristic_cost = ffd_cost;
     for cand in [
         heuristic::first_fit_decreasing(problem).ok(),
         heuristic::armvac_fill(problem).ok(),
+        valid_incumbent.cloned(),
     ]
     .into_iter()
     .flatten()
@@ -155,6 +187,9 @@ pub fn solve(problem: &PackingProblem, opts: &SolveOptions) -> Result<(Packing, 
         graph_arcs_after: 0,
         milp_vars: 0,
         milp_constraints: 0,
+        graph_cache_hits: 0,
+        graph_cache_misses: 0,
+        warm_started: valid_incumbent.is_some(),
     };
     if !opts.exact {
         return Ok((best_heuristic, stats));
@@ -163,7 +198,10 @@ pub fn solve(problem: &PackingProblem, opts: &SolveOptions) -> Result<(Packing, 
     // Build one arc-flow graph per bin type over its compatible item groups.
     // A *cumulative* node budget bounds total build work: when the joint ILP
     // would be too large to solve anyway (see max_milp_vars), bail out to the
-    // heuristic before burning time constructing hundreds of graphs.
+    // heuristic before burning time constructing hundreds of graphs. Cache
+    // hits charge their original (uncompressed) node count against the same
+    // budget so a warm solve takes exactly the structural decisions a cold
+    // solve would — only faster.
     let mut graphs = Vec::with_capacity(qp.bins.len());
     let mut remaining_nodes = opts.max_graph_nodes;
     for t in 0..qp.bins.len() {
@@ -183,17 +221,43 @@ pub fn solve(problem: &PackingProblem, opts: &SolveOptions) -> Result<(Packing, 
                 count: qp.items[g].count,
             })
             .collect();
-        match arcflow::build(&cap, &items, remaining_nodes) {
-            Ok(g) => {
-                remaining_nodes = remaining_nodes.saturating_sub(g.num_nodes);
-                stats.graph_nodes_before += g.num_nodes;
-                stats.graph_arcs_before += g.arcs.len();
-                let (cg, _) = arcflow::compress(&g);
+        let built = match cache {
+            Some(c) => match c.get_or_build(&cap, &items, remaining_nodes) {
+                Ok((entry, hit)) => {
+                    // Mirror the cold build's budget check: a cached graph a
+                    // fresh build could not have afforded is treated as the
+                    // same budget exhaustion.
+                    if hit && entry.1.nodes_before > remaining_nodes + 1 {
+                        None
+                    } else {
+                        if hit {
+                            stats.graph_cache_hits += 1;
+                        } else {
+                            stats.graph_cache_misses += 1;
+                        }
+                        Some((entry.0.clone(), entry.1))
+                    }
+                }
+                Err(_) => None,
+            },
+            None => match arcflow::build(&cap, &items, remaining_nodes) {
+                Ok(g) => {
+                    let (cg, cs) = arcflow::compress(&g);
+                    Some((cg, cs))
+                }
+                Err(_) => None,
+            },
+        };
+        match built {
+            Some((cg, cs)) => {
+                remaining_nodes = remaining_nodes.saturating_sub(cs.nodes_before);
+                stats.graph_nodes_before += cs.nodes_before;
+                stats.graph_arcs_before += cs.arcs_before;
                 stats.graph_nodes_after += cg.num_nodes;
                 stats.graph_arcs_after += cg.arcs.len();
                 graphs.push(Some((cg, groups)));
             }
-            Err(_) => {
+            None => {
                 // Cumulative state budget exhausted: heuristic fallback.
                 return Ok((best_heuristic, stats));
             }
@@ -273,7 +337,13 @@ pub fn solve(problem: &PackingProblem, opts: &SolveOptions) -> Result<(Packing, 
         }
         lp.add_constraint(coeffs, Op::Ge, item.count as f64);
     }
-    // Incumbent cut: never exceed the FFD cost.
+    // Incumbent cut: never exceed the best bound known to be feasible on the
+    // quantized instance — the FFD cost, tightened by a warm-start incumbent
+    // when one validates against the quantized problem.
+    let cut_rhs = match valid_incumbent.filter(|inc| inc.validate(&qp).is_ok()) {
+        Some(inc) => ffd_cost.min(inc.total_cost(&qp)),
+        None => ffd_cost,
+    };
     {
         let coeffs: Vec<(usize, f64)> = var_arc
             .iter()
@@ -283,7 +353,7 @@ pub fn solve(problem: &PackingProblem, opts: &SolveOptions) -> Result<(Packing, 
                 (graph.arcs[a].from == graph.source).then_some((v, qp.bins[t].cost))
             })
             .collect();
-        lp.add_constraint(coeffs, Op::Le, ffd_cost + 1e-6);
+        lp.add_constraint(coeffs, Op::Le, cut_rhs + 1e-6);
     }
 
     stats.milp_vars = num_vars;
@@ -511,6 +581,29 @@ mod tests {
         assert!((packing.total_cost(&p) - 1.0).abs() < 1e-9);
         let (non_gpu, gpu) = packing.count_by_gpu(&p);
         assert_eq!((non_gpu, gpu), (0, 1));
+    }
+
+    #[test]
+    fn warm_solve_matches_cold_solve_on_identical_inputs() {
+        use crate::packing::arcflow::GraphCache;
+        let p = simple_problem(
+            &[(2.0, 1.0, 4), (3.0, 2.0, 2)],
+            &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)],
+        );
+        let opts = SolveOptions::default();
+        let (cold, cold_stats) = solve(&p, &opts).unwrap();
+        let cache = GraphCache::new();
+        // First warm call populates the cache; second reuses it and seeds the
+        // incumbent with the cold result.
+        let (w1, s1) = solve_with(&p, &opts, Some(&cache), None).unwrap();
+        assert_eq!(s1.graph_cache_hits, 0);
+        assert!((w1.total_cost(&p) - cold.total_cost(&p)).abs() < 1e-9);
+        let (w2, s2) = solve_with(&p, &opts, Some(&cache), Some(&cold)).unwrap();
+        assert!(s2.graph_cache_hits > 0, "second solve must reuse graphs");
+        assert!(s2.warm_started);
+        assert!((w2.total_cost(&p) - cold.total_cost(&p)).abs() < 1e-9);
+        assert_eq!(s2.method, cold_stats.method);
+        w2.validate(&p).unwrap();
     }
 
     #[test]

@@ -77,7 +77,7 @@ impl PackingProblem {
     pub fn compatible(&self, g: usize, t: usize) -> bool {
         match &self.items[g].demand_per_bin[t] {
             Some(d) => d.fits_in(&self.effective_capacity(t)),
-            None => None::<()>.is_some(),
+            None => false,
         }
     }
 

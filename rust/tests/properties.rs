@@ -128,6 +128,166 @@ fn prop_plan_assignment_invariants() {
     );
 }
 
+/// Exact solve cost never exceeds either greedy packer's cost on the same
+/// problem (FFD *and* the ARMVAC cheapest-first rule).
+#[test]
+fn prop_exact_cost_at_most_greedy_cost() {
+    check(
+        0xE4AC7,
+        40,
+        |rng: &mut Rng| {
+            let groups = 1 + rng.index(3);
+            let mut v = Vec::with_capacity(groups * 3);
+            for _ in 0..groups {
+                v.push((rng.range_f64(0.3, 6.0) * 100.0).round() as u64);
+                v.push((rng.range_f64(0.3, 8.0) * 100.0).round() as u64);
+                v.push(1 + rng.index(4) as u64);
+            }
+            v
+        },
+        |items: &Vec<u64>| {
+            let spec: Vec<(f64, f64, usize)> = items
+                .chunks_exact(3)
+                .filter(|c| c[0] > 0 && c[1] > 0 && c[2] > 0)
+                .map(|c| (c[0] as f64 / 100.0, c[1] as f64 / 100.0, c[2] as usize))
+                .collect();
+            if spec.is_empty() {
+                return Ok(());
+            }
+            let p = simple_problem(
+                &spec,
+                &[(8.0, 15.0, 0.419), (16.0, 30.0, 0.796), (36.0, 60.0, 1.591)],
+            );
+            let Ok((exact, _)) = solve(&p, &SolveOptions::default()) else {
+                return Ok(()); // infeasible is legal for oversized items
+            };
+            let exact_cost = exact.total_cost(&p);
+            for greedy in [
+                heuristic::first_fit_decreasing(&p),
+                heuristic::armvac_fill(&p),
+            ] {
+                let greedy = greedy.map_err(|e| format!("greedy failed after exact: {e}"))?;
+                if exact_cost > greedy.total_cost(&p) + 1e-9 {
+                    return Err(format!(
+                        "exact {exact_cost} > greedy {}",
+                        greedy.total_cost(&p)
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// No packed bin exceeds the headroom-scaled capacity in ANY dimension, for
+/// every packer (FFD, ARMVAC, exact) — the paper's 90% rule, checked
+/// per-dimension rather than via the aggregate validator.
+#[test]
+fn prop_no_bin_exceeds_headroom_capacity_in_any_dimension() {
+    check(
+        0x90,
+        40,
+        |rng: &mut Rng| {
+            let groups = 1 + rng.index(4);
+            let mut v = Vec::with_capacity(groups * 3);
+            for _ in 0..groups {
+                v.push((rng.range_f64(0.2, 7.0) * 100.0).round() as u64);
+                v.push((rng.range_f64(0.2, 12.0) * 100.0).round() as u64);
+                v.push(1 + rng.index(5) as u64);
+            }
+            v
+        },
+        |items: &Vec<u64>| {
+            let spec: Vec<(f64, f64, usize)> = items
+                .chunks_exact(3)
+                .filter(|c| c[0] > 0 && c[1] > 0 && c[2] > 0)
+                .map(|c| (c[0] as f64 / 100.0, c[1] as f64 / 100.0, c[2] as usize))
+                .collect();
+            if spec.is_empty() {
+                return Ok(());
+            }
+            let p = simple_problem(&spec, &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.8)]);
+            let packings = [
+                heuristic::first_fit_decreasing(&p).ok(),
+                heuristic::armvac_fill(&p).ok(),
+                solve(&p, &SolveOptions::default()).ok().map(|(pk, _)| pk),
+            ];
+            for packing in packings.into_iter().flatten() {
+                for bin in &packing.bins {
+                    let demand = bin.total_demand(&p);
+                    let cap = p.effective_capacity(bin.bin_type);
+                    for (d, c) in demand.as_array().iter().zip(cap.as_array()) {
+                        if *d > c + 1e-9 {
+                            return Err(format!(
+                                "dimension overfull: demand {d} > headroom cap {c}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Incremental (warm-context) re-planning returns exactly the cold plan's
+/// cost when the workload has not changed — the staged pipeline's caches
+/// change how fast a plan is found, never which plan is found.
+#[test]
+fn prop_incremental_replan_cost_equals_cold_cost() {
+    use camflow::coordinator::adaptive::AdaptiveManager;
+    let catalog =
+        Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+    check(
+        0x1C3,
+        15,
+        |rng: &mut Rng| {
+            let n = 1 + rng.index(5);
+            let mut v = Vec::with_capacity(n * 2);
+            for _ in 0..n {
+                v.push(rng.index(2) as u64);
+                v.push((rng.range_f64(0.2, 4.0) * 100.0).round() as u64);
+            }
+            v
+        },
+        |spec: &Vec<u64>| {
+            let requests: Vec<StreamRequest> = spec
+                .chunks_exact(2)
+                .filter(|c| c[1] > 0)
+                .enumerate()
+                .map(|(i, c)| {
+                    StreamRequest::new(
+                        camera_at(i as u64, "Chicago", cities::CHICAGO, Resolution::XGA, 30.0),
+                        if c[0] == 1 { Program::Vgg16 } else { Program::Zf },
+                        c[1] as f64 / 100.0,
+                    )
+                })
+                .collect();
+            if requests.is_empty() {
+                return Ok(());
+            }
+            let planner = Planner::new(catalog.clone(), PlannerConfig::st3());
+            let Ok(cold) = planner.plan(&requests) else {
+                return Ok(()); // infeasible workloads have no re-plan to compare
+            };
+            let mut mgr = AdaptiveManager::new(planner);
+            mgr.replan(requests.clone()).map_err(|e| e.to_string())?;
+            let report = mgr.replan(requests.clone()).map_err(|e| e.to_string())?;
+            if !report.pipeline.warm_started {
+                return Err("second identical re-plan did not warm-start".into());
+            }
+            let warm_cost = mgr.current_plan().unwrap().cost_per_hour;
+            if (warm_cost - cold.cost_per_hour).abs() > 1e-9 {
+                return Err(format!(
+                    "incremental cost {warm_cost} != cold cost {}",
+                    cold.cost_per_hour
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Geo invariants: symmetry, triangle-ish behavior of RTT, circle monotone.
 #[test]
 fn prop_geo_invariants() {
