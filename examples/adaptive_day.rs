@@ -38,9 +38,11 @@ fn main() -> camflow::Result<()> {
         cs.len()
     });
 
-    let mut t =
-        Table::new(&["hour", "fps", "instances", "$/h", "+prov", "-term", "moved", "reuse"]);
+    let mut t = Table::new(&[
+        "hour", "fps", "instances", "$/h", "+prov", "-term", "moved", "churn", "reuse",
+    ]);
     let mut peak_rate = 0.0f64;
+    let mut moved_total = 0usize;
     for h in 0..24 {
         let fps = fps_for_hour(h);
         let requests = db.workload(Program::Zf, fps);
@@ -49,6 +51,7 @@ fn main() -> camflow::Result<()> {
         sim.apply_plan(plan)?;
         sim.advance(3600.0);
         peak_rate = peak_rate.max(plan.cost_per_hour);
+        moved_total += report.streams_moved;
         t.row(&[
             h.to_string(),
             fps.to_string(),
@@ -57,10 +60,12 @@ fn main() -> camflow::Result<()> {
             report.provision.iter().map(|(_, n)| n).sum::<usize>().to_string(),
             report.terminate.iter().map(|(_, n)| n).sum::<usize>().to_string(),
             report.streams_moved.to_string(),
+            format!("{:.0}%", report.churn_ratio() * 100.0),
             format!("{:.0}%", report.pipeline.reuse_ratio() * 100.0),
         ]);
     }
     t.print();
+    println!("\ntotal stream moves over the day (each one a reconnection): {moved_total}");
 
     let adaptive = sim.accrued_usd();
     let static_peak = peak_rate * 24.0;

@@ -3,10 +3,14 @@
 //!     decisions quickly and be applied during runtime"),
 //!   * warm-start incremental re-plan vs cold re-plan on a ≤5%-perturbed
 //!     workload (the staged pipeline's reuse path),
+//!   * stream churn: sticky Expand vs the cold re-deal baseline on the same
+//!     perturbed workload (`streams_moved` / churn ratio — every move is a
+//!     reconnection and warm-state loss on the serving layer),
 //!   * 24-hour rush-hour simulation: adaptive vs static-peak provisioning
 //!     (the paper's ">50% cost reduction for real workloads" claim).
 //!
-//! Emits `BENCH_adaptive.json` so the perf trajectory is tracked across PRs.
+//! Emits `BENCH_adaptive.json` so the perf + churn trajectory is tracked
+//! across PRs.
 
 use camflow::bench::{Bench, Table};
 use camflow::cameras::{CameraDb, StreamRequest};
@@ -46,9 +50,13 @@ fn replan_latency(out: &mut Vec<Value>) {
             ("usd_per_hour", Value::num(plan.cost_per_hour)),
         ]));
         // "Quickly applied during runtime": stay well under a second at
-        // paper scale (tens of cameras), a few seconds at hundreds.
-        if n <= 50 {
-            assert!(timing.mean_ms < 1_000.0, "plan too slow at {n} cams: {timing}");
+        // paper scale (tens of cameras), a few seconds at hundreds. Like
+        // the warm-speedup bar, this is wall-clock — recorded but not
+        // asserted under BENCH_LENIENT_TIMING (shared CI runners).
+        if n <= 50 && timing.mean_ms >= 1_000.0 {
+            let msg = format!("plan too slow at {n} cams: {timing}");
+            assert!(std::env::var_os("BENCH_LENIENT_TIMING").is_some(), "{msg}");
+            println!("WARNING (not asserted, BENCH_LENIENT_TIMING set): {msg}");
         }
     }
     t.print();
@@ -144,12 +152,96 @@ fn warm_vs_cold(out: &mut Vec<Value>) {
     t.print();
     // The acceptance bar: on the largest workload, where solve time dominates
     // fixed overheads, the incremental re-plan must be at least 2x faster.
-    if largest_cold_ms >= 5.0 {
-        assert!(
-            largest_speedup >= 2.0,
-            "warm re-plan speedup {largest_speedup:.2}x < 2x at the largest size"
-        );
+    // Wall-clock ratios are noisy on shared CI runners, so CI sets
+    // BENCH_LENIENT_TIMING=1 to record the ratio without gating on it; the
+    // churn and cost bars stay asserted everywhere (they're deterministic).
+    let lenient = std::env::var_os("BENCH_LENIENT_TIMING").is_some();
+    if largest_cold_ms >= 5.0 && largest_speedup < 2.0 {
+        let msg =
+            format!("warm re-plan speedup {largest_speedup:.2}x < 2x at the largest size");
+        assert!(lenient, "{msg}");
+        println!("WARNING (not asserted, BENCH_LENIENT_TIMING set): {msg}");
     }
+}
+
+/// Stream churn on the ≤5%-perturbed workload: the sticky Expand keeps
+/// every stream on its previous slot when the new packing has room, so
+/// `streams_moved` tracks the packing diff; the cold re-deal baseline
+/// (PR-1 behaviour) re-deals streams in queue order every re-plan.
+fn churn_tracking(out: &mut Vec<Value>) {
+    println!("\n== Stream churn: sticky Expand vs cold re-deal, ≤5% perturbed (GCL) ==");
+    let catalog = Catalog::builtin();
+    let mut t = Table::new(&[
+        "streams",
+        "redeal moved",
+        "sticky moved",
+        "sticky churn",
+        "redeal $/h",
+        "sticky $/h",
+        "repeat moved",
+    ]);
+    let mut total_redeal = 0usize;
+    let mut total_sticky = 0usize;
+    for &n in &[50usize, 200, 1000] {
+        let db = CameraDb::synthetic(n, 11);
+        let base = db.workload(Program::Zf, 1.0);
+        let perturbed = perturb(&base);
+        let planner = Planner::new(catalog.clone(), PlannerConfig::gcl());
+
+        let mut sticky_mgr = AdaptiveManager::new(planner.clone());
+        sticky_mgr.replan(base.clone()).unwrap();
+        let sticky = sticky_mgr.replan(perturbed.clone()).unwrap();
+        // Identical consecutive workloads must not move anything at all.
+        let repeat = sticky_mgr.replan(perturbed.clone()).unwrap();
+        assert_eq!(
+            repeat.streams_moved, 0,
+            "identical consecutive re-plan moved {} streams",
+            repeat.streams_moved
+        );
+
+        let mut redeal_mgr = AdaptiveManager::cold(planner);
+        redeal_mgr.replan(base.clone()).unwrap();
+        let redeal = redeal_mgr.replan(perturbed).unwrap();
+
+        // Stickiness is free: plan quality never regresses for it.
+        assert!(
+            sticky.cost_after <= redeal.cost_after + 1e-6,
+            "sticky re-plan cost {} worse than re-deal {} at {n} cameras",
+            sticky.cost_after,
+            redeal.cost_after
+        );
+        total_redeal += redeal.streams_moved;
+        total_sticky += sticky.streams_moved;
+
+        t.row(&[
+            base.len().to_string(),
+            redeal.streams_moved.to_string(),
+            sticky.streams_moved.to_string(),
+            format!("{:.1}%", sticky.churn_ratio() * 100.0),
+            format!("{:.3}", redeal.cost_after),
+            format!("{:.3}", sticky.cost_after),
+            repeat.streams_moved.to_string(),
+        ]);
+        out.push(Value::obj(vec![
+            ("streams", Value::num(base.len() as f64)),
+            ("redeal_moved", Value::num(redeal.streams_moved as f64)),
+            ("sticky_moved", Value::num(sticky.streams_moved as f64)),
+            ("redeal_churn_ratio", Value::num(redeal.churn_ratio())),
+            ("sticky_churn_ratio", Value::num(sticky.churn_ratio())),
+            ("redeal_usd_per_hour", Value::num(redeal.cost_after)),
+            ("sticky_usd_per_hour", Value::num(sticky.cost_after)),
+            ("repeat_moved", Value::num(repeat.streams_moved as f64)),
+        ]));
+    }
+    t.print();
+    // The acceptance bar: across the perturbed workloads, sticky Expand
+    // must move strictly fewer streams than the re-deal baseline (unless
+    // the baseline already moved nothing — then sticky must too).
+    assert!(
+        total_redeal == 0 || total_sticky < total_redeal,
+        "sticky Expand did not reduce churn: sticky {total_sticky} vs re-deal {total_redeal}"
+    );
+    println!("churn: sticky {total_sticky} moved vs re-deal {total_redeal} moved");
 }
 
 fn fig6_warm_cost_parity(out: &mut Vec<Value>) {
@@ -190,6 +282,7 @@ fn day_simulation(out: &mut Vec<(&'static str, Value)>) {
 
     let mut peak = 0.0f64;
     let mut moved_total = 0usize;
+    let mut surviving_total = 0usize;
     let t0 = Instant::now();
     for h in 0..24 {
         let fps = match h % 24 {
@@ -199,6 +292,7 @@ fn day_simulation(out: &mut Vec<(&'static str, Value)>) {
         };
         let report = mgr.replan(db.workload(Program::Zf, fps)).unwrap();
         moved_total += report.streams_moved;
+        surviving_total += report.streams_surviving;
         let plan = mgr.current_plan().unwrap();
         sim.apply_plan(plan).unwrap();
         sim.advance(3600.0);
@@ -213,6 +307,11 @@ fn day_simulation(out: &mut Vec<(&'static str, Value)>) {
         saving * 100.0
     );
     assert!(saving > 0.5, "paper claims >50% cost reduction for real (varying) workloads");
+    let day_churn = if surviving_total == 0 {
+        0.0
+    } else {
+        moved_total as f64 / surviving_total as f64
+    };
     out.push((
         "day_simulation",
         Value::obj(vec![
@@ -220,6 +319,8 @@ fn day_simulation(out: &mut Vec<(&'static str, Value)>) {
             ("static_peak_usd", Value::num(static_peak)),
             ("saving", Value::num(saving)),
             ("streams_moved", Value::num(moved_total as f64)),
+            ("streams_surviving", Value::num(surviving_total as f64)),
+            ("churn_ratio", Value::num(day_churn)),
             ("total_replan_ms", Value::num(day_ms)),
         ]),
     ));
@@ -228,11 +329,13 @@ fn day_simulation(out: &mut Vec<(&'static str, Value)>) {
 fn main() {
     let mut latency = Vec::new();
     let mut warm = Vec::new();
+    let mut churn = Vec::new();
     let mut fig6 = Vec::new();
     let mut extra = Vec::new();
 
     replan_latency(&mut latency);
     warm_vs_cold(&mut warm);
+    churn_tracking(&mut churn);
     fig6_warm_cost_parity(&mut fig6);
     day_simulation(&mut extra);
 
@@ -240,6 +343,7 @@ fn main() {
         ("bench", Value::str("adaptive")),
         ("replan_latency", Value::arr(latency)),
         ("warm_vs_cold", Value::arr(warm)),
+        ("churn", Value::arr(churn)),
         ("fig6_cost_parity", Value::arr(fig6)),
     ];
     pairs.extend(extra);

@@ -57,6 +57,44 @@ impl StreamRequest {
     }
 }
 
+/// Stable identity of one stream across re-plans: the full request tuple,
+/// not just (camera, program) — the same camera can run the same program at
+/// two fps tiers concurrently, and those are distinct streams with distinct
+/// host assignments. `occurrence` disambiguates exact duplicates of the
+/// whole tuple, so a request slice always yields pairwise-distinct keys.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StreamKey {
+    pub camera_id: u64,
+    pub program: &'static str,
+    /// Desired fps bit pattern (exact, not rounded: a rate change is a new
+    /// stream contract, and its demand vector changes with it).
+    pub fps_bits: u64,
+    /// Index among requests with an identical (camera, program, fps) tuple,
+    /// in slice order.
+    pub occurrence: u32,
+}
+
+/// Keys for a request slice, aligned by index. Deterministic in slice order.
+pub fn stream_keys(requests: &[StreamRequest]) -> Vec<StreamKey> {
+    let mut seen: std::collections::HashMap<(u64, &'static str, u64), u32> =
+        std::collections::HashMap::new();
+    requests
+        .iter()
+        .map(|r| {
+            let tuple = (r.camera.id, r.program.name(), r.desired_fps.to_bits());
+            let occurrence = seen.entry(tuple).or_insert(0);
+            let key = StreamKey {
+                camera_id: tuple.0,
+                program: tuple.1,
+                fps_bits: tuple.2,
+                occurrence: *occurrence,
+            };
+            *occurrence += 1;
+            key
+        })
+        .collect()
+}
+
 /// The synthetic camera database.
 #[derive(Clone, Debug, Default)]
 pub struct CameraDb {
@@ -208,5 +246,23 @@ mod tests {
         let cam = camera_at(0, "Tokyo", cities::TOKYO, Resolution::VGA, 30.0);
         let r = StreamRequest::new(cam, Program::Zf, 8.0);
         assert_eq!(r.label(), "ZF@8.00fps/Tokyo");
+    }
+
+    #[test]
+    fn stream_keys_distinguish_fps_tiers_and_duplicates() {
+        let cam = camera_at(0, "Tokyo", cities::TOKYO, Resolution::VGA, 30.0);
+        let requests = vec![
+            StreamRequest::new(cam.clone(), Program::Zf, 1.0),
+            StreamRequest::new(cam.clone(), Program::Zf, 8.0), // same camera+program, other tier
+            StreamRequest::new(cam, Program::Zf, 1.0),         // exact duplicate of [0]
+        ];
+        let keys = stream_keys(&requests);
+        assert_eq!(keys.len(), 3);
+        assert_ne!(keys[0], keys[1], "fps tiers are distinct streams");
+        assert_ne!(keys[0], keys[2], "duplicates get distinct occurrences");
+        assert_eq!(keys[0].occurrence, 0);
+        assert_eq!(keys[2].occurrence, 1);
+        // Keys are order-stable: recomputing yields the same alignment.
+        assert_eq!(keys, stream_keys(&requests));
     }
 }

@@ -8,7 +8,7 @@
 //! the serving layer.
 
 use crate::catalog::{Catalog, Dims};
-use crate::coordinator::Plan;
+use crate::coordinator::{Plan, SlotId};
 use crate::error::{Error, Result};
 
 /// Boot latency of a fresh instance (seconds). EC2-era instances took on the
@@ -81,6 +81,9 @@ pub struct CloudSim {
     /// accumulate an unbounded terminated-instance history, so per-id
     /// lookups must not scan it.
     by_id: std::collections::BTreeMap<InstanceId, usize>,
+    /// Plan slot → provisioned instance, remembered across `apply_plan`
+    /// calls so a surviving planned slot keeps its physical instance.
+    bindings: std::collections::BTreeMap<SlotId, InstanceId>,
     accrued_usd: f64,
 }
 
@@ -93,6 +96,7 @@ impl CloudSim {
             next_id: 0,
             instances: Vec::new(),
             by_id: std::collections::BTreeMap::new(),
+            bindings: std::collections::BTreeMap::new(),
             accrued_usd: 0.0,
         }
     }
@@ -187,42 +191,66 @@ impl CloudSim {
             .sum()
     }
 
-    /// Reconcile the fleet with a plan: terminate surplus instances, keep
-    /// matching ones, provision the rest. Returns ids aligned with
+    /// Reconcile the fleet with a plan: keep surviving instances, terminate
+    /// surplus ones, provision the rest. Returns ids aligned with
     /// `plan.instances` order.
+    ///
+    /// Matching is **id-stable**: a planned slot that was bound to a
+    /// physical instance by a previous `apply_plan` keeps that instance
+    /// (same [`SlotId`], same label, still alive). Unbound planned
+    /// instances then claim remaining same-label instances oldest-id-first
+    /// — a deterministic FIFO, so applying the same plan twice yields the
+    /// same ids (the old LIFO label pool could permute them).
     pub fn apply_plan(&mut self, plan: &Plan) -> Result<Vec<InstanceId>> {
-        // Pool alive instances by label.
-        let mut pool: std::collections::BTreeMap<String, Vec<InstanceId>> =
-            std::collections::BTreeMap::new();
-        for inst in self.instances.iter().filter(|i| i.alive()) {
-            pool.entry(inst.label.clone()).or_default().push(inst.id);
-        }
-        let mut assigned = Vec::with_capacity(plan.instances.len());
-        let mut to_provision = Vec::new();
-        for planned in &plan.instances {
-            match pool.get_mut(&planned.label).and_then(|v| v.pop()) {
-                Some(id) => assigned.push(Some(id)),
-                None => {
-                    assigned.push(None);
-                    to_provision.push((planned.type_idx, planned.region_idx));
+        let mut assigned: Vec<Option<InstanceId>> = vec![None; plan.instances.len()];
+        let mut claimed: std::collections::BTreeSet<InstanceId> =
+            std::collections::BTreeSet::new();
+        // Pass 1: stable slot bindings.
+        for (pi, planned) in plan.instances.iter().enumerate() {
+            if let Some(&id) = self.bindings.get(&planned.slot_id) {
+                let matches = self
+                    .get(id)
+                    .is_some_and(|inst| inst.alive() && inst.label == planned.label);
+                if matches && claimed.insert(id) {
+                    assigned[pi] = Some(id);
                 }
             }
         }
-        // Terminate leftovers.
+        // Pass 2: same-label claims, oldest id first (`instances` is in
+        // provision order, so per-label queues come out id-ascending).
+        let mut pool: std::collections::BTreeMap<&str, std::collections::VecDeque<InstanceId>> =
+            std::collections::BTreeMap::new();
+        for inst in self.instances.iter().filter(|i| i.alive() && !claimed.contains(&i.id)) {
+            pool.entry(inst.label.as_str()).or_default().push_back(inst.id);
+        }
+        for (pi, planned) in plan.instances.iter().enumerate() {
+            if assigned[pi].is_none() {
+                if let Some(id) = pool.get_mut(planned.label.as_str()).and_then(|v| v.pop_front())
+                {
+                    claimed.insert(id);
+                    assigned[pi] = Some(id);
+                }
+            }
+        }
+        // Terminate unclaimed leftovers.
         let leftovers: Vec<InstanceId> = pool.values().flatten().copied().collect();
         for id in leftovers {
             self.terminate(id)?;
         }
-        // Provision the gaps.
-        let mut fresh = to_provision
-            .into_iter()
-            .map(|(t, r)| self.provision(t, r))
-            .collect::<Result<Vec<_>>>()?
-            .into_iter();
-        let ids: Vec<InstanceId> = assigned
-            .into_iter()
-            .map(|slot| slot.unwrap_or_else(|| fresh.next().expect("fresh instance")))
-            .collect();
+        // Provision the gaps and rebind slots.
+        let ids: Vec<InstanceId> = plan
+            .instances
+            .iter()
+            .zip(assigned)
+            .map(|(planned, slot)| match slot {
+                Some(id) => Ok(id),
+                None => self.provision(planned.type_idx, planned.region_idx),
+            })
+            .collect::<Result<_>>()?;
+        self.bindings.clear();
+        for (planned, &id) in plan.instances.iter().zip(&ids) {
+            self.bindings.insert(planned.slot_id, id);
+        }
         // Set loads from the plan's packing.
         let loads: Vec<Dims> = plan
             .packing
@@ -335,5 +363,37 @@ mod tests {
         assert_eq!(ids3.len(), plan_low.instances.len());
         // Hourly rate matches the plan's cost.
         assert!((s.hourly_rate() - plan_low.cost_per_hour).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reapplying_the_same_plan_keeps_instance_ids() {
+        // Regression: the old LIFO label pool could permute which physical
+        // instance backed which planned slot across identical applications.
+        let catalog =
+            Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let planner = Planner::new(catalog.clone(), PlannerConfig::st3());
+        let mut s = CloudSim::new(catalog);
+        let requests: Vec<StreamRequest> = (0..6)
+            .map(|i| {
+                StreamRequest::new(
+                    camera_at(i, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0),
+                    Program::Zf,
+                    1.0,
+                )
+            })
+            .collect();
+        let plan = planner.plan(&requests).unwrap();
+        let ids1 = s.apply_plan(&plan).unwrap();
+        let alive_before: Vec<InstanceId> = s.alive().iter().map(|i| i.id).collect();
+        let ids2 = s.apply_plan(&plan).unwrap();
+        assert_eq!(ids1, ids2, "identical plan must keep identical instance ids");
+        let alive_after: Vec<InstanceId> = s.alive().iter().map(|i| i.id).collect();
+        assert_eq!(alive_before, alive_after, "no provision/terminate on a no-op apply");
+
+        // An identical workload re-planned from scratch (fresh slot ids)
+        // still reuses the fleet via the deterministic label FIFO.
+        let replanned = planner.plan(&requests).unwrap();
+        let ids3 = s.apply_plan(&replanned).unwrap();
+        assert_eq!(ids1, ids3, "re-planned identical plan must reuse the same instances");
     }
 }

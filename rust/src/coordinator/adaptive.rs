@@ -14,21 +14,39 @@
 //! during runtime", cf. Kaseb et al. \[14\]).
 
 use super::pipeline::{PipelineStats, ReplanContext};
-use super::{Plan, Planner};
-use crate::cameras::StreamRequest;
+use super::{Plan, Planner, SlotId};
+use crate::cameras::{stream_keys, StreamRequest};
 use crate::error::Result;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 /// What changes when moving from one plan to the next.
+///
+/// All counts are **per instance**, derived from the old↔new instance
+/// pairing: an old instance either survives (pairs with a new one — by
+/// stable slot id when the sticky Expand carried it over, otherwise with a
+/// same-label instance)
+/// or is terminated; unpaired new instances are provisioned. A stream
+/// "moves" when its host instance — not merely its host *label* — changes.
+/// The pairing mirrors [`CloudSim::apply_plan`]'s reconciliation (stable
+/// slot bindings first, then a same-label FIFO); sticky re-plans resolve
+/// almost entirely through slot ids, where the two agree exactly. Only the
+/// FIFO tie-breaks can differ (plan order here vs oldest-physical-id in the
+/// simulator) when several same-label instances lack slot bindings.
+///
+/// [`CloudSim::apply_plan`]: crate::cloudsim::CloudSim::apply_plan
 #[derive(Clone, Debug, Default)]
 pub struct MigrationReport {
     /// Instance labels to provision (counts).
     pub provision: Vec<(String, usize)>,
     /// Instance labels to terminate (counts).
     pub terminate: Vec<(String, usize)>,
-    /// Number of instances carried over unchanged (same type+location).
+    /// Instances carried over (paired old→new, same type+location).
     pub kept: usize,
-    /// Streams whose host instance type/location changed.
+    /// Surviving streams whose host instance changed.
     pub streams_moved: usize,
+    /// Streams present in both the old and new workload (the churn
+    /// denominator; departed and newly arrived streams can't "move").
+    pub streams_surviving: usize,
     /// Hourly cost before/after.
     pub cost_before: f64,
     pub cost_after: f64,
@@ -41,31 +59,58 @@ impl MigrationReport {
     pub fn cost_delta(&self) -> f64 {
         self.cost_after - self.cost_before
     }
+
+    /// Fraction of surviving streams that moved, in [0, 1] (0 when no
+    /// stream survived).
+    pub fn churn_ratio(&self) -> f64 {
+        if self.streams_surviving == 0 {
+            0.0
+        } else {
+            self.streams_moved as f64 / self.streams_surviving as f64
+        }
+    }
 }
 
-/// Count instances by label.
-fn census(plan: &Plan) -> std::collections::BTreeMap<String, usize> {
-    let mut m = std::collections::BTreeMap::new();
+/// Count instances by label (cold-start provisioning only).
+fn census(plan: &Plan) -> BTreeMap<String, usize> {
+    let mut m = BTreeMap::new();
     for inst in &plan.instances {
         *m.entry(inst.label.clone()).or_insert(0) += 1;
     }
     m
 }
 
-/// Per-stream host label (keyed by the request's camera id + program), used
-/// to detect stream moves across re-plans even when request order changes.
-fn stream_hosts(
-    plan: &Plan,
-    requests: &[StreamRequest],
-) -> std::collections::BTreeMap<(u64, &'static str), String> {
-    let mut m = std::collections::BTreeMap::new();
-    for inst in &plan.instances {
-        for &s in &inst.streams {
-            let r = &requests[s];
-            m.insert((r.camera.id, r.program.name()), inst.label.clone());
+/// Pair each old plan instance with the new instance it survives as:
+/// stable [`SlotId`] match first (sticky re-plans carry slot ids across),
+/// then remaining same-label instances in plan order (covers cold re-plans,
+/// whose slot ids are all fresh). Returns `pair[old_idx] = Some(new_idx)`.
+fn pair_instances(old: &Plan, new: &Plan) -> Vec<Option<usize>> {
+    let mut pair: Vec<Option<usize>> = vec![None; old.instances.len()];
+    let mut new_taken = vec![false; new.instances.len()];
+    let by_slot: HashMap<SlotId, usize> =
+        new.instances.iter().enumerate().map(|(i, inst)| (inst.slot_id, i)).collect();
+    for (oi, inst) in old.instances.iter().enumerate() {
+        if let Some(&ni) = by_slot.get(&inst.slot_id) {
+            if new.instances[ni].label == inst.label && !new_taken[ni] {
+                pair[oi] = Some(ni);
+                new_taken[ni] = true;
+            }
         }
     }
-    m
+    let mut free: BTreeMap<&str, VecDeque<usize>> = BTreeMap::new();
+    for (ni, inst) in new.instances.iter().enumerate() {
+        if !new_taken[ni] {
+            free.entry(inst.label.as_str()).or_default().push_back(ni);
+        }
+    }
+    for (oi, inst) in old.instances.iter().enumerate() {
+        if pair[oi].is_none() {
+            if let Some(ni) = free.get_mut(inst.label.as_str()).and_then(|v| v.pop_front()) {
+                pair[oi] = Some(ni);
+            }
+        }
+    }
+    pair
 }
 
 /// The adaptive manager: owns the current plan, the persistent pipeline
@@ -109,28 +154,47 @@ impl AdaptiveManager {
 
         if let Some((old_requests, old_plan)) = &self.current {
             report.cost_before = old_plan.cost_per_hour;
-            let old_census = census(old_plan);
-            let new_census = census(&new_plan);
-            for (label, &n_new) in &new_census {
-                let n_old = old_census.get(label).copied().unwrap_or(0);
-                if n_new > n_old {
-                    report.provision.push((label.clone(), n_new - n_old));
-                }
-                report.kept += n_new.min(n_old);
+            // Per-instance pairing: which old instance survives as which
+            // new one. Unpaired news are provisions, unpaired olds are
+            // terminations — no label-census approximation.
+            let pair = pair_instances(old_plan, &new_plan);
+            report.kept = pair.iter().flatten().count();
+            let mut new_paired = vec![false; new_plan.instances.len()];
+            for &ni in pair.iter().flatten() {
+                new_paired[ni] = true;
             }
-            for (label, &n_old) in &old_census {
-                let n_new = new_census.get(label).copied().unwrap_or(0);
-                if n_old > n_new {
-                    report.terminate.push((label.clone(), n_old - n_new));
+            let mut provision: BTreeMap<String, usize> = BTreeMap::new();
+            for (ni, inst) in new_plan.instances.iter().enumerate() {
+                if !new_paired[ni] {
+                    *provision.entry(inst.label.clone()).or_insert(0) += 1;
                 }
             }
-            // Stream moves: host label changed for a surviving stream.
-            let old_hosts = stream_hosts(old_plan, old_requests);
-            let new_hosts = stream_hosts(&new_plan, &requests);
-            for (key, new_label) in &new_hosts {
-                if let Some(old_label) = old_hosts.get(key) {
-                    if old_label != new_label {
-                        report.streams_moved += 1;
+            report.provision = provision.into_iter().collect();
+            let mut terminate: BTreeMap<String, usize> = BTreeMap::new();
+            for (oi, inst) in old_plan.instances.iter().enumerate() {
+                if pair[oi].is_none() {
+                    *terminate.entry(inst.label.clone()).or_insert(0) += 1;
+                }
+            }
+            report.terminate = terminate.into_iter().collect();
+            // Stream moves, by full stream identity (camera + program + fps
+            // tier + occurrence): a surviving stream moved iff its new host
+            // is not the instance its old host survives as.
+            let old_keys = stream_keys(old_requests);
+            let new_keys = stream_keys(&requests);
+            let mut old_host: HashMap<_, usize> = HashMap::new();
+            for (oi, inst) in old_plan.instances.iter().enumerate() {
+                for &s in &inst.streams {
+                    old_host.insert(old_keys[s], oi);
+                }
+            }
+            for (ni, inst) in new_plan.instances.iter().enumerate() {
+                for &s in &inst.streams {
+                    if let Some(&oi) = old_host.get(&new_keys[s]) {
+                        report.streams_surviving += 1;
+                        if pair[oi] != Some(ni) {
+                            report.streams_moved += 1;
+                        }
                     }
                 }
             }
@@ -210,8 +274,46 @@ mod tests {
         assert!(report.provision.is_empty(), "{report:?}");
         assert!(report.terminate.is_empty(), "{report:?}");
         assert_eq!(report.cost_delta(), 0.0);
+        assert_eq!(report.streams_moved, 0, "sticky re-plan must not move streams");
+        assert_eq!(report.streams_surviving, 6);
+        assert_eq!(report.churn_ratio(), 0.0);
+        assert_eq!(report.kept, mgr.current_plan().unwrap().instances.len());
         assert!(report.pipeline.warm_started, "second re-plan must warm-start");
         assert!(report.pipeline.elig_cache_hits > 0);
+    }
+
+    #[test]
+    fn same_camera_fps_tiers_are_tracked_as_distinct_streams() {
+        // Regression: move accounting used to key streams by (camera id,
+        // program), so two tiers of the same camera+program collided in the
+        // host map and the second silently shadowed the first.
+        let tiers = || -> Vec<StreamRequest> {
+            let cam = camera_at(0, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0);
+            vec![
+                StreamRequest::new(cam.clone(), Program::Zf, 0.5),
+                StreamRequest::new(cam.clone(), Program::Zf, 1.0),
+                StreamRequest::new(cam, Program::Zf, 1.0), // exact duplicate
+            ]
+        };
+        let mut mgr = AdaptiveManager::new(planner());
+        mgr.replan(tiers()).unwrap();
+        let report = mgr.replan(tiers()).unwrap();
+        assert_eq!(report.streams_surviving, 3, "all tiers + duplicates tracked");
+        assert_eq!(report.streams_moved, 0);
+    }
+
+    #[test]
+    fn departure_moves_at_most_the_packing_diff() {
+        let mut mgr = AdaptiveManager::new(planner());
+        mgr.replan(workload(1.0, 6)).unwrap();
+        // One camera leaves; the five survivors may consolidate, but a
+        // sticky re-plan must not re-deal all of them.
+        let report = mgr.replan(workload(1.0, 5)).unwrap();
+        assert_eq!(report.streams_surviving, 5);
+        assert!(
+            report.streams_moved < 5,
+            "sticky expand re-dealt every surviving stream: {report:?}"
+        );
     }
 
     #[test]

@@ -1,29 +1,223 @@
 //! Pipeline stage 4 — **Expand**: turn the solved packing's per-group counts
 //! into per-instance stream assignments for the serving layer.
 //!
-//! Purely mechanical: each packed bin becomes one [`PlannedInstance`]; group
-//! counts are drawn from the group membership queues in request order, so
-//! the expansion is deterministic given (packing, members).
+//! The expansion is **sticky**: when a previous plan's assignment is
+//! available (threaded through the
+//! [`PlanContext`](super::pipeline::PlanContext)), the new assignment is
+//! computed as a matching against the old one. Every new bin is paired with
+//! the previous slot of the same instance type + region that shares the
+//! most surviving streams; paired bins inherit the slot's stable
+//! [`SlotId`] and keep each old stream in place as long as the new packing
+//! still counts room for its group there. Only the residual — the true
+//! packing diff — is placed by greedy transfer from the unassigned queues.
+//! A cold expansion (no previous assignment) degenerates to the
+//! deterministic request-order deal with fresh slot ids.
+//!
+//! Without stickiness, every re-plan re-dealt all streams from scratch, so
+//! `streams_moved` churned with queue order rather than with the packing
+//! diff — and each spurious move is a real reconnection and warm-state loss
+//! on the serving layer.
 
-use super::PlannedInstance;
+use super::{PlannedInstance, SlotId};
+use crate::cameras::StreamKey;
 use crate::error::{Error, Result};
 use crate::packing::{Packing, PackingProblem};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Expand group counts into per-instance stream lists.
+/// Process-wide slot id allocator: ids must stay unique across every
+/// planning context (the portfolio planner runs several), so surviving and
+/// fresh slots can never collide in a fleet reconciliation.
+static NEXT_SLOT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_slot_id() -> SlotId {
+    NEXT_SLOT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One slot of the previous plan's assignment: its stable id, the bin label
+/// it was provisioned as, and the streams it hosted (by stable key).
+#[derive(Clone, Debug)]
+pub struct PrevSlot {
+    pub slot_id: SlotId,
+    /// Bin identity ("type@region") — slots only stick to same-label bins.
+    pub label: String,
+    pub streams: Vec<StreamKey>,
+}
+
+/// The previous plan's stream→instance assignment, kept by the pipeline
+/// context so the next Expand can match against it.
+#[derive(Clone, Debug, Default)]
+pub struct PrevAssignment {
+    pub slots: Vec<PrevSlot>,
+}
+
+impl PrevAssignment {
+    /// Capture an assignment from a finished expansion. `keys[s]` is the
+    /// stable identity of request index `s`.
+    pub fn capture(instances: &[PlannedInstance], keys: &[StreamKey]) -> Self {
+        PrevAssignment {
+            slots: instances
+                .iter()
+                .map(|inst| PrevSlot {
+                    slot_id: inst.slot_id,
+                    label: inst.label.clone(),
+                    streams: inst.streams.iter().map(|&s| keys[s]).collect(),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Expand group counts into per-instance stream lists, minimizing movement
+/// against `prev` when present.
+///
+/// `keys[s]` must be the stable identity of request index `s` for every
+/// index appearing in `members`.
 pub fn run(
     problem: &PackingProblem,
     packing: &Packing,
     members: &[Vec<usize>],
+    keys: &[StreamKey],
+    prev: Option<&PrevAssignment>,
 ) -> Result<Vec<PlannedInstance>> {
-    let mut unassigned: Vec<std::collections::VecDeque<usize>> = members
+    let nb = packing.bins.len();
+
+    // Group of each request index, and stable key → request index.
+    let mut group_of: HashMap<usize, usize> = HashMap::new();
+    let mut key_to_idx: HashMap<StreamKey, usize> = HashMap::new();
+    for (g, mem) in members.iter().enumerate() {
+        for &s in mem {
+            group_of.insert(s, g);
+            key_to_idx.insert(keys[s], s);
+        }
+    }
+
+    // Remaining per-group need of each new bin (consumed by kept streams
+    // first, then by the transfer queues).
+    let mut need: Vec<Vec<usize>> = packing.bins.iter().map(|b| b.counts.clone()).collect();
+    let mut kept: Vec<Vec<usize>> = vec![Vec::new(); nb];
+    let mut slot_of_bin: Vec<Option<SlotId>> = vec![None; nb];
+    let mut placed: HashSet<usize> = HashSet::new();
+
+    if let Some(prev) = prev {
+        // Surviving streams of each previous slot, bucketed by new group.
+        let survivors: Vec<HashMap<usize, usize>> = prev
+            .slots
+            .iter()
+            .map(|slot| {
+                let mut per_group: HashMap<usize, usize> = HashMap::new();
+                for k in &slot.streams {
+                    if let Some(&idx) = key_to_idx.get(k) {
+                        *per_group.entry(group_of[&idx]).or_insert(0) += 1;
+                    }
+                }
+                per_group
+            })
+            .collect();
+
+        // Slots only ever pair with same-label bins, so the matching
+        // decomposes per label (BTreeMap for deterministic label order).
+        let mut slots_by_label: std::collections::BTreeMap<&str, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (si, slot) in prev.slots.iter().enumerate() {
+            slots_by_label.entry(slot.label.as_str()).or_default().push(si);
+        }
+        let mut bins_by_label: HashMap<&str, Vec<usize>> = HashMap::new();
+        for (bi, bin) in packing.bins.iter().enumerate() {
+            bins_by_label
+                .entry(problem.bins[bin.bin_type].label.as_str())
+                .or_default()
+                .push(bi);
+        }
+
+        let mut slot_taken = vec![false; prev.slots.len()];
+        let mut pairs: Vec<(usize, usize)> = Vec::new();
+        for (label, slots) in &slots_by_label {
+            let Some(bins) = bins_by_label.get(label) else { continue };
+            // Candidate pairings with *positive* kept-stream overlap, found
+            // via a group→bin index so cross-group pairs are never visited.
+            let mut bins_of_group: HashMap<usize, Vec<usize>> = HashMap::new();
+            for &bi in bins {
+                for (g, &c) in packing.bins[bi].counts.iter().enumerate() {
+                    if c > 0 {
+                        bins_of_group.entry(g).or_default().push(bi);
+                    }
+                }
+            }
+            let mut cands: Vec<(usize, usize, usize)> = Vec::new();
+            for &si in slots {
+                let mut touched: Vec<usize> = survivors[si]
+                    .keys()
+                    .filter_map(|g| bins_of_group.get(g))
+                    .flatten()
+                    .copied()
+                    .collect();
+                touched.sort_unstable();
+                touched.dedup();
+                for bi in touched {
+                    let overlap: usize = survivors[si]
+                        .iter()
+                        .map(|(&g, &n)| {
+                            n.min(packing.bins[bi].counts.get(g).copied().unwrap_or(0))
+                        })
+                        .sum();
+                    if overlap > 0 {
+                        cands.push((overlap, si, bi));
+                    }
+                }
+            }
+            // Greedy max-overlap matching; ties resolve in slot/bin order,
+            // so an unchanged packing reproduces the previous pairing
+            // exactly.
+            cands.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+            for (_, si, bi) in cands {
+                if !slot_taken[si] && slot_of_bin[bi].is_none() {
+                    slot_taken[si] = true;
+                    slot_of_bin[bi] = Some(prev.slots[si].slot_id);
+                    pairs.push((si, bi));
+                }
+            }
+            // Zero-overlap remainder pairs FIFO: the *instance* survives
+            // even if all its streams were re-dealt.
+            let leftover: Vec<usize> =
+                bins.iter().copied().filter(|&bi| slot_of_bin[bi].is_none()).collect();
+            let mut leftover = leftover.into_iter();
+            for &si in slots {
+                if slot_taken[si] {
+                    continue;
+                }
+                let Some(bi) = leftover.next() else { break };
+                slot_taken[si] = true;
+                slot_of_bin[bi] = Some(prev.slots[si].slot_id);
+                pairs.push((si, bi));
+            }
+        }
+        // Apply the keeps: each paired bin retains its slot's surviving
+        // streams, bounded by the bin's per-group counts.
+        for (si, bi) in pairs {
+            for k in &prev.slots[si].streams {
+                if let Some(&idx) = key_to_idx.get(k) {
+                    let g = group_of[&idx];
+                    if need[bi][g] > 0 && placed.insert(idx) {
+                        need[bi][g] -= 1;
+                        kept[bi].push(idx);
+                    }
+                }
+            }
+        }
+    }
+
+    // Transfer queues: members not kept in place, in request order.
+    let mut unassigned: Vec<VecDeque<usize>> = members
         .iter()
-        .map(|m| m.iter().copied().collect())
+        .map(|m| m.iter().copied().filter(|s| !placed.contains(s)).collect())
         .collect();
-    let mut instances = Vec::with_capacity(packing.bins.len());
-    for bin in &packing.bins {
+
+    let mut instances = Vec::with_capacity(nb);
+    for (bi, bin) in packing.bins.iter().enumerate() {
         let bt = &problem.bins[bin.bin_type];
-        let mut streams = Vec::new();
-        for (g, &c) in bin.counts.iter().enumerate() {
+        let mut streams = std::mem::take(&mut kept[bi]);
+        for (g, &c) in need[bi].iter().enumerate() {
             for _ in 0..c {
                 let idx = unassigned[g]
                     .pop_front()
@@ -32,6 +226,7 @@ pub fn run(
             }
         }
         instances.push(PlannedInstance {
+            slot_id: slot_of_bin[bi].unwrap_or_else(fresh_slot_id),
             bin_type: bin.bin_type,
             type_idx: bt.type_idx,
             region_idx: bt.region_idx,
@@ -41,7 +236,14 @@ pub fn run(
             streams,
         });
     }
-    debug_assert!(unassigned.iter().all(|q| q.is_empty()));
+    // A packing that under-covers a group would silently drop streams in
+    // release builds if this were only debug-asserted — make it hard.
+    let dropped: usize = unassigned.iter().map(VecDeque::len).sum();
+    if dropped > 0 {
+        return Err(Error::solver(format!(
+            "packing under-covers the workload: {dropped} stream(s) left unassigned"
+        )));
+    }
     Ok(instances)
 }
 
@@ -51,22 +253,40 @@ mod tests {
     use crate::catalog::Dims;
     use crate::packing::{BinType, ItemGroup, PackedBin};
 
-    fn tiny_problem() -> PackingProblem {
+    /// Distinct dummy keys for request indices 0..n.
+    fn dummy_keys(n: usize) -> Vec<StreamKey> {
+        (0..n)
+            .map(|i| StreamKey {
+                camera_id: i as u64,
+                program: "ZF",
+                fps_bits: 1.0f64.to_bits(),
+                occurrence: 0,
+            })
+            .collect()
+    }
+
+    fn problem_with(count: usize, bins: usize) -> PackingProblem {
         PackingProblem::new(
             vec![ItemGroup {
                 label: "g".into(),
-                count: 3,
-                demand_per_bin: vec![Some(Dims::new(1.0, 1.0, 0.0, 0.0))],
+                count,
+                demand_per_bin: vec![Some(Dims::new(1.0, 1.0, 0.0, 0.0)); bins],
             }],
-            vec![BinType {
-                label: "cpu@r".into(),
-                capacity: Dims::new(8.0, 15.0, 0.0, 0.0),
-                cost: 1.0,
-                type_idx: 4,
-                region_idx: 2,
-                has_gpu: false,
-            }],
+            (0..bins)
+                .map(|_| BinType {
+                    label: "cpu@r".into(),
+                    capacity: Dims::new(8.0, 15.0, 0.0, 0.0),
+                    cost: 1.0,
+                    type_idx: 4,
+                    region_idx: 2,
+                    has_gpu: false,
+                })
+                .collect(),
         )
+    }
+
+    fn tiny_problem() -> PackingProblem {
+        problem_with(3, 1)
     }
 
     #[test]
@@ -79,12 +299,13 @@ mod tests {
             ],
         };
         let members = vec![vec![7, 9, 11]];
-        let instances = run(&problem, &packing, &members).unwrap();
+        let instances = run(&problem, &packing, &members, &dummy_keys(12), None).unwrap();
         assert_eq!(instances.len(), 2);
         assert_eq!(instances[0].streams, vec![7, 9]);
         assert_eq!(instances[1].streams, vec![11]);
         assert_eq!(instances[0].type_idx, 4);
         assert_eq!(instances[0].region_idx, 2);
+        assert_ne!(instances[0].slot_id, instances[1].slot_id, "slots are distinct");
     }
 
     #[test]
@@ -94,6 +315,110 @@ mod tests {
             bins: vec![PackedBin { bin_type: 0, counts: vec![4] }],
         };
         let members = vec![vec![0, 1, 2]];
-        assert!(run(&problem, &packing, &members).is_err());
+        assert!(run(&problem, &packing, &members, &dummy_keys(3), None).is_err());
+    }
+
+    #[test]
+    fn under_covering_packing_is_a_hard_error() {
+        // Regression: this was only a debug_assert!, so a packing that
+        // under-covers a group silently dropped streams in release builds.
+        let problem = tiny_problem();
+        let packing = Packing {
+            bins: vec![PackedBin { bin_type: 0, counts: vec![2] }],
+        };
+        let members = vec![vec![0, 1, 2]];
+        let err = run(&problem, &packing, &members, &dummy_keys(3), None).unwrap_err();
+        assert!(err.to_string().contains("under-covers"), "{err}");
+    }
+
+    #[test]
+    fn sticky_expansion_keeps_streams_on_their_old_slots() {
+        let problem = problem_with(4, 1);
+        let packing = Packing {
+            bins: vec![
+                PackedBin { bin_type: 0, counts: vec![2] },
+                PackedBin { bin_type: 0, counts: vec![2] },
+            ],
+        };
+        let members = vec![vec![0, 1, 2, 3]];
+        let keys = dummy_keys(4);
+        // Previous plan hosted [2, 3] on slot 70 and [0, 1] on slot 90 —
+        // the reverse of what a cold request-order deal would produce.
+        let prev = PrevAssignment {
+            slots: vec![
+                PrevSlot { slot_id: 70, label: "cpu@r".into(), streams: vec![keys[2], keys[3]] },
+                PrevSlot { slot_id: 90, label: "cpu@r".into(), streams: vec![keys[0], keys[1]] },
+            ],
+        };
+        let instances = run(&problem, &packing, &members, &keys, Some(&prev)).unwrap();
+        assert_eq!(instances[0].slot_id, 70);
+        assert_eq!(instances[0].streams, vec![2, 3]);
+        assert_eq!(instances[1].slot_id, 90);
+        assert_eq!(instances[1].streams, vec![0, 1]);
+    }
+
+    #[test]
+    fn shrunk_packing_moves_only_the_diff() {
+        // Stream 3 departed and the packing consolidated to one bin: the
+        // surviving bin keeps its two incumbents and receives exactly one
+        // transferred stream.
+        let problem = problem_with(3, 1);
+        let packing = Packing {
+            bins: vec![PackedBin { bin_type: 0, counts: vec![3] }],
+        };
+        let members = vec![vec![0, 1, 2]];
+        let keys = dummy_keys(4);
+        let prev = PrevAssignment {
+            slots: vec![
+                PrevSlot { slot_id: 11, label: "cpu@r".into(), streams: vec![keys[0], keys[1]] },
+                PrevSlot { slot_id: 12, label: "cpu@r".into(), streams: vec![keys[2], keys[3]] },
+            ],
+        };
+        let instances = run(&problem, &packing, &members, &keys[..3], Some(&prev)).unwrap();
+        assert_eq!(instances.len(), 1);
+        assert_eq!(instances[0].slot_id, 11, "bin pairs with the larger-overlap slot");
+        assert_eq!(instances[0].streams, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn label_mismatch_never_sticks() {
+        let problem = tiny_problem();
+        let packing = Packing {
+            bins: vec![PackedBin { bin_type: 0, counts: vec![3] }],
+        };
+        let members = vec![vec![0, 1, 2]];
+        let keys = dummy_keys(3);
+        // u64::MAX can never come out of the fresh-id allocator, so a match
+        // here could only mean the label-mismatched slot was inherited.
+        let prev = PrevAssignment {
+            slots: vec![PrevSlot {
+                slot_id: u64::MAX,
+                label: "gpu@elsewhere".into(),
+                streams: vec![keys[0], keys[1], keys[2]],
+            }],
+        };
+        let instances = run(&problem, &packing, &members, &keys, Some(&prev)).unwrap();
+        assert_ne!(instances[0].slot_id, u64::MAX, "a different bin type is a new slot");
+        assert_eq!(instances[0].streams, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn identical_replan_reproduces_the_assignment_bit_for_bit() {
+        let problem = problem_with(5, 1);
+        let packing = Packing {
+            bins: vec![
+                PackedBin { bin_type: 0, counts: vec![3] },
+                PackedBin { bin_type: 0, counts: vec![2] },
+            ],
+        };
+        let members = vec![vec![0, 1, 2, 3, 4]];
+        let keys = dummy_keys(5);
+        let first = run(&problem, &packing, &members, &keys, None).unwrap();
+        let prev = PrevAssignment::capture(&first, &keys);
+        let second = run(&problem, &packing, &members, &keys, Some(&prev)).unwrap();
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.slot_id, b.slot_id);
+            assert_eq!(a.streams, b.streams);
+        }
     }
 }

@@ -17,7 +17,10 @@
 //!      cheapest-fill, Mohan et al. \[6\]), GCL (RTT filter + exact arc-flow
 //!      packing, Mohan et al. \[8\]),
 //! 4. [`expand`] — expand the packing into per-instance stream assignments
-//!    for the serving layer.
+//!    for the serving layer. The expansion is *sticky*: each planned
+//!    instance carries a stable [`SlotId`], and on a re-plan every stream
+//!    stays on its previous slot whenever the new packing still has room
+//!    for its group there, so only the true packing diff moves.
 //!
 //! Each stage's artifact is cached in a [`pipeline::PlanContext`], so the
 //! dynamic manager ([`adaptive`]) re-plans incrementally: unchanged cameras
@@ -124,9 +127,22 @@ impl PlannerConfig {
     }
 }
 
+/// Stable identity of one planned instance slot across re-plans.
+///
+/// The Expand stage assigns each planned instance a process-unique slot id;
+/// a re-plan through the same [`PlanContext`] reuses the previous plan's ids
+/// for surviving instances (same instance type + region, still needed by
+/// the new packing), so downstream consumers — [`adaptive::MigrationReport`]
+/// and [`CloudSim::apply_plan`](crate::cloudsim::CloudSim::apply_plan) —
+/// can reconcile fleets per instance instead of by label census.
+pub type SlotId = u64;
+
 /// One provisioned instance in a plan.
 #[derive(Clone, Debug)]
 pub struct PlannedInstance {
+    /// Stable slot identity: preserved across re-plans while the instance
+    /// survives, fresh for newly provisioned slots.
+    pub slot_id: SlotId,
     /// Index into `plan.problem.bins`.
     pub bin_type: usize,
     /// Catalog indices + label for display / provisioning.

@@ -14,7 +14,7 @@
 //! | ProblemBuild | bin list / demand vectors    | hardware filter / group key        |
 //! | Solve        | compressed arc-flow graphs   | (capacity grid, quantized items)   |
 //! | Solve        | previous packing (incumbent) | group-key translation              |
-//! | Expand       | —  (pure function)           | —                                  |
+//! | Expand       | previous stream→slot assignment | stable stream keys              |
 //!
 //! On top of the caches the Solve stage decomposes the packing problem into
 //! independent per-region-cluster subproblems (streams whose RTT circles
@@ -28,8 +28,9 @@
 //! the monolithic heuristic fallback, never regress it.
 
 use super::eligibility::{self, EligCache, GroupKey, GroupSet};
-use super::{expand, LocationPolicy, Plan, PlannerConfig, SolverKind};
-use crate::cameras::StreamRequest;
+use super::expand::{self, PrevAssignment};
+use super::{LocationPolicy, Plan, PlannerConfig, SolverKind};
+use crate::cameras::{stream_keys, StreamRequest};
 use crate::catalog::{Catalog, Dims, NUM_DIMS};
 use crate::error::{Error, Result};
 use crate::geo;
@@ -156,8 +157,11 @@ const DEMAND_CACHE_CAPACITY: usize = 16_384;
 /// Persistent cross-re-plan state for one (catalog, planner-config) pair.
 ///
 /// Dropping the context (or planning with a fresh one) gives exactly the
-/// cold planner; the context only ever changes *how fast* a plan is found,
-/// never *which* plan is found on identical inputs.
+/// cold planner; the caches only ever change *how fast* a packing is found,
+/// never *which* packing (bins and cost) is found on identical inputs. The
+/// Expand stage is the one place the context changes the output itself:
+/// stream→instance assignments stick to the previous plan's slots, so a
+/// re-plan moves only the packing diff instead of re-dealing every stream.
 #[derive(Default)]
 pub struct PlanContext {
     /// Fingerprint of the (catalog, config) pair the caches are valid for;
@@ -171,6 +175,9 @@ pub struct PlanContext {
     /// Memoized per-subproblem solutions (see [`SolveKey`]).
     solutions: HashMap<SolveKey, (Packing, SolveMethod)>,
     last: Option<LastPlan>,
+    /// The previous plan's stream→slot assignment, matched against by the
+    /// sticky Expand stage.
+    last_assign: Option<PrevAssignment>,
     /// Telemetry of the most recent run through this context.
     pub stats: PipelineStats,
 }
@@ -188,9 +195,11 @@ impl PlanContext {
         }
     }
 
-    /// Forget the previous solution (keeps the pure-function caches).
+    /// Forget the previous solution and assignment (keeps the pure-function
+    /// caches).
     pub fn clear_warm_start(&mut self) {
         self.last = None;
+        self.last_assign = None;
     }
 }
 
@@ -313,8 +322,10 @@ pub fn plan_with_context(
     )?;
     packing.validate(&problem)?;
 
-    // Stage 4: Expand.
-    let instances = expand::run(&problem, &packing, &groups.members)?;
+    // Stage 4: Expand — sticky against the previous assignment.
+    let skeys = stream_keys(requests);
+    let instances =
+        expand::run(&problem, &packing, &groups.members, &skeys, ctx.last_assign.as_ref())?;
 
     let cost = packing.total_cost(&problem);
     let (non_gpu, gpu) = packing.count_by_gpu(&problem);
@@ -323,6 +334,7 @@ pub fn plan_with_context(
         packing: packing.clone(),
         num_bins: problem.bins.len(),
     });
+    ctx.last_assign = Some(PrevAssignment::capture(&instances, &skeys));
     ctx.stats = stats.clone();
     Ok(Plan {
         problem,
@@ -874,6 +886,21 @@ mod tests {
             "identical inputs must re-plan to the identical cost"
         );
         assert_eq!(warm.instances.len(), cold.instances.len());
+    }
+
+    #[test]
+    fn warm_replan_keeps_slot_ids_and_assignments() {
+        let catalog = crate::catalog::Catalog::builtin();
+        let cfg = PlannerConfig::gcl();
+        let requests = worldwide_requests();
+        let mut ctx = PlanContext::new();
+        let first = plan_with_context(&catalog, &cfg, &requests, &mut ctx).unwrap();
+        let second = plan_with_context(&catalog, &cfg, &requests, &mut ctx).unwrap();
+        assert_eq!(first.instances.len(), second.instances.len());
+        for (a, b) in first.instances.iter().zip(&second.instances) {
+            assert_eq!(a.slot_id, b.slot_id, "surviving slots keep their ids");
+            assert_eq!(a.streams, b.streams, "sticky expand must not re-deal streams");
+        }
     }
 
     #[test]

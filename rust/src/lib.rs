@@ -36,7 +36,11 @@
 //! * the previous packing is translated onto the new problem and seeds both
 //!   the greedy warm-start fill ([`packing::heuristic::warm_start_fill`])
 //!   and the exact solver's incumbent cut
-//!   ([`packing::mcvbp::solve_with`]).
+//!   ([`packing::mcvbp::solve_with`]),
+//! * the previous stream→instance assignment is matched against by the
+//!   sticky Expand stage ([`coordinator::expand`]): surviving instances
+//!   keep their stable [`SlotId`](coordinator::SlotId) and their streams,
+//!   so `streams_moved` tracks the packing diff, not queue order.
 //!
 //! The Solve stage additionally decomposes the packing problem into
 //! independent per-region-cluster subproblems (streams whose RTT circles

@@ -262,8 +262,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     let db = camflow::cameras::CameraDb::synthetic(n, seed);
     let mut t = Table::new(&[
-        "hour", "fps", "instances", "$/h", "provisioned", "terminated", "moved", "plan ms",
-        "reuse",
+        "hour", "fps", "instances", "$/h", "provisioned", "terminated", "moved", "churn",
+        "plan ms", "reuse",
     ]);
     let mut static_cost = 0.0f64;
     let mut peak_rate = 0.0f64;
@@ -290,6 +290,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             format!("{}", report.provision.iter().map(|(_, n)| n).sum::<usize>()),
             format!("{}", report.terminate.iter().map(|(_, n)| n).sum::<usize>()),
             format!("{}", report.streams_moved),
+            format!("{:.0}%", report.churn_ratio() * 100.0),
             format!("{plan_ms:.1}"),
             format!("{:.0}%", report.pipeline.reuse_ratio() * 100.0),
         ]);

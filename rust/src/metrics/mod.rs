@@ -52,9 +52,12 @@ pub struct Histogram {
     /// Bucket upper bounds in microseconds.
     bounds_us: Vec<f64>,
     counts: Vec<AtomicU64>,
-    sum_us: AtomicU64,
+    /// Sum and max accumulate in integer *nanoseconds*: accumulating
+    /// truncated microseconds biased `mean_us` low (sub-microsecond samples
+    /// vanished entirely).
+    sum_ns: AtomicU64,
     count: AtomicU64,
-    max_us: AtomicU64,
+    max_ns: AtomicU64,
 }
 
 impl Default for Histogram {
@@ -65,7 +68,7 @@ impl Default for Histogram {
 
 impl Histogram {
     pub fn new() -> Self {
-        // 1us .. ~137s with 10% growth: 64 buckets cover it comfortably.
+        // 1 µs .. ~200 s with 1.35x growth: 64 buckets cover it comfortably.
         let mut bounds = Vec::new();
         let mut b = 1.0f64;
         while b < 2.0e8 {
@@ -76,9 +79,9 @@ impl Histogram {
         Histogram {
             bounds_us: bounds,
             counts: (0..=n).map(|_| AtomicU64::new(0)).collect(),
-            sum_us: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
             count: AtomicU64::new(0),
-            max_us: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
         }
     }
 
@@ -88,9 +91,10 @@ impl Histogram {
             .partition_point(|&b| b < us)
             .min(self.counts.len() - 1);
         self.counts[idx].fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us.max(0.0) as u64, Ordering::Relaxed);
+        let ns = (us.max(0.0) * 1e3).round() as u64;
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.max_us.fetch_max(us.max(0.0) as u64, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
     pub fn record(&self, d: std::time::Duration) {
@@ -106,11 +110,11 @@ impl Histogram {
         if c == 0 {
             return f64::NAN;
         }
-        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e3 / c as f64
     }
 
     pub fn max_us(&self) -> f64 {
-        self.max_us.load(Ordering::Relaxed) as f64
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1e3
     }
 
     /// Approximate percentile (bucket upper bound), q in [0, 100].
@@ -222,6 +226,20 @@ mod tests {
         assert_eq!(h.count(), 2);
         assert!((h.mean_us() - 200.0).abs() < 1.0);
         assert_eq!(h.max_us(), 300.0);
+    }
+
+    #[test]
+    fn fractional_microseconds_are_not_truncated() {
+        // Regression: sums accumulated `us as u64`, so sub-microsecond
+        // samples contributed 0 and every sample lost its fraction.
+        let h = Histogram::new();
+        for _ in 0..4 {
+            h.record_us(0.25);
+        }
+        assert!((h.mean_us() - 0.25).abs() < 1e-9, "mean={}", h.mean_us());
+        assert!((h.max_us() - 0.25).abs() < 1e-9);
+        h.record_us(1.5);
+        assert!((h.mean_us() - (4.0 * 0.25 + 1.5) / 5.0).abs() < 1e-9);
     }
 
     #[test]

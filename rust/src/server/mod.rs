@@ -12,7 +12,7 @@
 pub mod source;
 
 use crate::cameras::StreamRequest;
-use crate::coordinator::Plan;
+use crate::coordinator::{Plan, SlotId};
 use crate::error::{Error, Result};
 use crate::metrics::ServingMetrics;
 use crate::runtime::Engine;
@@ -64,6 +64,10 @@ impl Default for ServeConfig {
 /// Per-instance outcome.
 #[derive(Clone, Debug)]
 pub struct InstanceReport {
+    /// Stable slot identity of the planned instance — lets serving reports
+    /// from consecutive re-plans be correlated per instance (a surviving
+    /// slot keeps its id across sticky re-plans).
+    pub slot_id: SlotId,
     pub label: String,
     pub streams: usize,
     pub frames_in: u64,
@@ -337,6 +341,7 @@ pub fn serve(
     for (inst, m) in plan.instances.iter().zip(&per_instance_metrics) {
         total_analyzed += m.frames_analyzed.get();
         instances.push(InstanceReport {
+            slot_id: inst.slot_id,
             label: inst.label.clone(),
             streams: inst.streams.len(),
             frames_in: m.frames_in.get(),

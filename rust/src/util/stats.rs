@@ -1,6 +1,10 @@
 //! Summary statistics used by the bench harness, metrics, and experiments.
 
 /// Online + batch summary of a sample set.
+///
+/// Empty-set convention: `mean`, `min`, `max`, and `percentile` all return
+/// NaN (previously `min`/`max` returned ±∞, which silently survived
+/// comparisons that NaN would have surfaced).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     samples: Vec<f64>,
@@ -54,10 +58,16 @@ impl Summary {
     }
 
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
         self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -129,6 +139,8 @@ mod tests {
         let mut s = Summary::new();
         assert!(s.mean().is_nan());
         assert!(s.p50().is_nan());
+        assert!(s.min().is_nan(), "empty min must match the NaN convention");
+        assert!(s.max().is_nan(), "empty max must match the NaN convention");
     }
 
     #[test]

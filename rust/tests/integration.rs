@@ -235,6 +235,49 @@ fn adaptive_manager_full_cycle_with_sim() {
 }
 
 #[test]
+fn sticky_replan_moves_only_the_diff_and_fleet_stays_consistent() {
+    let planner = Planner::new(fig3_catalog(), PlannerConfig::st3());
+    let mut mgr = camflow::coordinator::adaptive::AdaptiveManager::new(planner);
+    let mut sim = CloudSim::new(fig3_catalog());
+
+    let mk = |ids: std::ops::Range<u64>| -> Vec<StreamRequest> {
+        ids.map(|i| {
+            StreamRequest::new(
+                camera_at(i, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0),
+                Program::Zf,
+                1.0,
+            )
+        })
+        .collect()
+    };
+
+    mgr.replan(mk(0..6)).unwrap();
+    sim.apply_plan(mgr.current_plan().unwrap()).unwrap();
+
+    // One camera leaves, a new one arrives: five streams survive, and the
+    // sticky Expand must not re-deal all of them.
+    let mut requests = mk(1..6);
+    requests.extend(mk(10..11));
+    let report = mgr.replan(requests.clone()).unwrap();
+    assert_eq!(report.streams_surviving, 5);
+    assert!(report.streams_moved < 5, "sticky expand re-dealt the survivors: {report:?}");
+    assert!(report.churn_ratio() < 1.0);
+
+    // The plan still covers every stream exactly once, and the reconciled
+    // fleet bills exactly the plan's rate.
+    let plan = mgr.current_plan().unwrap();
+    let mut seen = vec![0usize; requests.len()];
+    for inst in &plan.instances {
+        for &s in &inst.streams {
+            seen[s] += 1;
+        }
+    }
+    assert!(seen.iter().all(|&c| c == 1), "assignments: {seen:?}");
+    sim.apply_plan(plan).unwrap();
+    assert!((sim.hourly_rate() - plan.cost_per_hour).abs() < 1e-9);
+}
+
+#[test]
 fn dims_catalog_geo_contract() {
     // Capacity vectors in the catalog are internally consistent with the
     // 4-dimensional packing space.

@@ -288,6 +288,90 @@ fn prop_incremental_replan_cost_equals_cold_cost() {
     );
 }
 
+/// Identical consecutive re-plans are churn-free end to end: the sticky
+/// Expand moves no streams and keeps every slot, and `CloudSim::apply_plan`
+/// backs the same slots with the same physical instance ids — zero
+/// provisioning and zero terminations on the no-op re-plan.
+#[test]
+fn prop_identical_replan_is_churn_free_and_id_stable() {
+    use camflow::cloudsim::CloudSim;
+    use camflow::coordinator::adaptive::AdaptiveManager;
+    let catalog =
+        Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+    check(
+        0x57_1C,
+        15,
+        |rng: &mut Rng| {
+            let n = 1 + rng.index(6);
+            let mut v = Vec::with_capacity(n * 2);
+            for _ in 0..n {
+                v.push(rng.index(2) as u64);
+                v.push((rng.range_f64(0.2, 4.0) * 100.0).round() as u64);
+            }
+            v
+        },
+        |spec: &Vec<u64>| {
+            let requests: Vec<StreamRequest> = spec
+                .chunks_exact(2)
+                .filter(|c| c[1] > 0)
+                .enumerate()
+                .map(|(i, c)| {
+                    StreamRequest::new(
+                        // Half the cameras collide on an id so fps tiers of
+                        // the same camera+program are exercised too.
+                        camera_at(i as u64 / 2, "Chicago", cities::CHICAGO, Resolution::XGA, 30.0),
+                        if c[0] == 1 { Program::Vgg16 } else { Program::Zf },
+                        c[1] as f64 / 100.0,
+                    )
+                })
+                .collect();
+            if requests.is_empty() {
+                return Ok(());
+            }
+            let planner = Planner::new(catalog.clone(), PlannerConfig::st3());
+            let mut mgr = AdaptiveManager::new(planner);
+            if mgr.replan(requests.clone()).is_err() {
+                return Ok(()); // infeasible workloads have nothing to re-plan
+            }
+            let mut sim = CloudSim::new(catalog.clone());
+            let ids1 = sim.apply_plan(mgr.current_plan().unwrap()).map_err(|e| e.to_string())?;
+            let report = mgr.replan(requests.clone()).map_err(|e| e.to_string())?;
+            if report.streams_moved != 0 {
+                return Err(format!("identical re-plan moved {} streams", report.streams_moved));
+            }
+            if report.streams_surviving != requests.len() {
+                return Err(format!(
+                    "expected {} surviving streams, accounting saw {}",
+                    requests.len(),
+                    report.streams_surviving
+                ));
+            }
+            if !report.provision.is_empty() || !report.terminate.is_empty() {
+                return Err(format!("identical re-plan changed the fleet: {report:?}"));
+            }
+            let alive_before = sim.alive().len();
+            let ids2 = sim.apply_plan(mgr.current_plan().unwrap()).map_err(|e| e.to_string())?;
+            if ids1 != ids2 {
+                return Err(format!("instance ids not stable: {ids1:?} vs {ids2:?}"));
+            }
+            if sim.alive().len() != alive_before {
+                return Err("no-op apply_plan provisioned or terminated instances".into());
+            }
+            // The sticky expansion still assigns every stream exactly once.
+            let mut seen = vec![0usize; requests.len()];
+            for inst in &mgr.current_plan().unwrap().instances {
+                for &s in &inst.streams {
+                    seen[s] += 1;
+                }
+            }
+            if seen.iter().any(|&c| c != 1) {
+                return Err(format!("bad assignment multiplicity {seen:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Geo invariants: symmetry, triangle-ish behavior of RTT, circle monotone.
 #[test]
 fn prop_geo_invariants() {
