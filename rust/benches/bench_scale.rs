@@ -1,0 +1,368 @@
+//! 10k+-stream scale benchmarks: adaptive solver budgets + delta-solve
+//! reuse (the "thousands of cameras per metro" regime of Jain et al.,
+//! "Scaling Video Analytics Systems to Large Camera Deployments").
+//!
+//! Three sections, written to `BENCH_scale.json` (fields documented in the
+//! crate docs, `lib.rs`):
+//!
+//! * **parity** — cold plan vs warm re-plan of a ≈1%-perturbed 10k-stream
+//!   workload. Deterministic bars: the warm re-plan's cost equals the cold
+//!   exact cost on every scenario where the cold exact phase completed
+//!   (proved optimality in every component), and the delta-solve path must
+//!   actually fire. Wall-clock speedup is recorded, and gated only without
+//!   `BENCH_LENIENT_TIMING` (shared CI runners are noisy).
+//! * **exact_recovery** — a probe run measures each component's true
+//!   arc-flow need, then a static budget is pinned *between* the hardest
+//!   and second-hardest component. Under that static budget the hard metro
+//!   must heuristic-fall-back (the seed behaviour at scale); under
+//!   adaptive budgets the donated pool must carry it back to an exact
+//!   solve. Fully deterministic — the budgets are calibrated from measured
+//!   needs, not guessed constants.
+//! * **lp_reuse** — warm vs cold node-LP counts over the parity runs (the
+//!   dual-simplex resume at work).
+
+use camflow::cameras::{camera_at, StreamRequest};
+use camflow::catalog::Catalog;
+use camflow::coordinator::pipeline::{plan_with_context, PlanContext};
+use camflow::coordinator::{Plan, PlannerConfig};
+use camflow::geo::GeoPoint;
+use camflow::packing::mcvbp::SolveOptions;
+use camflow::profiles::{Program, Resolution};
+use camflow::solver::MilpOptions;
+use camflow::util::json::Value;
+use std::time::Instant;
+
+/// Metro spec: name, location (a region city, so nothing degrades), camera
+/// count per tier, tiers as (fps, resolution).
+struct Metro {
+    name: &'static str,
+    at: GeoPoint,
+    per_tier: usize,
+    tiers: Vec<(f64, Resolution)>,
+}
+
+/// The eight easy metros sit exactly on EC2 region cities, far enough apart
+/// that their RTT circles at ≥20 fps stay in separate region clusters.
+fn easy_metros(per_tier: usize, fps: f64) -> Vec<Metro> {
+    let cities: [(&'static str, GeoPoint); 8] = [
+        ("Ohio", GeoPoint::new(39.96, -82.99)),
+        ("Oregon", GeoPoint::new(45.84, -119.70)),
+        ("Ireland", GeoPoint::new(53.34, -6.27)),
+        ("Frankfurt", GeoPoint::new(50.11, 8.68)),
+        ("Singapore", GeoPoint::new(1.35, 103.82)),
+        ("Sydney", GeoPoint::new(-33.87, 151.21)),
+        ("Mumbai", GeoPoint::new(19.08, 72.88)),
+        ("SaoPaulo", GeoPoint::new(-23.55, -46.63)),
+    ];
+    cities
+        .into_iter()
+        .map(|(name, at)| Metro {
+            name,
+            at,
+            per_tier,
+            tiers: vec![(fps, Resolution::VGA)],
+        })
+        .collect()
+}
+
+fn requests_for(metros: &[Metro]) -> Vec<StreamRequest> {
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    for m in metros {
+        for &(fps, res) in &m.tiers {
+            for _ in 0..m.per_tier {
+                out.push(StreamRequest::new(
+                    camera_at(id, m.name, m.at, res, 30.0),
+                    Program::Zf,
+                    fps,
+                ));
+                id += 1;
+            }
+        }
+    }
+    out
+}
+
+/// GCL with bench-friendly exact-solve options. `quant` is coarser than the
+/// default so the calibrated graphs stay small enough to probe exhaustively;
+/// every run in a section uses the same options except `max_graph_nodes`.
+fn config(max_graph_nodes: usize) -> PlannerConfig {
+    let mut cfg = PlannerConfig::gcl();
+    cfg.solve_opts = SolveOptions {
+        quant: 30,
+        max_graph_nodes,
+        max_milp_vars: 20_000,
+        milp: MilpOptions { max_nodes: 20_000, ..Default::default() },
+        milp_node_scale: 10_000_000,
+        exact: true,
+    };
+    cfg
+}
+
+fn catalog() -> Catalog {
+    Catalog::builtin().restrict(
+        Some(&["c4.2xlarge", "c4.8xlarge", "g2.2xlarge", "g3.8xlarge"]),
+        None,
+    )
+}
+
+fn lenient() -> bool {
+    std::env::var_os("BENCH_LENIENT_TIMING").is_some()
+}
+
+/// A plan's exact phase "completed" when no component fell back and every
+/// component proved optimality.
+fn exact_complete(plan: &Plan) -> bool {
+    plan.pipeline.components_fallback == 0
+        && plan.pipeline.components_proven == plan.pipeline.components
+}
+
+/// Drop every 80th request (≈1.25%), spreading the count delta across all
+/// metros so each component stays within the delta-solve bound.
+fn primed(base: &[StreamRequest]) -> Vec<StreamRequest> {
+    base.iter()
+        .enumerate()
+        .filter(|(i, _)| i % 80 != 0)
+        .map(|(_, r)| r.clone())
+        .collect()
+}
+
+fn parity(out: &mut Vec<Value>, lp: &mut (u64, u64)) {
+    println!("== 10k streams: warm delta re-plan vs cold plan (GCL) ==");
+    let catalog = catalog();
+    let cfg = config(SolveOptions::default().max_graph_nodes);
+    let mut strict_scenarios = 0usize;
+    let mut delta_hits_total = 0usize;
+    let mut largest = (0.0f64, 0.0f64); // (cold ms, warm ms) of last scenario
+    for fps in [20.0, 24.0, 28.0] {
+        let base = requests_for(&easy_metros(1_250, fps));
+        assert_eq!(base.len(), 10_000);
+        let prime = primed(&base);
+
+        let t0 = Instant::now();
+        let cold = plan_with_context(&catalog, &cfg, &base, &mut PlanContext::new()).unwrap();
+        let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mut ctx = PlanContext::new();
+        plan_with_context(&catalog, &cfg, &prime, &mut ctx).unwrap();
+        let t1 = Instant::now();
+        let warm = plan_with_context(&catalog, &cfg, &base, &mut ctx).unwrap();
+        let warm_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+        // The ≈1% count drift must ride the near-match memo, not cold-solve.
+        assert!(
+            warm.pipeline.delta_solve_hits > 0,
+            "fps {fps}: no delta-solve reuse on a pure count drift: {:?}",
+            warm.pipeline
+        );
+        delta_hits_total += warm.pipeline.delta_solve_hits;
+        lp.0 += warm.pipeline.lp_warm_resumes as u64;
+        lp.1 += warm.pipeline.lp_cold_solves as u64;
+
+        // Deterministic cost bars.
+        assert!(
+            warm.cost_per_hour <= cold.cost_per_hour + 1e-6,
+            "fps {fps}: warm {} worse than cold {}",
+            warm.cost_per_hour,
+            cold.cost_per_hour
+        );
+        // Equality bar at solver tolerance: both sides are proven optima of
+        // the same problem, but summing ~2k bin costs in different decode
+        // orders legitimately drifts by a few 1e-10.
+        let strict = exact_complete(&cold) && exact_complete(&warm);
+        if strict {
+            strict_scenarios += 1;
+            assert!(
+                (warm.cost_per_hour - cold.cost_per_hour).abs() < 1e-6,
+                "fps {fps}: warm re-plan {} != cold exact {}",
+                warm.cost_per_hour,
+                cold.cost_per_hour
+            );
+        }
+        println!(
+            "fps {fps:>4}: cold {cold_ms:8.1} ms  warm {warm_ms:8.1} ms  \
+             ({:.1}x)  $/h {:.3}  delta_hits {}  exact_complete {strict}",
+            cold_ms / warm_ms.max(1e-9),
+            warm.cost_per_hour,
+            warm.pipeline.delta_solve_hits
+        );
+        out.push(Value::obj(vec![
+            ("streams", Value::num(base.len() as f64)),
+            ("fps", Value::num(fps)),
+            ("cold_ms", Value::num(cold_ms)),
+            ("warm_ms", Value::num(warm_ms)),
+            ("speedup", Value::num(cold_ms / warm_ms.max(1e-9))),
+            ("cold_usd_per_hour", Value::num(cold.cost_per_hour)),
+            ("warm_usd_per_hour", Value::num(warm.cost_per_hour)),
+            ("reuse_ratio", Value::num(warm.pipeline.reuse_ratio())),
+            ("delta_solve_hits", Value::num(warm.pipeline.delta_solve_hits as f64)),
+            ("components", Value::num(warm.pipeline.components as f64)),
+            ("cold_exact_complete", Value::Bool(exact_complete(&cold))),
+            (
+                "warm_equals_cold",
+                Value::Bool((warm.cost_per_hour - cold.cost_per_hour).abs() < 1e-6),
+            ),
+        ]));
+        largest = (cold_ms, warm_ms);
+    }
+    assert!(
+        strict_scenarios >= 1,
+        "no parity scenario completed its exact phase — the bar is vacuous"
+    );
+    assert!(delta_hits_total >= 3);
+    // Wall-clock: the warm 10k re-plan should beat the cold plan where solve
+    // time dominates; recorded always, gated only on dedicated hardware.
+    if largest.0 >= 50.0 && largest.1 >= largest.0 {
+        let msg = format!(
+            "10k warm re-plan ({:.1} ms) not faster than cold ({:.1} ms)",
+            largest.1, largest.0
+        );
+        assert!(lenient(), "{msg}");
+        println!("WARNING (not asserted, BENCH_LENIENT_TIMING set): {msg}");
+    }
+}
+
+fn exact_recovery(out: &mut Vec<(&'static str, Value)>) {
+    println!("\n== Exact-phase recovery under adaptive budgets (10k+ streams) ==");
+    let catalog = catalog();
+    // Five single-tier metros in pairwise-disjoint region clusters (each a
+    // one-group component with a tiny graph), plus one hard metro: Tokyo
+    // with six GPU-bound fps tiers, whose joint arc-flow state space dwarfs
+    // every single-group component — the calibration below relies on that
+    // dominance.
+    let mut metros: Vec<Metro> = [
+        ("Ohio", GeoPoint::new(39.96, -82.99)),
+        ("Ireland", GeoPoint::new(53.34, -6.27)),
+        ("Singapore", GeoPoint::new(1.35, 103.82)),
+        ("Sydney", GeoPoint::new(-33.87, 151.21)),
+        ("SaoPaulo", GeoPoint::new(-23.55, -46.63)),
+    ]
+    .into_iter()
+    .map(|(name, at)| Metro {
+        name,
+        at,
+        per_tier: 1_600,
+        tiers: vec![(20.0, Resolution::VGA)],
+    })
+    .collect();
+    metros.push(Metro {
+        name: "Tokyo",
+        at: GeoPoint::new(35.68, 139.69),
+        per_tier: 350,
+        tiers: (0..6).map(|i| (23.0 + i as f64, Resolution::VGA)).collect(),
+    });
+    let requests = requests_for(&metros);
+    assert_eq!(requests.len(), 10_100);
+
+    // Probe: generous budgets measure each component's true arc-flow need.
+    let mut probe_ctx = PlanContext::new();
+    let probe =
+        plan_with_context(&catalog, &config(2_000_000), &requests, &mut probe_ctx).unwrap();
+    assert!(
+        exact_complete(&probe),
+        "probe run must complete its exact phase: {:?}",
+        probe.pipeline
+    );
+    let needs: Vec<usize> = probe_ctx
+        .component_telemetry()
+        .iter()
+        .map(|t| t.graph_nodes)
+        .collect();
+    assert!(
+        needs.len() >= 2 && needs[0] > needs[1] + 8,
+        "workload did not produce a dominant hard component: {needs:?}"
+    );
+    // Pin the static seed budget strictly between the hardest component and
+    // the rest (with a few nodes of margin below the hard need, so the
+    // ±1-node edge semantics of the cumulative budget check cannot flip the
+    // expected fallback).
+    let static_budget = needs[1] + (needs[0] - needs[1]) / 2;
+
+    // Static budgets (the seed behaviour): the hard metro falls back.
+    let mut static_ctx = PlanContext::new();
+    let static_plan =
+        plan_with_context(&catalog, &config(static_budget), &requests, &mut static_ctx).unwrap();
+    let static_fallbacks = static_plan.pipeline.components_fallback;
+    assert!(
+        static_fallbacks >= 1,
+        "static budget {static_budget} was expected to starve the hard metro: {needs:?}"
+    );
+
+    // Adaptive budgets: same static seed, but the context has seen the
+    // fallback — the next (drifted) re-plan escalates the hard component
+    // from the donated pool and recovers the exact solve.
+    let mut adaptive_ctx = PlanContext::new();
+    let cfg = config(static_budget);
+    plan_with_context(&catalog, &cfg, &primed(&requests), &mut adaptive_ctx).unwrap();
+    let adaptive = plan_with_context(&catalog, &cfg, &requests, &mut adaptive_ctx).unwrap();
+    let donated = adaptive.pipeline.budget_donated_nodes;
+    let recovered = adaptive.pipeline.components_fallback == 0;
+    assert!(
+        recovered,
+        "adaptive budgets failed to recover the exact phase: donated {donated}, {:?}",
+        adaptive.pipeline
+    );
+    assert!(donated > 0, "recovery must be funded by the pool");
+    assert!(
+        adaptive.cost_per_hour <= static_plan.cost_per_hour + 1e-9,
+        "adaptive {} worse than static {}",
+        adaptive.cost_per_hour,
+        static_plan.cost_per_hour
+    );
+    println!(
+        "needs {:?}  static_budget {static_budget}  static_fallbacks {static_fallbacks}  \
+         recovered {recovered}  donated {donated}  $/h static {:.3} -> adaptive {:.3}",
+        &needs[..needs.len().min(4)],
+        static_plan.cost_per_hour,
+        adaptive.cost_per_hour
+    );
+    out.push((
+        "exact_recovery",
+        Value::obj(vec![
+            ("streams", Value::num(requests.len() as f64)),
+            ("components", Value::num(probe.pipeline.components as f64)),
+            ("probe_need_max", Value::num(needs[0] as f64)),
+            ("probe_need_second", Value::num(needs[1] as f64)),
+            ("static_budget", Value::num(static_budget as f64)),
+            ("static_fallbacks", Value::num(static_fallbacks as f64)),
+            (
+                "adaptive_fallbacks",
+                Value::num(adaptive.pipeline.components_fallback as f64),
+            ),
+            ("budget_donated_nodes", Value::num(donated as f64)),
+            ("static_usd_per_hour", Value::num(static_plan.cost_per_hour)),
+            ("adaptive_usd_per_hour", Value::num(adaptive.cost_per_hour)),
+            ("probe_usd_per_hour", Value::num(probe.cost_per_hour)),
+            ("recovered", Value::Bool(recovered)),
+        ]),
+    ));
+}
+
+fn main() {
+    let mut parity_rows = Vec::new();
+    let mut extra = Vec::new();
+    let mut lp = (0u64, 0u64);
+
+    parity(&mut parity_rows, &mut lp);
+    exact_recovery(&mut extra);
+
+    println!("\nlp_reuse: {} warm resumes vs {} cold node-LP solves", lp.0, lp.1);
+    let mut pairs = vec![
+        ("bench", Value::str("scale")),
+        ("parity", Value::arr(parity_rows)),
+        (
+            "lp_reuse",
+            Value::obj(vec![
+                ("lp_warm_resumes", Value::num(lp.0 as f64)),
+                ("lp_cold_solves", Value::num(lp.1 as f64)),
+            ]),
+        ),
+    ];
+    pairs.extend(extra);
+    let doc = Value::obj(pairs);
+    let path = "BENCH_scale.json";
+    std::fs::write(path, camflow::util::json::to_string_pretty(&doc))
+        .expect("write BENCH_scale.json");
+    println!("wrote {path}");
+    println!("\nbench_scale OK");
+}

@@ -11,7 +11,16 @@
 //! which instances to keep, provision, terminate, and which streams move.
 //! Warm vs cold re-plan latency is benchmarked in `bench_adaptive` (the
 //! paper: "These methods can make resource decisions quickly and be applied
-//! during runtime", cf. Kaseb et al. \[14\]).
+//! during runtime", cf. Kaseb et al. \[14\]); 10k-stream-scale re-plans with
+//! adaptive solver budgets and delta-solve reuse are gated in `bench_scale`.
+//!
+//! Each [`MigrationReport`] carries the re-plan's [`PipelineStats`],
+//! including the solver telemetry that drives the adaptive budget
+//! allocator: exact-vs-fallback component counts, delta-solve reuses, warm
+//! LP resumes, and donated budget. The cumulative roll-up lives on the
+//! context (`ctx.main.solver`, a [`SolverMetrics`]).
+//!
+//! [`SolverMetrics`]: crate::metrics::SolverMetrics
 
 use super::pipeline::{PipelineStats, ReplanContext};
 use super::{Plan, Planner, SlotId};
@@ -323,6 +332,22 @@ mod tests {
         let report = mgr.replan(workload(8.0, 2)).unwrap();
         assert!(report.cost_delta() < 0.0);
         assert!(!report.terminate.is_empty());
+    }
+
+    #[test]
+    fn replan_reports_solver_telemetry_and_delta_reuse() {
+        let mut mgr = AdaptiveManager::new(planner());
+        mgr.replan(workload(1.0, 6)).unwrap();
+        // One camera joins: the single component's subproblem differs by a
+        // single count, so the re-plan rides the delta-solve path.
+        let report = mgr.replan(workload(1.0, 7)).unwrap();
+        let p = &report.pipeline;
+        assert_eq!(p.components_exact + p.components_fallback, p.components);
+        assert_eq!(p.delta_solve_hits, 1, "{p:?}");
+        assert_eq!(mgr.ctx.main.solver.delta_reuses.get(), 1);
+        assert!(mgr.ctx.main.solver.subproblems.get() >= 2);
+        // The cumulative summary renders (diagnostic surface).
+        assert!(mgr.ctx.main.solver.summary().contains("delta=1"));
     }
 
     #[test]

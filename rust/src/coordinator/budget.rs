@@ -1,0 +1,333 @@
+//! Adaptive per-component solver budgets.
+//!
+//! The Solve stage decomposes every re-plan into independent per-region
+//! subproblems. With static budgets each component gets the same
+//! [`SolveOptions`] constants — which wastes budget on trivial metros and
+//! starves the hard ones once deployments reach thousands of cameras per
+//! city (Jain et al., "Scaling Video Analytics Systems to Large Camera
+//! Deployments"). This module re-derives each component's budgets every
+//! re-plan from its own solve telemetry plus a global pool:
+//!
+//! * a component whose last exact solve used far less than the static seed
+//!   budget *donates* the difference between the seed and its predicted need
+//!   (observed usage × a safety margin) into the pool,
+//! * a component that fell back to a heuristic (budget wall) or could not
+//!   prove optimality *requests* an escalated budget, granted from the pool
+//!   (proportionally when the pool is oversubscribed),
+//! * a component that keeps needing more than the seed keeps its
+//!   history-derived need, so grants are sticky rather than oscillating,
+//! * **no component is ever allocated less than the static seed budget** —
+//!   the floor the property tests pin down. Donation reflects *predicted*
+//!   slack, so total worst-case work stays bounded by roughly the static
+//!   pool: donors were measured not to use what they give away.
+//!
+//! The same policy is applied independently to the three budget axes:
+//! arc-flow graph nodes, joint-ILP variables, and branch-and-bound nodes.
+
+use crate::packing::mcvbp::SolveOptions;
+
+/// Telemetry of one component's most recent solve, recorded by the Solve
+/// stage into the `PlanContext` and consumed by [`allocate`] on the next
+/// re-plan.
+#[derive(Clone, Debug, Default)]
+pub struct ComponentTelemetry {
+    /// Arc-flow nodes built (uncompressed, cumulative over bin types).
+    pub graph_nodes: usize,
+    /// Joint-ILP variable count.
+    pub milp_vars: usize,
+    /// Branch-and-bound nodes expanded.
+    pub milp_nodes: usize,
+    /// The adopted packing came from the exact phase.
+    pub exact: bool,
+    /// ...with proven optimality.
+    pub proven: bool,
+    /// A structural budget (graph nodes / ILP variables) forced a fallback.
+    pub budget_exhausted: bool,
+    /// The budgets the solve ran under (escalation base on failure).
+    pub graph_budget: usize,
+    pub var_budget: usize,
+    pub node_budget: usize,
+}
+
+impl ComponentTelemetry {
+    /// A component is *hard* when its last attempt hit a wall: heuristic
+    /// fallback, structural budget exhaustion, or an unproven exact phase.
+    pub fn is_hard(&self) -> bool {
+        self.budget_exhausted || !self.exact || !self.proven
+    }
+}
+
+/// Safety margin over an exact solve's observed usage when predicting the
+/// next re-plan's need.
+const HEADROOM: usize = 2;
+/// Escalation factor over the failed budget when a component was hard.
+const ESCALATE: usize = 4;
+/// Absolute ceiling on any escalation request, as a multiple of the static
+/// seed budget. Without it a permanently hard component's request grows
+/// geometrically (4× the previously *granted* budget each re-plan) and, via
+/// proportional rationing, starves every recoverable requester of the pool.
+const ESCALATE_CAP: usize = 64;
+
+/// One budget axis: floor every component at `static_budget`, collect the
+/// predicted slack of easy components, grant it to the requesters.
+fn allocate_axis(
+    static_budget: usize,
+    history: &[Option<&ComponentTelemetry>],
+    usage: impl Fn(&ComponentTelemetry) -> usize,
+    ran_under: impl Fn(&ComponentTelemetry) -> usize,
+) -> Vec<usize> {
+    let n = history.len();
+    let mut request = vec![0usize; n]; // extra wanted above the static floor
+    let mut slack = 0usize;
+    for (i, t) in history.iter().enumerate() {
+        match t {
+            Some(t) if t.is_hard() => {
+                // Escalate over whatever the failed attempt ran under,
+                // capped so a hopeless component cannot ratchet forever.
+                let want = ran_under(t)
+                    .max(static_budget)
+                    .saturating_mul(ESCALATE)
+                    .min(static_budget.saturating_mul(ESCALATE_CAP));
+                request[i] = want.saturating_sub(static_budget);
+            }
+            Some(t) => {
+                // Sticky need for components that keep requiring a grant;
+                // donation of the predicted slack otherwise.
+                let need = usage(t).saturating_mul(HEADROOM);
+                if need > static_budget {
+                    request[i] = need - static_budget;
+                } else {
+                    slack += static_budget - need;
+                }
+            }
+            None => {} // no history: the static seed, no donation
+        }
+    }
+    let total_request: u128 = request.iter().map(|&r| r as u128).sum();
+    // Degenerate pool: every known component is a requester and nothing can
+    // donate (e.g. a single-component deployment). Bounded self-escalation
+    // (≤ ESCALATE × static in total) replaces the pool so a hard lone
+    // component is not pinned to the seed budget forever.
+    let self_escalate = slack == 0
+        && history.iter().all(Option::is_some)
+        && request.iter().all(|&r| r > 0);
+    (0..n)
+        .map(|i| {
+            if request[i] == 0 {
+                static_budget
+            } else if self_escalate {
+                static_budget + request[i].min(static_budget.saturating_mul(ESCALATE - 1))
+            } else if total_request <= slack as u128 {
+                static_budget + request[i]
+            } else {
+                // Oversubscribed pool: grant proportionally to the requests.
+                let grant = (slack as u128 * request[i] as u128 / total_request) as usize;
+                static_budget + grant
+            }
+        })
+        .collect()
+}
+
+/// Derive each component's [`SolveOptions`] from the static seed options
+/// and the components' solve history (`None` = never seen). The returned
+/// vector is index-aligned with `history`.
+pub fn allocate(
+    static_opts: &SolveOptions,
+    history: &[Option<&ComponentTelemetry>],
+) -> Vec<SolveOptions> {
+    let graph = allocate_axis(
+        static_opts.max_graph_nodes,
+        history,
+        |t| t.graph_nodes,
+        |t| t.graph_budget,
+    );
+    let vars = allocate_axis(
+        static_opts.max_milp_vars,
+        history,
+        |t| t.milp_vars,
+        |t| t.var_budget,
+    );
+    let nodes = allocate_axis(
+        static_opts.milp.max_nodes,
+        history,
+        |t| t.milp_nodes,
+        |t| t.node_budget,
+    );
+    (0..history.len())
+        .map(|i| {
+            let mut o = static_opts.clone();
+            o.max_graph_nodes = graph[i];
+            o.max_milp_vars = vars[i];
+            o.milp.max_nodes = nodes[i];
+            // Scale the per-ILP node guard with the node grant so a granted
+            // budget is not silently clamped back to the static ceiling.
+            let scale_up = nodes[i].div_ceil(static_opts.milp.max_nodes.max(1)).max(1);
+            o.milp_node_scale = static_opts.milp_node_scale.saturating_mul(scale_up);
+            o
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn easy(graph_nodes: usize) -> ComponentTelemetry {
+        ComponentTelemetry {
+            graph_nodes,
+            milp_vars: 10,
+            milp_nodes: 5,
+            exact: true,
+            proven: true,
+            budget_exhausted: false,
+            graph_budget: 6_000,
+            var_budget: 600,
+            node_budget: 2_000,
+        }
+    }
+
+    fn hard(graph_budget: usize) -> ComponentTelemetry {
+        ComponentTelemetry {
+            graph_nodes: graph_budget, // built up to the wall
+            milp_vars: 0,
+            milp_nodes: 0,
+            exact: false,
+            proven: false,
+            budget_exhausted: true,
+            graph_budget,
+            var_budget: 600,
+            node_budget: 2_000,
+        }
+    }
+
+    #[test]
+    fn no_history_means_static_budgets() {
+        let opts = SolveOptions::default();
+        let out = allocate(&opts, &[None, None]);
+        for o in &out {
+            assert_eq!(o.max_graph_nodes, opts.max_graph_nodes);
+            assert_eq!(o.max_milp_vars, opts.max_milp_vars);
+            assert_eq!(o.milp.max_nodes, opts.milp.max_nodes);
+            assert_eq!(o.milp_node_scale, opts.milp_node_scale);
+        }
+    }
+
+    #[test]
+    fn donors_fund_the_hard_component() {
+        let opts = SolveOptions::default();
+        let donors = [easy(40), easy(60), easy(25)];
+        let wall = hard(opts.max_graph_nodes);
+        let history: Vec<Option<&ComponentTelemetry>> = vec![
+            Some(&donors[0]),
+            Some(&wall),
+            Some(&donors[1]),
+            Some(&donors[2]),
+        ];
+        let out = allocate(&opts, &history);
+        // Every component keeps at least the static floor...
+        for o in &out {
+            assert!(o.max_graph_nodes >= opts.max_graph_nodes);
+        }
+        // ...and the hard one gets strictly more, up to ESCALATE× the
+        // budget it failed under (pool permitting).
+        assert!(out[1].max_graph_nodes > opts.max_graph_nodes, "{out:?}");
+        assert!(out[1].max_graph_nodes <= opts.max_graph_nodes * ESCALATE);
+    }
+
+    #[test]
+    fn grants_never_exceed_the_donated_slack() {
+        let opts = SolveOptions::default();
+        let donor = easy(2_900); // predicted need 5 800 of 6 000 → donates 200
+        let walls = [hard(6_000), hard(6_000), hard(6_000)];
+        let history: Vec<Option<&ComponentTelemetry>> = vec![
+            Some(&donor),
+            Some(&walls[0]),
+            Some(&walls[1]),
+            Some(&walls[2]),
+        ];
+        let out = allocate(&opts, &history);
+        let granted: usize = out
+            .iter()
+            .map(|o| o.max_graph_nodes - opts.max_graph_nodes)
+            .sum();
+        assert!(granted <= 200, "oversubscribed pool must ration: {granted}");
+        for o in &out {
+            assert!(o.max_graph_nodes >= opts.max_graph_nodes, "floor violated");
+        }
+    }
+
+    #[test]
+    fn sustained_needs_stay_granted_after_success() {
+        // A previously hard component that completed exactly under a grant
+        // must not be dropped back to the static floor (oscillation) while
+        // the pool still has the slack to fund its measured need.
+        let opts = SolveOptions::default();
+        let donors: Vec<ComponentTelemetry> = (0..7).map(|_| easy(40)).collect();
+        let grown = ComponentTelemetry {
+            graph_nodes: 20_000,
+            exact: true,
+            proven: true,
+            budget_exhausted: false,
+            graph_budget: 24_000,
+            ..easy(0)
+        };
+        let mut history: Vec<Option<&ComponentTelemetry>> = donors.iter().map(Some).collect();
+        history.push(Some(&grown));
+        let out = allocate(&opts, &history);
+        assert!(
+            out[7].max_graph_nodes >= 20_000,
+            "sticky grant lost: {}",
+            out[7].max_graph_nodes
+        );
+    }
+
+    #[test]
+    fn escalation_requests_are_capped_even_with_a_deep_pool() {
+        // A permanently hard component whose granted budget ratcheted high
+        // must not request 4× it forever: the request is capped at
+        // ESCALATE_CAP × static no matter how much slack the pool has.
+        let opts = SolveOptions::default();
+        let donors: Vec<ComponentTelemetry> = (0..100).map(|_| easy(10)).collect();
+        let runaway = hard(opts.max_graph_nodes * 1_000);
+        let mut history: Vec<Option<&ComponentTelemetry>> = donors.iter().map(Some).collect();
+        history.push(Some(&runaway));
+        let out = allocate(&opts, &history);
+        assert_eq!(
+            out[100].max_graph_nodes,
+            opts.max_graph_nodes * ESCALATE_CAP,
+            "runaway request must hit the cap exactly"
+        );
+    }
+
+    #[test]
+    fn lone_hard_component_self_escalates_boundedly() {
+        let opts = SolveOptions::default();
+        let wall = hard(opts.max_graph_nodes);
+        let out = allocate(&opts, &[Some(&wall)]);
+        assert!(out[0].max_graph_nodes > opts.max_graph_nodes);
+        assert!(out[0].max_graph_nodes <= opts.max_graph_nodes * ESCALATE);
+        // Re-running from the escalated budget stays at the cap — no
+        // unbounded growth across re-plans.
+        let wall2 = hard(out[0].max_graph_nodes);
+        let out2 = allocate(&opts, &[Some(&wall2)]);
+        assert_eq!(out2[0].max_graph_nodes, opts.max_graph_nodes * ESCALATE);
+    }
+
+    #[test]
+    fn node_scale_grows_with_the_node_grant() {
+        let opts = SolveOptions::default();
+        let wall = ComponentTelemetry {
+            exact: true,
+            proven: false, // node-budget bound
+            node_budget: opts.milp.max_nodes,
+            graph_budget: opts.max_graph_nodes,
+            var_budget: opts.max_milp_vars,
+            ..Default::default()
+        };
+        let donor = easy(40);
+        let history: Vec<Option<&ComponentTelemetry>> = vec![Some(&wall), Some(&donor)];
+        let out = allocate(&opts, &history);
+        assert!(out[0].milp.max_nodes > opts.milp.max_nodes);
+        assert!(out[0].milp_node_scale > opts.milp_node_scale);
+    }
+}

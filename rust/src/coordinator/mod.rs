@@ -27,8 +27,17 @@
 //! keep their eligibility masks and demand vectors, unchanged region
 //! clusters keep their arc-flow graphs, and the previous packing seeds
 //! branch-and-bound as the incumbent instead of a cold FFD start.
+//!
+//! The Solve stage is additionally *budget-adaptive* and *delta-aware*
+//! ([`budget`]): per-component solver budgets are re-derived each re-plan
+//! from the component's own telemetry plus a global pool (small components
+//! donate unused budget to the hard ones, never below the static seed), and
+//! subproblems that differ from a memoized one by a bounded demand delta
+//! re-enter the solver from the cached optimal basis and branching order
+//! instead of solving cold.
 
 pub mod adaptive;
+pub mod budget;
 pub mod eligibility;
 pub mod expand;
 pub mod pipeline;

@@ -27,6 +27,7 @@
 //! the full solver budget, so the decomposed solve can only *improve* on
 //! the monolithic heuristic fallback, never regress it.
 
+use super::budget::{self, ComponentTelemetry};
 use super::eligibility::{self, EligCache, GroupKey, GroupSet};
 use super::expand::{self, PrevAssignment};
 use super::{LocationPolicy, Plan, PlannerConfig, SolverKind};
@@ -34,8 +35,9 @@ use crate::cameras::{stream_keys, StreamRequest};
 use crate::catalog::{Catalog, Dims, NUM_DIMS};
 use crate::error::{Error, Result};
 use crate::geo;
+use crate::metrics::SolverMetrics;
 use crate::packing::arcflow::GraphCache;
-use crate::packing::mcvbp::{self, SolveMethod};
+use crate::packing::mcvbp::{self, DeltaHints, SolveMethod, SolveOptions, SolveStats};
 use crate::packing::{heuristic, BinType, ItemGroup, Packing, PackedBin, PackingProblem};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -54,12 +56,30 @@ pub struct PipelineStats {
     /// their inputs were bit-identical to a previous re-plan.
     pub solution_cache_hits: usize,
     pub solution_cache_misses: usize,
+    /// Subproblems answered through the *near-match* memo path: a cached
+    /// solve of the same structure within a bounded demand delta seeded the
+    /// root LP basis and branching order (delta-solve reuse).
+    pub delta_solve_hits: usize,
     /// True if a previous packing seeded this solve.
     pub warm_started: bool,
     /// Independent per-region subproblems the Solve stage decomposed into.
     pub components: usize,
     /// Subproblems solved on parallel threads (0 = solved inline).
     pub solve_threads: usize,
+    /// Components whose adopted packing came from the exact phase vs the
+    /// heuristic fallback (memo hits count under their cached method).
+    pub components_exact: usize,
+    pub components_fallback: usize,
+    /// Components whose exact phase also proved optimality.
+    pub components_proven: usize,
+    /// Node LPs warm-resumed from a cached/parent basis vs solved cold.
+    pub lp_warm_resumes: usize,
+    pub lp_cold_solves: usize,
+    /// Extra arc-flow node budget granted above the static per-component
+    /// seed by the adaptive allocator this run (the donated pool at work).
+    pub budget_donated_nodes: usize,
+    /// Over-budget graph builds skipped via the failure watermark.
+    pub graph_fail_fastpaths: usize,
 }
 
 impl PipelineStats {
@@ -145,8 +165,24 @@ fn solve_key(problem: &PackingProblem) -> SolveKey {
     }
 }
 
+/// One memoized subproblem solution plus everything needed to (a) decide
+/// whether it may be reused at this run's budgets and (b) warm-start a
+/// near-identical subproblem (the delta path).
+#[derive(Clone, Debug)]
+struct CachedSolve {
+    packing: Packing,
+    method: SolveMethod,
+    proven: bool,
+    /// Warm re-entry state + per-group counts for the delta path.
+    hints: DeltaHints,
+    counts: Vec<usize>,
+}
+
 /// Soft cap on memoized subproblem solutions; reaching it clears the memo.
 const SOLUTION_CACHE_CAPACITY: usize = 2048;
+/// Soft cap on the per-component telemetry map (components ≈ region
+/// clusters, so this is generous).
+const TELEMETRY_CAPACITY: usize = 4_096;
 
 /// Soft caps on the per-request and per-group memos: cameras join, leave,
 /// and change rates in long-running adaptive sessions, so these would grow
@@ -157,11 +193,18 @@ const DEMAND_CACHE_CAPACITY: usize = 16_384;
 /// Persistent cross-re-plan state for one (catalog, planner-config) pair.
 ///
 /// Dropping the context (or planning with a fresh one) gives exactly the
-/// cold planner; the caches only ever change *how fast* a packing is found,
-/// never *which* packing (bins and cost) is found on identical inputs. The
-/// Expand stage is the one place the context changes the output itself:
-/// stream→instance assignments stick to the previous plan's slots, so a
-/// re-plan moves only the packing diff instead of re-dealing every stream.
+/// cold planner, and *identical consecutive* re-plans return identical
+/// plans (the solution memo answers them verbatim — zero churn, stable
+/// ids). Across *drifting* workloads the context can also change the
+/// outcome for the better: per-component solver budgets adapt from the
+/// recorded telemetry (a component that fell back under the static seed
+/// budget re-solves exactly under a pool grant — cost can only improve,
+/// since exact results are adopted only when they beat the heuristics), and
+/// near-identical subproblems re-enter the solver warm from the delta memo
+/// without ever giving up exactness. The Expand stage changes the output's
+/// *shape* only: stream→instance assignments stick to the previous plan's
+/// slots, so a re-plan moves only the packing diff instead of re-dealing
+/// every stream.
 #[derive(Default)]
 pub struct PlanContext {
     /// Fingerprint of the (catalog, config) pair the caches are valid for;
@@ -173,13 +216,21 @@ pub struct PlanContext {
     demand: HashMap<DemandKey, Vec<Option<Dims>>>,
     graphs: GraphCache,
     /// Memoized per-subproblem solutions (see [`SolveKey`]).
-    solutions: HashMap<SolveKey, (Packing, SolveMethod)>,
+    solutions: HashMap<SolveKey, CachedSolve>,
+    /// Structure-hash → key of the most recent *exact* solve with that
+    /// structure: the near-match index behind the delta-solve path.
+    delta_index: HashMap<u64, SolveKey>,
+    /// Per-component solve telemetry feeding the adaptive budget allocator
+    /// ([`budget::allocate`]); keyed by the component's bin identity.
+    telemetry: HashMap<u64, ComponentTelemetry>,
     last: Option<LastPlan>,
     /// The previous plan's stream→slot assignment, matched against by the
     /// sticky Expand stage.
     last_assign: Option<PrevAssignment>,
     /// Telemetry of the most recent run through this context.
     pub stats: PipelineStats,
+    /// Cumulative cross-re-plan solver counters (never reset by re-plans).
+    pub solver: SolverMetrics,
 }
 
 impl PlanContext {
@@ -200,6 +251,14 @@ impl PlanContext {
     pub fn clear_warm_start(&mut self) {
         self.last = None;
         self.last_assign = None;
+    }
+
+    /// Per-component telemetry of the most recent solves, hardest (by
+    /// arc-flow nodes built) first. Bench/diagnostic surface.
+    pub fn component_telemetry(&self) -> Vec<ComponentTelemetry> {
+        let mut v: Vec<ComponentTelemetry> = self.telemetry.values().cloned().collect();
+        v.sort_by(|a, b| b.graph_nodes.cmp(&a.graph_nodes));
+        v
     }
 }
 
@@ -249,6 +308,7 @@ fn signature(catalog: &Catalog, config: &PlannerConfig) -> u64 {
     config.solve_opts.max_milp_vars.hash(&mut h);
     config.solve_opts.exact.hash(&mut h);
     config.solve_opts.milp.max_nodes.hash(&mut h);
+    config.solve_opts.milp_node_scale.hash(&mut h);
     config.parallel_regions.hash(&mut h);
     catalog.types.len().hash(&mut h);
     for t in &catalog.types {
@@ -296,6 +356,9 @@ pub fn plan_with_context(
     if ctx.demand.len() > DEMAND_CACHE_CAPACITY {
         ctx.demand.clear();
     }
+    if ctx.telemetry.len() > TELEMETRY_CAPACITY {
+        ctx.telemetry.clear();
+    }
     let mut stats = PipelineStats::default();
 
     // Stage 1: Eligibility.
@@ -311,15 +374,9 @@ pub fn plan_with_context(
     let seeds = translate_seed(ctx.last.as_ref(), &groups, &problem);
     stats.warm_started = seeds.is_some();
 
-    // Stage 3: Solve (decomposed per region cluster, parallel).
-    let (packing, method) = solve_stage(
-        &problem,
-        config,
-        &ctx.graphs,
-        &mut ctx.solutions,
-        seeds.as_deref(),
-        &mut stats,
-    )?;
+    // Stage 3: Solve (decomposed per region cluster, adaptive budgets,
+    // delta-aware memo, parallel).
+    let (packing, method) = solve_stage(&problem, config, ctx, seeds.as_deref(), &mut stats)?;
     packing.validate(&problem)?;
 
     // Stage 4: Expand — sticky against the previous assignment.
@@ -643,32 +700,35 @@ fn sub_seeds(seeds: &[PackedBin], comp: &Component) -> Vec<PackedBin> {
         .collect()
 }
 
-/// Result of solving one (sub)problem.
+/// Result of solving one (sub)problem. `stats` is present only for exact
+/// solves (heuristic strategies have no solver telemetry); `proven` is
+/// carried separately so memo hits keep their cached flag.
 struct SubSolve {
     packing: Packing,
     method: SolveMethod,
-    graph_hits: usize,
-    graph_misses: usize,
+    proven: bool,
+    stats: Option<SolveStats>,
 }
 
-/// Solve one problem with the configured strategy, warm seeds, and shared
-/// graph cache.
+/// Solve one problem with the configured strategy, warm seeds, per-component
+/// budgets, delta hints, and the shared graph cache.
 fn solve_one(
     problem: &PackingProblem,
     config: &PlannerConfig,
     cache: &GraphCache,
     seeds: Option<&[PackedBin]>,
+    opts: &SolveOptions,
+    hints: Option<&DeltaHints>,
 ) -> Result<SubSolve> {
     let warm = seeds.and_then(|s| heuristic::warm_start_fill(problem, s).ok());
     match config.solver {
         SolverKind::Exact => {
-            let (p, st) =
-                mcvbp::solve_with(problem, &config.solve_opts, Some(cache), warm.as_ref())?;
+            let (p, st) = mcvbp::solve_delta(problem, opts, Some(cache), warm.as_ref(), hints)?;
             Ok(SubSolve {
                 packing: p,
                 method: st.method,
-                graph_hits: st.graph_cache_hits,
-                graph_misses: st.graph_cache_misses,
+                proven: st.method == SolveMethod::ExactArcFlow && st.proven_optimal,
+                stats: Some(st),
             })
         }
         SolverKind::ArmvacGreedy => {
@@ -676,8 +736,8 @@ fn solve_one(
             Ok(SubSolve {
                 packing: cheaper(problem, cold, warm),
                 method: SolveMethod::Heuristic,
-                graph_hits: 0,
-                graph_misses: 0,
+                proven: false,
+                stats: None,
             })
         }
         SolverKind::Ffd => {
@@ -685,8 +745,8 @@ fn solve_one(
             Ok(SubSolve {
                 packing: cheaper(problem, cold, warm),
                 method: SolveMethod::Heuristic,
-                graph_hits: 0,
-                graph_misses: 0,
+                proven: false,
+                stats: None,
             })
         }
     }
@@ -701,28 +761,93 @@ fn cheaper(problem: &PackingProblem, cold: Packing, warm: Option<Packing>) -> Pa
     }
 }
 
+/// Stable identity of a component across re-plans: the sorted bin-type set
+/// (instance type × region). Demand drift keeps the identity, so telemetry
+/// recorded under one workload drives the budgets of the next.
+fn component_id(problem: &PackingProblem, comp: &Component) -> u64 {
+    let mut h = DefaultHasher::new();
+    for &t in &comp.bins {
+        let b = &problem.bins[t];
+        (b.type_idx, b.region_idx).hash(&mut h);
+    }
+    comp.bins.len().hash(&mut h);
+    h.finish()
+}
+
+/// Hash of a subproblem's *structure*: everything in its [`SolveKey`]
+/// except the group counts. Two keys with equal structure hashes describe
+/// the same bins, demand vectors, and group order — the precondition for
+/// delta-solve reuse (their joint ILPs differ only in coverage RHS).
+fn structure_hash(key: &SolveKey) -> u64 {
+    let mut h = DefaultHasher::new();
+    key.headroom.hash(&mut h);
+    key.bins.hash(&mut h);
+    key.items.len().hash(&mut h);
+    for (_, demands) in &key.items {
+        demands.hash(&mut h);
+    }
+    h.finish()
+}
+
+/// Near-match lookup: hints from the latest exact solve of the same
+/// structure, provided the total demand delta is bounded (≤ max(2, 5% of
+/// the subproblem's stream count) — beyond that a cold solve's own warm
+/// start is as good).
+fn delta_hints(
+    solutions: &HashMap<SolveKey, CachedSolve>,
+    delta_index: &HashMap<u64, SolveKey>,
+    key: &SolveKey,
+) -> Option<DeltaHints> {
+    let prev_key = delta_index.get(&structure_hash(key))?;
+    let prev = solutions.get(prev_key)?;
+    if prev.method != SolveMethod::ExactArcFlow || prev.counts.len() != key.items.len() {
+        return None;
+    }
+    let total: usize = key.items.iter().map(|(c, _)| *c).sum();
+    let delta: usize = prev
+        .counts
+        .iter()
+        .zip(key.items.iter().map(|(c, _)| *c))
+        .map(|(&a, b)| a.abs_diff(b))
+        .sum();
+    (delta > 0 && delta <= (total / 20).max(2)).then(|| prev.hints.clone())
+}
+
 /// Stage 3 — **Solve**: decompose into independent per-region-cluster
-/// subproblems, return memoized solutions for bit-identical subproblems,
-/// and solve the rest in parallel.
+/// subproblems, allocate each component's solver budgets from its history
+/// plus the global pool, return memoized solutions for bit-identical
+/// subproblems, warm-start near-identical ones from the delta memo, and
+/// solve the rest in parallel.
 fn solve_stage(
     problem: &PackingProblem,
     config: &PlannerConfig,
-    cache: &GraphCache,
-    solutions: &mut HashMap<SolveKey, (Packing, SolveMethod)>,
+    ctx: &mut PlanContext,
     seeds: Option<&[PackedBin]>,
     stats: &mut PipelineStats,
 ) -> Result<(Packing, SolveMethod)> {
     let comps = decompose(problem);
     stats.components = comps.len();
+    let fail_fast0 = ctx.graphs.fail_fast_count();
 
-    // Per-component inputs: the restricted problem, its memo key, and the
-    // translated warm seeds. Memo hits skip the solver entirely — on a
-    // small-perturbation re-plan almost every region cluster is bit-identical
-    // to the previous hour's.
+    // Adaptive budgets: each component's SolveOptions from its telemetry
+    // plus the donated pool (see `coordinator::budget`). Components without
+    // history run at the static seed budgets — a cold context therefore
+    // solves exactly like the seed planner.
+    let comp_ids: Vec<u64> = comps.iter().map(|c| component_id(problem, c)).collect();
+    let history: Vec<Option<&ComponentTelemetry>> =
+        comp_ids.iter().map(|id| ctx.telemetry.get(id)).collect();
+    let allocations = budget::allocate(&config.solve_opts, &history);
+
+    // Per-component inputs: the restricted problem, its memo key, budgets,
+    // delta hints, and the translated warm seeds. Memo hits skip the solver
+    // entirely — on a small-perturbation re-plan almost every region
+    // cluster is bit-identical to the previous hour's.
     struct Pending {
         sub: PackingProblem,
         sub_seed: Option<Vec<PackedBin>>,
         key: SolveKey,
+        opts: SolveOptions,
+        hints: Option<DeltaHints>,
     }
     let mut resolved: Vec<Option<SubSolve>> = Vec::with_capacity(comps.len());
     let mut pending: Vec<(usize, Pending)> = Vec::new();
@@ -733,31 +858,53 @@ fn solve_stage(
             (subproblem(problem, comp), seeds.map(|s| sub_seeds(s, comp)))
         };
         let key = solve_key(&sub);
-        match solutions.get(&key) {
-            Some((packing, method)) => {
+        let opts = allocations[ci].clone();
+        // Bit-identical subproblems reuse the memoized result verbatim —
+        // even a heuristic one. This keeps the documented invariant that
+        // identical consecutive re-plans change nothing (zero churn, stable
+        // ids); budget escalation kicks in the moment the subproblem
+        // actually drifts, which is the regime the adaptive allocator is
+        // for ("demands may vary").
+        match ctx.solutions.get(&key) {
+            Some(c) => {
                 stats.solution_cache_hits += 1;
                 resolved.push(Some(SubSolve {
-                    packing: packing.clone(),
-                    method: *method,
-                    graph_hits: 0,
-                    graph_misses: 0,
+                    packing: c.packing.clone(),
+                    method: c.method,
+                    proven: c.proven,
+                    stats: None,
                 }));
             }
             None => {
                 stats.solution_cache_misses += 1;
+                let hints = delta_hints(&ctx.solutions, &ctx.delta_index, &key);
+                if hints.is_some() {
+                    stats.delta_solve_hits += 1;
+                }
                 resolved.push(None);
-                pending.push((ci, Pending { sub, sub_seed, key }));
+                pending.push((ci, Pending { sub, sub_seed, key, opts, hints }));
             }
         }
     }
 
+    // Donated budget is reported for components that actually solve this
+    // run — memo hits consume nothing, so a stable re-plan reports zero.
+    stats.budget_donated_nodes = pending
+        .iter()
+        .map(|(_, p)| p.opts.max_graph_nodes - config.solve_opts.max_graph_nodes)
+        .sum();
+
+    let cache = &ctx.graphs;
     let results: Vec<Result<SubSolve>> = if config.parallel_regions && pending.len() > 1 {
         stats.solve_threads = pending.len();
         std::thread::scope(|scope| {
             let handles: Vec<_> = pending
                 .iter()
                 .map(|(_, p)| {
-                    scope.spawn(move || solve_one(&p.sub, config, cache, p.sub_seed.as_deref()))
+                    scope.spawn(move || {
+                        let seed = p.sub_seed.as_deref();
+                        solve_one(&p.sub, config, cache, seed, &p.opts, p.hints.as_ref())
+                    })
                 })
                 .collect();
             handles
@@ -771,30 +918,87 @@ fn solve_stage(
     } else {
         pending
             .iter()
-            .map(|(_, p)| solve_one(&p.sub, config, cache, p.sub_seed.as_deref()))
+            .map(|(_, p)| {
+                solve_one(&p.sub, config, cache, p.sub_seed.as_deref(), &p.opts, p.hints.as_ref())
+            })
             .collect()
     };
 
-    if solutions.len() + pending.len() > SOLUTION_CACHE_CAPACITY {
-        solutions.clear();
+    if ctx.solutions.len() + pending.len() > SOLUTION_CACHE_CAPACITY {
+        ctx.solutions.clear();
+        ctx.delta_index.clear();
     }
     for ((ci, p), result) in pending.into_iter().zip(results) {
         let sub = result?;
-        solutions.insert(p.key, (sub.packing.clone(), sub.method));
+        if let Some(st) = &sub.stats {
+            // Record telemetry for the next re-plan's budget allocation.
+            ctx.telemetry.insert(
+                comp_ids[ci],
+                ComponentTelemetry {
+                    graph_nodes: st.graph_nodes_before,
+                    milp_vars: st.milp_vars,
+                    milp_nodes: st.milp_nodes,
+                    exact: st.method == SolveMethod::ExactArcFlow,
+                    proven: st.proven_optimal,
+                    budget_exhausted: st.budget_exhausted,
+                    graph_budget: p.opts.max_graph_nodes,
+                    var_budget: p.opts.max_milp_vars,
+                    node_budget: p.opts.milp.max_nodes,
+                },
+            );
+        }
+        let hints = sub
+            .stats
+            .as_ref()
+            .map(|st| DeltaHints {
+                root_basis: st.root_basis.clone(),
+                branch_order: st.branch_order.clone(),
+            })
+            .unwrap_or_default();
+        if sub.method == SolveMethod::ExactArcFlow {
+            ctx.delta_index.insert(structure_hash(&p.key), p.key.clone());
+        }
+        let counts: Vec<usize> = p.key.items.iter().map(|(c, _)| *c).collect();
+        ctx.solutions.insert(
+            p.key,
+            CachedSolve {
+                packing: sub.packing.clone(),
+                method: sub.method,
+                proven: sub.proven,
+                hints,
+                counts,
+            },
+        );
         resolved[ci] = Some(sub);
     }
 
+    // Aggregate per-component telemetry into the run stats + cumulative
+    // solver counters, then merge the packings.
     let mut merged = Packing::default();
     let mut method = SolveMethod::ExactArcFlow;
+    let mut single_result: Option<(Packing, SolveMethod)> = None;
     for (comp, slot) in comps.iter().zip(resolved) {
         let sub = slot.expect("every component resolved");
-        stats.graph_cache_hits += sub.graph_hits;
-        stats.graph_cache_misses += sub.graph_misses;
+        if let Some(st) = &sub.stats {
+            stats.graph_cache_hits += st.graph_cache_hits;
+            stats.graph_cache_misses += st.graph_cache_misses;
+            stats.lp_warm_resumes += st.lp_warm;
+            stats.lp_cold_solves += st.lp_cold;
+            ctx.solver.bnb_nodes.add(st.milp_nodes as u64);
+        }
+        match sub.method {
+            SolveMethod::ExactArcFlow => stats.components_exact += 1,
+            SolveMethod::Heuristic => stats.components_fallback += 1,
+        }
+        if sub.proven {
+            stats.components_proven += 1;
+        }
         if sub.method == SolveMethod::Heuristic {
             method = SolveMethod::Heuristic;
         }
         if comps.len() == 1 {
-            return Ok((sub.packing, sub.method));
+            single_result = Some((sub.packing, sub.method));
+            continue;
         }
         for b in sub.packing.bins {
             let mut counts = vec![0usize; problem.items.len()];
@@ -803,6 +1007,19 @@ fn solve_stage(
             }
             merged.bins.push(PackedBin { bin_type: comp.bins[b.bin_type], counts });
         }
+    }
+    stats.graph_fail_fastpaths = ctx.graphs.fail_fast_count() - fail_fast0;
+    ctx.solver.subproblems.add(comps.len() as u64);
+    ctx.solver.exact_solves.add(stats.components_exact as u64);
+    ctx.solver.heuristic_fallbacks.add(stats.components_fallback as u64);
+    ctx.solver.memo_hits.add(stats.solution_cache_hits as u64);
+    ctx.solver.delta_reuses.add(stats.delta_solve_hits as u64);
+    ctx.solver.lp_warm_resumes.add(stats.lp_warm_resumes as u64);
+    ctx.solver.lp_cold_solves.add(stats.lp_cold_solves as u64);
+    ctx.solver.budget_donated_nodes.add(stats.budget_donated_nodes as u64);
+    ctx.solver.graph_fail_fastpaths.add(stats.graph_fail_fastpaths as u64);
+    if let Some(r) = single_result {
+        return Ok(r);
     }
     Ok((merged, method))
 }
@@ -914,6 +1131,106 @@ mod tests {
         assert!(!ctx.stats.warm_started, "stale warm start must be dropped");
         assert_eq!(ctx.stats.elig_cache_hits, 0);
         p.packing.validate(&p.problem).unwrap();
+    }
+
+    #[test]
+    fn single_count_change_takes_the_delta_solve_path() {
+        // Same structure (one Chicago group), one more camera: the solution
+        // memo misses bit-exactly but the near-match index must hand the
+        // solver its cached basis/branch order, and the warm plan must cost
+        // exactly what a cold plan of the grown workload costs.
+        let catalog = crate::catalog::Catalog::builtin()
+            .restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let cfg = PlannerConfig::st3();
+        let mk = |n: usize| -> Vec<StreamRequest> {
+            (0..n)
+                .map(|i| {
+                    StreamRequest::new(
+                        camera_at(i as u64, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0),
+                        Program::Zf,
+                        1.0,
+                    )
+                })
+                .collect()
+        };
+        let mut ctx = PlanContext::new();
+        plan_with_context(&catalog, &cfg, &mk(6), &mut ctx).unwrap();
+        let warm = plan_with_context(&catalog, &cfg, &mk(7), &mut ctx).unwrap();
+        assert_eq!(ctx.stats.delta_solve_hits, 1, "{:?}", ctx.stats);
+        assert_eq!(ctx.solver.delta_reuses.get(), 1);
+        let cold = plan_with_context(&catalog, &cfg, &mk(7), &mut PlanContext::new()).unwrap();
+        assert!(
+            (warm.cost_per_hour - cold.cost_per_hour).abs() < 1e-9,
+            "delta-solve warm {} != cold {}",
+            warm.cost_per_hour,
+            cold.cost_per_hour
+        );
+    }
+
+    #[test]
+    fn component_accounting_covers_every_subproblem() {
+        let catalog = crate::catalog::Catalog::builtin();
+        let cfg = PlannerConfig::gcl();
+        let mut ctx = PlanContext::new();
+        plan_with_context(&catalog, &cfg, &worldwide_requests(), &mut ctx).unwrap();
+        let s = &ctx.stats;
+        assert!(s.components >= 2);
+        assert_eq!(
+            s.components_exact + s.components_fallback,
+            s.components,
+            "every component is exact or fallback: {s:?}"
+        );
+        assert_eq!(s.components_proven, s.components, "paper-scale solves must prove");
+        // Telemetry recorded for each component, at the static seed budgets
+        // (first plan: no history, so no grants).
+        assert_eq!(ctx.component_telemetry().len(), s.components);
+        assert_eq!(s.budget_donated_nodes, 0);
+        assert_eq!(ctx.solver.subproblems.get(), s.components as u64);
+    }
+
+    #[test]
+    fn budget_escalates_after_a_fallback_when_the_workload_drifts() {
+        // Force a budget-bound fallback, then re-plan a drifted workload
+        // through the same context: the allocator must escalate the
+        // component's budgets (visible as donated/granted nodes and in the
+        // recorded telemetry), while an *identical* re-plan keeps riding
+        // the memo for stability.
+        let catalog = crate::catalog::Catalog::builtin()
+            .restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let mut cfg = PlannerConfig::st3();
+        cfg.solve_opts.max_graph_nodes = 2; // nothing real builds under this
+        let mk = |n: usize| -> Vec<StreamRequest> {
+            (0..n)
+                .map(|i| {
+                    StreamRequest::new(
+                        camera_at(i as u64, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0),
+                        Program::Zf,
+                        1.0,
+                    )
+                })
+                .collect()
+        };
+        let mut ctx = PlanContext::new();
+        let first = plan_with_context(&catalog, &cfg, &mk(5), &mut ctx).unwrap();
+        assert_eq!(ctx.stats.components_fallback, 1, "{:?}", ctx.stats);
+        assert_eq!(ctx.stats.budget_donated_nodes, 0, "no history yet");
+        let telem = ctx.component_telemetry();
+        assert!(telem[0].budget_exhausted && telem[0].graph_budget == 2);
+
+        // Identical re-plan: memo hit, nothing re-solved (stability).
+        plan_with_context(&catalog, &cfg, &mk(5), &mut ctx).unwrap();
+        assert_eq!(ctx.stats.solution_cache_hits, 1, "{:?}", ctx.stats);
+
+        // Drifted re-plan: escalated budgets applied to the fresh solve.
+        let drifted = plan_with_context(&catalog, &cfg, &mk(6), &mut ctx).unwrap();
+        assert!(ctx.stats.budget_donated_nodes > 0, "{:?}", ctx.stats);
+        let telem = ctx.component_telemetry();
+        assert!(
+            telem[0].graph_budget > 2,
+            "drifted re-plan must run under the escalated budget: {:?}",
+            telem[0]
+        );
+        assert!(first.cost_per_hour > 0.0 && drifted.cost_per_hour > 0.0);
     }
 
     #[test]

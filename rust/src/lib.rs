@@ -50,6 +50,46 @@
 //! (and only ever improve where it had to fall back to a heuristic),
 //! while wall-clock drops on worldwide workloads.
 //!
+//! ## Adaptive budgets & delta-solve reuse (10k+ streams)
+//!
+//! Two mechanisms keep re-plans exact at metro scale (thousands of cameras
+//! per city):
+//!
+//! * **Adaptive solver budgets** ([`coordinator::budget`]) — each
+//!   component's arc-flow-node / ILP-variable / branch-and-bound budgets
+//!   are re-derived every re-plan from its own telemetry plus a global
+//!   pool: trivial components donate predicted slack, components that hit
+//!   a budget wall escalate from the pool, and nobody ever drops below the
+//!   static seed budgets ([`packing::mcvbp::SolveOptions`]'s defaults).
+//! * **Delta-solve reuse** — the solution memo additionally indexes
+//!   subproblems by *structure* (bins + demand vectors, counts excluded).
+//!   A re-plan whose subproblem differs from a memoized exact solve by a
+//!   bounded demand delta re-enters the solver warm: the cached optimal
+//!   basis is re-installed and repaired by a dual-simplex pass
+//!   ([`solver::simplex::resume_from_basis`]) and the cached branching
+//!   order replays in [`solver::bnb`]. Every warm step is certified; the
+//!   uncertifiable ones fall back to the cold path under the same budgets,
+//!   so warm results are exactly as optimal as cold ones.
+//!
+//! ## `BENCH_scale.json` (written by `bench_scale`, gated in CI)
+//!
+//! * `parity[]` — per 10k-stream scenario: `streams`, `fps`, `cold_ms`,
+//!   `warm_ms`, `speedup` (wall-clock, recorded-not-gated under
+//!   `BENCH_LENIENT_TIMING`), `cold_usd_per_hour` / `warm_usd_per_hour`,
+//!   `reuse_ratio`, `delta_solve_hits` (near-match memo reuses — asserted
+//!   > 0), `components`, `cold_exact_complete` (every component exact and
+//!   proven), `warm_equals_cold` (cost parity, asserted whenever both
+//!   sides completed their exact phase).
+//! * `exact_recovery` — the calibrated fallback-recovery scenario:
+//!   `probe_need_max`/`probe_need_second` (measured per-component arc-flow
+//!   needs), `static_budget` (pinned between them), `static_fallbacks`
+//!   (asserted ≥ 1: the seed behaviour starves the hard metro),
+//!   `adaptive_fallbacks` (asserted 0: the pool-funded re-solve recovers
+//!   exactness), `budget_donated_nodes`, and the static/adaptive/probe
+//!   `usd_per_hour` triple.
+//! * `lp_reuse` — `lp_warm_resumes` vs `lp_cold_solves` node LPs across
+//!   the warm runs (the dual-simplex resume at work).
+//!
 //! ## Features
 //!
 //! The request path (PJRT artifact loading + serving) is gated behind the

@@ -139,6 +139,58 @@ impl Histogram {
     }
 }
 
+/// Cross-re-plan solver telemetry, accumulated by the planning pipeline
+/// (the planner-side counterpart of [`ServingMetrics`]). Owned by a
+/// `PlanContext`, so counters aggregate over every re-plan through that
+/// context — the adaptive budget allocator's raw material is the
+/// per-component snapshot; these are the fleet-level roll-up.
+#[derive(Default)]
+pub struct SolverMetrics {
+    /// Subproblems entering the Solve stage (memo hits included).
+    pub subproblems: Counter,
+    /// Components whose adopted packing came from the exact phase vs the
+    /// heuristic fallback.
+    pub exact_solves: Counter,
+    pub heuristic_fallbacks: Counter,
+    /// Bit-exact solution-memo hits and near-match (delta) reuses.
+    pub memo_hits: Counter,
+    pub delta_reuses: Counter,
+    /// Node LPs warm-resumed from a cached/parent basis vs solved cold.
+    pub lp_warm_resumes: Counter,
+    pub lp_cold_solves: Counter,
+    /// Branch-and-bound nodes expanded.
+    pub bnb_nodes: Counter,
+    /// Extra arc-flow node budget granted above the static seed by the
+    /// adaptive allocator (sum over re-plans).
+    pub budget_donated_nodes: Counter,
+    /// Over-budget graph builds short-circuited by the failure watermark.
+    pub graph_fail_fastpaths: Counter,
+}
+
+impl SolverMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "subproblems={} exact={} fallback={} memo={} delta={} lp_warm={} lp_cold={} \
+             bnb_nodes={} donated_nodes={} fail_fast={}",
+            self.subproblems.get(),
+            self.exact_solves.get(),
+            self.heuristic_fallbacks.get(),
+            self.memo_hits.get(),
+            self.delta_reuses.get(),
+            self.lp_warm_resumes.get(),
+            self.lp_cold_solves.get(),
+            self.bnb_nodes.get(),
+            self.budget_donated_nodes.get(),
+            self.graph_fail_fastpaths.get(),
+        )
+    }
+}
+
 /// A named set of serving metrics.
 #[derive(Default)]
 pub struct ServingMetrics {
@@ -265,6 +317,21 @@ mod tests {
             j.join().unwrap();
         }
         assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn solver_metrics_accumulate_and_render() {
+        let m = SolverMetrics::new();
+        m.subproblems.add(6);
+        m.exact_solves.add(5);
+        m.heuristic_fallbacks.inc();
+        m.delta_reuses.add(2);
+        m.budget_donated_nodes.add(12_000);
+        let s = m.summary();
+        assert!(s.contains("subproblems=6"));
+        assert!(s.contains("fallback=1"));
+        assert!(s.contains("delta=2"));
+        assert!(s.contains("donated_nodes=12000"));
     }
 
     #[test]

@@ -230,11 +230,20 @@ struct GraphKey {
 /// The cache is `Sync`: lookups take a short lock, builds run outside it so
 /// parallel per-region solves don't serialize on graph construction (a
 /// duplicate concurrent build of the same key is possible but harmless).
+///
+/// Failed builds are remembered too: the cache keeps, per key, the highest
+/// node budget known to be insufficient (the *failure watermark*). A
+/// repeated over-budget subproblem then fails fast instead of re-enumerating
+/// the same state space to the same failure on every re-plan; a later call
+/// with a larger budget still rebuilds, and a success clears the watermark.
 #[derive(Default)]
 pub struct GraphCache {
     map: Mutex<HashMap<GraphKey, Arc<(ArcFlow, CompressionStats)>>>,
+    /// Key → highest `max_nodes` that is known to be insufficient.
+    failed: Mutex<HashMap<GraphKey, usize>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    fail_fast: AtomicUsize,
 }
 
 /// Soft cap on cached graphs; reaching it clears the cache (simple, bounded).
@@ -250,10 +259,15 @@ impl GraphCache {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
+    /// Over-budget builds short-circuited by the failure watermark.
+    pub fn fail_fast_count(&self) -> usize {
+        self.fail_fast.load(Ordering::Relaxed)
+    }
+
     /// Return the compressed graph for `(cap, items)` plus whether it was a
-    /// cache hit, building (and caching) it on a miss. Build failures
-    /// (state-space budget exceeded) are not cached: a later call with a
-    /// larger budget may succeed.
+    /// cache hit, building (and caching) it on a miss. A budget failure
+    /// records its watermark so retries at or below it fail fast; a retry
+    /// with a larger budget rebuilds (and, on success, clears it).
     pub fn get_or_build(
         &self,
         cap: &[i64],
@@ -268,16 +282,43 @@ impl GraphCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok((hit, true));
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let g = build(cap, items, max_nodes)?;
-        let (cg, stats) = compress(&g);
-        let entry = Arc::new((cg, stats));
-        let mut map = self.map.lock().unwrap();
-        if map.len() >= GRAPH_CACHE_CAPACITY {
-            map.clear();
+        if let Some(&w) = self.failed.lock().unwrap().get(&key) {
+            if max_nodes <= w {
+                self.fail_fast.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::solver(format!(
+                    "arc-flow state space exceeds {max_nodes} nodes \
+                     (cached failure watermark {w})"
+                )));
+            }
         }
-        map.insert(key, entry.clone());
-        Ok((entry, false))
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        match build(cap, items, max_nodes) {
+            Ok(g) => {
+                let (cg, stats) = compress(&g);
+                let entry = Arc::new((cg, stats));
+                self.failed.lock().unwrap().remove(&key);
+                let mut map = self.map.lock().unwrap();
+                if map.len() >= GRAPH_CACHE_CAPACITY {
+                    map.clear();
+                }
+                map.insert(key, entry.clone());
+                Ok((entry, false))
+            }
+            Err(e) => {
+                // Only budget failures are watermarked; config errors (e.g.
+                // dimension mismatch) are cheap to rediscover and should not
+                // occupy cache space.
+                if matches!(e, Error::Solver(_)) {
+                    let mut failed = self.failed.lock().unwrap();
+                    if failed.len() >= GRAPH_CACHE_CAPACITY {
+                        failed.clear();
+                    }
+                    let w = failed.entry(key).or_insert(0);
+                    *w = (*w).max(max_nodes);
+                }
+                Err(e)
+            }
+        }
     }
 }
 
@@ -426,6 +467,30 @@ mod tests {
             enumerate_packings(&g1.0, 3),
             enumerate_packings(&compress(&fresh).0, 3)
         );
+    }
+
+    #[test]
+    fn failure_watermark_stops_repeat_rebuilds() {
+        // A state space that cannot fit in 50 nodes (see max_nodes_guard).
+        let cap = vec![50, 50, 50];
+        let items: Vec<QuantItem> = (1..=10)
+            .map(|i| QuantItem { sizes: vec![i, 11 - i, (i % 3) + 1], count: 5 })
+            .collect();
+        let cache = GraphCache::new();
+        assert!(cache.get_or_build(&cap, &items, 50).is_err());
+        let misses_after_first = cache.stats().1;
+        // Same (or lower) budget: fails fast without re-enumerating states.
+        assert!(cache.get_or_build(&cap, &items, 50).is_err());
+        assert!(cache.get_or_build(&cap, &items, 30).is_err());
+        assert_eq!(cache.stats().1, misses_after_first, "watermark must skip rebuilds");
+        assert_eq!(cache.fail_fast_count(), 2);
+        // A larger budget rebuilds; success clears the watermark so the
+        // entry is a plain cache hit afterwards.
+        let (_, hit) = cache.get_or_build(&cap, &items, 1_000_000).unwrap();
+        assert!(!hit);
+        let (_, hit2) = cache.get_or_build(&cap, &items, 50).unwrap();
+        assert!(hit2, "successful build must serve later lookups");
+        assert_eq!(cache.fail_fast_count(), 2);
     }
 
     #[test]

@@ -16,16 +16,29 @@ use crate::error::{Error, Result};
 use crate::solver::{solve_milp, Lp, Milp, MilpOptions, Op};
 
 /// Exact-solve configuration.
+///
+/// The `Default` values are the *static seed budgets*: what one subproblem
+/// gets with no solve history. The staged planner's adaptive allocator
+/// (`coordinator::budget`) re-derives per-component budgets from telemetry
+/// each re-plan, flooring at these values — so the defaults are the
+/// guaranteed minimum, not a hard ceiling.
 #[derive(Clone, Debug)]
 pub struct SolveOptions {
     /// Quantization levels per dimension (grid = effective capacity / quant).
     pub quant: i64,
-    /// Per-bin-type arc-flow node budget; exceeded -> heuristic fallback.
+    /// Cumulative arc-flow node budget across a solve's bin types;
+    /// exceeded -> heuristic fallback.
     pub max_graph_nodes: usize,
     /// Joint-ILP variable budget; exceeded -> heuristic fallback.
     pub max_milp_vars: usize,
     /// Branch-and-bound limits.
     pub milp: MilpOptions,
+    /// Numerator of the per-ILP node guard: the effective branch-and-bound
+    /// node budget is `min(milp.max_nodes, max(50, milp_node_scale / vars))`
+    /// so planning latency stays bounded on large ILPs ("resource decisions
+    /// quickly, during runtime"). Scaled up alongside `milp.max_nodes` by
+    /// the adaptive allocator.
+    pub milp_node_scale: usize,
     /// If false, skip the exact phase entirely (best-of heuristics).
     pub exact: bool,
 }
@@ -37,6 +50,7 @@ impl Default for SolveOptions {
             max_graph_nodes: 6_000,
             max_milp_vars: 600,
             milp: MilpOptions { max_nodes: 2_000, ..Default::default() },
+            milp_node_scale: 200_000,
             exact: true,
         }
     }
@@ -67,6 +81,32 @@ pub struct SolveStats {
     pub graph_cache_misses: usize,
     /// True if a warm-start incumbent participated in this solve.
     pub warm_started: bool,
+    /// True when branch-and-bound proved optimality of the exact phase.
+    pub proven_optimal: bool,
+    /// True when a structural budget (graph nodes / ILP variables) forced
+    /// the heuristic fallback — the signal the adaptive budget allocator
+    /// escalates on.
+    pub budget_exhausted: bool,
+    /// Node LPs re-entered warm from a parent/cached basis vs solved cold.
+    pub lp_warm: usize,
+    pub lp_cold: usize,
+    /// Root-relaxation basis + first-branch order, cached by the planner's
+    /// solution memo to warm-start near-identical future subproblems.
+    pub root_basis: Option<Vec<usize>>,
+    pub branch_order: Vec<usize>,
+}
+
+/// Cached warm re-entry state from a previous solve of a *structurally
+/// identical* subproblem (same bins and per-bin demand vectors; only group
+/// counts may differ). The root LP re-enters the simplex via
+/// [`resume_from_basis`](crate::solver::simplex::resume_from_basis) and the
+/// branching order replays in `bnb`. Hints only ever accelerate: every warm
+/// step is certified by the solver, and anything uncertifiable falls back
+/// to the cold path inside the same budgets.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaHints {
+    pub root_basis: Option<Vec<usize>>,
+    pub branch_order: Vec<usize>,
 }
 
 /// Quantize each item's demand up to the bin-type grid; `None` stays `None`,
@@ -145,6 +185,20 @@ pub fn solve_with(
     cache: Option<&GraphCache>,
     incumbent: Option<&Packing>,
 ) -> Result<(Packing, SolveStats)> {
+    solve_delta(problem, opts, cache, incumbent, None)
+}
+
+/// [`solve_with`], additionally re-entering the solver from cached
+/// [`DeltaHints`] when a structurally identical subproblem was solved
+/// before (the near-match memo path). Incompatible hints are ignored, so
+/// this is never less exact than the cold solve under the same budgets.
+pub fn solve_delta(
+    problem: &PackingProblem,
+    opts: &SolveOptions,
+    cache: Option<&GraphCache>,
+    incumbent: Option<&Packing>,
+    hints: Option<&DeltaHints>,
+) -> Result<(Packing, SolveStats)> {
     // Quantize once; all phases work on the conservative instance so the
     // result is valid for the original problem.
     let qp = quantize_problem(problem, opts.quant);
@@ -190,6 +244,12 @@ pub fn solve_with(
         graph_cache_hits: 0,
         graph_cache_misses: 0,
         warm_started: valid_incumbent.is_some(),
+        proven_optimal: false,
+        budget_exhausted: false,
+        lp_warm: 0,
+        lp_cold: 0,
+        root_basis: None,
+        branch_order: Vec::new(),
     };
     if !opts.exact {
         return Ok((best_heuristic, stats));
@@ -216,9 +276,22 @@ pub fn solve_with(
         let cap = vec![opts.quant; NUM_DIMS];
         let items: Vec<QuantItem> = groups
             .iter()
-            .map(|&g| QuantItem {
-                sizes: cells(&qp, t, &qp.items[g].demand_per_bin[t].unwrap(), opts.quant),
-                count: qp.items[g].count,
+            .map(|&g| {
+                let sizes = cells(&qp, t, &qp.items[g].demand_per_bin[t].unwrap(), opts.quant);
+                // Per-bin multiplicity cap: more copies of a group than fit
+                // one bin can never appear on a single source→sink path, so
+                // clamping the demanded count here leaves the path set
+                // unchanged while making the graph — and its cache key —
+                // insensitive to count drift beyond the cap. That key
+                // stability is what lets the delta-solve path reuse bases
+                // across re-plans whose only change is a demand count.
+                let max_mult = sizes
+                    .iter()
+                    .filter(|&&s| s > 0)
+                    .map(|&s| (opts.quant / s).max(1) as usize)
+                    .min()
+                    .unwrap_or(qp.items[g].count);
+                QuantItem { sizes, count: qp.items[g].count.min(max_mult) }
             })
             .collect();
         let built = match cache {
@@ -259,6 +332,7 @@ pub fn solve_with(
             }
             None => {
                 // Cumulative state budget exhausted: heuristic fallback.
+                stats.budget_exhausted = true;
                 return Ok((best_heuristic, stats));
             }
         }
@@ -279,6 +353,7 @@ pub fn solve_with(
     var_offset[qp.bins.len()] = var_arc.len();
     let num_vars = var_arc.len();
     if num_vars == 0 || num_vars > opts.max_milp_vars {
+        stats.budget_exhausted = num_vars > opts.max_milp_vars;
         return Ok((best_heuristic, stats));
     }
 
@@ -374,12 +449,27 @@ pub fn solve_with(
         .collect();
     milp_opts.max_nodes = milp_opts
         .max_nodes
-        .min((200_000 / num_vars.max(1)).max(50));
+        .min((opts.milp_node_scale / num_vars.max(1)).max(50));
+    // Delta-solve hints: replay a structurally identical previous solve's
+    // branching order and re-enter from its root basis. Out-of-range hints
+    // (the structure changed after all) are dropped here or certified away
+    // inside the solver — either way the search stays exact.
+    if let Some(h) = hints {
+        if h.branch_order.iter().all(|&v| v < num_vars) {
+            milp_opts.replay_order = h.branch_order.clone();
+        }
+        milp_opts.root_basis = h.root_basis.clone();
+    }
     let sol = match solve_milp(&milp, &milp_opts) {
         Ok(s) => s,
         Err(_) => return Ok((best_heuristic, stats)), // exact phase failed
     };
     stats.milp_nodes = sol.nodes;
+    stats.proven_optimal = sol.proven_optimal;
+    stats.lp_warm = sol.lp_warm;
+    stats.lp_cold = sol.lp_cold;
+    stats.root_basis = sol.root_basis.clone();
+    stats.branch_order = sol.branch_order.clone();
 
     // Decompose flows into source->sink paths per graph -> bins.
     let mut packing = Packing::default();
@@ -604,6 +694,65 @@ mod tests {
         assert!((w2.total_cost(&p) - cold.total_cost(&p)).abs() < 1e-9);
         assert_eq!(s2.method, cold_stats.method);
         w2.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn graph_cache_key_is_count_insensitive_beyond_the_per_bin_cap() {
+        use crate::packing::arcflow::GraphCache;
+        // 2-core items in an 8-core bin: at most 3 fit one bin, so counts 10
+        // and 12 must produce the same capped graph (and cache key).
+        let p10 = simple_problem(&[(2.0, 1.0, 10)], &[(8.0, 15.0, 1.0)]);
+        let p12 = simple_problem(&[(2.0, 1.0, 12)], &[(8.0, 15.0, 1.0)]);
+        let opts = SolveOptions::default();
+        let cache = GraphCache::new();
+        let (s10, st10) = solve_with(&p10, &opts, Some(&cache), None).unwrap();
+        assert_eq!(st10.graph_cache_hits, 0);
+        let (s12, st12) = solve_with(&p12, &opts, Some(&cache), None).unwrap();
+        assert!(
+            st12.graph_cache_hits > 0,
+            "count drift beyond the per-bin cap must reuse the cached graph"
+        );
+        s10.validate(&p10).unwrap();
+        s12.validate(&p12).unwrap();
+    }
+
+    #[test]
+    fn delta_hints_accelerate_without_changing_the_answer() {
+        // Solve once, then re-solve single-count perturbations warm from the
+        // first solve's root basis + branching order: costs must match the
+        // cold solves exactly (the exactness guard falls back internally
+        // whenever a warm step cannot be certified).
+        let opts = SolveOptions::default();
+        let base = simple_problem(
+            &[(2.0, 1.0, 5), (3.0, 2.0, 3), (1.5, 0.8, 4)],
+            &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)],
+        );
+        let (_, st) = solve(&base, &opts).unwrap();
+        assert!(st.proven_optimal, "seed solve must prove optimality");
+        let hints = DeltaHints {
+            root_basis: st.root_basis.clone(),
+            branch_order: st.branch_order.clone(),
+        };
+        for counts in [[6, 3, 4], [5, 2, 4], [4, 3, 5]] {
+            let p = simple_problem(
+                &[
+                    (2.0, 1.0, counts[0]),
+                    (3.0, 2.0, counts[1]),
+                    (1.5, 0.8, counts[2]),
+                ],
+                &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)],
+            );
+            let (cold, cold_st) = solve(&p, &opts).unwrap();
+            let (warm, warm_st) = solve_delta(&p, &opts, None, None, Some(&hints)).unwrap();
+            assert!(cold_st.proven_optimal && warm_st.proven_optimal);
+            assert!(
+                (warm.total_cost(&p) - cold.total_cost(&p)).abs() < 1e-9,
+                "counts {counts:?}: warm {} != cold {}",
+                warm.total_cost(&p),
+                cold.total_cost(&p)
+            );
+            warm.validate(&p).unwrap();
+        }
     }
 
     #[test]

@@ -10,6 +10,13 @@ use super::manifest::{load_params, Manifest, ModelEntry};
 use crate::error::{Error, Result};
 use std::collections::HashMap;
 
+// Without the vendored xla crate the engine compiles against a stub with the
+// same API surface (constructors fail at runtime). CI type-checks the pjrt
+// feature through this path; `--cfg camflow_vendored_xla` selects the real
+// crate.
+#[cfg(not(camflow_vendored_xla))]
+use super::xla_stub as xla;
+
 /// Raw detections for a batch: `(batch, cells*anchors, 5 + classes)`.
 #[derive(Clone, Debug)]
 pub struct Detections {

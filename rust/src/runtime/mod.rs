@@ -8,6 +8,8 @@
 
 pub mod engine;
 pub mod manifest;
+#[cfg(not(camflow_vendored_xla))]
+mod xla_stub;
 
 pub use engine::{Detections, Engine};
 pub use manifest::{Manifest, ModelEntry};

@@ -4,8 +4,19 @@
 //! LP; nodes are explored best-bound-first. An optional warm-start incumbent
 //! (e.g. an FFD packing) prunes from the start — the same role heuristic
 //! solutions play in the paper's Gurobi branch-and-cut runs.
+//!
+//! Node LPs re-enter the simplex warm: each node carries its parent's
+//! optimal basis, extended by the new branch row's slack column, and
+//! [`resume_from_basis`] repairs the single infeasible row with a short
+//! dual-simplex pass instead of a cold two-phase solve. A previous solve of
+//! a structurally identical MILP can additionally seed the *root* basis and
+//! replay its branching order (`MilpOptions::{root_basis, replay_order}`) —
+//! the delta-solve path used by the planner's near-match solution memo. All
+//! warm re-entries are certified by the simplex layer; any uncertified node
+//! falls back to a cold LP solve, so the search is exactly as correct as the
+//! all-cold one.
 
-use super::simplex::{solve_lp, Lp, LpOutcome, Op};
+use super::simplex::{resume_from_basis, solve_lp, Lp, LpOutcome, Op, Resume};
 use crate::error::{Error, Result};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -32,6 +43,16 @@ pub struct MilpOptions {
     /// "number of bins" arcs in the arc-flow ILP — branching there decides
     /// the macro structure before micro flow routing).
     pub priority_vars: Vec<usize>,
+    /// Delta-solve replay: branch on these variables first, in this order,
+    /// while fractional — the first-branch order of a previous solve of a
+    /// structurally identical MILP steers the search down the same path.
+    /// Takes precedence over `priority_vars`; out-of-range entries are
+    /// ignored.
+    pub replay_order: Vec<usize>,
+    /// Optimal basis of a structurally identical MILP's root relaxation;
+    /// warm-starts the root node LP (dual simplex absorbs RHS deltas). An
+    /// incompatible basis is silently ignored (the root solves cold).
+    pub root_basis: Option<Vec<usize>>,
 }
 
 impl Default for MilpOptions {
@@ -42,6 +63,8 @@ impl Default for MilpOptions {
             warm_start: None,
             rel_gap: 1e-9,
             priority_vars: Vec::new(),
+            replay_order: Vec::new(),
+            root_basis: None,
         }
     }
 }
@@ -55,12 +78,25 @@ pub struct MilpSolution {
     pub nodes: usize,
     /// True if optimality was proven (node limit not hit).
     pub proven_optimal: bool,
+    /// The root relaxation's optimal basis (artificial-free), for
+    /// delta-solve caching; `None` when the root LP was pruned or its basis
+    /// kept an artificial column.
+    pub root_basis: Option<Vec<usize>>,
+    /// Integer variables branched on, in first-branch order (the replay
+    /// hint for a future structurally identical solve).
+    pub branch_order: Vec<usize>,
+    /// Node LPs re-entered warm from a parent/cached basis vs solved cold.
+    pub lp_warm: usize,
+    pub lp_cold: usize,
 }
 
 struct Node {
     bound: f64,
     /// Extra bound rows: (var, op, rhs).
     extra: Vec<(usize, Op, f64)>,
+    /// The parent node's optimal basis (warm re-entry seed), extended by
+    /// the new branch row's slack column at solve time.
+    basis: Option<Vec<usize>>,
 }
 
 impl PartialEq for Node {
@@ -99,13 +135,56 @@ fn most_fractional(x: &[f64], int_vars: &[usize], tol: f64) -> Option<(usize, f6
     best.map(|(i, v, _)| (i, v))
 }
 
+/// First variable in `order` (the replay hint) that is still fractional.
+fn first_fractional(x: &[f64], order: &[usize], tol: f64) -> Option<(usize, f64)> {
+    order
+        .iter()
+        .filter(|&&i| i < x.len())
+        .map(|&i| (i, x[i]))
+        .find(|&(_, v)| {
+            let frac = v - v.floor();
+            frac > tol && frac < 1.0 - tol
+        })
+}
+
+/// Solve a node LP warm from `basis` when possible. The basis is either the
+/// node's own row count (a cached root basis) or one short (a parent basis;
+/// the appended branch row's slack column completes it). Returns `None`
+/// whenever the simplex layer cannot certify the warm result.
+fn try_warm(lp: &Lp, basis: &[usize]) -> Option<LpOutcome> {
+    let m = lp.constraints.len();
+    let candidate: Vec<usize> = if basis.len() == m {
+        basis.to_vec()
+    } else if basis.len() + 1 == m {
+        let num_slack = lp.constraints.iter().filter(|c| c.op != Op::Eq).count();
+        let mut b = basis.to_vec();
+        // Branch rows are Le/Ge, so the appended row owns the last slack.
+        b.push(lp.num_vars + num_slack - 1);
+        b
+    } else {
+        return None;
+    };
+    match resume_from_basis(lp, &candidate) {
+        Ok(Resume::Solved(o)) => Some(o),
+        _ => None,
+    }
+}
+
 /// Solve `min c·x` with integrality. Returns `Error::Infeasible` if no
 /// integral solution exists (and none was warm-started).
 pub fn solve_milp(milp: &Milp, opts: &MilpOptions) -> Result<MilpSolution> {
     let mut incumbent: Option<(Vec<f64>, f64)> = opts.warm_start.clone();
     let mut nodes_explored = 0usize;
+    let mut root_basis_out: Option<Vec<usize>> = None;
+    let mut branch_order: Vec<usize> = Vec::new();
+    let mut lp_warm = 0usize;
+    let mut lp_cold = 0usize;
 
-    let root = Node { bound: f64::NEG_INFINITY, extra: Vec::new() };
+    let root = Node {
+        bound: f64::NEG_INFINITY,
+        extra: Vec::new(),
+        basis: opts.root_basis.clone(),
+    };
     let mut heap = BinaryHeap::new();
     heap.push(root);
     let mut proven = true;
@@ -128,20 +207,36 @@ pub fn solve_milp(milp: &Milp, opts: &MilpOptions) -> Result<MilpSolution> {
         for &(var, op, rhs) in &node.extra {
             lp.add_constraint(vec![(var, 1.0)], op, rhs);
         }
-        let sol = match solve_lp(&lp)? {
+        // Warm re-entry from the parent/cached basis; cold solve whenever
+        // the simplex layer cannot certify the warm result.
+        let outcome = match node.basis.as_deref().and_then(|b| try_warm(&lp, b)) {
+            Some(o) => {
+                lp_warm += 1;
+                o
+            }
+            None => {
+                lp_cold += 1;
+                solve_lp(&lp)?
+            }
+        };
+        let sol = match outcome {
             LpOutcome::Optimal(s) => s,
             LpOutcome::Infeasible => continue,
             LpOutcome::Unbounded => {
                 return Err(Error::solver("MILP relaxation unbounded"));
             }
         };
+        if node.extra.is_empty() {
+            root_basis_out = sol.basis.clone();
+        }
         if let Some((_, inc_obj)) = &incumbent {
             if sol.objective > *inc_obj - opts.rel_gap * inc_obj.abs().max(1.0) {
                 continue;
             }
         }
 
-        let branch_var = most_fractional(&sol.x, &opts.priority_vars, opts.int_tol)
+        let branch_var = first_fractional(&sol.x, &opts.replay_order, opts.int_tol)
+            .or_else(|| most_fractional(&sol.x, &opts.priority_vars, opts.int_tol))
             .or_else(|| most_fractional(&sol.x, &milp.integer_vars, opts.int_tol));
         match branch_var {
             None => {
@@ -152,12 +247,15 @@ pub fn solve_milp(milp: &Milp, opts: &MilpOptions) -> Result<MilpSolution> {
                 }
             }
             Some((var, val)) => {
+                if !branch_order.contains(&var) {
+                    branch_order.push(var);
+                }
                 let mut lo = node.extra.clone();
                 lo.push((var, Op::Le, val.floor()));
                 let mut hi = node.extra;
                 hi.push((var, Op::Ge, val.ceil()));
-                heap.push(Node { bound: sol.objective, extra: lo });
-                heap.push(Node { bound: sol.objective, extra: hi });
+                heap.push(Node { bound: sol.objective, extra: lo, basis: sol.basis.clone() });
+                heap.push(Node { bound: sol.objective, extra: hi, basis: sol.basis });
             }
         }
     }
@@ -178,6 +276,10 @@ pub fn solve_milp(milp: &Milp, opts: &MilpOptions) -> Result<MilpSolution> {
             objective,
             nodes: nodes_explored,
             proven_optimal: proven,
+            root_basis: root_basis_out,
+            branch_order,
+            lp_warm,
+            lp_cold,
         }),
         None => Err(Error::infeasible("MILP has no integral solution")),
     }
@@ -281,6 +383,74 @@ mod tests {
         };
         let s = solve_milp(&m, &opts).unwrap();
         assert_eq!(s.objective, 3.0);
+    }
+
+    #[test]
+    fn node_lps_resume_warm_from_parent_bases() {
+        // A MILP that must branch: children re-enter the simplex from the
+        // parent basis, so warm LP solves dominate once branching starts.
+        let mut m = milp(2);
+        m.lp.set_objective(0, 1.0);
+        m.lp.set_objective(1, 1.1);
+        m.lp.add_constraint(vec![(0, 2.0), (1, 3.0)], Op::Ge, 7.5);
+        let s = solve_milp(&m, &MilpOptions::default()).unwrap();
+        assert!(s.proven_optimal);
+        assert!(s.nodes > 1, "expected branching, got {} nodes", s.nodes);
+        assert!(s.lp_warm > 0, "no node LP resumed warm: {s:?}");
+        assert_eq!(s.lp_warm + s.lp_cold, s.nodes);
+        assert!(!s.branch_order.is_empty());
+    }
+
+    #[test]
+    fn delta_resolve_with_hints_matches_cold() {
+        // Same structure, different RHS (a demand count moved): seeding the
+        // cached root basis + branching order must reproduce the cold
+        // optimum exactly.
+        let build = |rhs: f64| {
+            let mut m = milp(3);
+            m.lp.set_objective(0, 1.0);
+            m.lp.set_objective(1, 1.8);
+            m.lp.set_objective(2, 2.9);
+            m.lp.add_constraint(vec![(0, 2.0), (1, 5.0), (2, 9.0)], Op::Ge, rhs);
+            m.lp.add_constraint(vec![(0, 1.0), (1, 1.0), (2, 1.0)], Op::Le, 50.0);
+            m
+        };
+        let first = solve_milp(&build(23.0), &MilpOptions::default()).unwrap();
+        assert!(first.proven_optimal);
+        for rhs in [21.0, 24.0, 31.0] {
+            let m2 = build(rhs);
+            let cold = solve_milp(&m2, &MilpOptions::default()).unwrap();
+            let warm_opts = MilpOptions {
+                root_basis: first.root_basis.clone(),
+                replay_order: first.branch_order.clone(),
+                ..Default::default()
+            };
+            let warm = solve_milp(&m2, &warm_opts).unwrap();
+            assert!(warm.proven_optimal && cold.proven_optimal);
+            assert!(
+                (warm.objective - cold.objective).abs() < 1e-9,
+                "rhs={rhs}: warm {} != cold {}",
+                warm.objective,
+                cold.objective
+            );
+        }
+    }
+
+    #[test]
+    fn bogus_hints_never_change_the_answer() {
+        let mut m = milp(2);
+        m.lp.set_objective(0, 1.0);
+        m.lp.set_objective(1, 1.0);
+        m.lp.add_constraint(vec![(0, 1.0), (1, 1.0)], Op::Ge, 1.5);
+        let cold = solve_milp(&m, &MilpOptions::default()).unwrap();
+        let opts = MilpOptions {
+            root_basis: Some(vec![0, 0, 7, 99]), // wrong length & duplicates
+            replay_order: vec![42, 17],          // out of range
+            ..Default::default()
+        };
+        let warm = solve_milp(&m, &opts).unwrap();
+        assert!((warm.objective - cold.objective).abs() < 1e-9);
+        assert!(warm.proven_optimal);
     }
 
     #[test]

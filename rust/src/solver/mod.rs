@@ -5,9 +5,13 @@
 //! available offline, so this module implements:
 //!
 //! * [`simplex`] — a dense two-phase primal simplex for LP relaxations,
+//!   with a certified warm re-entry path ([`simplex::resume_from_basis`]:
+//!   re-install a cached optimal basis, repair RHS drift by dual simplex),
 //! * [`bnb`] — best-first branch-and-bound over fractional integer variables
 //!   with warm-start incumbents (heuristic upper bounds, exactly the role the
-//!   paper's FFD-style warm starts play in branch-and-cut).
+//!   paper's FFD-style warm starts play in branch-and-cut), per-node warm LP
+//!   resumes from the parent basis, and delta-solve replay of a previous
+//!   structurally identical solve's root basis + branching order.
 //!
 //! Paper-scale instances (tens of stream groups × a dozen instance choices)
 //! solve in milliseconds; see `benches/bench_packing.rs` for scaling curves.
@@ -16,4 +20,4 @@ pub mod bnb;
 pub mod simplex;
 
 pub use bnb::{solve_milp, Milp, MilpOptions, MilpSolution};
-pub use simplex::{solve_lp, Constraint, Lp, LpOutcome, LpSolution, Op};
+pub use simplex::{resume_from_basis, solve_lp, Constraint, Lp, LpOutcome, LpSolution, Op, Resume};

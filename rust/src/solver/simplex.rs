@@ -1,9 +1,19 @@
-//! Dense two-phase primal simplex.
+//! Dense two-phase primal simplex, plus a warm re-entry path.
 //!
 //! Solves `min c·x  s.t.  A x (≤|≥|=) b,  x ≥ 0`. Suited to the small/medium
 //! dense LPs produced by the packing formulations (≤ a few thousand
 //! variables). Uses Dantzig pricing with a Bland's-rule fallback to guarantee
 //! termination under degeneracy.
+//!
+//! [`solve_lp`] reports the optimal basis alongside the solution (when it is
+//! free of artificial columns), and [`resume_from_basis`] re-enters the
+//! simplex from such a basis: the basis is re-installed by direct pivoting
+//! and, when only the right-hand side changed since the basis was optimal
+//! (the delta-solve case — a demand count moved between two re-plans), a
+//! dual-simplex pass restores feasibility in a handful of pivots instead of
+//! a cold two-phase solve. The warm path is *certified*: it either returns
+//! an outcome with exactly `solve_lp`'s meaning or reports `NotCertified`,
+//! in which case the caller must solve cold.
 
 use crate::error::{Error, Result};
 
@@ -57,6 +67,11 @@ impl Lp {
 pub struct LpSolution {
     pub x: Vec<f64>,
     pub objective: f64,
+    /// Optimal basis over the `[structural | slack]` column space (one
+    /// column per row, row-aligned), or `None` when an artificial variable
+    /// remained basic — such a basis cannot be re-installed by
+    /// [`resume_from_basis`].
+    pub basis: Option<Vec<usize>>,
 }
 
 /// Solve outcome.
@@ -67,10 +82,27 @@ pub enum LpOutcome {
     Unbounded,
 }
 
+/// Outcome of a warm re-entry attempt (see [`resume_from_basis`]).
+#[derive(Clone, Debug)]
+pub enum Resume {
+    /// Certified result — identical in meaning to [`solve_lp`]'s.
+    Solved(LpOutcome),
+    /// The basis could not be installed or certified; solve cold instead.
+    NotCertified,
+}
+
 const EPS: f64 = 1e-9;
+/// Pivot-magnitude floor when re-installing a cached basis.
+const PIVOT_EPS: f64 = 1e-7;
+/// Feasibility tolerance for the warm path's primal/dual checks.
+const FEAS_EPS: f64 = 1e-7;
 /// Iterations of Dantzig pricing before switching to Bland's rule.
 const BLAND_AFTER: usize = 5_000;
 const MAX_ITERS: usize = 200_000;
+/// Iteration budget for the warm-path dual repair. A genuine RHS-only delta
+/// repairs in a handful of pivots; a degenerate stall must fail fast to
+/// `NotCertified` (cold solve) instead of burning the full primal budget.
+const DUAL_MAX_ITERS: usize = 2_000;
 
 struct Tableau {
     /// (m+1) x (n+1): rows 0..m constraints, last row objective (reduced costs);
@@ -161,15 +193,75 @@ impl Tableau {
         }
         Err(Error::solver("simplex iteration limit exceeded"))
     }
+
+    /// Load `objective` into the objective row (remaining columns zero) and
+    /// price out the basic variables so reduced costs are consistent.
+    fn install_objective(&mut self, objective: &[f64]) {
+        for v in self.a[self.m].iter_mut() {
+            *v = 0.0;
+        }
+        for (j, &c) in objective.iter().enumerate() {
+            self.a[self.m][j] = c;
+        }
+        for r in 0..self.m {
+            let b = self.basis[r];
+            let factor = self.a[self.m][b];
+            if factor.abs() > EPS {
+                let row_vals: Vec<f64> = self.a[r].clone();
+                for (obj_v, row_v) in self.a[self.m].iter_mut().zip(row_vals.iter()) {
+                    *obj_v -= factor * row_v;
+                }
+            }
+        }
+    }
+
+    /// Dual simplex: starting from a dual-feasible basis (reduced costs
+    /// ≥ 0), restore primal feasibility. Returns `Ok(true)` when a
+    /// primal-feasible (hence optimal) basis is reached, `Ok(false)` when
+    /// primal infeasibility is certified (a row with negative RHS and no
+    /// negative coefficient). Deliberately budgeted at `DUAL_MAX_ITERS`:
+    /// degenerate stalls surface as an `Err`, which the warm path maps to
+    /// `NotCertified` — never wrong, just cold.
+    fn dual_optimize(&mut self) -> Result<bool> {
+        for _ in 0..DUAL_MAX_ITERS {
+            // Leaving row: most negative RHS.
+            let mut row = None;
+            let mut most = -EPS;
+            for r in 0..self.m {
+                let b = self.a[r][self.n];
+                if b < most {
+                    most = b;
+                    row = Some(r);
+                }
+            }
+            let Some(r) = row else { return Ok(true) };
+            // Entering column: dual ratio test over negative row entries
+            // (first minimum kept — deterministic).
+            let mut col = None;
+            let mut best = f64::INFINITY;
+            for j in 0..self.n {
+                let arj = self.a[r][j];
+                if arj < -EPS {
+                    let ratio = self.a[self.m][j].max(0.0) / -arj;
+                    if ratio < best {
+                        best = ratio;
+                        col = Some(j);
+                    }
+                }
+            }
+            match col {
+                Some(c) => self.pivot(r, c),
+                None => return Ok(false), // certified primal infeasible
+            }
+        }
+        Err(Error::solver("dual simplex iteration limit exceeded"))
+    }
 }
 
-/// Solve the LP; returns `Optimal`, `Infeasible`, or `Unbounded`.
-pub fn solve_lp(lp: &Lp) -> Result<LpOutcome> {
-    let n0 = lp.num_vars;
-    let m = lp.constraints.len();
-
-    // Normalize rows to rhs >= 0 and count auxiliary columns.
-    let mut rows: Vec<(Vec<(usize, f64)>, Op, f64)> = Vec::with_capacity(m);
+/// Normalize constraint rows to nonnegative RHS (shared by the cold and warm
+/// paths so their augmented column layouts agree).
+fn normalized_rows(lp: &Lp) -> Vec<(Vec<(usize, f64)>, Op, f64)> {
+    let mut rows: Vec<(Vec<(usize, f64)>, Op, f64)> = Vec::with_capacity(lp.constraints.len());
     for c in &lp.constraints {
         let mut coeffs = c.coeffs.clone();
         let mut op = c.op;
@@ -187,6 +279,16 @@ pub fn solve_lp(lp: &Lp) -> Result<LpOutcome> {
         }
         rows.push((coeffs, op, rhs));
     }
+    rows
+}
+
+/// Solve the LP; returns `Optimal`, `Infeasible`, or `Unbounded`.
+pub fn solve_lp(lp: &Lp) -> Result<LpOutcome> {
+    let n0 = lp.num_vars;
+    let m = lp.constraints.len();
+
+    // Normalize rows to rhs >= 0 and count auxiliary columns.
+    let rows = normalized_rows(lp);
 
     let num_slack = rows.iter().filter(|r| r.1 != Op::Eq).count();
     let num_art = rows.iter().filter(|r| r.1 != Op::Le).count();
@@ -269,27 +371,8 @@ pub fn solve_lp(lp: &Lp) -> Result<LpOutcome> {
         }
     }
 
-    // Phase 2: original objective.
-    for v in t.a[m].iter_mut() {
-        *v = 0.0;
-    }
-    for j in 0..n0 {
-        t.a[m][j] = lp.objective[j];
-    }
-    for &c in &art_cols {
-        t.a[m][c] = 0.0;
-    }
-    // Price out basic variables.
-    for r in 0..m {
-        let b = t.basis[r];
-        let factor = t.a[m][b];
-        if factor.abs() > EPS {
-            let row_vals: Vec<f64> = t.a[r].clone();
-            for (obj_v, row_v) in t.a[m].iter_mut().zip(row_vals.iter()) {
-                *obj_v -= factor * row_v;
-            }
-        }
-    }
+    // Phase 2: original objective (priced out against the current basis).
+    t.install_objective(&lp.objective);
 
     if !t.optimize()? {
         return Ok(LpOutcome::Unbounded);
@@ -302,7 +385,111 @@ pub fn solve_lp(lp: &Lp) -> Result<LpOutcome> {
         }
     }
     let objective = lp.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
-    Ok(LpOutcome::Optimal(LpSolution { x, objective }))
+    // Report the basis only when artificial-free (re-installable later).
+    let basis = t.basis.iter().all(|&b| b < n0 + num_slack).then(|| t.basis.clone());
+    Ok(LpOutcome::Optimal(LpSolution { x, objective, basis }))
+}
+
+/// Re-enter the simplex from a previously optimal basis of a structurally
+/// identical LP (same variables, same rows in the same order — typically
+/// only the RHS changed). Either certifies an outcome with exactly
+/// [`solve_lp`]'s meaning or returns [`Resume::NotCertified`], in which case
+/// the caller must fall back to a cold solve. Never less exact than the cold
+/// path: the installed basis is re-optimized (dual then primal simplex) to a
+/// fully certified optimum.
+pub fn resume_from_basis(lp: &Lp, basis: &[usize]) -> Result<Resume> {
+    let n0 = lp.num_vars;
+    let rows = normalized_rows(lp);
+    let m = rows.len();
+    if basis.len() != m {
+        return Ok(Resume::NotCertified);
+    }
+    let num_slack = rows.iter().filter(|r| r.1 != Op::Eq).count();
+    let n = n0 + num_slack;
+    // Reject artificial or duplicate columns outright.
+    let mut seen = vec![false; n];
+    for &c in basis {
+        if c >= n || seen[c] {
+            return Ok(Resume::NotCertified);
+        }
+        seen[c] = true;
+    }
+
+    // Artificial-free tableau: structural + slack columns only.
+    let mut a = vec![vec![0.0; n + 1]; m + 1];
+    let mut slack_idx = n0;
+    for (r, (coeffs, op, rhs)) in rows.iter().enumerate() {
+        for &(j, v) in coeffs {
+            a[r][j] += v;
+        }
+        a[r][n] = *rhs;
+        match op {
+            Op::Le => {
+                a[r][slack_idx] = 1.0;
+                slack_idx += 1;
+            }
+            Op::Ge => {
+                a[r][slack_idx] = -1.0;
+                slack_idx += 1;
+            }
+            Op::Eq => {}
+        }
+    }
+    let mut t = Tableau { a, m, n, basis: vec![0; m] };
+
+    // Install the basis by direct pivoting (partial pivoting over the rows
+    // not yet claimed). A cached basis of the same coefficient matrix is
+    // nonsingular, so this succeeds unless the matrix actually changed.
+    let mut row_free = vec![true; m];
+    for &col in basis {
+        let mut best_r = None;
+        let mut best_v = PIVOT_EPS;
+        for (r, free) in row_free.iter().enumerate() {
+            if *free {
+                let v = t.a[r][col].abs();
+                if v > best_v {
+                    best_v = v;
+                    best_r = Some(r);
+                }
+            }
+        }
+        let Some(r) = best_r else {
+            return Ok(Resume::NotCertified); // singular w.r.t. this matrix
+        };
+        t.pivot(r, col);
+        row_free[r] = false;
+    }
+
+    t.install_objective(&lp.objective);
+
+    let primal_feasible = (0..m).all(|r| t.a[r][n] >= -FEAS_EPS);
+    if !primal_feasible {
+        // Only the RHS moved: the basis stays dual feasible and a dual
+        // simplex pass repairs it. Anything else is not certifiable here.
+        if (0..n).any(|j| t.a[m][j] < -FEAS_EPS) {
+            return Ok(Resume::NotCertified);
+        }
+        match t.dual_optimize() {
+            Ok(true) => {}
+            Ok(false) => return Ok(Resume::Solved(LpOutcome::Infeasible)),
+            Err(_) => return Ok(Resume::NotCertified),
+        }
+    }
+    match t.optimize() {
+        Ok(true) => {}
+        Ok(false) => return Ok(Resume::Solved(LpOutcome::Unbounded)),
+        Err(_) => return Ok(Resume::NotCertified),
+    }
+
+    let mut x = vec![0.0; n0];
+    for r in 0..m {
+        if t.basis[r] < n0 {
+            x[t.basis[r]] = t.a[r][n];
+        }
+    }
+    let objective = lp.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+    let out_basis = Some(t.basis.clone());
+    Ok(Resume::Solved(LpOutcome::Optimal(LpSolution { x, objective, basis: out_basis })))
 }
 
 #[cfg(test)]
@@ -411,6 +598,146 @@ mod tests {
         let s = optimal(&lp);
         assert!((s.objective - 3.6).abs() < 1e-6);
         assert!((s.x[1] - 2.0).abs() < 1e-6);
+    }
+
+    fn resumed(lp: &Lp, basis: &[usize]) -> LpOutcome {
+        match resume_from_basis(lp, basis).unwrap() {
+            Resume::Solved(o) => o,
+            Resume::NotCertified => panic!("expected certified warm resume"),
+        }
+    }
+
+    #[test]
+    fn cold_solve_reports_reinstallable_basis() {
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -3.0);
+        lp.set_objective(1, -5.0);
+        lp.add_constraint(vec![(0, 1.0)], Op::Le, 4.0);
+        lp.add_constraint(vec![(1, 2.0)], Op::Le, 12.0);
+        lp.add_constraint(vec![(0, 3.0), (1, 2.0)], Op::Le, 18.0);
+        let s = optimal(&lp);
+        let basis = s.basis.expect("Le-only LP must expose its basis");
+        // Re-entering from the optimal basis certifies the same optimum.
+        match resumed(&lp, &basis) {
+            LpOutcome::Optimal(w) => {
+                assert!((w.objective - s.objective).abs() < 1e-9);
+                assert!(w.basis.is_some());
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resume_absorbs_rhs_change_via_dual_simplex() {
+        // Covering LP whose RHS moves between re-plans (the delta-solve
+        // case): the warm result must match a cold solve of the new LP.
+        let build = |rhs: f64| {
+            let mut lp = Lp::new(2);
+            lp.set_objective(0, 1.0);
+            lp.set_objective(1, 1.8);
+            lp.add_constraint(vec![(0, 2.0), (1, 5.0)], Op::Ge, rhs);
+            lp.add_constraint(vec![(0, 1.0)], Op::Le, 6.0);
+            lp
+        };
+        let s1 = optimal(&build(10.0));
+        let basis = s1.basis.expect("artificial-free optimum expected");
+        for rhs in [7.0, 10.0, 14.0, 23.0] {
+            let lp2 = build(rhs);
+            let cold = optimal(&lp2);
+            match resumed(&lp2, &basis) {
+                LpOutcome::Optimal(w) => assert!(
+                    (w.objective - cold.objective).abs() < 1e-9,
+                    "rhs={rhs}: warm {} != cold {}",
+                    w.objective,
+                    cold.objective
+                ),
+                other => panic!("rhs={rhs}: expected optimal, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn resume_certifies_infeasibility_after_rhs_change() {
+        // min x, x >= 1, x <= 3 is feasible; raising the lower bound past
+        // the upper one must surface as a *certified* Infeasible, never a
+        // bogus optimum.
+        let build = |lo: f64| {
+            let mut lp = Lp::new(1);
+            lp.set_objective(0, 1.0);
+            lp.add_constraint(vec![(0, 1.0)], Op::Le, 3.0);
+            lp.add_constraint(vec![(0, 1.0)], Op::Ge, lo);
+            lp
+        };
+        let s = optimal(&build(1.0));
+        let basis = s.basis.expect("artificial-free optimum expected");
+        match resume_from_basis(&build(5.0), &basis).unwrap() {
+            Resume::Solved(LpOutcome::Infeasible) | Resume::NotCertified => {}
+            other => panic!("expected infeasible/not-certified, got {other:?}"),
+        }
+        // A certified outcome must agree with the cold solve.
+        assert!(matches!(solve_lp(&build(5.0)).unwrap(), LpOutcome::Infeasible));
+    }
+
+    #[test]
+    fn resume_rejects_garbage_bases() {
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.add_constraint(vec![(0, 1.0), (1, 1.0)], Op::Ge, 2.0);
+        lp.add_constraint(vec![(0, 1.0)], Op::Le, 5.0);
+        // Wrong length.
+        assert!(matches!(resume_from_basis(&lp, &[0]).unwrap(), Resume::NotCertified));
+        // Duplicate column (singular).
+        assert!(matches!(resume_from_basis(&lp, &[0, 0]).unwrap(), Resume::NotCertified));
+        // Out-of-range column.
+        assert!(matches!(resume_from_basis(&lp, &[0, 99]).unwrap(), Resume::NotCertified));
+    }
+
+    #[test]
+    fn property_resume_matches_cold_on_rhs_perturbations() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(2024);
+        let mut certified = 0usize;
+        for round in 0..30 {
+            let n = 3 + rng.index(4);
+            let m = 2 + rng.index(3);
+            let mk = |rhs: &[f64]| {
+                let mut lp = Lp::new(n);
+                let mut r2 = Rng::new(9000 + round as u64);
+                for j in 0..n {
+                    lp.set_objective(j, r2.range_f64(0.5, 2.0));
+                }
+                for &b in rhs.iter().take(m) {
+                    let coeffs: Vec<(usize, f64)> =
+                        (0..n).map(|j| (j, r2.range_f64(0.1, 1.5))).collect();
+                    lp.add_constraint(coeffs, Op::Ge, b);
+                }
+                lp
+            };
+            let rhs1: Vec<f64> = (0..m).map(|_| rng.range_f64(1.0, 5.0)).collect();
+            let rhs2: Vec<f64> = rhs1.iter().map(|&b| b + rng.range_f64(-0.8, 0.8)).collect();
+            let LpOutcome::Optimal(s1) = solve_lp(&mk(&rhs1)).unwrap() else {
+                continue;
+            };
+            let Some(basis) = s1.basis else { continue };
+            let lp2 = mk(&rhs2);
+            let cold = match solve_lp(&lp2).unwrap() {
+                LpOutcome::Optimal(s) => s.objective,
+                _ => continue,
+            };
+            match resume_from_basis(&lp2, &basis).unwrap() {
+                Resume::Solved(LpOutcome::Optimal(w)) => {
+                    certified += 1;
+                    assert!(
+                        (w.objective - cold).abs() < 1e-7,
+                        "round {round}: warm {} != cold {cold}",
+                        w.objective
+                    );
+                }
+                Resume::Solved(other) => panic!("round {round}: warm {other:?}, cold optimal"),
+                Resume::NotCertified => {} // falling back cold is always legal
+            }
+        }
+        assert!(certified >= 10, "warm path certified only {certified}/30 rounds");
     }
 
     #[test]

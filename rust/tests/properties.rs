@@ -3,10 +3,11 @@
 
 use camflow::cameras::{camera_at, StreamRequest};
 use camflow::catalog::{Catalog, Dims};
+use camflow::coordinator::budget::{self, ComponentTelemetry};
 use camflow::coordinator::{Planner, PlannerConfig};
 use camflow::geo::{self, cities, GeoPoint};
 use camflow::packing::heuristic::{self, simple_problem};
-use camflow::packing::mcvbp::{solve, SolveOptions};
+use camflow::packing::mcvbp::{solve, solve_delta, DeltaHints, SolveOptions};
 use camflow::profiles::{Program, Resolution};
 use camflow::util::json;
 use camflow::util::proptest::check;
@@ -366,6 +367,165 @@ fn prop_identical_replan_is_churn_free_and_id_stable() {
             }
             if seen.iter().any(|&c| c != 1) {
                 return Err(format!("bad assignment multiplicity {seen:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Delta-solve exactness: re-entering the solver from a cached basis and
+/// branching order, after a randomized single-count demand perturbation,
+/// returns the same cost a cold exact solve of the perturbed problem finds
+/// (both proven optimal — the warm path's exactness guard falls back to the
+/// cold path internally whenever a warm step cannot be certified).
+#[test]
+fn prop_delta_solve_from_warm_basis_matches_cold_exact_solve() {
+    check(
+        0xDE17A,
+        30,
+        |rng: &mut Rng| {
+            let groups = 1 + rng.index(3);
+            let mut v = Vec::with_capacity(groups * 3 + 2);
+            for _ in 0..groups {
+                v.push((rng.range_f64(0.4, 5.0) * 100.0).round() as u64);
+                v.push((rng.range_f64(0.4, 7.0) * 100.0).round() as u64);
+                v.push(2 + rng.index(5) as u64);
+            }
+            // Which group to perturb and in which direction.
+            v.push(rng.index(groups) as u64);
+            v.push(rng.index(2) as u64);
+            v
+        },
+        |enc: &Vec<u64>| {
+            let spec: Vec<(f64, f64, usize)> = enc[..enc.len() - 2]
+                .chunks_exact(3)
+                .map(|c| (c[0] as f64 / 100.0, c[1] as f64 / 100.0, c[2] as usize))
+                .collect();
+            let which = enc[enc.len() - 2] as usize % spec.len();
+            let up = enc[enc.len() - 1] == 1;
+            let bins = [(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)];
+            let opts = SolveOptions::default();
+            let base = simple_problem(&spec, &bins);
+            let Ok((_, seed_stats)) = solve(&base, &opts) else {
+                return Ok(()); // infeasible base is legal for oversized items
+            };
+            if !seed_stats.proven_optimal {
+                return Ok(()); // nothing to replay without a proven seed
+            }
+            let hints = DeltaHints {
+                root_basis: seed_stats.root_basis.clone(),
+                branch_order: seed_stats.branch_order.clone(),
+            };
+            let mut perturbed = spec.clone();
+            perturbed[which].2 = if up {
+                perturbed[which].2 + 1
+            } else {
+                (perturbed[which].2 - 1).max(1)
+            };
+            let p = simple_problem(&perturbed, &bins);
+            let Ok((cold, cold_stats)) = solve(&p, &opts) else {
+                return Ok(());
+            };
+            let (warm, warm_stats) =
+                solve_delta(&p, &opts, None, None, Some(&hints)).map_err(|e| e.to_string())?;
+            warm.validate(&p).map_err(|e| format!("warm packing invalid: {e}"))?;
+            if !(cold_stats.proven_optimal && warm_stats.proven_optimal) {
+                return Err("tiny perturbed instance failed to prove optimality".into());
+            }
+            let (wc, cc) = (warm.total_cost(&p), cold.total_cost(&p));
+            if (wc - cc).abs() > 1e-9 {
+                return Err(format!("delta-solve cost {wc} != cold exact cost {cc}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Budget adaptation never allocates any component less than the static
+/// seed budget, grants never exceed the donated pool when it is
+/// oversubscribed, and a hard component with donors present always gets a
+/// strictly larger budget.
+#[test]
+fn prop_budget_allocation_floors_at_the_static_seed() {
+    check(
+        0xB06E7,
+        60,
+        |rng: &mut Rng| {
+            let n = 1 + rng.index(8);
+            let mut v = vec![n as u64];
+            for _ in 0..n {
+                v.push(rng.index(3) as u64); // 0 = no history, 1 = easy, 2 = hard
+                v.push(rng.index(20_000) as u64); // usage
+            }
+            v
+        },
+        |enc: &Vec<u64>| {
+            let n = enc[0] as usize;
+            let static_opts = SolveOptions::default();
+            let telemetry: Vec<Option<ComponentTelemetry>> = (0..n)
+                .map(|i| {
+                    let kind = enc[1 + i * 2];
+                    let usage = enc[2 + i * 2] as usize;
+                    match kind {
+                        0 => None,
+                        1 => Some(ComponentTelemetry {
+                            graph_nodes: usage,
+                            milp_vars: usage / 10,
+                            milp_nodes: usage / 10,
+                            exact: true,
+                            proven: true,
+                            budget_exhausted: false,
+                            graph_budget: static_opts.max_graph_nodes,
+                            var_budget: static_opts.max_milp_vars,
+                            node_budget: static_opts.milp.max_nodes,
+                        }),
+                        _ => Some(ComponentTelemetry {
+                            graph_nodes: usage,
+                            exact: false,
+                            budget_exhausted: true,
+                            graph_budget: static_opts.max_graph_nodes,
+                            var_budget: static_opts.max_milp_vars,
+                            node_budget: static_opts.milp.max_nodes,
+                            ..Default::default()
+                        }),
+                    }
+                })
+                .collect();
+            let history: Vec<Option<&ComponentTelemetry>> =
+                telemetry.iter().map(Option::as_ref).collect();
+            let out = budget::allocate(&static_opts, &history);
+            if out.len() != n {
+                return Err("allocation count mismatch".into());
+            }
+            let mut donors = false;
+            let mut hard = Vec::new();
+            for (i, t) in telemetry.iter().enumerate() {
+                match t {
+                    Some(t) if t.is_hard() => hard.push(i),
+                    Some(t) => {
+                        // Margin of 100 so even a maximally oversubscribed
+                        // pool still rounds every proportional grant ≥ 1.
+                        donors |= t.graph_nodes * 2 + 100 <= static_opts.max_graph_nodes;
+                    }
+                    None => {}
+                }
+            }
+            for (i, o) in out.iter().enumerate() {
+                if o.max_graph_nodes < static_opts.max_graph_nodes
+                    || o.max_milp_vars < static_opts.max_milp_vars
+                    || o.milp.max_nodes < static_opts.milp.max_nodes
+                {
+                    return Err(format!("component {i} allocated below the static floor"));
+                }
+            }
+            if donors {
+                for &i in &hard {
+                    if out[i].max_graph_nodes <= static_opts.max_graph_nodes {
+                        return Err(format!(
+                            "hard component {i} got no grant despite pool slack"
+                        ));
+                    }
+                }
             }
             Ok(())
         },
