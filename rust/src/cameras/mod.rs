@@ -76,8 +76,8 @@ pub struct StreamKey {
 
 /// Keys for a request slice, aligned by index. Deterministic in slice order.
 pub fn stream_keys(requests: &[StreamRequest]) -> Vec<StreamKey> {
-    let mut seen: std::collections::HashMap<(u64, &'static str, u64), u32> =
-        std::collections::HashMap::new();
+    let mut seen: crate::util::FxHashMap<(u64, &'static str, u64), u32> =
+        crate::util::FxHashMap::default();
     requests
         .iter()
         .map(|r| {

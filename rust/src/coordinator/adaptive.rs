@@ -288,7 +288,11 @@ mod tests {
         assert_eq!(report.churn_ratio(), 0.0);
         assert_eq!(report.kept, mgr.current_plan().unwrap().instances.len());
         assert!(report.pipeline.warm_started, "second re-plan must warm-start");
-        assert!(report.pipeline.elig_cache_hits > 0);
+        assert_eq!(
+            report.pipeline.front_unchanged,
+            6,
+            "identical re-plan must reuse every request's front-end state"
+        );
     }
 
     #[test]

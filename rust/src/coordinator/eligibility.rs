@@ -3,39 +3,96 @@
 //! each camera) and coalesce identical requests into [`ItemGroup`]-shaped
 //! groups.
 //!
-//! The stage's artifact is a [`GroupSet`]; per-request eligibility results
-//! are memoized in an [`EligCache`] owned by the caller's
-//! [`PlanContext`](super::pipeline::PlanContext) — a camera that has not
-//! moved and still requests the same rate never recomputes its coverage
-//! circle across re-plans.
+//! The stage's artifact is a [`GroupSet`]. Per-request state persists in a
+//! [`FrontCache`] owned by the caller's
+//! [`PlanContext`](super::pipeline::PlanContext):
+//!
+//! * the **eligibility memo** ([`EligCache`]) — a camera that has not moved
+//!   and still requests the same rate never recomputes its coverage circle,
+//! * the **group arena** ([`GroupArena`]) — every distinct [`GroupKey`] is
+//!   interned once to a dense [`GroupId`], so the hot maps downstream key
+//!   on a `u32` instead of re-hashing mask-carrying keys,
+//! * the **dirty-tracking index** — the previous request slice's
+//!   `StreamKey → (fingerprint, group)` assignment. A re-plan's cost in this
+//!   stage is proportional to workload *drift*: requests whose key and
+//!   [`Fingerprint`] both match the previous slice skip eligibility and
+//!   grouping entirely and reuse their interned group.
+//!
+//! Masks are fixed-width [`RegionMask`] bitsets (no per-request heap
+//! allocation), and float-keyed memo entries canonicalize their bit
+//! patterns first ([`canon_f64_bits`]) so `-0.0`/`0.0` coordinates cannot
+//! cause spurious misses.
 //!
 //! [`ItemGroup`]: crate::packing::ItemGroup
 
 use super::LocationPolicy;
-use crate::cameras::StreamRequest;
+use crate::cameras::{stream_keys, StreamKey, StreamRequest};
 use crate::catalog::Catalog;
 use crate::geo;
 use crate::profiles::{Program, Resolution};
-use std::collections::HashMap;
+use crate::util::fxhash::FxHashMap;
+
+pub use crate::util::bitset::RegionMask;
 
 /// Identity of a stream group: requests with equal keys are interchangeable
 /// for the packing problem (same program, rate, resolution, and
 /// eligible-region mask), so they share one demand vector.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct GroupKey {
     pub program: Program,
     /// Desired fps in milli-fps (rounded), making the key hashable.
     pub fps_milli: u64,
     pub res: Resolution,
     /// Eligible-region bitmask over `catalog.regions`.
-    pub mask: Vec<bool>,
+    pub mask: RegionMask,
     /// True if no region satisfies the RTT budget (best-effort nearest
     /// region at a capped rate).
     pub degraded: bool,
 }
 
-/// Stage-1 artifact: the request grouping plus degraded-request indices.
+/// Dense id of an interned [`GroupKey`] in a [`GroupArena`]. Stable for the
+/// lifetime of the owning context's arena.
+pub type GroupId = u32;
+
+/// Interning arena for [`GroupKey`]s: each distinct key is stored once and
+/// addressed by a dense [`GroupId`], so demand memos, warm-start seed
+/// translation, and the dirty-tracking index all key on a `u32`.
 #[derive(Clone, Debug, Default)]
+pub struct GroupArena {
+    keys: Vec<GroupKey>,
+    index: FxHashMap<GroupKey, GroupId>,
+}
+
+impl GroupArena {
+    /// Id of `key`, interning it on first sight.
+    pub fn intern(&mut self, key: GroupKey) -> GroupId {
+        match self.index.get(&key) {
+            Some(&id) => id,
+            None => {
+                let id = self.keys.len() as GroupId;
+                self.keys.push(key);
+                self.index.insert(key, id);
+                id
+            }
+        }
+    }
+
+    /// The key behind `id`. Panics on a foreign id.
+    pub fn key(&self, id: GroupId) -> &GroupKey {
+        &self.keys[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+}
+
+/// Stage-1 artifact: the request grouping plus degraded-request indices.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct GroupSet {
     /// One key per group, in first-seen request order.
     pub keys: Vec<GroupKey>,
@@ -46,17 +103,88 @@ pub struct GroupSet {
     pub degraded: Vec<usize>,
 }
 
-/// Memo of per-request eligibility: (lat bits, lon bits, fps bits) →
-/// (mask, degraded). Valid for one (catalog, location policy) pair — the
-/// owning `PlanContext` clears it when either changes.
-pub type EligCache = HashMap<(u64, u64, u64), (Vec<bool>, bool)>;
+/// Canonical bit pattern of an `f64` for cache keys. `-0.0` and `0.0` are
+/// numerically identical inputs to every geo computation, but their raw bit
+/// patterns differ — keying a memo on raw `to_bits` made signed-zero
+/// coordinates (and distinct NaN payloads) miss entries they semantically
+/// own, silently duplicating work each re-plan.
+pub fn canon_f64_bits(v: f64) -> u64 {
+    if v == 0.0 {
+        0 // +0.0 and -0.0 collapse to the +0.0 pattern
+    } else if v.is_nan() {
+        f64::NAN.to_bits()
+    } else {
+        v.to_bits()
+    }
+}
+
+/// Memo of per-request eligibility: canonical (lat bits, lon bits, fps
+/// bits) → (mask, degraded). Valid for one (catalog, location policy) pair —
+/// the owning `PlanContext` clears it when either changes.
+pub type EligCache = FxHashMap<(u64, u64, u64), (RegionMask, bool)>;
+
+/// Everything request-local the front-end depends on that is *not* already
+/// part of the stream's [`StreamKey`] (which pins camera id, program, exact
+/// fps, and duplicate occurrence): camera position and resolution. A request
+/// whose key and fingerprint both match the previous re-plan's is guaranteed
+/// to group identically, so the incremental path may reuse its group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fingerprint {
+    lat_bits: u64,
+    lon_bits: u64,
+    res: Resolution,
+}
+
+/// Fingerprint of one request (canonical float bits).
+pub fn fingerprint(req: &StreamRequest) -> Fingerprint {
+    Fingerprint {
+        lat_bits: canon_f64_bits(req.camera.location.lat),
+        lon_bits: canon_f64_bits(req.camera.location.lon),
+        res: req.camera.resolution,
+    }
+}
+
+/// Persistent front-end state owned by a
+/// [`PlanContext`](super::pipeline::PlanContext): the eligibility memo, the
+/// group-interning arena, and the previous slice's dirty-tracking index.
+#[derive(Debug, Default)]
+pub struct FrontCache {
+    pub elig: EligCache,
+    pub arena: GroupArena,
+    /// Previous request slice: stream key → (fingerprint, interned group).
+    prev: Option<FxHashMap<StreamKey, (Fingerprint, GroupId)>>,
+}
+
+impl FrontCache {
+    /// Drop the dirty-tracking index (the next run re-derives every group
+    /// assignment, still through the memo and arena).
+    pub fn clear_prev(&mut self) {
+        self.prev = None;
+    }
+
+    /// Drop the arena and the dirty-tracking index, keeping the eligibility
+    /// memo. Previously returned [`GroupId`]s become dangling — callers
+    /// must also drop anything keyed on them (demand memo, warm seed).
+    pub fn clear_groups(&mut self) {
+        self.arena = GroupArena::default();
+        self.prev = None;
+    }
+}
 
 /// Stage output: the grouping plus cache telemetry.
 #[derive(Clone, Debug, Default)]
 pub struct EligibilityOutcome {
     pub groups: GroupSet,
+    /// Interned arena id of each group, aligned with `groups.keys`.
+    pub group_ids: Vec<GroupId>,
     pub cache_hits: usize,
     pub cache_misses: usize,
+    /// Requests whose group assignment was reused from the previous slice
+    /// via the dirty-tracking index (no eligibility or key work at all).
+    pub unchanged: usize,
+    /// Requests that ran the per-request front-end (added or changed since
+    /// the previous slice — the workload drift).
+    pub changed: usize,
 }
 
 /// Compute the eligible-region bitmask for one request, plus the degraded
@@ -65,18 +193,23 @@ pub fn eligibility(
     catalog: &Catalog,
     policy: LocationPolicy,
     req: &StreamRequest,
-) -> (Vec<bool>, bool) {
+) -> (RegionMask, bool) {
     let n = catalog.regions.len();
+    assert!(
+        n <= RegionMask::CAPACITY,
+        "catalog has {n} regions; RegionMask supports at most {}",
+        RegionMask::CAPACITY
+    );
     match policy {
-        LocationPolicy::Unrestricted => (vec![true; n], false),
+        LocationPolicy::Unrestricted => (RegionMask::full(n), false),
         LocationPolicy::NearestOnly => {
             // Nearest data center of each vendor (a camera operator can
             // pick either provider's closest region).
             let nearest = nearest_regions_per_vendor(catalog, req);
-            let mut mask = vec![false; n];
+            let mut mask = RegionMask::new();
             let mut any_ok = false;
             for &r in &nearest {
-                mask[r] = true;
+                mask.set(r);
                 any_ok |= geo::reachable(
                     &req.camera.location,
                     &catalog.regions[r].location,
@@ -86,18 +219,19 @@ pub fn eligibility(
             (mask, !any_ok)
         }
         LocationPolicy::RttFiltered => {
-            let mut mask: Vec<bool> = catalog
-                .regions
-                .iter()
-                .map(|r| geo::reachable(&req.camera.location, &r.location, req.desired_fps))
-                .collect();
-            if mask.iter().any(|&m| m) {
+            let mut mask = RegionMask::new();
+            for (r, region) in catalog.regions.iter().enumerate() {
+                if geo::reachable(&req.camera.location, &region.location, req.desired_fps) {
+                    mask.set(r);
+                }
+            }
+            if mask.any() {
                 (mask, false)
             } else {
                 // Best effort: nearest regions, degraded fps.
-                mask = vec![false; n];
+                let mut mask = RegionMask::new();
                 for r in nearest_regions_per_vendor(catalog, req) {
-                    mask[r] = true;
+                    mask.set(r);
                 }
                 (mask, true)
             }
@@ -123,53 +257,99 @@ pub fn nearest_regions_per_vendor(catalog: &Catalog, req: &StreamRequest) -> Vec
     best.values().map(|&(i, _)| i).collect()
 }
 
-/// Run the stage: eligibility (memoized) + grouping.
+/// Run the stage through a persistent [`FrontCache`], incrementally when
+/// the cache carries the previous slice's index.
+///
+/// `keys[i]` must be the stable identity of request `i` (from
+/// [`stream_keys`]). Requests whose key and fingerprint both match the
+/// previous run reuse their interned group directly; everything else runs
+/// memoized eligibility + key interning. The grouping pass then assigns
+/// first-seen group order over the whole slice, so the outcome is
+/// **bit-identical to a cold full rebuild by construction** — reuse decides
+/// only how much per-request work is skipped, never what is produced.
+pub fn run_incremental(
+    catalog: &Catalog,
+    policy: LocationPolicy,
+    requests: &[StreamRequest],
+    keys: &[StreamKey],
+    front: &mut FrontCache,
+) -> EligibilityOutcome {
+    debug_assert_eq!(requests.len(), keys.len());
+    let mut out = EligibilityOutcome::default();
+    let mut next: FxHashMap<StreamKey, (Fingerprint, GroupId)> =
+        FxHashMap::with_capacity_and_hasher(requests.len(), Default::default());
+    let mut gids: Vec<GroupId> = Vec::with_capacity(requests.len());
+    for (req, &skey) in requests.iter().zip(keys) {
+        let fp = fingerprint(req);
+        let gid = match front.prev.as_ref().and_then(|p| p.get(&skey)) {
+            Some(&(prev_fp, gid)) if prev_fp == fp => {
+                out.unchanged += 1;
+                gid
+            }
+            _ => {
+                out.changed += 1;
+                let memo_key = (fp.lat_bits, fp.lon_bits, canon_f64_bits(req.desired_fps));
+                let (mask, degraded) = match front.elig.get(&memo_key) {
+                    Some(&hit) => {
+                        out.cache_hits += 1;
+                        hit
+                    }
+                    None => {
+                        out.cache_misses += 1;
+                        let fresh = eligibility(catalog, policy, req);
+                        front.elig.insert(memo_key, fresh);
+                        fresh
+                    }
+                };
+                front.arena.intern(GroupKey {
+                    program: req.program,
+                    fps_milli: (req.desired_fps * 1000.0).round() as u64,
+                    res: req.camera.resolution,
+                    mask,
+                    degraded,
+                })
+            }
+        };
+        next.insert(skey, (fp, gid));
+        gids.push(gid);
+    }
+
+    // First-seen grouping over the whole slice (identical to a cold
+    // rebuild); the arena id stands in for the full key, which is copied
+    // out only once per distinct group.
+    let mut index: FxHashMap<GroupId, usize> = FxHashMap::default();
+    for (i, &gid) in gids.iter().enumerate() {
+        if front.arena.key(gid).degraded {
+            out.groups.degraded.push(i);
+        }
+        match index.get(&gid) {
+            Some(&g) => out.groups.members[g].push(i),
+            None => {
+                index.insert(gid, out.groups.keys.len());
+                out.groups.keys.push(*front.arena.key(gid));
+                out.group_ids.push(gid);
+                out.groups.members.push(vec![i]);
+            }
+        }
+    }
+    front.prev = Some(next);
+    out
+}
+
+/// Run the stage statelessly (cold): eligibility (memoized through the
+/// caller's `cache`) + grouping, with a throwaway arena and no
+/// dirty-tracking. Exactly the incremental path with empty previous state.
 pub fn run(
     catalog: &Catalog,
     policy: LocationPolicy,
     requests: &[StreamRequest],
     cache: &mut EligCache,
 ) -> EligibilityOutcome {
-    let mut out = EligibilityOutcome::default();
-    let mut index: HashMap<GroupKey, usize> = HashMap::new();
-    for (i, req) in requests.iter().enumerate() {
-        let memo_key = (
-            req.camera.location.lat.to_bits(),
-            req.camera.location.lon.to_bits(),
-            req.desired_fps.to_bits(),
-        );
-        let (mask, degraded) = match cache.get(&memo_key) {
-            Some(hit) => {
-                out.cache_hits += 1;
-                hit.clone()
-            }
-            None => {
-                out.cache_misses += 1;
-                let fresh = eligibility(catalog, policy, req);
-                cache.insert(memo_key, fresh.clone());
-                fresh
-            }
-        };
-        if degraded {
-            out.groups.degraded.push(i);
-        }
-        let key = GroupKey {
-            program: req.program,
-            fps_milli: (req.desired_fps * 1000.0).round() as u64,
-            res: req.camera.resolution,
-            mask,
-            degraded,
-        };
-        match index.get(&key) {
-            Some(&g) => out.groups.members[g].push(i),
-            None => {
-                let g = out.groups.keys.len();
-                index.insert(key.clone(), g);
-                out.groups.keys.push(key);
-                out.groups.members.push(vec![i]);
-            }
-        }
-    }
+    let mut front = FrontCache::default();
+    std::mem::swap(&mut front.elig, cache);
+    let keys = stream_keys(requests);
+    let out = run_incremental(catalog, policy, requests, &keys, &mut front);
+    std::mem::swap(&mut front.elig, cache);
     out
 }
 
@@ -192,7 +372,7 @@ mod tests {
         let catalog = Catalog::builtin();
         let (mask, degraded) =
             eligibility(&catalog, LocationPolicy::Unrestricted, &req(0, cities::CHICAGO, 1.0));
-        assert!(mask.iter().all(|&m| m));
+        assert_eq!(mask.count(), catalog.regions.len());
         assert!(!degraded);
     }
 
@@ -204,7 +384,7 @@ mod tests {
             req(1, cities::CHICAGO, 1.0),
             req(2, cities::CHICAGO, 2.0),
         ];
-        let mut cache = EligCache::new();
+        let mut cache = EligCache::default();
         let out = run(&catalog, LocationPolicy::RttFiltered, &requests, &mut cache);
         assert_eq!(out.groups.keys.len(), 2);
         assert_eq!(out.groups.members[0], vec![0, 1]);
@@ -220,11 +400,102 @@ mod tests {
     #[test]
     fn far_camera_at_high_fps_degrades_to_nearest() {
         let catalog = Catalog::builtin();
-        let mut cache = EligCache::new();
+        let mut cache = EligCache::default();
         let requests = vec![req(0, cities::MEXICO_CITY, 60.0)];
         let out = run(&catalog, LocationPolicy::RttFiltered, &requests, &mut cache);
         assert_eq!(out.groups.degraded, vec![0]);
         assert!(out.groups.keys[0].degraded);
-        assert!(out.groups.keys[0].mask.iter().any(|&m| m), "nearest fallback");
+        assert!(out.groups.keys[0].mask.any(), "nearest fallback");
+    }
+
+    #[test]
+    fn incremental_rerun_skips_unchanged_requests_bit_identically() {
+        let catalog = Catalog::builtin();
+        let requests = vec![
+            req(0, cities::CHICAGO, 1.0),
+            req(1, cities::NEW_YORK, 2.0),
+            req(2, cities::TOKYO, 4.0),
+        ];
+        let keys = stream_keys(&requests);
+        let mut front = FrontCache::default();
+        let first =
+            run_incremental(&catalog, LocationPolicy::RttFiltered, &requests, &keys, &mut front);
+        assert_eq!((first.unchanged, first.changed), (0, 3));
+
+        // Identical slice: everything rides the dirty-tracking index.
+        let again =
+            run_incremental(&catalog, LocationPolicy::RttFiltered, &requests, &keys, &mut front);
+        assert_eq!((again.unchanged, again.changed), (3, 0));
+        assert_eq!((again.cache_hits, again.cache_misses), (0, 0));
+        assert_eq!(again.groups, first.groups);
+        assert_eq!(again.group_ids, first.group_ids);
+
+        // One camera changes rate: only that request re-runs, and the
+        // outcome matches a cold rebuild of the new slice.
+        let mut drifted = requests.clone();
+        drifted[1].desired_fps = 3.0;
+        let dkeys = stream_keys(&drifted);
+        let warm =
+            run_incremental(&catalog, LocationPolicy::RttFiltered, &drifted, &dkeys, &mut front);
+        assert_eq!((warm.unchanged, warm.changed), (2, 1));
+        let cold = run(&catalog, LocationPolicy::RttFiltered, &drifted, &mut EligCache::default());
+        assert_eq!(warm.groups, cold.groups);
+    }
+
+    #[test]
+    fn camera_move_invalidates_its_front_entry() {
+        // 20 fps keeps the coverage circles regional (a few thousand km), so
+        // a Chicago→Tokyo move genuinely changes the eligible-region mask.
+        let catalog = Catalog::builtin();
+        let mut requests = vec![req(0, cities::CHICAGO, 20.0), req(1, cities::CHICAGO, 20.0)];
+        let keys = stream_keys(&requests);
+        let mut front = FrontCache::default();
+        run_incremental(&catalog, LocationPolicy::RttFiltered, &requests, &keys, &mut front);
+        // Same stream key, new location: the fingerprint must force a
+        // re-derive (a moved camera has a different coverage circle).
+        requests[0].camera.location = cities::TOKYO;
+        let keys = stream_keys(&requests);
+        let out =
+            run_incremental(&catalog, LocationPolicy::RttFiltered, &requests, &keys, &mut front);
+        assert_eq!((out.unchanged, out.changed), (1, 1));
+        let cold = run(&catalog, LocationPolicy::RttFiltered, &requests, &mut EligCache::default());
+        assert_eq!(out.groups, cold.groups);
+        assert_eq!(out.groups.keys.len(), 2, "moved camera must leave the Chicago group");
+    }
+
+    #[test]
+    fn signed_zero_coordinates_share_one_memo_entry() {
+        // Regression: raw `to_bits` keys treated -0.0 and 0.0 as distinct,
+        // so cameras on the equator/meridian missed their own memo entries.
+        let catalog = Catalog::builtin();
+        let pos = req(0, crate::geo::GeoPoint::new(0.0, 51.0), 2.0);
+        let neg = req(1, crate::geo::GeoPoint::new(-0.0, 51.0), 2.0);
+        assert_ne!((-0.0f64).to_bits(), 0.0f64.to_bits(), "raw bits do differ");
+        assert_eq!(canon_f64_bits(0.0), canon_f64_bits(-0.0));
+        let mut cache = EligCache::default();
+        let out = run(&catalog, LocationPolicy::RttFiltered, &[pos, neg], &mut cache);
+        assert_eq!((out.cache_hits, out.cache_misses), (1, 1), "-0.0 must hit 0.0's entry");
+        assert_eq!(out.groups.keys.len(), 1, "identical coordinates group together");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn arena_interns_each_key_once() {
+        let mut arena = GroupArena::default();
+        let a = GroupKey {
+            program: Program::Zf,
+            fps_milli: 1000,
+            res: Resolution::VGA,
+            mask: RegionMask::full(3),
+            degraded: false,
+        };
+        let mut b = a;
+        b.fps_milli = 2000;
+        let ia = arena.intern(a);
+        let ib = arena.intern(b);
+        assert_ne!(ia, ib);
+        assert_eq!(arena.intern(a), ia);
+        assert_eq!(arena.len(), 2);
+        assert_eq!(*arena.key(ia), a);
     }
 }

@@ -22,7 +22,8 @@ use super::{PlannedInstance, SlotId};
 use crate::cameras::StreamKey;
 use crate::error::{Error, Result};
 use crate::packing::{Packing, PackingProblem};
-use std::collections::{HashMap, HashSet, VecDeque};
+use crate::util::fxhash::{FxHashMap, FxHashSet};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Process-wide slot id allocator: ids must stay unique across every
@@ -82,12 +83,13 @@ pub fn run(
 ) -> Result<Vec<PlannedInstance>> {
     let nb = packing.bins.len();
 
-    // Group of each request index, and stable key → request index.
-    let mut group_of: HashMap<usize, usize> = HashMap::new();
-    let mut key_to_idx: HashMap<StreamKey, usize> = HashMap::new();
+    // Group of each request index (dense: members cover indices into
+    // `keys`), and stable key → request index.
+    let mut group_of: Vec<usize> = vec![usize::MAX; keys.len()];
+    let mut key_to_idx: FxHashMap<StreamKey, usize> = FxHashMap::default();
     for (g, mem) in members.iter().enumerate() {
         for &s in mem {
-            group_of.insert(s, g);
+            group_of[s] = g;
             key_to_idx.insert(keys[s], s);
         }
     }
@@ -97,18 +99,18 @@ pub fn run(
     let mut need: Vec<Vec<usize>> = packing.bins.iter().map(|b| b.counts.clone()).collect();
     let mut kept: Vec<Vec<usize>> = vec![Vec::new(); nb];
     let mut slot_of_bin: Vec<Option<SlotId>> = vec![None; nb];
-    let mut placed: HashSet<usize> = HashSet::new();
+    let mut placed: FxHashSet<usize> = FxHashSet::default();
 
     if let Some(prev) = prev {
         // Surviving streams of each previous slot, bucketed by new group.
-        let survivors: Vec<HashMap<usize, usize>> = prev
+        let survivors: Vec<FxHashMap<usize, usize>> = prev
             .slots
             .iter()
             .map(|slot| {
-                let mut per_group: HashMap<usize, usize> = HashMap::new();
+                let mut per_group: FxHashMap<usize, usize> = FxHashMap::default();
                 for k in &slot.streams {
                     if let Some(&idx) = key_to_idx.get(k) {
-                        *per_group.entry(group_of[&idx]).or_insert(0) += 1;
+                        *per_group.entry(group_of[idx]).or_insert(0) += 1;
                     }
                 }
                 per_group
@@ -122,7 +124,7 @@ pub fn run(
         for (si, slot) in prev.slots.iter().enumerate() {
             slots_by_label.entry(slot.label.as_str()).or_default().push(si);
         }
-        let mut bins_by_label: HashMap<&str, Vec<usize>> = HashMap::new();
+        let mut bins_by_label: FxHashMap<&str, Vec<usize>> = FxHashMap::default();
         for (bi, bin) in packing.bins.iter().enumerate() {
             bins_by_label
                 .entry(problem.bins[bin.bin_type].label.as_str())
@@ -136,7 +138,7 @@ pub fn run(
             let Some(bins) = bins_by_label.get(label) else { continue };
             // Candidate pairings with *positive* kept-stream overlap, found
             // via a group→bin index so cross-group pairs are never visited.
-            let mut bins_of_group: HashMap<usize, Vec<usize>> = HashMap::new();
+            let mut bins_of_group: FxHashMap<usize, Vec<usize>> = FxHashMap::default();
             for &bi in bins {
                 for (g, &c) in packing.bins[bi].counts.iter().enumerate() {
                     if c > 0 {
@@ -197,7 +199,7 @@ pub fn run(
         for (si, bi) in pairs {
             for k in &prev.slots[si].streams {
                 if let Some(&idx) = key_to_idx.get(k) {
-                    let g = group_of[&idx];
+                    let g = group_of[idx];
                     if need[bi][g] > 0 && placed.insert(idx) {
                         need[bi][g] -= 1;
                         kept[bi].push(idx);

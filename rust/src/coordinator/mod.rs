@@ -35,6 +35,16 @@
 //! subproblems that differ from a memoized one by a bounded demand delta
 //! re-enter the solver from the cached optimal basis and branching order
 //! instead of solving cold.
+//!
+//! The front-end (Eligibility + ProblemBuild) is *drift-proportional*: the
+//! context diffs each request slice against the previous one by stable
+//! stream key + fingerprint and re-runs eligibility/grouping only for the
+//! drift. Region masks are fixed-width bitsets
+//! ([`eligibility::RegionMask`]), group keys are interned to dense
+//! [`eligibility::GroupId`]s, the hot maps hash through
+//! [`util::fxhash`](crate::util::fxhash), and per-component solves dispatch
+//! to a persistent worker pool owned by the context rather than fresh
+//! thread scopes.
 
 pub mod adaptive;
 pub mod budget;

@@ -11,24 +11,40 @@
 //! | stage        | artifact                     | cache key                          |
 //! |--------------|------------------------------|------------------------------------|
 //! | Eligibility  | region mask + degraded flag  | (camera location, fps)             |
-//! | ProblemBuild | bin list / demand vectors    | hardware filter / group key        |
+//! | Eligibility  | group assignment per stream  | (stream key, fingerprint)          |
+//! | ProblemBuild | bin list / demand vectors    | hardware filter / interned group   |
 //! | Solve        | compressed arc-flow graphs   | (capacity grid, quantized items)   |
-//! | Solve        | previous packing (incumbent) | group-key translation              |
+//! | Solve        | previous packing (incumbent) | interned-group translation         |
 //! | Expand       | previous stream→slot assignment | stable stream keys              |
+//!
+//! Since PR 4 the front-end is **drift-proportional**: the context diffs
+//! the incoming request slice against the previous one (stable
+//! [`StreamKey`](crate::cameras::StreamKey) order + per-request
+//! fingerprints) and re-runs eligibility
+//! and grouping only for added/removed/changed requests; unchanged streams
+//! reuse their interned [`GroupId`] directly, and the affected groups'
+//! demand vectors come back out of the per-group memo. The result is
+//! bit-identical to a cold full rebuild by construction (property-tested),
+//! and a catalog/config signature change still falls back to the exact
+//! full rebuild.
 //!
 //! On top of the caches the Solve stage decomposes the packing problem into
 //! independent per-region-cluster subproblems (streams whose RTT circles
-//! don't overlap can never share an instance) and solves them on parallel
-//! `std::thread` scopes. Decomposition is exact: no bin type is shared
-//! between components, so the union of component optima is a global
-//! optimum. Plan costs are identical to a monolithic solve whenever the
-//! monolithic exact phase would have completed within its budgets (all the
-//! paper-scale scenarios); in the budget-bound regime each component gets
-//! the full solver budget, so the decomposed solve can only *improve* on
-//! the monolithic heuristic fallback, never regress it.
+//! don't overlap can never share an instance) and solves them on a
+//! persistent [`WorkerPool`] owned by the context — workers park between
+//! re-plans instead of paying thread spawn/teardown each time.
+//! Decomposition is exact: no bin type is shared between components, so the
+//! union of component optima is a global optimum. Plan costs are identical
+//! to a monolithic solve whenever the monolithic exact phase would have
+//! completed within its budgets (all the paper-scale scenarios); in the
+//! budget-bound regime each component gets the full solver budget, so the
+//! decomposed solve can only *improve* on the monolithic heuristic
+//! fallback, never regress it.
 
 use super::budget::{self, ComponentTelemetry};
-use super::eligibility::{self, EligCache, GroupKey, GroupSet};
+use super::eligibility::{
+    self, canon_f64_bits, FrontCache, GroupId, GroupKey, GroupSet, RegionMask,
+};
 use super::expand::{self, PrevAssignment};
 use super::{LocationPolicy, Plan, PlannerConfig, SolverKind};
 use crate::cameras::{stream_keys, StreamRequest};
@@ -39,15 +55,25 @@ use crate::metrics::SolverMetrics;
 use crate::packing::arcflow::GraphCache;
 use crate::packing::mcvbp::{self, DeltaHints, SolveMethod, SolveOptions, SolveStats};
 use crate::packing::{heuristic, BinType, ItemGroup, Packing, PackedBin, PackingProblem};
+use crate::util::fxhash::FxHashMap;
+use crate::util::pool::WorkerPool;
 use std::collections::hash_map::DefaultHasher;
-use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Telemetry of one pipeline run (how much prior work was reused).
 #[derive(Clone, Debug, Default)]
 pub struct PipelineStats {
     pub elig_cache_hits: usize,
     pub elig_cache_misses: usize,
+    /// Requests whose group assignment was reused wholesale from the
+    /// previous slice via the dirty-tracking index (no eligibility, key
+    /// hashing, or grouping recompute at all).
+    pub front_unchanged: usize,
+    /// Requests that ran the per-request front-end this re-plan (added or
+    /// changed since the previous slice — the workload drift).
+    pub front_changed: usize,
     pub demand_cache_hits: usize,
     pub demand_cache_misses: usize,
     pub graph_cache_hits: usize,
@@ -64,7 +90,8 @@ pub struct PipelineStats {
     pub warm_started: bool,
     /// Independent per-region subproblems the Solve stage decomposed into.
     pub components: usize,
-    /// Subproblems solved on parallel threads (0 = solved inline).
+    /// Subproblems dispatched to the persistent worker pool (0 = solved
+    /// inline), bounded by the pool's worker count.
     pub solve_threads: usize,
     /// Components whose adopted packing came from the exact phase vs the
     /// heuristic fallback (memo hits count under their cached method).
@@ -80,12 +107,18 @@ pub struct PipelineStats {
     pub budget_donated_nodes: usize,
     /// Over-budget graph builds skipped via the failure watermark.
     pub graph_fail_fastpaths: usize,
+    /// Wall-clock of each pipeline stage this run, in milliseconds.
+    pub elig_ms: f64,
+    pub build_ms: f64,
+    pub solve_ms: f64,
+    pub expand_ms: f64,
 }
 
 impl PipelineStats {
     /// Fraction of cacheable lookups served from the context, in [0, 1].
     pub fn reuse_ratio(&self) -> f64 {
-        let hits = self.elig_cache_hits
+        let hits = self.front_unchanged
+            + self.elig_cache_hits
             + self.demand_cache_hits
             + self.graph_cache_hits
             + self.solution_cache_hits;
@@ -100,15 +133,26 @@ impl PipelineStats {
             hits as f64 / total as f64
         }
     }
+
+    /// Wall-clock of the front-end (Eligibility + ProblemBuild) this run,
+    /// in milliseconds — the part PR 4 makes drift-proportional.
+    pub fn front_end_ms(&self) -> f64 {
+        self.elig_ms + self.build_ms
+    }
 }
 
-/// Demand vectors are memoized per group identity; degraded groups also key
-/// on the representative camera's location (their delivered fps depends on
-/// the camera→region RTT) and every group keys on the representative's
-/// un-rounded fps (the group key only stores milli-fps).
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+fn ms_since(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+/// Demand vectors are memoized per interned group identity; degraded groups
+/// also key on the representative camera's location (their delivered fps
+/// depends on the camera→region RTT) and every group keys on the
+/// representative's un-rounded fps (the group key only stores milli-fps).
+/// Float bits are canonicalized so signed zeros cannot split entries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 struct DemandKey {
-    key: GroupKey,
+    gid: GroupId,
     rep_fps_bits: u64,
     rep_loc: Option<(u64, u64)>,
 }
@@ -116,7 +160,9 @@ struct DemandKey {
 /// The previous run's solution, kept for warm-starting the next one.
 #[derive(Clone, Debug)]
 struct LastPlan {
-    keys: Vec<GroupKey>,
+    /// Interned group id per packed group, aligned with the packing's
+    /// count vectors.
+    ids: Vec<GroupId>,
     packing: Packing,
     num_bins: usize,
 }
@@ -189,6 +235,10 @@ const TELEMETRY_CAPACITY: usize = 4_096;
 /// without bound otherwise. Entries are cheap to recompute after a clear.
 const ELIG_CACHE_CAPACITY: usize = 65_536;
 const DEMAND_CACHE_CAPACITY: usize = 16_384;
+/// Soft cap on interned group keys. Clearing the arena invalidates every
+/// stored [`GroupId`], so the demand memo, warm-start seed, and
+/// dirty-tracking index are dropped with it.
+const GROUP_ARENA_CAPACITY: usize = 65_536;
 
 /// Persistent cross-re-plan state for one (catalog, planner-config) pair.
 ///
@@ -208,25 +258,31 @@ const DEMAND_CACHE_CAPACITY: usize = 16_384;
 #[derive(Default)]
 pub struct PlanContext {
     /// Fingerprint of the (catalog, config) pair the caches are valid for;
-    /// a mismatch clears everything.
+    /// a mismatch clears everything (the exact full-rebuild fallback).
     signature: Option<u64>,
     /// Bin types (offerings × hardware filter) — workload-independent.
     bins: Option<Vec<BinType>>,
-    elig: EligCache,
-    demand: HashMap<DemandKey, Vec<Option<Dims>>>,
-    graphs: GraphCache,
+    /// Front-end state: eligibility memo, group-interning arena, and the
+    /// previous slice's dirty-tracking index.
+    front: FrontCache,
+    demand: FxHashMap<DemandKey, Vec<Option<Dims>>>,
+    graphs: Arc<GraphCache>,
     /// Memoized per-subproblem solutions (see [`SolveKey`]).
-    solutions: HashMap<SolveKey, CachedSolve>,
+    solutions: FxHashMap<SolveKey, CachedSolve>,
     /// Structure-hash → key of the most recent *exact* solve with that
     /// structure: the near-match index behind the delta-solve path.
-    delta_index: HashMap<u64, SolveKey>,
+    delta_index: FxHashMap<u64, SolveKey>,
     /// Per-component solve telemetry feeding the adaptive budget allocator
     /// ([`budget::allocate`]); keyed by the component's bin identity.
-    telemetry: HashMap<u64, ComponentTelemetry>,
+    telemetry: FxHashMap<u64, ComponentTelemetry>,
     last: Option<LastPlan>,
     /// The previous plan's stream→slot assignment, matched against by the
     /// sticky Expand stage.
     last_assign: Option<PrevAssignment>,
+    /// Persistent solve workers: spawned lazily on the first parallel
+    /// Solve, parked between re-plans, and carried across signature clears
+    /// (threads are workload-independent).
+    pool: Option<Arc<WorkerPool>>,
     /// Telemetry of the most recent run through this context.
     pub stats: PipelineStats,
     /// Cumulative cross-re-plan solver counters (never reset by re-plans).
@@ -238,11 +294,13 @@ impl PlanContext {
         PlanContext::default()
     }
 
-    /// Clear cached artifacts if the catalog or config changed.
+    /// Clear cached artifacts if the catalog or config changed. The worker
+    /// pool survives — threads are not workload state.
     fn ensure_for(&mut self, catalog: &Catalog, config: &PlannerConfig) {
         let sig = signature(catalog, config);
         if self.signature != Some(sig) {
-            *self = PlanContext { signature: Some(sig), ..PlanContext::default() };
+            let pool = self.pool.take();
+            *self = PlanContext { signature: Some(sig), pool, ..PlanContext::default() };
         }
     }
 
@@ -339,6 +397,36 @@ fn signature(catalog: &Catalog, config: &PlannerConfig) -> u64 {
     h.finish()
 }
 
+/// Enforce the per-context capacity caps before a run.
+fn enforce_caps(ctx: &mut PlanContext) {
+    if ctx.front.elig.len() > ELIG_CACHE_CAPACITY {
+        ctx.front.elig.clear();
+    }
+    if ctx.front.arena.len() > GROUP_ARENA_CAPACITY {
+        // Interned ids are about to dangle: drop everything keyed on them.
+        ctx.front.clear_groups();
+        ctx.demand.clear();
+        ctx.last = None;
+    }
+    if ctx.demand.len() > DEMAND_CACHE_CAPACITY {
+        ctx.demand.clear();
+    }
+    if ctx.telemetry.len() > TELEMETRY_CAPACITY {
+        ctx.telemetry.clear();
+    }
+}
+
+fn check_catalog_width(catalog: &Catalog) -> Result<()> {
+    if catalog.regions.len() > RegionMask::CAPACITY {
+        return Err(Error::config(format!(
+            "catalog has {} regions; the planner supports at most {}",
+            catalog.regions.len(),
+            RegionMask::CAPACITY
+        )));
+    }
+    Ok(())
+}
+
 /// Run the full pipeline through a persistent context.
 pub fn plan_with_context(
     catalog: &Catalog,
@@ -349,45 +437,50 @@ pub fn plan_with_context(
     if requests.is_empty() {
         return Err(Error::config("no stream requests"));
     }
+    check_catalog_width(catalog)?;
     ctx.ensure_for(catalog, config);
-    if ctx.elig.len() > ELIG_CACHE_CAPACITY {
-        ctx.elig.clear();
-    }
-    if ctx.demand.len() > DEMAND_CACHE_CAPACITY {
-        ctx.demand.clear();
-    }
-    if ctx.telemetry.len() > TELEMETRY_CAPACITY {
-        ctx.telemetry.clear();
-    }
+    enforce_caps(ctx);
     let mut stats = PipelineStats::default();
 
-    // Stage 1: Eligibility.
-    let elig = eligibility::run(catalog, config.location, requests, &mut ctx.elig);
+    // Stage 1: Eligibility — incremental against the previous slice.
+    let t_elig = Instant::now();
+    let skeys = stream_keys(requests);
+    let elig =
+        eligibility::run_incremental(catalog, config.location, requests, &skeys, &mut ctx.front);
+    stats.elig_ms = ms_since(t_elig);
     stats.elig_cache_hits = elig.cache_hits;
     stats.elig_cache_misses = elig.cache_misses;
+    stats.front_unchanged = elig.unchanged;
+    stats.front_changed = elig.changed;
     let groups = elig.groups;
+    let gids = elig.group_ids;
 
     // Stage 2: ProblemBuild.
-    let problem = build_stage(catalog, config, requests, &groups, ctx, &mut stats)?;
+    let t_build = Instant::now();
+    let problem = build_stage(catalog, config, requests, &groups, &gids, ctx, &mut stats)?;
+    stats.build_ms = ms_since(t_build);
 
     // Warm-start seed: translate the previous packing onto this problem.
-    let seeds = translate_seed(ctx.last.as_ref(), &groups, &problem);
+    let seeds = translate_seed(ctx.last.as_ref(), &gids, &problem);
     stats.warm_started = seeds.is_some();
 
     // Stage 3: Solve (decomposed per region cluster, adaptive budgets,
-    // delta-aware memo, parallel).
+    // delta-aware memo, persistent worker pool).
+    let t_solve = Instant::now();
     let (packing, method) = solve_stage(&problem, config, ctx, seeds.as_deref(), &mut stats)?;
     packing.validate(&problem)?;
+    stats.solve_ms = ms_since(t_solve);
 
     // Stage 4: Expand — sticky against the previous assignment.
-    let skeys = stream_keys(requests);
+    let t_expand = Instant::now();
     let instances =
         expand::run(&problem, &packing, &groups.members, &skeys, ctx.last_assign.as_ref())?;
+    stats.expand_ms = ms_since(t_expand);
 
     let cost = packing.total_cost(&problem);
     let (non_gpu, gpu) = packing.count_by_gpu(&problem);
     ctx.last = Some(LastPlan {
-        keys: groups.keys.clone(),
+        ids: gids,
         packing: packing.clone(),
         num_bins: problem.bins.len(),
     });
@@ -407,6 +500,33 @@ pub fn plan_with_context(
     })
 }
 
+/// Run only the front-end (Eligibility + ProblemBuild) through a persistent
+/// context — incremental when the context carries previous state, a full
+/// rebuild otherwise. Returns the stage artifacts; the property suite uses
+/// this to check the incremental front-end is bit-identical to a cold
+/// rebuild under churn.
+pub fn front_end_with_context(
+    catalog: &Catalog,
+    config: &PlannerConfig,
+    requests: &[StreamRequest],
+    ctx: &mut PlanContext,
+) -> Result<(GroupSet, PackingProblem)> {
+    if requests.is_empty() {
+        return Err(Error::config("no stream requests"));
+    }
+    check_catalog_width(catalog)?;
+    ctx.ensure_for(catalog, config);
+    enforce_caps(ctx);
+    let mut stats = PipelineStats::default();
+    let skeys = stream_keys(requests);
+    let elig =
+        eligibility::run_incremental(catalog, config.location, requests, &skeys, &mut ctx.front);
+    let groups = elig.groups;
+    let problem =
+        build_stage(catalog, config, requests, &groups, &elig.group_ids, ctx, &mut stats)?;
+    Ok((groups, problem))
+}
+
 /// Compatibility wrapper over Eligibility + ProblemBuild with a throwaway
 /// context: the seed API's (problem, group members, degraded) triple.
 pub fn build_problem(
@@ -414,25 +534,20 @@ pub fn build_problem(
     config: &PlannerConfig,
     requests: &[StreamRequest],
 ) -> Result<(PackingProblem, Vec<Vec<usize>>, Vec<usize>)> {
-    if requests.is_empty() {
-        return Err(Error::config("no stream requests"));
-    }
     let mut ctx = PlanContext::new();
-    ctx.ensure_for(catalog, config);
-    let mut stats = PipelineStats::default();
-    let elig = eligibility::run(catalog, config.location, requests, &mut ctx.elig);
-    let groups = elig.groups;
-    let problem = build_stage(catalog, config, requests, &groups, &mut ctx, &mut stats)?;
+    let (groups, problem) = front_end_with_context(catalog, config, requests, &mut ctx)?;
     Ok((problem, groups.members, groups.degraded))
 }
 
 /// Stage 2 — **ProblemBuild**: bins from the hardware filter (cached),
-/// demand vectors per group (cached).
+/// demand vectors per interned group (cached — an unchanged group's vector
+/// is patched straight into the new problem without recompute).
 fn build_stage(
     catalog: &Catalog,
     config: &PlannerConfig,
     requests: &[StreamRequest],
     groups: &GroupSet,
+    gids: &[GroupId],
     ctx: &mut PlanContext,
     stats: &mut PipelineStats,
 ) -> Result<PackingProblem> {
@@ -442,13 +557,16 @@ fn build_stage(
     let bins = ctx.bins.as_ref().unwrap().clone();
 
     let mut items = Vec::with_capacity(groups.keys.len());
-    for (key, mem) in groups.keys.iter().zip(&groups.members) {
+    for ((key, mem), &gid) in groups.keys.iter().zip(&groups.members).zip(gids) {
         let rep = &requests[mem[0]];
         let dkey = DemandKey {
-            key: key.clone(),
-            rep_fps_bits: rep.desired_fps.to_bits(),
+            gid,
+            rep_fps_bits: canon_f64_bits(rep.desired_fps),
             rep_loc: key.degraded.then(|| {
-                (rep.camera.location.lat.to_bits(), rep.camera.location.lon.to_bits())
+                (
+                    canon_f64_bits(rep.camera.location.lat),
+                    canon_f64_bits(rep.camera.location.lon),
+                )
             }),
         };
         let demand_per_bin = match ctx.demand.get(&dkey) {
@@ -518,7 +636,7 @@ fn compute_demand(
     let profile = key.program.profile();
     bins.iter()
         .map(|b| {
-            if !key.mask[b.region_idx] {
+            if !key.mask.get(b.region_idx) {
                 return None;
             }
             // Delivered fps: capped by the region's RTT when the stream is
@@ -546,28 +664,29 @@ fn compute_demand(
 }
 
 /// Translate the previous packing onto the new problem's group indices.
-/// Groups are matched by [`GroupKey`] equality; counts for vanished groups
-/// are dropped (their streams left), counts above the new demand are clamped
-/// later by `warm_start_fill`.
+/// Groups are matched by interned [`GroupId`] equality (same arena, so id
+/// equality is key equality); counts for vanished groups are dropped (their
+/// streams left), counts above the new demand are clamped later by
+/// `warm_start_fill`.
 fn translate_seed(
     last: Option<&LastPlan>,
-    groups: &GroupSet,
+    gids: &[GroupId],
     problem: &PackingProblem,
 ) -> Option<Vec<PackedBin>> {
     let last = last?;
     if last.num_bins != problem.bins.len() {
         return None;
     }
-    let new_index: HashMap<&GroupKey, usize> =
-        groups.keys.iter().enumerate().map(|(i, k)| (k, i)).collect();
+    let new_index: FxHashMap<GroupId, usize> =
+        gids.iter().enumerate().map(|(i, &g)| (g, i)).collect();
     let map: Vec<Option<usize>> =
-        last.keys.iter().map(|k| new_index.get(k).copied()).collect();
+        last.ids.iter().map(|g| new_index.get(g).copied()).collect();
     let mut seeds = Vec::with_capacity(last.packing.bins.len());
     for bin in &last.packing.bins {
-        if bin.counts.len() != last.keys.len() {
+        if bin.counts.len() != last.ids.len() {
             return None;
         }
-        let mut counts = vec![0usize; groups.keys.len()];
+        let mut counts = vec![0usize; gids.len()];
         let mut any = false;
         for (old_g, &c) in bin.counts.iter().enumerate() {
             if c == 0 {
@@ -612,23 +731,45 @@ fn uf_union(parent: &mut [usize], a: usize, b: usize) {
 /// Partition the problem into independent components: bin types are
 /// connected iff some group can be placed in both. Groups with no
 /// compatible bin become bin-less singleton components so the solver
-/// reports the same infeasibility a monolithic solve would.
+/// reports the same infeasibility a monolithic solve would. The item↔bin
+/// incidence walks fixed-width bitsets when the problem fits them
+/// ([`PackingProblem::placeable_masks`]).
 fn decompose(problem: &PackingProblem) -> Vec<Component> {
     let nb = problem.bins.len();
     let mut parent: Vec<usize> = (0..nb).collect();
-    for item in problem.items.iter().filter(|it| it.count > 0) {
+    let masks = problem.placeable_masks();
+    let first_placeable = |g: usize| -> Option<usize> {
+        match &masks {
+            Some(m) => m[g].ones().next(),
+            None => (0..nb).find(|&t| problem.items[g].demand_per_bin[t].is_some()),
+        }
+    };
+    for (g, item) in problem.items.iter().enumerate() {
+        if item.count == 0 {
+            continue;
+        }
         let mut first: Option<usize> = None;
-        for t in 0..nb {
-            if item.demand_per_bin[t].is_some() {
-                match first {
-                    None => first = Some(t),
-                    Some(f) => uf_union(&mut parent, f, t),
+        let mut link = |t: usize, parent: &mut Vec<usize>| match first {
+            None => first = Some(t),
+            Some(f) => uf_union(parent, f, t),
+        };
+        match &masks {
+            Some(m) => {
+                for t in m[g].ones() {
+                    link(t, &mut parent);
+                }
+            }
+            None => {
+                for t in 0..nb {
+                    if item.demand_per_bin[t].is_some() {
+                        link(t, &mut parent);
+                    }
                 }
             }
         }
     }
 
-    let mut comp_of_root: HashMap<usize, usize> = HashMap::new();
+    let mut comp_of_root: FxHashMap<usize, usize> = FxHashMap::default();
     let mut comps: Vec<Component> = Vec::new();
     for t in 0..nb {
         let root = uf_find(&mut parent, t);
@@ -642,7 +783,7 @@ fn decompose(problem: &PackingProblem) -> Vec<Component> {
         if item.count == 0 {
             continue;
         }
-        match (0..nb).find(|&t| item.demand_per_bin[t].is_some()) {
+        match first_placeable(g) {
             Some(t) => {
                 let root = uf_find(&mut parent, t);
                 let c = comp_of_root[&root];
@@ -681,7 +822,7 @@ fn subproblem(problem: &PackingProblem, comp: &Component) -> PackingProblem {
 
 /// Restriction of global warm-start seeds to one component.
 fn sub_seeds(seeds: &[PackedBin], comp: &Component) -> Vec<PackedBin> {
-    let local_bin: HashMap<usize, usize> =
+    let local_bin: FxHashMap<usize, usize> =
         comp.bins.iter().enumerate().map(|(lt, &t)| (t, lt)).collect();
     seeds
         .iter()
@@ -794,8 +935,8 @@ fn structure_hash(key: &SolveKey) -> u64 {
 /// the subproblem's stream count) — beyond that a cold solve's own warm
 /// start is as good).
 fn delta_hints(
-    solutions: &HashMap<SolveKey, CachedSolve>,
-    delta_index: &HashMap<u64, SolveKey>,
+    solutions: &FxHashMap<SolveKey, CachedSolve>,
+    delta_index: &FxHashMap<u64, SolveKey>,
     key: &SolveKey,
 ) -> Option<DeltaHints> {
     let prev_key = delta_index.get(&structure_hash(key))?;
@@ -813,11 +954,31 @@ fn delta_hints(
     (delta > 0 && delta <= (total / 20).max(2)).then(|| prev.hints.clone())
 }
 
+/// Post-solve bookkeeping of one subproblem that is not answered by the
+/// memo: its memo key and the budgets it ran under (just the three telemetry
+/// numbers — the full options live in the job).
+struct Pending {
+    ci: usize,
+    key: SolveKey,
+    graph_budget: usize,
+    var_budget: usize,
+    node_budget: usize,
+}
+
+/// Owned inputs of one dispatched solve (everything a pool worker needs;
+/// the graph cache and config travel behind `Arc`s).
+struct SolveJob {
+    sub: PackingProblem,
+    sub_seed: Option<Vec<PackedBin>>,
+    opts: SolveOptions,
+    hints: Option<DeltaHints>,
+}
+
 /// Stage 3 — **Solve**: decompose into independent per-region-cluster
 /// subproblems, allocate each component's solver budgets from its history
 /// plus the global pool, return memoized solutions for bit-identical
 /// subproblems, warm-start near-identical ones from the delta memo, and
-/// solve the rest in parallel.
+/// solve the rest on the context's persistent worker pool.
 fn solve_stage(
     problem: &PackingProblem,
     config: &PlannerConfig,
@@ -842,15 +1003,9 @@ fn solve_stage(
     // delta hints, and the translated warm seeds. Memo hits skip the solver
     // entirely — on a small-perturbation re-plan almost every region
     // cluster is bit-identical to the previous hour's.
-    struct Pending {
-        sub: PackingProblem,
-        sub_seed: Option<Vec<PackedBin>>,
-        key: SolveKey,
-        opts: SolveOptions,
-        hints: Option<DeltaHints>,
-    }
     let mut resolved: Vec<Option<SubSolve>> = Vec::with_capacity(comps.len());
-    let mut pending: Vec<(usize, Pending)> = Vec::new();
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut jobs: Vec<SolveJob> = Vec::new();
     for (ci, comp) in comps.iter().enumerate() {
         let (sub, sub_seed) = if comps.len() == 1 {
             (problem.clone(), seeds.map(<[PackedBin]>::to_vec))
@@ -882,7 +1037,14 @@ fn solve_stage(
                     stats.delta_solve_hits += 1;
                 }
                 resolved.push(None);
-                pending.push((ci, Pending { sub, sub_seed, key, opts, hints }));
+                pending.push(Pending {
+                    ci,
+                    key,
+                    graph_budget: opts.max_graph_nodes,
+                    var_budget: opts.max_milp_vars,
+                    node_budget: opts.milp.max_nodes,
+                });
+                jobs.push(SolveJob { sub, sub_seed, opts, hints });
             }
         }
     }
@@ -891,35 +1053,60 @@ fn solve_stage(
     // run — memo hits consume nothing, so a stable re-plan reports zero.
     stats.budget_donated_nodes = pending
         .iter()
-        .map(|(_, p)| p.opts.max_graph_nodes - config.solve_opts.max_graph_nodes)
+        .map(|p| p.graph_budget - config.solve_opts.max_graph_nodes)
         .sum();
 
-    let cache = &ctx.graphs;
-    let results: Vec<Result<SubSolve>> = if config.parallel_regions && pending.len() > 1 {
-        stats.solve_threads = pending.len();
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = pending
-                .iter()
-                .map(|(_, p)| {
-                    scope.spawn(move || {
-                        let seed = p.sub_seed.as_deref();
-                        solve_one(&p.sub, config, cache, seed, &p.opts, p.hints.as_ref())
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join()
-                        .unwrap_or_else(|_| Err(Error::solver("region solve thread panicked")))
-                })
-                .collect()
-        })
+    let results: Vec<Result<SubSolve>> = if config.parallel_regions && jobs.len() > 1 {
+        // Dispatch to the persistent pool: jobs own their subproblem, the
+        // graph cache and config ride behind Arcs, and results come back
+        // indexed over a channel (a panicked job surfaces as a dropped
+        // sender, mapped to a solver error below).
+        let pool = ctx
+            .pool
+            .get_or_insert_with(|| Arc::new(WorkerPool::new(WorkerPool::default_threads())))
+            .clone();
+        stats.solve_threads = jobs.len().min(pool.threads());
+        let cache = Arc::clone(&ctx.graphs);
+        let cfg = Arc::new(config.clone());
+        let n = jobs.len();
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, Result<SubSolve>)>();
+        for (j, job) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            let cache = Arc::clone(&cache);
+            let cfg = Arc::clone(&cfg);
+            pool.execute(move || {
+                let r = solve_one(
+                    &job.sub,
+                    &cfg,
+                    &cache,
+                    job.sub_seed.as_deref(),
+                    &job.opts,
+                    job.hints.as_ref(),
+                );
+                let _ = tx.send((j, r));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<Result<SubSolve>>> =
+            std::iter::repeat_with(|| None).take(n).collect();
+        while let Ok((j, r)) = rx.recv() {
+            slots[j] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.unwrap_or_else(|| Err(Error::solver("region solve worker panicked"))))
+            .collect()
     } else {
-        pending
-            .iter()
-            .map(|(_, p)| {
-                solve_one(&p.sub, config, cache, p.sub_seed.as_deref(), &p.opts, p.hints.as_ref())
+        jobs.iter()
+            .map(|job| {
+                solve_one(
+                    &job.sub,
+                    config,
+                    &ctx.graphs,
+                    job.sub_seed.as_deref(),
+                    &job.opts,
+                    job.hints.as_ref(),
+                )
             })
             .collect()
     };
@@ -928,12 +1115,12 @@ fn solve_stage(
         ctx.solutions.clear();
         ctx.delta_index.clear();
     }
-    for ((ci, p), result) in pending.into_iter().zip(results) {
+    for (p, result) in pending.into_iter().zip(results) {
         let sub = result?;
         if let Some(st) = &sub.stats {
             // Record telemetry for the next re-plan's budget allocation.
             ctx.telemetry.insert(
-                comp_ids[ci],
+                comp_ids[p.ci],
                 ComponentTelemetry {
                     graph_nodes: st.graph_nodes_before,
                     milp_vars: st.milp_vars,
@@ -941,9 +1128,9 @@ fn solve_stage(
                     exact: st.method == SolveMethod::ExactArcFlow,
                     proven: st.proven_optimal,
                     budget_exhausted: st.budget_exhausted,
-                    graph_budget: p.opts.max_graph_nodes,
-                    var_budget: p.opts.max_milp_vars,
-                    node_budget: p.opts.milp.max_nodes,
+                    graph_budget: p.graph_budget,
+                    var_budget: p.var_budget,
+                    node_budget: p.node_budget,
                 },
             );
         }
@@ -969,7 +1156,7 @@ fn solve_stage(
                 counts,
             },
         );
-        resolved[ci] = Some(sub);
+        resolved[p.ci] = Some(sub);
     }
 
     // Aggregate per-component telemetry into the run stats + cumulative
@@ -1094,9 +1281,16 @@ mod tests {
         let mut ctx = PlanContext::new();
         let cold = plan_with_context(&catalog, &cfg, &requests, &mut ctx).unwrap();
         assert!(!ctx.stats.warm_started);
+        assert_eq!(ctx.stats.front_unchanged, 0, "first plan has no previous slice");
         let warm = plan_with_context(&catalog, &cfg, &requests, &mut ctx).unwrap();
         assert!(ctx.stats.warm_started);
-        assert!(ctx.stats.elig_cache_hits > 0);
+        assert_eq!(
+            ctx.stats.front_unchanged,
+            requests.len(),
+            "identical re-plan must ride the dirty-tracking index: {:?}",
+            ctx.stats
+        );
+        assert_eq!(ctx.stats.front_changed, 0);
         assert!(ctx.stats.demand_cache_hits > 0);
         assert!(
             (warm.cost_per_hour - cold.cost_per_hour).abs() < 1e-9,
@@ -1130,7 +1324,48 @@ mod tests {
         let p = plan_with_context(&catalog, &PlannerConfig::nl(), &requests, &mut ctx).unwrap();
         assert!(!ctx.stats.warm_started, "stale warm start must be dropped");
         assert_eq!(ctx.stats.elig_cache_hits, 0);
+        assert_eq!(ctx.stats.front_unchanged, 0, "dirty index must not survive a config change");
         p.packing.validate(&p.problem).unwrap();
+    }
+
+    #[test]
+    fn solve_worker_pool_persists_across_replans() {
+        let catalog = crate::catalog::Catalog::builtin();
+        let cfg = PlannerConfig::gcl();
+        let requests = worldwide_requests();
+        let mut ctx = PlanContext::new();
+        plan_with_context(&catalog, &cfg, &requests, &mut ctx).unwrap();
+        assert!(ctx.pool.is_some(), "parallel multi-component solve must spawn the pool");
+        let first = ctx.pool.as_ref().map(Arc::as_ptr).unwrap();
+        // A drifted re-plan re-solves on the same workers, and a config
+        // change keeps them too (threads are not workload state).
+        let mut drifted = requests.clone();
+        drifted.push(StreamRequest::new(
+            camera_at(7, "us2", cities::HOUSTON, Resolution::VGA, 30.0),
+            Program::Zf,
+            15.0,
+        ));
+        plan_with_context(&catalog, &cfg, &drifted, &mut ctx).unwrap();
+        assert_eq!(ctx.pool.as_ref().map(Arc::as_ptr), Some(first));
+        plan_with_context(&catalog, &PlannerConfig::armvac(), &drifted, &mut ctx).unwrap();
+        assert_eq!(
+            ctx.pool.as_ref().map(Arc::as_ptr),
+            Some(first),
+            "signature clear must keep the worker pool"
+        );
+    }
+
+    #[test]
+    fn front_end_artifacts_match_plan_inputs() {
+        let catalog = crate::catalog::Catalog::builtin();
+        let cfg = PlannerConfig::gcl();
+        let requests = worldwide_requests();
+        let (groups, problem) =
+            front_end_with_context(&catalog, &cfg, &requests, &mut PlanContext::new()).unwrap();
+        let plan = plan_with_context(&catalog, &cfg, &requests, &mut PlanContext::new()).unwrap();
+        assert_eq!(problem, plan.problem, "front-end artifacts must equal the planned problem");
+        let members: usize = groups.members.iter().map(Vec::len).sum();
+        assert_eq!(members, requests.len());
     }
 
     #[test]
@@ -1158,6 +1393,11 @@ mod tests {
         let warm = plan_with_context(&catalog, &cfg, &mk(7), &mut ctx).unwrap();
         assert_eq!(ctx.stats.delta_solve_hits, 1, "{:?}", ctx.stats);
         assert_eq!(ctx.solver.delta_reuses.get(), 1);
+        assert_eq!(
+            (ctx.stats.front_unchanged, ctx.stats.front_changed),
+            (6, 1),
+            "only the added camera runs the front-end"
+        );
         let cold = plan_with_context(&catalog, &cfg, &mk(7), &mut PlanContext::new()).unwrap();
         assert!(
             (warm.cost_per_hour - cold.cost_per_hour).abs() < 1e-9,

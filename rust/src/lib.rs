@@ -27,10 +27,20 @@
 //! artifacts across re-plans so the *dynamic* manager
 //! ([`coordinator::adaptive`]) works incrementally:
 //!
-//! * per-camera eligibility masks are memoized by (location, fps) in the
-//!   context's eligibility cache ([`coordinator::eligibility`]),
-//! * per-group demand vectors are memoized by group identity in the
-//!   context's demand cache,
+//! * per-camera eligibility masks (fixed-width
+//!   [`RegionMask`](coordinator::eligibility::RegionMask) bitsets) are
+//!   memoized by (location, fps) in the context's eligibility cache
+//!   ([`coordinator::eligibility`]),
+//! * per-request group assignments are **dirty-tracked**: the context diffs
+//!   each request slice against the previous one by stable
+//!   [`StreamKey`](cameras::StreamKey) + fingerprint, so a warm re-plan's
+//!   front-end cost is proportional to workload *drift*, not fleet size —
+//!   unchanged streams reuse their interned
+//!   [`GroupId`](coordinator::eligibility::GroupId) without touching
+//!   eligibility or grouping at all (bit-identical to a cold rebuild,
+//!   property-tested),
+//! * per-group demand vectors are memoized by interned group identity in
+//!   the context's demand cache,
 //! * compressed arc-flow graphs are memoized by (capacity grid, quantized
 //!   item multiset) in a shared [`packing::arcflow::GraphCache`],
 //! * the previous packing is translated onto the new problem and seeds both
@@ -44,11 +54,16 @@
 //!
 //! The Solve stage additionally decomposes the packing problem into
 //! independent per-region-cluster subproblems (streams whose RTT circles
-//! cannot overlap never share an instance) and solves them on parallel
-//! `std::thread` scopes — the decomposition is exact, so plan costs are
-//! unchanged wherever the monolithic exact solve completed within budget
-//! (and only ever improve where it had to fall back to a heuristic),
-//! while wall-clock drops on worldwide workloads.
+//! cannot overlap never share an instance) and dispatches them to a
+//! persistent worker pool owned by the context
+//! ([`util::pool::WorkerPool`]) — workers park between re-plans instead of
+//! paying thread spawn/teardown each time. The decomposition is exact, so
+//! plan costs are unchanged wherever the monolithic exact solve completed
+//! within budget (and only ever improve where it had to fall back to a
+//! heuristic), while wall-clock drops on worldwide workloads. The hot maps
+//! throughout (eligibility memo, solution memo, graph cache, Expand's
+//! stream→slot maps) hash through the dependency-free
+//! [`util::fxhash::FxHasher`] instead of SipHash.
 //!
 //! ## Adaptive budgets & delta-solve reuse (10k+ streams)
 //!
@@ -79,7 +94,14 @@
 //!   `reuse_ratio`, `delta_solve_hits` (near-match memo reuses — asserted
 //!   > 0), `components`, `cold_exact_complete` (every component exact and
 //!   proven), `warm_equals_cold` (cost parity, asserted whenever both
-//!   sides completed their exact phase).
+//!   sides completed their exact phase). Front-end fields (PR 4):
+//!   `cold_front_ms` / `warm_front_ms` (Eligibility + ProblemBuild
+//!   wall-clock) and `front_speedup` — the warm ≈1%-drift re-plan's
+//!   front-end is asserted ≥ 5× faster than the cold full rebuild's —
+//!   plus `front_unchanged` / `front_changed` (the dirty-tracking split,
+//!   asserted to equal the constructed drift exactly) and per-stage
+//!   breakdowns `cold_stage_ms` / `warm_stage_ms` with `eligibility`,
+//!   `build`, `solve`, and `expand` entries.
 //! * `exact_recovery` — the calibrated fallback-recovery scenario:
 //!   `probe_need_max`/`probe_need_second` (measured per-component arc-flow
 //!   needs), `static_budget` (pinned between them), `static_fallbacks`

@@ -14,9 +14,10 @@
 //! the graph".
 
 use crate::error::{Error, Result};
-use std::collections::HashMap;
+use crate::util::fxhash::{FxHashMap, FxHashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+// `Arc` is this module's graph-arc struct; the shared pointer is aliased.
+use std::sync::{Arc as SharedArc, Mutex};
 
 /// A quantized item type: integer sizes per dimension + demanded count.
 #[derive(Clone, Debug)]
@@ -73,7 +74,7 @@ pub fn build(cap: &[i64], items: &[QuantItem], max_nodes: usize) -> Result<ArcFl
 
     // State: (usage vector, last item group, count of that group used).
     type State = (Vec<i64>, usize, usize);
-    let mut index: HashMap<State, usize> = HashMap::new();
+    let mut index: FxHashMap<State, usize> = FxHashMap::default();
     let mut states: Vec<State> = Vec::new();
     let mut arcs: Vec<Arc> = Vec::new();
 
@@ -167,7 +168,8 @@ pub fn compress(g: &ArcFlow) -> (ArcFlow, CompressionStats) {
 
     loop {
         // Signature: sorted (item, class-of-target) pairs.
-        let mut sig_index: HashMap<(usize, Vec<(Option<usize>, usize)>), usize> = HashMap::new();
+        let mut sig_index: FxHashMap<(usize, Vec<(Option<usize>, usize)>), usize> =
+            FxHashMap::default();
         let mut new_class = vec![0usize; g.num_nodes];
         let mut next = 0usize;
         for u in 0..g.num_nodes {
@@ -192,8 +194,7 @@ pub fn compress(g: &ArcFlow) -> (ArcFlow, CompressionStats) {
     // Rebuild: representative node per class.
     let num_classes = class.iter().max().unwrap() + 1;
     let mut new_arcs: Vec<Arc> = Vec::new();
-    let mut seen: std::collections::HashSet<(usize, usize, Option<usize>)> =
-        std::collections::HashSet::new();
+    let mut seen: FxHashSet<(usize, usize, Option<usize>)> = FxHashSet::default();
     for a in &g.arcs {
         let key = (class[a.from], class[a.to], a.item);
         if seen.insert(key) {
@@ -238,9 +239,9 @@ struct GraphKey {
 /// with a larger budget still rebuilds, and a success clears the watermark.
 #[derive(Default)]
 pub struct GraphCache {
-    map: Mutex<HashMap<GraphKey, Arc<(ArcFlow, CompressionStats)>>>,
+    map: Mutex<FxHashMap<GraphKey, SharedArc<(ArcFlow, CompressionStats)>>>,
     /// Key → highest `max_nodes` that is known to be insufficient.
-    failed: Mutex<HashMap<GraphKey, usize>>,
+    failed: Mutex<FxHashMap<GraphKey, usize>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
     fail_fast: AtomicUsize,
@@ -273,7 +274,7 @@ impl GraphCache {
         cap: &[i64],
         items: &[QuantItem],
         max_nodes: usize,
-    ) -> Result<(Arc<(ArcFlow, CompressionStats)>, bool)> {
+    ) -> Result<(SharedArc<(ArcFlow, CompressionStats)>, bool)> {
         let key = GraphKey {
             cap: cap.to_vec(),
             items: items.iter().map(|it| (it.sizes.clone(), it.count)).collect(),
@@ -295,7 +296,7 @@ impl GraphCache {
         match build(cap, items, max_nodes) {
             Ok(g) => {
                 let (cg, stats) = compress(&g);
-                let entry = Arc::new((cg, stats));
+                let entry = SharedArc::new((cg, stats));
                 self.failed.lock().unwrap().remove(&key);
                 let mut map = self.map.lock().unwrap();
                 if map.len() >= GRAPH_CACHE_CAPACITY {
@@ -453,13 +454,13 @@ mod tests {
         let (g1, hit1) = cache.get_or_build(&cap, &items, 10_000).unwrap();
         let (g2, hit2) = cache.get_or_build(&cap, &items, 10_000).unwrap();
         assert!(!hit1 && hit2);
-        assert!(Arc::ptr_eq(&g1, &g2), "second lookup must hit the cache");
+        assert!(SharedArc::ptr_eq(&g1, &g2), "second lookup must hit the cache");
         assert_eq!(cache.stats(), (1, 1));
         // A different capacity is a different key.
         let other_cap = vec![8, 3];
         let (g3, hit3) = cache.get_or_build(&other_cap, &items, 10_000).unwrap();
         assert!(!hit3);
-        assert!(!Arc::ptr_eq(&g1, &g3));
+        assert!(!SharedArc::ptr_eq(&g1, &g3));
         assert_eq!(cache.stats(), (1, 2));
         // Cached graph enumerates the same packings as a fresh build.
         let fresh = build(&cap, &items, 10_000).unwrap();

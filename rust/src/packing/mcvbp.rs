@@ -264,10 +264,19 @@ pub fn solve_delta(
     // solve would — only faster.
     let mut graphs = Vec::with_capacity(qp.bins.len());
     let mut remaining_nodes = opts.max_graph_nodes;
+    // Item↔bin compatibility as fixed-width bitsets (falls back to the
+    // direct scan on problems too wide for the mask).
+    let cmasks = qp.compatible_masks();
     for t in 0..qp.bins.len() {
         // Map: local item index -> global group index.
         let groups: Vec<usize> = (0..qp.items.len())
-            .filter(|&g| qp.items[g].count > 0 && qp.compatible(g, t))
+            .filter(|&g| {
+                qp.items[g].count > 0
+                    && match &cmasks {
+                        Some(m) => m[g].get(t),
+                        None => qp.compatible(g, t),
+                    }
+            })
             .collect();
         if groups.is_empty() {
             graphs.push(None);

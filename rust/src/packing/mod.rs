@@ -20,6 +20,8 @@ pub mod mcvbp;
 use crate::catalog::Dims;
 use crate::error::{Error, Result};
 
+pub use crate::util::bitset::BinMask;
+
 /// The paper's 90% rule: "when any dimension is more than 90% utilized, the
 /// performance starts to degrade. Thus, the method keeps the utilization of
 /// each dimension below 90%."
@@ -27,7 +29,7 @@ pub const DEFAULT_HEADROOM: f64 = 0.90;
 
 /// A group of identical streams (same program, fps, resolution, and
 /// location-eligibility), with a per-bin-type demand vector.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ItemGroup {
     pub label: String,
     pub count: usize,
@@ -38,7 +40,7 @@ pub struct ItemGroup {
 }
 
 /// A bin type: one instance type at one location, at an hourly cost.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BinType {
     pub label: String,
     pub capacity: Dims,
@@ -50,7 +52,7 @@ pub struct BinType {
 }
 
 /// The packing instance.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PackingProblem {
     pub items: Vec<ItemGroup>,
     pub bins: Vec<BinType>,
@@ -79,6 +81,52 @@ impl PackingProblem {
             Some(d) => d.fits_in(&self.effective_capacity(t)),
             None => false,
         }
+    }
+
+    /// Per item group, the bin types it may ever be packed into
+    /// (`demand_per_bin[t].is_some()`) as a fixed-width [`BinMask`] —
+    /// `None` when the problem has more bin types than the mask can index
+    /// (callers fall back to scanning the demand options).
+    pub fn placeable_masks(&self) -> Option<Vec<BinMask>> {
+        if self.bins.len() > BinMask::CAPACITY {
+            return None;
+        }
+        Some(
+            self.items
+                .iter()
+                .map(|it| {
+                    let mut m = BinMask::new();
+                    for (t, d) in it.demand_per_bin.iter().enumerate() {
+                        if d.is_some() {
+                            m.set(t);
+                        }
+                    }
+                    m
+                })
+                .collect(),
+        )
+    }
+
+    /// Like [`PackingProblem::placeable_masks`], additionally requiring the
+    /// demand to fit the headroom-scaled capacity
+    /// ([`PackingProblem::compatible`]).
+    pub fn compatible_masks(&self) -> Option<Vec<BinMask>> {
+        if self.bins.len() > BinMask::CAPACITY {
+            return None;
+        }
+        Some(
+            (0..self.items.len())
+                .map(|g| {
+                    let mut m = BinMask::new();
+                    for t in 0..self.bins.len() {
+                        if self.compatible(g, t) {
+                            m.set(t);
+                        }
+                    }
+                    m
+                })
+                .collect(),
+        )
     }
 
     /// Quick infeasibility check: every item group must fit *somewhere*.
@@ -256,6 +304,32 @@ mod tests {
         packing.validate(&p).unwrap();
         assert_eq!(packing.total_cost(&p), 1.0);
         assert!(packing.peak_utilization(&p) <= DEFAULT_HEADROOM + 1e-9);
+    }
+
+    #[test]
+    fn masks_mirror_the_scan_predicates() {
+        let mut both = item("a", 2, 3.0, 1.0);
+        both.demand_per_bin = vec![Some(Dims::new(3.0, 1.0, 0.0, 0.0)); 2];
+        let mut second_only = item("g", 1, 1.0, 1.0);
+        second_only.demand_per_bin = vec![None, Some(Dims::new(1.0, 1.0, 0.0, 0.0))];
+        let mut oversized = item("big", 1, 100.0, 1.0);
+        oversized.demand_per_bin = vec![Some(Dims::new(100.0, 1.0, 0.0, 0.0)), None];
+        let p = PackingProblem::new(
+            vec![both, second_only, oversized],
+            vec![cpu_bin(1.0), cpu_bin(2.0)],
+        );
+        let placeable = p.placeable_masks().unwrap();
+        let compatible = p.compatible_masks().unwrap();
+        for g in 0..p.items.len() {
+            for t in 0..p.bins.len() {
+                assert_eq!(placeable[g].get(t), p.items[g].demand_per_bin[t].is_some());
+                assert_eq!(compatible[g].get(t), p.compatible(g, t));
+            }
+        }
+        // The oversized item is placeable (a demand exists) but never
+        // compatible (it cannot fit the headroom capacity).
+        assert!(placeable[2].any());
+        assert!(!compatible[2].any());
     }
 
     #[test]

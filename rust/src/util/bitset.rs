@@ -1,0 +1,175 @@
+//! Fixed-width bitsets for the planner's hot paths.
+//!
+//! The front-end used to key its group-coalescing maps on a heap-allocated
+//! `Vec<bool>` region mask: every request paid an allocation plus a
+//! byte-by-byte hash/compare per map operation, which dominated re-plan time
+//! at the 10k-stream metro scale. A [`BitSet`] is `Copy`, pointer-free, and
+//! hashes as a handful of words, so `GroupKey`s become plain values and the
+//! interning arena ([`GroupArena`](crate::coordinator::eligibility::GroupArena))
+//! can hand out dense `u32` ids for them.
+//!
+//! Two widths are used in the crate:
+//!
+//! * [`RegionMask`] (256 bits) — eligible-region masks over
+//!   `catalog.regions`,
+//! * [`BinMask`] (512 bits) — item↔bin-type compatibility in the packing
+//!   layer (offerings = instance types × regions).
+
+/// A fixed-width bitset over `64 * W` bits. `Copy`, cheaply hashable, and
+/// totally ordered (lexicographic on words, ascending bit index within).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BitSet<const W: usize> {
+    words: [u64; W],
+}
+
+/// Eligible-region bitmask: supports catalogs of up to 256 regions (the
+/// built-in catalog has 15; the planner rejects larger catalogs up front).
+pub type RegionMask = BitSet<4>;
+
+/// Bin-type bitmask for the packing layer: up to 512 offerings. Problems
+/// with more bin types fall back to the scan paths (see
+/// [`PackingProblem::placeable_masks`](crate::packing::PackingProblem::placeable_masks)).
+pub type BinMask = BitSet<8>;
+
+impl<const W: usize> Default for BitSet<W> {
+    fn default() -> Self {
+        BitSet { words: [0; W] }
+    }
+}
+
+impl<const W: usize> BitSet<W> {
+    /// Number of addressable bits.
+    pub const CAPACITY: usize = 64 * W;
+
+    /// The empty set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The set `{0, 1, .., n-1}`. Panics if `n > CAPACITY`.
+    pub fn full(n: usize) -> Self {
+        assert!(n <= Self::CAPACITY, "BitSet::full({n}) exceeds {} bits", Self::CAPACITY);
+        let mut words = [0u64; W];
+        let (full_words, rem) = (n / 64, n % 64);
+        for w in words.iter_mut().take(full_words) {
+            *w = u64::MAX;
+        }
+        if rem > 0 {
+            words[full_words] = (1u64 << rem) - 1;
+        }
+        BitSet { words }
+    }
+
+    /// Set bit `i`. Panics if `i >= CAPACITY`.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        assert!(i < Self::CAPACITY, "BitSet bit {i} exceeds {} bits", Self::CAPACITY);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Test bit `i` (out-of-range bits read as unset).
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        i < Self::CAPACITY && (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// True iff any bit is set.
+    pub fn any(&self) -> bool {
+        self.words.iter().any(|&w| w != 0)
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate set bits in ascending order.
+    pub fn ones(&self) -> Ones<W> {
+        Ones { words: self.words, word: 0 }
+    }
+}
+
+/// Iterator over the set bits of a [`BitSet`], ascending.
+pub struct Ones<const W: usize> {
+    words: [u64; W],
+    word: usize,
+}
+
+impl<const W: usize> Iterator for Ones<W> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.word < W {
+            let w = self.words[self.word];
+            if w != 0 {
+                let bit = w.trailing_zeros() as usize;
+                self.words[self.word] = w & (w - 1);
+                return Some(self.word * 64 + bit);
+            }
+            self.word += 1;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip_across_word_boundaries() {
+        let mut s = RegionMask::new();
+        for i in [0, 1, 63, 64, 65, 127, 128, 255] {
+            assert!(!s.get(i));
+            s.set(i);
+            assert!(s.get(i));
+        }
+        assert_eq!(s.count(), 8);
+        assert_eq!(s.ones().collect::<Vec<_>>(), vec![0, 1, 63, 64, 65, 127, 128, 255]);
+    }
+
+    #[test]
+    fn full_matches_per_bit_sets() {
+        for n in [0, 1, 15, 63, 64, 65, 200, 256] {
+            let full = RegionMask::full(n);
+            let mut manual = RegionMask::new();
+            for i in 0..n {
+                manual.set(i);
+            }
+            assert_eq!(full, manual, "full({n})");
+            assert_eq!(full.count(), n);
+            assert_eq!(full.any(), n > 0);
+        }
+    }
+
+    #[test]
+    fn out_of_range_get_is_false() {
+        let s = RegionMask::full(256);
+        assert!(!s.get(256));
+        assert!(!s.get(usize::MAX));
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_set_panics() {
+        let mut s = RegionMask::new();
+        s.set(256);
+    }
+
+    #[test]
+    fn equal_sets_hash_equal() {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let mut a = BinMask::new();
+        let mut b = BinMask::new();
+        a.set(300);
+        b.set(300);
+        let h = |s: &BinMask| {
+            let mut hh = DefaultHasher::new();
+            s.hash(&mut hh);
+            hh.finish()
+        };
+        assert_eq!(a, b);
+        assert_eq!(h(&a), h(&b));
+    }
+}

@@ -1,0 +1,137 @@
+//! A dependency-free Fx-style hasher for the planner's hot maps.
+//!
+//! `std`'s default `HashMap` hasher is SipHash-1-3: DoS-resistant, but ~10×
+//! slower than a multiply-xor hash on the short fixed-size keys the planner
+//! uses everywhere (bit-packed floats, `u32` group ids, stream keys). None
+//! of those maps are fed attacker-controlled keys — they hold the planner's
+//! own derived state — so the hot paths trade the DoS resistance away:
+//! the eligibility memo, the solution memo, the arc-flow graph cache, and
+//! Expand's stream→slot maps all key through [`FxHashMap`].
+//!
+//! The algorithm is the word-at-a-time multiply-rotate-xor scheme used by
+//! the Firefox/rustc "FxHash" family: fold each 8-byte word `w` into the
+//! state as `h = (rotl(h, 5) ^ w) * K` with an odd 64-bit constant `K`.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// The odd multiplier: pi's fractional bits, as used by the Fx family.
+const K: u64 = 0x517c_c1b7_2722_0a95;
+
+/// Word-at-a-time multiply-rotate-xor hasher. Not DoS-resistant — use only
+/// for maps whose keys the process itself derives.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(K);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            // Pad the tail into one word; its length rides in the top byte
+            // (rem is at most 7 bytes, so byte 7 is always free) so "ab"
+            // and "ab\0" fold differently.
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            buf[7] = rem.len() as u8;
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, i: u16) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add(i as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`].
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// A `HashMap` keyed through [`FxHasher`]. Construct with
+/// `FxHashMap::default()` (`new()` is not available on non-default
+/// hashers).
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+/// A `HashSet` hashed through [`FxHasher`].
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hash::{BuildHasher, Hash};
+
+    fn hash_of<T: Hash>(v: &T) -> u64 {
+        FxBuildHasher::default().hash_one(v)
+    }
+
+    #[test]
+    fn equal_keys_hash_equal_and_unequal_usually_differ() {
+        assert_eq!(hash_of(&(1u64, 2u64)), hash_of(&(1u64, 2u64)));
+        assert_ne!(hash_of(&(1u64, 2u64)), hash_of(&(2u64, 1u64)));
+        assert_eq!(hash_of(&"stream-key"), hash_of(&"stream-key"));
+        assert_ne!(hash_of(&"ab"), hash_of(&"ab\0"), "tail length must fold in");
+    }
+
+    #[test]
+    fn map_and_set_behave_like_std() {
+        let mut m: FxHashMap<(u64, u64, u64), usize> = FxHashMap::default();
+        for i in 0..1000u64 {
+            m.insert((i, i.wrapping_mul(31), i ^ 0xF0F0), i as usize);
+        }
+        assert_eq!(m.len(), 1000);
+        for i in 0..1000u64 {
+            assert_eq!(m.get(&(i, i.wrapping_mul(31), i ^ 0xF0F0)), Some(&(i as usize)));
+        }
+        let mut s: FxHashSet<String> = FxHashSet::default();
+        assert!(s.insert("a".into()));
+        assert!(!s.insert("a".into()));
+    }
+
+    #[test]
+    fn spread_is_not_degenerate() {
+        // 4k sequential keys should not collapse into a handful of hashes.
+        let mut seen: FxHashSet<u64> = FxHashSet::default();
+        for i in 0..4096u64 {
+            seen.insert(hash_of(&i));
+        }
+        assert!(seen.len() > 4000, "only {} distinct hashes", seen.len());
+    }
+}

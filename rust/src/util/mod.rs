@@ -5,11 +5,15 @@
 //! `proptest`, `criterion`) are re-implemented here at the scale this project
 //! needs. See DESIGN.md "Substitutions".
 
+pub mod bitset;
+pub mod fxhash;
 pub mod json;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
 
+pub use fxhash::{FxHashMap, FxHashSet};
 pub use rng::Rng;
 pub use stats::Summary;
 

@@ -1,0 +1,162 @@
+//! A small persistent worker pool for the Solve stage.
+//!
+//! The staged planner used to spawn a fresh `std::thread::scope` for every
+//! re-plan's parallel per-region solves — at adaptive cadence that is
+//! thread spawn/teardown on the hot path, paid even when only two small
+//! components actually need solving. A [`WorkerPool`] keeps its threads
+//! parked on a condvar between re-plans, so a warm re-plan's solve cost is
+//! the solves themselves.
+//!
+//! Jobs are `'static` closures (the Solve stage moves each subproblem into
+//! its job and shares the graph cache behind an `Arc`); results travel back
+//! over the caller's channel. A panicking job is contained to that job —
+//! the worker survives and keeps serving the queue.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    /// (queue, shutdown flag) under one lock so workers can't miss a wake.
+    queue: Mutex<(VecDeque<Job>, bool)>,
+    cv: Condvar,
+}
+
+/// Fixed-size pool of parked worker threads. Dropping the pool drains the
+/// queue and joins every worker.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` workers (at least one).
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        });
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("camflow-solve-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let mut q = shared.queue.lock().unwrap();
+                            loop {
+                                if let Some(job) = q.0.pop_front() {
+                                    break job;
+                                }
+                                if q.1 {
+                                    return;
+                                }
+                                q = shared.cv.wait(q).unwrap();
+                            }
+                        };
+                        // Contain panics to the job: the caller observes the
+                        // loss through its result channel, the worker lives.
+                        let _ = catch_unwind(AssertUnwindSafe(job));
+                    })
+                    .expect("spawn solve worker")
+            })
+            .collect();
+        WorkerPool { shared, workers }
+    }
+
+    /// Default worker count: the machine's parallelism, bounded so portfolio
+    /// planners holding several pools stay reasonable.
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job; some parked worker picks it up.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.shared.queue.lock().unwrap().0.push_back(Box::new(job));
+        self.shared.cv.notify_one();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().1 = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+
+    #[test]
+    fn runs_every_job_across_workers() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for i in 0..64usize {
+            let hits = Arc::clone(&hits);
+            let tx = tx.clone();
+            pool.execute(move || {
+                hits.fetch_add(1, Ordering::Relaxed);
+                tx.send(i).unwrap();
+            });
+        }
+        drop(tx);
+        let mut got: Vec<usize> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..64).collect::<Vec<_>>());
+        assert_eq!(hits.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn a_panicking_job_does_not_kill_the_worker() {
+        let pool = WorkerPool::new(1);
+        let (tx, rx) = mpsc::channel();
+        {
+            let tx = tx.clone();
+            pool.execute(move || {
+                let _keep = tx; // dropped unsent on panic
+                panic!("job panic");
+            });
+        }
+        pool.execute(move || tx.send(42u32).unwrap());
+        // The single worker must survive the first job to run the second.
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(2);
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..8 {
+            let tx = tx.clone();
+            pool.execute(move || tx.send(()).unwrap());
+        }
+        drop(tx);
+        assert_eq!(rx.iter().count(), 8);
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn zero_threads_is_clamped_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let (tx, rx) = mpsc::channel();
+        pool.execute(move || tx.send(1u8).unwrap());
+        assert_eq!(rx.recv().unwrap(), 1);
+    }
+}

@@ -532,6 +532,123 @@ fn prop_budget_allocation_floors_at_the_static_seed() {
     );
 }
 
+/// The dirty-tracking front-end is bit-identical to a cold full rebuild.
+/// Random churn (add / remove / move / fps-change) over a seeded fleet,
+/// re-planned through one warm context: after every churn step the warm
+/// context's `GroupSet` and `PackingProblem` must equal a fresh context's
+/// full rebuild exactly, and the plan cost must match the cold plan
+/// wherever both exact phases completed (the warm seed can only improve a
+/// budget-bound fallback, never an exact solve).
+#[test]
+fn prop_incremental_front_end_matches_cold_rebuild() {
+    use camflow::cameras::CameraDb;
+    use camflow::coordinator::pipeline::{
+        front_end_with_context, plan_with_context, PlanContext,
+    };
+    let catalog = Catalog::builtin();
+    let cfg = PlannerConfig::gcl();
+    let exact_complete = |p: &camflow::coordinator::Plan| {
+        p.pipeline.components_fallback == 0
+            && p.pipeline.components_proven == p.pipeline.components
+    };
+    check(
+        0xD21F7,
+        8,
+        |rng: &mut Rng| vec![rng.next_u64()],
+        |seed: &Vec<u64>| {
+            let mut rng = Rng::new(seed[0]);
+            let db = CameraDb::synthetic(24, seed[0] ^ 0xA5);
+            let mut requests = db.workload(Program::Zf, 4.0);
+            let mut warm = PlanContext::new();
+            front_end_with_context(&catalog, &cfg, &requests, &mut warm)
+                .map_err(|e| e.to_string())?;
+            for step in 0..4 {
+                // 1-3 churn ops per step.
+                for op in 0..1 + rng.index(3) {
+                    match rng.index(4) {
+                        0 => {
+                            let (city, at) = *rng.choose(camflow::geo::cities::ALL);
+                            requests.push(StreamRequest::new(
+                                camera_at(
+                                    1000 + step as u64 * 10 + op as u64,
+                                    city,
+                                    at,
+                                    Resolution::VGA,
+                                    30.0,
+                                ),
+                                Program::Zf,
+                                rng.range_f64(0.5, 8.0),
+                            ));
+                        }
+                        1 => {
+                            if requests.len() > 1 {
+                                let i = rng.index(requests.len());
+                                requests.remove(i);
+                            }
+                        }
+                        2 => {
+                            let i = rng.index(requests.len());
+                            let loc = requests[i].camera.location;
+                            requests[i].camera.location = GeoPoint::new(
+                                (loc.lat + rng.normal() * 2.0).clamp(-60.0, 65.0),
+                                loc.lon + rng.normal() * 2.0,
+                            );
+                        }
+                        _ => {
+                            let i = rng.index(requests.len());
+                            requests[i].desired_fps = rng.range_f64(0.5, 8.0);
+                        }
+                    }
+                }
+                let (wg, wp) = front_end_with_context(&catalog, &cfg, &requests, &mut warm)
+                    .map_err(|e| e.to_string())?;
+                let (cg, cp) =
+                    front_end_with_context(&catalog, &cfg, &requests, &mut PlanContext::new())
+                        .map_err(|e| e.to_string())?;
+                if wg != cg {
+                    return Err(format!(
+                        "step {step}: incremental GroupSet diverged: {wg:?} vs {cg:?}"
+                    ));
+                }
+                if wp != cp {
+                    return Err(format!("step {step}: incremental problem diverged"));
+                }
+                let warm_plan = plan_with_context(&catalog, &cfg, &requests, &mut warm);
+                let cold_plan =
+                    plan_with_context(&catalog, &cfg, &requests, &mut PlanContext::new());
+                match (warm_plan, cold_plan) {
+                    (Ok(w), Ok(c)) => {
+                        if w.cost_per_hour > c.cost_per_hour + 1e-9 {
+                            return Err(format!(
+                                "step {step}: warm plan {} worse than cold {}",
+                                w.cost_per_hour, c.cost_per_hour
+                            ));
+                        }
+                        if exact_complete(&w)
+                            && exact_complete(&c)
+                            && (w.cost_per_hour - c.cost_per_hour).abs() > 1e-9
+                        {
+                            return Err(format!(
+                                "step {step}: warm exact cost {} != cold exact cost {}",
+                                w.cost_per_hour, c.cost_per_hour
+                            ));
+                        }
+                    }
+                    // An infeasible churned workload must fail both ways.
+                    (Err(_), Err(_)) => {}
+                    (Ok(_), Err(e)) => {
+                        return Err(format!("step {step}: cold failed where warm planned: {e}"));
+                    }
+                    (Err(e), Ok(_)) => {
+                        return Err(format!("step {step}: warm failed where cold planned: {e}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Geo invariants: symmetry, triangle-ish behavior of RTT, circle monotone.
 #[test]
 fn prop_geo_invariants() {
