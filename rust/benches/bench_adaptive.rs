@@ -7,7 +7,14 @@
 //!     perturbed workload (`streams_moved` / churn ratio — every move is a
 //!     reconnection and warm-state loss on the serving layer),
 //!   * 24-hour rush-hour simulation: adaptive vs static-peak provisioning
-//!     (the paper's ">50% cost reduction for real workloads" claim).
+//!     (the paper's ">50% cost reduction for real workloads" claim),
+//!   * the unified portfolio runtime (scenarios in
+//!     `camflow::bench::portfolio`): a forced winner flip on an unchanged
+//!     workload must stay churn-free (`flip_churn_ratio` ≤ the sticky
+//!     same-winner ratio + tolerance, zero provision/terminate), all three
+//!     candidates must share one solve-worker pool (`pool_shared_jobs`),
+//!     and the cross-candidate budget pool must fund the walled cluster
+//!     (`budget_pooled_donated` > 0).
 //!
 //! Emits `BENCH_adaptive.json` so the perf + churn trajectory is tracked
 //! across PRs.
@@ -326,26 +333,68 @@ fn day_simulation(out: &mut Vec<(&'static str, Value)>) {
     ));
 }
 
+/// The unified portfolio runtime: winner-flip continuity + shared
+/// solve-pool/budget-pool measurements. The scenarios live in the library
+/// (`camflow::bench::portfolio`) so the integration suite schema-checks the
+/// very same fields this section writes.
+fn portfolio_runtime(out: &mut Vec<(&'static str, Value)>) {
+    println!("\n== Unified portfolio runtime: winner-flip churn + shared pools ==");
+    let o = camflow::bench::portfolio::run();
+    // The acceptance bar: a forced winner flip on an unchanged workload
+    // must not churn more than the sticky same-winner control re-plan.
+    assert!(
+        o.flip_churn_ratio <= o.sticky_churn_ratio + 0.05,
+        "winner flip churned the fleet: flip {} vs sticky {}",
+        o.flip_churn_ratio,
+        o.sticky_churn_ratio
+    );
+    assert_eq!(
+        (o.flip_provisioned, o.flip_terminated),
+        (0, 0),
+        "forced flip on an unchanged workload must not touch the fleet"
+    );
+    assert!(o.winner_flips >= 1, "scenario must actually flip the winner");
+    assert!(o.pool_shared_jobs > 0, "candidates must solve on the shared pool");
+    assert!(o.budget_pooled_donated > 0, "cross-candidate pool must engage");
+    println!(
+        "flip churn {:.1}%  sticky churn {:.1}%  flips {}  pool jobs {}  pooled nodes {}",
+        o.flip_churn_ratio * 100.0,
+        o.sticky_churn_ratio * 100.0,
+        o.winner_flips,
+        o.pool_shared_jobs,
+        o.budget_pooled_donated
+    );
+    out.push(("portfolio", o.to_json()));
+}
+
 fn main() {
+    // BENCH_PORTFOLIO_ONLY=1 runs just the portfolio section and writes a
+    // BENCH_adaptive.json holding only it — the `scale` CI lane uses this
+    // to gate/upload the winner-flip bars without re-running the latency/
+    // churn/day sections the `rust` lane already executed.
+    let portfolio_only = std::env::var_os("BENCH_PORTFOLIO_ONLY").is_some();
     let mut latency = Vec::new();
     let mut warm = Vec::new();
     let mut churn = Vec::new();
     let mut fig6 = Vec::new();
     let mut extra = Vec::new();
 
-    replan_latency(&mut latency);
-    warm_vs_cold(&mut warm);
-    churn_tracking(&mut churn);
-    fig6_warm_cost_parity(&mut fig6);
-    day_simulation(&mut extra);
+    if !portfolio_only {
+        replan_latency(&mut latency);
+        warm_vs_cold(&mut warm);
+        churn_tracking(&mut churn);
+        fig6_warm_cost_parity(&mut fig6);
+        day_simulation(&mut extra);
+    }
+    portfolio_runtime(&mut extra);
 
-    let mut pairs = vec![
-        ("bench", Value::str("adaptive")),
-        ("replan_latency", Value::arr(latency)),
-        ("warm_vs_cold", Value::arr(warm)),
-        ("churn", Value::arr(churn)),
-        ("fig6_cost_parity", Value::arr(fig6)),
-    ];
+    let mut pairs = vec![("bench", Value::str("adaptive"))];
+    if !portfolio_only {
+        pairs.push(("replan_latency", Value::arr(latency)));
+        pairs.push(("warm_vs_cold", Value::arr(warm)));
+        pairs.push(("churn", Value::arr(churn)));
+        pairs.push(("fig6_cost_parity", Value::arr(fig6)));
+    }
     pairs.extend(extra);
     let doc = Value::obj(pairs);
     let path = "BENCH_adaptive.json";

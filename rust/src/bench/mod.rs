@@ -4,6 +4,8 @@
 //! timed iterations and print a fixed-width table — the same rows/series the
 //! paper's tables and figures report.
 
+pub mod portfolio;
+
 use crate::util::Summary;
 use std::time::Instant;
 

@@ -1,0 +1,319 @@
+//! Portfolio-runtime scenarios shared by `bench_adaptive` and the
+//! integration suite.
+//!
+//! Living in the library (rather than inside the bench binary) keeps the
+//! `BENCH_adaptive.json` portfolio fields and the schema test in
+//! `tests/integration.rs` in lockstep: both call [`run`] and read the same
+//! [`PortfolioOutcome`].
+//!
+//! Two deterministic scenarios, both probe-calibrated so they do not depend
+//! on hand-tuned arc-flow node counts:
+//!
+//! * **Winner flip** ([`run_flip_scenario`]) — a two-region Fig-3-S1-shaped
+//!   workload whose exact GPU consolidation is invisible to every greedy
+//!   rule. The static graph budget is pinned to the nearest-only problem's
+//!   measured need, so the nearest-exact candidate always completes its
+//!   exact phase while the two-region GCL problem always walls. Under
+//!   GPU-favourable prices all candidates agree (ties keep GCL); restoring
+//!   the CPU price flips the winner to the nearest-exact candidate on an
+//!   *unchanged* workload — and slot continuity must keep the deployed
+//!   fleet byte-stable across the flip.
+//! * **Shared runtime** ([`run_pool_scenario`]) — a two-cluster worldwide
+//!   workload (a dominant multi-tier London cluster plus a trivial Tokyo
+//!   donor) re-planned three times through one portfolio context: all three
+//!   candidates dispatch their per-cluster solves to the one shared worker
+//!   pool, and the third re-plan's escalation for the walled London cluster
+//!   draws on the slack the nearest-exact candidate's allocation published
+//!   the round before — the cross-candidate budget pool at work.
+
+use crate::cameras::{camera_at, StreamRequest};
+use crate::catalog::Catalog;
+use crate::cloudsim::CloudSim;
+use crate::coordinator::adaptive::AdaptiveManager;
+use crate::coordinator::pipeline::{plan_with_context, PlanContext, ReplanContext};
+use crate::coordinator::portfolio::Candidate;
+use crate::coordinator::{LocationPolicy, Planner, PlannerConfig};
+use crate::geo::cities;
+use crate::profiles::{Program, Resolution};
+use crate::util::json::Value;
+
+/// Everything the portfolio scenarios measure, mirrored verbatim into
+/// `BENCH_adaptive.json`'s `portfolio` object by [`PortfolioOutcome::to_json`].
+#[derive(Clone, Debug)]
+pub struct PortfolioOutcome {
+    /// Churn ratio of the forced winner-flip re-plan (unchanged workload).
+    pub flip_churn_ratio: f64,
+    /// Churn ratio of the sticky same-winner control re-plan.
+    pub sticky_churn_ratio: f64,
+    /// Winner flips the scenario's manager observed (expected: exactly 1).
+    pub winner_flips: u64,
+    /// Instances provisioned / terminated by the flip re-plan (expected 0).
+    pub flip_provisioned: usize,
+    pub flip_terminated: usize,
+    /// Jobs all three candidates dispatched to the one shared worker pool.
+    pub pool_shared_jobs: u64,
+    /// Arc-flow node budget drawn from the cross-candidate donated pool.
+    pub budget_pooled_donated: u64,
+}
+
+impl PortfolioOutcome {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("flip_churn_ratio", Value::num(self.flip_churn_ratio)),
+            ("sticky_churn_ratio", Value::num(self.sticky_churn_ratio)),
+            ("winner_flips", Value::num(self.winner_flips as f64)),
+            ("flip_provisioned", Value::num(self.flip_provisioned as f64)),
+            ("flip_terminated", Value::num(self.flip_terminated as f64)),
+            ("pool_shared_jobs", Value::num(self.pool_shared_jobs as f64)),
+            ("budget_pooled_donated", Value::num(self.budget_pooled_donated as f64)),
+        ])
+    }
+}
+
+/// The flip catalog: the Fig-3 pool types across two US regions, with
+/// controlled prices. `us-east-2` stays the uniquely cheapest GPU offering
+/// so every candidate's GPU consolidation lands in the same region; both
+/// regions' CPU boxes carry `c4_usd` (the price perturbation lever).
+/// Public so the winner-flip property test perturbs the *same* catalog the
+/// bench measures (no scenario drift between the two).
+pub fn flip_catalog(c4_usd: f64) -> Catalog {
+    let mut catalog = Catalog::builtin()
+        .restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-1", "us-east-2"]));
+    let g2 = catalog.type_by_name("g2.2xlarge").unwrap();
+    let east2 = catalog.region_by_id("us-east-2").unwrap();
+    for o in &mut catalog.offerings {
+        if o.type_idx == g2 {
+            o.hourly_usd = if o.region_idx == east2 { 0.65 } else { 0.80 };
+        } else {
+            o.hourly_usd = c4_usd;
+        }
+    }
+    catalog
+}
+
+/// The Fig-3 S1 demand shape: one VGG16@0.25 plus `n_zf` ZF@0.55 streams on
+/// 1600x900 Chicago cameras. Each stream needs most of one c4 on the CPU
+/// path, yet the whole set fits a single g2 — and both greedy rules score
+/// the c4 better, so only an exact solve finds the consolidation.
+pub fn s1_workload(n_zf: usize) -> Vec<StreamRequest> {
+    let res = Resolution::HD900;
+    let mut v = vec![StreamRequest::new(
+        camera_at(100, "Chicago", cities::CHICAGO, res, 30.0),
+        Program::Vgg16,
+        0.25,
+    )];
+    for i in 0..n_zf {
+        v.push(StreamRequest::new(
+            camera_at(200 + i as u64, "Chicago", cities::CHICAGO, res, 30.0),
+            Program::Zf,
+            0.55,
+        ));
+    }
+    v
+}
+
+/// The nearest-exact candidate's configuration, standalone.
+pub fn nearest_exact_config() -> PlannerConfig {
+    let mut cfg = PlannerConfig::gcl();
+    cfg.location = LocationPolicy::NearestOnly;
+    cfg
+}
+
+/// Probe both candidate problems' arc-flow needs on `requests` — which must
+/// be the workload the *flip round* plans, since graph sizes are
+/// count-sensitive below the per-bin multiplicity cap — and pin the static
+/// graph budget to exactly the nearest-only problem's: the nearest-exact
+/// solve of that workload completes, while the two-region GCL problem
+/// (strictly more graph: its second region's builds charge the same
+/// cumulative budget) always walls on it.
+pub fn calibrated_budget(catalog: &Catalog, requests: &[StreamRequest]) -> usize {
+    use crate::packing::mcvbp::{solve, SolveOptions};
+    let probe_opts = SolveOptions { max_graph_nodes: 2_000_000, ..SolveOptions::default() };
+    let need = |cfg: PlannerConfig| -> usize {
+        let planner = Planner::new(catalog.clone(), cfg);
+        let (problem, _, _) = planner.build_problem(requests).unwrap();
+        let (_, st) = solve(&problem, &probe_opts).unwrap();
+        st.graph_nodes_before
+    };
+    let nl = need(nearest_exact_config());
+    let gcl = need(PlannerConfig::gcl());
+    assert!(
+        gcl > nl + 1,
+        "two-region problem must need strictly more graph than nearest-only: {gcl} vs {nl}"
+    );
+    nl
+}
+
+/// Winner-flip scenario. Returns (flip churn, sticky churn, flips,
+/// provisioned-on-flip, terminated-on-flip); panics if any continuity
+/// invariant breaks — the bench and the test suite both gate on it.
+pub fn run_flip_scenario() -> (f64, f64, u64, usize, usize) {
+    let expensive = flip_catalog(5.0);
+    // Calibrate on the workload rounds 2-3 plan (two ZF survivors), not
+    // round 1's larger one: graph sizes shrink with stream counts below
+    // the per-bin cap, and the walled-GCL guarantee must hold on the flip
+    // round itself. Round 1's bigger problem then walls for *every*
+    // candidate, which is fine — all heuristics agree on the one GPU box.
+    let budget = calibrated_budget(&expensive, &s1_workload(2));
+    let mut cfg = PlannerConfig::gcl();
+    cfg.solve_opts.max_graph_nodes = budget;
+    let mut mgr = AdaptiveManager::new(Planner::new(expensive.clone(), cfg));
+    let mut sim = CloudSim::new(expensive);
+
+    // Round 1 — GPU-favourable prices ($5 CPU box): every candidate lands
+    // on the one g2@us-east-2 consolidation; the tie keeps the main GCL.
+    let r1 = mgr.replan(s1_workload(3)).unwrap();
+    assert_eq!(r1.winner, Some(Candidate::Main), "ties must keep GCL: {r1:?}");
+    let plan1 = mgr.current_plan().unwrap().clone();
+    assert_eq!((plan1.non_gpu, plan1.gpu), (0, 1), "S1 consolidates onto one GPU box");
+    sim.apply_plan(&plan1).unwrap();
+
+    // Round 2 — the sticky same-winner control: one ZF camera departs; the
+    // survivors must stay on their slot and the winner must not change.
+    let r2 = mgr.replan(s1_workload(2)).unwrap();
+    assert!(!r2.winner_flipped, "{r2:?}");
+    let sticky_churn = r2.churn_ratio();
+    sim.apply_plan(mgr.current_plan().unwrap()).unwrap();
+    let ids_before: Vec<_> = sim.alive().iter().map(|i| i.id).collect();
+
+    // Round 3 — price perturbation only, workload unchanged: the CPU box
+    // returns to $0.419. The exact GPU consolidation now beats every greedy
+    // CPU fill, but under the calibrated budget only the nearest-exact
+    // candidate completes an exact phase — the winner flips. Slot
+    // continuity must keep the fleet byte-stable.
+    mgr.planner.catalog = flip_catalog(0.419);
+    let r3 = mgr.replan(s1_workload(2)).unwrap();
+    assert!(r3.winner_flipped, "price restore must flip the winner: {r3:?}");
+    assert_eq!(r3.winner, Some(Candidate::NearestExact), "{r3:?}");
+    assert!((r3.cost_after - 0.65).abs() < 1e-9, "flip must keep the GPU box: {r3:?}");
+    assert_eq!(r3.streams_moved, 0, "unchanged workload must not move streams: {r3:?}");
+    let provisioned: usize = r3.provision.iter().map(|(_, n)| n).sum();
+    let terminated: usize = r3.terminate.iter().map(|(_, n)| n).sum();
+    assert_eq!((provisioned, terminated), (0, 0), "flip churned the fleet: {r3:?}");
+    sim.apply_plan(mgr.current_plan().unwrap()).unwrap();
+    let ids_after: Vec<_> = sim.alive().iter().map(|i| i.id).collect();
+    assert_eq!(ids_before, ids_after, "flip must keep physical instance ids");
+
+    (r3.churn_ratio(), sticky_churn, mgr.ctx.winner_flips, provisioned, terminated)
+}
+
+/// The shared-runtime workload: a dominant London cluster (six GPU-bound
+/// VGA fps tiers, `per_tier` cameras each — the tier mix drives the g3
+/// arc-flow state space combinatorial, while the single-GPU g2 box holds
+/// so few streams that the nearest-only problem's graphs stay tiny) plus a
+/// trivial single-group Tokyo cluster. The 10.5–14.2 fps band keeps both
+/// RTT circles regional and disjoint: London reaches eu-west-2 +
+/// us-east-1, Tokyo only ap-northeast-1.
+fn pool_workload(per_tier: usize, drift: f64) -> Vec<StreamRequest> {
+    let tiers = [10.5, 11.2, 12.0, 12.8, 13.5, 14.2];
+    let mut v = Vec::new();
+    for (t, fps) in tiers.iter().enumerate() {
+        for cam in 0..per_tier as u64 {
+            v.push(StreamRequest::new(
+                camera_at(
+                    (t * per_tier) as u64 + cam,
+                    "London",
+                    cities::LONDON,
+                    Resolution::VGA,
+                    30.0,
+                ),
+                Program::Zf,
+                fps + drift,
+            ));
+        }
+    }
+    for cam in 0..2u64 {
+        v.push(StreamRequest::new(
+            camera_at(1000 + cam, "Tokyo", cities::TOKYO, Resolution::VGA, 30.0),
+            Program::Zf,
+            11.7,
+        ));
+    }
+    v
+}
+
+/// Shared worker-pool + cross-candidate budget-pool scenario. Returns
+/// (pool_shared_jobs, budget_pooled_donated); panics if the pool never
+/// engages.
+pub fn run_pool_scenario() -> (u64, u64) {
+    let catalog = Catalog::builtin().restrict(
+        Some(&["c4.2xlarge", "g2.2xlarge", "g3.8xlarge"]),
+        Some(&["eu-west-2", "us-east-1", "ap-northeast-1"]),
+    );
+
+    // Probe each candidate's per-component arc-flow needs at a generous
+    // budget, then pin the static budget so every small component donates
+    // (2x its need fits under it, with margin) while the dominant London
+    // GCL component walls. London's g3 graph grows with the per-tier
+    // camera count until the per-bin multiplicity cap saturates it, while
+    // every other graph caps out almost immediately — so scaling the fleet
+    // up until the probe shows dominance always terminates, and the
+    // calibration never depends on hand-assumed node counts.
+    let probe = |cfg: &PlannerConfig, per_tier: usize| -> Vec<usize> {
+        let mut big = cfg.clone();
+        big.solve_opts.max_graph_nodes = 2_000_000;
+        let mut ctx = PlanContext::new();
+        plan_with_context(&catalog, &big, &pool_workload(per_tier, 0.0), &mut ctx).unwrap();
+        ctx.component_telemetry().iter().map(|t| t.graph_nodes).collect()
+    };
+    let mut per_tier = 4usize;
+    let budget = loop {
+        let gcl_needs = probe(&PlannerConfig::gcl(), per_tier);
+        let nl_needs = probe(&nearest_exact_config(), per_tier);
+        assert!(
+            gcl_needs.len() >= 2 && !nl_needs.is_empty(),
+            "expected two RTT-disjoint clusters: {gcl_needs:?} {nl_needs:?}"
+        );
+        let budget = 2 * gcl_needs[1].max(nl_needs[0]) + 200;
+        if budget < gcl_needs[0] {
+            break budget;
+        }
+        per_tier *= 2;
+        assert!(
+            per_tier <= 64,
+            "calibration failed to find a dominant hard cluster: \
+             gcl {gcl_needs:?}, nl {nl_needs:?}"
+        );
+    };
+
+    let mut cfg = PlannerConfig::gcl();
+    cfg.solve_opts.max_graph_nodes = budget;
+    let planner = Planner::new(catalog, cfg);
+    let mut ctx = ReplanContext::new();
+    // Round 1 fills telemetry; round 2's allocations publish each
+    // candidate's slack into the shared pool; round 3's escalation for the
+    // walled London cluster finally draws on the other candidates' slack.
+    // Each round drifts the London tiers so the hard cluster re-solves
+    // (memo hits draw nothing — stable re-plans must stay grant-free).
+    for round in 0..3 {
+        planner.plan_with(&pool_workload(per_tier, round as f64 * 0.002), &mut ctx).unwrap();
+    }
+    let jobs = ctx.pool_shared_jobs();
+    let pooled = ctx.budget_pooled_donated();
+    assert!(
+        jobs >= 6,
+        "three candidates x two clusters x three rounds must share the pool: {jobs}"
+    );
+    assert!(
+        pooled > 0,
+        "the walled London cluster must draw on the alternates' donated slack \
+         (calibrated budget {budget}, per_tier {per_tier})"
+    );
+    (jobs, pooled)
+}
+
+/// Run both scenarios and collect the bench/JSON outcome.
+pub fn run() -> PortfolioOutcome {
+    let (flip_churn_ratio, sticky_churn_ratio, winner_flips, flip_provisioned, flip_terminated) =
+        run_flip_scenario();
+    let (pool_shared_jobs, budget_pooled_donated) = run_pool_scenario();
+    PortfolioOutcome {
+        flip_churn_ratio,
+        sticky_churn_ratio,
+        winner_flips,
+        flip_provisioned,
+        flip_terminated,
+        pool_shared_jobs,
+        budget_pooled_donated,
+    }
+}

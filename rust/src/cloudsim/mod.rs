@@ -201,6 +201,12 @@ impl CloudSim {
     /// instances then claim remaining same-label instances oldest-id-first
     /// — a deterministic FIFO, so applying the same plan twice yields the
     /// same ids (the old LIFO label pool could permute them).
+    ///
+    /// Binding is keyed purely by slot id + label, never by plan order or
+    /// by which planner produced the plan — so a portfolio winner flip
+    /// whose plan carries the same slots (seeded continuity,
+    /// `coordinator::portfolio`) reuses the same physical instances with
+    /// zero provisioning.
     pub fn apply_plan(&mut self, plan: &Plan) -> Result<Vec<InstanceId>> {
         let mut assigned: Vec<Option<InstanceId>> = vec![None; plan.instances.len()];
         let mut claimed: std::collections::BTreeSet<InstanceId> =
@@ -395,5 +401,42 @@ mod tests {
         let replanned = planner.plan(&requests).unwrap();
         let ids3 = s.apply_plan(&replanned).unwrap();
         assert_eq!(ids1, ids3, "re-planned identical plan must reuse the same instances");
+    }
+
+    #[test]
+    fn slot_bindings_follow_slots_not_plan_order() {
+        // A winner flip hands the simulator a plan produced by a different
+        // candidate: same slots (seeded continuity), possibly in a
+        // different instance order. Reconciliation must follow the slot
+        // ids, not positions — zero provision/terminate either way.
+        let catalog =
+            Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let planner = Planner::new(catalog.clone(), PlannerConfig::st3());
+        let mut s = CloudSim::new(catalog);
+        let requests: Vec<StreamRequest> = (0..6)
+            .map(|i| {
+                StreamRequest::new(
+                    camera_at(i, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0),
+                    Program::Zf,
+                    1.0,
+                )
+            })
+            .collect();
+        let plan = planner.plan(&requests).unwrap();
+        assert!(plan.instances.len() >= 2, "need multiple instances to permute");
+        let ids1 = s.apply_plan(&plan).unwrap();
+        let alive1 = s.alive().len();
+
+        // The "flipped winner's" plan: identical slots, reversed order
+        // (instances and packing bins stay index-aligned).
+        let mut flipped = plan.clone();
+        flipped.instances.reverse();
+        flipped.packing.bins.reverse();
+        let ids2 = s.apply_plan(&flipped).unwrap();
+        let mut ids2_rev = ids2.clone();
+        ids2_rev.reverse();
+        assert_eq!(ids1, ids2_rev, "each slot must keep its physical instance");
+        assert_eq!(s.alive().len(), alive1, "no provision/terminate on the flip");
+        assert!((s.hourly_rate() - plan.cost_per_hour).abs() < 1e-9);
     }
 }

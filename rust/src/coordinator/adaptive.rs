@@ -22,7 +22,8 @@
 //!
 //! [`SolverMetrics`]: crate::metrics::SolverMetrics
 
-use super::pipeline::{PipelineStats, ReplanContext};
+use super::pipeline::PipelineStats;
+use super::portfolio::{Candidate, ReplanContext};
 use super::{Plan, Planner, SlotId};
 use crate::cameras::{stream_keys, StreamRequest};
 use crate::error::Result;
@@ -62,6 +63,13 @@ pub struct MigrationReport {
     /// Pipeline telemetry of the re-plan (cache reuse, warm start,
     /// decomposition width).
     pub pipeline: PipelineStats,
+    /// Portfolio candidate whose plan this re-plan adopted (`None` for a
+    /// cold manager — it plans through a throwaway context).
+    pub winner: Option<Candidate>,
+    /// True when the adopted candidate differs from the previous re-plan's
+    /// — a portfolio winner flip. Slot continuity keeps the fleet stable
+    /// across it: a flip onto a shape-identical plan moves nothing.
+    pub winner_flipped: bool,
 }
 
 impl MigrationReport {
@@ -150,6 +158,7 @@ impl AdaptiveManager {
 
     /// Re-plan for a new workload; returns the migration diff.
     pub fn replan(&mut self, requests: Vec<StreamRequest>) -> Result<MigrationReport> {
+        let prev_winner = self.ctx.last_winner;
         let new_plan = if self.warm {
             self.planner.plan_with(&requests, &mut self.ctx)?
         } else {
@@ -160,6 +169,13 @@ impl AdaptiveManager {
             pipeline: new_plan.pipeline.clone(),
             ..Default::default()
         };
+        if self.warm {
+            report.winner = self.ctx.last_winner;
+            report.winner_flipped = matches!(
+                (prev_winner, self.ctx.last_winner),
+                (Some(a), Some(b)) if a != b
+            );
+        }
 
         if let Some((old_requests, old_plan)) = &self.current {
             report.cost_before = old_plan.cost_per_hour;
@@ -287,6 +303,8 @@ mod tests {
         assert_eq!(report.streams_surviving, 6);
         assert_eq!(report.churn_ratio(), 0.0);
         assert_eq!(report.kept, mgr.current_plan().unwrap().instances.len());
+        assert_eq!(report.winner, Some(super::Candidate::Main));
+        assert!(!report.winner_flipped, "a single-strategy manager never flips");
         assert!(report.pipeline.warm_started, "second re-plan must warm-start");
         assert_eq!(
             report.pipeline.front_unchanged,

@@ -23,8 +23,56 @@
 //!
 //! The same policy is applied independently to the three budget axes:
 //! arc-flow graph nodes, joint-ILP variables, and branch-and-bound nodes.
+//!
+//! Since PR 5 the pool can also span *planning contexts*: the GCL portfolio
+//! (`coordinator::portfolio`) evaluates three candidate strategies, and each
+//! candidate's allocation publishes its leftover slack ([`AxisSlack`]) for
+//! the others to draw on next round — the alternates' donated slack funds
+//! the main exact solve. [`allocate_pooled`] takes that external share and
+//! guarantees, in addition to the static floor, that every component's
+//! pooled budget is **at least its isolated allocation** (the external pool
+//! can only add, so pooled plans are never worse than isolated ones), and
+//! that the published slack never exceeds what this round's own donors
+//! actually left unclaimed.
 
 use crate::packing::mcvbp::SolveOptions;
+
+/// Donated solver slack on the three budget axes, published by one
+/// allocation round for other planning contexts to draw on (the
+/// cross-candidate pool of `coordinator::portfolio`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AxisSlack {
+    pub graph_nodes: usize,
+    pub milp_vars: usize,
+    pub milp_nodes: usize,
+}
+
+impl AxisSlack {
+    pub fn is_zero(&self) -> bool {
+        self.graph_nodes == 0 && self.milp_vars == 0 && self.milp_nodes == 0
+    }
+
+    /// Component-wise saturating sum.
+    pub fn plus(&self, other: &AxisSlack) -> AxisSlack {
+        AxisSlack {
+            graph_nodes: self.graph_nodes.saturating_add(other.graph_nodes),
+            milp_vars: self.milp_vars.saturating_add(other.milp_vars),
+            milp_nodes: self.milp_nodes.saturating_add(other.milp_nodes),
+        }
+    }
+}
+
+/// Result of a pooled allocation round.
+pub struct PooledAllocation {
+    /// Per-component solver options, index-aligned with the history slice.
+    pub opts: Vec<SolveOptions>,
+    /// Arc-flow nodes each component drew from the *external* pool — the
+    /// grant above what the isolated (external-free) allocation would have
+    /// given it. Zero everywhere when `external` was zero.
+    pub drawn_nodes: Vec<usize>,
+    /// Leftover internal slack published back for the other candidates.
+    pub published: AxisSlack,
+}
 
 /// Telemetry of one component's most recent solve, recorded by the Solve
 /// stage into the `PlanContext` and consumed by [`allocate`] on the next
@@ -68,14 +116,49 @@ const ESCALATE: usize = 4;
 /// proportional rationing, starves every recoverable requester of the pool.
 const ESCALATE_CAP: usize = 64;
 
+/// Grants above the static floor for one axis, given `slack` to distribute.
+/// `history_complete` gates the degenerate self-escalation path: when every
+/// known component is a requester and the pool is empty, bounded
+/// self-escalation (≤ ESCALATE × static) replaces the pool so a hard lone
+/// component is not pinned to the seed budget forever.
+fn axis_grants(
+    static_budget: usize,
+    request: &[usize],
+    slack: usize,
+    history_complete: bool,
+) -> Vec<usize> {
+    let total_request: u128 = request.iter().map(|&r| r as u128).sum();
+    let self_escalate =
+        slack == 0 && history_complete && request.iter().all(|&r| r > 0);
+    request
+        .iter()
+        .map(|&r| {
+            if r == 0 {
+                0
+            } else if self_escalate {
+                r.min(static_budget.saturating_mul(ESCALATE - 1))
+            } else if total_request <= slack as u128 {
+                r
+            } else {
+                // Oversubscribed pool: grant proportionally to the requests.
+                (slack as u128 * r as u128 / total_request) as usize
+            }
+        })
+        .collect()
+}
+
 /// One budget axis: floor every component at `static_budget`, collect the
-/// predicted slack of easy components, grant it to the requesters.
-fn allocate_axis(
+/// predicted slack of easy components plus the `external` cross-candidate
+/// share, grant it to the requesters. Returns per-component budgets, the
+/// per-component external draw (grant above the isolated allocation), and
+/// the leftover internal slack to publish.
+fn allocate_axis_pooled(
     static_budget: usize,
     history: &[Option<&ComponentTelemetry>],
     usage: impl Fn(&ComponentTelemetry) -> usize,
     ran_under: impl Fn(&ComponentTelemetry) -> usize,
-) -> Vec<usize> {
+    external: usize,
+) -> (Vec<usize>, Vec<usize>, usize) {
     let n = history.len();
     let mut request = vec![0usize; n]; // extra wanted above the static floor
     let mut slack = 0usize;
@@ -103,29 +186,30 @@ fn allocate_axis(
             None => {} // no history: the static seed, no donation
         }
     }
-    let total_request: u128 = request.iter().map(|&r| r as u128).sum();
-    // Degenerate pool: every known component is a requester and nothing can
-    // donate (e.g. a single-component deployment). Bounded self-escalation
-    // (≤ ESCALATE × static in total) replaces the pool so a hard lone
-    // component is not pinned to the seed budget forever.
-    let self_escalate = slack == 0
-        && history.iter().all(Option::is_some)
-        && request.iter().all(|&r| r > 0);
-    (0..n)
-        .map(|i| {
-            if request[i] == 0 {
-                static_budget
-            } else if self_escalate {
-                static_budget + request[i].min(static_budget.saturating_mul(ESCALATE - 1))
-            } else if total_request <= slack as u128 {
-                static_budget + request[i]
-            } else {
-                // Oversubscribed pool: grant proportionally to the requests.
-                let grant = (slack as u128 * request[i] as u128 / total_request) as usize;
-                static_budget + grant
-            }
-        })
-        .collect()
+    let complete = history.iter().all(Option::is_some);
+    let iso = axis_grants(static_budget, &request, slack, complete);
+    // The pooled grants are the component-wise max of the isolated grants
+    // and the grants a pool enlarged by `external` would give: the external
+    // share can only ever add budget, so pooled allocation dominates
+    // isolated allocation on every component (property-tested).
+    let grants: Vec<usize> = if external == 0 {
+        iso.clone()
+    } else {
+        let pooled = axis_grants(
+            static_budget,
+            &request,
+            slack.saturating_add(external),
+            complete,
+        );
+        iso.iter().zip(&pooled).map(|(&a, &b)| a.max(b)).collect()
+    };
+    let drawn: Vec<usize> = grants.iter().zip(&iso).map(|(&g, &i)| g - i).collect();
+    // Publish only what this round's own donors left unclaimed — never the
+    // external share (no double counting across candidates).
+    let granted_total: usize = grants.iter().sum();
+    let published = slack.saturating_sub(granted_total);
+    let budgets = grants.iter().map(|&g| static_budget + g).collect();
+    (budgets, drawn, published)
 }
 
 /// Derive each component's [`SolveOptions`] from the static seed options
@@ -135,25 +219,41 @@ pub fn allocate(
     static_opts: &SolveOptions,
     history: &[Option<&ComponentTelemetry>],
 ) -> Vec<SolveOptions> {
-    let graph = allocate_axis(
+    allocate_pooled(static_opts, history, AxisSlack::default()).opts
+}
+
+/// [`allocate`] with an `external` cross-candidate pool share: the slack the
+/// *other* portfolio candidates published last round is added to this
+/// context's own donated pool before grants are rationed. With a zero
+/// `external` this is exactly [`allocate`]. Every component still floors at
+/// the static seed, and every pooled budget is at least the isolated one.
+pub fn allocate_pooled(
+    static_opts: &SolveOptions,
+    history: &[Option<&ComponentTelemetry>],
+    external: AxisSlack,
+) -> PooledAllocation {
+    let (graph, drawn_nodes, graph_pub) = allocate_axis_pooled(
         static_opts.max_graph_nodes,
         history,
         |t| t.graph_nodes,
         |t| t.graph_budget,
+        external.graph_nodes,
     );
-    let vars = allocate_axis(
+    let (vars, _, vars_pub) = allocate_axis_pooled(
         static_opts.max_milp_vars,
         history,
         |t| t.milp_vars,
         |t| t.var_budget,
+        external.milp_vars,
     );
-    let nodes = allocate_axis(
+    let (nodes, _, nodes_pub) = allocate_axis_pooled(
         static_opts.milp.max_nodes,
         history,
         |t| t.milp_nodes,
         |t| t.node_budget,
+        external.milp_nodes,
     );
-    (0..history.len())
+    let opts = (0..history.len())
         .map(|i| {
             let mut o = static_opts.clone();
             o.max_graph_nodes = graph[i];
@@ -165,7 +265,16 @@ pub fn allocate(
             o.milp_node_scale = static_opts.milp_node_scale.saturating_mul(scale_up);
             o
         })
-        .collect()
+        .collect();
+    PooledAllocation {
+        opts,
+        drawn_nodes,
+        published: AxisSlack {
+            graph_nodes: graph_pub,
+            milp_vars: vars_pub,
+            milp_nodes: nodes_pub,
+        },
+    }
 }
 
 #[cfg(test)]
@@ -311,6 +420,92 @@ mod tests {
         let wall2 = hard(out[0].max_graph_nodes);
         let out2 = allocate(&opts, &[Some(&wall2)]);
         assert_eq!(out2[0].max_graph_nodes, opts.max_graph_nodes * ESCALATE);
+    }
+
+    #[test]
+    fn pooled_with_zero_external_is_exactly_the_isolated_allocation() {
+        let opts = SolveOptions::default();
+        let donor = easy(40);
+        let wall = hard(opts.max_graph_nodes);
+        let history: Vec<Option<&ComponentTelemetry>> =
+            vec![Some(&donor), Some(&wall), None];
+        let iso = allocate(&opts, &history);
+        let pooled = allocate_pooled(&opts, &history, AxisSlack::default());
+        for (a, b) in iso.iter().zip(&pooled.opts) {
+            assert_eq!(a.max_graph_nodes, b.max_graph_nodes);
+            assert_eq!(a.max_milp_vars, b.max_milp_vars);
+            assert_eq!(a.milp.max_nodes, b.milp.max_nodes);
+        }
+        assert!(pooled.drawn_nodes.iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn external_pool_tops_up_an_oversubscribed_internal_pool() {
+        // One donor, one wall: the wall's request dwarfs the internal slack,
+        // so the isolated grant is the whole internal pool — the external
+        // share adds on top, and the draw is attributed to the wall.
+        let opts = SolveOptions::default();
+        let donor = easy(40); // slack = 6000 - 80 = 5920
+        let wall = hard(opts.max_graph_nodes); // request = 3 x 6000 = 18000
+        let history: Vec<Option<&ComponentTelemetry>> = vec![Some(&donor), Some(&wall)];
+        let external = AxisSlack { graph_nodes: 10_000, ..AxisSlack::default() };
+        let iso = allocate(&opts, &history);
+        let pooled = allocate_pooled(&opts, &history, external);
+        assert_eq!(pooled.drawn_nodes[0], 0, "the donor draws nothing");
+        assert_eq!(pooled.drawn_nodes[1], 10_000, "the wall drinks the whole share");
+        assert_eq!(
+            pooled.opts[1].max_graph_nodes,
+            iso[1].max_graph_nodes + 10_000
+        );
+        // Everything internal was granted away: nothing left to publish.
+        assert_eq!(pooled.published.graph_nodes, 0);
+    }
+
+    #[test]
+    fn all_donor_round_publishes_the_full_internal_slack() {
+        let opts = SolveOptions::default();
+        let donors = [easy(40), easy(100)];
+        let history: Vec<Option<&ComponentTelemetry>> =
+            vec![Some(&donors[0]), Some(&donors[1])];
+        let pooled = allocate_pooled(&opts, &history, AxisSlack::default());
+        let want = (opts.max_graph_nodes - 80) + (opts.max_graph_nodes - 200);
+        assert_eq!(pooled.published.graph_nodes, want);
+        assert!(pooled.drawn_nodes.iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn external_pool_lifts_a_lone_component_past_its_bounded_self_grant() {
+        // A lone hard component whose request fits under the ESCALATE x
+        // static self-grant never needs the pool; once a second consecutive
+        // failure pushes its request past that bound, only a real donated
+        // pool (here: another candidate's) can fund the difference.
+        let opts = SolveOptions::default();
+        let b = opts.max_graph_nodes;
+        let first_failure = hard(b);
+        let external = AxisSlack { graph_nodes: 20 * b, ..AxisSlack::default() };
+        let round1 = allocate_pooled(&opts, &[Some(&first_failure)], external);
+        // request = 3B <= self-grant cap 3B: the pool adds nothing yet.
+        assert_eq!(round1.drawn_nodes[0], 0);
+        assert_eq!(round1.opts[0].max_graph_nodes, 4 * b);
+        let second_failure = hard(4 * b); // want 16B, request 15B
+        let round2 = allocate_pooled(&opts, &[Some(&second_failure)], external);
+        assert_eq!(
+            round2.opts[0].max_graph_nodes,
+            b + 15 * b,
+            "the external pool must fund the full request"
+        );
+        assert_eq!(round2.drawn_nodes[0], 15 * b - 3 * b);
+    }
+
+    #[test]
+    fn axis_slack_plus_saturates() {
+        let a = AxisSlack { graph_nodes: usize::MAX, milp_vars: 1, milp_nodes: 2 };
+        let b = AxisSlack { graph_nodes: 10, milp_vars: 2, milp_nodes: 3 };
+        let s = a.plus(&b);
+        assert_eq!(s.graph_nodes, usize::MAX);
+        assert_eq!((s.milp_vars, s.milp_nodes), (3, 5));
+        assert!(!s.is_zero());
+        assert!(AxisSlack::default().is_zero());
     }
 
     #[test]

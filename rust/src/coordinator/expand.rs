@@ -17,6 +17,15 @@
 //! `streams_moved` churned with queue order rather than with the packing
 //! diff — and each spurious move is a real reconnection and warm-state loss
 //! on the serving layer.
+//!
+//! The matching target need not come from *this* planner's previous plan:
+//! a [`PrevAssignment`] is keyed only by stable stream keys and bin labels
+//! ("type@region"), so the portfolio (`coordinator::portfolio`) seeds the
+//! **winning** candidate's assignment into every candidate context, and a
+//! price update may carry the assignment across a cache clear. Entries the
+//! new problem cannot reproduce (departed streams, labels the catalog no
+//! longer offers) simply never pair — stale state degrades to the cold
+//! deal, never to a wrong assignment.
 
 use super::{PlannedInstance, SlotId};
 use crate::cameras::StreamKey;
@@ -402,6 +411,36 @@ mod tests {
         let instances = run(&problem, &packing, &members, &keys, Some(&prev)).unwrap();
         assert_ne!(instances[0].slot_id, u64::MAX, "a different bin type is a new slot");
         assert_eq!(instances[0].streams, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn assignment_seeded_from_another_candidates_plan_sticks() {
+        // The portfolio seeds the *winner's* assignment into every
+        // candidate context. A different candidate's expansion must inherit
+        // it purely through labels + stream keys — here the seed hosts the
+        // streams out of request order, which a cold deal would never
+        // produce, so reproducing it proves the seed was honoured.
+        let problem = problem_with(4, 1);
+        let packing = Packing {
+            bins: vec![
+                PackedBin { bin_type: 0, counts: vec![2] },
+                PackedBin { bin_type: 0, counts: vec![2] },
+            ],
+        };
+        let members = vec![vec![0, 1, 2, 3]];
+        let keys = dummy_keys(4);
+        // Winner's deployed fleet: slot 41 hosts {0, 3}, slot 42 hosts {1, 2}.
+        let prev = PrevAssignment {
+            slots: vec![
+                PrevSlot { slot_id: 41, label: "cpu@r".into(), streams: vec![keys[0], keys[3]] },
+                PrevSlot { slot_id: 42, label: "cpu@r".into(), streams: vec![keys[1], keys[2]] },
+            ],
+        };
+        let instances = run(&problem, &packing, &members, &keys, Some(&prev)).unwrap();
+        assert_eq!(instances[0].slot_id, 41);
+        assert_eq!(instances[0].streams, vec![0, 3], "out-of-order hosting reproduced");
+        assert_eq!(instances[1].slot_id, 42);
+        assert_eq!(instances[1].streams, vec![1, 2]);
     }
 
     #[test]

@@ -36,6 +36,15 @@
 //! re-enter the solver from the cached optimal basis and branching order
 //! instead of solving cold.
 //!
+//! The GCL configuration plans a candidate **portfolio** ([`portfolio`]):
+//! the exact RTT-filtered solve plus the ARMVAC-greedy and nearest-exact
+//! alternates, adopting the cheapest plan each re-plan. The portfolio runs
+//! on *shared* infrastructure — one solve-worker pool and one
+//! cross-candidate budget pool span all three candidate contexts, and the
+//! winning candidate's stream→slot assignment is seeded into every context
+//! after each re-plan, so a winner flip reproduces the deployed fleet
+//! instead of restarting slots fresh.
+//!
 //! The front-end (Eligibility + ProblemBuild) is *drift-proportional*: the
 //! context diffs each request slice against the previous one by stable
 //! stream key + fingerprint and re-runs eligibility/grouping only for the
@@ -51,6 +60,7 @@ pub mod budget;
 pub mod eligibility;
 pub mod expand;
 pub mod pipeline;
+pub mod portfolio;
 
 use crate::cameras::StreamRequest;
 use crate::catalog::Catalog;
@@ -58,7 +68,8 @@ use crate::error::Result;
 use crate::geo;
 use crate::packing::mcvbp::{SolveMethod, SolveOptions};
 use crate::packing::{Packing, PackingProblem};
-use pipeline::{PipelineStats, PlanContext, ReplanContext};
+use pipeline::{PipelineStats, PlanContext};
+use portfolio::ReplanContext;
 
 /// ST1 / ST2 / ST3 hardware filters (Fig 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -267,35 +278,14 @@ impl Planner {
     /// [`Planner::plan`], but intermediate artifacts (eligibility masks,
     /// demand vectors, arc-flow graphs, the previous packing) are reused
     /// across calls — the warm-start incremental re-plan path.
+    ///
+    /// For the GCL configuration this runs the candidate **portfolio** on
+    /// shared infrastructure ([`portfolio::plan`]): one worker pool and one
+    /// cross-candidate budget pool across all three candidates, and the
+    /// winning candidate's stream→slot assignment seeded into every
+    /// candidate context so a winner flip keeps the deployed fleet stable.
     pub fn plan_with(&self, requests: &[StreamRequest], ctx: &mut ReplanContext) -> Result<Plan> {
-        let mut best =
-            pipeline::plan_with_context(&self.catalog, &self.config, requests, &mut ctx.main)?;
-        if self.config.location == LocationPolicy::RttFiltered
-            && self.config.solver == SolverKind::Exact
-        {
-            let alts: [(&mut PlanContext, LocationPolicy, SolverKind); 2] = [
-                (&mut ctx.alt_rtt_greedy, LocationPolicy::RttFiltered, SolverKind::ArmvacGreedy),
-                (&mut ctx.alt_nearest_exact, LocationPolicy::NearestOnly, SolverKind::Exact),
-            ];
-            for (alt_ctx, location, solver) in alts {
-                let alt_config = PlannerConfig {
-                    hardware: self.config.hardware,
-                    location,
-                    solver,
-                    headroom: self.config.headroom,
-                    solve_opts: self.config.solve_opts.clone(),
-                    parallel_regions: self.config.parallel_regions,
-                };
-                if let Ok(p) =
-                    pipeline::plan_with_context(&self.catalog, &alt_config, requests, alt_ctx)
-                {
-                    if p.cost_per_hour < best.cost_per_hour {
-                        best = p;
-                    }
-                }
-            }
-        }
-        Ok(best)
+        portfolio::plan(self, requests, ctx)
     }
 
     /// Plan with exactly this configuration (no candidate portfolio).

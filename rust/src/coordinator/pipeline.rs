@@ -31,8 +31,11 @@
 //! On top of the caches the Solve stage decomposes the packing problem into
 //! independent per-region-cluster subproblems (streams whose RTT circles
 //! don't overlap can never share an instance) and solves them on a
-//! persistent [`WorkerPool`] owned by the context — workers park between
-//! re-plans instead of paying thread spawn/teardown each time.
+//! persistent [`WorkerPool`](crate::util::pool::WorkerPool) reached through
+//! the context's shareable [`PoolSlot`](crate::util::pool::PoolSlot) —
+//! workers park between re-plans instead of paying thread spawn/teardown
+//! each time, and the portfolio's three candidate contexts all solve on
+//! one pool.
 //! Decomposition is exact: no bin type is shared between components, so the
 //! union of component optima is a global optimum. Plan costs are identical
 //! to a monolithic solve whenever the monolithic exact phase would have
@@ -41,7 +44,7 @@
 //! decomposed solve can only *improve* on the monolithic heuristic
 //! fallback, never regress it.
 
-use super::budget::{self, ComponentTelemetry};
+use super::budget::{self, AxisSlack, ComponentTelemetry};
 use super::eligibility::{
     self, canon_f64_bits, FrontCache, GroupId, GroupKey, GroupSet, RegionMask,
 };
@@ -56,7 +59,7 @@ use crate::packing::arcflow::GraphCache;
 use crate::packing::mcvbp::{self, DeltaHints, SolveMethod, SolveOptions, SolveStats};
 use crate::packing::{heuristic, BinType, ItemGroup, Packing, PackedBin, PackingProblem};
 use crate::util::fxhash::FxHashMap;
-use crate::util::pool::WorkerPool;
+use crate::util::pool::PoolSlot;
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
 use std::sync::Arc;
@@ -105,6 +108,16 @@ pub struct PipelineStats {
     /// Extra arc-flow node budget granted above the static per-component
     /// seed by the adaptive allocator this run (the donated pool at work).
     pub budget_donated_nodes: usize,
+    /// Of the donated grant, the arc-flow nodes drawn from the portfolio's
+    /// *cross-candidate* pool — budget another candidate's allocation
+    /// published that an isolated allocation could not have granted
+    /// (`coordinator::portfolio`). Counts only components that actually
+    /// solved this run, like `budget_donated_nodes`.
+    pub budget_pooled_nodes: usize,
+    /// Jobs this run dispatched to the persistent worker pool (0 = solved
+    /// inline). The portfolio's three candidates share one pool, so the
+    /// portfolio-level total is the sum across their contexts.
+    pub pool_jobs: usize,
     /// Over-budget graph builds skipped via the failure watermark.
     pub graph_fail_fastpaths: usize,
     /// Wall-clock of each pipeline stage this run, in milliseconds.
@@ -276,13 +289,21 @@ pub struct PlanContext {
     /// ([`budget::allocate`]); keyed by the component's bin identity.
     telemetry: FxHashMap<u64, ComponentTelemetry>,
     last: Option<LastPlan>,
-    /// The previous plan's stream→slot assignment, matched against by the
-    /// sticky Expand stage.
+    /// The stream→slot assignment the next Expand matches against. Normally
+    /// the previous plan's own; the portfolio overwrites it with the
+    /// *winning* candidate's after every re-plan (`seed_assignment`), and it
+    /// survives signature clears — it mirrors the deployed fleet, which a
+    /// price or config change does not tear down.
     last_assign: Option<PrevAssignment>,
     /// Persistent solve workers: spawned lazily on the first parallel
     /// Solve, parked between re-plans, and carried across signature clears
-    /// (threads are workload-independent).
-    pool: Option<Arc<WorkerPool>>,
+    /// (threads are workload-independent). The slot is shareable — the
+    /// portfolio installs one slot into all three candidate contexts so
+    /// their parallel solves run on a single pool.
+    pool: Arc<PoolSlot>,
+    /// Slack the most recent budget allocation published for the
+    /// portfolio's cross-candidate pool (`coordinator::portfolio`).
+    pub(crate) pool_out: AxisSlack,
     /// Telemetry of the most recent run through this context.
     pub stats: PipelineStats,
     /// Cumulative cross-re-plan solver counters (never reset by re-plans).
@@ -294,13 +315,29 @@ impl PlanContext {
         PlanContext::default()
     }
 
-    /// Clear cached artifacts if the catalog or config changed. The worker
-    /// pool survives — threads are not workload state.
+    /// Clear cached artifacts if the catalog or config changed. Three
+    /// things survive: the worker pool (threads are not workload state),
+    /// the previous assignment (it mirrors the *deployed fleet*, which a
+    /// price update does not tear down — it is matched only by stable
+    /// stream keys and bin labels, so entries a new catalog cannot
+    /// reproduce simply never pair, while everything still deployed keeps
+    /// its slot instead of being re-dealt), and the cumulative solver
+    /// counters (they are documented as never resetting, and the portfolio
+    /// roll-ups `pool_shared_jobs`/`budget_pooled_donated` must stay
+    /// monotonic across the very price updates the flip scenarios exercise).
     fn ensure_for(&mut self, catalog: &Catalog, config: &PlannerConfig) {
         let sig = signature(catalog, config);
         if self.signature != Some(sig) {
-            let pool = self.pool.take();
-            *self = PlanContext { signature: Some(sig), pool, ..PlanContext::default() };
+            let pool = Arc::clone(&self.pool);
+            let last_assign = self.last_assign.take();
+            let solver = std::mem::take(&mut self.solver);
+            *self = PlanContext {
+                signature: Some(sig),
+                pool,
+                last_assign,
+                solver,
+                ..PlanContext::default()
+            };
         }
     }
 
@@ -318,24 +355,38 @@ impl PlanContext {
         v.sort_by(|a, b| b.graph_nodes.cmp(&a.graph_nodes));
         v
     }
-}
 
-/// Portfolio context for [`Planner::plan_with`](super::Planner::plan_with):
-/// the GCL configuration evaluates the ARMVAC and NL plans as candidate
-/// incumbents, and each candidate keeps its own pipeline state so all three
-/// re-plan incrementally.
-#[derive(Default)]
-pub struct ReplanContext {
-    pub main: PlanContext,
-    pub alt_rtt_greedy: PlanContext,
-    pub alt_nearest_exact: PlanContext,
-}
+    /// Replace this context's worker-pool slot with a shared one
+    /// (portfolio wiring — all candidates solve on one pool).
+    pub(crate) fn share_pool(&mut self, slot: Arc<PoolSlot>) {
+        self.pool = slot;
+    }
 
-impl ReplanContext {
-    pub fn new() -> Self {
-        ReplanContext::default()
+    /// The worker-pool slot this context solves on (test-only surface: the
+    /// portfolio's sharing tests assert slot identity across contexts).
+    #[cfg(test)]
+    pub(crate) fn pool_slot(&self) -> &Arc<PoolSlot> {
+        &self.pool
+    }
+
+    /// The stream→slot assignment the next Expand will match against.
+    pub(crate) fn assignment(&self) -> Option<&PrevAssignment> {
+        self.last_assign.as_ref()
+    }
+
+    /// Seed the next Expand's matching target. The portfolio installs the
+    /// *winning* candidate's assignment into every candidate context after
+    /// each re-plan, so a later winner flip expands against the deployed
+    /// fleet instead of restarting slots fresh.
+    pub(crate) fn seed_assignment(&mut self, assign: PrevAssignment) {
+        self.last_assign = Some(assign);
     }
 }
+
+// The portfolio context moved to `coordinator::portfolio` in PR 5 (it now
+// owns shared runtime state, not just three independent contexts); the
+// re-export keeps the long-standing `pipeline::ReplanContext` path working.
+pub use super::portfolio::ReplanContext;
 
 fn hash_f64<H: Hasher>(state: &mut H, v: f64) {
     v.to_bits().hash(state);
@@ -434,6 +485,23 @@ pub fn plan_with_context(
     requests: &[StreamRequest],
     ctx: &mut PlanContext,
 ) -> Result<Plan> {
+    plan_with_pool(catalog, config, requests, ctx, AxisSlack::default())
+}
+
+/// [`plan_with_context`] with an external budget-pool share: `pool_in` is
+/// the slack the *other* portfolio candidates published last round
+/// (`coordinator::portfolio`), granted on top of this context's own donated
+/// pool — never below the static floor, and exact-complete plan costs are
+/// unaffected (budgets only decide whether the exact phase completes, not
+/// what it finds). The slack this run publishes back is left in
+/// `ctx.pool_out`.
+pub(crate) fn plan_with_pool(
+    catalog: &Catalog,
+    config: &PlannerConfig,
+    requests: &[StreamRequest],
+    ctx: &mut PlanContext,
+    pool_in: AxisSlack,
+) -> Result<Plan> {
     if requests.is_empty() {
         return Err(Error::config("no stream requests"));
     }
@@ -467,7 +535,8 @@ pub fn plan_with_context(
     // Stage 3: Solve (decomposed per region cluster, adaptive budgets,
     // delta-aware memo, persistent worker pool).
     let t_solve = Instant::now();
-    let (packing, method) = solve_stage(&problem, config, ctx, seeds.as_deref(), &mut stats)?;
+    let (packing, method) =
+        solve_stage(&problem, config, ctx, seeds.as_deref(), pool_in, &mut stats)?;
     packing.validate(&problem)?;
     stats.solve_ms = ms_since(t_solve);
 
@@ -984,6 +1053,7 @@ fn solve_stage(
     config: &PlannerConfig,
     ctx: &mut PlanContext,
     seeds: Option<&[PackedBin]>,
+    pool_in: AxisSlack,
     stats: &mut PipelineStats,
 ) -> Result<(Packing, SolveMethod)> {
     let comps = decompose(problem);
@@ -991,13 +1061,17 @@ fn solve_stage(
     let fail_fast0 = ctx.graphs.fail_fast_count();
 
     // Adaptive budgets: each component's SolveOptions from its telemetry
-    // plus the donated pool (see `coordinator::budget`). Components without
-    // history run at the static seed budgets — a cold context therefore
-    // solves exactly like the seed planner.
+    // plus the donated pool (see `coordinator::budget`), topped up by the
+    // cross-candidate share the portfolio collected from the other
+    // contexts' allocations. Components without history run at the static
+    // seed budgets — a cold context therefore solves exactly like the seed
+    // planner.
     let comp_ids: Vec<u64> = comps.iter().map(|c| component_id(problem, c)).collect();
     let history: Vec<Option<&ComponentTelemetry>> =
         comp_ids.iter().map(|id| ctx.telemetry.get(id)).collect();
-    let allocations = budget::allocate(&config.solve_opts, &history);
+    let budget::PooledAllocation { opts: allocations, drawn_nodes, published } =
+        budget::allocate_pooled(&config.solve_opts, &history, pool_in);
+    ctx.pool_out = published;
 
     // Per-component inputs: the restricted problem, its memo key, budgets,
     // delta hints, and the translated warm seeds. Memo hits skip the solver
@@ -1051,21 +1125,22 @@ fn solve_stage(
 
     // Donated budget is reported for components that actually solve this
     // run — memo hits consume nothing, so a stable re-plan reports zero.
+    // The cross-candidate draw follows the same rule.
     stats.budget_donated_nodes = pending
         .iter()
         .map(|p| p.graph_budget - config.solve_opts.max_graph_nodes)
         .sum();
+    stats.budget_pooled_nodes = pending.iter().map(|p| drawn_nodes[p.ci]).sum();
 
     let results: Vec<Result<SubSolve>> = if config.parallel_regions && jobs.len() > 1 {
         // Dispatch to the persistent pool: jobs own their subproblem, the
         // graph cache and config ride behind Arcs, and results come back
         // indexed over a channel (a panicked job surfaces as a dropped
-        // sender, mapped to a solver error below).
-        let pool = ctx
-            .pool
-            .get_or_insert_with(|| Arc::new(WorkerPool::new(WorkerPool::default_threads())))
-            .clone();
+        // sender, mapped to a solver error below). The pool slot spawns the
+        // workers on first use and may be shared across portfolio contexts.
+        let pool = ctx.pool.get();
         stats.solve_threads = jobs.len().min(pool.threads());
+        stats.pool_jobs = jobs.len();
         let cache = Arc::clone(&ctx.graphs);
         let cfg = Arc::new(config.clone());
         let n = jobs.len();
@@ -1204,7 +1279,9 @@ fn solve_stage(
     ctx.solver.lp_warm_resumes.add(stats.lp_warm_resumes as u64);
     ctx.solver.lp_cold_solves.add(stats.lp_cold_solves as u64);
     ctx.solver.budget_donated_nodes.add(stats.budget_donated_nodes as u64);
+    ctx.solver.budget_pooled_donated.add(stats.budget_pooled_nodes as u64);
     ctx.solver.graph_fail_fastpaths.add(stats.graph_fail_fastpaths as u64);
+    ctx.solver.pool_jobs.add(stats.pool_jobs as u64);
     if let Some(r) = single_result {
         return Ok(r);
     }
@@ -1335,8 +1412,9 @@ mod tests {
         let requests = worldwide_requests();
         let mut ctx = PlanContext::new();
         plan_with_context(&catalog, &cfg, &requests, &mut ctx).unwrap();
-        assert!(ctx.pool.is_some(), "parallel multi-component solve must spawn the pool");
-        let first = ctx.pool.as_ref().map(Arc::as_ptr).unwrap();
+        assert!(ctx.pool.spawned(), "parallel multi-component solve must spawn the pool");
+        let first = Arc::as_ptr(&ctx.pool.get());
+        assert!(ctx.stats.pool_jobs >= 2, "{:?}", ctx.stats);
         // A drifted re-plan re-solves on the same workers, and a config
         // change keeps them too (threads are not workload state).
         let mut drifted = requests.clone();
@@ -1346,13 +1424,46 @@ mod tests {
             15.0,
         ));
         plan_with_context(&catalog, &cfg, &drifted, &mut ctx).unwrap();
-        assert_eq!(ctx.pool.as_ref().map(Arc::as_ptr), Some(first));
+        assert_eq!(Arc::as_ptr(&ctx.pool.get()), first);
         plan_with_context(&catalog, &PlannerConfig::armvac(), &drifted, &mut ctx).unwrap();
         assert_eq!(
-            ctx.pool.as_ref().map(Arc::as_ptr),
-            Some(first),
+            Arc::as_ptr(&ctx.pool.get()),
+            first,
             "signature clear must keep the worker pool"
         );
+    }
+
+    #[test]
+    fn assignment_survives_a_signature_clear() {
+        // A price update clears every pure-function cache but must NOT
+        // orphan the deployed fleet: the previous assignment is matched by
+        // stable stream keys + bin labels only, so it stays valid across
+        // catalog changes and keeps streams on their slots.
+        let mut catalog = crate::catalog::Catalog::builtin()
+            .restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let cfg = PlannerConfig::st3();
+        let requests: Vec<StreamRequest> = (0..4)
+            .map(|i| {
+                StreamRequest::new(
+                    camera_at(i, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0),
+                    Program::Zf,
+                    1.0,
+                )
+            })
+            .collect();
+        let mut ctx = PlanContext::new();
+        let first = plan_with_context(&catalog, &cfg, &requests, &mut ctx).unwrap();
+        // Perturb a price: same offerings, new signature.
+        for o in &mut catalog.offerings {
+            o.hourly_usd *= 1.01;
+        }
+        let second = plan_with_context(&catalog, &cfg, &requests, &mut ctx).unwrap();
+        assert!(!ctx.stats.warm_started, "packing seed must not survive the clear");
+        assert_eq!(first.instances.len(), second.instances.len());
+        for (a, b) in first.instances.iter().zip(&second.instances) {
+            assert_eq!(a.slot_id, b.slot_id, "slots must survive a price update");
+            assert_eq!(a.streams, b.streams, "streams must stay on their slots");
+        }
     }
 
     #[test]

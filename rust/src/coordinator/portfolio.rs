@@ -1,0 +1,378 @@
+//! The GCL planning **portfolio** as a unified runtime.
+//!
+//! The GCL configuration continuously re-selects the cheapest of three
+//! candidate strategies ([`Planner::plan_with`]): the exact RTT-filtered
+//! solve (the paper's GCL), the ARMVAC greedy fill over the same
+//! eligibility, and the nearest-location exact solve. Before PR 5 the three
+//! candidates were fully independent [`PlanContext`]s — each owned its own
+//! solve-worker pool and its own budget slack, and each chained its own
+//! stream→slot assignment, so a (rare) winner flip restarted slots fresh
+//! and re-dealt the fleet even when the flipped-to plan was shape-identical
+//! to the deployed one. This module owns the shared runtime instead:
+//!
+//! * **one worker pool** — a [`PoolSlot`] installed into all three
+//!   contexts, so every candidate's parallel per-region solves share a
+//!   single set of parked threads (spawned lazily by whichever candidate
+//!   needs them first),
+//! * **one cross-candidate budget pool** ([`SharedBudgetPool`]) — each
+//!   candidate's allocation publishes its leftover predicted slack
+//!   (`budget::allocate_pooled`), and the other candidates draw on it next
+//!   round. In practice the nearest-exact alternate solves a restricted
+//!   (cheaper) problem, so its donated slack funds the main exact solve —
+//!   the cross-strategy amortization argument of Chameleon (Jiang et al.)
+//!   applied to solver budgets,
+//! * **winner-flip slot continuity** — after every re-plan the *winning*
+//!   candidate's stream→slot assignment is seeded into all three contexts,
+//!   so whichever candidate wins the next round expands against the
+//!   deployed fleet. An unchanged workload therefore yields zero
+//!   provision/terminate across a forced winner flip, and identical plans
+//!   keep identical instance ids end to end (`CloudSim::apply_plan`
+//!   reconciles by the same slot ids).
+//!
+//! None of this changes plan *costs* where exact phases complete: pooled
+//! budgets only grow (floored at the static seed, and an exact optimum is
+//! budget-independent), assignment seeding changes which concrete stream
+//! lands on which concrete instance but never the packing, and the worker
+//! pool is pure mechanism — so portfolio plans stay bit-identical to the
+//! three-independent-contexts baseline wherever exact phases complete
+//! (property-tested, together with the flip-churn invariants, in
+//! `tests/properties.rs`).
+//!
+//! [`PlanContext`]: super::pipeline::PlanContext
+//! [`Planner::plan_with`]: super::Planner::plan_with
+//! [`PoolSlot`]: crate::util::pool::PoolSlot
+
+use super::budget::AxisSlack;
+use super::pipeline::{plan_with_pool, PlanContext};
+use super::{LocationPolicy, Plan, Planner, PlannerConfig, SolverKind};
+use crate::cameras::StreamRequest;
+use crate::error::Result;
+use crate::util::pool::PoolSlot;
+use std::sync::Arc;
+
+/// One candidate strategy of the GCL portfolio.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Candidate {
+    /// The configured strategy itself (GCL: RTT-filtered + exact).
+    Main,
+    /// ARMVAC's cheapest-instance greedy fill over the same RTT-filtered
+    /// eligibility.
+    RttGreedy,
+    /// Nearest-location exact solve.
+    NearestExact,
+}
+
+impl Candidate {
+    pub const ALL: [Candidate; 3] =
+        [Candidate::Main, Candidate::RttGreedy, Candidate::NearestExact];
+
+    fn index(self) -> usize {
+        match self {
+            Candidate::Main => 0,
+            Candidate::RttGreedy => 1,
+            Candidate::NearestExact => 2,
+        }
+    }
+}
+
+/// Cross-candidate budget pool: the slack each candidate's most recent
+/// allocation published. A candidate allocating budgets draws on the
+/// *other* candidates' donations — never its own, which is already part of
+/// its internal pool. Donations are replaced wholesale every time a
+/// candidate plans, so a stale entry (e.g. published under an old catalog)
+/// survives at most one re-plan; slack is structural (graph nodes, ILP
+/// sizes), not price-dependent, so even that round is merely conservative.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SharedBudgetPool {
+    donated: [AxisSlack; 3],
+}
+
+impl SharedBudgetPool {
+    /// The share available to `who` this round: the other candidates' last
+    /// published donations, summed.
+    pub fn available_for(&self, who: Candidate) -> AxisSlack {
+        let mut sum = AxisSlack::default();
+        for c in Candidate::ALL {
+            if c != who {
+                sum = sum.plus(&self.donated[c.index()]);
+            }
+        }
+        sum
+    }
+
+    /// Record the slack `who`'s latest allocation left over.
+    pub fn publish(&mut self, who: Candidate, slack: AxisSlack) {
+        self.donated[who.index()] = slack;
+    }
+}
+
+/// Portfolio planning state for [`Planner::plan_with`]: one pipeline
+/// context per candidate plus the shared runtime — the worker-pool slot all
+/// three contexts solve on, the cross-candidate budget pool, and the
+/// winner bookkeeping behind flip continuity.
+///
+/// [`Planner::plan_with`]: super::Planner::plan_with
+pub struct ReplanContext {
+    pub main: PlanContext,
+    pub alt_rtt_greedy: PlanContext,
+    pub alt_nearest_exact: PlanContext,
+    /// Cross-candidate donated budget slack (see [`SharedBudgetPool`]).
+    pub budget_pool: SharedBudgetPool,
+    /// The candidate whose plan won the most recent re-plan.
+    pub last_winner: Option<Candidate>,
+    /// Winner changes observed across consecutive re-plans.
+    pub winner_flips: u64,
+}
+
+impl Default for ReplanContext {
+    fn default() -> Self {
+        ReplanContext::new()
+    }
+}
+
+impl ReplanContext {
+    pub fn new() -> Self {
+        // One worker-pool slot shared by every candidate: whichever context
+        // solves in parallel first spawns the threads all of them reuse.
+        let slot = Arc::new(PoolSlot::new());
+        let mut main = PlanContext::new();
+        let mut alt_rtt_greedy = PlanContext::new();
+        let mut alt_nearest_exact = PlanContext::new();
+        main.share_pool(Arc::clone(&slot));
+        alt_rtt_greedy.share_pool(Arc::clone(&slot));
+        alt_nearest_exact.share_pool(slot);
+        ReplanContext {
+            main,
+            alt_rtt_greedy,
+            alt_nearest_exact,
+            budget_pool: SharedBudgetPool::default(),
+            last_winner: None,
+            winner_flips: 0,
+        }
+    }
+
+    /// Total jobs the candidates have dispatched to the shared worker pool
+    /// (the cumulative `pool_jobs` roll-up across all three contexts —
+    /// they share one pool, so this is that pool's job count).
+    pub fn pool_shared_jobs(&self) -> u64 {
+        self.main.solver.pool_jobs.get()
+            + self.alt_rtt_greedy.solver.pool_jobs.get()
+            + self.alt_nearest_exact.solver.pool_jobs.get()
+    }
+
+    /// Total arc-flow node budget the candidates have drawn from the
+    /// cross-candidate pool (beyond their isolated allocations).
+    pub fn budget_pooled_donated(&self) -> u64 {
+        self.main.solver.budget_pooled_donated.get()
+            + self.alt_rtt_greedy.solver.budget_pooled_donated.get()
+            + self.alt_nearest_exact.solver.budget_pooled_donated.get()
+    }
+
+    fn ctx_of(&self, who: Candidate) -> &PlanContext {
+        match who {
+            Candidate::Main => &self.main,
+            Candidate::RttGreedy => &self.alt_rtt_greedy,
+            Candidate::NearestExact => &self.alt_nearest_exact,
+        }
+    }
+}
+
+/// Run one portfolio re-plan through `ctx` and return the cheapest
+/// candidate's plan (strictly-cheaper alternates win; ties keep the main
+/// strategy, so an exact-complete GCL never flips away).
+///
+/// Non-portfolio configurations (anything but RTT-filtered + exact) plan
+/// only the main context — exactly [`plan_with_context`]'s semantics.
+///
+/// [`plan_with_context`]: super::pipeline::plan_with_context
+pub fn plan(
+    planner: &Planner,
+    requests: &[StreamRequest],
+    ctx: &mut ReplanContext,
+) -> Result<Plan> {
+    let pool_in = ctx.budget_pool.available_for(Candidate::Main);
+    let mut best =
+        plan_with_pool(&planner.catalog, &planner.config, requests, &mut ctx.main, pool_in)?;
+    ctx.budget_pool.publish(Candidate::Main, ctx.main.pool_out);
+    let mut winner = Candidate::Main;
+
+    if planner.config.location == LocationPolicy::RttFiltered
+        && planner.config.solver == SolverKind::Exact
+    {
+        let alts: [(Candidate, &mut PlanContext, LocationPolicy, SolverKind); 2] = [
+            (
+                Candidate::RttGreedy,
+                &mut ctx.alt_rtt_greedy,
+                LocationPolicy::RttFiltered,
+                SolverKind::ArmvacGreedy,
+            ),
+            (
+                Candidate::NearestExact,
+                &mut ctx.alt_nearest_exact,
+                LocationPolicy::NearestOnly,
+                SolverKind::Exact,
+            ),
+        ];
+        for (cand, alt_ctx, location, solver) in alts {
+            let alt_config = PlannerConfig {
+                hardware: planner.config.hardware,
+                location,
+                solver,
+                headroom: planner.config.headroom,
+                solve_opts: planner.config.solve_opts.clone(),
+                parallel_regions: planner.config.parallel_regions,
+            };
+            let pool_in = ctx.budget_pool.available_for(cand);
+            match plan_with_pool(&planner.catalog, &alt_config, requests, alt_ctx, pool_in) {
+                Ok(p) => {
+                    ctx.budget_pool.publish(cand, alt_ctx.pool_out);
+                    if p.cost_per_hour < best.cost_per_hour {
+                        best = p;
+                        winner = cand;
+                    }
+                }
+                // A failing candidate donates nothing this round — without
+                // this, its last successful round's slack would linger in
+                // the pool indefinitely (the one-round-staleness invariant
+                // the pool's documentation promises).
+                Err(_) => ctx.budget_pool.publish(cand, AxisSlack::default()),
+            }
+        }
+
+        // Winner-flip slot continuity: the winner's plan is what gets
+        // deployed, so every candidate's next Expand must match against
+        // *its* assignment — not the private chain each context grew on its
+        // own. With this seed, a flip onto a shape-identical plan
+        // reproduces the previous fleet assignment bit for bit. The winner
+        // already holds its own assignment, so only the two losers are
+        // (re)seeded — the assignment is fleet-sized.
+        if let Some(assign) = ctx.ctx_of(winner).assignment().cloned() {
+            match winner {
+                Candidate::Main => {
+                    ctx.alt_rtt_greedy.seed_assignment(assign.clone());
+                    ctx.alt_nearest_exact.seed_assignment(assign);
+                }
+                Candidate::RttGreedy => {
+                    ctx.main.seed_assignment(assign.clone());
+                    ctx.alt_nearest_exact.seed_assignment(assign);
+                }
+                Candidate::NearestExact => {
+                    ctx.main.seed_assignment(assign.clone());
+                    ctx.alt_rtt_greedy.seed_assignment(assign);
+                }
+            }
+        }
+        if let Some(prev) = ctx.last_winner {
+            if prev != winner {
+                ctx.winner_flips += 1;
+            }
+        }
+    }
+    ctx.last_winner = Some(winner);
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cameras::{camera_at, StreamRequest};
+    use crate::catalog::Catalog;
+    use crate::geo::cities;
+    use crate::profiles::{Program, Resolution};
+
+    fn worldwide_requests() -> Vec<StreamRequest> {
+        let mut reqs = Vec::new();
+        for (i, city) in [cities::CHICAGO, cities::NEW_YORK].iter().enumerate() {
+            reqs.push(StreamRequest::new(
+                camera_at(i as u64, "us", *city, Resolution::VGA, 30.0),
+                Program::Zf,
+                15.0,
+            ));
+        }
+        reqs.push(StreamRequest::new(
+            camera_at(100, "asia", cities::TOKYO, Resolution::VGA, 30.0),
+            Program::Zf,
+            15.0,
+        ));
+        reqs
+    }
+
+    #[test]
+    fn contexts_share_one_worker_pool_slot() {
+        let ctx = ReplanContext::new();
+        assert!(Arc::ptr_eq(ctx.main.pool_slot(), ctx.alt_rtt_greedy.pool_slot()));
+        assert!(Arc::ptr_eq(ctx.main.pool_slot(), ctx.alt_nearest_exact.pool_slot()));
+        assert!(!ctx.main.pool_slot().spawned(), "pool must stay lazy until a solve");
+    }
+
+    #[test]
+    fn shared_pool_excludes_own_donation() {
+        let mut pool = SharedBudgetPool::default();
+        let a = AxisSlack { graph_nodes: 100, milp_vars: 10, milp_nodes: 20 };
+        let b = AxisSlack { graph_nodes: 7, milp_vars: 1, milp_nodes: 2 };
+        pool.publish(Candidate::Main, a);
+        pool.publish(Candidate::NearestExact, b);
+        assert_eq!(pool.available_for(Candidate::RttGreedy), a.plus(&b));
+        assert_eq!(pool.available_for(Candidate::Main), b, "own slack excluded");
+        assert_eq!(pool.available_for(Candidate::NearestExact), a);
+        // Re-publishing replaces, not accumulates.
+        pool.publish(Candidate::Main, AxisSlack::default());
+        assert_eq!(pool.available_for(Candidate::NearestExact), AxisSlack::default());
+    }
+
+    #[test]
+    fn portfolio_replan_runs_all_candidates_on_the_shared_pool() {
+        let planner =
+            Planner::new(Catalog::builtin(), crate::coordinator::PlannerConfig::gcl());
+        let mut ctx = ReplanContext::new();
+        let requests = worldwide_requests();
+        let p = plan(&planner, &requests, &mut ctx).unwrap();
+        assert!(p.cost_per_hour > 0.0);
+        assert_eq!(ctx.last_winner, Some(Candidate::Main), "exact GCL wins ties");
+        assert_eq!(ctx.winner_flips, 0);
+        // Two RTT-disjoint clusters => every candidate dispatched >= 2 jobs
+        // to the one shared pool.
+        assert!(ctx.main.pool_slot().spawned());
+        assert!(
+            ctx.pool_shared_jobs() >= 6,
+            "three candidates x two components: {}",
+            ctx.pool_shared_jobs()
+        );
+    }
+
+    #[test]
+    fn winner_assignment_is_seeded_into_every_candidate() {
+        let planner =
+            Planner::new(Catalog::builtin(), crate::coordinator::PlannerConfig::gcl());
+        let mut ctx = ReplanContext::new();
+        let requests = worldwide_requests();
+        plan(&planner, &requests, &mut ctx).unwrap();
+        let main = ctx.main.assignment().expect("winner assignment seeded");
+        for alt in [&ctx.alt_rtt_greedy, &ctx.alt_nearest_exact] {
+            let a = alt.assignment().expect("alternates seeded too");
+            assert_eq!(a.slots.len(), main.slots.len());
+            for (x, y) in a.slots.iter().zip(&main.slots) {
+                assert_eq!(x.slot_id, y.slot_id);
+                assert_eq!(x.label, y.label);
+                assert_eq!(x.streams, y.streams);
+            }
+        }
+    }
+
+    #[test]
+    fn non_portfolio_config_plans_main_only() {
+        let catalog = Catalog::builtin()
+            .restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let planner = Planner::new(catalog, crate::coordinator::PlannerConfig::st3());
+        let mut ctx = ReplanContext::new();
+        let requests = vec![StreamRequest::new(
+            camera_at(0, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0),
+            Program::Zf,
+            1.0,
+        )];
+        plan(&planner, &requests, &mut ctx).unwrap();
+        assert_eq!(ctx.last_winner, Some(Candidate::Main));
+        assert!(ctx.alt_rtt_greedy.assignment().is_none(), "alternates untouched");
+        assert!(ctx.alt_nearest_exact.assignment().is_none());
+    }
+}

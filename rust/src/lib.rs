@@ -86,6 +86,41 @@
 //!   uncertifiable ones fall back to the cold path under the same budgets,
 //!   so warm results are exactly as optimal as cold ones.
 //!
+//! ## The unified portfolio runtime (PR 5)
+//!
+//! The GCL configuration evaluates a three-candidate portfolio every
+//! re-plan (exact RTT-filtered, ARMVAC-greedy, nearest-exact) and adopts
+//! the cheapest plan. [`coordinator::portfolio`] runs the candidates on
+//! *shared* infrastructure: one lazily-spawned solve-worker pool
+//! ([`util::pool::PoolSlot`]) spans all three contexts, each candidate's
+//! budget allocation publishes its predicted slack into a cross-candidate
+//! pool ([`coordinator::budget::allocate_pooled`] — the alternates' donated
+//! slack funds the main exact solve, floored at the static seed and never
+//! below the isolated allocation), and after every re-plan the *winning*
+//! candidate's stream→slot assignment is seeded into all three contexts,
+//! so a winner flip expands against the deployed fleet: an unchanged
+//! workload yields zero provision/terminate across a forced flip, and
+//! identical plans keep identical instance ids. Plan costs stay
+//! bit-identical to the three-independent-contexts baseline wherever exact
+//! phases complete (property-tested).
+//!
+//! ## `BENCH_adaptive.json` `portfolio` object (written by `bench_adaptive`)
+//!
+//! * `flip_churn_ratio` — churn ratio of the forced winner-flip re-plan on
+//!   an unchanged workload (asserted ≤ `sticky_churn_ratio` + 0.05),
+//! * `sticky_churn_ratio` — the same-winner control re-plan's churn ratio,
+//! * `winner_flips` — winner changes the scenario observed (asserted ≥ 1),
+//! * `flip_provisioned` / `flip_terminated` — fleet changes on the flip
+//!   re-plan (asserted 0: continuity keeps the deployed fleet),
+//! * `pool_shared_jobs` — solve jobs all three candidates dispatched to
+//!   the one shared worker pool (asserted > 0),
+//! * `budget_pooled_donated` — arc-flow node budget drawn from the
+//!   cross-candidate donated pool beyond the isolated allocations
+//!   (asserted > 0).
+//!
+//! The scenarios live in [`bench::portfolio`], so `tests/integration.rs`
+//! schema-checks exactly the fields the bench writes.
+//!
 //! ## `BENCH_scale.json` (written by `bench_scale`, gated in CI)
 //!
 //! * `parity[]` — per 10k-stream scenario: `streams`, `fps`, `cold_ms`,

@@ -163,8 +163,16 @@ pub struct SolverMetrics {
     /// Extra arc-flow node budget granted above the static seed by the
     /// adaptive allocator (sum over re-plans).
     pub budget_donated_nodes: Counter,
+    /// Arc-flow node budget drawn from the portfolio's *cross-candidate*
+    /// donated pool — grants beyond what this context's own isolated
+    /// allocation would have given (`coordinator::portfolio`).
+    pub budget_pooled_donated: Counter,
     /// Over-budget graph builds short-circuited by the failure watermark.
     pub graph_fail_fastpaths: Counter,
+    /// Subproblems dispatched to the persistent worker pool. The portfolio
+    /// shares one pool across its three candidate contexts, so
+    /// `ReplanContext::pool_shared_jobs` sums this counter over all of them.
+    pub pool_jobs: Counter,
 }
 
 impl SolverMetrics {
@@ -176,7 +184,7 @@ impl SolverMetrics {
     pub fn summary(&self) -> String {
         format!(
             "subproblems={} exact={} fallback={} memo={} delta={} lp_warm={} lp_cold={} \
-             bnb_nodes={} donated_nodes={} fail_fast={}",
+             bnb_nodes={} donated_nodes={} pooled_nodes={} fail_fast={} pool_jobs={}",
             self.subproblems.get(),
             self.exact_solves.get(),
             self.heuristic_fallbacks.get(),
@@ -186,7 +194,9 @@ impl SolverMetrics {
             self.lp_cold_solves.get(),
             self.bnb_nodes.get(),
             self.budget_donated_nodes.get(),
+            self.budget_pooled_donated.get(),
             self.graph_fail_fastpaths.get(),
+            self.pool_jobs.get(),
         )
     }
 }
@@ -327,11 +337,15 @@ mod tests {
         m.heuristic_fallbacks.inc();
         m.delta_reuses.add(2);
         m.budget_donated_nodes.add(12_000);
+        m.budget_pooled_donated.add(3_000);
+        m.pool_jobs.add(9);
         let s = m.summary();
         assert!(s.contains("subproblems=6"));
         assert!(s.contains("fallback=1"));
         assert!(s.contains("delta=2"));
         assert!(s.contains("donated_nodes=12000"));
+        assert!(s.contains("pooled_nodes=3000"));
+        assert!(s.contains("pool_jobs=9"));
     }
 
     #[test]

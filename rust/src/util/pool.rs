@@ -14,7 +14,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -85,6 +85,39 @@ impl WorkerPool {
     }
 }
 
+/// A lazily-spawned, shareable slot for a [`WorkerPool`].
+///
+/// The staged planner wants two things at once: pool threads spawned only
+/// when a parallel solve actually happens (a serial or single-component
+/// planner should never pay thread startup), and *one* pool shared by every
+/// planning context of a portfolio (`coordinator::portfolio`) instead of one
+/// pool per candidate. A `PoolSlot` provides both — contexts hold
+/// `Arc<PoolSlot>` clones, and the first parallel solve through any of them
+/// spawns the workers that all of them then share.
+#[derive(Default)]
+pub struct PoolSlot {
+    slot: OnceLock<Arc<WorkerPool>>,
+}
+
+impl PoolSlot {
+    pub fn new() -> Self {
+        PoolSlot::default()
+    }
+
+    /// The shared pool, spawning its workers on first use.
+    pub fn get(&self) -> Arc<WorkerPool> {
+        Arc::clone(
+            self.slot
+                .get_or_init(|| Arc::new(WorkerPool::new(WorkerPool::default_threads()))),
+        )
+    }
+
+    /// True once some parallel solve has spawned the workers.
+    pub fn spawned(&self) -> bool {
+        self.slot.get().is_some()
+    }
+}
+
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         self.shared.queue.lock().unwrap().1 = true;
@@ -149,6 +182,21 @@ mod tests {
         drop(tx);
         assert_eq!(rx.iter().count(), 8);
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn pool_slot_is_lazy_and_shared() {
+        let slot = Arc::new(PoolSlot::new());
+        assert!(!slot.spawned(), "no workers before the first get()");
+        let a = Arc::clone(&slot);
+        let b = Arc::clone(&slot);
+        let pa = a.get();
+        assert!(slot.spawned());
+        let pb = b.get();
+        assert!(Arc::ptr_eq(&pa, &pb), "every holder must see one pool");
+        let (tx, rx) = mpsc::channel();
+        pb.execute(move || tx.send(7u8).unwrap());
+        assert_eq!(rx.recv().unwrap(), 7);
     }
 
     #[test]

@@ -532,6 +532,297 @@ fn prop_budget_allocation_floors_at_the_static_seed() {
     );
 }
 
+/// Pooled budget allocation extends the PR-3 floor property across
+/// planning contexts: with a random external (cross-candidate) share,
+/// every component still floors at the static seed, every pooled budget
+/// dominates the isolated allocation on every axis (donation can only
+/// add), a zero external share reproduces `allocate` exactly, and the
+/// published donation never exceeds what this round's own donors left.
+#[test]
+fn prop_budget_pool_never_floors_below_seed_and_dominates_isolated() {
+    use camflow::coordinator::budget::{allocate_pooled, AxisSlack};
+    check(
+        0xB07ED,
+        60,
+        |rng: &mut Rng| {
+            let n = 1 + rng.index(8);
+            let mut v = vec![n as u64];
+            for _ in 0..n {
+                v.push(rng.index(3) as u64); // 0 = no history, 1 = easy, 2 = hard
+                v.push(rng.index(20_000) as u64); // usage
+            }
+            v.push(rng.index(50_000) as u64); // external graph-node share
+            v
+        },
+        |enc: &Vec<u64>| {
+            let Some(&n) = enc.first() else { return Ok(()) };
+            let n = n as usize;
+            if enc.len() < 2 + 2 * n {
+                return Ok(()); // shrunk encoding, nothing to check
+            }
+            let static_opts = SolveOptions::default();
+            let telemetry: Vec<Option<ComponentTelemetry>> = (0..n)
+                .map(|i| {
+                    let kind = enc[1 + i * 2];
+                    let usage = enc[2 + i * 2] as usize;
+                    match kind {
+                        0 => None,
+                        1 => Some(ComponentTelemetry {
+                            graph_nodes: usage,
+                            milp_vars: usage / 10,
+                            milp_nodes: usage / 10,
+                            exact: true,
+                            proven: true,
+                            budget_exhausted: false,
+                            graph_budget: static_opts.max_graph_nodes,
+                            var_budget: static_opts.max_milp_vars,
+                            node_budget: static_opts.milp.max_nodes,
+                        }),
+                        _ => Some(ComponentTelemetry {
+                            graph_nodes: usage,
+                            exact: false,
+                            budget_exhausted: true,
+                            graph_budget: static_opts.max_graph_nodes,
+                            var_budget: static_opts.max_milp_vars,
+                            node_budget: static_opts.milp.max_nodes,
+                            ..Default::default()
+                        }),
+                    }
+                })
+                .collect();
+            let history: Vec<Option<&ComponentTelemetry>> =
+                telemetry.iter().map(Option::as_ref).collect();
+            let external =
+                AxisSlack { graph_nodes: enc[enc.len() - 1] as usize, ..AxisSlack::default() };
+            let iso = budget::allocate(&static_opts, &history);
+            let pooled = allocate_pooled(&static_opts, &history, external);
+            if pooled.opts.len() != n || pooled.drawn_nodes.len() != n {
+                return Err("allocation count mismatch".into());
+            }
+            let mut donor_slack = 0usize;
+            for t in telemetry.iter().flatten() {
+                if !t.is_hard() {
+                    donor_slack += static_opts
+                        .max_graph_nodes
+                        .saturating_sub(t.graph_nodes.saturating_mul(2));
+                }
+            }
+            for (i, (p, s)) in pooled.opts.iter().zip(&iso).enumerate() {
+                if p.max_graph_nodes < static_opts.max_graph_nodes
+                    || p.max_milp_vars < static_opts.max_milp_vars
+                    || p.milp.max_nodes < static_opts.milp.max_nodes
+                {
+                    return Err(format!("component {i} allocated below the static floor"));
+                }
+                if p.max_graph_nodes < s.max_graph_nodes
+                    || p.max_milp_vars < s.max_milp_vars
+                    || p.milp.max_nodes < s.milp.max_nodes
+                {
+                    return Err(format!(
+                        "pooled allocation below isolated for component {i}: \
+                         pooled {} vs isolated {}",
+                        p.max_graph_nodes, s.max_graph_nodes
+                    ));
+                }
+                if p.max_graph_nodes != s.max_graph_nodes + pooled.drawn_nodes[i] {
+                    return Err(format!("draw accounting broken for component {i}"));
+                }
+            }
+            if pooled.published.graph_nodes > donor_slack {
+                return Err(format!(
+                    "published {} exceeds donor slack {donor_slack}",
+                    pooled.published.graph_nodes
+                ));
+            }
+            // A zero external share must reproduce `allocate` bit for bit.
+            let zero = allocate_pooled(&static_opts, &history, AxisSlack::default());
+            for (a, b) in zero.opts.iter().zip(&iso) {
+                if a.max_graph_nodes != b.max_graph_nodes
+                    || a.max_milp_vars != b.max_milp_vars
+                    || a.milp.max_nodes != b.milp.max_nodes
+                {
+                    return Err("zero-external pooled allocation diverged from allocate".into());
+                }
+            }
+            if zero.drawn_nodes.iter().any(|&d| d != 0) {
+                return Err("zero-external allocation cannot draw".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Portfolio winner flips preserve the deployed assignment: randomized
+/// Fig-3-S1-shaped workloads where a price perturbation forces the GCL
+/// portfolio's winner to flip to the nearest-exact candidate on an
+/// *unchanged* workload. The flipped-to plan is shape-identical to the
+/// deployed one, so `streams_moved` must count only the packing diff —
+/// zero — and the simulator must keep identical `InstanceId`s with zero
+/// provision/terminate across the flip.
+#[test]
+fn prop_winner_flip_preserves_assignment() {
+    // The scenario pieces (priced two-region catalog, S1 demand shape,
+    // probe calibration) are the bench's own (`camflow::bench::portfolio`),
+    // so the property and `bench_adaptive`'s portfolio section cannot
+    // drift apart.
+    use camflow::bench::portfolio::{calibrated_budget, flip_catalog, s1_workload};
+    use camflow::cloudsim::CloudSim;
+    use camflow::coordinator::adaptive::AdaptiveManager;
+    use camflow::coordinator::portfolio::Candidate;
+    check(
+        0xF11B,
+        6,
+        |rng: &mut Rng| {
+            vec![
+                2 + rng.index(2) as u64,                           // n_zf in 2..=3
+                rng.next_u64(),                                    // departure pick
+                (rng.range_f64(2.0, 8.0) * 1000.0).round() as u64, // expensive c4
+                (rng.range_f64(0.36, 0.50) * 1000.0).round() as u64, // cheap c4
+            ]
+        },
+        |enc: &Vec<u64>| {
+            if enc.len() < 4 {
+                return Ok(()); // shrunk encoding, nothing to check
+            }
+            let n_zf = enc[0] as usize;
+            let expensive = enc[2] as f64 / 1000.0;
+            let cheap = enc[3] as f64 / 1000.0;
+            if !(2..=3).contains(&n_zf) || !(1.0..=10.0).contains(&expensive)
+                || !(0.36..=0.50).contains(&cheap)
+            {
+                return Ok(()); // out-of-band shrunk values
+            }
+            let full = s1_workload(n_zf);
+            // One random stream departs between rounds 1 and 2; rounds 2-3
+            // then plan the survivors (at least two remain, so the CPU fill
+            // stays strictly costlier than the single GPU box after the
+            // price restore).
+            let mut survivors = full.clone();
+            survivors.remove(enc[1] as usize % survivors.len());
+
+            // Calibrate the graph budget on the *survivor* workload — the
+            // one the flip round plans: the nearest-exact candidate
+            // completes exactly on it while the two-region problem, which
+            // builds every graph twice against the same cumulative budget,
+            // is guaranteed to wall.
+            let catalog = flip_catalog(expensive);
+            let budget = calibrated_budget(&catalog, &survivors);
+            let mut cfg = PlannerConfig::gcl();
+            cfg.solve_opts.max_graph_nodes = budget;
+
+            let mut mgr = AdaptiveManager::new(Planner::new(catalog.clone(), cfg));
+            let mut sim = CloudSim::new(catalog);
+
+            // Round 1 — GPU-favourable prices: every candidate (exact or
+            // budget-walled heuristic alike) lands on the single GPU box;
+            // the tie keeps the main GCL strategy.
+            let r1 = mgr.replan(full.clone()).map_err(|e| e.to_string())?;
+            if r1.winner != Some(Candidate::Main) {
+                return Err(format!("round 1 must keep GCL: {r1:?}"));
+            }
+            sim.apply_plan(mgr.current_plan().unwrap()).map_err(|e| e.to_string())?;
+
+            // Round 2 — the departure drift.
+            let r2 = mgr.replan(survivors.clone()).map_err(|e| e.to_string())?;
+            if r2.winner_flipped {
+                return Err(format!("drift round must not flip: {r2:?}"));
+            }
+            sim.apply_plan(mgr.current_plan().unwrap()).map_err(|e| e.to_string())?;
+            let ids_before: Vec<_> = sim.alive().iter().map(|i| i.id).collect();
+
+            // Round 3 — price perturbation only, workload unchanged: the
+            // cheap CPU box blinds every greedy rule while the calibrated
+            // budget keeps GCL's exact phase walled — the nearest-exact
+            // candidate wins. Continuity must keep the fleet byte-stable.
+            mgr.planner.catalog = flip_catalog(cheap);
+            let r3 = mgr.replan(survivors.clone()).map_err(|e| e.to_string())?;
+            if !r3.winner_flipped || r3.winner != Some(Candidate::NearestExact) {
+                return Err(format!("price perturbation must flip the winner: {r3:?}"));
+            }
+            if (r3.cost_after - 0.65).abs() > 1e-9 {
+                return Err(format!("flipped plan must keep the GPU box: {r3:?}"));
+            }
+            if r3.streams_moved != 0 {
+                return Err(format!(
+                    "identical plans across the flip moved {} streams",
+                    r3.streams_moved
+                ));
+            }
+            if r3.streams_surviving != survivors.len() {
+                return Err(format!("survivor accounting broken: {r3:?}"));
+            }
+            if !r3.provision.is_empty() || !r3.terminate.is_empty() {
+                return Err(format!("flip changed the fleet: {r3:?}"));
+            }
+            sim.apply_plan(mgr.current_plan().unwrap()).map_err(|e| e.to_string())?;
+            let ids_after: Vec<_> = sim.alive().iter().map(|i| i.id).collect();
+            if ids_before != ids_after {
+                return Err(format!(
+                    "identical plans must keep identical instance ids: \
+                     {ids_before:?} vs {ids_after:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The unified portfolio runtime never changes what is planned, only how
+/// fast and how stably: warm portfolio re-plans (shared worker pool,
+/// cross-candidate budget pool, winner-assignment seeding, accumulated
+/// telemetry) must cost exactly what a cold plan through fresh contexts —
+/// the three-independent-contexts baseline — costs wherever both exact
+/// phases complete, and never more anywhere (extra budget and warm seeds
+/// can only improve a heuristic fallback).
+#[test]
+fn prop_portfolio_runtime_preserves_plan_costs() {
+    use camflow::cameras::scenarios;
+    use camflow::coordinator::adaptive::AdaptiveManager;
+    use camflow::coordinator::Plan;
+    let catalog = Catalog::builtin();
+    let exact_complete = |p: &Plan| {
+        p.pipeline.components_fallback == 0
+            && p.pipeline.components_proven == p.pipeline.components
+    };
+    check(
+        0x5EED5,
+        5,
+        |rng: &mut Rng| vec![rng.next_u64()],
+        |seed: &Vec<u64>| {
+            let Some(&s) = seed.first() else { return Ok(()) };
+            let mut rng = Rng::new(s);
+            let planner = Planner::new(catalog.clone(), PlannerConfig::gcl());
+            let mut mgr = AdaptiveManager::new(planner.clone());
+            for step in 0..3u64 {
+                let n = 8 + rng.index(8);
+                let fps = rng.range_f64(1.0, 6.0);
+                let requests = scenarios::fig6_workload(n, fps, s ^ step);
+                let warm = mgr.replan(requests.clone()).map_err(|e| e.to_string())?;
+                let cold = planner.plan(&requests).map_err(|e| e.to_string())?;
+                if warm.cost_after > cold.cost_per_hour + 1e-9 {
+                    return Err(format!(
+                        "step {step}: portfolio runtime cost {} worse than the \
+                         independent-context baseline {}",
+                        warm.cost_after, cold.cost_per_hour
+                    ));
+                }
+                let warm_plan = mgr.current_plan().unwrap();
+                if exact_complete(warm_plan)
+                    && exact_complete(&cold)
+                    && (warm.cost_after - cold.cost_per_hour).abs() > 1e-9
+                {
+                    return Err(format!(
+                        "step {step}: exact-complete portfolio cost {} diverged from \
+                         the baseline {}",
+                        warm.cost_after, cold.cost_per_hour
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// The dirty-tracking front-end is bit-identical to a cold full rebuild.
 /// Random churn (add / remove / move / fps-change) over a seeded fleet,
 /// re-planned through one warm context: after every churn step the warm
