@@ -1,0 +1,223 @@
+//! LP core microbenchmark: the revised (factorized) simplex against the
+//! dense-tableau reference on arc-flow-shaped LPs.
+//!
+//! Three component classes mirror the exact solver's real workloads:
+//!   * `paper_scale` — a dozen coverage rows, tens of columns (the Fig 3-6
+//!     scenarios, where either core is effectively instant),
+//!   * `metro` — tens of rows, hundreds of columns (city-scale clusters),
+//!   * `wide_sparse` — the *largest exact component class*: ~60 rows by
+//!     ~1200 columns with ≤4 nonzeros per column, the shape arc-flow graphs
+//!     produce at 10k-stream scale. Here a dense pivot sweeps the full
+//!     `O(m·n)` tableau while a revised pivot costs `O(nnz + m + |etas|)`,
+//!     so this class is the acceptance bar: revised throughput
+//!     (iterations/sec) must be at least dense throughput.
+//!
+//! Every timed LP is also checked for dense==revised parity (outcome
+//! variant + objective bits), so the bench doubles as a large-sample parity
+//! sweep on top of the property suite.
+//!
+//! Emits `BENCH_solver.json` (schema documented in `lib.rs`), including the
+//! `calibration` section the branch-and-bound node-budget guard's
+//! `NODE_COST_ROWS_WEIGHT` constant is derived from
+//! (`coordinator::budget::milp_node_cost`).
+
+use camflow::bench::{Bench, Table};
+use camflow::coordinator::budget::NODE_COST_ROWS_WEIGHT;
+use camflow::solver::{
+    solve_lp_dense_with_stats, solve_lp_with_stats, Lp, LpOutcome, LpStats, Op,
+};
+use camflow::util::json::Value;
+use camflow::util::Rng;
+
+/// One component class: `count` random covering LPs of the given shape.
+struct Class {
+    name: &'static str,
+    rows: usize,
+    cols: usize,
+    nnz_per_col: usize,
+    count: usize,
+}
+
+const CLASSES: [Class; 3] = [
+    Class { name: "paper_scale", rows: 12, cols: 80, nnz_per_col: 3, count: 40 },
+    Class { name: "metro", rows: 30, cols: 400, nnz_per_col: 4, count: 12 },
+    Class { name: "wide_sparse", rows: 60, cols: 1200, nnz_per_col: 4, count: 6 },
+];
+
+/// A random covering LP: minimize positive costs over `Ge` rows with
+/// nonnegative sparse columns — always feasible (scale x up) and bounded
+/// (costs are positive), so both cores report `Optimal` and the timing
+/// measures real pivot work, not early exits. Coefficients live on a 0.25
+/// grid, far from the solver's epsilon.
+fn covering_lp(rng: &mut Rng, rows: usize, cols: usize, nnz_per_col: usize) -> Lp {
+    let mut lp = Lp::new(cols);
+    let mut row_coeffs: Vec<Vec<(usize, f64)>> = vec![Vec::new(); rows];
+    for j in 0..cols {
+        lp.set_objective(j, 0.5 + rng.index(11) as f64 * 0.25); // [0.5, 3.0]
+        let nnz = 1 + rng.index(nnz_per_col);
+        let mut touched = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            let r = rng.index(rows);
+            if touched.contains(&r) {
+                continue; // keep one entry per (row, column)
+            }
+            touched.push(r);
+            let c = 0.25 + rng.index(6) as f64 * 0.25; // [0.25, 1.5]
+            row_coeffs[r].push((j, c));
+        }
+    }
+    for (r, mut coeffs) in row_coeffs.into_iter().enumerate() {
+        // A row no column touches would be infeasible; cover it cheaply.
+        if coeffs.is_empty() {
+            coeffs.push((r % cols, 1.0));
+        }
+        let rhs = 1.0 + rng.index(10) as f64; // [1, 10]
+        lp.add_constraint(coeffs, Op::Ge, rhs);
+    }
+    lp
+}
+
+fn objective_bits(out: &LpOutcome) -> Option<u64> {
+    match out {
+        LpOutcome::Optimal(s) => Some(s.objective.to_bits()),
+        _ => None,
+    }
+}
+
+fn main() {
+    let lenient = std::env::var_os("BENCH_LENIENT_TIMING").is_some();
+    let bench = Bench::new(1, 3);
+    let mut t = Table::new(&[
+        "class", "rows", "cols", "dense ms", "revised ms", "dense it/s", "revised it/s",
+        "speedup", "ftran/it", "refactor",
+    ]);
+    let mut classes_json = Vec::new();
+    let mut wide_sparse_ok = true;
+    let mut wide_sparse_msg = String::new();
+
+    for class in &CLASSES {
+        let mut rng = Rng::new(0xB_0117 + class.rows as u64);
+        let lps: Vec<Lp> = (0..class.count)
+            .map(|_| covering_lp(&mut rng, class.rows, class.cols, class.nnz_per_col))
+            .collect();
+
+        // Parity sweep + counter collection (untimed).
+        let mut dense_stats = LpStats::default();
+        let mut revised_stats = LpStats::default();
+        for lp in &lps {
+            let d = solve_lp_dense_with_stats(lp, &mut dense_stats).expect("dense solve");
+            let r = solve_lp_with_stats(lp, &mut revised_stats).expect("revised solve");
+            assert_eq!(
+                objective_bits(&d),
+                objective_bits(&r),
+                "{}: dense and revised disagree on a covering LP",
+                class.name
+            );
+        }
+
+        // Timed sweeps: same LP set, whole-set wall clock per core.
+        let dense_ms = bench
+            .run(&format!("{} dense", class.name), || {
+                for lp in &lps {
+                    let _ = solve_lp_dense_with_stats(lp, &mut LpStats::default());
+                }
+            })
+            .mean_ms;
+        let revised_ms = bench
+            .run(&format!("{} revised", class.name), || {
+                for lp in &lps {
+                    let _ = solve_lp_with_stats(lp, &mut LpStats::default());
+                }
+            })
+            .mean_ms;
+
+        let dense_ips = dense_stats.iterations as f64 / (dense_ms / 1000.0).max(1e-9);
+        let revised_ips = revised_stats.iterations as f64 / (revised_ms / 1000.0).max(1e-9);
+        let speedup = dense_ms / revised_ms.max(1e-9);
+        let ftran_per_iter =
+            revised_stats.ftran_ops as f64 / (revised_stats.iterations as f64).max(1.0);
+        let btran_per_iter =
+            revised_stats.btran_ops as f64 / (revised_stats.iterations as f64).max(1.0);
+
+        t.row(&[
+            class.name.to_string(),
+            class.rows.to_string(),
+            class.cols.to_string(),
+            format!("{dense_ms:.2}"),
+            format!("{revised_ms:.2}"),
+            format!("{dense_ips:.0}"),
+            format!("{revised_ips:.0}"),
+            format!("{speedup:.1}x"),
+            format!("{ftran_per_iter:.1}"),
+            revised_stats.refactorizations.to_string(),
+        ]);
+        classes_json.push(Value::obj(vec![
+            ("class", Value::str(class.name)),
+            ("rows", Value::num(class.rows as f64)),
+            ("cols", Value::num(class.cols as f64)),
+            ("nnz_per_col", Value::num(class.nnz_per_col as f64)),
+            ("lps", Value::num(class.count as f64)),
+            ("dense_ms", Value::num(dense_ms)),
+            ("revised_ms", Value::num(revised_ms)),
+            ("dense_iterations", Value::num(dense_stats.iterations as f64)),
+            ("revised_iterations", Value::num(revised_stats.iterations as f64)),
+            ("dense_iters_per_sec", Value::num(dense_ips)),
+            ("revised_iters_per_sec", Value::num(revised_ips)),
+            ("speedup", Value::num(speedup)),
+            ("ftran_per_iter", Value::num(ftran_per_iter)),
+            ("btran_per_iter", Value::num(btran_per_iter)),
+            ("refactorizations", Value::num(revised_stats.refactorizations as f64)),
+            (
+                "degenerate_pivots",
+                Value::num(revised_stats.degenerate_pivots as f64),
+            ),
+        ]));
+
+        // The acceptance bar lives on the largest exact component class:
+        // revised throughput must meet or beat dense throughput there.
+        // Wall-clock on shared CI runners is noisy, so BENCH_LENIENT_TIMING
+        // records the ratio without gating on it.
+        if class.name == "wide_sparse" && revised_ips < dense_ips {
+            wide_sparse_ok = false;
+            wide_sparse_msg = format!(
+                "revised {revised_ips:.0} it/s < dense {dense_ips:.0} it/s on wide_sparse"
+            );
+        }
+    }
+    t.print();
+    if !wide_sparse_ok {
+        assert!(lenient, "{wide_sparse_msg}");
+        println!("WARNING (not asserted, BENCH_LENIENT_TIMING set): {wide_sparse_msg}");
+    }
+
+    // Calibration: the branch-and-bound node guard divides its node-scale
+    // grant by `milp_node_cost(vars, rows)` = min(vars, 8·rows). The dense
+    // era divided by `vars` (a dense pivot sweeps every column); under the
+    // revised core per-pivot cost tracks rows (basis size) and column
+    // sparsity, so the divisor is capped at `NODE_COST_ROWS_WEIGHT · rows`.
+    // The weight is the wide_sparse cols/rows cost ratio observed here,
+    // rounded down to a conservative power of two — recorded so a future
+    // re-run can re-derive it from this very file.
+    let calibration = Value::obj(vec![
+        ("node_cost_rows_weight", Value::num(NODE_COST_ROWS_WEIGHT as f64)),
+        ("model", Value::str("milp_node_cost(vars, rows) = min(max(vars,1), max(8*rows,1))")),
+        (
+            "derivation",
+            Value::str(
+                "revised per-pivot cost scales with rows + nnz, not cols; \
+                 weight = conservative floor of the wide_sparse speedup",
+            ),
+        ),
+    ]);
+
+    let doc = Value::obj(vec![
+        ("bench", Value::str("solver")),
+        ("classes", Value::arr(classes_json)),
+        ("calibration", calibration),
+    ]);
+    let path = "BENCH_solver.json";
+    std::fs::write(path, camflow::util::json::to_string_pretty(&doc))
+        .expect("write BENCH_solver.json");
+    println!("\nwrote {path}");
+    println!("\nbench_solver OK");
+}

@@ -37,6 +37,30 @@
 
 use crate::packing::mcvbp::SolveOptions;
 
+/// Row-count weight of the revised-simplex per-node cost model.
+///
+/// Under the dense tableau the Solve stage's node guard divided
+/// `milp_node_scale` by the ILP's *variable* count: every pivot touched the
+/// whole `rows × vars` tableau, so vars was the right latency proxy. The
+/// revised core prices columns against a factorized basis instead, and
+/// `benches/bench_solver.rs` (see the `calibration` section of
+/// `BENCH_solver.json`) shows node cost on the wide-and-sparse arc-flow
+/// ILPs (rows ≪ vars) tracking roughly `8 × rows` — FTRAN/BTRAN and the
+/// eta file scale with the basis, not the tableau width — while on
+/// near-square ILPs the dense-era vars proxy still binds first.
+pub const NODE_COST_ROWS_WEIGHT: usize = 8;
+
+/// Calibrated per-node LP cost of an ILP with `vars` columns and `rows`
+/// constraints under the revised simplex: `min(vars, 8 × rows)`, floored at
+/// 1. Replaces the bare `vars` divisor in the Solve stage's node guard
+/// (`max_nodes = min(max_nodes, milp_node_scale / milp_node_cost(..))`).
+/// Because the value never exceeds `vars`, every node budget under the
+/// revised core is at least what the dense model granted — budgets only
+/// grow, so no previously exact component regresses to a heuristic.
+pub fn milp_node_cost(vars: usize, rows: usize) -> usize {
+    vars.max(1).min(NODE_COST_ROWS_WEIGHT.saturating_mul(rows).max(1))
+}
+
 /// Donated solver slack on the three budget axes, published by one
 /// allocation round for other planning contexts to draw on (the
 /// cross-candidate pool of `coordinator::portfolio`).
@@ -506,6 +530,22 @@ mod tests {
         assert_eq!((s.milp_vars, s.milp_nodes), (3, 5));
         assert!(!s.is_zero());
         assert!(AxisSlack::default().is_zero());
+    }
+
+    #[test]
+    fn node_cost_never_exceeds_the_dense_vars_model() {
+        // Wide-and-sparse arc-flow ILP: the row term binds (8 x 10 = 80).
+        assert_eq!(milp_node_cost(1_000, 10), 80);
+        // Near-square ILP: the dense-era vars proxy still binds.
+        assert_eq!(milp_node_cost(50, 40), 50);
+        // Degenerate shapes floor at 1 instead of dividing by zero.
+        assert_eq!(milp_node_cost(0, 0), 1);
+        assert_eq!(milp_node_cost(7, 0), 1);
+        // The calibrated cost never exceeds the dense model's, so node
+        // budgets derived from it can only grow.
+        for (v, r) in [(1usize, 1usize), (600, 60), (10_000, 3), (3, 10_000)] {
+            assert!(milp_node_cost(v, r) <= v.max(1));
+        }
     }
 
     #[test]

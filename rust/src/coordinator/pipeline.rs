@@ -89,6 +89,12 @@ pub struct PipelineStats {
     /// solve of the same structure within a bounded demand delta seeded the
     /// root LP basis and branching order (delta-solve reuse).
     pub delta_solve_hits: usize,
+    /// Subproblems warmed through the *structural* near-match path — a
+    /// cached exact solve whose structure differs by exactly one group
+    /// (vanished → ghost embedding, appeared → block-translated basis).
+    /// Counted separately from `delta_solve_hits`; each structural warm
+    /// step is certified inside the solver and falls cold when it cannot be.
+    pub structural_delta_hits: usize,
     /// True if a previous packing seeded this solve.
     pub warm_started: bool,
     /// Independent per-region subproblems the Solve stage decomposed into.
@@ -105,6 +111,10 @@ pub struct PipelineStats {
     /// Node LPs warm-resumed from a cached/parent basis vs solved cold.
     pub lp_warm_resumes: usize,
     pub lp_cold_solves: usize,
+    /// Simplex pivots whose min-ratio step was ~0 (degenerate), summed over
+    /// every node LP this run — the stalling the two-tier pricing rule
+    /// works to avoid.
+    pub degenerate_pivots: u64,
     /// Extra arc-flow node budget granted above the static per-component
     /// seed by the adaptive allocator this run (the donated pool at work).
     pub budget_donated_nodes: usize,
@@ -235,6 +245,11 @@ struct CachedSolve {
     /// Warm re-entry state + per-group counts for the delta path.
     hints: DeltaHints,
     counts: Vec<usize>,
+    /// Column-block layout of the exact solve's joint ILP (empty for
+    /// heuristic results) + its structural column count: the inputs of the
+    /// appeared-group basis translation on the structural delta path.
+    blocks: Vec<mcvbp::VarBlock>,
+    num_vars: usize,
 }
 
 /// Soft cap on memoized subproblem solutions; reaching it clears the memo.
@@ -285,6 +300,14 @@ pub struct PlanContext {
     /// Structure-hash → key of the most recent *exact* solve with that
     /// structure: the near-match index behind the delta-solve path.
     delta_index: FxHashMap<u64, SolveKey>,
+    /// Structure-hash of a cached exact solve *minus one group* → (that
+    /// solve's full structure hash, position of the removed group): the
+    /// secondary index behind the structural delta path. A new subproblem
+    /// whose full hash matches an entry is a cached solve with one group
+    /// vanished; the reverse direction (appeared) probes `delta_index`
+    /// with the new key's own minus-one hashes instead. Values are hashes,
+    /// not keys, so the index stays O(groups) words per cached solve.
+    vanished_index: FxHashMap<u64, (u64, usize)>,
     /// Per-component solve telemetry feeding the adaptive budget allocator
     /// ([`budget::allocate`]); keyed by the component's bin identity.
     telemetry: FxHashMap<u64, ComponentTelemetry>,
@@ -315,8 +338,13 @@ impl PlanContext {
         PlanContext::default()
     }
 
-    /// Clear cached artifacts if the catalog or config changed. Three
+    /// Clear cached artifacts if the catalog or config changed. Four
     /// things survive: the worker pool (threads are not workload state),
+    /// the arc-flow graph cache (its key is the full capacity grid +
+    /// quantized item list, so an entry a new catalog cannot reproduce is
+    /// simply never looked up again and ages out — while graphs the new
+    /// catalog *does* share come back for free, and the portfolio's shared
+    /// cache keeps its identity across candidate-local signature clears),
     /// the previous assignment (it mirrors the *deployed fleet*, which a
     /// price update does not tear down — it is matched only by stable
     /// stream keys and bin labels, so entries a new catalog cannot
@@ -329,11 +357,13 @@ impl PlanContext {
         let sig = signature(catalog, config);
         if self.signature != Some(sig) {
             let pool = Arc::clone(&self.pool);
+            let graphs = Arc::clone(&self.graphs);
             let last_assign = self.last_assign.take();
             let solver = std::mem::take(&mut self.solver);
             *self = PlanContext {
                 signature: Some(sig),
                 pool,
+                graphs,
                 last_assign,
                 solver,
                 ..PlanContext::default()
@@ -367,6 +397,21 @@ impl PlanContext {
     #[cfg(test)]
     pub(crate) fn pool_slot(&self) -> &Arc<PoolSlot> {
         &self.pool
+    }
+
+    /// Replace this context's arc-flow graph cache with a shared one
+    /// (portfolio wiring — all candidates memoize compressed graphs in a
+    /// single content-addressed cache, so a graph any candidate builds is
+    /// a hit for the other two).
+    pub(crate) fn share_graphs(&mut self, cache: Arc<GraphCache>) {
+        self.graphs = cache;
+    }
+
+    /// The graph cache this context memoizes into (test-only surface: the
+    /// portfolio's sharing tests assert cache identity across contexts).
+    #[cfg(test)]
+    pub(crate) fn graph_cache(&self) -> &Arc<GraphCache> {
+        &self.graphs
     }
 
     /// The stream→slot assignment the next Expand will match against.
@@ -1023,6 +1068,159 @@ fn delta_hints(
     (delta > 0 && delta <= (total / 20).max(2)).then(|| prev.hints.clone())
 }
 
+/// [`structure_hash`] with the group at `skip` excluded — the probe hash of
+/// the structural delta path. By construction `structure_hash_without(P, i)
+/// == structure_hash(N)` exactly when `N` is `P` minus its `i`-th group.
+fn structure_hash_without(key: &SolveKey, skip: usize) -> u64 {
+    let mut h = DefaultHasher::new();
+    key.headroom.hash(&mut h);
+    key.bins.hash(&mut h);
+    (key.items.len() - 1).hash(&mut h);
+    for (i, (_, demands)) in key.items.iter().enumerate() {
+        if i != skip {
+            demands.hash(&mut h);
+        }
+    }
+    h.finish()
+}
+
+/// Exact structural check behind the hash probes: `larger` is `smaller`
+/// plus one extra group at position `pos` (same bins, same headroom, and
+/// the remaining groups' demand vectors identical in order). Counts are
+/// deliberately not compared — they are the RHS delta the warm resume
+/// absorbs.
+fn is_minus_one(larger: &SolveKey, smaller: &SolveKey, pos: usize) -> bool {
+    larger.headroom == smaller.headroom
+        && larger.bins == smaller.bins
+        && pos < larger.items.len()
+        && larger.items.len() == smaller.items.len() + 1
+        && larger
+            .items
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != pos)
+            .map(|(_, (_, d))| d)
+            .eq(smaller.items.iter().map(|(_, d)| d))
+}
+
+/// Bounded count drift over the groups two structurally adjacent
+/// subproblems share (`skip_prev`/`skip_new`: position of the unmatched
+/// group on either side). Same bound as the counts-only delta gate; zero
+/// drift is allowed here because the structure itself differs.
+fn structural_drift_bounded(
+    prev_counts: &[usize],
+    key: &SolveKey,
+    skip_prev: Option<usize>,
+    skip_new: Option<usize>,
+) -> bool {
+    let total: usize = key.items.iter().map(|(c, _)| *c).sum();
+    let delta: usize = prev_counts
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| Some(*i) != skip_prev)
+        .map(|(_, &c)| c)
+        .zip(
+            key.items
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| Some(*i) != skip_new)
+                .map(|(_, (c, _))| *c),
+        )
+        .map(|(a, b)| a.abs_diff(b))
+        .sum();
+    delta <= (total / 20).max(2)
+}
+
+/// Groups beyond which the appeared-direction probe (one minus-one hash
+/// per candidate position) is skipped — the scan is O(groups² · bins) in
+/// the worst case and a subproblem that large re-plans through the budget
+/// machinery anyway.
+const STRUCTURAL_SCAN_LIMIT: usize = 256;
+
+/// Structural near-match lookup, tried only after both the exact memo and
+/// the counts-only delta index missed: hints for a subproblem that differs
+/// from a cached exact solve by exactly one group.
+///
+/// *Vanished* (this problem is a cached one minus a group): the cached
+/// basis is re-entered by embedding the missing group as a zero-coverage
+/// *ghost* — the solver reconstructs the old column space exactly and the
+/// structural change collapses to an RHS delta (`mcvbp::GhostGroup`).
+/// *Appeared* (this problem is a cached one plus a group): the cached
+/// basis is translated block-by-block into the wider column space
+/// (`mcvbp::PrevLayout`). Both directions stay certified-or-cold inside
+/// the solver: a hint that fails dual repair is discarded, never adopted.
+fn structural_hints(
+    solutions: &FxHashMap<SolveKey, CachedSolve>,
+    delta_index: &FxHashMap<u64, SolveKey>,
+    vanished_index: &FxHashMap<u64, (u64, usize)>,
+    key: &SolveKey,
+) -> Option<DeltaHints> {
+    // Vanished direction: one index probe with this key's own hash.
+    if let Some(&(prev_hash, pos)) = vanished_index.get(&structure_hash(key)) {
+        if let Some(prev_key) = delta_index.get(&prev_hash) {
+            if let Some(prev) = solutions.get(prev_key) {
+                if prev.method == SolveMethod::ExactArcFlow
+                    && prev.hints.root_basis.is_some()
+                    && is_minus_one(prev_key, key, pos)
+                    && structural_drift_bounded(&prev.counts, key, Some(pos), None)
+                {
+                    let (count, demands) = &prev_key.items[pos];
+                    return Some(DeltaHints {
+                        root_basis: prev.hints.root_basis.clone(),
+                        branch_order: prev.hints.branch_order.clone(),
+                        ghost: Some(mcvbp::GhostGroup {
+                            position: pos,
+                            demand_bits: demands.clone(),
+                            count: *count,
+                        }),
+                        appeared: None,
+                    });
+                }
+            }
+        }
+    }
+    // Appeared direction: probe the full-structure index with each of this
+    // key's minus-one hashes (the new group can sit at any position).
+    if key.items.len() <= STRUCTURAL_SCAN_LIMIT {
+        for j in 0..key.items.len() {
+            let Some(prev_key) = delta_index.get(&structure_hash_without(key, j)) else {
+                continue;
+            };
+            let Some(prev) = solutions.get(prev_key) else {
+                continue;
+            };
+            let Some(basis) = prev.hints.root_basis.clone() else {
+                continue;
+            };
+            if prev.method != SolveMethod::ExactArcFlow
+                || prev.blocks.is_empty()
+                || !is_minus_one(key, prev_key, j)
+                || !structural_drift_bounded(&prev.counts, key, None, Some(j))
+                || prev.counts.iter().any(|&c| c == 0)
+            {
+                continue;
+            }
+            // No root_basis / branch_order passthrough: both index the
+            // previous solve's column space, which the new group shifts —
+            // the block translation rebuilds the basis, and a replayed
+            // branch order over misaligned columns would mislead.
+            return Some(DeltaHints {
+                root_basis: None,
+                branch_order: Vec::new(),
+                ghost: None,
+                appeared: Some(mcvbp::PrevLayout {
+                    basis,
+                    blocks: prev.blocks.clone(),
+                    num_vars: prev.num_vars,
+                    num_groups: prev_key.items.len(),
+                    new_group: j,
+                }),
+            });
+        }
+    }
+    None
+}
+
 /// Post-solve bookkeeping of one subproblem that is not answered by the
 /// memo: its memo key and the budgets it ran under (just the three telemetry
 /// numbers — the full options live in the job).
@@ -1106,9 +1304,22 @@ fn solve_stage(
             }
             None => {
                 stats.solution_cache_misses += 1;
-                let hints = delta_hints(&ctx.solutions, &ctx.delta_index, &key);
+                let mut hints = delta_hints(&ctx.solutions, &ctx.delta_index, &key);
                 if hints.is_some() {
                     stats.delta_solve_hits += 1;
+                } else {
+                    // Same structure missed — try one group appeared or
+                    // vanished (tracked by its own counter so the exact
+                    // delta-path telemetry stays untouched).
+                    hints = structural_hints(
+                        &ctx.solutions,
+                        &ctx.delta_index,
+                        &ctx.vanished_index,
+                        &key,
+                    );
+                    if hints.is_some() {
+                        stats.structural_delta_hits += 1;
+                    }
                 }
                 resolved.push(None);
                 pending.push(Pending {
@@ -1189,6 +1400,7 @@ fn solve_stage(
     if ctx.solutions.len() + pending.len() > SOLUTION_CACHE_CAPACITY {
         ctx.solutions.clear();
         ctx.delta_index.clear();
+        ctx.vanished_index.clear();
     }
     for (p, result) in pending.into_iter().zip(results) {
         let sub = result?;
@@ -1215,10 +1427,25 @@ fn solve_stage(
             .map(|st| DeltaHints {
                 root_basis: st.root_basis.clone(),
                 branch_order: st.branch_order.clone(),
+                ghost: None,
+                appeared: None,
             })
             .unwrap_or_default();
+        let (blocks, num_vars) = sub
+            .stats
+            .as_ref()
+            .map(|st| (st.var_blocks.clone(), st.milp_vars))
+            .unwrap_or_default();
         if sub.method == SolveMethod::ExactArcFlow {
-            ctx.delta_index.insert(structure_hash(&p.key), p.key.clone());
+            let full_hash = structure_hash(&p.key);
+            ctx.delta_index.insert(full_hash, p.key.clone());
+            // Index every minus-one-group variant of this structure so a
+            // later re-plan that dropped exactly one group finds it in one
+            // probe (values are hashes — O(groups) words per solve).
+            for i in 0..p.key.items.len() {
+                ctx.vanished_index
+                    .insert(structure_hash_without(&p.key, i), (full_hash, i));
+            }
         }
         let counts: Vec<usize> = p.key.items.iter().map(|(c, _)| *c).collect();
         ctx.solutions.insert(
@@ -1229,6 +1456,8 @@ fn solve_stage(
                 proven: sub.proven,
                 hints,
                 counts,
+                blocks,
+                num_vars,
             },
         );
         resolved[p.ci] = Some(sub);
@@ -1246,6 +1475,7 @@ fn solve_stage(
             stats.graph_cache_misses += st.graph_cache_misses;
             stats.lp_warm_resumes += st.lp_warm;
             stats.lp_cold_solves += st.lp_cold;
+            stats.degenerate_pivots += st.degenerate_pivots;
             ctx.solver.bnb_nodes.add(st.milp_nodes as u64);
         }
         match sub.method {
@@ -1276,6 +1506,8 @@ fn solve_stage(
     ctx.solver.heuristic_fallbacks.add(stats.components_fallback as u64);
     ctx.solver.memo_hits.add(stats.solution_cache_hits as u64);
     ctx.solver.delta_reuses.add(stats.delta_solve_hits as u64);
+    ctx.solver.structural_reuses.add(stats.structural_delta_hits as u64);
+    ctx.solver.degenerate_pivots.add(stats.degenerate_pivots);
     ctx.solver.lp_warm_resumes.add(stats.lp_warm_resumes as u64);
     ctx.solver.lp_cold_solves.add(stats.lp_cold_solves as u64);
     ctx.solver.budget_donated_nodes.add(stats.budget_donated_nodes as u64);
@@ -1513,6 +1745,81 @@ mod tests {
         assert!(
             (warm.cost_per_hour - cold.cost_per_hour).abs() < 1e-9,
             "delta-solve warm {} != cold {}",
+            warm.cost_per_hour,
+            cold.cost_per_hour
+        );
+    }
+
+    /// Two-resolution workload for the structural delta tests: `hd` HD720
+    /// cameras (one group) plus `vga` VGA cameras (a second group), all in
+    /// one region cluster.
+    fn two_group_requests(hd: usize, vga: usize) -> Vec<StreamRequest> {
+        let mut reqs: Vec<StreamRequest> = (0..hd)
+            .map(|i| {
+                StreamRequest::new(
+                    camera_at(i as u64, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0),
+                    Program::Zf,
+                    1.0,
+                )
+            })
+            .collect();
+        reqs.extend((0..vga).map(|i| {
+            StreamRequest::new(
+                camera_at(100 + i as u64, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+                Program::Zf,
+                1.0,
+            )
+        }));
+        reqs
+    }
+
+    #[test]
+    fn group_vanishing_takes_the_structural_delta_path() {
+        // Re-plan with one whole group gone: the exact-structure indexes
+        // miss, but the minus-one index finds the previous solve and the
+        // solver re-enters it through the ghost embedding. The cost must
+        // equal a cold plan's and the counts-only delta telemetry must not
+        // move.
+        let catalog = crate::catalog::Catalog::builtin()
+            .restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let cfg = PlannerConfig::st3();
+        let mut ctx = PlanContext::new();
+        plan_with_context(&catalog, &cfg, &two_group_requests(4, 3), &mut ctx).unwrap();
+        let warm = plan_with_context(&catalog, &cfg, &two_group_requests(4, 0), &mut ctx).unwrap();
+        assert_eq!(ctx.stats.structural_delta_hits, 1, "{:?}", ctx.stats);
+        assert_eq!(ctx.stats.delta_solve_hits, 0, "{:?}", ctx.stats);
+        assert_eq!(ctx.solver.structural_reuses.get(), 1);
+        let cold =
+            plan_with_context(&catalog, &cfg, &two_group_requests(4, 0), &mut PlanContext::new())
+                .unwrap();
+        assert!(
+            (warm.cost_per_hour - cold.cost_per_hour).abs() < 1e-9,
+            "vanished-group warm {} != cold {}",
+            warm.cost_per_hour,
+            cold.cost_per_hour
+        );
+    }
+
+    #[test]
+    fn group_appearing_takes_the_structural_delta_path() {
+        // The reverse drift: a whole new group joins. The new key's own
+        // minus-one hash finds the previous solve in the full-structure
+        // index and its basis arrives block-translated into the wider
+        // column space. Certified-or-cold: cost must equal a cold plan's.
+        let catalog = crate::catalog::Catalog::builtin()
+            .restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let cfg = PlannerConfig::st3();
+        let mut ctx = PlanContext::new();
+        plan_with_context(&catalog, &cfg, &two_group_requests(4, 0), &mut ctx).unwrap();
+        let warm = plan_with_context(&catalog, &cfg, &two_group_requests(4, 3), &mut ctx).unwrap();
+        assert_eq!(ctx.stats.structural_delta_hits, 1, "{:?}", ctx.stats);
+        assert_eq!(ctx.stats.delta_solve_hits, 0, "{:?}", ctx.stats);
+        let cold =
+            plan_with_context(&catalog, &cfg, &two_group_requests(4, 3), &mut PlanContext::new())
+                .unwrap();
+        assert!(
+            (warm.cost_per_hour - cold.cost_per_hour).abs() < 1e-9,
+            "appeared-group warm {} != cold {}",
             warm.cost_per_hour,
             cold.cost_per_hour
         );

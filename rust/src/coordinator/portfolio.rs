@@ -14,6 +14,12 @@
 //!   contexts, so every candidate's parallel per-region solves share a
 //!   single set of parked threads (spawned lazily by whichever candidate
 //!   needs them first),
+//! * **one arc-flow graph cache** — a [`GraphCache`] installed into all
+//!   three contexts. The cache is content-addressed (capacity grid +
+//!   quantized item list), and the candidates solve the *same workload*
+//!   under eligibility variations, so most of their per-bin-type graphs
+//!   coincide — whichever candidate builds a graph first, the other two
+//!   get it as a hit instead of re-running the compression,
 //! * **one cross-candidate budget pool** ([`SharedBudgetPool`]) — each
 //!   candidate's allocation publishes its leftover predicted slack
 //!   (`budget::allocate_pooled`), and the other candidates draw on it next
@@ -47,6 +53,7 @@ use super::pipeline::{plan_with_pool, PlanContext};
 use super::{LocationPolicy, Plan, Planner, PlannerConfig, SolverKind};
 use crate::cameras::StreamRequest;
 use crate::error::Result;
+use crate::packing::arcflow::GraphCache;
 use crate::util::pool::PoolSlot;
 use std::sync::Arc;
 
@@ -134,13 +141,20 @@ impl ReplanContext {
     pub fn new() -> Self {
         // One worker-pool slot shared by every candidate: whichever context
         // solves in parallel first spawns the threads all of them reuse.
+        // Likewise one graph cache: the candidates pack the same workload,
+        // so a graph any of them compresses is a hit for the other two
+        // (and it survives candidate-local signature clears).
         let slot = Arc::new(PoolSlot::new());
+        let graphs = Arc::new(GraphCache::new());
         let mut main = PlanContext::new();
         let mut alt_rtt_greedy = PlanContext::new();
         let mut alt_nearest_exact = PlanContext::new();
         main.share_pool(Arc::clone(&slot));
         alt_rtt_greedy.share_pool(Arc::clone(&slot));
         alt_nearest_exact.share_pool(slot);
+        main.share_graphs(Arc::clone(&graphs));
+        alt_rtt_greedy.share_graphs(Arc::clone(&graphs));
+        alt_nearest_exact.share_graphs(graphs);
         ReplanContext {
             main,
             alt_rtt_greedy,
@@ -303,6 +317,30 @@ mod tests {
         assert!(Arc::ptr_eq(ctx.main.pool_slot(), ctx.alt_rtt_greedy.pool_slot()));
         assert!(Arc::ptr_eq(ctx.main.pool_slot(), ctx.alt_nearest_exact.pool_slot()));
         assert!(!ctx.main.pool_slot().spawned(), "pool must stay lazy until a solve");
+    }
+
+    #[test]
+    fn contexts_share_one_graph_cache() {
+        let ctx = ReplanContext::new();
+        assert!(Arc::ptr_eq(ctx.main.graph_cache(), ctx.alt_rtt_greedy.graph_cache()));
+        assert!(Arc::ptr_eq(ctx.main.graph_cache(), ctx.alt_nearest_exact.graph_cache()));
+    }
+
+    #[test]
+    fn graph_cache_identity_survives_planning() {
+        // Planning installs each context's signature (clearing its caches);
+        // the shared graph cache must keep its identity through that — and
+        // the candidates' combined builds must land in the one cache.
+        let planner =
+            Planner::new(Catalog::builtin(), crate::coordinator::PlannerConfig::gcl());
+        let mut ctx = ReplanContext::new();
+        let before = Arc::clone(ctx.main.graph_cache());
+        plan(&planner, &worldwide_requests(), &mut ctx).unwrap();
+        assert!(Arc::ptr_eq(&before, ctx.main.graph_cache()));
+        assert!(Arc::ptr_eq(ctx.main.graph_cache(), ctx.alt_rtt_greedy.graph_cache()));
+        assert!(Arc::ptr_eq(ctx.main.graph_cache(), ctx.alt_nearest_exact.graph_cache()));
+        let (_, misses) = ctx.main.graph_cache().stats();
+        assert!(misses > 0, "the candidates' graph builds land in the one cache");
     }
 
     #[test]

@@ -85,6 +85,24 @@
 //!   order replays in [`solver::bnb`]. Every warm step is certified; the
 //!   uncertifiable ones fall back to the cold path under the same budgets,
 //!   so warm results are exactly as optimal as cold ones.
+//! * **Structural delta-solve (PR 6)** — the delta path also spans
+//!   *bounded structural* drift: one whole group appearing or vanishing.
+//!   A vanished group is re-inserted as a zero-coverage **ghost**
+//!   ([`packing::mcvbp::GhostGroup`]) so the joint ILP reconstructs the
+//!   cached solve's column space exactly and the structural change
+//!   collapses to an RHS delta; an appeared group triggers a
+//!   **block-by-block basis translation** ([`packing::mcvbp::PrevLayout`] →
+//!   [`solver::simplex::complete_basis`]) of the cached basis into the
+//!   wider column space. Both directions ride the same certified-or-cold
+//!   machinery and are counted separately
+//!   (`structural_delta_hits` / `structural_reuses`).
+//!
+//! The LP substrate itself is a *revised* simplex over a product-form eta
+//! factorization ([`solver::factor`]): per-iteration cost scales with basis
+//! size and column sparsity instead of tableau width, with the dense
+//! tableau retained as the bit-for-bit reference
+//! ([`solver::simplex::solve_lp_dense`], property-tested in
+//! `tests/properties.rs`, raced in `bench_solver`).
 //!
 //! ## The unified portfolio runtime (PR 5)
 //!
@@ -146,6 +164,34 @@
 //!   `usd_per_hour` triple.
 //! * `lp_reuse` — `lp_warm_resumes` vs `lp_cold_solves` node LPs across
 //!   the warm runs (the dual-simplex resume at work).
+//!
+//! ## `BENCH_solver.json` (written by `bench_solver`, gated in CI)
+//!
+//! * `classes[]` — one entry per LP component class (`paper_scale`,
+//!   `metro`, and `wide_sparse` — the largest exact component class):
+//!   * `rows` / `cols` / `nnz_per_col` / `lps` — the class shape and how
+//!     many random covering LPs were solved,
+//!   * `dense_ms` / `revised_ms` — whole-set wall clock per core,
+//!   * `dense_iterations` / `revised_iterations` — simplex pivots summed
+//!     over the set (both phases),
+//!   * `dense_iters_per_sec` / `revised_iters_per_sec` — pivot throughput;
+//!     on `wide_sparse` the bench asserts revised ≥ dense
+//!     (recorded-not-gated under `BENCH_LENIENT_TIMING`),
+//!   * `speedup` — `dense_ms / revised_ms`,
+//!   * `ftran_per_iter` / `btran_per_iter` — factorization solves per
+//!     pivot (revised only; dense has no factorization),
+//!   * `refactorizations` — threshold-triggered eta-file rebuilds,
+//!   * `degenerate_pivots` — pivots whose min-ratio step was ~0 (the
+//!     stalling the two-tier Dantzig band skips when it can).
+//! * `calibration` — provenance of the branch-and-bound node guard:
+//!   `node_cost_rows_weight` (the `NODE_COST_ROWS_WEIGHT` constant in
+//!   [`coordinator::budget::milp_node_cost`]), the `model` formula, and the
+//!   `derivation` note tying the weight to the measured `wide_sparse`
+//!   dense/revised cost ratio.
+//!
+//! Every timed LP is additionally asserted dense==revised on outcome
+//! variant and objective bits, making the bench a large-sample parity sweep
+//! on top of the property suite.
 //!
 //! ## Features
 //!

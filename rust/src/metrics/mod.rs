@@ -155,9 +155,17 @@ pub struct SolverMetrics {
     /// Bit-exact solution-memo hits and near-match (delta) reuses.
     pub memo_hits: Counter,
     pub delta_reuses: Counter,
+    /// Structural near-match reuses: a cached exact solve one group away
+    /// (appeared/vanished) seeded the solver. Separate from `delta_reuses`,
+    /// which counts only same-structure (counts-only) warm starts.
+    pub structural_reuses: Counter,
     /// Node LPs warm-resumed from a cached/parent basis vs solved cold.
     pub lp_warm_resumes: Counter,
     pub lp_cold_solves: Counter,
+    /// Simplex pivots whose min-ratio was ~0 (the basis changed but the
+    /// point did not move) — the degeneracy the two-tier Dantzig pricing
+    /// works to avoid; summed over every node LP.
+    pub degenerate_pivots: Counter,
     /// Branch-and-bound nodes expanded.
     pub bnb_nodes: Counter,
     /// Extra arc-flow node budget granted above the static seed by the
@@ -183,15 +191,18 @@ impl SolverMetrics {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "subproblems={} exact={} fallback={} memo={} delta={} lp_warm={} lp_cold={} \
-             bnb_nodes={} donated_nodes={} pooled_nodes={} fail_fast={} pool_jobs={}",
+            "subproblems={} exact={} fallback={} memo={} delta={} structural={} lp_warm={} \
+             lp_cold={} degen_pivots={} bnb_nodes={} donated_nodes={} pooled_nodes={} \
+             fail_fast={} pool_jobs={}",
             self.subproblems.get(),
             self.exact_solves.get(),
             self.heuristic_fallbacks.get(),
             self.memo_hits.get(),
             self.delta_reuses.get(),
+            self.structural_reuses.get(),
             self.lp_warm_resumes.get(),
             self.lp_cold_solves.get(),
+            self.degenerate_pivots.get(),
             self.bnb_nodes.get(),
             self.budget_donated_nodes.get(),
             self.budget_pooled_donated.get(),
@@ -339,10 +350,14 @@ mod tests {
         m.budget_donated_nodes.add(12_000);
         m.budget_pooled_donated.add(3_000);
         m.pool_jobs.add(9);
+        m.degenerate_pivots.add(4);
+        m.structural_reuses.add(3);
         let s = m.summary();
         assert!(s.contains("subproblems=6"));
+        assert!(s.contains("degen_pivots=4"));
         assert!(s.contains("fallback=1"));
         assert!(s.contains("delta=2"));
+        assert!(s.contains("structural=3"));
         assert!(s.contains("donated_nodes=12000"));
         assert!(s.contains("pooled_nodes=3000"));
         assert!(s.contains("pool_jobs=9"));

@@ -10,10 +10,13 @@
 
 use super::arcflow::{self, GraphCache, QuantItem};
 use super::heuristic;
-use super::{Packing, PackedBin, PackingProblem};
+use super::{ItemGroup, Packing, PackedBin, PackingProblem};
 use crate::catalog::{Dims, NUM_DIMS};
+use crate::coordinator::budget::milp_node_cost;
 use crate::error::{Error, Result};
-use crate::solver::{solve_milp, Lp, Milp, MilpOptions, Op};
+use crate::solver::{complete_basis, solve_milp, Lp, Milp, MilpOptions, Op};
+use crate::util::fxhash::FxBuildHasher;
+use std::hash::BuildHasher;
 
 /// Exact-solve configuration.
 ///
@@ -94,6 +97,65 @@ pub struct SolveStats {
     /// solution memo to warm-start near-identical future subproblems.
     pub root_basis: Option<Vec<usize>>,
     pub branch_order: Vec<usize>,
+    /// Simplex pivots whose min-ratio step was ~0 (stalling), summed over
+    /// every node LP of the exact phase.
+    pub degenerate_pivots: u64,
+    /// Per-bin-type layout of the joint ILP's columns/rows, recorded so a
+    /// later re-plan whose structure gained one group can translate the
+    /// surviving blocks of this solve's basis (see [`DeltaHints::appeared`]).
+    pub var_blocks: Vec<VarBlock>,
+}
+
+/// One bin type's slice of the joint ILP: its arc variables and its flow
+/// conservation rows. `graph_hash` is a content hash of the type's quantized
+/// item list (the arc-flow graph key), so two solves agree on a block iff
+/// the type's compatible item multiset — and hence its graph, arcs, and
+/// conservation rows — is bit-identical.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VarBlock {
+    pub bin_type: usize,
+    pub graph_hash: u64,
+    pub var_offset: usize,
+    pub num_arcs: usize,
+    pub row_offset: usize,
+    pub num_rows: usize,
+}
+
+/// A vanished item group, re-inserted as a *ghost* so the new subproblem's
+/// arc-flow graphs (and ILP columns) stay bit-identical to the previous
+/// solve's. The ghost's coverage demand is zero — its arcs can only waste
+/// capacity, never satisfy anything — so the embedded ILP's optimum equals
+/// the plain one's, while the structural delta collapses to a pure RHS
+/// delta the certified [`resume_from_basis`](crate::solver::simplex::
+/// resume_from_basis) path already repairs.
+#[derive(Clone, Debug)]
+pub struct GhostGroup {
+    /// Index in the previous problem's item list where the group sat.
+    pub position: usize,
+    /// Per-bin demand vectors, bit-preserved (`f64::to_bits` per dim;
+    /// `None` = incompatible with that bin type).
+    pub demand_bits: Vec<Option<[u64; NUM_DIMS]>>,
+    /// The count the previous solve saw (caps the graph multiplicity).
+    pub count: usize,
+}
+
+/// The previous solve's basis and block layout, for the *appeared*-group
+/// structural delta: bin types the new group cannot use keep bit-identical
+/// graphs, so their basis columns translate 1:1 into the new column space;
+/// the rest are dropped and re-derived by
+/// [`complete_basis`](crate::solver::simplex::complete_basis).
+#[derive(Clone, Debug)]
+pub struct PrevLayout {
+    /// Root basis of the previous solve, in its own column space.
+    pub basis: Vec<usize>,
+    /// Its block layout ([`SolveStats::var_blocks`]).
+    pub blocks: Vec<VarBlock>,
+    /// Its structural variable count (slack columns start here).
+    pub num_vars: usize,
+    /// Its item-group count (coverage-row slacks; the cut slack follows).
+    pub num_groups: usize,
+    /// Index in *this* problem of the group the previous solve lacked.
+    pub new_group: usize,
 }
 
 /// Cached warm re-entry state from a previous solve of a *structurally
@@ -107,6 +169,12 @@ pub struct SolveStats {
 pub struct DeltaHints {
     pub root_basis: Option<Vec<usize>>,
     pub branch_order: Vec<usize>,
+    /// Vanished-group embedding: re-insert this group with zero coverage so
+    /// the ILP structure matches the previous solve's exactly.
+    pub ghost: Option<GhostGroup>,
+    /// Appeared-group translation: the previous solve's basis + layout,
+    /// used only when `root_basis` is absent (the two paths are exclusive).
+    pub appeared: Option<PrevLayout>,
 }
 
 /// Quantize each item's demand up to the bin-type grid; `None` stays `None`,
@@ -250,10 +318,46 @@ pub fn solve_delta(
         lp_cold: 0,
         root_basis: None,
         branch_order: Vec::new(),
+        degenerate_pivots: 0,
+        var_blocks: Vec::new(),
     };
     if !opts.exact {
         return Ok((best_heuristic, stats));
     }
+
+    // Vanished-group embedding: when the caller says this problem is the
+    // previous one minus exactly one group, re-insert that group as a ghost
+    // (original demands, original count, zero coverage). Every bin type's
+    // quantized item list — and hence its arc-flow graph and ILP columns —
+    // is then bit-identical to the previous solve's, and the cached basis
+    // re-enters through the certified RHS-repair path. Malformed hints are
+    // dropped here; an uncertifiable basis falls cold inside the solver.
+    let ghost = hints.and_then(|h| h.ghost.as_ref()).filter(|g| {
+        g.position <= qp.items.len() && g.count > 0 && g.demand_bits.len() == qp.bins.len()
+    });
+    let xqp_owned;
+    let (xqp, ghost_idx): (&PackingProblem, Option<usize>) = match ghost {
+        Some(g) => {
+            let mut aug = problem.clone();
+            aug.items.insert(
+                g.position,
+                ItemGroup {
+                    label: "__ghost__".into(),
+                    count: g.count,
+                    demand_per_bin: g
+                        .demand_bits
+                        .iter()
+                        .map(|d| d.map(|bits| Dims::from_array(bits.map(f64::from_bits))))
+                        .collect(),
+                },
+            );
+            // Quantization is per-item, so the non-ghost items land exactly
+            // where the plain `qp` has them.
+            xqp_owned = quantize_problem(&aug, opts.quant);
+            (&xqp_owned, Some(g.position))
+        }
+        None => (&qp, None),
+    };
 
     // Build one arc-flow graph per bin type over its compatible item groups.
     // A *cumulative* node budget bounds total build work: when the joint ILP
@@ -262,19 +366,22 @@ pub fn solve_delta(
     // hits charge their original (uncompressed) node count against the same
     // budget so a warm solve takes exactly the structural decisions a cold
     // solve would — only faster.
-    let mut graphs = Vec::with_capacity(qp.bins.len());
+    let mut graphs = Vec::with_capacity(xqp.bins.len());
+    // Content hash of each built type's quantized item list — the block
+    // identity two structurally adjacent solves agree on (see [`VarBlock`]).
+    let mut graph_hashes = vec![0u64; xqp.bins.len()];
     let mut remaining_nodes = opts.max_graph_nodes;
     // Item↔bin compatibility as fixed-width bitsets (falls back to the
     // direct scan on problems too wide for the mask).
-    let cmasks = qp.compatible_masks();
-    for t in 0..qp.bins.len() {
+    let cmasks = xqp.compatible_masks();
+    for t in 0..xqp.bins.len() {
         // Map: local item index -> global group index.
-        let groups: Vec<usize> = (0..qp.items.len())
+        let groups: Vec<usize> = (0..xqp.items.len())
             .filter(|&g| {
-                qp.items[g].count > 0
+                xqp.items[g].count > 0
                     && match &cmasks {
                         Some(m) => m[g].get(t),
-                        None => qp.compatible(g, t),
+                        None => xqp.compatible(g, t),
                     }
             })
             .collect();
@@ -286,7 +393,7 @@ pub fn solve_delta(
         let items: Vec<QuantItem> = groups
             .iter()
             .map(|&g| {
-                let sizes = cells(&qp, t, &qp.items[g].demand_per_bin[t].unwrap(), opts.quant);
+                let sizes = cells(xqp, t, &xqp.items[g].demand_per_bin[t].unwrap(), opts.quant);
                 // Per-bin multiplicity cap: more copies of a group than fit
                 // one bin can never appear on a single source→sink path, so
                 // clamping the demanded count here leaves the path set
@@ -299,10 +406,16 @@ pub fn solve_delta(
                     .filter(|&&s| s > 0)
                     .map(|&s| (opts.quant / s).max(1) as usize)
                     .min()
-                    .unwrap_or(qp.items[g].count);
-                QuantItem { sizes, count: qp.items[g].count.min(max_mult) }
+                    .unwrap_or(xqp.items[g].count);
+                QuantItem { sizes, count: xqp.items[g].count.min(max_mult) }
             })
             .collect();
+        graph_hashes[t] = FxBuildHasher::default().hash_one(
+            items
+                .iter()
+                .map(|it| (it.sizes.clone(), it.count))
+                .collect::<Vec<(Vec<i64>, usize)>>(),
+        );
         let built = match cache {
             Some(c) => match c.get_or_build(&cap, &items, remaining_nodes) {
                 Ok((entry, hit)) => {
@@ -350,7 +463,7 @@ pub fn solve_delta(
     // Assemble the joint min-cost integer flow.
     // Variables: one per arc (all graphs), integral.
     let mut var_arc: Vec<(usize, usize)> = Vec::new(); // (bin type, arc idx)
-    let mut var_offset = vec![0usize; qp.bins.len() + 1];
+    let mut var_offset = vec![0usize; xqp.bins.len() + 1];
     for (t, g) in graphs.iter().enumerate() {
         var_offset[t] = var_arc.len();
         if let Some((graph, _)) = g {
@@ -359,7 +472,7 @@ pub fn solve_delta(
             }
         }
     }
-    var_offset[qp.bins.len()] = var_arc.len();
+    var_offset[xqp.bins.len()] = var_arc.len();
     let num_vars = var_arc.len();
     if num_vars == 0 || num_vars > opts.max_milp_vars {
         stats.budget_exhausted = num_vars > opts.max_milp_vars;
@@ -371,12 +484,15 @@ pub fn solve_delta(
     for (v, &(t, a)) in var_arc.iter().enumerate() {
         let (graph, _) = graphs[t].as_ref().unwrap();
         if graph.arcs[a].from == graph.source {
-            lp.set_objective(v, qp.bins[t].cost);
+            lp.set_objective(v, xqp.bins[t].cost);
         }
     }
-    // Conservation at internal nodes.
+    // Conservation at internal nodes, recording each bin type's block of
+    // columns and rows for the appeared-group translation of a later solve.
+    let mut var_blocks: Vec<VarBlock> = Vec::new();
     for (t, g) in graphs.iter().enumerate() {
         let Some((graph, _)) = g else { continue };
+        let row_offset = lp.constraints.len();
         for node in 0..graph.num_nodes {
             if node == graph.source || node == graph.sink {
                 continue;
@@ -395,9 +511,19 @@ pub fn solve_delta(
                 lp.add_constraint(coeffs, Op::Eq, 0.0);
             }
         }
+        var_blocks.push(VarBlock {
+            bin_type: t,
+            graph_hash: graph_hashes[t],
+            var_offset: var_offset[t],
+            num_arcs: graph.arcs.len(),
+            row_offset,
+            num_rows: lp.constraints.len() - row_offset,
+        });
     }
-    // Demand coverage per item group.
-    for (g_idx, item) in qp.items.iter().enumerate() {
+    // Demand coverage per item group. A ghost group keeps its row (the
+    // previous solve's basis expects it) but demands nothing: its arcs may
+    // carry flow, yet covering zero can never change the optimum.
+    for (g_idx, item) in xqp.items.iter().enumerate() {
         if item.count == 0 {
             continue;
         }
@@ -414,12 +540,19 @@ pub fn solve_delta(
             }
         }
         if coeffs.is_empty() {
+            if ghost_idx == Some(g_idx) {
+                // The ghost touches no graph (it was incompatible with the
+                // budgeted types this round): no row. The resulting row
+                // mismatch simply decertifies the resume — still exact.
+                continue;
+            }
             return Err(Error::infeasible(format!(
                 "stream group '{}' unplaceable in exact phase",
                 item.label
             )));
         }
-        lp.add_constraint(coeffs, Op::Ge, item.count as f64);
+        let rhs = if ghost_idx == Some(g_idx) { 0.0 } else { item.count as f64 };
+        lp.add_constraint(coeffs, Op::Ge, rhs);
     }
     // Incumbent cut: never exceed the best bound known to be feasible on the
     // quantized instance — the FFD cost, tightened by a warm-start incumbent
@@ -456,9 +589,14 @@ pub fn solve_delta(
             (graph.arcs[a].from == graph.source).then_some(v)
         })
         .collect();
+    // Calibrated node guard: the dense tableau priced every pivot against
+    // the full `rows × vars` tableau, so `vars` was the divisor; the revised
+    // core's per-node cost is `min(vars, 8·rows)` (bench_solver-derived, see
+    // `coordinator::budget::milp_node_cost`), which never exceeds the dense
+    // model — node budgets can only grow under the revised simplex.
     milp_opts.max_nodes = milp_opts
         .max_nodes
-        .min((opts.milp_node_scale / num_vars.max(1)).max(50));
+        .min((opts.milp_node_scale / milp_node_cost(num_vars, stats.milp_constraints)).max(50));
     // Delta-solve hints: replay a structurally identical previous solve's
     // branching order and re-enter from its root basis. Out-of-range hints
     // (the structure changed after all) are dropped here or certified away
@@ -468,6 +606,26 @@ pub fn solve_delta(
             milp_opts.replay_order = h.branch_order.clone();
         }
         milp_opts.root_basis = h.root_basis.clone();
+        // Appeared-group translation: carry the surviving blocks of the
+        // previous basis into this column space and let `complete_basis`
+        // re-derive the rest. Only meaningful without an exact-structure
+        // basis and without a ghost (the two structural paths are disjoint),
+        // and only when every group has a coverage row (count > 0), which
+        // the slack-rank arithmetic below relies on.
+        if milp_opts.root_basis.is_none() && ghost_idx.is_none() {
+            if let Some(prev) = h.appeared.as_ref() {
+                if xqp.items.iter().all(|it| it.count > 0) {
+                    if let Some(partial) = translate_block_basis(
+                        prev,
+                        &var_blocks,
+                        num_vars,
+                        xqp.items.len(),
+                    ) {
+                        milp_opts.root_basis = complete_basis(&milp.lp, &partial);
+                    }
+                }
+            }
+        }
     }
     let sol = match solve_milp(&milp, &milp_opts) {
         Ok(s) => s,
@@ -477,8 +635,15 @@ pub fn solve_delta(
     stats.proven_optimal = sol.proven_optimal;
     stats.lp_warm = sol.lp_warm;
     stats.lp_cold = sol.lp_cold;
-    stats.root_basis = sol.root_basis.clone();
-    stats.branch_order = sol.branch_order.clone();
+    stats.degenerate_pivots = sol.lp_stats.degenerate_pivots;
+    if ghost_idx.is_none() {
+        stats.root_basis = sol.root_basis.clone();
+        stats.branch_order = sol.branch_order.clone();
+        stats.var_blocks = var_blocks;
+    }
+    // (A ghost-embedded solve publishes no warm hints: its basis, branch
+    // order, and blocks live in the embedded column space, which a later
+    // plain solve of this structure does not share.)
 
     // Decompose flows into source->sink paths per graph -> bins.
     let mut packing = Packing::default();
@@ -496,7 +661,7 @@ pub fn solve_delta(
             let Some(&start) = out_arcs[graph.source].iter().find(|&&a| flow[a] > 0) else {
                 break;
             };
-            let mut counts = vec![0usize; qp.items.len()];
+            let mut counts = vec![0usize; xqp.items.len()];
             let mut a = start;
             let mut guard = 0;
             loop {
@@ -525,6 +690,16 @@ pub fn solve_delta(
                 packing.bins.push(PackedBin { bin_type: t, counts });
             }
         }
+    }
+
+    // Strip the ghost before validating: its flows (zero-coverage padding)
+    // map to nothing in the real problem, and removing them only frees
+    // capacity, so the stripped packing stays feasible.
+    if let Some(gi) = ghost_idx {
+        for b in packing.bins.iter_mut() {
+            b.counts.remove(gi);
+        }
+        packing.bins.retain(|b| b.num_streams() > 0);
     }
 
     // Trim over-coverage (Ge slack) and drop empty bins.
@@ -558,6 +733,56 @@ pub fn solve_delta(
     } else {
         Ok((best_heuristic, stats))
     }
+}
+
+/// Translate a previous solve's basis into the current ILP's column space
+/// for the appeared-group delta. Structural columns translate through
+/// matching [`VarBlock`]s (same bin type, same graph content); columns of
+/// changed blocks are *dropped* — `complete_basis` re-derives them — and
+/// slack columns re-rank around the inserted group. Returns `None` when the
+/// layouts cannot correspond (the hint was stale), which sends the solve
+/// down the cold path.
+fn translate_block_basis(
+    prev: &PrevLayout,
+    blocks: &[VarBlock],
+    num_vars: usize,
+    num_groups: usize,
+) -> Option<Vec<usize>> {
+    if prev.new_group >= num_groups || prev.num_groups + 1 != num_groups {
+        return None;
+    }
+    let mut out = Vec::with_capacity(prev.basis.len());
+    for &v in &prev.basis {
+        if v < prev.num_vars {
+            let pb = prev
+                .blocks
+                .iter()
+                .find(|b| b.var_offset <= v && v < b.var_offset + b.num_arcs)?;
+            let Some(nb) = blocks.iter().find(|b| {
+                b.bin_type == pb.bin_type
+                    && b.graph_hash == pb.graph_hash
+                    && b.num_arcs == pb.num_arcs
+            }) else {
+                // This bin type's graph absorbed the new group: its arc
+                // space changed, so the old column has no referent here.
+                continue;
+            };
+            out.push(nb.var_offset + (v - pb.var_offset));
+        } else {
+            // Slack columns: coverage rows in group order, then the
+            // incumbent cut. Groups at or after the inserted one shift up.
+            let k = v - prev.num_vars;
+            if k < prev.num_groups {
+                let g = if k < prev.new_group { k } else { k + 1 };
+                out.push(num_vars + g);
+            } else if k == prev.num_groups {
+                out.push(num_vars + num_groups);
+            } else {
+                return None; // column outside the recognized layout
+            }
+        }
+    }
+    (!out.is_empty()).then_some(out)
 }
 
 #[cfg(test)]
@@ -741,6 +966,7 @@ mod tests {
         let hints = DeltaHints {
             root_basis: st.root_basis.clone(),
             branch_order: st.branch_order.clone(),
+            ..DeltaHints::default()
         };
         for counts in [[6, 3, 4], [5, 2, 4], [4, 3, 5]] {
             let p = simple_problem(
@@ -762,6 +988,141 @@ mod tests {
             );
             warm.validate(&p).unwrap();
         }
+    }
+
+    #[test]
+    fn ghost_embedding_matches_the_cold_solve() {
+        // Solve a 3-group problem, then drop the middle group and re-solve
+        // with a ghost hint: the embedded ILP is the previous one with the
+        // ghost's coverage zeroed, so the cached basis re-enters through
+        // the certified RHS-repair path — and the answer must equal cold.
+        let opts = SolveOptions::default();
+        let prev = simple_problem(
+            &[(2.0, 1.0, 5), (3.0, 2.0, 3), (1.5, 0.8, 4)],
+            &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)],
+        );
+        let (_, st) = solve(&prev, &opts).unwrap();
+        assert!(st.proven_optimal, "seed solve must prove optimality");
+        let now = simple_problem(
+            &[(2.0, 1.0, 5), (1.5, 0.8, 4)],
+            &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)],
+        );
+        let hints = DeltaHints {
+            root_basis: st.root_basis.clone(),
+            branch_order: st.branch_order.clone(),
+            ghost: Some(GhostGroup {
+                position: 1,
+                demand_bits: prev.items[1]
+                    .demand_per_bin
+                    .iter()
+                    .map(|d| d.map(|dims| dims.as_array().map(f64::to_bits)))
+                    .collect(),
+                count: prev.items[1].count,
+            }),
+            appeared: None,
+        };
+        let (cold, cold_st) = solve(&now, &opts).unwrap();
+        let (warm, warm_st) = solve_delta(&now, &opts, None, None, Some(&hints)).unwrap();
+        assert!(cold_st.proven_optimal && warm_st.proven_optimal);
+        assert!(
+            (warm.total_cost(&now) - cold.total_cost(&now)).abs() < 1e-9,
+            "ghost warm {} != cold {}",
+            warm.total_cost(&now),
+            cold.total_cost(&now)
+        );
+        warm.validate(&now).unwrap();
+        // Ghost solves publish no warm hints: their column space includes
+        // the ghost's arcs, which a later plain solve does not share.
+        assert!(warm_st.root_basis.is_none());
+        assert!(warm_st.var_blocks.is_empty());
+    }
+
+    #[test]
+    fn appeared_group_translation_matches_the_cold_solve() {
+        let opts = SolveOptions::default();
+        let prev = simple_problem(
+            &[(2.0, 1.0, 5), (1.5, 0.8, 4)],
+            &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)],
+        );
+        let (_, st) = solve(&prev, &opts).unwrap();
+        assert!(st.proven_optimal);
+        assert!(!st.var_blocks.is_empty(), "exact solves must record their layout");
+        let now = simple_problem(
+            &[(2.0, 1.0, 5), (3.0, 2.0, 3), (1.5, 0.8, 4)],
+            &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)],
+        );
+        let Some(basis) = st.root_basis.clone() else {
+            return; // no root basis recorded: nothing to translate
+        };
+        let hints = DeltaHints {
+            root_basis: None,
+            branch_order: Vec::new(),
+            ghost: None,
+            appeared: Some(PrevLayout {
+                basis,
+                blocks: st.var_blocks.clone(),
+                num_vars: st.milp_vars,
+                num_groups: prev.items.len(),
+                new_group: 1,
+            }),
+        };
+        let (cold, cold_st) = solve(&now, &opts).unwrap();
+        let (warm, warm_st) = solve_delta(&now, &opts, None, None, Some(&hints)).unwrap();
+        assert!(cold_st.proven_optimal && warm_st.proven_optimal);
+        assert!(
+            (warm.total_cost(&now) - cold.total_cost(&now)).abs() < 1e-9,
+            "translated warm {} != cold {}",
+            warm.total_cost(&now),
+            cold.total_cost(&now)
+        );
+        warm.validate(&now).unwrap();
+    }
+
+    #[test]
+    fn translate_block_basis_maps_blocks_and_slacks() {
+        let pb = VarBlock {
+            bin_type: 0,
+            graph_hash: 7,
+            var_offset: 0,
+            num_arcs: 4,
+            row_offset: 0,
+            num_rows: 2,
+        };
+        let pb2 = VarBlock {
+            bin_type: 1,
+            graph_hash: 9,
+            var_offset: 4,
+            num_arcs: 3,
+            row_offset: 2,
+            num_rows: 2,
+        };
+        // Previous layout: 7 structural columns, 2 groups; the basis holds
+        // one column per block plus all three slacks (group 0, group 1, cut).
+        let prev = PrevLayout {
+            basis: vec![1, 5, 7, 8, 9],
+            blocks: vec![pb, pb2],
+            num_vars: 7,
+            num_groups: 2,
+            new_group: 1,
+        };
+        // Current layout: type 0 unchanged, type 1 absorbed the new group
+        // (different hash), 10 structural columns, 3 groups.
+        let nb = pb; // type 0's block carries over verbatim
+        let nb2 = VarBlock {
+            bin_type: 1,
+            graph_hash: 11,
+            var_offset: 4,
+            num_arcs: 6,
+            row_offset: 2,
+            num_rows: 3,
+        };
+        let out = translate_block_basis(&prev, &[nb, nb2], 10, 3).unwrap();
+        // Column 1 survives in block 0; column 5 (changed block) is dropped;
+        // group 0's slack keeps rank 0, group 1's shifts past the inserted
+        // group to rank 2, and the cut slack goes last.
+        assert_eq!(out, vec![1, 10, 12, 13]);
+        // A layout that cannot correspond to this problem is rejected.
+        assert!(translate_block_basis(&prev, &[nb], 10, 2).is_none());
     }
 
     #[test]

@@ -16,7 +16,9 @@
 //! falls back to a cold LP solve, so the search is exactly as correct as the
 //! all-cold one.
 
-use super::simplex::{resume_from_basis, solve_lp, Lp, LpOutcome, Op, Resume};
+use super::simplex::{
+    resume_from_basis_with_stats, solve_lp_with_stats, Lp, LpOutcome, LpStats, Op, Resume,
+};
 use crate::error::{Error, Result};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -88,6 +90,9 @@ pub struct MilpSolution {
     /// Node LPs re-entered warm from a parent/cached basis vs solved cold.
     pub lp_warm: usize,
     pub lp_cold: usize,
+    /// Aggregate simplex counters across every node LP (warm and cold):
+    /// pivots, degenerate pivots, FTRAN/BTRAN ops, refactorizations.
+    pub lp_stats: LpStats,
 }
 
 struct Node {
@@ -151,7 +156,7 @@ fn first_fractional(x: &[f64], order: &[usize], tol: f64) -> Option<(usize, f64)
 /// node's own row count (a cached root basis) or one short (a parent basis;
 /// the appended branch row's slack column completes it). Returns `None`
 /// whenever the simplex layer cannot certify the warm result.
-fn try_warm(lp: &Lp, basis: &[usize]) -> Option<LpOutcome> {
+fn try_warm(lp: &Lp, basis: &[usize], stats: &mut LpStats) -> Option<LpOutcome> {
     let m = lp.constraints.len();
     let candidate: Vec<usize> = if basis.len() == m {
         basis.to_vec()
@@ -164,7 +169,7 @@ fn try_warm(lp: &Lp, basis: &[usize]) -> Option<LpOutcome> {
     } else {
         return None;
     };
-    match resume_from_basis(lp, &candidate) {
+    match resume_from_basis_with_stats(lp, &candidate, stats) {
         Ok(Resume::Solved(o)) => Some(o),
         _ => None,
     }
@@ -179,6 +184,7 @@ pub fn solve_milp(milp: &Milp, opts: &MilpOptions) -> Result<MilpSolution> {
     let mut branch_order: Vec<usize> = Vec::new();
     let mut lp_warm = 0usize;
     let mut lp_cold = 0usize;
+    let mut lp_stats = LpStats::default();
 
     let root = Node {
         bound: f64::NEG_INFINITY,
@@ -209,14 +215,14 @@ pub fn solve_milp(milp: &Milp, opts: &MilpOptions) -> Result<MilpSolution> {
         }
         // Warm re-entry from the parent/cached basis; cold solve whenever
         // the simplex layer cannot certify the warm result.
-        let outcome = match node.basis.as_deref().and_then(|b| try_warm(&lp, b)) {
+        let outcome = match node.basis.as_deref().and_then(|b| try_warm(&lp, b, &mut lp_stats)) {
             Some(o) => {
                 lp_warm += 1;
                 o
             }
             None => {
                 lp_cold += 1;
-                solve_lp(&lp)?
+                solve_lp_with_stats(&lp, &mut lp_stats)?
             }
         };
         let sol = match outcome {
@@ -280,6 +286,7 @@ pub fn solve_milp(milp: &Milp, opts: &MilpOptions) -> Result<MilpSolution> {
             branch_order,
             lp_warm,
             lp_cold,
+            lp_stats,
         }),
         None => Err(Error::infeasible("MILP has no integral solution")),
     }

@@ -1,0 +1,434 @@
+//! Basis factorization for the revised simplex: product-form (eta) inverse
+//! with a sparsity-ordered crash factorization and rank-1 pivot updates.
+//!
+//! The dense tableau maintains `B⁻¹A` explicitly and pays `O(m·n)` per pivot.
+//! The revised simplex keeps only a factorization of the basis matrix `B` and
+//! reconstructs tableau columns/rows on demand:
+//!
+//! * **FTRAN** — apply the eta file to a column `v`, yielding `P·B⁻¹v` (the
+//!   tableau column, up to the internal row permutation `P`),
+//! * **BTRAN** — apply the transposed etas in reverse, yielding `B⁻ᵀPᵀy`
+//!   (simplex multipliers / a tableau row),
+//! * **update** — absorb a basis exchange as one more eta factor built from
+//!   the already-FTRANed entering column (a rank-1 product-form update),
+//! * **refactorize** — rebuild the eta file from the current basis columns
+//!   when the update count or eta fill crosses a threshold, bounding both
+//!   work per FTRAN and accumulated drift.
+//!
+//! Each eta replays *exactly* the row operations the dense tableau's `pivot`
+//! performs on a single column (same multiply/subtract order, same `EPS`
+//! skip of negligible factors), so until the first refactorization an
+//! FTRANed column is bit-for-bit the dense tableau column. This is what lets
+//! the revised solver in [`super::simplex`] mirror the dense path's pivot
+//! choices and certify bit-identical results (see the parity property in
+//! `tests/properties.rs`).
+//!
+//! Positions vs rows: callers index the basis by *position* `p` (the slot in
+//! the row-aligned basis vector, identical to the dense tableau's row). A
+//! crash factorization or refactorization is free to pivot position `p` in
+//! any internal row; [`Factorization::row`] maps positions to rows so all
+//! caller-visible state (basic values, ratio tests, the reported basis) stays
+//! in position space with dense-identical semantics.
+
+/// Drop tolerance for eta entries; mirrors the dense pivot's skip of
+/// `|factor| < EPS` row operations.
+pub(crate) const EPS: f64 = 1e-9;
+/// Minimum acceptable pivot magnitude when factorizing a cached basis.
+pub(crate) const PIVOT_EPS: f64 = 1e-7;
+/// Refactorize after this many product-form updates.
+const REFACTOR_UPDATES: usize = 64;
+/// ... or when the eta file carries more than `16·m + 256` nonzeros.
+const REFACTOR_FILL_PER_ROW: usize = 16;
+const REFACTOR_FILL_BASE: usize = 256;
+
+/// One Gauss-Jordan elimination step: pivot in `row`, eliminating the pivot
+/// column from every other row. `entries` holds the pre-elimination column
+/// values outside the pivot row (negligible ones dropped), `inv` the pivot
+/// reciprocal.
+#[derive(Clone, Debug)]
+pub struct Eta {
+    pub row: usize,
+    pub inv: f64,
+    pub entries: Vec<(usize, f64)>,
+}
+
+impl Eta {
+    /// FTRAN step: the dense `pivot`'s column arithmetic, verbatim —
+    /// `x[row] *= inv`, then `x[i] -= v·x[row]` for each recorded entry.
+    #[inline]
+    pub fn apply(&self, x: &mut [f64]) {
+        let xr = x[self.row] * self.inv;
+        for &(i, v) in &self.entries {
+            x[i] -= v * xr;
+        }
+        x[self.row] = xr;
+    }
+
+    /// BTRAN step: the transposed elimination.
+    #[inline]
+    pub fn apply_transposed(&self, y: &mut [f64]) {
+        let mut s = y[self.row];
+        for &(i, v) in &self.entries {
+            s -= v * y[i];
+        }
+        y[self.row] = s * self.inv;
+    }
+
+    /// Build the eta for a pivot at `row` from an FTRANed column `z`,
+    /// dropping entries the dense pivot would skip. `None` if the pivot
+    /// entry is numerically unusable.
+    fn from_column(z: &[f64], row: usize) -> Option<Eta> {
+        let piv = z[row];
+        if piv.abs() <= EPS {
+            return None;
+        }
+        let mut entries = Vec::new();
+        for (i, &v) in z.iter().enumerate() {
+            if i != row && v.abs() >= EPS {
+                entries.push((i, v));
+            }
+        }
+        Some(Eta { row, inv: 1.0 / piv, entries })
+    }
+}
+
+/// Product-form factorization of an `m × m` basis matrix, plus the
+/// position → internal-row permutation and operation counters.
+#[derive(Clone, Debug)]
+pub struct Factorization {
+    m: usize,
+    /// Base etas (from the last crash/refactorization) followed by update
+    /// etas, applied in order for FTRAN and in reverse for BTRAN.
+    etas: Vec<Eta>,
+    eta_nnz: usize,
+    /// Updates appended since the last (re)factorization.
+    updates: usize,
+    row_of_pos: Vec<usize>,
+    /// FTRAN invocations (column solves against the factorization).
+    pub ftran_count: u64,
+    /// BTRAN invocations (row/multiplier solves).
+    pub btran_count: u64,
+    /// Times the eta file was rebuilt from scratch mid-solve.
+    pub refactorizations: u64,
+}
+
+impl Factorization {
+    /// The identity factorization: the basis IS the identity (the all-slack /
+    /// all-artificial starting basis of a cold solve), position `p` in row
+    /// `p`, no etas.
+    pub fn identity(m: usize) -> Self {
+        Factorization {
+            m,
+            etas: Vec::new(),
+            eta_nnz: 0,
+            updates: 0,
+            row_of_pos: (0..m).collect(),
+            ftran_count: 0,
+            btran_count: 0,
+            refactorizations: 0,
+        }
+    }
+
+    /// Crash-factorize the basis whose position-`p` column is `cols[p]`
+    /// (sparse `(row, value)` entries). Columns are eliminated sparsest
+    /// first (a static Markowitz ordering) with partial pivoting over the
+    /// unclaimed rows. Returns `None` when the columns are numerically
+    /// singular — the caller must fall back to a cold solve.
+    pub fn factorize(m: usize, cols: &[Vec<(usize, f64)>]) -> Option<Self> {
+        debug_assert_eq!(cols.len(), m);
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by_key(|&p| (cols[p].len(), p));
+        let mut b = Builder::new(m);
+        for &p in &order {
+            let z = b.transformed(&cols[p]);
+            b.pivot_best_row(p, z)?;
+        }
+        b.finish()
+    }
+
+    /// Internal row holding position `p`'s basic variable: FTRAN output
+    /// index `row(p)` is the tableau-column entry for position `p`.
+    #[inline]
+    pub fn row(&self, p: usize) -> usize {
+        self.row_of_pos[p]
+    }
+
+    /// Apply the eta file to `x` in place (forward transform): `x` becomes
+    /// the tableau column of the original column scattered into `x`, indexed
+    /// by internal row (read position `p` at [`row`](Self::row)`(p)`).
+    pub fn ftran(&mut self, x: &mut [f64]) {
+        self.ftran_count += 1;
+        for e in &self.etas {
+            e.apply(x);
+        }
+    }
+
+    /// Apply the transposed eta file in reverse (backward transform): for
+    /// `y` scattered by internal row, yields the simplex multipliers whose
+    /// dot product with an original column prices that column.
+    pub fn btran(&mut self, y: &mut [f64]) {
+        self.btran_count += 1;
+        for e in self.etas.iter().rev() {
+            e.apply_transposed(y);
+        }
+    }
+
+    /// Absorb a basis exchange at position `p`: the entering column's FTRAN
+    /// result `z` becomes one more eta factor pivoted in `row(p)`. Returns
+    /// `false` (leaving the factorization unchanged) when the pivot entry is
+    /// numerically unusable.
+    pub fn update(&mut self, p: usize, z: &[f64]) -> bool {
+        let Some(eta) = Eta::from_column(z, self.row_of_pos[p]) else {
+            return false;
+        };
+        self.eta_nnz += eta.entries.len() + 1;
+        self.etas.push(eta);
+        self.updates += 1;
+        true
+    }
+
+    /// Whether the eta file has grown past the update-count or fill
+    /// thresholds and should be rebuilt from the current basis columns.
+    pub fn should_refactorize(&self) -> bool {
+        self.updates >= REFACTOR_UPDATES
+            || self.eta_nnz > REFACTOR_FILL_PER_ROW * self.m + REFACTOR_FILL_BASE
+    }
+
+    /// Rebuild the eta file from the current basis columns, carrying the
+    /// operation counters over. Returns `false` (keeping the existing —
+    /// still valid — eta file and deferring the next rebuild) if the fresh
+    /// factorization fails numerically.
+    pub fn refactorize(&mut self, cols: &[Vec<(usize, f64)>]) -> bool {
+        match Self::factorize(self.m, cols) {
+            Some(fresh) => {
+                self.etas = fresh.etas;
+                self.eta_nnz = fresh.eta_nnz;
+                self.updates = 0;
+                self.row_of_pos = fresh.row_of_pos;
+                self.refactorizations += 1;
+                true
+            }
+            None => {
+                // Defer: pretend we just refactorized so the solve makes
+                // progress instead of re-attempting every pivot.
+                self.updates = 0;
+                false
+            }
+        }
+    }
+}
+
+/// Incremental crash-factorization builder: pivot columns one at a time,
+/// each claiming an internal row. Used both by [`Factorization::factorize`]
+/// and by the partial-basis completion in [`super::simplex`] (crash from the
+/// shared sub-block of a memoized basis, then fill the unclaimed rows).
+pub struct Builder {
+    m: usize,
+    etas: Vec<Eta>,
+    eta_nnz: usize,
+    claimed: Vec<bool>,
+    /// `(position, row)` pairs in pivot order; positions must form
+    /// `0..m` (in any order) by `finish` time.
+    assigned: Vec<(usize, usize)>,
+}
+
+impl Builder {
+    pub fn new(m: usize) -> Self {
+        Builder { m, etas: Vec::new(), eta_nnz: 0, claimed: vec![false; m], assigned: Vec::new() }
+    }
+
+    /// Scatter a sparse column and apply the etas accumulated so far —
+    /// the column as the partially built factorization sees it.
+    pub fn transformed(&self, col: &[(usize, f64)]) -> Vec<f64> {
+        let mut x = vec![0.0; self.m];
+        for &(i, v) in col {
+            x[i] += v;
+        }
+        for e in &self.etas {
+            e.apply(&mut x);
+        }
+        x
+    }
+
+    /// Whether internal row `r` has already been claimed by a pivot.
+    pub fn is_claimed(&self, r: usize) -> bool {
+        self.claimed[r]
+    }
+
+    /// Rows still unclaimed (ascending).
+    pub fn unclaimed(&self) -> Vec<usize> {
+        (0..self.m).filter(|&r| !self.claimed[r]).collect()
+    }
+
+    /// Pivot position `p` in the unclaimed row where its transformed column
+    /// `z` is largest in magnitude (partial pivoting; ties keep the smallest
+    /// row). `None` when no unclaimed entry clears `PIVOT_EPS` — the column
+    /// is dependent on those already pivoted.
+    pub fn pivot_best_row(&mut self, p: usize, z: Vec<f64>) -> Option<usize> {
+        let mut best_r = None;
+        let mut best_v = PIVOT_EPS;
+        for (r, &claimed) in self.claimed.iter().enumerate() {
+            if !claimed {
+                let v = z[r].abs();
+                if v > best_v {
+                    best_v = v;
+                    best_r = Some(r);
+                }
+            }
+        }
+        let r = best_r?;
+        self.pivot_at(p, r, z).then_some(r)
+    }
+
+    /// Pivot position `p` in a specific unclaimed row `r`. Returns `false`
+    /// (no state change) if `r` is claimed or the pivot entry is unusable.
+    pub fn pivot_at(&mut self, p: usize, r: usize, z: Vec<f64>) -> bool {
+        if self.claimed[r] || z[r].abs() <= PIVOT_EPS {
+            return false;
+        }
+        let Some(eta) = Eta::from_column(&z, r) else {
+            return false;
+        };
+        self.eta_nnz += eta.entries.len() + 1;
+        self.etas.push(eta);
+        self.claimed[r] = true;
+        self.assigned.push((p, r));
+        true
+    }
+
+    /// Finish into a [`Factorization`]. `None` unless every row was claimed
+    /// and the pivoted positions are exactly `0..m`.
+    pub fn finish(self) -> Option<Factorization> {
+        if self.assigned.len() != self.m {
+            return None;
+        }
+        let mut row_of_pos = vec![usize::MAX; self.m];
+        for &(p, r) in &self.assigned {
+            if p >= self.m || row_of_pos[p] != usize::MAX {
+                return None;
+            }
+            row_of_pos[p] = r;
+        }
+        Some(Factorization {
+            m: self.m,
+            etas: self.etas,
+            eta_nnz: self.eta_nnz,
+            updates: 0,
+            row_of_pos,
+            ftran_count: 0,
+            btran_count: 0,
+            refactorizations: 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 3×3 basis with known inverse: columns of
+    /// B = [[2,0,1],[0,1,0],[4,0,3]] (column-major below).
+    fn cols3() -> Vec<Vec<(usize, f64)>> {
+        vec![
+            vec![(0, 2.0), (2, 4.0)],
+            vec![(1, 1.0)],
+            vec![(0, 1.0), (2, 3.0)],
+        ]
+    }
+
+    fn ftran_pos(f: &mut Factorization, rhs: &[f64]) -> Vec<f64> {
+        let mut x = rhs.to_vec();
+        f.ftran(&mut x);
+        (0..rhs.len()).map(|p| x[f.row(p)]).collect()
+    }
+
+    #[test]
+    fn factorize_solves_against_the_basis() {
+        let cols = cols3();
+        let mut f = Factorization::factorize(3, &cols).expect("nonsingular");
+        // Solve B·w = [3, 5, 7]: det=2, w = (1, 5, 1).
+        let w = ftran_pos(&mut f, &[3.0, 5.0, 7.0]);
+        assert!((w[0] - 1.0).abs() < 1e-12, "{w:?}");
+        assert!((w[1] - 5.0).abs() < 1e-12, "{w:?}");
+        assert!((w[2] - 1.0).abs() < 1e-12, "{w:?}");
+        assert_eq!(f.ftran_count, 1);
+    }
+
+    #[test]
+    fn btran_matches_transposed_solve() {
+        let cols = cols3();
+        let mut f = Factorization::factorize(3, &cols).expect("nonsingular");
+        // y with y[row(p)] = c_B[p]; after BTRAN, y·A_j prices column j.
+        // Take c_B = (1, 2, 3) over positions: solve Bᵀ·y = c_B.
+        let mut y = vec![0.0; 3];
+        for (p, &c) in [1.0, 2.0, 3.0].iter().enumerate() {
+            y[f.row(p)] = c;
+        }
+        f.btran(&mut y);
+        // Check yᵀ·B(col p) == c_B[p].
+        for (p, &c) in [1.0, 2.0, 3.0].iter().enumerate() {
+            let dot: f64 = cols3()[p].iter().map(|&(i, v)| y[i] * v).sum();
+            assert!((dot - c).abs() < 1e-12, "p={p}: {dot} != {c}");
+        }
+        assert_eq!(f.btran_count, 1);
+    }
+
+    #[test]
+    fn update_replaces_one_column() {
+        let cols = cols3();
+        let mut f = Factorization::factorize(3, &cols).expect("nonsingular");
+        // Replace position 2's column with [1, 1, 1].
+        let newcol = vec![(0, 1.0), (1, 1.0), (2, 1.0)];
+        let mut z = vec![0.0; 3];
+        for &(i, v) in &newcol {
+            z[i] += v;
+        }
+        f.ftran(&mut z);
+        assert!(f.update(2, &z));
+        // New basis B' = [[2,0,1],[0,1,1],[4,0,1]]; solve B'·w = [4, 3, 6]:
+        // det = 2·1 - 1·(-4)... check by substitution: w = (1, 1, 2).
+        let w = ftran_pos(&mut f, &[4.0, 3.0, 6.0]);
+        assert!((2.0 * w[0] + w[2] - 4.0).abs() < 1e-12, "{w:?}");
+        assert!((w[1] + w[2] - 3.0).abs() < 1e-12, "{w:?}");
+        assert!((4.0 * w[0] + w[2] - 6.0).abs() < 1e-12, "{w:?}");
+    }
+
+    #[test]
+    fn singular_columns_are_rejected() {
+        // Two identical columns.
+        let cols = vec![vec![(0, 1.0), (1, 2.0)], vec![(0, 1.0), (1, 2.0)]];
+        assert!(Factorization::factorize(2, &cols).is_none());
+    }
+
+    #[test]
+    fn refactorize_resets_the_eta_file() {
+        let cols = cols3();
+        let mut f = Factorization::factorize(3, &cols).expect("nonsingular");
+        let mut z = vec![1.0, 1.0, 1.0];
+        f.ftran(&mut z);
+        // Reconstruct the raw (row-space) column before permutation tricks:
+        // just update with the FTRANed column directly.
+        assert!(f.update(0, &z));
+        assert!(f.refactorize(&cols));
+        assert_eq!(f.refactorizations, 1);
+        // Back to the original basis: the solve from the first test holds.
+        let w = ftran_pos(&mut f, &[3.0, 5.0, 7.0]);
+        assert!((w[0] - 1.0).abs() < 1e-12, "{w:?}");
+    }
+
+    #[test]
+    fn builder_completes_a_partial_basis() {
+        let mut b = Builder::new(3);
+        // Claim positions 0 and 1 from a partial column set.
+        let z0 = b.transformed(&[(0, 2.0), (2, 4.0)]);
+        assert!(b.pivot_best_row(0, z0).is_some());
+        let z1 = b.transformed(&[(1, 1.0)]);
+        assert!(b.pivot_best_row(1, z1).is_some());
+        assert_eq!(b.unclaimed().len(), 1);
+        // Fill the last row with a unit column there.
+        let r = b.unclaimed()[0];
+        let z2 = b.transformed(&[(r, 1.0)]);
+        assert!(b.pivot_at(2, r, z2));
+        assert!(b.finish().is_some());
+    }
+}

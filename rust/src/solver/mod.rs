@@ -4,9 +4,17 @@
 //! packing with a Gurobi branch-and-cut solver. Gurobi is proprietary and not
 //! available offline, so this module implements:
 //!
-//! * [`simplex`] — a dense two-phase primal simplex for LP relaxations,
-//!   with a certified warm re-entry path ([`simplex::resume_from_basis`]:
-//!   re-install a cached optimal basis, repair RHS drift by dual simplex),
+//! * [`factor`] — product-form (eta) basis factorization: sparsity-ordered
+//!   crash factorization, FTRAN/BTRAN transforms, rank-1 pivot updates, and
+//!   threshold-driven refactorization,
+//! * [`simplex`] — a two-phase *revised* primal simplex over that
+//!   factorization (per-iteration cost scales with basis size and column
+//!   sparsity, not tableau width), with a certified warm re-entry path
+//!   ([`simplex::resume_from_basis`]: crash-factorize a cached optimal
+//!   basis, repair RHS drift by dual simplex) and partial-basis completion
+//!   ([`simplex::complete_basis`]) for bounded structural deltas. The dense
+//!   tableau survives as [`simplex::solve_lp_dense`], the bit-for-bit
+//!   reference the property suite holds the revised path to,
 //! * [`bnb`] — best-first branch-and-bound over fractional integer variables
 //!   with warm-start incumbents (heuristic upper bounds, exactly the role the
 //!   paper's FFD-style warm starts play in branch-and-cut), per-node warm LP
@@ -14,10 +22,16 @@
 //!   structurally identical solve's root basis + branching order.
 //!
 //! Paper-scale instances (tens of stream groups × a dozen instance choices)
-//! solve in milliseconds; see `benches/bench_packing.rs` for scaling curves.
+//! solve in milliseconds; see `benches/bench_packing.rs` for scaling curves
+//! and `benches/bench_solver.rs` for the dense-vs-revised comparison.
 
 pub mod bnb;
+pub mod factor;
 pub mod simplex;
 
 pub use bnb::{solve_milp, Milp, MilpOptions, MilpSolution};
-pub use simplex::{resume_from_basis, solve_lp, Constraint, Lp, LpOutcome, LpSolution, Op, Resume};
+pub use simplex::{
+    complete_basis, resume_from_basis, resume_from_basis_with_stats, solve_lp, solve_lp_dense,
+    solve_lp_dense_with_stats, solve_lp_with_stats, Constraint, Lp, LpOutcome, LpSolution,
+    LpStats, Op, Resume,
+};

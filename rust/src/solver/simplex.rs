@@ -1,21 +1,35 @@
-//! Dense two-phase primal simplex, plus a warm re-entry path.
+//! Revised simplex on a factorized basis, plus a warm re-entry path.
 //!
-//! Solves `min c·x  s.t.  A x (≤|≥|=) b,  x ≥ 0`. Suited to the small/medium
-//! dense LPs produced by the packing formulations (≤ a few thousand
-//! variables). Uses Dantzig pricing with a Bland's-rule fallback to guarantee
-//! termination under degeneracy.
+//! Solves `min c·x  s.t.  A x (≤|≥|=) b,  x ≥ 0`. The production solver
+//! ([`solve_lp`]) is a two-phase *revised* simplex: the basis inverse is kept
+//! as a product-form eta factorization ([`super::factor`]), the entering
+//! column is reconstructed by FTRAN and the pricing row by BTRAN, so each
+//! iteration costs `O(nnz(A) + m + |eta file|)` instead of the dense
+//! tableau's `O(m·n)` row sweep. The dense tableau survives as
+//! [`solve_lp_dense`] — the reference implementation the property suite
+//! holds the revised path to, bit for bit.
+//!
+//! Both paths share the pivot rules (two-tier Dantzig with a degenerate-band
+//! skip and a Bland fallback, EPS-windowed ratio tests tie-broken on basic
+//! variable ids) and a canonical finalization that recomputes the solution
+//! from the final basis by one deterministic dense solve. Equal bases thus
+//! yield bit-identical objectives and solutions, which is what makes the
+//! revised==dense parity property in `tests/properties.rs` checkable with
+//! `==` rather than tolerances.
 //!
 //! [`solve_lp`] reports the optimal basis alongside the solution (when it is
 //! free of artificial columns), and [`resume_from_basis`] re-enters the
-//! simplex from such a basis: the basis is re-installed by direct pivoting
-//! and, when only the right-hand side changed since the basis was optimal
-//! (the delta-solve case — a demand count moved between two re-plans), a
-//! dual-simplex pass restores feasibility in a handful of pivots instead of
-//! a cold two-phase solve. The warm path is *certified*: it either returns
-//! an outcome with exactly `solve_lp`'s meaning or reports `NotCertified`,
-//! in which case the caller must solve cold.
+//! simplex from such a basis by *crash-factorizing* it directly — no
+//! pivot-by-pivot re-installation — then repairing RHS drift by dual simplex
+//! (the delta-solve case: demand counts moved between two re-plans). The
+//! warm path is *certified*: it either returns an outcome with exactly
+//! [`solve_lp`]'s meaning or reports `NotCertified`, in which case the
+//! caller must solve cold. [`complete_basis`] extends a partial basis (the
+//! shared sub-block of a memoized basis after a bounded structural delta)
+//! into a full crash candidate for the same machinery.
 
 use crate::error::{Error, Result};
+use crate::solver::factor::{Builder, Factorization};
 
 /// Constraint sense.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -91,11 +105,44 @@ pub enum Resume {
     NotCertified,
 }
 
+/// Per-solve counters surfaced up through `SolveStats` and the pipeline
+/// metrics. All zero-cost to maintain; the `_with_stats` entry points
+/// accumulate into a caller-owned instance.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LpStats {
+    /// Simplex pivots executed (both phases, primal and dual).
+    pub iterations: u64,
+    /// Pivots whose min-ratio was ~0: the basis changed but the point did
+    /// not move (the degeneracy the two-tier pricing works to avoid).
+    pub degenerate_pivots: u64,
+    /// Column solves against the factorization (revised path only).
+    pub ftran_ops: u64,
+    /// Row/multiplier solves against the factorization (revised path only).
+    pub btran_ops: u64,
+    /// Eta-file rebuilds triggered mid-solve (revised path only).
+    pub refactorizations: u64,
+}
+
+impl LpStats {
+    pub fn absorb(&mut self, other: &LpStats) {
+        self.iterations += other.iterations;
+        self.degenerate_pivots += other.degenerate_pivots;
+        self.ftran_ops += other.ftran_ops;
+        self.btran_ops += other.btran_ops;
+        self.refactorizations += other.refactorizations;
+    }
+}
+
 const EPS: f64 = 1e-9;
-/// Pivot-magnitude floor when re-installing a cached basis.
+/// Pivot-magnitude floor when installing a cached basis or driving out a
+/// basic artificial.
 const PIVOT_EPS: f64 = 1e-7;
 /// Feasibility tolerance for the warm path's primal/dual checks.
 const FEAS_EPS: f64 = 1e-7;
+/// Reduced costs in `(-RC_DEGEN_BAND, 0)` are treated as degenerate noise:
+/// two-tier Dantzig pricing only falls back to them when no strongly
+/// negative column exists.
+const RC_DEGEN_BAND: f64 = 1e-7;
 /// Iterations of Dantzig pricing before switching to Bland's rule.
 const BLAND_AFTER: usize = 5_000;
 const MAX_ITERS: usize = 200_000;
@@ -104,9 +151,688 @@ const MAX_ITERS: usize = 200_000;
 /// `NotCertified` (cold solve) instead of burning the full primal budget.
 const DUAL_MAX_ITERS: usize = 2_000;
 
+/// Entering-column rule shared by the dense and revised paths: two-tier
+/// Dantzig (most negative reduced cost, skipping the degenerate near-zero
+/// band unless nothing else qualifies) with an EPS window so that only a
+/// decisively more negative column displaces an earlier one — ulp-level
+/// noise between the two paths cannot flip the choice. Bland's rule (first
+/// negative column) takes over after `BLAND_AFTER` iterations.
+fn choose_entering(n: usize, bland: bool, rc: impl Fn(usize) -> f64) -> Option<usize> {
+    if bland {
+        return (0..n).find(|&j| rc(j) < -EPS);
+    }
+    let mut col = None;
+    let mut best = f64::INFINITY;
+    for j in 0..n {
+        let r = rc(j);
+        if r < -RC_DEGEN_BAND && r < best - EPS {
+            best = r;
+            col = Some(j);
+        }
+    }
+    if col.is_some() {
+        return col;
+    }
+    let mut best = f64::INFINITY;
+    for j in 0..n {
+        let r = rc(j);
+        if r < -EPS && r < best - EPS {
+            best = r;
+            col = Some(j);
+        }
+    }
+    col
+}
+
+/// Leaving-row rule shared by both paths: min-ratio test with an EPS window,
+/// ties broken toward the smallest basic *variable id* (not row index, so
+/// the choice is independent of internal row permutations). Returns the
+/// winning position and its ratio, or `None` (unbounded direction).
+fn choose_leaving(
+    m: usize,
+    basis: &[usize],
+    entry: impl Fn(usize) -> f64,
+    rhs: impl Fn(usize) -> f64,
+) -> Option<(usize, f64)> {
+    let mut row: Option<usize> = None;
+    let mut best_ratio = f64::INFINITY;
+    for r in 0..m {
+        let a = entry(r);
+        if a > EPS {
+            let ratio = rhs(r) / a;
+            let better = ratio < best_ratio - EPS
+                || (ratio < best_ratio + EPS
+                    && row.is_some_and(|pr: usize| basis[r] < basis[pr]));
+            if better {
+                best_ratio = ratio;
+                row = Some(r);
+            }
+        }
+    }
+    row.map(|r| (r, best_ratio))
+}
+
+/// Normalize constraint rows to nonnegative RHS (shared by the cold and warm
+/// paths so their augmented column layouts agree).
+fn normalized_rows(lp: &Lp) -> Vec<(Vec<(usize, f64)>, Op, f64)> {
+    let mut rows: Vec<(Vec<(usize, f64)>, Op, f64)> = Vec::with_capacity(lp.constraints.len());
+    for c in &lp.constraints {
+        let mut coeffs = c.coeffs.clone();
+        let mut op = c.op;
+        let mut rhs = c.rhs;
+        if rhs < 0.0 {
+            for (_, v) in coeffs.iter_mut() {
+                *v = -*v;
+            }
+            rhs = -rhs;
+            op = match op {
+                Op::Le => Op::Ge,
+                Op::Ge => Op::Le,
+                Op::Eq => Op::Eq,
+            };
+        }
+        rows.push((coeffs, op, rhs));
+    }
+    rows
+}
+
+/// Column-major view of the normalized rows in the canonical augmented
+/// layout `[structural | slack | artificial]` (artificials optional). The
+/// slack/artificial index assignment matches the dense tableau's exactly.
+struct ColumnLayout {
+    cols: Vec<Vec<(usize, f64)>>,
+    b: Vec<f64>,
+    /// Structural + slack column count (the artificial-free prefix).
+    n_real: usize,
+    slack_of_row: Vec<Option<usize>>,
+    art_of_row: Vec<Option<usize>>,
+}
+
+fn column_layout(n0: usize, rows: &[(Vec<(usize, f64)>, Op, f64)], with_art: bool) -> ColumnLayout {
+    let m = rows.len();
+    let num_slack = rows.iter().filter(|r| r.1 != Op::Eq).count();
+    let num_art = if with_art { rows.iter().filter(|r| r.1 != Op::Le).count() } else { 0 };
+    let n_real = n0 + num_slack;
+    let mut cols = vec![Vec::new(); n_real + num_art];
+    let mut b = vec![0.0; m];
+    let mut slack_of_row = vec![None; m];
+    let mut art_of_row = vec![None; m];
+    let mut slack_idx = n0;
+    let mut art_idx = n_real;
+    for (r, (coeffs, op, rhs)) in rows.iter().enumerate() {
+        b[r] = *rhs;
+        for &(j, v) in coeffs {
+            cols[j].push((r, v));
+        }
+        match op {
+            Op::Le => {
+                cols[slack_idx].push((r, 1.0));
+                slack_of_row[r] = Some(slack_idx);
+                slack_idx += 1;
+            }
+            Op::Ge => {
+                cols[slack_idx].push((r, -1.0));
+                slack_of_row[r] = Some(slack_idx);
+                slack_idx += 1;
+                if with_art {
+                    cols[art_idx].push((r, 1.0));
+                    art_of_row[r] = Some(art_idx);
+                    art_idx += 1;
+                }
+            }
+            Op::Eq => {
+                if with_art {
+                    cols[art_idx].push((r, 1.0));
+                    art_of_row[r] = Some(art_idx);
+                    art_idx += 1;
+                }
+            }
+        }
+    }
+    ColumnLayout { cols, b, n_real, slack_of_row, art_of_row }
+}
+
+/// Canonical solution extraction shared by every solve path: recompute the
+/// basic values from the final basis with one deterministic dense solve
+/// (partial pivoting on max magnitude, first row winning ties, fixed
+/// elimination and summation order). Two paths that agree on the final
+/// basis therefore return bit-identical `x` and `objective`, regardless of
+/// how their iteration arithmetic drifted apart along the way.
+fn finalize_solution(
+    lp: &Lp,
+    cols: &[Vec<(usize, f64)>],
+    b: &[f64],
+    basis: &[usize],
+    n_real: usize,
+) -> LpSolution {
+    let m = b.len();
+    let mut a = vec![vec![0.0; m + 1]; m];
+    for (p, &c) in basis.iter().enumerate() {
+        for &(i, v) in &cols[c] {
+            a[i][p] += v;
+        }
+    }
+    for (r, &rhs) in b.iter().enumerate() {
+        a[r][m] = rhs;
+    }
+    for k in 0..m {
+        let mut pr = k;
+        let mut pv = a[k][k].abs();
+        for (r, row) in a.iter().enumerate().skip(k + 1) {
+            let v = row[k].abs();
+            if v > pv {
+                pv = v;
+                pr = r;
+            }
+        }
+        if pv <= 1e-12 {
+            continue; // numerically singular column; its value stays zero
+        }
+        a.swap(k, pr);
+        let inv = 1.0 / a[k][k];
+        let (pivot_row, rest) = a[k..].split_first_mut().expect("k < m");
+        for row in rest {
+            let f = row[k] * inv;
+            for (tv, pv) in row.iter_mut().zip(pivot_row.iter()).skip(k) {
+                *tv -= f * pv;
+            }
+        }
+    }
+    let mut xb = vec![0.0; m];
+    for k in (0..m).rev() {
+        let mut s = a[k][m];
+        for j in (k + 1)..m {
+            s -= a[k][j] * xb[j];
+        }
+        let d = a[k][k];
+        xb[k] = if d.abs() > 1e-12 { s / d } else { 0.0 };
+    }
+    let mut x = vec![0.0; lp.num_vars];
+    for (p, &c) in basis.iter().enumerate() {
+        if c < lp.num_vars {
+            x[c] = xb[p];
+        }
+    }
+    let objective = lp.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+    let out = basis.iter().all(|&c| c < n_real).then(|| basis.to_vec());
+    LpSolution { x, objective, basis: out }
+}
+
+// ---------------------------------------------------------------------------
+// Revised simplex (production path)
+// ---------------------------------------------------------------------------
+
+/// Revised-simplex state: column-major constraint matrix, a factorized
+/// basis, and the basic values — everything indexed by *position* (the slot
+/// in the row-aligned basis vector), with the factorization's internal row
+/// permutation hidden behind [`Factorization::row`].
+struct Revised {
+    m: usize,
+    n: usize,
+    n_real: usize,
+    num_art: usize,
+    cols: Vec<Vec<(usize, f64)>>,
+    b: Vec<f64>,
+    costs: Vec<f64>,
+    basis: Vec<usize>,
+    x: Vec<f64>,
+    fact: Factorization,
+    in_basis: Vec<bool>,
+    barred: Vec<bool>,
+    stats: LpStats,
+}
+
+impl Revised {
+    fn build_cold(lp: &Lp) -> Revised {
+        let rows = normalized_rows(lp);
+        let m = rows.len();
+        let lay = column_layout(lp.num_vars, &rows, true);
+        let n = lay.cols.len();
+        let mut basis = Vec::with_capacity(m);
+        for (r, row) in rows.iter().enumerate() {
+            let col = match row.1 {
+                Op::Le => lay.slack_of_row[r],
+                Op::Ge | Op::Eq => lay.art_of_row[r],
+            };
+            basis.push(col.expect("starting column exists for every row"));
+        }
+        let mut in_basis = vec![false; n];
+        for &c in &basis {
+            in_basis[c] = true;
+        }
+        let x = lay.b.clone();
+        Revised {
+            m,
+            n,
+            n_real: lay.n_real,
+            num_art: n - lay.n_real,
+            cols: lay.cols,
+            b: lay.b,
+            costs: vec![0.0; n],
+            basis,
+            x,
+            fact: Factorization::identity(m),
+            in_basis,
+            barred: vec![false; n],
+            stats: LpStats::default(),
+        }
+    }
+
+    /// Crash-factorize a cached basis directly — the warm path's whole point
+    /// is that no pivot-by-pivot re-installation happens. `None` when the
+    /// basis is malformed or numerically singular for this matrix.
+    fn build_resume(lp: &Lp, basis_in: &[usize]) -> Option<Revised> {
+        let rows = normalized_rows(lp);
+        let m = rows.len();
+        if basis_in.len() != m {
+            return None;
+        }
+        let lay = column_layout(lp.num_vars, &rows, false);
+        let n = lay.cols.len();
+        let mut seen = vec![false; n];
+        for &c in basis_in {
+            if c >= n || seen[c] {
+                return None;
+            }
+            seen[c] = true;
+        }
+        let bcols: Vec<Vec<(usize, f64)>> = basis_in.iter().map(|&c| lay.cols[c].clone()).collect();
+        let mut fact = Factorization::factorize(m, &bcols)?;
+        let mut z = lay.b.clone();
+        fact.ftran(&mut z);
+        let x: Vec<f64> = (0..m).map(|p| z[fact.row(p)]).collect();
+        let mut costs = vec![0.0; n];
+        costs[..lp.num_vars].copy_from_slice(&lp.objective);
+        Some(Revised {
+            m,
+            n,
+            n_real: n,
+            num_art: 0,
+            cols: lay.cols,
+            b: lay.b,
+            costs,
+            basis: basis_in.to_vec(),
+            x,
+            fact,
+            in_basis: seen,
+            barred: vec![false; n],
+            stats: LpStats::default(),
+        })
+    }
+
+    /// Scatter column `j` and FTRAN it: the tableau column, indexed by
+    /// internal row (read position `p` at `fact.row(p)`).
+    fn ftran_col(&mut self, j: usize) -> Vec<f64> {
+        let mut z = vec![0.0; self.m];
+        for &(i, v) in &self.cols[j] {
+            z[i] += v;
+        }
+        self.fact.ftran(&mut z);
+        z
+    }
+
+    /// BTRAN the basic costs into simplex multipliers and price every
+    /// non-basic, non-barred column. Recomputed fresh each iteration, so
+    /// reduced costs never accumulate drift across pivots.
+    fn reduced_costs(&mut self) -> Vec<f64> {
+        let mut y = vec![0.0; self.m];
+        for p in 0..self.m {
+            y[self.fact.row(p)] = self.costs[self.basis[p]];
+        }
+        self.fact.btran(&mut y);
+        let mut rc = vec![0.0; self.n];
+        for (j, out) in rc.iter_mut().enumerate() {
+            if self.in_basis[j] || self.barred[j] {
+                continue;
+            }
+            let dot: f64 = self.cols[j].iter().map(|&(i, v)| y[i] * v).sum();
+            *out = self.costs[j] - dot;
+        }
+        rc
+    }
+
+    /// Execute the basis exchange: update the basic values with exactly the
+    /// dense tableau's RHS arithmetic (scale by the pivot reciprocal, then
+    /// subtract, skipping sub-EPS factors), absorb the pivot as an eta
+    /// update, and refactorize if the eta file has grown past its threshold.
+    fn pivot_update(&mut self, p: usize, col: usize, z: Vec<f64>) -> Result<()> {
+        let r = self.fact.row(p);
+        let piv = z[r];
+        if piv.abs() <= EPS {
+            return Err(Error::solver("vanishing pivot in factorized update"));
+        }
+        let inv = 1.0 / piv;
+        let xr = self.x[p] * inv;
+        for q in 0..self.m {
+            if q == p {
+                continue;
+            }
+            let zq = z[self.fact.row(q)];
+            if zq.abs() >= EPS {
+                self.x[q] -= zq * xr;
+            }
+        }
+        self.x[p] = xr;
+        if !self.fact.update(p, &z) {
+            return Err(Error::solver("vanishing pivot in factorized update"));
+        }
+        self.in_basis[self.basis[p]] = false;
+        self.in_basis[col] = true;
+        self.basis[p] = col;
+        if self.fact.should_refactorize() {
+            self.refresh_factorization();
+        }
+        Ok(())
+    }
+
+    /// Rebuild the eta file from the current basis columns and refresh the
+    /// basic values from the fresh factorization (the drift repair).
+    fn refresh_factorization(&mut self) {
+        let bcols: Vec<Vec<(usize, f64)>> =
+            self.basis.iter().map(|&c| self.cols[c].clone()).collect();
+        if self.fact.refactorize(&bcols) {
+            let mut z = self.b.clone();
+            self.fact.ftran(&mut z);
+            for p in 0..self.m {
+                self.x[p] = z[self.fact.row(p)];
+            }
+        }
+    }
+
+    /// Primal simplex on the current costs. `Ok(true)` at optimality,
+    /// `Ok(false)` on an unbounded direction.
+    fn optimize(&mut self, max_iters: usize) -> Result<bool> {
+        for iter in 0..max_iters {
+            let bland = iter >= BLAND_AFTER;
+            let rc = self.reduced_costs();
+            let Some(col) = choose_entering(self.n, bland, |j| rc[j]) else {
+                return Ok(true);
+            };
+            let z = self.ftran_col(col);
+            let leave =
+                choose_leaving(self.m, &self.basis, |p| z[self.fact.row(p)], |p| self.x[p]);
+            match leave {
+                Some((p, ratio)) => {
+                    if ratio <= EPS {
+                        self.stats.degenerate_pivots += 1;
+                    }
+                    self.stats.iterations += 1;
+                    self.pivot_update(p, col, z)?;
+                }
+                None => return Ok(false),
+            }
+        }
+        Err(Error::solver("simplex iteration limit exceeded"))
+    }
+
+    /// Dual simplex: from a dual-feasible basis, restore primal feasibility.
+    /// `Ok(true)` when primal-feasible (hence optimal), `Ok(false)` when
+    /// primal infeasibility is certified. Budgeted at `DUAL_MAX_ITERS`:
+    /// degenerate stalls surface as an `Err`, which the warm path maps to
+    /// `NotCertified` — never wrong, just cold.
+    fn dual_optimize(&mut self) -> Result<bool> {
+        for _ in 0..DUAL_MAX_ITERS {
+            // Leaving position: most negative basic value (first minimum).
+            let mut leave = None;
+            let mut most = -EPS;
+            for (p, &v) in self.x.iter().enumerate() {
+                if v < most {
+                    most = v;
+                    leave = Some(p);
+                }
+            }
+            let Some(p) = leave else { return Ok(true) };
+            // Pricing row for the leaving position, via BTRAN of its unit
+            // vector; entering column by the dual ratio test over negative
+            // row entries (first minimum kept — deterministic).
+            let r = self.fact.row(p);
+            let mut rho = vec![0.0; self.m];
+            rho[r] = 1.0;
+            self.fact.btran(&mut rho);
+            let rc = self.reduced_costs();
+            let mut col = None;
+            let mut best = f64::INFINITY;
+            for j in 0..self.n {
+                if self.in_basis[j] || self.barred[j] {
+                    continue;
+                }
+                let arj: f64 = self.cols[j].iter().map(|&(i, v)| rho[i] * v).sum();
+                if arj < -EPS {
+                    let ratio = rc[j].max(0.0) / -arj;
+                    if ratio < best {
+                        best = ratio;
+                        col = Some(j);
+                    }
+                }
+            }
+            match col {
+                Some(c) => {
+                    let z = self.ftran_col(c);
+                    if z[r].abs() <= EPS {
+                        return Err(Error::solver("dual pivot vanished under factorization"));
+                    }
+                    self.stats.iterations += 1;
+                    self.pivot_update(p, c, z)?;
+                }
+                None => return Ok(false), // certified primal infeasible
+            }
+        }
+        Err(Error::solver("dual simplex iteration limit exceeded"))
+    }
+
+    /// Drive basic artificials out after phase 1 where a real pivot exists
+    /// (mirrors the dense drive-out scan: first structural/slack column with
+    /// a usable pivot row entry; redundant rows keep their artificial).
+    fn drive_out_artificials(&mut self) -> Result<()> {
+        for p in 0..self.m {
+            if self.basis[p] < self.n_real {
+                continue;
+            }
+            let r = self.fact.row(p);
+            let mut rho = vec![0.0; self.m];
+            rho[r] = 1.0;
+            self.fact.btran(&mut rho);
+            for j in 0..self.n_real {
+                if self.in_basis[j] {
+                    continue;
+                }
+                let alpha: f64 = self.cols[j].iter().map(|&(i, v)| rho[i] * v).sum();
+                if alpha.abs() > PIVOT_EPS {
+                    let z = self.ftran_col(j);
+                    if z[r].abs() > EPS {
+                        self.pivot_update(p, j, z)?;
+                        break;
+                    }
+                }
+            }
+            // No usable column: the row is redundant; the artificial stays
+            // basic at (numerical) zero and the basis reports as
+            // non-reinstallable.
+        }
+        Ok(())
+    }
+
+    fn run_cold(&mut self, lp: &Lp) -> Result<LpOutcome> {
+        if self.num_art > 0 {
+            // Phase 1: minimize the artificial sum.
+            for j in self.n_real..self.n {
+                self.costs[j] = 1.0;
+            }
+            if !self.optimize(MAX_ITERS)? {
+                return Err(Error::solver("phase-1 unbounded (internal error)"));
+            }
+            let infeas: f64 = (0..self.m)
+                .filter(|&p| self.basis[p] >= self.n_real)
+                .map(|p| self.x[p])
+                .sum();
+            if infeas > 1e-7 {
+                return Ok(LpOutcome::Infeasible);
+            }
+            self.drive_out_artificials()?;
+            for j in self.n_real..self.n {
+                self.costs[j] = 0.0;
+                self.barred[j] = true;
+            }
+        }
+        // Phase 2: the original objective.
+        self.costs[..lp.num_vars].copy_from_slice(&lp.objective);
+        if !self.optimize(MAX_ITERS)? {
+            return Ok(LpOutcome::Unbounded);
+        }
+        Ok(LpOutcome::Optimal(self.finalize(lp)))
+    }
+
+    fn run_resume(&mut self, lp: &Lp) -> Result<Resume> {
+        let primal_feasible = self.x.iter().all(|&v| v >= -FEAS_EPS);
+        if !primal_feasible {
+            // Only the RHS moved: the basis stays dual feasible and a dual
+            // simplex pass repairs it. Anything else is not certifiable.
+            let rc = self.reduced_costs();
+            if rc.iter().any(|&v| v < -FEAS_EPS) {
+                return Ok(Resume::NotCertified);
+            }
+            match self.dual_optimize() {
+                Ok(true) => {}
+                Ok(false) => return Ok(Resume::Solved(LpOutcome::Infeasible)),
+                Err(_) => return Ok(Resume::NotCertified),
+            }
+        }
+        match self.optimize(MAX_ITERS) {
+            Ok(true) => {}
+            Ok(false) => return Ok(Resume::Solved(LpOutcome::Unbounded)),
+            Err(_) => return Ok(Resume::NotCertified),
+        }
+        Ok(Resume::Solved(LpOutcome::Optimal(self.finalize(lp))))
+    }
+
+    fn finalize(&self, lp: &Lp) -> LpSolution {
+        finalize_solution(lp, &self.cols, &self.b, &self.basis, self.n_real)
+    }
+
+    /// Fold the factorization's operation counters into the solve stats.
+    fn merge_fact_stats(&mut self) {
+        self.stats.ftran_ops += self.fact.ftran_count;
+        self.stats.btran_ops += self.fact.btran_count;
+        self.stats.refactorizations += self.fact.refactorizations;
+    }
+}
+
+/// Solve the LP with the revised simplex; returns `Optimal`, `Infeasible`,
+/// or `Unbounded`.
+pub fn solve_lp(lp: &Lp) -> Result<LpOutcome> {
+    solve_lp_with_stats(lp, &mut LpStats::default())
+}
+
+/// [`solve_lp`], accumulating iteration/FTRAN/BTRAN/refactorization counts
+/// into `stats`.
+pub fn solve_lp_with_stats(lp: &Lp, stats: &mut LpStats) -> Result<LpOutcome> {
+    let mut rv = Revised::build_cold(lp);
+    let out = rv.run_cold(lp);
+    rv.merge_fact_stats();
+    stats.absorb(&rv.stats);
+    out
+}
+
+/// Re-enter the simplex from a previously optimal basis of a structurally
+/// identical LP (same variables, same rows in the same order — typically
+/// only the RHS changed). The basis is installed as a *crash
+/// factorization* — one sparsity-ordered refactorization of its columns, no
+/// pivot-by-pivot re-installation — then certified: either an outcome with
+/// exactly [`solve_lp`]'s meaning is returned, or [`Resume::NotCertified`],
+/// in which case the caller must fall back to a cold solve. Never less
+/// exact than the cold path: the installed basis is re-optimized (dual then
+/// primal simplex) to a fully certified optimum.
+pub fn resume_from_basis(lp: &Lp, basis: &[usize]) -> Result<Resume> {
+    resume_from_basis_with_stats(lp, basis, &mut LpStats::default())
+}
+
+/// [`resume_from_basis`] with counter accumulation into `stats`.
+pub fn resume_from_basis_with_stats(
+    lp: &Lp,
+    basis: &[usize],
+    stats: &mut LpStats,
+) -> Result<Resume> {
+    let Some(mut rv) = Revised::build_resume(lp, basis) else {
+        return Ok(Resume::NotCertified);
+    };
+    let out = rv.run_resume(lp);
+    rv.merge_fact_stats();
+    stats.absorb(&rv.stats);
+    out
+}
+
+/// Extend a partial basis (columns carried over from a structurally related
+/// solve — the shared sub-block of a memoized basis) into a full basis
+/// candidate for [`resume_from_basis`]. Dependent or out-of-range columns
+/// are dropped; unclaimed rows are filled by their own slack when possible,
+/// then by a scan for any independent column. Returns `None` when the
+/// partial set covers less than half the rows (a crash from so little is
+/// not worth attempting) or no completion exists — callers then solve cold.
+pub fn complete_basis(lp: &Lp, partial: &[usize]) -> Option<Vec<usize>> {
+    let rows = normalized_rows(lp);
+    let m = rows.len();
+    if m == 0 {
+        return Some(Vec::new());
+    }
+    let lay = column_layout(lp.num_vars, &rows, false);
+    let n = lay.cols.len();
+    let mut seen = vec![false; n];
+    let mut builder = Builder::new(m);
+    let mut out: Vec<usize> = Vec::with_capacity(m);
+    for &c in partial {
+        if c >= n || seen[c] {
+            continue;
+        }
+        seen[c] = true;
+        let z = builder.transformed(&lay.cols[c]);
+        if builder.pivot_best_row(out.len(), z).is_some() {
+            out.push(c);
+        }
+    }
+    if out.len() * 2 < m {
+        return None;
+    }
+    for r in builder.unclaimed() {
+        // Prefer the row's own slack — the cheapest independent column.
+        let mut filled = false;
+        if let Some(s) = lay.slack_of_row[r] {
+            if !seen[s] {
+                let z = builder.transformed(&lay.cols[s]);
+                if builder.pivot_at(out.len(), r, z) {
+                    seen[s] = true;
+                    out.push(s);
+                    filled = true;
+                }
+            }
+        }
+        if !filled {
+            for j in 0..n {
+                if seen[j] {
+                    continue;
+                }
+                let z = builder.transformed(&lay.cols[j]);
+                if z[r].abs() > PIVOT_EPS && builder.pivot_at(out.len(), r, z) {
+                    seen[j] = true;
+                    out.push(j);
+                    filled = true;
+                    break;
+                }
+            }
+        }
+        if !filled {
+            return None;
+        }
+    }
+    (out.len() == m).then_some(out)
+}
+
+// ---------------------------------------------------------------------------
+// Dense tableau (reference path)
+// ---------------------------------------------------------------------------
+
 struct Tableau {
-    /// (m+1) x (n+1): rows 0..m constraints, last row objective (reduced costs);
-    /// column n is the RHS.
+    /// (m+1) x (n+1): rows 0..m constraints, last row objective (reduced
+    /// costs); column n is the RHS.
     a: Vec<Vec<f64>>,
     m: usize,
     n: usize,
@@ -144,50 +870,26 @@ impl Tableau {
         self.basis[row] = col;
     }
 
-    /// Run simplex iterations on the current objective row. Returns false if
-    /// unbounded.
-    fn optimize(&mut self) -> Result<bool> {
+    /// Run simplex iterations on the current objective row (same entering /
+    /// leaving rules as the revised path). Returns false if unbounded.
+    fn optimize(&mut self, stats: &mut LpStats) -> Result<bool> {
         for iter in 0..MAX_ITERS {
             let bland = iter >= BLAND_AFTER;
-            // Entering column: most negative reduced cost (Dantzig) or first
-            // negative (Bland).
-            let mut col = None;
-            let mut best = -EPS;
-            for j in 0..self.n {
-                let rc = self.a[self.m][j];
-                if rc < -EPS {
-                    if bland {
-                        col = Some(j);
-                        break;
-                    }
-                    if rc < best {
-                        best = rc;
-                        col = Some(j);
-                    }
-                }
-            }
-            let col = match col {
+            let obj = &self.a[self.m];
+            let col = match choose_entering(self.n, bland, |j| obj[j]) {
                 Some(c) => c,
                 None => return Ok(true), // optimal
             };
-            // Leaving row: min ratio test (Bland tie-break on basis index).
-            let mut row = None;
-            let mut best_ratio = f64::INFINITY;
-            for r in 0..self.m {
-                let a = self.a[r][col];
-                if a > EPS {
-                    let ratio = self.a[r][self.n] / a;
-                    let better = ratio < best_ratio - EPS
-                        || (ratio < best_ratio + EPS
-                            && row.is_some_and(|pr: usize| self.basis[r] < self.basis[pr]));
-                    if better {
-                        best_ratio = ratio;
-                        row = Some(r);
+            let leave =
+                choose_leaving(self.m, &self.basis, |r| self.a[r][col], |r| self.a[r][self.n]);
+            match leave {
+                Some((r, ratio)) => {
+                    if ratio <= EPS {
+                        stats.degenerate_pivots += 1;
                     }
+                    stats.iterations += 1;
+                    self.pivot(r, col);
                 }
-            }
-            match row {
-                Some(r) => self.pivot(r, col),
                 None => return Ok(false), // unbounded
             }
         }
@@ -214,76 +916,18 @@ impl Tableau {
             }
         }
     }
-
-    /// Dual simplex: starting from a dual-feasible basis (reduced costs
-    /// ≥ 0), restore primal feasibility. Returns `Ok(true)` when a
-    /// primal-feasible (hence optimal) basis is reached, `Ok(false)` when
-    /// primal infeasibility is certified (a row with negative RHS and no
-    /// negative coefficient). Deliberately budgeted at `DUAL_MAX_ITERS`:
-    /// degenerate stalls surface as an `Err`, which the warm path maps to
-    /// `NotCertified` — never wrong, just cold.
-    fn dual_optimize(&mut self) -> Result<bool> {
-        for _ in 0..DUAL_MAX_ITERS {
-            // Leaving row: most negative RHS.
-            let mut row = None;
-            let mut most = -EPS;
-            for r in 0..self.m {
-                let b = self.a[r][self.n];
-                if b < most {
-                    most = b;
-                    row = Some(r);
-                }
-            }
-            let Some(r) = row else { return Ok(true) };
-            // Entering column: dual ratio test over negative row entries
-            // (first minimum kept — deterministic).
-            let mut col = None;
-            let mut best = f64::INFINITY;
-            for j in 0..self.n {
-                let arj = self.a[r][j];
-                if arj < -EPS {
-                    let ratio = self.a[self.m][j].max(0.0) / -arj;
-                    if ratio < best {
-                        best = ratio;
-                        col = Some(j);
-                    }
-                }
-            }
-            match col {
-                Some(c) => self.pivot(r, c),
-                None => return Ok(false), // certified primal infeasible
-            }
-        }
-        Err(Error::solver("dual simplex iteration limit exceeded"))
-    }
 }
 
-/// Normalize constraint rows to nonnegative RHS (shared by the cold and warm
-/// paths so their augmented column layouts agree).
-fn normalized_rows(lp: &Lp) -> Vec<(Vec<(usize, f64)>, Op, f64)> {
-    let mut rows: Vec<(Vec<(usize, f64)>, Op, f64)> = Vec::with_capacity(lp.constraints.len());
-    for c in &lp.constraints {
-        let mut coeffs = c.coeffs.clone();
-        let mut op = c.op;
-        let mut rhs = c.rhs;
-        if rhs < 0.0 {
-            for (_, v) in coeffs.iter_mut() {
-                *v = -*v;
-            }
-            rhs = -rhs;
-            op = match op {
-                Op::Le => Op::Ge,
-                Op::Ge => Op::Le,
-                Op::Eq => Op::Eq,
-            };
-        }
-        rows.push((coeffs, op, rhs));
-    }
-    rows
+/// Dense two-phase tableau solve — the reference implementation the revised
+/// path is held to bit-for-bit (see `tests/properties.rs`), kept for the
+/// parity property and the `bench_solver` dense-vs-revised comparison.
+pub fn solve_lp_dense(lp: &Lp) -> Result<LpOutcome> {
+    solve_lp_dense_with_stats(lp, &mut LpStats::default())
 }
 
-/// Solve the LP; returns `Optimal`, `Infeasible`, or `Unbounded`.
-pub fn solve_lp(lp: &Lp) -> Result<LpOutcome> {
+/// [`solve_lp_dense`] with iteration counting into `stats` (FTRAN/BTRAN
+/// counters stay zero — there is no factorization to consult).
+pub fn solve_lp_dense_with_stats(lp: &Lp, stats: &mut LpStats) -> Result<LpOutcome> {
     let n0 = lp.num_vars;
     let m = lp.constraints.len();
 
@@ -348,7 +992,7 @@ pub fn solve_lp(lp: &Lp) -> Result<LpOutcome> {
                 }
             }
         }
-        if !t.optimize()? {
+        if !t.optimize(stats)? {
             return Err(Error::solver("phase-1 unbounded (internal error)"));
         }
         if t.a[m][n] < -1e-7 {
@@ -374,122 +1018,12 @@ pub fn solve_lp(lp: &Lp) -> Result<LpOutcome> {
     // Phase 2: original objective (priced out against the current basis).
     t.install_objective(&lp.objective);
 
-    if !t.optimize()? {
+    if !t.optimize(stats)? {
         return Ok(LpOutcome::Unbounded);
     }
 
-    let mut x = vec![0.0; n0];
-    for r in 0..m {
-        if t.basis[r] < n0 {
-            x[t.basis[r]] = t.a[r][n];
-        }
-    }
-    let objective = lp.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
-    // Report the basis only when artificial-free (re-installable later).
-    let basis = t.basis.iter().all(|&b| b < n0 + num_slack).then(|| t.basis.clone());
-    Ok(LpOutcome::Optimal(LpSolution { x, objective, basis }))
-}
-
-/// Re-enter the simplex from a previously optimal basis of a structurally
-/// identical LP (same variables, same rows in the same order — typically
-/// only the RHS changed). Either certifies an outcome with exactly
-/// [`solve_lp`]'s meaning or returns [`Resume::NotCertified`], in which case
-/// the caller must fall back to a cold solve. Never less exact than the cold
-/// path: the installed basis is re-optimized (dual then primal simplex) to a
-/// fully certified optimum.
-pub fn resume_from_basis(lp: &Lp, basis: &[usize]) -> Result<Resume> {
-    let n0 = lp.num_vars;
-    let rows = normalized_rows(lp);
-    let m = rows.len();
-    if basis.len() != m {
-        return Ok(Resume::NotCertified);
-    }
-    let num_slack = rows.iter().filter(|r| r.1 != Op::Eq).count();
-    let n = n0 + num_slack;
-    // Reject artificial or duplicate columns outright.
-    let mut seen = vec![false; n];
-    for &c in basis {
-        if c >= n || seen[c] {
-            return Ok(Resume::NotCertified);
-        }
-        seen[c] = true;
-    }
-
-    // Artificial-free tableau: structural + slack columns only.
-    let mut a = vec![vec![0.0; n + 1]; m + 1];
-    let mut slack_idx = n0;
-    for (r, (coeffs, op, rhs)) in rows.iter().enumerate() {
-        for &(j, v) in coeffs {
-            a[r][j] += v;
-        }
-        a[r][n] = *rhs;
-        match op {
-            Op::Le => {
-                a[r][slack_idx] = 1.0;
-                slack_idx += 1;
-            }
-            Op::Ge => {
-                a[r][slack_idx] = -1.0;
-                slack_idx += 1;
-            }
-            Op::Eq => {}
-        }
-    }
-    let mut t = Tableau { a, m, n, basis: vec![0; m] };
-
-    // Install the basis by direct pivoting (partial pivoting over the rows
-    // not yet claimed). A cached basis of the same coefficient matrix is
-    // nonsingular, so this succeeds unless the matrix actually changed.
-    let mut row_free = vec![true; m];
-    for &col in basis {
-        let mut best_r = None;
-        let mut best_v = PIVOT_EPS;
-        for (r, free) in row_free.iter().enumerate() {
-            if *free {
-                let v = t.a[r][col].abs();
-                if v > best_v {
-                    best_v = v;
-                    best_r = Some(r);
-                }
-            }
-        }
-        let Some(r) = best_r else {
-            return Ok(Resume::NotCertified); // singular w.r.t. this matrix
-        };
-        t.pivot(r, col);
-        row_free[r] = false;
-    }
-
-    t.install_objective(&lp.objective);
-
-    let primal_feasible = (0..m).all(|r| t.a[r][n] >= -FEAS_EPS);
-    if !primal_feasible {
-        // Only the RHS moved: the basis stays dual feasible and a dual
-        // simplex pass repairs it. Anything else is not certifiable here.
-        if (0..n).any(|j| t.a[m][j] < -FEAS_EPS) {
-            return Ok(Resume::NotCertified);
-        }
-        match t.dual_optimize() {
-            Ok(true) => {}
-            Ok(false) => return Ok(Resume::Solved(LpOutcome::Infeasible)),
-            Err(_) => return Ok(Resume::NotCertified),
-        }
-    }
-    match t.optimize() {
-        Ok(true) => {}
-        Ok(false) => return Ok(Resume::Solved(LpOutcome::Unbounded)),
-        Err(_) => return Ok(Resume::NotCertified),
-    }
-
-    let mut x = vec![0.0; n0];
-    for r in 0..m {
-        if t.basis[r] < n0 {
-            x[t.basis[r]] = t.a[r][n];
-        }
-    }
-    let objective = lp.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
-    let out_basis = Some(t.basis.clone());
-    Ok(Resume::Solved(LpOutcome::Optimal(LpSolution { x, objective, basis: out_basis })))
+    let lay = column_layout(n0, &rows, true);
+    Ok(LpOutcome::Optimal(finalize_solution(lp, &lay.cols, &lay.b, &t.basis, lay.n_real)))
 }
 
 #[cfg(test)]
@@ -766,5 +1300,112 @@ mod tests {
         let s = optimal(&lp);
         assert!(s.objective >= 0.0 && s.objective.is_finite());
         assert!(s.x.iter().all(|&v| v >= -1e-9));
+    }
+
+    #[test]
+    fn revised_matches_dense_bitwise_on_fixture_lps() {
+        // Every deterministic fixture above, revised vs dense: identical
+        // outcome variants, bit-identical objectives/solutions, equal bases.
+        let mut fixtures: Vec<Lp> = Vec::new();
+        {
+            let mut lp = Lp::new(2);
+            lp.set_objective(0, -3.0);
+            lp.set_objective(1, -5.0);
+            lp.add_constraint(vec![(0, 1.0)], Op::Le, 4.0);
+            lp.add_constraint(vec![(1, 2.0)], Op::Le, 12.0);
+            lp.add_constraint(vec![(0, 3.0), (1, 2.0)], Op::Le, 18.0);
+            fixtures.push(lp);
+        }
+        {
+            let mut lp = Lp::new(2);
+            lp.set_objective(0, 1.0);
+            lp.set_objective(1, 2.0);
+            lp.add_constraint(vec![(0, 1.0), (1, 1.0)], Op::Eq, 10.0);
+            lp.add_constraint(vec![(0, 1.0)], Op::Ge, 3.0);
+            lp.add_constraint(vec![(1, 1.0)], Op::Ge, 2.0);
+            fixtures.push(lp);
+        }
+        {
+            let mut lp = Lp::new(1);
+            lp.set_objective(0, 1.0);
+            lp.add_constraint(vec![(0, 1.0)], Op::Ge, 5.0);
+            lp.add_constraint(vec![(0, 1.0)], Op::Le, 3.0);
+            fixtures.push(lp); // infeasible
+        }
+        {
+            let mut lp = Lp::new(1);
+            lp.set_objective(0, -1.0);
+            lp.add_constraint(vec![(0, 1.0)], Op::Ge, 0.0);
+            fixtures.push(lp); // unbounded
+        }
+        {
+            let mut lp = Lp::new(2);
+            lp.set_objective(0, 1.0);
+            lp.set_objective(1, 1.8);
+            lp.add_constraint(vec![(0, 2.0), (1, 5.0)], Op::Ge, 10.0);
+            fixtures.push(lp);
+        }
+        for (k, lp) in fixtures.iter().enumerate() {
+            let r = solve_lp(lp).unwrap();
+            let d = solve_lp_dense(lp).unwrap();
+            match (r, d) {
+                (LpOutcome::Optimal(a), LpOutcome::Optimal(b)) => {
+                    assert_eq!(
+                        a.objective.to_bits(),
+                        b.objective.to_bits(),
+                        "fixture {k}: objective {} vs {}",
+                        a.objective,
+                        b.objective
+                    );
+                    assert_eq!(a.basis, b.basis, "fixture {k}: bases differ");
+                    let ax: Vec<u64> = a.x.iter().map(|v| v.to_bits()).collect();
+                    let bx: Vec<u64> = b.x.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(ax, bx, "fixture {k}: solutions differ");
+                }
+                (LpOutcome::Infeasible, LpOutcome::Infeasible) => {}
+                (LpOutcome::Unbounded, LpOutcome::Unbounded) => {}
+                (r, d) => panic!("fixture {k}: revised {r:?} vs dense {d:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_pivot_is_counted() {
+        // min -x s.t. x <= 0: the single pivot moves the basis but not the
+        // point — counted as degenerate on both paths.
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, -1.0);
+        lp.add_constraint(vec![(0, 1.0)], Op::Le, 0.0);
+        let mut rs = LpStats::default();
+        assert!(matches!(solve_lp_with_stats(&lp, &mut rs).unwrap(), LpOutcome::Optimal(_)));
+        assert_eq!(rs.degenerate_pivots, 1, "revised: {rs:?}");
+        assert!(rs.ftran_ops > 0 && rs.btran_ops > 0, "revised: {rs:?}");
+        let mut ds = LpStats::default();
+        assert!(matches!(solve_lp_dense_with_stats(&lp, &mut ds).unwrap(), LpOutcome::Optimal(_)));
+        assert_eq!(ds.degenerate_pivots, 1, "dense: {ds:?}");
+    }
+
+    #[test]
+    fn complete_basis_fills_a_partial_basis() {
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -3.0);
+        lp.set_objective(1, -5.0);
+        lp.add_constraint(vec![(0, 1.0)], Op::Le, 4.0);
+        lp.add_constraint(vec![(1, 2.0)], Op::Le, 12.0);
+        lp.add_constraint(vec![(0, 3.0), (1, 2.0)], Op::Le, 18.0);
+        let s = optimal(&lp);
+        let basis = s.basis.expect("Le-only LP must expose its basis");
+        // Drop one column; completion must rebuild a full, resumable basis.
+        let partial: Vec<usize> = basis[..basis.len() - 1].to_vec();
+        let full = complete_basis(&lp, &partial).expect("completion exists");
+        assert_eq!(full.len(), lp.constraints.len());
+        match resumed(&lp, &full) {
+            LpOutcome::Optimal(w) => {
+                assert!((w.objective - s.objective).abs() < 1e-9);
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+        // A hopeless partial (under half the rows) is refused outright.
+        assert!(complete_basis(&lp, &[]).is_none());
     }
 }

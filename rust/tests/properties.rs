@@ -7,8 +7,11 @@ use camflow::coordinator::budget::{self, ComponentTelemetry};
 use camflow::coordinator::{Planner, PlannerConfig};
 use camflow::geo::{self, cities, GeoPoint};
 use camflow::packing::heuristic::{self, simple_problem};
-use camflow::packing::mcvbp::{solve, solve_delta, DeltaHints, SolveOptions};
+use camflow::packing::mcvbp::{solve, solve_delta, DeltaHints, GhostGroup, PrevLayout, SolveOptions};
 use camflow::profiles::{Program, Resolution};
+use camflow::solver::{
+    solve_lp_dense_with_stats, solve_lp_with_stats, Lp, LpOutcome, LpStats, Op,
+};
 use camflow::util::json;
 use camflow::util::proptest::check;
 use camflow::util::Rng;
@@ -415,6 +418,7 @@ fn prop_delta_solve_from_warm_basis_matches_cold_exact_solve() {
             let hints = DeltaHints {
                 root_basis: seed_stats.root_basis.clone(),
                 branch_order: seed_stats.branch_order.clone(),
+                ..DeltaHints::default()
             };
             let mut perturbed = spec.clone();
             perturbed[which].2 = if up {
@@ -435,6 +439,201 @@ fn prop_delta_solve_from_warm_basis_matches_cold_exact_solve() {
             let (wc, cc) = (warm.total_cost(&p), cold.total_cost(&p));
             if (wc - cc).abs() > 1e-9 {
                 return Err(format!("delta-solve cost {wc} != cold exact cost {cc}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The revised simplex is held to the dense tableau **bit for bit** on
+/// randomized LPs: identical outcome variants, and for optima bit-identical
+/// objectives/solutions plus equal final bases. Both paths share the pivot
+/// rules (EPS-windowed two-tier Dantzig, min-ratio ties broken on basic
+/// variable ids) and one canonical finalization, so this is checkable with
+/// `==` rather than tolerances. Coefficients live on a coarse 0.25 grid to
+/// provoke degenerate ties, well away from the solver's ~1e-7 epsilon.
+#[test]
+fn prop_revised_simplex_matches_dense_bit_for_bit() {
+    check(
+        0x5147EF,
+        60,
+        |rng: &mut Rng| {
+            let n = 1 + rng.index(6);
+            let m = 1 + rng.index(5);
+            let mut v = vec![n as u64, m as u64];
+            for _ in 0..n {
+                v.push(rng.index(17) as u64); // objective: (i-8)*0.5 in [-4, 4]
+            }
+            for _ in 0..m {
+                v.push(rng.index(3) as u64); // op: Le / Ge / Eq
+                v.push(rng.index(25) as u64); // rhs: i*0.5 in [0, 12]
+                for _ in 0..n {
+                    v.push(rng.index(9) as u64); // coeff: (i-2)*0.25 in [-0.5, 1.5]
+                }
+            }
+            v
+        },
+        |enc: &Vec<u64>| {
+            let (n, m) = (enc[0] as usize, enc[1] as usize);
+            let mut lp = Lp::new(n);
+            for j in 0..n {
+                lp.set_objective(j, (enc[2 + j] as f64 - 8.0) * 0.5);
+            }
+            let mut at = 2 + n;
+            for _ in 0..m {
+                let op = match enc[at] {
+                    0 => Op::Le,
+                    1 => Op::Ge,
+                    _ => Op::Eq,
+                };
+                let rhs = enc[at + 1] as f64 * 0.5;
+                let coeffs: Vec<(usize, f64)> = (0..n)
+                    .filter_map(|j| {
+                        let c = (enc[at + 2 + j] as f64 - 2.0) * 0.25;
+                        (c != 0.0).then_some((j, c))
+                    })
+                    .collect();
+                lp.add_constraint(coeffs, op, rhs);
+                at += 2 + n;
+            }
+            let dense = solve_lp_dense_with_stats(&lp, &mut LpStats::default())
+                .map_err(|e| format!("dense solve failed: {e}"))?;
+            let revised = solve_lp_with_stats(&lp, &mut LpStats::default())
+                .map_err(|e| format!("revised solve failed: {e}"))?;
+            match (&dense, &revised) {
+                (LpOutcome::Optimal(d), LpOutcome::Optimal(r)) => {
+                    if d.objective.to_bits() != r.objective.to_bits() {
+                        return Err(format!(
+                            "objective bits differ: dense {} vs revised {}",
+                            d.objective, r.objective
+                        ));
+                    }
+                    if d.x.len() != r.x.len()
+                        || d.x.iter().zip(&r.x).any(|(a, b)| a.to_bits() != b.to_bits())
+                    {
+                        return Err(format!("solutions differ: {:?} vs {:?}", d.x, r.x));
+                    }
+                    if d.basis != r.basis {
+                        return Err(format!(
+                            "final bases differ: {:?} vs {:?}",
+                            d.basis, r.basis
+                        ));
+                    }
+                    Ok(())
+                }
+                (LpOutcome::Infeasible, LpOutcome::Infeasible)
+                | (LpOutcome::Unbounded, LpOutcome::Unbounded) => Ok(()),
+                _ => Err(format!(
+                    "outcome variants differ: dense {dense:?} vs revised {revised:?}"
+                )),
+            }
+        },
+    );
+}
+
+/// Structural delta-solve is certified-or-cold in both directions: dropping
+/// a whole group from a solved instance (ghost embedding) or adding one to
+/// it (block-translated basis) must reproduce the cold exact cost whenever
+/// both sides prove optimality.
+#[test]
+fn prop_structural_delta_solve_matches_cold_exact_solve() {
+    check(
+        0x57D317A,
+        20,
+        |rng: &mut Rng| {
+            let groups = 2 + rng.index(2);
+            let mut v = Vec::with_capacity(groups * 3 + 1);
+            for _ in 0..groups {
+                v.push((rng.range_f64(0.4, 5.0) * 100.0).round() as u64);
+                v.push((rng.range_f64(0.4, 7.0) * 100.0).round() as u64);
+                v.push(2 + rng.index(5) as u64);
+            }
+            v.push(rng.index(groups) as u64); // the group that appears/vanishes
+            v
+        },
+        |enc: &Vec<u64>| {
+            let spec: Vec<(f64, f64, usize)> = enc[..enc.len() - 1]
+                .chunks_exact(3)
+                .map(|c| (c[0] as f64 / 100.0, c[1] as f64 / 100.0, c[2] as usize))
+                .collect();
+            let which = enc[enc.len() - 1] as usize % spec.len();
+            let smaller_spec: Vec<(f64, f64, usize)> = spec
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != which)
+                .map(|(_, s)| *s)
+                .collect();
+            let bins = [(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)];
+            let opts = SolveOptions::default();
+            let base = simple_problem(&spec, &bins);
+            let smaller = simple_problem(&smaller_spec, &bins);
+
+            // Vanished: `base` is the cached solve, `smaller` re-plans warm
+            // through the ghost embedding of the dropped group.
+            if let Ok((_, big_st)) = solve(&base, &opts) {
+                if big_st.proven_optimal && big_st.root_basis.is_some() {
+                    let hints = DeltaHints {
+                        root_basis: big_st.root_basis.clone(),
+                        branch_order: big_st.branch_order.clone(),
+                        ghost: Some(GhostGroup {
+                            position: which,
+                            demand_bits: base.items[which]
+                                .demand_per_bin
+                                .iter()
+                                .map(|d| d.map(|dims| dims.as_array().map(f64::to_bits)))
+                                .collect(),
+                            count: base.items[which].count,
+                        }),
+                        appeared: None,
+                    };
+                    if let Ok((cold, cold_st)) = solve(&smaller, &opts) {
+                        let (warm, warm_st) =
+                            solve_delta(&smaller, &opts, None, None, Some(&hints))
+                                .map_err(|e| e.to_string())?;
+                        warm.validate(&smaller)
+                            .map_err(|e| format!("ghost warm packing invalid: {e}"))?;
+                        if cold_st.proven_optimal && warm_st.proven_optimal {
+                            let (wc, cc) = (warm.total_cost(&smaller), cold.total_cost(&smaller));
+                            if (wc - cc).abs() > 1e-9 {
+                                return Err(format!("ghost warm cost {wc} != cold {cc}"));
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Appeared: `smaller` is the cached solve, `base` re-plans warm
+            // through the block-translated basis.
+            if let Ok((_, small_st)) = solve(&smaller, &opts) {
+                if small_st.proven_optimal {
+                    if let Some(basis) = small_st.root_basis.clone() {
+                        let hints = DeltaHints {
+                            root_basis: None,
+                            branch_order: Vec::new(),
+                            ghost: None,
+                            appeared: Some(PrevLayout {
+                                basis,
+                                blocks: small_st.var_blocks.clone(),
+                                num_vars: small_st.milp_vars,
+                                num_groups: smaller.items.len(),
+                                new_group: which,
+                            }),
+                        };
+                        if let Ok((cold, cold_st)) = solve(&base, &opts) {
+                            let (warm, warm_st) =
+                                solve_delta(&base, &opts, None, None, Some(&hints))
+                                    .map_err(|e| e.to_string())?;
+                            warm.validate(&base)
+                                .map_err(|e| format!("translated warm packing invalid: {e}"))?;
+                            if cold_st.proven_optimal && warm_st.proven_optimal {
+                                let (wc, cc) = (warm.total_cost(&base), cold.total_cost(&base));
+                                if (wc - cc).abs() > 1e-9 {
+                                    return Err(format!("translated warm cost {wc} != cold {cc}"));
+                                }
+                            }
+                        }
+                    }
+                }
             }
             Ok(())
         },
