@@ -1,0 +1,313 @@
+//! Planet-scale sharded-planner benchmark: 100 metros across 8 region
+//! basins, ~10k streams, skewed drift.
+//!
+//! Exercises the metro-sharded coordinator ([`ShardedPlanner`]) end to end
+//! and writes `BENCH_planet.json` (fields documented in the crate docs,
+//! `lib.rs`). The bars:
+//!
+//! * **event-driven dirtiness** (deterministic) — a no-drift round replans
+//!   nothing; dropping one camera in one metro dirties exactly its basin
+//!   shard; a price change fans out to all shards.
+//! * **cost parity** (deterministic, certified-or-cold) — the sharded total
+//!   equals the unsharded single-context plan to 1e-6 whenever every shard
+//!   completed its exact phase with the Main candidate, cold, warm, and
+//!   after the price fan-out. The workload is region-disjoint by
+//!   construction (fps >= 32 keeps the 8 basins' coverage circles in
+//!   separate region clusters), so the gate is expected to hold and is
+//!   asserted, not just recorded.
+//! * **dirty-shard-bounded wall-clock** — the all-shards price fan-out
+//!   (8 cold re-plans) must cost >= 5x the one-dirty-shard warm re-plan.
+//!   This is the headline event-driven win and is asserted unconditionally;
+//!   the uniform-drift vs skewed-drift warm ratio is also recorded but only
+//!   gated without `BENCH_LENIENT_TIMING` (dirty shards re-plan
+//!   concurrently, so uniform wall-clock legitimately compresses on wide
+//!   machines).
+
+use camflow::cameras::{camera_at, StreamRequest};
+use camflow::catalog::Catalog;
+use camflow::coordinator::shard::{ShardedPlan, ShardedPlanner};
+use camflow::coordinator::{Plan, Planner, PlannerConfig};
+use camflow::geo::GeoPoint;
+use camflow::packing::mcvbp::SolveOptions;
+use camflow::profiles::{Program, Resolution};
+use camflow::solver::MilpOptions;
+use camflow::util::json::Value;
+use std::time::Instant;
+
+/// The eight basin anchors are EC2 region cities; at fps >= 32 each basin's
+/// coverage circles stay inside its own region cluster, so the 100 metros
+/// collapse to exactly 8 mask-disjoint shards.
+const BASINS: [(&str, f64, f64); 8] = [
+    ("Virginia", 38.95, -77.45),
+    ("Oregon", 45.84, -119.70),
+    ("Ireland", 53.34, -6.27),
+    ("Singapore", 1.35, 103.82),
+    ("Sydney", -33.87, 151.21),
+    ("Tokyo", 35.68, 139.69),
+    ("Mumbai", 19.08, 72.88),
+    ("SaoPaulo", -23.55, -46.63),
+];
+
+/// Metros per basin: 4x13 + 4x12 = 100.
+const METROS_PER_BASIN: [usize; 8] = [13, 13, 13, 13, 12, 12, 12, 12];
+
+const TIERS: [f64; 3] = [32.0, 36.0, 40.0];
+const CAMS_PER_TIER: usize = 34;
+
+/// The full workload: 100 metros x 3 fps tiers x 34 cameras = 10_200
+/// streams. Metro centers sit on a small grid within ~0.3 degrees of their
+/// basin anchor (well inside the >= 2700 km coverage radius at 32 fps), and
+/// cameras jitter ~10 m around the metro center for distinct eligibility
+/// entries.
+fn workload() -> Vec<StreamRequest> {
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    for (b, &(_, lat, lon)) in BASINS.iter().enumerate() {
+        for metro in 0..METROS_PER_BASIN[b] {
+            let center = GeoPoint::new(
+                lat + 0.02 * (metro % 5) as f64,
+                lon + 0.02 * (metro / 5) as f64,
+            );
+            for &fps in &TIERS {
+                for _ in 0..CAMS_PER_TIER {
+                    let at = GeoPoint::new(
+                        center.lat + (id % 997) as f64 * 1e-7,
+                        center.lon + (id % 1009) as f64 * 1e-7,
+                    );
+                    out.push(StreamRequest::new(
+                        camera_at(id, BASINS[b].0, at, Resolution::VGA, 30.0),
+                        Program::Zf,
+                        fps,
+                    ));
+                    id += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn config() -> PlannerConfig {
+    let mut cfg = PlannerConfig::gcl();
+    cfg.solve_opts = SolveOptions {
+        quant: 30,
+        max_graph_nodes: SolveOptions::default().max_graph_nodes,
+        max_milp_vars: 20_000,
+        milp: MilpOptions { max_nodes: 20_000, ..Default::default() },
+        milp_node_scale: 10_000_000,
+        exact: true,
+    };
+    cfg
+}
+
+fn catalog() -> Catalog {
+    Catalog::builtin().restrict(
+        Some(&["c4.2xlarge", "c4.8xlarge", "g2.2xlarge", "g3.8xlarge"]),
+        Some(&[
+            "us-east-1",
+            "us-east-2",
+            "us-west-1",
+            "us-west-2",
+            "eu-west-1",
+            "eu-west-2",
+            "eu-central-1",
+            "ap-southeast-1",
+            "ap-southeast-2",
+            "ap-northeast-1",
+            "ap-south-1",
+            "sa-east-1",
+        ]),
+    )
+}
+
+fn lenient() -> bool {
+    std::env::var_os("BENCH_LENIENT_TIMING").is_some()
+}
+
+fn exact_complete(plan: &Plan) -> bool {
+    plan.pipeline.components_fallback == 0
+        && plan.pipeline.components_proven == plan.pipeline.components
+}
+
+/// Time one sharded round.
+fn round(sp: &mut ShardedPlanner, requests: &[StreamRequest]) -> (ShardedPlan, f64) {
+    let t = Instant::now();
+    let plan = sp.replan(requests).unwrap();
+    (plan, t.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Unsharded reference: one cold single-context GCL plan.
+fn unsharded(catalog: &Catalog, requests: &[StreamRequest]) -> Plan {
+    Planner::new(catalog.clone(), config()).plan_single(requests).unwrap()
+}
+
+/// Assert the sharded==unsharded parity bar under its certified gate.
+fn assert_parity(label: &str, sharded: &ShardedPlan, reference: &Plan) -> bool {
+    let gated = sharded.exact_complete() && sharded.all_main() && exact_complete(reference);
+    assert!(
+        gated,
+        "{label}: parity gate must hold on this region-disjoint workload \
+         (exact_complete={} all_main={} ref_exact={})",
+        sharded.exact_complete(),
+        sharded.all_main(),
+        exact_complete(reference)
+    );
+    let diff = (sharded.cost_per_hour - reference.cost_per_hour).abs();
+    assert!(
+        diff < 1e-6,
+        "{label}: sharded {} != unsharded {}",
+        sharded.cost_per_hour,
+        reference.cost_per_hour
+    );
+    true
+}
+
+fn main() {
+    println!("== planet: 100 metros / 8 basins / sharded planner ==");
+    let catalog = catalog();
+    let w0 = workload();
+    assert_eq!(w0.len(), 10_200);
+
+    let mut sp = ShardedPlanner::new(Planner::new(catalog.clone(), config()));
+
+    // Cold: everything is dirty, all 8 basin shards plan concurrently.
+    let (cold, cold_all_ms) = round(&mut sp, &w0);
+    assert_eq!((cold.total_shards, cold.dirty_shards), (8, 8));
+    let cold_ref = unsharded(&catalog, &w0);
+    let parity_cold = assert_parity("cold", &cold, &cold_ref);
+    println!(
+        "cold: {cold_all_ms:9.1} ms  8/8 dirty  $/h {:.3} (unsharded {:.3})",
+        cold.cost_per_hour, cold_ref.cost_per_hour
+    );
+
+    // No drift: nothing replans, the deployed plans are reused verbatim.
+    let (noop, warm_noop_ms) = round(&mut sp, &w0);
+    assert_eq!(noop.dirty_shards, 0);
+    assert_eq!(noop.cost_per_hour, cold.cost_per_hour, "bit-identical reuse");
+
+    // Skewed drift: one camera leaves one metro -> exactly 1 of 8 shards
+    // replans, warm, through the delta-solve path.
+    let w_skew: Vec<StreamRequest> = w0[1..].to_vec();
+    let (skew, warm_one_dirty_ms) = round(&mut sp, &w_skew);
+    assert_eq!(skew.dirty_shards, 1, "one metro's drift dirties one shard");
+    let skew_stats = skew.stats_rollup();
+    assert!(
+        skew_stats.delta_solve_hits + skew_stats.structural_delta_hits >= 1,
+        "skew drift must warm-start: {skew_stats:?}"
+    );
+    let skew_ref = unsharded(&catalog, &w_skew);
+    let parity_skew = assert_parity("skew", &skew, &skew_ref);
+    println!(
+        "skew: {warm_one_dirty_ms:9.1} ms  1/8 dirty  $/h {:.3} (unsharded {:.3})",
+        skew.cost_per_hour, skew_ref.cost_per_hour
+    );
+
+    // Restore the camera (dirties the same single shard again).
+    let (restore, _restore_ms) = round(&mut sp, &w0);
+    assert_eq!(restore.dirty_shards, 1);
+    assert!(
+        (restore.cost_per_hour - cold.cost_per_hour).abs() < 1e-6,
+        "round-trip must restore the cold cost: {} vs {}",
+        restore.cost_per_hour,
+        cold.cost_per_hour
+    );
+
+    // Uniform drift: one camera leaves every basin -> all 8 shards replan
+    // warm, concurrently.
+    let mut w_uniform = w0.clone();
+    let mut drop_ids: Vec<u64> = Vec::new();
+    let per_basin: usize = TIERS.len() * CAMS_PER_TIER;
+    let mut offset = 0usize;
+    for &metros in &METROS_PER_BASIN {
+        drop_ids.push(w0[offset].camera.id);
+        offset += metros * per_basin;
+    }
+    w_uniform.retain(|r| !drop_ids.contains(&r.camera.id));
+    assert_eq!(w_uniform.len(), w0.len() - 8);
+    let (uniform, warm_uniform_ms) = round(&mut sp, &w_uniform);
+    assert_eq!(uniform.dirty_shards, 8, "uniform drift dirties every shard");
+
+    // Price fan-out: one offering's price moves -> signature change, all 8
+    // shards rebuild cold.
+    sp.planner.catalog.offerings[0].hourly_usd *= 1.01;
+    let (fanout, price_fanout_all_ms) = round(&mut sp, &w_uniform);
+    assert_eq!(fanout.dirty_shards, 8, "a price change fans out to every shard");
+    assert_eq!(sp.events.price_fanouts, 1);
+    let fanout_ref = unsharded(&sp.planner.catalog, &w_uniform);
+    let parity_fanout = assert_parity("fanout", &fanout, &fanout_ref);
+    println!(
+        "fanout: {price_fanout_all_ms:7.1} ms  8/8 dirty  $/h {:.3} (unsharded {:.3})",
+        fanout.cost_per_hour, fanout_ref.cost_per_hour
+    );
+
+    // The headline event-driven bar: re-planning all shards (the fan-out)
+    // must cost >= 5x the one-dirty-shard warm re-plan. 8 cold solves vs one
+    // warm delta re-plan — holds with a wide margin on any hardware.
+    let fanout_over_skew = price_fanout_all_ms / warm_one_dirty_ms.max(1e-9);
+    assert!(
+        fanout_over_skew >= 5.0,
+        "all-shards fan-out ({price_fanout_all_ms:.1} ms) not 5x the 1-dirty-shard \
+         warm re-plan ({warm_one_dirty_ms:.1} ms)"
+    );
+    // Uniform warm drift touches 8x the shards of skewed drift; concurrency
+    // compresses wall-clock, so this is only gated on dedicated hardware.
+    let uniform_over_skew = warm_uniform_ms / warm_one_dirty_ms.max(1e-9);
+    if warm_uniform_ms < warm_one_dirty_ms {
+        let msg = format!(
+            "uniform warm round ({warm_uniform_ms:.1} ms) under the 1-dirty round \
+             ({warm_one_dirty_ms:.1} ms)"
+        );
+        assert!(lenient(), "{msg}");
+        println!("WARNING (not asserted, BENCH_LENIENT_TIMING set): {msg}");
+    }
+
+    // Global-arbiter invariants: every shard donates into the slack ledger
+    // and telemetry is labelled per shard.
+    assert_eq!(sp.donors(), 8);
+    let summary = sp.solver_summary();
+    assert!(summary.contains("shard=us-east-1") && summary.contains("shard=total"));
+    assert!(sp.fleet_report().is_some());
+
+    println!(
+        "noop {warm_noop_ms:.2} ms  skew {warm_one_dirty_ms:.1} ms  uniform \
+         {warm_uniform_ms:.1} ms ({uniform_over_skew:.1}x)  fanout \
+         {price_fanout_all_ms:.1} ms ({fanout_over_skew:.1}x)"
+    );
+
+    let doc = Value::obj(vec![
+        ("bench", Value::str("planet")),
+        ("metros", Value::num(100.0)),
+        ("streams", Value::num(w0.len() as f64)),
+        ("shards", Value::num(cold.total_shards as f64)),
+        ("cold_all_ms", Value::num(cold_all_ms)),
+        ("warm_noop_ms", Value::num(warm_noop_ms)),
+        ("warm_one_dirty_ms", Value::num(warm_one_dirty_ms)),
+        ("warm_uniform_ms", Value::num(warm_uniform_ms)),
+        ("price_fanout_all_ms", Value::num(price_fanout_all_ms)),
+        ("fanout_over_one_dirty", Value::num(fanout_over_skew)),
+        ("uniform_over_one_dirty", Value::num(uniform_over_skew)),
+        ("sharded_usd_per_hour", Value::num(cold.cost_per_hour)),
+        ("unsharded_usd_per_hour", Value::num(cold_ref.cost_per_hour)),
+        ("cost_parity", Value::Bool(parity_cold && parity_skew && parity_fanout)),
+        (
+            "dirty",
+            Value::obj(vec![
+                ("cold", Value::num(cold.dirty_shards as f64)),
+                ("noop", Value::num(noop.dirty_shards as f64)),
+                ("skew", Value::num(skew.dirty_shards as f64)),
+                ("restore", Value::num(restore.dirty_shards as f64)),
+                ("uniform", Value::num(uniform.dirty_shards as f64)),
+                ("fanout", Value::num(fanout.dirty_shards as f64)),
+            ]),
+        ),
+        ("exact_complete", Value::Bool(cold.exact_complete())),
+        ("all_main", Value::Bool(cold.all_main())),
+        ("donors", Value::num(sp.donors() as f64)),
+        ("lenient", Value::Bool(lenient())),
+    ]);
+    let path = "BENCH_planet.json";
+    std::fs::write(path, camflow::util::json::to_string_pretty(&doc))
+        .expect("write BENCH_planet.json");
+    println!("wrote {path}");
+    println!("\nbench_planet OK");
+}

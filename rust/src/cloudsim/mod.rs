@@ -84,6 +84,10 @@ pub struct CloudSim {
     /// Plan slot → provisioned instance, remembered across `apply_plan`
     /// calls so a surviving planned slot keeps its physical instance.
     bindings: std::collections::BTreeMap<SlotId, InstanceId>,
+    /// Slots owned by each shard's most recently applied plan
+    /// (`apply_shard_plan`), so shard-scoped reconciliation bounds its
+    /// same-label claims and terminations to that shard's own fleet.
+    shard_slots: std::collections::BTreeMap<u32, Vec<SlotId>>,
     accrued_usd: f64,
 }
 
@@ -97,6 +101,7 @@ impl CloudSim {
             instances: Vec::new(),
             by_id: std::collections::BTreeMap::new(),
             bindings: std::collections::BTreeMap::new(),
+            shard_slots: std::collections::BTreeMap::new(),
             accrued_usd: 0.0,
         }
     }
@@ -243,7 +248,9 @@ impl CloudSim {
         for id in leftovers {
             self.terminate(id)?;
         }
-        // Provision the gaps and rebind slots.
+        // Provision the gaps and rebind slots. A *global* apply owns the
+        // whole fleet, so it also resets any per-shard slot tracking — the
+        // two reconciliation modes do not mix within one binding epoch.
         let ids: Vec<InstanceId> = plan
             .instances
             .iter()
@@ -254,6 +261,7 @@ impl CloudSim {
             })
             .collect::<Result<_>>()?;
         self.bindings.clear();
+        self.shard_slots.clear();
         for (planned, &id) in plan.instances.iter().zip(&ids) {
             self.bindings.insert(planned.slot_id, id);
         }
@@ -268,6 +276,106 @@ impl CloudSim {
             self.set_load(*id, load)?;
         }
         Ok(ids)
+    }
+
+    /// Shard-scoped [`apply_plan`](CloudSim::apply_plan): reconcile `plan`
+    /// against only the fleet `shard`'s previous shard-scoped apply owns.
+    /// Slot bindings still match globally (slot ids are process-unique, so
+    /// a surviving slot reclaims its instance no matter which epoch bound
+    /// it), but the same-label FIFO and the surplus terminations are
+    /// restricted to the shard's own instances — another shard's fleet is
+    /// never claimed or terminated, which is what lets the sharded planner
+    /// apply per-shard plans in any order and only for dirty shards.
+    pub fn apply_shard_plan(&mut self, shard: u32, plan: &Plan) -> Result<Vec<InstanceId>> {
+        let prev_slots: Vec<SlotId> = self.shard_slots.get(&shard).cloned().unwrap_or_default();
+        let owned: std::collections::BTreeSet<InstanceId> = prev_slots
+            .iter()
+            .filter_map(|s| self.bindings.get(s).copied())
+            .filter(|&id| self.get(id).is_some_and(SimInstance::alive))
+            .collect();
+        let mut assigned: Vec<Option<InstanceId>> = vec![None; plan.instances.len()];
+        let mut claimed: std::collections::BTreeSet<InstanceId> =
+            std::collections::BTreeSet::new();
+        // Pass 1: stable slot bindings (global — see above).
+        for (pi, planned) in plan.instances.iter().enumerate() {
+            if let Some(&id) = self.bindings.get(&planned.slot_id) {
+                let matches = self
+                    .get(id)
+                    .is_some_and(|inst| inst.alive() && inst.label == planned.label);
+                if matches && claimed.insert(id) {
+                    assigned[pi] = Some(id);
+                }
+            }
+        }
+        // Pass 2: same-label claims, oldest id first — shard-owned only.
+        let mut pool: std::collections::BTreeMap<&str, std::collections::VecDeque<InstanceId>> =
+            std::collections::BTreeMap::new();
+        for inst in self
+            .instances
+            .iter()
+            .filter(|i| i.alive() && owned.contains(&i.id) && !claimed.contains(&i.id))
+        {
+            pool.entry(inst.label.as_str()).or_default().push_back(inst.id);
+        }
+        for (pi, planned) in plan.instances.iter().enumerate() {
+            if assigned[pi].is_none() {
+                if let Some(id) = pool.get_mut(planned.label.as_str()).and_then(|v| v.pop_front())
+                {
+                    claimed.insert(id);
+                    assigned[pi] = Some(id);
+                }
+            }
+        }
+        // Terminate the shard's own unclaimed leftovers — nobody else's.
+        let leftovers: Vec<InstanceId> = pool.values().flatten().copied().collect();
+        for id in leftovers {
+            self.terminate(id)?;
+        }
+        // Provision the gaps, rebind only this shard's slots.
+        let ids: Vec<InstanceId> = plan
+            .instances
+            .iter()
+            .zip(assigned)
+            .map(|(planned, slot)| match slot {
+                Some(id) => Ok(id),
+                None => self.provision(planned.type_idx, planned.region_idx),
+            })
+            .collect::<Result<_>>()?;
+        for s in &prev_slots {
+            self.bindings.remove(s);
+        }
+        for (planned, &id) in plan.instances.iter().zip(&ids) {
+            self.bindings.insert(planned.slot_id, id);
+        }
+        self.shard_slots
+            .insert(shard, plan.instances.iter().map(|p| p.slot_id).collect());
+        let loads: Vec<Dims> = plan
+            .packing
+            .bins
+            .iter()
+            .map(|b| b.total_demand(&plan.problem))
+            .collect();
+        for (id, load) in ids.iter().zip(loads) {
+            self.set_load(*id, load)?;
+        }
+        Ok(ids)
+    }
+
+    /// Terminate every instance bound to `shard`'s slots and forget the
+    /// shard (a metro leaving the workload). Returns how many instances
+    /// were terminated. Idempotent: an unknown shard retires zero.
+    pub fn retire_shard(&mut self, shard: u32) -> Result<usize> {
+        let slots = self.shard_slots.remove(&shard).unwrap_or_default();
+        let mut terminated = 0usize;
+        for s in slots {
+            if let Some(id) = self.bindings.remove(&s) {
+                if self.get(id).is_some_and(SimInstance::alive) {
+                    self.terminate(id)?;
+                    terminated += 1;
+                }
+            }
+        }
+        Ok(terminated)
     }
 }
 
@@ -401,6 +509,56 @@ mod tests {
         let replanned = planner.plan(&requests).unwrap();
         let ids3 = s.apply_plan(&replanned).unwrap();
         assert_eq!(ids1, ids3, "re-planned identical plan must reuse the same instances");
+    }
+
+    #[test]
+    fn shard_scoped_apply_touches_only_the_shards_fleet() {
+        let catalog =
+            Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let planner = Planner::new(catalog.clone(), PlannerConfig::st3());
+        let mut s = CloudSim::new(catalog);
+        let mk = |base: u64, fps: f64, n: usize| -> Vec<StreamRequest> {
+            (0..n as u64)
+                .map(|i| {
+                    StreamRequest::new(
+                        camera_at(base + i, "Chicago", cities::CHICAGO, Resolution::HD720, 30.0),
+                        Program::Zf,
+                        fps,
+                    )
+                })
+                .collect()
+        };
+        let plan_a = planner.plan(&mk(0, 8.0, 6)).unwrap();
+        let plan_b = planner.plan(&mk(100, 8.0, 6)).unwrap();
+        let ids_a = s.apply_shard_plan(1, &plan_a).unwrap();
+        let ids_b = s.apply_shard_plan(2, &plan_b).unwrap();
+        assert_eq!(s.alive().len(), ids_a.len() + ids_b.len());
+
+        // Identical re-apply of shard 1 is a no-op with stable ids.
+        let ids_a2 = s.apply_shard_plan(1, &plan_a).unwrap();
+        assert_eq!(ids_a, ids_a2, "re-applying a shard plan must keep its instances");
+        assert_eq!(s.alive().len(), ids_a.len() + ids_b.len());
+
+        // Shard 1 shrinks: its surplus terminates, shard 2 stays whole.
+        let small = planner.plan(&mk(0, 8.0, 2)).unwrap();
+        let ids_small = s.apply_shard_plan(1, &small).unwrap();
+        assert!(ids_small.len() < ids_a.len(), "shrink scenario must drop instances");
+        assert!(
+            ids_small.iter().all(|id| ids_a.contains(id)),
+            "the shrunk shard reuses its own fleet"
+        );
+        for &id in &ids_b {
+            assert!(s.get(id).unwrap().alive(), "shard 2 instance {id} was touched");
+        }
+        assert_eq!(s.alive().len(), ids_small.len() + ids_b.len());
+
+        // Retiring shard 2 terminates exactly its fleet.
+        let n = s.retire_shard(2).unwrap();
+        assert_eq!(n, ids_b.len());
+        assert!(ids_b.iter().all(|&id| !s.get(id).unwrap().alive()));
+        assert!(ids_small.iter().all(|&id| s.get(id).unwrap().alive()));
+        assert_eq!(s.retire_shard(2).unwrap(), 0, "retire is idempotent");
+        assert!((s.hourly_rate() - small.cost_per_hour).abs() < 1e-9);
     }
 
     #[test]

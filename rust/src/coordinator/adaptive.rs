@@ -86,6 +86,33 @@ impl MigrationReport {
             self.streams_moved as f64 / self.streams_surviving as f64
         }
     }
+
+    /// Merge another shard's migration report into this one — the fleet
+    /// roll-up for [`shard`](super::shard)'s per-shard re-plans. Label
+    /// counts merge per label, stream/instance counts and costs sum,
+    /// pipeline telemetry absorbs; `winner` survives only if every absorbed
+    /// report agrees on it (shards can adopt different candidates).
+    pub fn absorb(&mut self, other: &MigrationReport) {
+        let merge = |into: &mut Vec<(String, usize)>, from: &[(String, usize)]| {
+            let mut m: BTreeMap<String, usize> = into.drain(..).collect();
+            for (label, n) in from {
+                *m.entry(label.clone()).or_insert(0) += n;
+            }
+            *into = m.into_iter().collect();
+        };
+        merge(&mut self.provision, &other.provision);
+        merge(&mut self.terminate, &other.terminate);
+        self.kept += other.kept;
+        self.streams_moved += other.streams_moved;
+        self.streams_surviving += other.streams_surviving;
+        self.cost_before += other.cost_before;
+        self.cost_after += other.cost_after;
+        self.pipeline.absorb(&other.pipeline);
+        if self.winner != other.winner {
+            self.winner = None;
+        }
+        self.winner_flipped |= other.winner_flipped;
+    }
 }
 
 /// Count instances by label (cold-start provisioning only).
@@ -164,11 +191,11 @@ impl AdaptiveManager {
         } else {
             self.planner.plan(&requests)?
         };
-        let mut report = MigrationReport {
-            cost_after: new_plan.cost_per_hour,
-            pipeline: new_plan.pipeline.clone(),
-            ..Default::default()
-        };
+        let mut report = migration_diff(
+            self.current.as_ref().map(|(r, p)| (r.as_slice(), p)),
+            &requests,
+            &new_plan,
+        );
         if self.warm {
             report.winner = self.ctx.last_winner;
             report.winner_flipped = matches!(
@@ -177,62 +204,79 @@ impl AdaptiveManager {
             );
         }
 
-        if let Some((old_requests, old_plan)) = &self.current {
-            report.cost_before = old_plan.cost_per_hour;
-            // Per-instance pairing: which old instance survives as which
-            // new one. Unpaired news are provisions, unpaired olds are
-            // terminations — no label-census approximation.
-            let pair = pair_instances(old_plan, &new_plan);
-            report.kept = pair.iter().flatten().count();
-            let mut new_paired = vec![false; new_plan.instances.len()];
-            for &ni in pair.iter().flatten() {
-                new_paired[ni] = true;
-            }
-            let mut provision: BTreeMap<String, usize> = BTreeMap::new();
-            for (ni, inst) in new_plan.instances.iter().enumerate() {
-                if !new_paired[ni] {
-                    *provision.entry(inst.label.clone()).or_insert(0) += 1;
-                }
-            }
-            report.provision = provision.into_iter().collect();
-            let mut terminate: BTreeMap<String, usize> = BTreeMap::new();
-            for (oi, inst) in old_plan.instances.iter().enumerate() {
-                if pair[oi].is_none() {
-                    *terminate.entry(inst.label.clone()).or_insert(0) += 1;
-                }
-            }
-            report.terminate = terminate.into_iter().collect();
-            // Stream moves, by full stream identity (camera + program + fps
-            // tier + occurrence): a surviving stream moved iff its new host
-            // is not the instance its old host survives as.
-            let old_keys = stream_keys(old_requests);
-            let new_keys = stream_keys(&requests);
-            let mut old_host: HashMap<_, usize> = HashMap::new();
-            for (oi, inst) in old_plan.instances.iter().enumerate() {
-                for &s in &inst.streams {
-                    old_host.insert(old_keys[s], oi);
-                }
-            }
-            for (ni, inst) in new_plan.instances.iter().enumerate() {
-                for &s in &inst.streams {
-                    if let Some(&oi) = old_host.get(&new_keys[s]) {
-                        report.streams_surviving += 1;
-                        if pair[oi] != Some(ni) {
-                            report.streams_moved += 1;
-                        }
-                    }
-                }
-            }
-        } else {
-            // Cold start: everything is a provision.
-            for (label, n) in census(&new_plan) {
-                report.provision.push((label, n));
-            }
-        }
-
         self.current = Some((requests, new_plan));
         Ok(report)
     }
+}
+
+/// Compute the migration diff between an (optional) deployed plan and its
+/// successor — the accounting core of [`AdaptiveManager::replan`], shared
+/// with the per-shard re-plans in [`shard`](super::shard). Fills everything
+/// except the portfolio fields (`winner`/`winner_flipped`), which only the
+/// caller's context knows.
+pub(crate) fn migration_diff(
+    old: Option<(&[StreamRequest], &Plan)>,
+    new_requests: &[StreamRequest],
+    new_plan: &Plan,
+) -> MigrationReport {
+    let mut report = MigrationReport {
+        cost_after: new_plan.cost_per_hour,
+        pipeline: new_plan.pipeline.clone(),
+        ..Default::default()
+    };
+    if let Some((old_requests, old_plan)) = old {
+        report.cost_before = old_plan.cost_per_hour;
+        // Per-instance pairing: which old instance survives as which
+        // new one. Unpaired news are provisions, unpaired olds are
+        // terminations — no label-census approximation.
+        let pair = pair_instances(old_plan, new_plan);
+        report.kept = pair.iter().flatten().count();
+        let mut new_paired = vec![false; new_plan.instances.len()];
+        for &ni in pair.iter().flatten() {
+            new_paired[ni] = true;
+        }
+        let mut provision: BTreeMap<String, usize> = BTreeMap::new();
+        for (ni, inst) in new_plan.instances.iter().enumerate() {
+            if !new_paired[ni] {
+                *provision.entry(inst.label.clone()).or_insert(0) += 1;
+            }
+        }
+        report.provision = provision.into_iter().collect();
+        let mut terminate: BTreeMap<String, usize> = BTreeMap::new();
+        for (oi, inst) in old_plan.instances.iter().enumerate() {
+            if pair[oi].is_none() {
+                *terminate.entry(inst.label.clone()).or_insert(0) += 1;
+            }
+        }
+        report.terminate = terminate.into_iter().collect();
+        // Stream moves, by full stream identity (camera + program + fps
+        // tier + occurrence): a surviving stream moved iff its new host
+        // is not the instance its old host survives as.
+        let old_keys = stream_keys(old_requests);
+        let new_keys = stream_keys(new_requests);
+        let mut old_host: HashMap<_, usize> = HashMap::new();
+        for (oi, inst) in old_plan.instances.iter().enumerate() {
+            for &s in &inst.streams {
+                old_host.insert(old_keys[s], oi);
+            }
+        }
+        for (ni, inst) in new_plan.instances.iter().enumerate() {
+            for &s in &inst.streams {
+                if let Some(&oi) = old_host.get(&new_keys[s]) {
+                    report.streams_surviving += 1;
+                    if pair[oi] != Some(ni) {
+                        report.streams_moved += 1;
+                    }
+                }
+            }
+        }
+    } else {
+        // Cold start: everything is a provision.
+        for (label, n) in census(new_plan) {
+            report.provision.push((label, n));
+        }
+    }
+    report
 }
 
 #[cfg(test)]
@@ -370,6 +414,41 @@ mod tests {
         assert!(mgr.ctx.main.solver.subproblems.get() >= 2);
         // The cumulative summary renders (diagnostic surface).
         assert!(mgr.ctx.main.solver.summary().contains("delta=1"));
+    }
+
+    #[test]
+    fn migration_reports_roll_up_across_shards() {
+        let mut a = MigrationReport {
+            provision: vec![("cpu@r".to_string(), 2)],
+            terminate: vec![("gpu@r".to_string(), 1)],
+            kept: 3,
+            streams_moved: 1,
+            streams_surviving: 10,
+            cost_before: 1.0,
+            cost_after: 2.0,
+            winner: Some(Candidate::Main),
+            ..Default::default()
+        };
+        let b = MigrationReport {
+            provision: vec![("cpu@r".to_string(), 1), ("x@r".to_string(), 4)],
+            kept: 2,
+            streams_surviving: 5,
+            cost_before: 0.5,
+            cost_after: 0.25,
+            winner: Some(Candidate::Main),
+            winner_flipped: true,
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.provision, vec![("cpu@r".to_string(), 3), ("x@r".to_string(), 4)]);
+        assert_eq!(a.terminate, vec![("gpu@r".to_string(), 1)]);
+        assert_eq!((a.kept, a.streams_moved, a.streams_surviving), (5, 1, 15));
+        assert!((a.cost_after - 2.25).abs() < 1e-12);
+        assert_eq!(a.winner, Some(Candidate::Main), "agreeing winners survive");
+        assert!(a.winner_flipped);
+        let c = MigrationReport { winner: Some(Candidate::NearestExact), ..Default::default() };
+        a.absorb(&c);
+        assert_eq!(a.winner, None, "disagreeing winners clear the roll-up");
     }
 
     #[test]

@@ -301,6 +301,53 @@ pub fn allocate_pooled(
     }
 }
 
+/// Cross-**shard** slack ledger — the arbiter-level analogue of the
+/// portfolio's `SharedBudgetPool`. Each shard publishes the slack its own
+/// pooled allocation left unclaimed (`PlanContext::pool_out`); when a shard
+/// re-plans, the ledger hands it the sum of every *other* shard's last
+/// published slack as the `external` input to [`allocate_pooled`]. A shard's
+/// own entry is excluded (its own slack already feeds its in-context pool),
+/// and a retired shard's donation is withdrawn with it.
+#[derive(Debug, Default)]
+pub struct ShardSlackLedger {
+    donated: std::collections::BTreeMap<u32, AxisSlack>,
+}
+
+impl ShardSlackLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `shard`'s published slack, replacing its previous donation.
+    pub fn publish(&mut self, shard: u32, slack: AxisSlack) {
+        self.donated.insert(shard, slack);
+    }
+
+    /// Withdraw a departed shard's donation. Returns what it had published.
+    pub fn retire(&mut self, shard: u32) -> Option<AxisSlack> {
+        self.donated.remove(&shard)
+    }
+
+    /// The external pool share for `shard`: every other shard's last
+    /// published slack, summed per axis.
+    pub fn available_for(&self, shard: u32) -> AxisSlack {
+        self.donated
+            .iter()
+            .filter(|(&s, _)| s != shard)
+            .fold(AxisSlack::default(), |acc, (_, sl)| acc.plus(sl))
+    }
+
+    /// Number of shards currently holding a donation entry.
+    pub fn donors(&self) -> usize {
+        self.donated.len()
+    }
+
+    /// Sum of all donations (diagnostics; a shard never draws its own).
+    pub fn total_donated(&self) -> AxisSlack {
+        self.donated.values().fold(AxisSlack::default(), |acc, sl| acc.plus(sl))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -564,5 +611,37 @@ mod tests {
         let out = allocate(&opts, &history);
         assert!(out[0].milp.max_nodes > opts.milp.max_nodes);
         assert!(out[0].milp_node_scale > opts.milp_node_scale);
+    }
+
+    #[test]
+    fn shard_ledger_excludes_the_drawing_shard() {
+        let mut ledger = ShardSlackLedger::new();
+        ledger.publish(0, AxisSlack { graph_nodes: 100, milp_vars: 10, milp_nodes: 5 });
+        ledger.publish(3, AxisSlack { graph_nodes: 40, milp_vars: 4, milp_nodes: 2 });
+        ledger.publish(7, AxisSlack { graph_nodes: 1, milp_vars: 1, milp_nodes: 1 });
+        assert_eq!(ledger.donors(), 3);
+        // Shard 0 draws only 3 + 7's slack — never its own.
+        let ext = ledger.available_for(0);
+        assert_eq!((ext.graph_nodes, ext.milp_vars, ext.milp_nodes), (41, 5, 3));
+        // A shard with no entry draws everything.
+        let all = ledger.available_for(99);
+        assert_eq!(all, ledger.total_donated());
+        assert_eq!(all.graph_nodes, 141);
+    }
+
+    #[test]
+    fn shard_ledger_replaces_and_retires_donations() {
+        let mut ledger = ShardSlackLedger::new();
+        ledger.publish(1, AxisSlack { graph_nodes: 50, milp_vars: 5, milp_nodes: 5 });
+        // Re-publishing replaces (no accumulation across rounds).
+        ledger.publish(1, AxisSlack { graph_nodes: 20, milp_vars: 2, milp_nodes: 2 });
+        ledger.publish(2, AxisSlack { graph_nodes: 30, milp_vars: 3, milp_nodes: 3 });
+        assert_eq!(ledger.available_for(2).graph_nodes, 20);
+        // Retiring a shard withdraws its donation from everyone's pool.
+        let gone = ledger.retire(1).unwrap();
+        assert_eq!(gone.graph_nodes, 20);
+        assert_eq!(ledger.retire(1), None);
+        assert_eq!(ledger.donors(), 1);
+        assert!(ledger.available_for(2).is_zero());
     }
 }

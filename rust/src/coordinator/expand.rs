@@ -179,14 +179,43 @@ pub fn run(
             }
             // Greedy max-overlap matching; ties resolve in slot/bin order,
             // so an unchanged packing reproduces the previous pairing
-            // exactly.
+            // exactly. Labels partition both slots and bins, so gating on
+            // local taken-sets equals gating on the global ones.
             cands.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
-            for (_, si, bi) in cands {
-                if !slot_taken[si] && slot_of_bin[bi].is_none() {
-                    slot_taken[si] = true;
-                    slot_of_bin[bi] = Some(prev.slots[si].slot_id);
-                    pairs.push((si, bi));
+            let mut s_taken: FxHashSet<usize> = FxHashSet::default();
+            let mut b_taken: FxHashSet<usize> = FxHashSet::default();
+            let mut chosen: Vec<(usize, usize)> = Vec::new();
+            let mut greedy_total = 0usize;
+            for &(ov, si, bi) in &cands {
+                if !s_taken.contains(&si) && !b_taken.contains(&bi) {
+                    s_taken.insert(si);
+                    b_taken.insert(bi);
+                    chosen.push((si, bi));
+                    greedy_total += ov;
                 }
+            }
+            // Certified matching: greedy is provably optimal whenever it
+            // meets the cheap upper bound min(Σ per-slot best, Σ per-bin
+            // best) — in particular on every unchanged re-plan, where each
+            // slot's own bin is its best. Only when greedy demonstrably
+            // leaves overlap on the table (and the label block is small
+            // enough for the O(n³) solve) does the exact assignment run,
+            // and its matching is adopted only when *strictly* better — so
+            // greedy's tie-breaking, and with it bit-for-bit reproduction
+            // of identical re-plans, is preserved.
+            if greedy_total < matching_upper_bound(&cands)
+                && slots.len().max(bins.len()) <= EXACT_MATCH_CAP
+            {
+                if let Some((exact_total, exact_pairs)) = exact_matching(slots, bins, &cands) {
+                    if exact_total > greedy_total {
+                        chosen = exact_pairs;
+                    }
+                }
+            }
+            for (si, bi) in chosen {
+                slot_taken[si] = true;
+                slot_of_bin[bi] = Some(prev.slots[si].slot_id);
+                pairs.push((si, bi));
             }
             // Zero-overlap remainder pairs FIFO: the *instance* survives
             // even if all its streams were re-dealt.
@@ -256,6 +285,130 @@ pub fn run(
         )));
     }
     Ok(instances)
+}
+
+/// Largest per-label slot/bin block the exact assignment solve runs on.
+/// Beyond this, greedy stands alone — the O(n³) pass would dominate Expand,
+/// and large blocks are exactly where greedy's per-slot-best bound is
+/// almost always met anyway.
+const EXACT_MATCH_CAP: usize = 96;
+
+/// Cheap upper bound on any slot↔bin matching's kept-stream total: each
+/// slot contributes at most its best single-bin overlap and each bin at
+/// most its best single-slot overlap, whichever sum is tighter. Greedy
+/// meeting this bound certifies it optimal without an exact solve.
+fn matching_upper_bound(cands: &[(usize, usize, usize)]) -> usize {
+    let mut per_slot: FxHashMap<usize, usize> = FxHashMap::default();
+    let mut per_bin: FxHashMap<usize, usize> = FxHashMap::default();
+    for &(ov, si, bi) in cands {
+        let s = per_slot.entry(si).or_insert(0);
+        *s = (*s).max(ov);
+        let b = per_bin.entry(bi).or_insert(0);
+        *b = (*b).max(ov);
+    }
+    per_slot.values().sum::<usize>().min(per_bin.values().sum())
+}
+
+/// Exact maximum-overlap matching for one label's slot/bin block: builds
+/// the (zero-padded square) overlap matrix over the label's slots × bins
+/// and runs the Hungarian solve. Returns the matching's kept-stream total
+/// and its positive-overlap pairs in slot order.
+fn exact_matching(
+    slots: &[usize],
+    bins: &[usize],
+    cands: &[(usize, usize, usize)],
+) -> Option<(usize, Vec<(usize, usize)>)> {
+    let n = slots.len().max(bins.len());
+    if n == 0 {
+        return None;
+    }
+    let row_of: FxHashMap<usize, usize> =
+        slots.iter().enumerate().map(|(r, &si)| (si, r)).collect();
+    let col_of: FxHashMap<usize, usize> =
+        bins.iter().enumerate().map(|(c, &bi)| (bi, c)).collect();
+    let mut w = vec![vec![0u64; n]; n];
+    for &(ov, si, bi) in cands {
+        w[row_of[&si]][col_of[&bi]] = ov as u64;
+    }
+    let m = hungarian_max(n, &w);
+    let mut total = 0usize;
+    let mut pairs = Vec::new();
+    for (r, &c) in m.iter().enumerate() {
+        if r < slots.len() && c < bins.len() && w[r][c] > 0 {
+            total += w[r][c] as usize;
+            pairs.push((slots[r], bins[c]));
+        }
+    }
+    Some((total, pairs))
+}
+
+/// Maximum-weight perfect matching on an `n`×`n` weight matrix —
+/// Kuhn–Munkres over dual potentials, O(n³), run as a minimization of
+/// `maxw - w[i][j]`. Returns `row → col`. Deterministic: no randomized
+/// tie-breaking anywhere, so re-runs reproduce the same matching.
+fn hungarian_max(n: usize, w: &[Vec<u64>]) -> Vec<usize> {
+    const INF: i64 = i64::MAX / 4;
+    let maxw = w.iter().flat_map(|r| r.iter()).copied().max().unwrap_or(0) as i64;
+    let cost = |i: usize, j: usize| maxw - w[i][j] as i64;
+    // 1-based arrays with a virtual column 0, per the standard potentials
+    // formulation: p[j] is the row matched to column j, way[j] the previous
+    // column on the alternating path.
+    let mut u = vec![0i64; n + 1];
+    let mut v = vec![0i64; n + 1];
+    let mut p = vec![0usize; n + 1];
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost(i0 - 1, j - 1) - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut ans = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            ans[p[j] - 1] = j - 1;
+        }
+    }
+    ans
 }
 
 #[cfg(test)]
@@ -441,6 +594,120 @@ mod tests {
         assert_eq!(instances[0].streams, vec![0, 3], "out-of-order hosting reproduced");
         assert_eq!(instances[1].slot_id, 42);
         assert_eq!(instances[1].streams, vec![1, 2]);
+    }
+
+    #[test]
+    fn exact_matching_beats_a_greedy_local_optimum() {
+        // Two groups, three bins of one label. Slot A survives {3×g0, 2×g1},
+        // slot B {3×g0}; bins X{3×g0}, Y{1×g0 + 2×g1}, Z{2×g0}. Greedy takes
+        // A↔X (overlap 3, lowest slot/bin tie-break) and is left with B↔Z
+        // (2) — total 5 — while the unique optimum keeps 6: A↔Y (3) + B↔X
+        // (3). The upper bound (per-slot bests: 3+3=6) exposes the gap, the
+        // Hungarian pass closes it.
+        let problem = PackingProblem::new(
+            vec![
+                ItemGroup {
+                    label: "g0".into(),
+                    count: 6,
+                    demand_per_bin: vec![Some(Dims::new(1.0, 1.0, 0.0, 0.0))],
+                },
+                ItemGroup {
+                    label: "g1".into(),
+                    count: 2,
+                    demand_per_bin: vec![Some(Dims::new(1.0, 1.0, 0.0, 0.0))],
+                },
+            ],
+            vec![BinType {
+                label: "cpu@r".into(),
+                capacity: Dims::new(8.0, 15.0, 0.0, 0.0),
+                cost: 1.0,
+                type_idx: 4,
+                region_idx: 2,
+                has_gpu: false,
+            }],
+        );
+        let packing = Packing {
+            bins: vec![
+                PackedBin { bin_type: 0, counts: vec![3, 0] },
+                PackedBin { bin_type: 0, counts: vec![1, 2] },
+                PackedBin { bin_type: 0, counts: vec![2, 0] },
+            ],
+        };
+        let members = vec![vec![0, 1, 2, 3, 4, 5], vec![6, 7]];
+        let keys = dummy_keys(8);
+        let prev = PrevAssignment {
+            slots: vec![
+                PrevSlot {
+                    slot_id: 70,
+                    label: "cpu@r".into(),
+                    streams: vec![keys[0], keys[1], keys[2], keys[6], keys[7]],
+                },
+                PrevSlot {
+                    slot_id: 90,
+                    label: "cpu@r".into(),
+                    streams: vec![keys[3], keys[4], keys[5]],
+                },
+            ],
+        };
+        let instances = run(&problem, &packing, &members, &keys, Some(&prev)).unwrap();
+        assert_eq!(instances[0].slot_id, 90, "bin X pairs with slot B, not greedy's A");
+        assert_eq!(instances[0].streams, vec![3, 4, 5]);
+        assert_eq!(instances[1].slot_id, 70);
+        assert_eq!(instances[1].streams, vec![0, 6, 7], "A keeps 1×g0 + both g1");
+        assert!(
+            instances[2].slot_id != 70 && instances[2].slot_id != 90,
+            "bin Z is the fresh slot"
+        );
+        assert_eq!(instances[2].streams, vec![1, 2], "residual transfers in request order");
+        // 6 of 8 streams stay in place — the certified optimum.
+        let kept = [&instances[0], &instances[1]]
+            .iter()
+            .map(|i| i.streams.len())
+            .sum::<usize>();
+        assert_eq!(kept, 6);
+    }
+
+    fn brute_force_best(n: usize, w: &[Vec<u64>]) -> u64 {
+        fn rec(r: usize, n: usize, w: &[Vec<u64>], used: &mut [bool]) -> u64 {
+            if r == n {
+                return 0;
+            }
+            let mut best = 0;
+            for c in 0..n {
+                if !used[c] {
+                    used[c] = true;
+                    best = best.max(w[r][c] + rec(r + 1, n, w, used));
+                    used[c] = false;
+                }
+            }
+            best
+        }
+        rec(0, n, w, &mut vec![false; n])
+    }
+
+    #[test]
+    fn hungarian_matches_brute_force_on_small_matrices() {
+        let mut seed = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            seed
+        };
+        for n in 1..=4 {
+            for _ in 0..25 {
+                let w: Vec<Vec<u64>> =
+                    (0..n).map(|_| (0..n).map(|_| next() % 10).collect()).collect();
+                let m = hungarian_max(n, &w);
+                let mut seen = vec![false; n];
+                for &c in &m {
+                    assert!(!seen[c], "not a permutation: {m:?} for {w:?}");
+                    seen[c] = true;
+                }
+                let total: u64 = m.iter().enumerate().map(|(r, &c)| w[r][c]).sum();
+                assert_eq!(total, brute_force_best(n, &w), "w={w:?}");
+            }
+        }
     }
 
     #[test]

@@ -61,6 +61,7 @@ pub mod eligibility;
 pub mod expand;
 pub mod pipeline;
 pub mod portfolio;
+pub mod shard;
 
 use crate::cameras::StreamRequest;
 use crate::catalog::Catalog;

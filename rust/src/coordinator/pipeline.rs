@@ -162,6 +162,42 @@ impl PipelineStats {
     pub fn front_end_ms(&self) -> f64 {
         self.elig_ms + self.build_ms
     }
+
+    /// Fold `other` into `self`: counters and stage wall-clocks sum, the
+    /// warm-start flag ORs. The fleet roll-up used by
+    /// [`shard`](super::shard) when several per-shard pipelines report as
+    /// one planning round.
+    pub fn absorb(&mut self, other: &PipelineStats) {
+        self.elig_cache_hits += other.elig_cache_hits;
+        self.elig_cache_misses += other.elig_cache_misses;
+        self.front_unchanged += other.front_unchanged;
+        self.front_changed += other.front_changed;
+        self.demand_cache_hits += other.demand_cache_hits;
+        self.demand_cache_misses += other.demand_cache_misses;
+        self.graph_cache_hits += other.graph_cache_hits;
+        self.graph_cache_misses += other.graph_cache_misses;
+        self.solution_cache_hits += other.solution_cache_hits;
+        self.solution_cache_misses += other.solution_cache_misses;
+        self.delta_solve_hits += other.delta_solve_hits;
+        self.structural_delta_hits += other.structural_delta_hits;
+        self.warm_started |= other.warm_started;
+        self.components += other.components;
+        self.solve_threads += other.solve_threads;
+        self.components_exact += other.components_exact;
+        self.components_fallback += other.components_fallback;
+        self.components_proven += other.components_proven;
+        self.lp_warm_resumes += other.lp_warm_resumes;
+        self.lp_cold_solves += other.lp_cold_solves;
+        self.degenerate_pivots += other.degenerate_pivots;
+        self.budget_donated_nodes += other.budget_donated_nodes;
+        self.budget_pooled_nodes += other.budget_pooled_nodes;
+        self.pool_jobs += other.pool_jobs;
+        self.graph_fail_fastpaths += other.graph_fail_fastpaths;
+        self.elig_ms += other.elig_ms;
+        self.build_ms += other.build_ms;
+        self.solve_ms += other.solve_ms;
+        self.expand_ms += other.expand_ms;
+    }
 }
 
 fn ms_since(t: Instant) -> f64 {
@@ -437,8 +473,11 @@ fn hash_f64<H: Hasher>(state: &mut H, v: f64) {
     v.to_bits().hash(state);
 }
 
-/// Fingerprint of everything the cached artifacts depend on.
-fn signature(catalog: &Catalog, config: &PlannerConfig) -> u64 {
+/// Fingerprint of everything the cached artifacts depend on. Also the
+/// arbiter's catalog/config change detector ([`shard`](super::shard)): a
+/// price or config flip moves this hash, which fans a dirty bit out to
+/// every shard.
+pub(crate) fn signature(catalog: &Catalog, config: &PlannerConfig) -> u64 {
     let mut h = DefaultHasher::new();
     let hw = match config.hardware {
         super::HardwareFilter::CpuOnly => 0u8,

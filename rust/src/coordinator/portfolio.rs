@@ -189,6 +189,16 @@ impl ReplanContext {
             Candidate::NearestExact => &self.alt_nearest_exact,
         }
     }
+
+    /// Fleet-level solver telemetry: the three candidate contexts' counters
+    /// absorbed into one fresh [`SolverMetrics`](crate::metrics::SolverMetrics).
+    pub fn solver_rollup(&self) -> crate::metrics::SolverMetrics {
+        let total = crate::metrics::SolverMetrics::new();
+        total.absorb(&self.main.solver);
+        total.absorb(&self.alt_rtt_greedy.solver);
+        total.absorb(&self.alt_nearest_exact.solver);
+        total
+    }
 }
 
 /// Run one portfolio re-plan through `ctx` and return the cheapest
@@ -204,7 +214,23 @@ pub fn plan(
     requests: &[StreamRequest],
     ctx: &mut ReplanContext,
 ) -> Result<Plan> {
-    let pool_in = ctx.budget_pool.available_for(Candidate::Main);
+    plan_with_slack(planner, requests, ctx, AxisSlack::default())
+}
+
+/// [`plan`] with an `external` cross-**shard** budget share: the slack the
+/// other shards' ledger entries donate is added to the main candidate's
+/// pool input (`budget::allocate_pooled` floors every component at the
+/// static seed, so a zero share reproduces [`plan`] exactly). Only the main
+/// candidate draws the cross-shard share — the alternates keep drawing the
+/// in-context cross-candidate pool, so the ledger's donation is never
+/// double-counted inside one portfolio round.
+pub fn plan_with_slack(
+    planner: &Planner,
+    requests: &[StreamRequest],
+    ctx: &mut ReplanContext,
+    external: AxisSlack,
+) -> Result<Plan> {
+    let pool_in = ctx.budget_pool.available_for(Candidate::Main).plus(&external);
     let mut best =
         plan_with_pool(&planner.catalog, &planner.config, requests, &mut ctx.main, pool_in)?;
     ctx.budget_pool.publish(Candidate::Main, ctx.main.pool_out);

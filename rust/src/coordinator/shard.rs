@@ -1,0 +1,830 @@
+//! Metro-sharded planning: per-shard plan contexts, event-driven re-plans,
+//! and a thin global arbiter.
+//!
+//! The coordinator's staged pipeline already decomposes a *single* solve into
+//! region-connected components. This module promotes that decomposition to
+//! the fleet architecture: the stream population is partitioned into **metro
+//! shards** — connected components of the per-request eligibility
+//! [`RegionMask`]s — and each shard owns a full portfolio
+//! [`ReplanContext`] (Main + both alternates) that re-plans *independently*,
+//! and concurrently with other shards, only when drift actually lands in its
+//! metro (an event-driven dirty set).
+//!
+//! Because a shard is a mask-connected component, no feasible plan can ever
+//! place a shard's stream on another shard's regions; on region-disjoint
+//! workloads the sharded optimum therefore equals the unsharded optimum
+//! exactly (asserted in `bench_planet` and a property test).
+//!
+//! The [`ShardedPlanner`] arbiter owns everything genuinely global:
+//!
+//! - the cross-shard **budget pool** ([`ShardSlackLedger`]): each re-planned
+//!   shard publishes its residual `pool_out` slack, and every dirty shard
+//!   draws the slack donated by *other* shards as extra B&B pruning budget;
+//! - one shared [`PoolSlot`] worker pool and one content-addressed
+//!   [`GraphCache`], wired into every shard's three candidate contexts;
+//! - catalog/price fan-out: a change of the `(catalog, config)`
+//!   [`pipeline::signature`] dirties **all** shards, while a camera
+//!   join/leave dirties exactly the shard whose drift signature moved.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{BTreeMap, BTreeSet};
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+use super::adaptive::{migration_diff, MigrationReport};
+use super::budget::{AxisSlack, ShardSlackLedger};
+use super::eligibility::{self, EligCache, RegionMask};
+use super::pipeline::{self, PipelineStats};
+use super::portfolio::{self, Candidate, ReplanContext};
+use super::{Plan, Planner};
+use crate::cameras::{CameraMode, StreamRequest};
+use crate::cloudsim::{CloudSim, InstanceId};
+use crate::error::{Error, Result};
+use crate::metrics::SolverMetrics;
+use crate::packing::arcflow::GraphCache;
+use crate::util::pool::{PoolSlot, WorkerPool};
+
+/// Identity of a metro shard: the smallest catalog region index of its
+/// mask-connected region cluster. Stable across rounds as long as the
+/// catalog's region list is stable, even as cameras join and leave.
+pub type ShardId = u32;
+
+/// Arbiter-level event counters (event-driven re-plan accounting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardEvents {
+    /// Planning rounds driven through [`ShardedPlanner::replan`].
+    pub rounds: u64,
+    /// Shard re-plans actually executed (dirty shards only; clean shards
+    /// reuse their deployed plan verbatim).
+    pub shard_replans: u64,
+    /// `(catalog, config)` signature changes fanned out to every shard.
+    pub price_fanouts: u64,
+    /// Shards created because drift opened a new metro.
+    pub shards_joined: u64,
+    /// Shards retired because their metro emptied.
+    pub shards_retired: u64,
+}
+
+/// One metro shard: a request slice, its portfolio context, and the plan it
+/// currently has deployed.
+pub struct Shard {
+    /// The shard's own three-candidate portfolio state. Public so callers
+    /// (and tests) can inspect per-shard pipeline/solver telemetry.
+    pub ctx: ReplanContext,
+    /// Re-plans this shard has executed since it joined.
+    pub replans: u64,
+    requests: Vec<StreamRequest>,
+    /// For each shard-local request index, its index in the arbiter's most
+    /// recent global slice.
+    global: Vec<usize>,
+    drift_sig: u64,
+    /// The deployed `(requests, plan)` pair — kept together so the next
+    /// re-plan can diff migrations against exactly what it replaces.
+    deployed: Option<(Vec<StreamRequest>, Plan)>,
+    last_report: Option<MigrationReport>,
+}
+
+impl Shard {
+    fn new(pool: &Arc<PoolSlot>, graphs: &Arc<GraphCache>) -> Self {
+        let mut ctx = ReplanContext::new();
+        // Re-wire all three candidate contexts onto the arbiter's global
+        // worker pool and graph cache (replacing the portfolio-local pair
+        // `ReplanContext::new` installed).
+        ctx.main.share_pool(Arc::clone(pool));
+        ctx.alt_rtt_greedy.share_pool(Arc::clone(pool));
+        ctx.alt_nearest_exact.share_pool(Arc::clone(pool));
+        ctx.main.share_graphs(Arc::clone(graphs));
+        ctx.alt_rtt_greedy.share_graphs(Arc::clone(graphs));
+        ctx.alt_nearest_exact.share_graphs(Arc::clone(graphs));
+        Shard {
+            ctx,
+            replans: 0,
+            requests: Vec::new(),
+            global: Vec::new(),
+            drift_sig: 0,
+            deployed: None,
+            last_report: None,
+        }
+    }
+
+    /// The shard's current request slice (shard-local order).
+    pub fn requests(&self) -> &[StreamRequest] {
+        &self.requests
+    }
+
+    /// Shard-local index -> global index mapping for [`Self::requests`].
+    pub fn global_indices(&self) -> &[usize] {
+        &self.global
+    }
+
+    /// The plan this shard currently has deployed, if any.
+    pub fn plan(&self) -> Option<&Plan> {
+        self.deployed.as_ref().map(|(_, p)| p)
+    }
+
+    /// Migration report of the shard's most recent re-plan.
+    pub fn last_report(&self) -> Option<&MigrationReport> {
+        self.last_report.as_ref()
+    }
+
+    /// Re-plan this shard's slice through the portfolio, drawing `external`
+    /// cross-shard slack, and diff migrations against the deployed plan.
+    fn replan_slice(&mut self, planner: &Planner, external: AxisSlack) -> Result<()> {
+        let prev_winner = self.ctx.last_winner;
+        let plan = portfolio::plan_with_slack(planner, &self.requests, &mut self.ctx, external)?;
+        let mut report = migration_diff(
+            self.deployed.as_ref().map(|(r, p)| (r.as_slice(), p)),
+            &self.requests,
+            &plan,
+        );
+        report.winner = self.ctx.last_winner;
+        report.winner_flipped =
+            matches!((prev_winner, self.ctx.last_winner), (Some(a), Some(b)) if a != b);
+        self.deployed = Some((self.requests.clone(), plan));
+        self.last_report = Some(report);
+        self.replans += 1;
+        Ok(())
+    }
+}
+
+/// One shard's contribution to a [`ShardedPlan`].
+#[derive(Clone, Debug)]
+pub struct ShardEntry {
+    pub shard: ShardId,
+    /// The shard's plan; `instances[..].streams` index the *shard-local*
+    /// slice — translate through `global` for fleet-wide indices.
+    pub plan: Plan,
+    /// Shard-local request index -> index into the round's global slice.
+    pub global: Vec<usize>,
+    /// True when this round actually re-planned the shard (it was dirty).
+    pub replanned: bool,
+    /// The portfolio candidate whose plan the shard currently deploys.
+    pub winner: Option<Candidate>,
+}
+
+/// The fleet-wide outcome of one [`ShardedPlanner::replan`] round.
+#[derive(Clone, Debug)]
+pub struct ShardedPlan {
+    /// Per-shard plans in ascending [`ShardId`] order (all shards, dirty or
+    /// not).
+    pub entries: Vec<ShardEntry>,
+    /// Shards whose metro emptied this round (their fleets should be
+    /// retired; [`Self::apply_to`] does so).
+    pub retired: Vec<ShardId>,
+    /// Sum of the per-shard plan costs.
+    pub cost_per_hour: f64,
+    /// Shards that re-planned this round.
+    pub dirty_shards: usize,
+    /// Shards alive after this round.
+    pub total_shards: usize,
+}
+
+impl ShardedPlan {
+    /// True when every shard's exact phase ran to completion and proved
+    /// optimality for each of its components — the precondition under which
+    /// sharded cost equals unsharded cost on region-disjoint workloads.
+    pub fn exact_complete(&self) -> bool {
+        self.entries.iter().all(|e| {
+            e.plan.pipeline.components_fallback == 0
+                && e.plan.pipeline.components_proven == e.plan.pipeline.components
+        })
+    }
+
+    /// True when every shard deploys the Main (full-GCL) candidate.
+    pub fn all_main(&self) -> bool {
+        self.entries.iter().all(|e| e.winner == Some(Candidate::Main))
+    }
+
+    /// Pipeline telemetry summed over the shards that re-planned this round.
+    pub fn stats_rollup(&self) -> PipelineStats {
+        let mut total = PipelineStats::default();
+        for e in self.entries.iter().filter(|e| e.replanned) {
+            total.absorb(&e.plan.pipeline);
+        }
+        total
+    }
+
+    /// Apply the round to a [`CloudSim`] fleet: retire emptied shards, then
+    /// apply each shard's plan through the shard-scoped path so one metro's
+    /// churn never touches another metro's instances. Returns the per-shard
+    /// instance ids.
+    pub fn apply_to(&self, sim: &mut CloudSim) -> Result<BTreeMap<ShardId, Vec<InstanceId>>> {
+        for &id in &self.retired {
+            sim.retire_shard(id)?;
+        }
+        let mut out = BTreeMap::new();
+        for e in &self.entries {
+            out.insert(e.shard, sim.apply_shard_plan(e.shard, &e.plan)?);
+        }
+        Ok(out)
+    }
+}
+
+/// The global arbiter: partitions streams into metro shards, tracks drift
+/// per shard, fans out catalog changes, and runs dirty shards' re-plans
+/// concurrently over shared global resources.
+pub struct ShardedPlanner {
+    /// Catalog + config. Mutating either (e.g. a price change) is detected
+    /// on the next [`Self::replan`] and fans out to every shard.
+    pub planner: Planner,
+    /// Event-driven re-plan accounting.
+    pub events: ShardEvents,
+    shards: BTreeMap<ShardId, Shard>,
+    pool: Arc<PoolSlot>,
+    graphs: Arc<GraphCache>,
+    ledger: ShardSlackLedger,
+    catalog_sig: Option<u64>,
+    /// Arbiter-level eligibility memo for the partitioner, keyed like the
+    /// pipeline's [`EligCache`]; cleared on signature fan-out.
+    partition_memo: EligCache,
+}
+
+impl ShardedPlanner {
+    pub fn new(planner: Planner) -> Self {
+        ShardedPlanner {
+            planner,
+            events: ShardEvents::default(),
+            shards: BTreeMap::new(),
+            pool: Arc::new(PoolSlot::new()),
+            graphs: Arc::new(GraphCache::new()),
+            ledger: ShardSlackLedger::new(),
+            catalog_sig: None,
+            partition_memo: EligCache::default(),
+        }
+    }
+
+    /// Alive shard ids in ascending order.
+    pub fn shard_ids(&self) -> Vec<ShardId> {
+        self.shards.keys().copied().collect()
+    }
+
+    pub fn shard(&self, id: ShardId) -> Option<&Shard> {
+        self.shards.get(&id)
+    }
+
+    /// Shards currently donating slack into the cross-shard budget pool.
+    pub fn donors(&self) -> usize {
+        self.ledger.donors()
+    }
+
+    /// Human-readable label for a shard: the id of its anchor region.
+    pub fn shard_label(&self, id: ShardId) -> String {
+        self.planner
+            .catalog
+            .regions
+            .get(id as usize)
+            .map(|r| r.id.to_string())
+            .unwrap_or_else(|| format!("s{id}"))
+    }
+
+    /// Per-shard solver counter lines (each prefixed `shard=<region-id>`)
+    /// followed by an absorbed fleet total.
+    pub fn solver_summary(&self) -> String {
+        let total = SolverMetrics::new();
+        let mut lines = Vec::with_capacity(self.shards.len() + 1);
+        for (&id, shard) in &self.shards {
+            let roll = shard.ctx.solver_rollup();
+            lines.push(roll.summary_for(&self.shard_label(id)));
+            total.absorb(&roll);
+        }
+        lines.push(total.summary_for("total"));
+        lines.join("\n")
+    }
+
+    /// Fleet-wide migration report: the per-shard reports of the most recent
+    /// round, rolled up. `None` until a first re-plan lands.
+    pub fn fleet_report(&self) -> Option<MigrationReport> {
+        let mut reports = self.shards.values().filter_map(|s| s.last_report.as_ref());
+        let first = reports.next()?.clone();
+        Some(reports.fold(first, |mut acc, r| {
+            acc.absorb(r);
+            acc
+        }))
+    }
+
+    /// One planning round: partition `requests` into metro shards, compute
+    /// the dirty set (drift, joins, retirements, catalog fan-out), re-plan
+    /// the dirty shards — concurrently when more than one — and assemble the
+    /// fleet-wide [`ShardedPlan`].
+    pub fn replan(&mut self, requests: &[StreamRequest]) -> Result<ShardedPlan> {
+        if requests.is_empty() {
+            return Err(Error::config("no stream requests"));
+        }
+        self.events.rounds += 1;
+
+        // Catalog / price / config fan-out: a signature change invalidates
+        // the partition memo and dirties every shard (each shard's contexts
+        // detect the same change themselves and rebuild cold).
+        let sig = pipeline::signature(&self.planner.catalog, &self.planner.config);
+        let fanout = self.catalog_sig != Some(sig);
+        if fanout {
+            if self.catalog_sig.is_some() {
+                self.events.price_fanouts += 1;
+            }
+            self.catalog_sig = Some(sig);
+            self.partition_memo.clear();
+        }
+
+        let routed = self.partition(requests);
+
+        // Shards whose metro emptied retire, taking their donation with them.
+        let retired: Vec<ShardId> = self
+            .shards
+            .keys()
+            .copied()
+            .filter(|id| !routed.contains_key(id))
+            .collect();
+        for id in &retired {
+            self.ledger.retire(*id);
+            self.shards.remove(id);
+            self.events.shards_retired += 1;
+        }
+
+        // Route slices and compute the dirty set.
+        let mut dirty: Vec<ShardId> = Vec::new();
+        for (id, (reqs, global)) in routed {
+            let is_new = !self.shards.contains_key(&id);
+            if is_new {
+                self.events.shards_joined += 1;
+                self.shards.insert(id, Shard::new(&self.pool, &self.graphs));
+            }
+            let shard = self.shards.get_mut(&id).expect("shard just ensured");
+            let drift = drift_sig(&reqs);
+            let is_dirty =
+                fanout || is_new || shard.deployed.is_none() || drift != shard.drift_sig;
+            shard.requests = reqs;
+            shard.global = global;
+            shard.drift_sig = drift;
+            if is_dirty {
+                dirty.push(id);
+            }
+        }
+
+        // Snapshot each dirty shard's cross-shard grant *before* the round
+        // so concurrent completion order cannot change any shard's inputs.
+        let grants: BTreeMap<ShardId, AxisSlack> = dirty
+            .iter()
+            .map(|&id| (id, self.ledger.available_for(id)))
+            .collect();
+
+        self.events.shard_replans += dirty.len() as u64;
+        self.run_round(&dirty, &grants)?;
+
+        // Publish this round's residual slack for future rounds.
+        for &id in &dirty {
+            let out = self.shards[&id].ctx.main.pool_out;
+            self.ledger.publish(id, out);
+        }
+
+        // Assemble: every alive shard contributes its deployed plan.
+        let mut entries = Vec::with_capacity(self.shards.len());
+        let mut cost = 0.0;
+        for (&id, shard) in &self.shards {
+            let plan = shard
+                .plan()
+                .expect("every alive shard holds a plan after the round")
+                .clone();
+            cost += plan.cost_per_hour;
+            entries.push(ShardEntry {
+                shard: id,
+                replanned: dirty.contains(&id),
+                winner: shard.ctx.last_winner,
+                global: shard.global.clone(),
+                plan,
+            });
+        }
+        Ok(ShardedPlan {
+            entries,
+            retired,
+            cost_per_hour: cost,
+            dirty_shards: dirty.len(),
+            total_shards: self.shards.len(),
+        })
+    }
+
+    /// Execute the dirty shards' re-plans: inline when trivial, otherwise
+    /// across scoped threads (round-robin buckets, bounded by the worker
+    /// default) with each thread owning a disjoint set of `&mut Shard`.
+    fn run_round(
+        &mut self,
+        dirty: &[ShardId],
+        grants: &BTreeMap<ShardId, AxisSlack>,
+    ) -> Result<()> {
+        if dirty.len() <= 1 || !self.planner.config.parallel_regions {
+            for &id in dirty {
+                let shard = self.shards.get_mut(&id).expect("dirty shard exists");
+                shard
+                    .replan_slice(&self.planner, grants[&id])
+                    .map_err(|e| Error::solver(format!("shard {id}: {e}")))?;
+            }
+            return Ok(());
+        }
+        let workers = WorkerPool::default_threads().clamp(1, dirty.len());
+        let dirty_set: BTreeSet<ShardId> = dirty.iter().copied().collect();
+        let mut buckets: Vec<Vec<(ShardId, &mut Shard)>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (i, (id, shard)) in self
+            .shards
+            .iter_mut()
+            .filter(|(id, _)| dirty_set.contains(*id))
+            .enumerate()
+        {
+            buckets[i % workers].push((*id, shard));
+        }
+        let planner = &self.planner;
+        let mut failures: Vec<(ShardId, String)> = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = buckets
+                .into_iter()
+                .map(|bucket| {
+                    scope.spawn(move || {
+                        let mut errs: Vec<(ShardId, String)> = Vec::new();
+                        for (id, shard) in bucket {
+                            if let Err(e) = shard.replan_slice(planner, grants[&id]) {
+                                errs.push((id, e.to_string()));
+                            }
+                        }
+                        errs
+                    })
+                })
+                .collect();
+            for h in handles {
+                failures.extend(h.join().expect("shard re-plan thread panicked"));
+            }
+        });
+        // Deterministic error surfacing: smallest failing shard id wins.
+        failures.sort();
+        match failures.into_iter().next() {
+            Some((id, e)) => Err(Error::solver(format!("shard {id}: {e}"))),
+            None => Ok(()),
+        }
+    }
+
+    /// Partition the global slice into mask-connected metro shards.
+    ///
+    /// Each request's eligibility [`RegionMask`] is computed through the
+    /// arbiter's memo; a union-find over region indices merges every pair of
+    /// regions that co-occur in some mask. A shard is one resulting cluster,
+    /// identified by its smallest region index; requests route to the
+    /// cluster containing their mask.
+    fn partition(
+        &mut self,
+        requests: &[StreamRequest],
+    ) -> BTreeMap<ShardId, (Vec<StreamRequest>, Vec<usize>)> {
+        let n_regions = self.planner.catalog.regions.len();
+        let mut routed: BTreeMap<ShardId, (Vec<StreamRequest>, Vec<usize>)> = BTreeMap::new();
+        if n_regions == 0 {
+            // Degenerate catalog: a single shard that will fail to plan with
+            // the same error the unsharded pipeline reports.
+            routed.insert(0, (requests.to_vec(), (0..requests.len()).collect()));
+            return routed;
+        }
+        let masks: Vec<RegionMask> = requests
+            .iter()
+            .map(|req| {
+                let key = (
+                    eligibility::canon_f64_bits(req.camera.location.lat),
+                    eligibility::canon_f64_bits(req.camera.location.lon),
+                    eligibility::canon_f64_bits(req.desired_fps),
+                );
+                if let Some(&(mask, _)) = self.partition_memo.get(&key) {
+                    mask
+                } else {
+                    let (mask, degraded) = eligibility::eligibility(
+                        &self.planner.catalog,
+                        self.planner.config.location,
+                        req,
+                    );
+                    self.partition_memo.insert(key, (mask, degraded));
+                    mask
+                }
+            })
+            .collect();
+        let mut parent: Vec<u32> = (0..n_regions as u32).collect();
+        for mask in &masks {
+            let mut first: Option<u32> = None;
+            for r in mask.ones() {
+                match first {
+                    None => first = Some(r as u32),
+                    Some(f) => uf_union(&mut parent, f, r as u32),
+                }
+            }
+        }
+        for (i, (req, mask)) in requests.iter().zip(&masks).enumerate() {
+            let anchor = mask.ones().next().unwrap_or(0) as u32;
+            let id = uf_find(&mut parent, anchor);
+            let entry = routed.entry(id).or_default();
+            entry.0.push(req.clone());
+            entry.1.push(i);
+        }
+        routed
+    }
+}
+
+/// Union-find with path halving. Union always parents the larger root under
+/// the smaller, so a cluster's root *is* its minimum region index — exactly
+/// the [`ShardId`] convention.
+fn uf_find(parent: &mut [u32], mut x: u32) -> u32 {
+    while parent[x as usize] != x {
+        parent[x as usize] = parent[parent[x as usize] as usize];
+        x = parent[x as usize];
+    }
+    x
+}
+
+fn uf_union(parent: &mut [u32], a: u32, b: u32) {
+    let (ra, rb) = (uf_find(parent, a), uf_find(parent, b));
+    if ra != rb {
+        let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+        parent[hi as usize] = lo;
+    }
+}
+
+/// Order-sensitive content hash of a shard's request slice: any camera
+/// join/leave, move, retune, or reorder changes the signature and dirties
+/// exactly that shard. Catalog/config changes are tracked separately via
+/// [`pipeline::signature`].
+fn drift_sig(requests: &[StreamRequest]) -> u64 {
+    let mut h = DefaultHasher::new();
+    requests.len().hash(&mut h);
+    for req in requests {
+        req.camera.id.hash(&mut h);
+        eligibility::canon_f64_bits(req.camera.location.lat).hash(&mut h);
+        eligibility::canon_f64_bits(req.camera.location.lon).hash(&mut h);
+        req.camera.resolution.hash(&mut h);
+        eligibility::canon_f64_bits(req.camera.native_fps).hash(&mut h);
+        let mode = match req.camera.mode {
+            CameraMode::Video => 0u8,
+            CameraMode::Snapshot => 1,
+        };
+        mode.hash(&mut h);
+        req.program.hash(&mut h);
+        eligibility::canon_f64_bits(req.desired_fps).hash(&mut h);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cameras::camera_at;
+    use crate::catalog::Catalog;
+    use crate::coordinator::PlannerConfig;
+    use crate::geo::GeoPoint;
+    use crate::profiles::{Program, Resolution};
+
+    /// The 12 EC2 regions + 4 instance types every sharding test uses: at
+    /// fps >= 32 the coverage radius (~2731 km) keeps the 8 region basins
+    /// mask-disjoint, so shard structure is known a priori.
+    fn ec2_catalog() -> Catalog {
+        Catalog::builtin().restrict(
+            Some(&["c4.2xlarge", "c4.8xlarge", "g2.2xlarge", "g3.8xlarge"]),
+            Some(&[
+                "us-east-1",
+                "us-east-2",
+                "us-west-1",
+                "us-west-2",
+                "eu-west-1",
+                "eu-west-2",
+                "eu-central-1",
+                "ap-southeast-1",
+                "ap-southeast-2",
+                "ap-northeast-1",
+                "ap-south-1",
+                "sa-east-1",
+            ]),
+        )
+    }
+
+    fn cam(id: u64, at: GeoPoint, fps: f64) -> StreamRequest {
+        StreamRequest::new(camera_at(id, "metro", at, Resolution::VGA, 30.0), Program::Zf, fps)
+    }
+
+    fn virginia() -> GeoPoint {
+        GeoPoint::new(38.95, -77.45)
+    }
+
+    fn ireland() -> GeoPoint {
+        GeoPoint::new(53.34, -6.27)
+    }
+
+    fn tokyo() -> GeoPoint {
+        GeoPoint::new(35.68, 139.69)
+    }
+
+    fn exact_complete(plan: &Plan) -> bool {
+        plan.pipeline.components_fallback == 0
+            && plan.pipeline.components_proven == plan.pipeline.components
+    }
+
+    #[test]
+    fn region_disjoint_sharding_matches_the_unsharded_planner() {
+        let requests = vec![
+            cam(0, virginia(), 32.0),
+            cam(1, virginia(), 36.0),
+            cam(2, ireland(), 32.0),
+            cam(3, ireland(), 40.0),
+            cam(4, tokyo(), 36.0),
+            cam(5, tokyo(), 36.0),
+        ];
+        let mut sp = ShardedPlanner::new(Planner::new(ec2_catalog(), PlannerConfig::gcl()));
+        let sharded = sp.replan(&requests).unwrap();
+        assert_eq!(sharded.total_shards, 3, "three disjoint metros");
+        assert_eq!(sharded.dirty_shards, 3, "cold start replans everything");
+        assert!(sharded.exact_complete());
+        assert!(sharded.all_main(), "exact GCL wins in every shard");
+
+        let unsharded = Planner::new(ec2_catalog(), PlannerConfig::gcl())
+            .plan_single(&requests)
+            .unwrap();
+        assert!(exact_complete(&unsharded));
+        assert!(
+            (sharded.cost_per_hour - unsharded.cost_per_hour).abs() < 1e-6,
+            "sharded {} vs unsharded {}",
+            sharded.cost_per_hour,
+            unsharded.cost_per_hour
+        );
+        // Every global request index is covered exactly once.
+        let mut covered: Vec<usize> =
+            sharded.entries.iter().flat_map(|e| e.global.iter().copied()).collect();
+        covered.sort_unstable();
+        assert_eq!(covered, (0..requests.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drift_events_dirty_only_their_shard_and_prices_fan_out() {
+        let w0 = vec![
+            cam(0, virginia(), 32.0),
+            cam(1, virginia(), 36.0),
+            cam(2, ireland(), 32.0),
+            cam(3, ireland(), 36.0),
+        ];
+        let mut sp = ShardedPlanner::new(Planner::new(ec2_catalog(), PlannerConfig::gcl()));
+        let r1 = sp.replan(&w0).unwrap();
+        assert_eq!((r1.total_shards, r1.dirty_shards), (2, 2));
+        assert_eq!(sp.events.shards_joined, 2);
+
+        // No drift: nothing replans, plans (and cost) are reused verbatim.
+        let r2 = sp.replan(&w0).unwrap();
+        assert_eq!(r2.dirty_shards, 0);
+        assert_eq!(r2.cost_per_hour, r1.cost_per_hour, "bit-identical reuse");
+        assert!(r2.entries.iter().all(|e| !e.replanned));
+
+        // A camera joins Ireland: exactly that shard replans.
+        let mut w1 = w0.clone();
+        w1.push(cam(9, ireland(), 40.0));
+        let r3 = sp.replan(&w1).unwrap();
+        assert_eq!(r3.dirty_shards, 1);
+        assert_eq!(sp.events.shards_joined, 2, "a join in an existing metro adds no shard");
+        let replanned: Vec<ShardId> =
+            r3.entries.iter().filter(|e| e.replanned).map(|e| e.shard).collect();
+        assert_eq!(replanned.len(), 1);
+        let irish = replanned[0];
+        assert_eq!(sp.shard(irish).unwrap().requests().len(), 3);
+
+        // A price change fans out to every shard.
+        sp.planner.catalog.offerings[0].hourly_usd += 0.017;
+        let r4 = sp.replan(&w1).unwrap();
+        assert_eq!(r4.dirty_shards, 2);
+        assert_eq!(sp.events.price_fanouts, 1);
+        assert_eq!(sp.events.rounds, 4);
+        assert_eq!(sp.events.shard_replans, 2 + 0 + 1 + 2);
+
+        // Post-fan-out parity against a fresh unsharded solve of the mutated
+        // catalog.
+        let unsharded = Planner::new(sp.planner.catalog.clone(), PlannerConfig::gcl())
+            .plan_single(&w1)
+            .unwrap();
+        assert!(r4.exact_complete() && exact_complete(&unsharded));
+        assert!((r4.cost_per_hour - unsharded.cost_per_hour).abs() < 1e-6);
+    }
+
+    /// A camera moving between metros must re-enter through the structural
+    /// delta path on *both* sides of the boundary: a vanished group in the
+    /// shard it left, an appeared group in the shard it joined.
+    #[test]
+    fn cross_shard_churn_takes_the_structural_delta_path_in_both_shards() {
+        let before = vec![
+            cam(0, virginia(), 32.0),
+            cam(1, virginia(), 32.5),
+            cam(2, virginia(), 36.0),
+            cam(10, ireland(), 33.0),
+            cam(11, ireland(), 34.0),
+            cam(12, ireland(), 35.0),
+        ];
+        // Camera 0 moves Virginia -> Ireland keeping its 32.0 fps tier,
+        // which is unique in Ireland: one vanished group in Virginia, one
+        // appeared group in Ireland.
+        let after = vec![
+            cam(1, virginia(), 32.5),
+            cam(2, virginia(), 36.0),
+            cam(10, ireland(), 33.0),
+            cam(11, ireland(), 34.0),
+            cam(12, ireland(), 35.0),
+            cam(0, ireland(), 32.0),
+        ];
+        let mut sp = ShardedPlanner::new(Planner::new(ec2_catalog(), PlannerConfig::gcl()));
+        let r1 = sp.replan(&before).unwrap();
+        assert_eq!((r1.total_shards, r1.dirty_shards), (2, 2));
+
+        let r2 = sp.replan(&after).unwrap();
+        assert_eq!(r2.dirty_shards, 2, "the move dirties exactly both boundary shards");
+        assert_eq!(sp.events.shards_joined, 2, "no shard joined or retired");
+        assert_eq!(sp.events.shards_retired, 0);
+
+        for id in sp.shard_ids() {
+            let sh = sp.shard(id).unwrap();
+            // Both shards warm-started through the structural (appeared /
+            // vanished group) path — not the same-structure delta path, and
+            // not a cold solve.
+            assert_eq!(sh.ctx.main.stats.structural_delta_hits, 1, "{:?}", sh.ctx.main.stats);
+            assert_eq!(sh.ctx.main.stats.delta_solve_hits, 0, "{:?}", sh.ctx.main.stats);
+            assert_eq!(sh.ctx.main.solver.structural_reuses.get(), 1);
+            match sh.requests().len() {
+                // Virginia kept 2 untouched requests and lost one group.
+                2 => assert_eq!(
+                    (sh.ctx.main.stats.front_unchanged, sh.ctx.main.stats.front_changed),
+                    (2, 0),
+                    "{:?}",
+                    sh.ctx.main.stats
+                ),
+                // Ireland kept its 3 and gained the migrant.
+                4 => assert_eq!(
+                    (sh.ctx.main.stats.front_unchanged, sh.ctx.main.stats.front_changed),
+                    (3, 1),
+                    "{:?}",
+                    sh.ctx.main.stats
+                ),
+                n => panic!("unexpected shard size {n}"),
+            }
+        }
+
+        // Certified-or-cold: the warm sharded round still matches a cold
+        // unsharded solve exactly.
+        let unsharded = Planner::new(ec2_catalog(), PlannerConfig::gcl())
+            .plan_single(&after)
+            .unwrap();
+        assert!(r2.exact_complete() && exact_complete(&unsharded));
+        assert!((r2.cost_per_hour - unsharded.cost_per_hour).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shards_share_the_arbiters_pool_caches_and_slack_ledger() {
+        let requests = vec![
+            cam(0, virginia(), 32.0),
+            cam(1, ireland(), 36.0),
+            cam(2, tokyo(), 40.0),
+        ];
+        let mut sp = ShardedPlanner::new(Planner::new(ec2_catalog(), PlannerConfig::gcl()));
+        sp.replan(&requests).unwrap();
+        let ids = sp.shard_ids();
+        assert_eq!(ids.len(), 3);
+        let first = sp.shard(ids[0]).unwrap();
+        for &id in &ids[1..] {
+            let sh = sp.shard(id).unwrap();
+            assert!(
+                Arc::ptr_eq(first.ctx.main.pool_slot(), sh.ctx.main.pool_slot()),
+                "one worker pool for the whole fleet"
+            );
+            assert!(
+                Arc::ptr_eq(first.ctx.main.graph_cache(), sh.ctx.main.graph_cache()),
+                "one graph cache for the whole fleet"
+            );
+        }
+        // Every re-planned shard published into the ledger, and the summary
+        // is labelled per shard.
+        assert_eq!(sp.donors(), 3);
+        let summary = sp.solver_summary();
+        assert!(summary.contains("shard=us-east-1"), "{summary}");
+        assert!(summary.contains("shard=total"), "{summary}");
+        assert!(sp.fleet_report().is_some());
+    }
+
+    #[test]
+    fn shard_retirement_is_event_driven_and_fleet_scoped() {
+        let catalog = ec2_catalog();
+        let w0 = vec![
+            cam(0, virginia(), 32.0),
+            cam(1, virginia(), 36.0),
+            cam(2, ireland(), 32.0),
+            cam(3, ireland(), 36.0),
+        ];
+        let mut sp = ShardedPlanner::new(Planner::new(catalog.clone(), PlannerConfig::gcl()));
+        let r1 = sp.replan(&w0).unwrap();
+        let mut sim = CloudSim::new(catalog);
+        r1.apply_to(&mut sim).unwrap();
+        assert!((sim.hourly_rate() - r1.cost_per_hour).abs() < 1e-9);
+
+        // Ireland's metro empties: its shard retires and, on apply, its
+        // instances terminate, while Virginia is untouched (still clean).
+        let w1 = vec![cam(0, virginia(), 32.0), cam(1, virginia(), 36.0)];
+        let r2 = sp.replan(&w1).unwrap();
+        assert_eq!(r2.total_shards, 1);
+        assert_eq!(r2.retired.len(), 1);
+        assert_eq!(r2.dirty_shards, 0, "Virginia's slice did not drift");
+        assert_eq!(sp.events.shards_retired, 1);
+        r2.apply_to(&mut sim).unwrap();
+        assert!((sim.hourly_rate() - r2.cost_per_hour).abs() < 1e-9);
+        assert!(r2.cost_per_hour < r1.cost_per_hour);
+    }
+}

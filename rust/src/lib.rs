@@ -165,6 +165,43 @@
 //! * `lp_reuse` — `lp_warm_resumes` vs `lp_cold_solves` node LPs across
 //!   the warm runs (the dual-simplex resume at work).
 //!
+//! ## `BENCH_planet.json` (written by `bench_planet`, gated in CI)
+//!
+//! Planet-scale run of the metro-sharded planner
+//! ([`coordinator::shard::ShardedPlanner`]): 100 metros in 8 region basins,
+//! ~10k streams, with skewed drift. Shards are connected components of the
+//! per-request eligibility masks, each owning its own portfolio
+//! [`coordinator::portfolio::ReplanContext`] and re-planning (concurrently)
+//! only when its own drift arrives; a global arbiter owns the shared worker
+//! pool, graph cache, cross-shard slack ledger
+//! ([`coordinator::budget::ShardSlackLedger`]), and catalog/price fan-out.
+//!
+//! * `metros` / `streams` / `shards` — workload shape (100 / 10_200 / 8),
+//! * `cold_all_ms` — cold round, all 8 shards planning concurrently,
+//! * `warm_noop_ms` — no-drift round (asserted: 0 dirty shards, plans and
+//!   cost reused bit-identically),
+//! * `warm_one_dirty_ms` — one camera leaves one metro (asserted: exactly
+//!   1 dirty shard, warm-started via the delta paths),
+//! * `warm_uniform_ms` — one camera leaves every basin (asserted: 8 dirty
+//!   shards); `uniform_over_one_dirty` is the warm ratio, gated only
+//!   without `BENCH_LENIENT_TIMING` since dirty shards re-plan
+//!   concurrently,
+//! * `price_fanout_all_ms` — one offering's price changes: the
+//!   `(catalog, config)` signature dirties all shards cold;
+//!   `fanout_over_one_dirty` (asserted ≥ 5 unconditionally — the
+//!   dirty-shard-bounded wall-clock bar),
+//! * `sharded_usd_per_hour` / `unsharded_usd_per_hour` / `cost_parity` —
+//!   the sharded total vs one single-context plan; parity to 1e-6 is
+//!   asserted cold, after the skewed warm round, and after the fan-out
+//!   (certified-or-cold gate: every shard exact-complete with the Main
+//!   candidate — also property-tested in `prop_sharded_plan_cost_equals_`
+//!   `unsharded_on_disjoint_metros`),
+//! * `dirty` — dirty-shard count per round (`cold`, `noop`, `skew`,
+//!   `restore`, `uniform`, `fanout`),
+//! * `exact_complete` / `all_main` / `donors` / `lenient` — gate inputs
+//!   (every re-planned shard donates its residual budget slack into the
+//!   cross-shard ledger; `donors` is asserted = 8).
+//!
 //! ## `BENCH_solver.json` (written by `bench_solver`, gated in CI)
 //!
 //! * `classes[]` — one entry per LP component class (`paper_scale`,

@@ -1,10 +1,13 @@
 //! Property-based tests over coordinator/packing/solver invariants, driven
 //! by the in-crate property harness (`util::proptest`).
 
-use camflow::cameras::{camera_at, StreamRequest};
+use camflow::cameras::{camera_at, StreamKey, StreamRequest};
 use camflow::catalog::{Catalog, Dims};
 use camflow::coordinator::budget::{self, ComponentTelemetry};
+use camflow::coordinator::expand::{self, PrevAssignment, PrevSlot};
+use camflow::coordinator::shard::ShardedPlanner;
 use camflow::coordinator::{Planner, PlannerConfig};
+use camflow::packing::{BinType, ItemGroup, PackedBin, Packing, PackingProblem};
 use camflow::geo::{self, cities, GeoPoint};
 use camflow::packing::heuristic::{self, simple_problem};
 use camflow::packing::mcvbp::{solve, solve_delta, DeltaHints, GhostGroup, PrevLayout, SolveOptions};
@@ -1245,6 +1248,249 @@ fn prop_dims_arithmetic() {
             let scaled = a.scale(0.9);
             if !scaled.fits_in(&a) && !a.is_zero() {
                 return Err("0.9-scaled must fit".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// On region-disjoint workloads — every metro's coverage circle stays inside
+/// its own region cluster at fps >= 32 — the metro-sharded planner produces
+/// one shard per populated basin and its total cost equals the unsharded
+/// single-context plan exactly whenever both sides certify (every component
+/// exact-complete, the Main candidate winning in every shard).
+#[test]
+fn prop_sharded_plan_cost_equals_unsharded_on_disjoint_metros() {
+    let catalog = Catalog::builtin().restrict(
+        Some(&["c4.2xlarge", "c4.8xlarge", "g2.2xlarge", "g3.8xlarge"]),
+        Some(&[
+            "us-east-1",
+            "us-east-2",
+            "us-west-1",
+            "us-west-2",
+            "eu-west-1",
+            "eu-west-2",
+            "eu-central-1",
+            "ap-southeast-1",
+            "ap-southeast-2",
+            "ap-northeast-1",
+            "ap-south-1",
+            "sa-east-1",
+        ]),
+    );
+    // The eight basin anchors are EC2 region cities.
+    let basins: [(f64, f64); 8] = [
+        (38.95, -77.45),
+        (45.84, -119.70),
+        (53.34, -6.27),
+        (1.35, 103.82),
+        (-33.87, 151.21),
+        (35.68, 139.69),
+        (19.08, 72.88),
+        (-23.55, -46.63),
+    ];
+    check(
+        0x5AD5,
+        12,
+        |rng: &mut Rng| {
+            // Flat encoding: triples of (basin, fps tier, resolution pick).
+            let n = 2 + rng.index(7);
+            let mut v = Vec::with_capacity(n * 3);
+            for _ in 0..n {
+                v.push(rng.index(8) as u64);
+                v.push(rng.index(3) as u64);
+                v.push(rng.index(2) as u64);
+            }
+            v
+        },
+        |spec: &Vec<u64>| {
+            let requests: Vec<StreamRequest> = spec
+                .chunks_exact(3)
+                .enumerate()
+                .map(|(i, c)| {
+                    let (lat, lon) = basins[(c[0] as usize) % 8];
+                    let at = GeoPoint::new(lat + i as f64 * 1e-7, lon + i as f64 * 1e-7);
+                    let res = if c[2] % 2 == 0 { Resolution::VGA } else { Resolution::XGA };
+                    StreamRequest::new(
+                        camera_at(i as u64, "metro", at, res, 30.0),
+                        Program::Zf,
+                        [32.0, 36.0, 40.0][(c[1] as usize) % 3],
+                    )
+                })
+                .collect();
+            if requests.is_empty() {
+                return Ok(());
+            }
+            let distinct_basins: std::collections::BTreeSet<u64> =
+                spec.chunks_exact(3).map(|c| c[0] % 8).collect();
+            let mut sp =
+                ShardedPlanner::new(Planner::new(catalog.clone(), PlannerConfig::gcl()));
+            let sharded = sp.replan(&requests);
+            let reference =
+                Planner::new(catalog.clone(), PlannerConfig::gcl()).plan_single(&requests);
+            match (sharded, reference) {
+                // Feasibility must agree between the two architectures.
+                (Err(_), Err(_)) => Ok(()),
+                (Ok(_), Err(e)) => Err(format!("unsharded failed, sharded succeeded: {e}")),
+                (Err(e), Ok(_)) => Err(format!("sharded failed, unsharded succeeded: {e}")),
+                (Ok(s), Ok(r)) => {
+                    if s.total_shards != distinct_basins.len() {
+                        return Err(format!(
+                            "{} shards for {} distinct basins",
+                            s.total_shards,
+                            distinct_basins.len()
+                        ));
+                    }
+                    let ref_exact = r.pipeline.components_fallback == 0
+                        && r.pipeline.components_proven == r.pipeline.components;
+                    if s.exact_complete() && s.all_main() && ref_exact {
+                        let diff = (s.cost_per_hour - r.cost_per_hour).abs();
+                        if diff >= 1e-6 {
+                            return Err(format!(
+                                "sharded {} != unsharded {}",
+                                s.cost_per_hour, r.cost_per_hour
+                            ));
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+/// Expand's slot<->bin matching keeps the *maximum* possible number of
+/// streams in place: the kept-stream count of `expand::run` equals a
+/// brute-force optimal assignment of previous slots to new bins. (The greedy
+/// primary is certified by an exact Hungarian pass whenever its total falls
+/// short of the matching upper bound.)
+#[test]
+fn prop_expand_matching_keeps_the_optimal_stream_count() {
+    check(
+        0xE8A4D,
+        120,
+        |rng: &mut Rng| (0..20).map(|_| rng.next_u64()).collect::<Vec<u64>>(),
+        |v: &Vec<u64>| {
+            let pick = |i: usize| v.get(i).copied().unwrap_or(0);
+            let nb = 1 + (pick(0) % 3) as usize;
+            let ns = 1 + (pick(1) % 3) as usize;
+            // counts[bi][g] for two item groups; drop empty bins (the solver
+            // never emits one).
+            let counts: Vec<Vec<usize>> = (0..nb)
+                .map(|bi| (0..2).map(|g| (pick(2 + bi * 2 + g) % 3) as usize).collect())
+                .filter(|c: &Vec<usize>| c.iter().sum::<usize>() > 0)
+                .collect();
+            if counts.is_empty() {
+                return Ok(());
+            }
+            let cnt: [usize; 2] = [
+                counts.iter().map(|c| c[0]).sum(),
+                counts.iter().map(|c| c[1]).sum(),
+            ];
+            let total = cnt[0] + cnt[1];
+            let problem = PackingProblem::new(
+                (0..2)
+                    .map(|g| ItemGroup {
+                        label: format!("g{g}"),
+                        count: cnt[g],
+                        demand_per_bin: vec![Some(Dims::new(1.0, 1.0, 0.0, 0.0))],
+                    })
+                    .collect(),
+                vec![BinType {
+                    label: "cpu@r".into(),
+                    capacity: Dims::new(50.0, 50.0, 0.0, 0.0),
+                    cost: 1.0,
+                    type_idx: 0,
+                    region_idx: 0,
+                    has_gpu: false,
+                }],
+            );
+            let packing = Packing {
+                bins: counts
+                    .iter()
+                    .map(|c| PackedBin { bin_type: 0, counts: c.clone() })
+                    .collect(),
+            };
+            let members = vec![(0..cnt[0]).collect::<Vec<_>>(), (cnt[0]..total).collect()];
+            let keys: Vec<StreamKey> = (0..total)
+                .map(|i| StreamKey {
+                    camera_id: i as u64,
+                    program: "ZF",
+                    fps_bits: 1.0f64.to_bits(),
+                    occurrence: 0,
+                })
+                .collect();
+            // Each stream is hosted by one previous slot or none.
+            let owner: Vec<Option<usize>> = (0..total)
+                .map(|s| {
+                    let o = (pick(8 + s) % (ns as u64 + 1)) as usize;
+                    (o < ns).then_some(o)
+                })
+                .collect();
+            let prev = PrevAssignment {
+                slots: (0..ns)
+                    .map(|si| PrevSlot {
+                        slot_id: 100 + si as u64,
+                        label: "cpu@r".into(),
+                        streams: (0..total)
+                            .filter(|&s| owner[s] == Some(si))
+                            .map(|s| keys[s])
+                            .collect(),
+                    })
+                    .collect(),
+            };
+
+            let instances = expand::run(&problem, &packing, &members, &keys, Some(&prev))
+                .map_err(|e| e.to_string())?;
+            let mut measured = 0usize;
+            for inst in &instances {
+                let sid = inst.slot_id;
+                if (100..100 + ns as u64).contains(&sid) {
+                    let si = (sid - 100) as usize;
+                    measured +=
+                        inst.streams.iter().filter(|&&s| owner[s] == Some(si)).count();
+                }
+            }
+
+            // Brute force: overlap of slot si with bin bi is the per-group
+            // min of hosted and packed counts; maximize over injective
+            // slot -> bin assignments.
+            let group_of = |s: usize| usize::from(s >= cnt[0]);
+            let mut surv = vec![[0usize; 2]; ns];
+            for s in 0..total {
+                if let Some(si) = owner[s] {
+                    surv[si][group_of(s)] += 1;
+                }
+            }
+            let ov: Vec<Vec<usize>> = (0..ns)
+                .map(|si| {
+                    counts
+                        .iter()
+                        .map(|c| surv[si][0].min(c[0]) + surv[si][1].min(c[1]))
+                        .collect()
+                })
+                .collect();
+            fn best(si: usize, ov: &[Vec<usize>], used: &mut [bool]) -> usize {
+                if si == ov.len() {
+                    return 0;
+                }
+                // The slot may also stay unmatched.
+                let mut top = best(si + 1, ov, used);
+                for bi in 0..used.len() {
+                    if !used[bi] {
+                        used[bi] = true;
+                        top = top.max(ov[si][bi] + best(si + 1, ov, used));
+                        used[bi] = false;
+                    }
+                }
+                top
+            }
+            let optimal = best(0, &ov, &mut vec![false; counts.len()]);
+            if measured != optimal {
+                return Err(format!(
+                    "expand kept {measured} streams, optimal matching keeps {optimal} \
+                     (ov={ov:?})"
+                ));
             }
             Ok(())
         },
