@@ -1,0 +1,72 @@
+//! Closed-loop serving→planning feedback bars (scenarios in
+//! `camflow::bench::closedloop`):
+//!
+//! * **over-declared fleet** — true frame cost 0.5× the declared profile:
+//!   the converged closed-loop plan must cost no more than (here: strictly
+//!   less than) the declared-demand plan, with zero drops/sheds and higher
+//!   fleet utilization,
+//! * **under-declared fleet** — true frame cost 2× declared: degrade tiers
+//!   shed fps before wholesale drops, the corrected re-plan provisions real
+//!   capacity, tiers restore under sustained headroom, and the final drop
+//!   rate stays bounded while the open-loop control keeps dropping.
+//!
+//! All bars are deterministic (the serving simulator has no threads, RNG,
+//! or wall clock) and asserted inside the library scenarios, so this binary
+//! and `tests/integration.rs` gate on exactly the same invariants. The only
+//! wall-clock number is the recorded epoch timing, which is never asserted.
+//!
+//! Emits `BENCH_closedloop.json` so the feedback trajectory is tracked
+//! across PRs.
+
+use camflow::bench::{Bench, Table};
+use camflow::util::json::Value;
+
+fn main() {
+    println!("== Closed-loop serving feedback: over/under-declared fleets ==");
+    let bench = Bench::new(1, 3);
+    let timing = bench.run("closed-loop scenarios", || {
+        let _ = camflow::bench::closedloop::run();
+    });
+    let o = camflow::bench::closedloop::run();
+
+    let mut t = Table::new(&["scenario", "declared $/h", "closed $/h", "drop rate", "extra"]);
+    t.row(&[
+        "over-declared (0.5x)".to_string(),
+        format!("{:.3}", o.over.declared_usd_per_hour),
+        format!("{:.3}", o.over.closedloop_usd_per_hour),
+        format!("{:.4}", o.over.final_drop_rate),
+        format!(
+            "util {:.2} -> {:.2}",
+            o.over.fleet_util_declared, o.over.fleet_util_closed
+        ),
+    ]);
+    t.row(&[
+        "under-declared (2x)".to_string(),
+        format!("{:.3}", o.under.declared_usd_per_hour),
+        format!("{:.3}", o.under.corrected_usd_per_hour),
+        format!(
+            "{:.4} (open-loop {:.4})",
+            o.under.final_drop_rate, o.under.nofeedback_drop_rate
+        ),
+        format!(
+            "max tier {}, shed peak {}",
+            o.under.max_shed_tier, o.under.peak_streams_shed
+        ),
+    ]);
+    t.print();
+    println!(
+        "feedback_streams {}  degraded_tier_streams {}  ({:.0} ms per full loop)",
+        o.over.feedback_streams, o.under.degraded_tier_streams, timing.mean_ms
+    );
+
+    let doc = Value::obj(vec![
+        ("bench", Value::str("closedloop")),
+        ("closedloop", o.to_json()),
+        ("loop_ms", Value::num(timing.mean_ms)),
+    ]);
+    let path = "BENCH_closedloop.json";
+    std::fs::write(path, camflow::util::json::to_string_pretty(&doc))
+        .expect("write BENCH_closedloop.json");
+    println!("\nwrote {path}");
+    println!("\nbench_closedloop OK");
+}

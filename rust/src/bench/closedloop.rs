@@ -1,0 +1,326 @@
+//! Closed-loop feedback scenarios shared by `bench_closedloop` and the
+//! integration suite.
+//!
+//! Living in the library (rather than inside the bench binary) keeps the
+//! `BENCH_closedloop.json` fields and the schema test in
+//! `tests/integration.rs` in lockstep: both call [`run`] and read the same
+//! [`ClosedLoopOutcome`]. Both scenarios drive the full loop —
+//! [`SimExecutor`] epoch → [`FeedbackController::observe`] →
+//! [`AdaptiveManager::replan_with_feedback`] → next epoch — on a one-type
+//! one-region CPU catalog (`c4.2xlarge` @ `us-east-2`) where every packing
+//! is exactly computable by hand:
+//!
+//! * **Over-declared fleet** ([`run_overdeclared_scenario`]) — four
+//!   VGG16@1fps VGA streams whose true frames cost *half* the declared
+//!   profile. The declared plan needs one box per stream; once the
+//!   controller's cost EWMA converges to 0.5 the re-plan packs three
+//!   streams per box. The bar: closed-loop plan cost ≤ (here: strictly
+//!   below) the declared-demand plan cost, with no drops and no sheds,
+//!   and fleet utilization *rises* as the fleet right-sizes.
+//! * **Under-declared fleet** ([`run_underdeclared_scenario`]) — four
+//!   ZF@1.5fps VGA streams whose true frames cost *twice* the declared
+//!   profile, so the declared two-box plan is overloaded 1.5×. Open-loop
+//!   the queues overflow and drop indefinitely; closed-loop the degrade
+//!   tiers shed fps as the queue crosses the high-water mark, the cost
+//!   estimate corrects to 2.0, the next re-plan provisions real capacity,
+//!   and sustained headroom restores every tier. The bar: the final epoch's
+//!   drop rate is bounded (≤ 1%) while the no-feedback control keeps
+//!   dropping (> 10%), and no stream is ever shed to zero fps.
+//!
+//! Each epoch re-simulates the current plan from an empty queue (a fluid
+//! approximation: in-flight frames do not migrate across re-plans).
+//!
+//! [`SimExecutor`]: crate::server::sim::SimExecutor
+//! [`FeedbackController::observe`]: crate::server::feedback::FeedbackController::observe
+//! [`AdaptiveManager::replan_with_feedback`]: crate::coordinator::adaptive::AdaptiveManager::replan_with_feedback
+
+use crate::cameras::{camera_at, StreamRequest};
+use crate::catalog::Catalog;
+use crate::cloudsim::CloudSim;
+use crate::coordinator::adaptive::AdaptiveManager;
+use crate::coordinator::{Plan, Planner, PlannerConfig};
+use crate::geo::cities;
+use crate::profiles::{Program, Resolution};
+use crate::server::feedback::{FeedbackConfig, FeedbackController};
+use crate::server::sim::{SimConfig, SimExecutor};
+use crate::util::json::Value;
+
+/// Over-declared scenario measurements ([`run_overdeclared_scenario`]).
+#[derive(Clone, Debug)]
+pub struct OverDeclared {
+    /// Hourly cost of the plan built from declared demand.
+    pub declared_usd_per_hour: f64,
+    /// Hourly cost after the feedback loop converged (the bar: ≤ declared).
+    pub closedloop_usd_per_hour: f64,
+    /// Drop rate of the final (right-sized) epoch — expected ≈ 0.
+    pub final_drop_rate: f64,
+    /// Mean fleet utilization under the declared plan / the converged plan.
+    pub fleet_util_declared: f64,
+    pub fleet_util_closed: f64,
+    /// `SolverMetrics::feedback_streams` accumulated by the manager's
+    /// context — streams provisioned from observed demand.
+    pub feedback_streams: u64,
+}
+
+/// Under-declared scenario measurements ([`run_underdeclared_scenario`]).
+#[derive(Clone, Debug)]
+pub struct UnderDeclared {
+    pub declared_usd_per_hour: f64,
+    /// Hourly cost once the plan provisions for the observed (2×) demand.
+    pub corrected_usd_per_hour: f64,
+    /// Drop rate of the first epoch (declared plan, true load 1.5×).
+    pub epoch0_drop_rate: f64,
+    /// Drop rate of the final epoch (the bounded bar: ≤ 1%).
+    pub final_drop_rate: f64,
+    /// Drop rate of the open-loop control over the same horizon.
+    pub nofeedback_drop_rate: f64,
+    /// Deepest degrade tier any stream was planned at.
+    pub max_shed_tier: u8,
+    /// Peak `ServeReport::streams_shed` across the epochs.
+    pub peak_streams_shed: usize,
+    /// `SolverMetrics::degraded_tier_streams` accumulated by the manager.
+    pub degraded_tier_streams: u64,
+}
+
+/// Everything the closed-loop scenarios measure, mirrored (flattened with
+/// `over_` / `under_` prefixes) into `BENCH_closedloop.json` by
+/// [`ClosedLoopOutcome::to_json`].
+#[derive(Clone, Debug)]
+pub struct ClosedLoopOutcome {
+    pub over: OverDeclared,
+    pub under: UnderDeclared,
+}
+
+impl ClosedLoopOutcome {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("over_declared_usd_per_hour", Value::num(self.over.declared_usd_per_hour)),
+            ("over_closedloop_usd_per_hour", Value::num(self.over.closedloop_usd_per_hour)),
+            ("over_final_drop_rate", Value::num(self.over.final_drop_rate)),
+            ("over_fleet_util_declared", Value::num(self.over.fleet_util_declared)),
+            ("over_fleet_util_closed", Value::num(self.over.fleet_util_closed)),
+            ("over_feedback_streams", Value::num(self.over.feedback_streams as f64)),
+            ("under_declared_usd_per_hour", Value::num(self.under.declared_usd_per_hour)),
+            ("under_corrected_usd_per_hour", Value::num(self.under.corrected_usd_per_hour)),
+            ("under_epoch0_drop_rate", Value::num(self.under.epoch0_drop_rate)),
+            ("under_final_drop_rate", Value::num(self.under.final_drop_rate)),
+            ("under_nofeedback_drop_rate", Value::num(self.under.nofeedback_drop_rate)),
+            ("under_max_shed_tier", Value::num(self.under.max_shed_tier as f64)),
+            ("under_peak_streams_shed", Value::num(self.under.peak_streams_shed as f64)),
+            (
+                "under_degraded_tier_streams",
+                Value::num(self.under.degraded_tier_streams as f64),
+            ),
+        ])
+    }
+}
+
+/// One CPU type in one region: every packing below is hand-checkable and
+/// the closed loop's effects show up purely as instance *counts*.
+fn cpu_catalog() -> Catalog {
+    Catalog::builtin().restrict(Some(&["c4.2xlarge"]), Some(&["us-east-2"]))
+}
+
+fn chicago_workload(program: Program, fps: f64, n: usize) -> Vec<StreamRequest> {
+    (0..n)
+        .map(|i| {
+            StreamRequest::new(
+                camera_at(i as u64, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+                program,
+                fps,
+            )
+        })
+        .collect()
+}
+
+/// Clone the manager's deployed state so a sim epoch can run while the
+/// manager stays mutable for the next re-plan.
+fn current_state(mgr: &AdaptiveManager) -> (Vec<StreamRequest>, Plan) {
+    let (r, p) = mgr.current.as_ref().expect("manager has a deployed plan");
+    (r.clone(), p.clone())
+}
+
+/// Over-declared fleet: true cost 0.5× declared; the loop halves the fleet.
+/// Panics if any closed-loop invariant breaks — the bench and the test
+/// suite both gate on it.
+pub fn run_overdeclared_scenario() -> OverDeclared {
+    let catalog = cpu_catalog();
+    let mut mgr = AdaptiveManager::new(Planner::new(catalog.clone(), PlannerConfig::st1()));
+    let mut fc = FeedbackController::new(FeedbackConfig::default());
+    let mut cloud = CloudSim::new(catalog.clone());
+    // Declared: 4.91 vcpus per stream -> one box each. At the true 0.5x
+    // compute cost: 2.53 vcpus -> three per box.
+    let requests = chicago_workload(Program::Vgg16, 1.0, 4);
+    let true_scale = vec![0.5; requests.len()];
+
+    mgr.replan(requests).unwrap();
+    let (declared_requests, declared_plan) = current_state(&mgr);
+    let declared_usd = declared_plan.cost_per_hour;
+    cloud.apply_plan(&declared_plan).unwrap();
+    cloud.set_plan_loads(&declared_plan, &declared_requests).unwrap();
+    let fleet_util_declared = cloud.fleet_utilization();
+
+    let mut final_drop_rate = 1.0;
+    let mut last_changed = usize::MAX;
+    for epoch in 0..3 {
+        let (reqs, plan) = current_state(&mgr);
+        let sim =
+            SimExecutor::new(&catalog, &plan, &reqs, &true_scale, SimConfig::default()).unwrap();
+        let out = sim.run().unwrap();
+        assert_eq!(
+            out.report.streams_shed, 0,
+            "an over-declared fleet must never shed (epoch {epoch}): {:?}",
+            out.report
+        );
+        assert!(
+            out.report.drop_rate() < 0.01,
+            "an over-declared fleet must not drop (epoch {epoch}): {:?}",
+            out.report
+        );
+        final_drop_rate = out.report.drop_rate();
+        fc.observe(&out.windows);
+        // The closed loop carries the fed-back workload forward, so
+        // `changed` is the true feedback delta between consecutive plans.
+        let (_, changed) = mgr.replan_with_feedback(reqs, &fc).unwrap();
+        last_changed = changed;
+    }
+    assert_eq!(
+        last_changed, 0,
+        "the cost estimate must converge to a zero-delta (no-op) re-plan"
+    );
+
+    let (final_requests, final_plan) = current_state(&mgr);
+    let closedloop_usd = final_plan.cost_per_hour;
+    // The acceptance bar, and by construction strictly cheaper here.
+    assert!(
+        closedloop_usd <= declared_usd + 1e-9,
+        "closed-loop plan ${closedloop_usd}/h exceeds declared ${declared_usd}/h"
+    );
+    assert!(
+        closedloop_usd < declared_usd - 1e-9,
+        "observed 0.5x demand must consolidate the fleet: ${closedloop_usd}/h vs ${declared_usd}/h"
+    );
+    cloud.apply_plan(&final_plan).unwrap();
+    cloud.set_plan_loads(&final_plan, &final_requests).unwrap();
+    let fleet_util_closed = cloud.fleet_utilization();
+    assert!(
+        fleet_util_closed > fleet_util_declared,
+        "right-sizing must raise fleet utilization: {fleet_util_closed} vs {fleet_util_declared}"
+    );
+    let feedback_streams = mgr.ctx.main.solver.feedback_streams.get();
+    assert!(feedback_streams > 0, "re-plans must count feedback-provisioned streams");
+    OverDeclared {
+        declared_usd_per_hour: declared_usd,
+        closedloop_usd_per_hour: closedloop_usd,
+        final_drop_rate,
+        fleet_util_declared,
+        fleet_util_closed,
+        feedback_streams,
+    }
+}
+
+/// Under-declared fleet: true cost 2× declared; degrade tiers shed before
+/// wholesale drops, the corrected re-plan provisions real capacity, and
+/// sustained headroom restores every tier. Panics on any broken invariant.
+pub fn run_underdeclared_scenario() -> UnderDeclared {
+    let catalog = cpu_catalog();
+    let mut mgr = AdaptiveManager::new(Planner::new(catalog.clone(), PlannerConfig::st1()));
+    let mut fc = FeedbackController::new(FeedbackConfig::default());
+    // Declared: 3.17 vcpus per stream -> two per box (two boxes). True
+    // frames cost 2x, so each box carries 12 vcpu-s/s of work against an
+    // 8-vcpu budget: the queue overflows a 32-deep FIFO around t=32s.
+    let requests = chicago_workload(Program::Zf, 1.5, 4);
+    let true_scale = vec![2.0; requests.len()];
+    let sim_cfg = SimConfig { queue_capacity: 32, ..SimConfig::default() };
+
+    mgr.replan(requests).unwrap();
+    let (declared_requests, declared_plan) = current_state(&mgr);
+    let declared_usd = declared_plan.cost_per_hour;
+
+    // Open-loop control: the declared plan serves the whole three-epoch
+    // horizon with no feedback. Its drop rate never recovers.
+    let nofb_cfg = SimConfig { duration_s: 3.0 * sim_cfg.duration_s, ..sim_cfg.clone() };
+    let nofb = SimExecutor::new(&catalog, &declared_plan, &declared_requests, &true_scale, nofb_cfg)
+        .unwrap()
+        .run()
+        .unwrap();
+    let nofeedback_drop_rate = nofb.report.drop_rate();
+    assert!(
+        nofeedback_drop_rate > 0.1,
+        "the open-loop control must keep dropping: {:?}",
+        nofb.report
+    );
+
+    let mut epoch_drops = Vec::new();
+    let mut max_shed_tier = 0u8;
+    let mut peak_streams_shed = 0usize;
+    let mut last_changed = usize::MAX;
+    for _epoch in 0..3 {
+        let (reqs, plan) = current_state(&mgr);
+        // Degrade never silences: every planned stream keeps a positive
+        // effective rate at every tier.
+        for r in &reqs {
+            assert!(r.effective_fps() > 0.0, "stream shed to zero fps: {:?}", r.feedback);
+        }
+        let sim = SimExecutor::new(&catalog, &plan, &reqs, &true_scale, sim_cfg.clone()).unwrap();
+        let out = sim.run().unwrap();
+        epoch_drops.push(out.report.drop_rate());
+        peak_streams_shed = peak_streams_shed.max(out.report.streams_shed);
+        fc.observe(&out.windows);
+        let (_, changed) = mgr.replan_with_feedback(reqs, &fc).unwrap();
+        last_changed = changed;
+        let tier_now = mgr
+            .current
+            .as_ref()
+            .unwrap()
+            .0
+            .iter()
+            .map(|r| r.feedback.shed_tier)
+            .max()
+            .unwrap_or(0);
+        max_shed_tier = max_shed_tier.max(tier_now);
+    }
+
+    let epoch0_drop_rate = epoch_drops[0];
+    let final_drop_rate = *epoch_drops.last().unwrap();
+    assert!(
+        epoch0_drop_rate > 0.05,
+        "the declared plan must visibly drop under 1.5x load: {epoch_drops:?}"
+    );
+    // The acceptance bar: the closed loop bounds the drop rate.
+    assert!(
+        final_drop_rate <= 0.01,
+        "closed loop failed to bound the drop rate: {epoch_drops:?}"
+    );
+    assert!(max_shed_tier >= 1, "backpressure must engage the degrade tiers");
+    assert!(peak_streams_shed > 0, "shed streams must surface in the serve report");
+    assert_eq!(last_changed, 0, "feedback must converge to a zero-delta re-plan");
+    let (final_requests, final_plan) = current_state(&mgr);
+    assert!(
+        final_requests.iter().all(|r| r.feedback.shed_tier == 0),
+        "sustained headroom must restore every tier: {final_requests:?}"
+    );
+    let corrected_usd = final_plan.cost_per_hour;
+    assert!(
+        corrected_usd > declared_usd,
+        "the corrected plan must provision for the observed 2x demand: \
+         ${corrected_usd}/h vs ${declared_usd}/h"
+    );
+    let degraded_tier_streams = mgr.ctx.main.solver.degraded_tier_streams.get();
+    assert!(degraded_tier_streams > 0, "re-plans must count degraded-tier streams");
+    UnderDeclared {
+        declared_usd_per_hour: declared_usd,
+        corrected_usd_per_hour: corrected_usd,
+        epoch0_drop_rate,
+        final_drop_rate,
+        nofeedback_drop_rate,
+        max_shed_tier,
+        peak_streams_shed,
+        degraded_tier_streams,
+    }
+}
+
+/// Run both scenarios and collect the bench/JSON outcome.
+pub fn run() -> ClosedLoopOutcome {
+    ClosedLoopOutcome { over: run_overdeclared_scenario(), under: run_underdeclared_scenario() }
+}

@@ -4,6 +4,7 @@
 //! timed iterations and print a fixed-width table — the same rows/series the
 //! paper's tables and figures report.
 
+pub mod closedloop;
 pub mod portfolio;
 
 use crate::util::Summary;

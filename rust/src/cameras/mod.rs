@@ -31,6 +31,41 @@ pub struct Camera {
     pub mode: CameraMode,
 }
 
+/// Serving-loop feedback attached to a request by the feedback controller
+/// ([`crate::server::feedback`]): the planner's view of *observed* demand.
+///
+/// The default value is the open-loop contract — demand straight from the
+/// offline profiles at the declared fps — and every key/hash downstream
+/// (fingerprints, group keys, shard drift signatures) folds these fields in,
+/// so publishing a changed observation dirties exactly the affected streams
+/// while a zero-delta re-plan stays bit-identical to the declared plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DemandFeedback {
+    /// Measured compute cost per frame relative to the offline profile
+    /// (EWMA, quantized by the controller before publishing). 1.0 = trust
+    /// the profile. Scales only the compute term of the demand vector
+    /// ([`crate::profiles::ProgramProfile::demand_cpu_scaled`]).
+    pub cost_scale: f64,
+    /// Backpressure degrade tier: each tier halves the served rate, so the
+    /// effective fps is `desired_fps / 2^shed_tier`. Tier 0 serves the
+    /// declared contract. Bounded by the controller's `max_tier`, so a
+    /// stream is degraded, never dropped.
+    pub shed_tier: u8,
+}
+
+impl Default for DemandFeedback {
+    fn default() -> Self {
+        DemandFeedback { cost_scale: 1.0, shed_tier: 0 }
+    }
+}
+
+impl DemandFeedback {
+    /// True iff this is the open-loop default (no observation published).
+    pub fn is_default(&self) -> bool {
+        self.cost_scale == 1.0 && self.shed_tier == 0
+    }
+}
+
 /// An analysis request: run `program` on `camera`'s stream at `desired_fps`.
 /// This is the paper's unit of work — the "box" of the packing problem.
 #[derive(Clone, Debug)]
@@ -38,12 +73,28 @@ pub struct StreamRequest {
     pub camera: Camera,
     pub program: Program,
     pub desired_fps: f64,
+    /// Closed-loop observed-demand adjustment (defaults to open-loop).
+    /// Deliberately **not** part of [`StreamKey`]: feedback changes demand,
+    /// not stream identity, so sticky Expand keeps a degraded stream on its
+    /// slot.
+    pub feedback: DemandFeedback,
 }
 
 impl StreamRequest {
     pub fn new(camera: Camera, program: Program, desired_fps: f64) -> Self {
         assert!(desired_fps > 0.0, "desired_fps must be positive");
-        StreamRequest { camera, program, desired_fps }
+        StreamRequest { camera, program, desired_fps, feedback: DemandFeedback::default() }
+    }
+
+    /// The fps the planner should actually provision for: the declared rate
+    /// shed by the feedback tier. Tier 0 returns `desired_fps` exactly (the
+    /// same bits — zero feedback delta must re-plan bit-identically).
+    pub fn effective_fps(&self) -> f64 {
+        if self.feedback.shed_tier == 0 {
+            self.desired_fps
+        } else {
+            self.desired_fps / f64::from(1u32 << self.feedback.shed_tier.min(30))
+        }
     }
 
     /// Short human label, e.g. "ZF@8.00fps/Tokyo".
@@ -246,6 +297,19 @@ mod tests {
         let cam = camera_at(0, "Tokyo", cities::TOKYO, Resolution::VGA, 30.0);
         let r = StreamRequest::new(cam, Program::Zf, 8.0);
         assert_eq!(r.label(), "ZF@8.00fps/Tokyo");
+    }
+
+    #[test]
+    fn effective_fps_halves_per_tier_and_tier_zero_is_exact() {
+        let cam = camera_at(0, "Tokyo", cities::TOKYO, Resolution::VGA, 30.0);
+        let mut r = StreamRequest::new(cam, Program::Zf, 0.5);
+        assert!(r.feedback.is_default());
+        assert_eq!(r.effective_fps().to_bits(), 0.5f64.to_bits());
+        r.feedback.shed_tier = 1;
+        assert_eq!(r.effective_fps(), 0.25);
+        r.feedback.shed_tier = 3;
+        assert_eq!(r.effective_fps(), 0.0625);
+        assert!(r.effective_fps() > 0.0, "degrade must never reach zero fps");
     }
 
     #[test]

@@ -196,6 +196,53 @@ impl CloudSim {
             .sum()
     }
 
+    /// Mean [`SimInstance::utilization`] over the alive fleet (0.0 when
+    /// empty). Meaningful after loads were set — by the serving layer or
+    /// by [`set_plan_loads`](CloudSim::set_plan_loads).
+    pub fn fleet_utilization(&self) -> f64 {
+        let alive: Vec<_> = self.instances.iter().filter(|i| i.alive()).collect();
+        if alive.is_empty() {
+            return 0.0;
+        }
+        alive.iter().map(|i| i.utilization()).sum::<f64>() / alive.len() as f64
+    }
+
+    /// Set each plan-bound instance's load gauge from the workload it
+    /// hosts, at the *feedback-adjusted* demand: delivered fps
+    /// ([`Plan::delivered_fps`], which honours degrade tiers) and the
+    /// published `cost_scale` — so after a closed-loop re-plan the fleet's
+    /// utilization reflects observed demand, not the declared profile. The
+    /// plan must have been applied first (`apply_plan` binds slots).
+    pub fn set_plan_loads(
+        &mut self,
+        plan: &Plan,
+        requests: &[crate::cameras::StreamRequest],
+    ) -> Result<()> {
+        let fps = plan.delivered_fps(requests);
+        for inst in &plan.instances {
+            let id = *self
+                .bindings
+                .get(&inst.slot_id)
+                .ok_or_else(|| Error::config(format!("slot {} not bound", inst.slot_id)))?;
+            let mut load = Dims::default();
+            for &s in &inst.streams {
+                let r = &requests[s];
+                let p = r.program.profile();
+                let d = if inst.has_gpu {
+                    let mut d =
+                        p.demand_gpu_scaled(fps[s], r.camera.resolution, r.feedback.cost_scale);
+                    d.gpus /= self.catalog.types[inst.type_idx].gpu_speed;
+                    d
+                } else {
+                    p.demand_cpu_scaled(fps[s], r.camera.resolution, r.feedback.cost_scale)
+                };
+                load = load.add(&d);
+            }
+            self.set_load(id, load)?;
+        }
+        Ok(())
+    }
+
     /// Reconcile the fleet with a plan: keep surviving instances, terminate
     /// surplus ones, provision the rest. Returns ids aligned with
     /// `plan.instances` order.
@@ -477,6 +524,43 @@ mod tests {
         assert_eq!(ids3.len(), plan_low.instances.len());
         // Hourly rate matches the plan's cost.
         assert!((s.hourly_rate() - plan_low.cost_per_hour).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_loads_track_feedback_adjusted_demand() {
+        // CPU-only so the vcpus dimension (the one cost_scale scales)
+        // dominates utilization.
+        let catalog = Catalog::builtin().restrict(Some(&["c4.2xlarge"]), Some(&["us-east-2"]));
+        let planner = Planner::new(catalog.clone(), PlannerConfig::st1());
+        let mut s = CloudSim::new(catalog);
+        let requests = vec![
+            StreamRequest::new(
+                camera_at(0, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+                Program::Zf,
+                2.0,
+            ),
+            StreamRequest::new(
+                camera_at(1, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+                Program::Zf,
+                2.0,
+            ),
+        ];
+        let plan = planner.plan(&requests).unwrap();
+        assert!(s.fleet_utilization() == 0.0, "empty fleet");
+        // Loads require bound slots.
+        assert!(s.set_plan_loads(&plan, &requests).is_err());
+        s.apply_plan(&plan).unwrap();
+        s.set_plan_loads(&plan, &requests).unwrap();
+        let declared = s.fleet_utilization();
+        assert!(declared > 0.0 && declared <= 1.0 + 1e-9, "util={declared}");
+        // Observed demand at half the declared compute: utilization falls.
+        let mut observed = requests.clone();
+        for r in &mut observed {
+            r.feedback.cost_scale = 0.5;
+        }
+        s.set_plan_loads(&plan, &observed).unwrap();
+        let adjusted = s.fleet_utilization();
+        assert!(adjusted < declared, "{adjusted} vs {declared}");
     }
 
     #[test]

@@ -207,6 +207,24 @@ impl AdaptiveManager {
         self.current = Some((requests, new_plan));
         Ok(report)
     }
+
+    /// The closed-loop entry point: fold the serving feedback controller's
+    /// published per-stream estimates
+    /// ([`FeedbackController::apply`](crate::server::feedback::FeedbackController::apply))
+    /// into `requests`, then re-plan. Returns the migration report plus how
+    /// many requests the feedback actually changed — 0 means the re-plan
+    /// saw a workload bit-identical to plain [`replan`](Self::replan)
+    /// (unchanged observed demand dirties nothing; property-tested as
+    /// `prop_zero_feedback_delta_is_plan_noop`).
+    pub fn replan_with_feedback(
+        &mut self,
+        mut requests: Vec<StreamRequest>,
+        controller: &crate::server::feedback::FeedbackController,
+    ) -> Result<(MigrationReport, usize)> {
+        let changed = controller.apply(&mut requests);
+        let report = self.replan(requests)?;
+        Ok((report, changed))
+    }
 }
 
 /// Compute the migration diff between an (optional) deployed plan and its

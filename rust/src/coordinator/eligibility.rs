@@ -48,6 +48,13 @@ pub struct GroupKey {
     /// True if no region satisfies the RTT budget (best-effort nearest
     /// region at a capped rate).
     pub degraded: bool,
+    /// Observed cost scale in milli (rounded; open-loop default 1000).
+    /// Streams whose measured demand diverged must not share a demand
+    /// vector with streams still on the profile.
+    pub cost_milli: u64,
+    /// Backpressure degrade tier (open-loop default 0): each tier halves
+    /// the provisioned fps, so tiers group apart.
+    pub shed_tier: u8,
 }
 
 /// Dense id of an interned [`GroupKey`] in a [`GroupArena`]. Stable for the
@@ -125,14 +132,19 @@ pub type EligCache = FxHashMap<(u64, u64, u64), (RegionMask, bool)>;
 
 /// Everything request-local the front-end depends on that is *not* already
 /// part of the stream's [`StreamKey`] (which pins camera id, program, exact
-/// fps, and duplicate occurrence): camera position and resolution. A request
-/// whose key and fingerprint both match the previous re-plan's is guaranteed
-/// to group identically, so the incremental path may reuse its group.
+/// fps, and duplicate occurrence): camera position, resolution, and the
+/// serving-loop feedback fields. A request whose key and fingerprint both
+/// match the previous re-plan's is guaranteed to group identically, so the
+/// incremental path may reuse its group — and a published feedback delta
+/// (cost scale or degrade tier) changes the fingerprint, dirtying exactly
+/// that stream.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Fingerprint {
     lat_bits: u64,
     lon_bits: u64,
     res: Resolution,
+    cost_bits: u64,
+    shed_tier: u8,
 }
 
 /// Fingerprint of one request (canonical float bits).
@@ -141,6 +153,8 @@ pub fn fingerprint(req: &StreamRequest) -> Fingerprint {
         lat_bits: canon_f64_bits(req.camera.location.lat),
         lon_bits: canon_f64_bits(req.camera.location.lon),
         res: req.camera.resolution,
+        cost_bits: canon_f64_bits(req.feedback.cost_scale),
+        shed_tier: req.feedback.shed_tier,
     }
 }
 
@@ -307,6 +321,8 @@ pub fn run_incremental(
                     res: req.camera.resolution,
                     mask,
                     degraded,
+                    cost_milli: (req.feedback.cost_scale * 1000.0).round() as u64,
+                    shed_tier: req.feedback.shed_tier,
                 })
             }
         };
@@ -464,6 +480,37 @@ mod tests {
     }
 
     #[test]
+    fn feedback_delta_dirties_exactly_the_observed_stream() {
+        let catalog = Catalog::builtin();
+        let requests = vec![req(0, cities::CHICAGO, 1.0), req(1, cities::CHICAGO, 1.0)];
+        let keys = stream_keys(&requests);
+        let mut front = FrontCache::default();
+        let first =
+            run_incremental(&catalog, LocationPolicy::RttFiltered, &requests, &keys, &mut front);
+        assert_eq!(first.groups.keys.len(), 1, "identical requests share one group");
+
+        // A published cost observation on one stream: only that stream
+        // re-runs (feedback is in the fingerprint), the eligibility memo
+        // still hits (coverage circles ignore feedback), and the group
+        // splits (diverged cost must not share a demand vector).
+        let mut drifted = requests.clone();
+        drifted[1].feedback.cost_scale = 1.5;
+        let out =
+            run_incremental(&catalog, LocationPolicy::RttFiltered, &drifted, &keys, &mut front);
+        assert_eq!((out.unchanged, out.changed), (1, 1));
+        assert_eq!((out.cache_hits, out.cache_misses), (1, 0));
+        assert_eq!(out.groups.keys.len(), 2);
+        assert_eq!(out.groups.keys[1].cost_milli, 1500);
+
+        // A degrade tier likewise fingerprints and groups apart.
+        drifted[1].feedback = crate::cameras::DemandFeedback { cost_scale: 1.0, shed_tier: 1 };
+        let out2 =
+            run_incremental(&catalog, LocationPolicy::RttFiltered, &drifted, &keys, &mut front);
+        assert_eq!((out2.unchanged, out2.changed), (1, 1));
+        assert_eq!(out2.groups.keys[1].shed_tier, 1);
+    }
+
+    #[test]
     fn signed_zero_coordinates_share_one_memo_entry() {
         // Regression: raw `to_bits` keys treated -0.0 and 0.0 as distinct,
         // so cameras on the equator/meridian missed their own memo entries.
@@ -488,6 +535,8 @@ mod tests {
             res: Resolution::VGA,
             mask: RegionMask::full(3),
             degraded: false,
+            cost_milli: 1000,
+            shed_tier: 0,
         };
         let mut b = a;
         b.fps_milli = 2000;

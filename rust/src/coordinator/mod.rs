@@ -206,12 +206,15 @@ pub struct Plan {
 }
 
 impl Plan {
-    /// The per-request delivered fps (equals desired unless degraded).
+    /// The per-request delivered fps: the feedback-shed effective rate
+    /// ([`StreamRequest::effective_fps`] — equals desired at tier 0),
+    /// RTT-capped for degraded streams.
     pub fn delivered_fps(&self, requests: &[StreamRequest]) -> Vec<f64> {
         requests
             .iter()
             .enumerate()
             .map(|(i, r)| {
+                let eff = r.effective_fps();
                 if self.degraded.contains(&i) {
                     let inst = self
                         .instances
@@ -222,9 +225,9 @@ impl Plan {
                         .camera
                         .location
                         .rtt_ms(&self.region_locations[inst.region_idx]);
-                    geo::fps_cap(rtt).min(r.desired_fps)
+                    geo::fps_cap(rtt).min(eff)
                 } else {
-                    r.desired_fps
+                    eff
                 }
             })
             .collect()

@@ -207,12 +207,14 @@ fn ms_since(t: Instant) -> f64 {
 /// Demand vectors are memoized per interned group identity; degraded groups
 /// also key on the representative camera's location (their delivered fps
 /// depends on the camera→region RTT) and every group keys on the
-/// representative's un-rounded fps (the group key only stores milli-fps).
-/// Float bits are canonicalized so signed zeros cannot split entries.
+/// representative's un-rounded *effective* fps and observed cost scale (the
+/// group key only stores their rounded milli forms). Float bits are
+/// canonicalized so signed zeros cannot split entries.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 struct DemandKey {
     gid: GroupId,
     rep_fps_bits: u64,
+    rep_cost_bits: u64,
     rep_loc: Option<(u64, u64)>,
 }
 
@@ -594,6 +596,17 @@ pub(crate) fn plan_with_pool(
     enforce_caps(ctx);
     let mut stats = PipelineStats::default();
 
+    // Closed-loop telemetry: how many streams this re-plan provisions from
+    // observed (not declared) demand, and how many are backpressure-shed.
+    for r in requests {
+        if !r.feedback.is_default() {
+            ctx.solver.feedback_streams.inc();
+        }
+        if r.feedback.shed_tier > 0 {
+            ctx.solver.degraded_tier_streams.inc();
+        }
+    }
+
     // Stage 1: Eligibility — incremental against the previous slice.
     let t_elig = Instant::now();
     let skeys = stream_keys(requests);
@@ -714,7 +727,8 @@ fn build_stage(
         let rep = &requests[mem[0]];
         let dkey = DemandKey {
             gid,
-            rep_fps_bits: canon_f64_bits(rep.desired_fps),
+            rep_fps_bits: canon_f64_bits(rep.effective_fps()),
+            rep_cost_bits: canon_f64_bits(rep.feedback.cost_scale),
             rep_loc: key.degraded.then(|| {
                 (
                     canon_f64_bits(rep.camera.location.lat),
@@ -787,6 +801,12 @@ fn compute_demand(
     bins: &[BinType],
 ) -> Vec<Option<Dims>> {
     let profile = key.program.profile();
+    // Closed-loop inputs: the backpressure tier sheds the provisioned rate
+    // (`effective_fps`, tier 0 = declared bits exactly) and the observed
+    // cost scale multiplies the compute term (scale 1.0 is bit-identical
+    // to the profile, so a zero feedback delta re-plans bit-identically).
+    let eff_fps = rep.effective_fps();
+    let cost_scale = rep.feedback.cost_scale;
     bins.iter()
         .map(|b| {
             if !key.mask.get(b.region_idx) {
@@ -799,18 +819,18 @@ fn compute_demand(
                     .camera
                     .location
                     .rtt_ms(&catalog.regions[b.region_idx].location);
-                geo::fps_cap(rtt).min(rep.desired_fps)
+                geo::fps_cap(rtt).min(eff_fps)
             } else {
-                rep.desired_fps
+                eff_fps
             };
             Some(if b.has_gpu {
                 // Newer GPU generations (g3/p3-class) process the same
                 // stream in proportionally less GPU time.
-                let mut d = profile.demand_gpu(fps, key.res);
+                let mut d = profile.demand_gpu_scaled(fps, key.res, cost_scale);
                 d.gpus /= catalog.types[b.type_idx].gpu_speed;
                 d
             } else {
-                profile.demand_cpu(fps, key.res)
+                profile.demand_cpu_scaled(fps, key.res, cost_scale)
             })
         })
         .collect()

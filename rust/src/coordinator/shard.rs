@@ -541,7 +541,8 @@ fn uf_union(parent: &mut [u32], a: u32, b: u32) {
 }
 
 /// Order-sensitive content hash of a shard's request slice: any camera
-/// join/leave, move, retune, or reorder changes the signature and dirties
+/// join/leave, move, retune, reorder, or published serving-feedback delta
+/// (observed cost scale / degrade tier) changes the signature and dirties
 /// exactly that shard. Catalog/config changes are tracked separately via
 /// [`pipeline::signature`].
 fn drift_sig(requests: &[StreamRequest]) -> u64 {
@@ -560,6 +561,8 @@ fn drift_sig(requests: &[StreamRequest]) -> u64 {
         mode.hash(&mut h);
         req.program.hash(&mut h);
         eligibility::canon_f64_bits(req.desired_fps).hash(&mut h);
+        eligibility::canon_f64_bits(req.feedback.cost_scale).hash(&mut h);
+        req.feedback.shed_tier.hash(&mut h);
     }
     h.finish()
 }

@@ -9,14 +9,19 @@
 //!   manager** that selects the cheapest set of cloud instances (type ×
 //!   location) able to analyze many network-camera streams, formulated as
 //!   multi-dimensional multiple-choice vector bin packing (arc-flow + MILP),
-//!   with location-aware strategies (NL / ARMVAC / GCL) and adaptive runtime
-//!   re-packing. It also owns the serving runtime: stream router, dynamic
-//!   batcher, simulated cloud, metrics, CLI.
+//!   with location-aware strategies (NL / ARMVAC / GCL), adaptive runtime
+//!   re-packing, and a closed serving→planning feedback loop. It also owns
+//!   the serving runtime: stream router, dynamic batcher, deterministic
+//!   serving simulator, simulated cloud, metrics, CLI.
 //! * **L2 (python/compile/model.py, build-time)** — the analysis programs
 //!   (compact VGG16 / ZF detectors) written in JAX and AOT-lowered to HLO
 //!   text.
 //! * **L1 (python/compile/kernels/, build-time)** — the Pallas tiled matmul
 //!   kernel backing every conv/dense layer of the analysis programs.
+//!
+//! A prose tour of the architecture (stage pipeline, shard/arbiter split,
+//! solver stack, feedback loop) lives in `ARCHITECTURE.md` at the repo
+//! root; this page stays close to the module surface.
 //!
 //! ## The staged planning pipeline
 //!
@@ -122,121 +127,65 @@
 //! bit-identical to the three-independent-contexts baseline wherever exact
 //! phases complete (property-tested).
 //!
-//! ## `BENCH_adaptive.json` `portfolio` object (written by `bench_adaptive`)
+//! ## The metro-sharded planner (PR 7)
 //!
-//! * `flip_churn_ratio` — churn ratio of the forced winner-flip re-plan on
-//!   an unchanged workload (asserted ≤ `sticky_churn_ratio` + 0.05),
-//! * `sticky_churn_ratio` — the same-winner control re-plan's churn ratio,
-//! * `winner_flips` — winner changes the scenario observed (asserted ≥ 1),
-//! * `flip_provisioned` / `flip_terminated` — fleet changes on the flip
-//!   re-plan (asserted 0: continuity keeps the deployed fleet),
-//! * `pool_shared_jobs` — solve jobs all three candidates dispatched to
-//!   the one shared worker pool (asserted > 0),
-//! * `budget_pooled_donated` — arc-flow node budget drawn from the
-//!   cross-candidate donated pool beyond the isolated allocations
-//!   (asserted > 0).
+//! At planet scale the fleet is partitioned into **shards** — connected
+//! components of the per-request eligibility masks
+//! ([`coordinator::shard::ShardedPlanner`]) — each owning its own portfolio
+//! [`ReplanContext`](coordinator::portfolio::ReplanContext) and re-planning
+//! (concurrently) only when its own drift signature
+//! ([`coordinator::shard`]'s `drift_sig`) changes. A global arbiter owns
+//! what must stay shared: the solve-worker pool, the arc-flow graph cache,
+//! the cross-shard slack ledger
+//! ([`coordinator::budget::ShardSlackLedger`]), and catalog/price fan-out
+//! (a `(catalog, config)` signature change dirties every shard). Sharded
+//! plan cost is asserted at parity with the single-context plan wherever
+//! every shard's exact phase completes.
 //!
-//! The scenarios live in [`bench::portfolio`], so `tests/integration.rs`
-//! schema-checks exactly the fields the bench writes.
+//! ## Closed-loop serving feedback (PR 8)
 //!
-//! ## `BENCH_scale.json` (written by `bench_scale`, gated in CI)
+//! Serving observations flow back into planning. Either executor — the
+//! deterministic, feature-free [`server::sim::SimExecutor`] or the PJRT
+//! runtime (`server::pjrt`, feature `pjrt`) — emits per-window
+//! per-instance observations ([`server::sim::InstanceWindow`]);
+//! [`server::feedback::FeedbackController`] folds them into per-stream
+//! [`DemandFeedback`](cameras::DemandFeedback): an EWMA of measured cost
+//! per frame relative to the declared profile (published under a
+//! quantize-and-deadband step) and a backpressure **degrade tier** that
+//! halves a stream's effective fps per tier — shedding load *before* the
+//! queue drops frames, never shedding a stream to zero, and restoring
+//! under sustained headroom. The planner consumes feedback through the
+//! demand path ([`profiles::ProgramProfile::demand_cpu_scaled`] /
+//! [`demand_gpu_scaled`](profiles::ProgramProfile::demand_gpu_scaled) and
+//! [`effective_fps`](cameras::StreamRequest::effective_fps)), and the
+//! fingerprint/drift-signature machinery ensures a feedback delta dirties
+//! exactly the streams whose observed demand moved — default feedback is
+//! **bit-identical** to the pre-feedback plan (property-tested in
+//! `prop_zero_feedback_delta_is_plan_noop`).
 //!
-//! * `parity[]` — per 10k-stream scenario: `streams`, `fps`, `cold_ms`,
-//!   `warm_ms`, `speedup` (wall-clock, recorded-not-gated under
-//!   `BENCH_LENIENT_TIMING`), `cold_usd_per_hour` / `warm_usd_per_hour`,
-//!   `reuse_ratio`, `delta_solve_hits` (near-match memo reuses — asserted
-//!   > 0), `components`, `cold_exact_complete` (every component exact and
-//!   proven), `warm_equals_cold` (cost parity, asserted whenever both
-//!   sides completed their exact phase). Front-end fields (PR 4):
-//!   `cold_front_ms` / `warm_front_ms` (Eligibility + ProblemBuild
-//!   wall-clock) and `front_speedup` — the warm ≈1%-drift re-plan's
-//!   front-end is asserted ≥ 5× faster than the cold full rebuild's —
-//!   plus `front_unchanged` / `front_changed` (the dirty-tracking split,
-//!   asserted to equal the constructed drift exactly) and per-stage
-//!   breakdowns `cold_stage_ms` / `warm_stage_ms` with `eligibility`,
-//!   `build`, `solve`, and `expand` entries.
-//! * `exact_recovery` — the calibrated fallback-recovery scenario:
-//!   `probe_need_max`/`probe_need_second` (measured per-component arc-flow
-//!   needs), `static_budget` (pinned between them), `static_fallbacks`
-//!   (asserted ≥ 1: the seed behaviour starves the hard metro),
-//!   `adaptive_fallbacks` (asserted 0: the pool-funded re-solve recovers
-//!   exactness), `budget_donated_nodes`, and the static/adaptive/probe
-//!   `usd_per_hour` triple.
-//! * `lp_reuse` — `lp_warm_resumes` vs `lp_cold_solves` node LPs across
-//!   the warm runs (the dual-simplex resume at work).
+//! ## Bench artifacts
 //!
-//! ## `BENCH_planet.json` (written by `bench_planet`, gated in CI)
+//! Field-by-field schema documentation for every bench JSON lives in
+//! `docs/BENCH_SCHEMAS.md`:
 //!
-//! Planet-scale run of the metro-sharded planner
-//! ([`coordinator::shard::ShardedPlanner`]): 100 metros in 8 region basins,
-//! ~10k streams, with skewed drift. Shards are connected components of the
-//! per-request eligibility masks, each owning its own portfolio
-//! [`coordinator::portfolio::ReplanContext`] and re-planning (concurrently)
-//! only when its own drift arrives; a global arbiter owns the shared worker
-//! pool, graph cache, cross-shard slack ledger
-//! ([`coordinator::budget::ShardSlackLedger`]), and catalog/price fan-out.
-//!
-//! * `metros` / `streams` / `shards` — workload shape (100 / 10_200 / 8),
-//! * `cold_all_ms` — cold round, all 8 shards planning concurrently,
-//! * `warm_noop_ms` — no-drift round (asserted: 0 dirty shards, plans and
-//!   cost reused bit-identically),
-//! * `warm_one_dirty_ms` — one camera leaves one metro (asserted: exactly
-//!   1 dirty shard, warm-started via the delta paths),
-//! * `warm_uniform_ms` — one camera leaves every basin (asserted: 8 dirty
-//!   shards); `uniform_over_one_dirty` is the warm ratio, gated only
-//!   without `BENCH_LENIENT_TIMING` since dirty shards re-plan
-//!   concurrently,
-//! * `price_fanout_all_ms` — one offering's price changes: the
-//!   `(catalog, config)` signature dirties all shards cold;
-//!   `fanout_over_one_dirty` (asserted ≥ 5 unconditionally — the
-//!   dirty-shard-bounded wall-clock bar),
-//! * `sharded_usd_per_hour` / `unsharded_usd_per_hour` / `cost_parity` —
-//!   the sharded total vs one single-context plan; parity to 1e-6 is
-//!   asserted cold, after the skewed warm round, and after the fan-out
-//!   (certified-or-cold gate: every shard exact-complete with the Main
-//!   candidate — also property-tested in `prop_sharded_plan_cost_equals_`
-//!   `unsharded_on_disjoint_metros`),
-//! * `dirty` — dirty-shard count per round (`cold`, `noop`, `skew`,
-//!   `restore`, `uniform`, `fanout`),
-//! * `exact_complete` / `all_main` / `donors` / `lenient` — gate inputs
-//!   (every re-planned shard donates its residual budget slack into the
-//!   cross-shard ledger; `donors` is asserted = 8).
-//!
-//! ## `BENCH_solver.json` (written by `bench_solver`, gated in CI)
-//!
-//! * `classes[]` — one entry per LP component class (`paper_scale`,
-//!   `metro`, and `wide_sparse` — the largest exact component class):
-//!   * `rows` / `cols` / `nnz_per_col` / `lps` — the class shape and how
-//!     many random covering LPs were solved,
-//!   * `dense_ms` / `revised_ms` — whole-set wall clock per core,
-//!   * `dense_iterations` / `revised_iterations` — simplex pivots summed
-//!     over the set (both phases),
-//!   * `dense_iters_per_sec` / `revised_iters_per_sec` — pivot throughput;
-//!     on `wide_sparse` the bench asserts revised ≥ dense
-//!     (recorded-not-gated under `BENCH_LENIENT_TIMING`),
-//!   * `speedup` — `dense_ms / revised_ms`,
-//!   * `ftran_per_iter` / `btran_per_iter` — factorization solves per
-//!     pivot (revised only; dense has no factorization),
-//!   * `refactorizations` — threshold-triggered eta-file rebuilds,
-//!   * `degenerate_pivots` — pivots whose min-ratio step was ~0 (the
-//!     stalling the two-tier Dantzig band skips when it can).
-//! * `calibration` — provenance of the branch-and-bound node guard:
-//!   `node_cost_rows_weight` (the `NODE_COST_ROWS_WEIGHT` constant in
-//!   [`coordinator::budget::milp_node_cost`]), the `model` formula, and the
-//!   `derivation` note tying the weight to the measured `wide_sparse`
-//!   dense/revised cost ratio.
-//!
-//! Every timed LP is additionally asserted dense==revised on outcome
-//! variant and objective bits, making the bench a large-sample parity sweep
-//! on top of the property suite.
+//! * `BENCH_adaptive.json` — adaptive re-planning + portfolio continuity
+//!   (`bench_adaptive`, scenarios in [`bench::portfolio`]),
+//! * `BENCH_scale.json` — 10k-stream warm/cold parity and front-end drift
+//!   proportionality (`bench_scale`),
+//! * `BENCH_planet.json` — metro-sharded planet run (`bench_planet`),
+//! * `BENCH_solver.json` — dense vs revised simplex race (`bench_solver`),
+//! * `BENCH_closedloop.json` — closed-loop feedback bars
+//!   (`bench_closedloop`, scenarios in [`bench::closedloop`]).
 //!
 //! ## Features
 //!
-//! The request path (PJRT artifact loading + serving) is gated behind the
-//! `pjrt` feature because it needs the vendored `xla` crate and `make
-//! artifacts`; the default build is dependency-free and every planning,
-//! packing, solver, and simulation test runs without it. The end-to-end
-//! serving tests additionally sit behind `pjrt-tests`.
+//! The default build is dependency-free: every planning, packing, solver,
+//! cloud-simulation, serving-simulation, and feedback test runs with no
+//! features enabled. The `pjrt` feature gates only the real inference path
+//! — PJRT artifact loading (the `runtime` module) and the threaded serving
+//! runtime (`server::pjrt`) — because it needs the vendored `xla` crate and
+//! `make artifacts`. The end-to-end PJRT serving tests additionally sit
+//! behind `pjrt-tests`.
 
 pub mod bench;
 pub mod cameras;
@@ -252,7 +201,6 @@ pub mod packing;
 pub mod profiles;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
-#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod solver;
 pub mod util;

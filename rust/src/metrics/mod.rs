@@ -26,6 +26,10 @@ impl Counter {
     pub fn get(&self) -> u64 {
         self.value.load(Ordering::Relaxed)
     }
+    /// Zero the counter (window/reset semantics; needs only `&self`).
+    pub fn reset(&self) {
+        self.value.store(0, Ordering::Relaxed);
+    }
 }
 
 /// Instantaneous gauge (bit-cast f64).
@@ -99,6 +103,18 @@ impl Histogram {
 
     pub fn record(&self, d: std::time::Duration) {
         self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    /// Zero every bucket and the sum/count/max accumulators (window/reset
+    /// semantics; needs only `&self`). Concurrent `record_us` calls may land
+    /// on either side of the reset, matching [`Counter::reset`].
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.count.store(0, Ordering::Relaxed);
+        self.max_ns.store(0, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
@@ -181,6 +197,14 @@ pub struct SolverMetrics {
     /// shares one pool across its three candidate contexts, so
     /// `ReplanContext::pool_shared_jobs` sums this counter over all of them.
     pub pool_jobs: Counter,
+    /// Streams whose re-plan provisioned from observed (serving-feedback)
+    /// demand rather than the declared profile — i.e. their
+    /// `DemandFeedback` differed from the default at plan time
+    /// (`server::feedback` closed the loop for them).
+    pub feedback_streams: Counter,
+    /// Streams provisioned at a backpressure degrade tier (> 0): the
+    /// controller shed them to a lower fps tier before frames dropped.
+    pub degraded_tier_streams: Counter,
 }
 
 impl SolverMetrics {
@@ -193,7 +217,7 @@ impl SolverMetrics {
         format!(
             "subproblems={} exact={} fallback={} memo={} delta={} structural={} lp_warm={} \
              lp_cold={} degen_pivots={} bnb_nodes={} donated_nodes={} pooled_nodes={} \
-             fail_fast={} pool_jobs={}",
+             fail_fast={} pool_jobs={} feedback_streams={} degraded_tiers={}",
             self.subproblems.get(),
             self.exact_solves.get(),
             self.heuristic_fallbacks.get(),
@@ -208,6 +232,8 @@ impl SolverMetrics {
             self.budget_pooled_donated.get(),
             self.graph_fail_fastpaths.get(),
             self.pool_jobs.get(),
+            self.feedback_streams.get(),
+            self.degraded_tier_streams.get(),
         )
     }
 
@@ -237,6 +263,49 @@ impl SolverMetrics {
         self.budget_pooled_donated.add(other.budget_pooled_donated.get());
         self.graph_fail_fastpaths.add(other.graph_fail_fastpaths.get());
         self.pool_jobs.add(other.pool_jobs.get());
+        self.feedback_streams.add(other.feedback_streams.get());
+        self.degraded_tier_streams.add(other.degraded_tier_streams.get());
+    }
+}
+
+/// A snapshot of the windowable serving counters. Doubles as a *delta*:
+/// `take_window` returns the counter increments since the previous window,
+/// which is what the feedback controller consumes (observed per-window
+/// throughput, not lifetime totals).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MetricsWindow {
+    pub frames_in: u64,
+    pub frames_analyzed: u64,
+    pub frames_dropped: u64,
+    pub batches: u64,
+    /// Instantaneous queue depth at snapshot time — a gauge, so deltas keep
+    /// the *latest* value rather than subtracting.
+    pub queue_depth: f64,
+}
+
+impl MetricsWindow {
+    /// Counter increments from `prev` to `self`; `queue_depth` keeps the
+    /// newer reading. Saturating, so a reset between snapshots yields zeros
+    /// instead of wrapping.
+    pub fn delta_since(&self, prev: &MetricsWindow) -> MetricsWindow {
+        MetricsWindow {
+            frames_in: self.frames_in.saturating_sub(prev.frames_in),
+            frames_analyzed: self.frames_analyzed.saturating_sub(prev.frames_analyzed),
+            frames_dropped: self.frames_dropped.saturating_sub(prev.frames_dropped),
+            batches: self.batches.saturating_sub(prev.batches),
+            queue_depth: self.queue_depth,
+        }
+    }
+
+    /// Dropped / (analyzed + dropped); 0.0 when no frames completed either
+    /// way (an idle window is not a lossy window).
+    pub fn drop_rate(&self) -> f64 {
+        let total = self.frames_analyzed + self.frames_dropped;
+        if total == 0 {
+            0.0
+        } else {
+            self.frames_dropped as f64 / total as f64
+        }
     }
 }
 
@@ -271,6 +340,41 @@ impl ServingMetrics {
             return f64::NAN;
         }
         v.iter().sum::<usize>() as f64 / v.len() as f64
+    }
+
+    /// Point-in-time snapshot of the windowable counters.
+    pub fn snapshot(&self) -> MetricsWindow {
+        MetricsWindow {
+            frames_in: self.frames_in.get(),
+            frames_analyzed: self.frames_analyzed.get(),
+            frames_dropped: self.frames_dropped.get(),
+            batches: self.batches.get(),
+            queue_depth: self.queue_depth.get(),
+        }
+    }
+
+    /// Per-window delta: increments since `last`, which is advanced to the
+    /// current snapshot. Call once per observation window; the counters
+    /// themselves keep accumulating (lifetime totals stay intact).
+    pub fn take_window(&self, last: &mut MetricsWindow) -> MetricsWindow {
+        let now = self.snapshot();
+        let delta = now.delta_since(last);
+        *last = now;
+        delta
+    }
+
+    /// Zero every counter, gauge, histogram, and the batch-size log.
+    pub fn reset(&self) {
+        self.frames_in.reset();
+        self.frames_analyzed.reset();
+        self.frames_dropped.reset();
+        self.batches.reset();
+        self.detections.reset();
+        self.queue_depth.set(0.0);
+        self.batch_latency.reset();
+        self.e2e_latency.reset();
+        self.infer_latency.reset();
+        self.batch_sizes.lock().unwrap().clear();
     }
 
     /// One-line human summary.
@@ -413,6 +517,85 @@ mod tests {
         assert_eq!(total.memo_hits.get(), 1);
         // Absorbing reads `other` without resetting it.
         assert_eq!(a.subproblems.get(), 2);
+    }
+
+    #[test]
+    fn solver_metrics_render_feedback_counters() {
+        let m = SolverMetrics::new();
+        m.feedback_streams.add(7);
+        m.degraded_tier_streams.add(2);
+        let s = m.summary();
+        assert!(s.contains("feedback_streams=7"), "{s}");
+        assert!(s.contains("degraded_tiers=2"), "{s}");
+        let total = SolverMetrics::new();
+        total.absorb(&m);
+        total.absorb(&m);
+        assert_eq!(total.feedback_streams.get(), 14);
+        assert_eq!(total.degraded_tier_streams.get(), 4);
+    }
+
+    #[test]
+    fn serving_metrics_window_deltas_do_not_disturb_totals() {
+        let m = ServingMetrics::new();
+        let mut last = MetricsWindow::default();
+
+        m.frames_in.add(10);
+        m.frames_analyzed.add(8);
+        m.frames_dropped.add(2);
+        m.queue_depth.set(5.0);
+        let w1 = m.take_window(&mut last);
+        assert_eq!(w1.frames_in, 10);
+        assert_eq!(w1.frames_analyzed, 8);
+        assert_eq!(w1.frames_dropped, 2);
+        assert_eq!(w1.queue_depth, 5.0);
+        assert!((w1.drop_rate() - 0.2).abs() < 1e-12);
+
+        // Second window sees only the increments, not lifetime totals.
+        m.frames_in.add(4);
+        m.frames_analyzed.add(4);
+        m.queue_depth.set(1.0);
+        let w2 = m.take_window(&mut last);
+        assert_eq!(w2.frames_in, 4);
+        assert_eq!(w2.frames_analyzed, 4);
+        assert_eq!(w2.frames_dropped, 0);
+        assert_eq!(w2.queue_depth, 1.0);
+        assert_eq!(w2.drop_rate(), 0.0);
+
+        // Lifetime counters keep accumulating across take_window calls.
+        assert_eq!(m.frames_in.get(), 14);
+        assert_eq!(m.frames_dropped.get(), 2);
+
+        // An idle window is not lossy, and an all-drop window is fully lossy.
+        let idle = m.take_window(&mut last);
+        assert_eq!(idle, MetricsWindow { queue_depth: 1.0, ..MetricsWindow::default() });
+        assert_eq!(idle.drop_rate(), 0.0);
+        m.frames_in.add(3);
+        m.frames_dropped.add(3);
+        let lossy = m.take_window(&mut last);
+        assert_eq!(lossy.drop_rate(), 1.0);
+    }
+
+    #[test]
+    fn serving_metrics_reset_clears_everything() {
+        let m = ServingMetrics::new();
+        m.frames_in.add(5);
+        m.frames_dropped.add(1);
+        m.queue_depth.set(9.0);
+        m.record_batch_size(4);
+        m.e2e_latency.record_us(500.0);
+        m.reset();
+        assert_eq!(m.frames_in.get(), 0);
+        assert_eq!(m.frames_dropped.get(), 0);
+        assert_eq!(m.batches.get(), 0);
+        assert_eq!(m.queue_depth.get(), 0.0);
+        assert_eq!(m.e2e_latency.count(), 0);
+        assert!(m.e2e_latency.mean_us().is_nan());
+        assert!(m.e2e_latency.percentile_us(50.0).is_nan());
+        assert!(m.mean_batch_size().is_nan());
+        // A reset between snapshots saturates to zero rather than wrapping.
+        let mut last = MetricsWindow { frames_in: 100, ..MetricsWindow::default() };
+        let w = m.take_window(&mut last);
+        assert_eq!(w.frames_in, 0);
     }
 
     #[test]

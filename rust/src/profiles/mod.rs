@@ -135,9 +135,19 @@ pub static ZF_PROFILE: ProgramProfile = ProgramProfile {
 impl ProgramProfile {
     /// Demand vector when the stream runs on a CPU-only placement.
     pub fn demand_cpu(&self, fps: f64, res: Resolution) -> Dims {
+        self.demand_cpu_scaled(fps, res, 1.0)
+    }
+
+    /// [`demand_cpu`](ProgramProfile::demand_cpu) with the *compute* term
+    /// multiplied by `cost_scale` — the serving feedback loop's measured
+    /// cost-per-frame relative to this offline profile
+    /// ([`crate::cameras::DemandFeedback::cost_scale`]). Decode tax and
+    /// memory are fetch-side and stay unscaled. `cost_scale = 1.0` is
+    /// bit-identical to the unscaled vector.
+    pub fn demand_cpu_scaled(&self, fps: f64, res: Resolution, cost_scale: f64) -> Dims {
         let mpix = res.megapixels();
         Dims::new(
-            fps * self.cpu_sec_per_mpix_frame * mpix
+            fps * self.cpu_sec_per_mpix_frame * mpix * cost_scale
                 + self.decode_vcpus_base
                 + self.decode_vcpus_per_fps * fps,
             self.host_mem_gib + self.mem_gib_per_fps * fps,
@@ -148,11 +158,18 @@ impl ProgramProfile {
 
     /// Demand vector when the stream runs on a GPU placement.
     pub fn demand_gpu(&self, fps: f64, res: Resolution) -> Dims {
+        self.demand_gpu_scaled(fps, res, 1.0)
+    }
+
+    /// [`demand_gpu`](ProgramProfile::demand_gpu) with the GPU compute term
+    /// scaled by the feedback loop's measured `cost_scale` (see
+    /// [`demand_cpu_scaled`](ProgramProfile::demand_cpu_scaled)).
+    pub fn demand_gpu_scaled(&self, fps: f64, res: Resolution, cost_scale: f64) -> Dims {
         let mpix = res.megapixels();
         Dims::new(
             self.decode_vcpus_base + self.decode_vcpus_per_fps * fps,
             self.gpu_host_mem_gib + self.mem_gib_per_fps * fps,
-            fps * self.gpu_sec_per_mpix_frame * mpix,
+            fps * self.gpu_sec_per_mpix_frame * mpix * cost_scale,
             self.gpu_mem_gib,
         )
     }
@@ -239,6 +256,27 @@ mod tests {
         assert_eq!("vgg16".parse::<Program>().unwrap(), Program::Vgg16);
         assert_eq!("ZF".parse::<Program>().unwrap(), Program::Zf);
         assert!("yolo".parse::<Program>().is_err());
+    }
+
+    #[test]
+    fn unit_cost_scale_is_bit_identical_and_scaling_moves_only_compute() {
+        for prog in Program::ALL {
+            let p = prog.profile();
+            for (d, s) in [
+                (p.demand_cpu(3.0, Resolution::HD720), p.demand_cpu_scaled(3.0, Resolution::HD720, 1.0)),
+                (p.demand_gpu(3.0, Resolution::HD720), p.demand_gpu_scaled(3.0, Resolution::HD720, 1.0)),
+            ] {
+                assert_eq!(d.as_array().map(f64::to_bits), s.as_array().map(f64::to_bits));
+            }
+            let heavy = p.demand_cpu_scaled(3.0, Resolution::HD720, 2.0);
+            let base = p.demand_cpu(3.0, Resolution::HD720);
+            assert!(heavy.vcpus > base.vcpus, "{}", prog.name());
+            assert_eq!(heavy.mem_gib, base.mem_gib, "memory must not scale");
+            let g_heavy = p.demand_gpu_scaled(3.0, Resolution::HD720, 2.0);
+            let g_base = p.demand_gpu(3.0, Resolution::HD720);
+            assert!(g_heavy.gpus > g_base.gpus);
+            assert_eq!(g_heavy.vcpus, g_base.vcpus, "decode tax must not scale");
+        }
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! Serving→planning feedback: fold per-window serving observations into
+//! per-stream [`DemandFeedback`] for the next re-plan.
+//!
+//! The controller watches [`InstanceWindow`]s from either executor and
+//! maintains, per stream:
+//!
+//! - an **observed cost estimate**: an EWMA of measured analysis seconds
+//!   per frame relative to the declared profile. Published to the planner
+//!   as [`DemandFeedback::cost_scale`] only through a quantize-and-deadband
+//!   step, so EWMA jitter cannot dirty a re-plan (the drift signature hashes
+//!   the published value, not the raw estimate).
+//! - a **backpressure degrade tier** ([`DemandFeedback::shed_tier`]): when
+//!   an instance shows sustained pressure — queue depth or drop rate over
+//!   threshold — its streams shed one fps tier (each tier halves
+//!   [`effective_fps`](crate::cameras::StreamRequest::effective_fps))
+//!   *before* the queue has to drop frames wholesale. Sustained headroom
+//!   restores one tier at a time.
+//!
+//! # Thresholds and hysteresis (defaults)
+//!
+//! | knob | default | meaning |
+//! |------|---------|---------|
+//! | `ewma_alpha` | 0.3 | weight of the newest window's cost ratio |
+//! | `publish_quantum` | 0.05 | published `cost_scale` snaps to this grid |
+//! | `publish_deadband` | 0.05 | relative EWMA move needed to re-publish |
+//! | `scale_min` / `scale_max` | 0.25 / 4.0 | clamp on published scale |
+//! | `queue_high_water` | 0.75 | queue fill fraction that triggers a shed |
+//! | `drop_degrade` | 0.01 | window drop rate that triggers a shed |
+//! | `util_restore` | 0.6 | utilization ceiling that counts as headroom |
+//! | `restore_windows` | 3 | consecutive calm windows before restoring |
+//! | `max_tier` | 3 | deepest shed (fps / 8); never sheds to zero |
+//!
+//! # Worked example: a 0.5 fps camera under pressure
+//!
+//! A camera declared at 0.5 fps lands on an instance whose queue climbs to
+//! 80% of capacity (> `queue_high_water`) during a window. Every stream on
+//! that instance sheds one tier, so the camera drops to tier 1 = 0.25 fps —
+//! its frames are planned and paced at half rate, but none are discarded.
+//! If pressure persists (say its true cost is 4× the declared profile) the
+//! next windows shed further: tier 2 = 0.125 fps, tier 3 = 0.0625 fps, and
+//! there it stays — `max_tier = 3` guarantees a stream is never shed to
+//! zero. Meanwhile the cost EWMA converges toward 4.0 and the published
+//! `cost_scale` follows (clamped at `scale_max`), so the *next re-plan*
+//! provisions real capacity for it. Once the new plan absorbs the load and
+//! the instance shows three consecutive windows (`restore_windows`) with
+//! utilization ≤ 0.6 and zero drops, the camera climbs back one tier per
+//! calm window: 0.125, 0.25, and finally its declared 0.5 fps.
+
+use super::sim::InstanceWindow;
+use crate::cameras::{DemandFeedback, StreamRequest};
+use std::collections::HashMap;
+
+/// Controller thresholds; see the module table for semantics.
+#[derive(Clone, Debug)]
+pub struct FeedbackConfig {
+    pub ewma_alpha: f64,
+    pub publish_quantum: f64,
+    pub publish_deadband: f64,
+    pub scale_min: f64,
+    pub scale_max: f64,
+    pub queue_high_water: f64,
+    pub drop_degrade: f64,
+    pub util_restore: f64,
+    pub restore_windows: u32,
+    pub max_tier: u8,
+}
+
+impl Default for FeedbackConfig {
+    fn default() -> Self {
+        FeedbackConfig {
+            ewma_alpha: 0.3,
+            publish_quantum: 0.05,
+            publish_deadband: 0.05,
+            scale_min: 0.25,
+            scale_max: 4.0,
+            queue_high_water: 0.75,
+            drop_degrade: 0.01,
+            util_restore: 0.6,
+            restore_windows: 3,
+            max_tier: 3,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct StreamState {
+    /// EWMA of measured/declared cost per frame; None until first sample.
+    ewma_ratio: Option<f64>,
+    /// Last published (quantized) cost scale; 1.0 = profile as declared.
+    published_scale: f64,
+    tier: u8,
+    /// Consecutive calm windows observed while shed (resets on pressure).
+    calm_windows: u32,
+}
+
+impl Default for StreamState {
+    fn default() -> Self {
+        StreamState { ewma_ratio: None, published_scale: 1.0, tier: 0, calm_windows: 0 }
+    }
+}
+
+/// Folds serving windows into per-stream demand feedback (module docs).
+#[derive(Default)]
+pub struct FeedbackController {
+    cfg: FeedbackConfig,
+    states: HashMap<usize, StreamState>,
+}
+
+impl FeedbackController {
+    pub fn new(cfg: FeedbackConfig) -> Self {
+        FeedbackController { cfg, states: HashMap::new() }
+    }
+
+    /// Quantize an EWMA estimate onto the publish grid, clamped.
+    fn quantize(&self, ratio: f64) -> f64 {
+        let q = (ratio / self.cfg.publish_quantum).round() * self.cfg.publish_quantum;
+        q.clamp(self.cfg.scale_min, self.cfg.scale_max)
+    }
+
+    /// Fold one batch of observation windows into the per-stream estimates.
+    pub fn observe(&mut self, windows: &[InstanceWindow]) {
+        for w in windows {
+            let queue_frac = if w.queue_capacity == 0 {
+                0.0
+            } else {
+                w.window.queue_depth / w.queue_capacity as f64
+            };
+            let pressured = queue_frac >= self.cfg.queue_high_water
+                || w.window.drop_rate() >= self.cfg.drop_degrade;
+            let calm = !pressured
+                && w.utilization <= self.cfg.util_restore
+                && w.window.frames_dropped == 0;
+            for s in &w.streams {
+                let st = self.states.entry(s.stream_idx).or_default();
+                // Cost estimate: only windows that analyzed frames carry a
+                // measurable ratio.
+                if s.frames_analyzed > 0 && s.declared_cost_s > 0.0 {
+                    let ratio = s.measured_cost_s / s.declared_cost_s;
+                    let ewma = match st.ewma_ratio {
+                        None => ratio,
+                        Some(prev) => {
+                            prev + self.cfg.ewma_alpha * (ratio - prev)
+                        }
+                    };
+                    st.ewma_ratio = Some(ewma);
+                    // Deadband: re-publish only on a real move, then snap to
+                    // the grid so the planner sees a stable value.
+                    let rel = (ewma - st.published_scale).abs() / st.published_scale.max(1e-9);
+                    if rel > self.cfg.publish_deadband {
+                        let q = self.quantize(ewma);
+                        if q != st.published_scale {
+                            st.published_scale = q;
+                        }
+                    }
+                }
+                // Degrade tiers: shed on pressure, restore after sustained
+                // headroom. One tier per window in either direction.
+                if pressured {
+                    st.calm_windows = 0;
+                    if st.tier < self.cfg.max_tier {
+                        st.tier += 1;
+                    }
+                } else if st.tier > 0 && calm {
+                    st.calm_windows += 1;
+                    if st.calm_windows >= self.cfg.restore_windows {
+                        st.tier -= 1;
+                        // Keep credit so each further calm window restores
+                        // another tier (the worked example's one-per-window
+                        // climb) without re-earning the full streak.
+                        st.calm_windows = self.cfg.restore_windows.saturating_sub(1);
+                    }
+                } else if st.tier > 0 {
+                    st.calm_windows = 0;
+                }
+            }
+        }
+    }
+
+    /// Current feedback for one stream (default when never observed).
+    pub fn feedback_for(&self, stream_idx: usize) -> DemandFeedback {
+        match self.states.get(&stream_idx) {
+            Some(st) => DemandFeedback { cost_scale: st.published_scale, shed_tier: st.tier },
+            None => DemandFeedback::default(),
+        }
+    }
+
+    /// Write the published estimates into the request slice (indices match
+    /// the stream indices reported in the observation windows). Returns how
+    /// many requests changed — 0 means the next re-plan is untouched by
+    /// feedback (the zero-delta no-op property).
+    pub fn apply(&self, requests: &mut [StreamRequest]) -> usize {
+        let mut changed = 0;
+        for (i, req) in requests.iter_mut().enumerate() {
+            let fb = self.feedback_for(i);
+            if fb != req.feedback {
+                req.feedback = fb;
+                changed += 1;
+            }
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::MetricsWindow;
+    use crate::server::sim::StreamWindow;
+
+    fn window(
+        queue_depth: f64,
+        dropped: u64,
+        utilization: f64,
+        streams: Vec<StreamWindow>,
+    ) -> InstanceWindow {
+        let analyzed: u64 = streams.iter().map(|s| s.frames_analyzed).sum();
+        InstanceWindow {
+            slot_id: 1,
+            window: MetricsWindow {
+                frames_in: analyzed + dropped,
+                frames_analyzed: analyzed,
+                frames_dropped: dropped,
+                batches: 1,
+                queue_depth,
+            },
+            queue_capacity: 64,
+            utilization,
+            streams,
+        }
+    }
+
+    fn stream(idx: usize, analyzed: u64, measured: f64, declared: f64) -> StreamWindow {
+        StreamWindow {
+            stream_idx: idx,
+            frames_emitted: analyzed,
+            frames_analyzed: analyzed,
+            frames_dropped: 0,
+            measured_cost_s: measured,
+            declared_cost_s: declared,
+        }
+    }
+
+    #[test]
+    fn cost_estimate_converges_and_publishes_quantized() {
+        let mut fc = FeedbackController::new(FeedbackConfig::default());
+        // Frames consistently cost half the declared profile.
+        for _ in 0..10 {
+            fc.observe(&[window(1.0, 0, 0.3, vec![stream(0, 10, 1.0, 2.0)])]);
+        }
+        let fb = fc.feedback_for(0);
+        assert!((fb.cost_scale - 0.5).abs() < 1e-9, "{fb:?}");
+        assert_eq!(fb.shed_tier, 0);
+    }
+
+    #[test]
+    fn deadband_suppresses_jitter() {
+        let mut fc = FeedbackController::new(FeedbackConfig::default());
+        for _ in 0..10 {
+            fc.observe(&[window(1.0, 0, 0.3, vec![stream(0, 10, 1.0, 2.0)])]);
+        }
+        let before = fc.feedback_for(0).cost_scale;
+        // ±3% wobble around the same true ratio: inside the 5% deadband.
+        for (i, r) in [0.515, 0.49, 0.51, 0.492].iter().enumerate() {
+            fc.observe(&[window(1.0, 0, 0.3, vec![stream(0, 10, r * 2.0, 2.0)])]);
+            assert_eq!(fc.feedback_for(0).cost_scale, before, "window {i}");
+        }
+    }
+
+    #[test]
+    fn published_scale_is_clamped() {
+        let mut fc = FeedbackController::new(FeedbackConfig::default());
+        for _ in 0..20 {
+            fc.observe(&[window(1.0, 0, 0.3, vec![stream(0, 10, 100.0, 1.0)])]);
+        }
+        assert_eq!(fc.feedback_for(0).cost_scale, 4.0);
+    }
+
+    #[test]
+    fn pressure_sheds_and_sustained_headroom_restores() {
+        let cfg = FeedbackConfig::default();
+        let mut fc = FeedbackController::new(cfg.clone());
+        // Queue at 80% of 64 (> high water): shed one tier per window, but
+        // never beyond max_tier.
+        for i in 1..=5u8 {
+            fc.observe(&[window(52.0, 0, 0.95, vec![stream(0, 5, 5.0, 5.0)])]);
+            assert_eq!(fc.feedback_for(0).shed_tier, i.min(cfg.max_tier));
+        }
+        // Calm windows: restore one tier per window after the streak.
+        let mut tiers = Vec::new();
+        for _ in 0..6 {
+            fc.observe(&[window(0.0, 0, 0.2, vec![stream(0, 5, 5.0, 5.0)])]);
+            tiers.push(fc.feedback_for(0).shed_tier);
+        }
+        // First two calm windows only build the streak; then one per window.
+        assert_eq!(tiers, vec![3, 3, 2, 1, 0, 0]);
+    }
+
+    #[test]
+    fn drop_rate_alone_triggers_a_shed() {
+        let mut fc = FeedbackController::new(FeedbackConfig::default());
+        // 2% drops with an empty queue still counts as pressure.
+        fc.observe(&[window(0.0, 2, 0.5, vec![stream(0, 98, 9.0, 9.0)])]);
+        assert_eq!(fc.feedback_for(0).shed_tier, 1);
+    }
+
+    #[test]
+    fn apply_reports_exact_change_count_and_zero_on_noop() {
+        use crate::cameras::camera_at;
+        use crate::geo::cities;
+        use crate::profiles::{Program, Resolution};
+        let mut requests: Vec<StreamRequest> = (0..3)
+            .map(|i| {
+                StreamRequest::new(
+                    camera_at(i, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+                    Program::Zf,
+                    1.0,
+                )
+            })
+            .collect();
+        let fc = FeedbackController::new(FeedbackConfig::default());
+        // Nothing observed: everything stays default, nothing changes.
+        assert_eq!(fc.apply(&mut requests), 0);
+        assert!(requests.iter().all(|r| r.feedback.is_default()));
+
+        let mut fc = FeedbackController::new(FeedbackConfig::default());
+        for _ in 0..10 {
+            fc.observe(&[window(1.0, 0, 0.3, vec![stream(1, 10, 3.0, 2.0)])]);
+        }
+        assert_eq!(fc.apply(&mut requests), 1);
+        assert!((requests[1].feedback.cost_scale - 1.5).abs() < 1e-9);
+        // Re-applying the same estimates is a no-op.
+        assert_eq!(fc.apply(&mut requests), 0);
+    }
+
+    #[test]
+    fn degrade_never_silences_a_stream() {
+        let cfg = FeedbackConfig::default();
+        let mut fc = FeedbackController::new(cfg.clone());
+        for _ in 0..50 {
+            fc.observe(&[window(64.0, 100, 1.0, vec![stream(0, 1, 9.0, 1.0)])]);
+        }
+        let fb = fc.feedback_for(0);
+        assert_eq!(fb.shed_tier, cfg.max_tier);
+        // The worked example's 0.5 fps camera at the deepest tier.
+        use crate::cameras::camera_at;
+        use crate::geo::cities;
+        use crate::profiles::{Program, Resolution};
+        let mut req = StreamRequest::new(
+            camera_at(0, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+            Program::Zf,
+            0.5,
+        );
+        req.feedback = fb;
+        assert!((req.effective_fps() - 0.0625).abs() < 1e-12);
+        assert!(req.effective_fps() > 0.0);
+    }
+}

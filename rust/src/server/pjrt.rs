@@ -1,0 +1,360 @@
+//! PJRT-backed serving: stream sources → router → per-instance dynamic
+//! batcher → PJRT executor workers.
+//!
+//! Rust owns the event loop (std threads + channels; no async runtime is
+//! needed at these rates). Each planned instance gets an executor thread
+//! with its own [`Engine`] — mirroring the paper's runtime where each cloud
+//! instance runs the analysis programs for its assigned streams. Frames are
+//! generated at each camera's delivered rate (time-compressed by
+//! `time_scale` so sub-fps cameras can be exercised in seconds), routed to
+//! their planned instance, batched per program, and analyzed.
+//!
+//! The feature-free counterpart is [`super::sim::SimExecutor`], which
+//! exercises the same [`ServeReport`] contract without PJRT artifacts.
+
+use super::source::FrameSource;
+use super::{InstanceReport, ServeConfig, ServeReport};
+use crate::cameras::StreamRequest;
+use crate::coordinator::Plan;
+use crate::error::{Error, Result};
+use crate::metrics::ServingMetrics;
+use crate::runtime::Engine;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A captured frame in flight.
+pub struct FrameEvent {
+    /// Index into the request slice.
+    pub stream_idx: usize,
+    pub program: crate::profiles::Program,
+    pub seq: u64,
+    pub captured_at: Instant,
+    pub pixels: Vec<f32>,
+}
+
+/// Executor thread: one per planned instance.
+fn executor_loop(
+    label: String,
+    engine: Engine,
+    rx: Receiver<FrameEvent>,
+    metrics: Arc<ServingMetrics>,
+    detections: Arc<std::sync::atomic::AtomicU64>,
+    window: Duration,
+) -> Result<()> {
+    use std::collections::HashMap;
+    // Per-program pending queues.
+    let mut pending: HashMap<&'static str, Vec<FrameEvent>> = HashMap::new();
+    let mut deadline: Option<Instant> = None;
+    let frame_len = engine.manifest.input_size * engine.manifest.input_size * 3;
+
+    let flush = |name: &'static str, items: &mut Vec<FrameEvent>| -> Result<()> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let n = items.len();
+        let batch = engine
+            .manifest
+            .batch_for(name, n)
+            .ok_or_else(|| Error::serving(format!("{label}: no artifact for {name}")))?;
+        // Run in chunks of `batch`.
+        let mut idx = 0;
+        while idx < n {
+            let take = (n - idx).min(batch);
+            let chunk = &items[idx..idx + take];
+            let mut buf = Vec::with_capacity(take * frame_len);
+            for ev in chunk {
+                buf.extend_from_slice(&ev.pixels);
+            }
+            let t0 = Instant::now();
+            let det = engine.infer_padded(name, batch, &buf, take)?;
+            let infer_t = t0.elapsed();
+            metrics.infer_latency.record(infer_t);
+            metrics.record_batch_size(take);
+            for (i, ev) in chunk.iter().enumerate() {
+                metrics.e2e_latency.record(ev.captured_at.elapsed());
+                metrics.frames_analyzed.inc();
+                detections.fetch_add(det.count_above(i, 0.0) as u64, Ordering::Relaxed);
+            }
+            idx += take;
+        }
+        items.clear();
+        Ok(())
+    };
+
+    loop {
+        let timeout = match deadline {
+            Some(d) => d.saturating_duration_since(Instant::now()),
+            None => Duration::from_secs(3600),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(ev) => {
+                metrics.frames_in.inc();
+                let name = ev.program.artifact_name();
+                let q = pending.entry(name).or_default();
+                q.push(ev);
+                if deadline.is_none() {
+                    deadline = Some(Instant::now() + window);
+                }
+                // Flush early when a full max batch is queued.
+                let max_batch = engine
+                    .manifest
+                    .batches_for(name)
+                    .last()
+                    .copied()
+                    .unwrap_or(1);
+                if q.len() >= max_batch {
+                    let mut items = std::mem::take(q);
+                    flush(name, &mut items)?;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                for (name, q) in pending.iter_mut() {
+                    let mut items = std::mem::take(q);
+                    flush(name, &mut items)?;
+                }
+                deadline = None;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                for (name, q) in pending.iter_mut() {
+                    let mut items = std::mem::take(q);
+                    flush(name, &mut items)?;
+                }
+                return Ok(());
+            }
+        }
+        metrics
+            .queue_depth
+            .set(pending.values().map(|q| q.len()).sum::<usize>() as f64);
+    }
+}
+
+/// Serve a plan's workload for `cfg.duration_s` virtual seconds.
+///
+/// `delivered_fps` should come from [`Plan::delivered_fps`].
+pub fn serve(
+    plan: &Plan,
+    requests: &[StreamRequest],
+    delivered_fps: &[f64],
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    if plan.instances.is_empty() {
+        return Err(Error::serving("plan has no instances"));
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let detections = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    // Executors signal here once their engine is compiled; the frame clock
+    // starts only then (otherwise compile time shows up as queueing latency).
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+
+    // Spawn one executor per planned instance.
+    let mut senders: Vec<SyncSender<FrameEvent>> = Vec::new();
+    let mut handles = Vec::new();
+    let mut per_instance_metrics = Vec::new();
+    let mut route = vec![usize::MAX; requests.len()]; // stream -> instance
+    for (ii, inst) in plan.instances.iter().enumerate() {
+        for &s in &inst.streams {
+            route[s] = ii;
+        }
+        // Load only the variants this instance needs (all batch sizes of
+        // each program, so the batcher can pick).
+        let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+        let mut needed: Vec<(String, usize)> = Vec::new();
+        for &s in &inst.streams {
+            let name = requests[s].program.artifact_name();
+            if !needed.iter().any(|(n, _)| n == name) {
+                for b in manifest.batches_for(name) {
+                    needed.push((name.to_string(), b));
+                }
+            }
+        }
+        let (tx, rx) = sync_channel::<FrameEvent>(cfg.queue_capacity);
+        let metrics = Arc::new(ServingMetrics::new());
+        per_instance_metrics.push(metrics.clone());
+        let label = inst.label.clone();
+        let window = Duration::from_millis(cfg.batch_window_ms);
+        let det = detections.clone();
+        let artifacts_dir = cfg.artifacts_dir.clone();
+        let ready = ready_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            // The PJRT wrappers are not Send: each executor thread builds its
+            // own engine (its own CPU client + compiled executables).
+            let needed_refs: Vec<(&str, usize)> =
+                needed.iter().map(|(n, b)| (n.as_str(), *b)).collect();
+            let engine = Engine::load_filtered(&artifacts_dir, Some(&needed_refs))?;
+            let _ = ready.send(());
+            executor_loop(label, engine, rx, metrics, det, window)
+        }));
+        senders.push(tx);
+    }
+    if route.iter().any(|&r| r == usize::MAX) {
+        return Err(Error::serving("a stream has no planned instance"));
+    }
+    // Wait for every executor's engine (bounded: compile is seconds/model).
+    drop(ready_tx);
+    for _ in 0..plan.instances.len() {
+        ready_rx
+            .recv_timeout(Duration::from_secs(300))
+            .map_err(|_| Error::serving("executor failed to initialize"))?;
+    }
+    let started = Instant::now();
+
+    // Generator: emit frames at each stream's delivered fps (virtual clock).
+    let mut sources: Vec<FrameSource> = requests
+        .iter()
+        .enumerate()
+        .map(|(i, r)| FrameSource::new(i as u64 ^ cfg.seed, r.camera.resolution, 64))
+        .collect();
+    // Event queue of (next virtual time, stream).
+    let mut next_at: Vec<f64> = delivered_fps
+        .iter()
+        .map(|&f| if f > 0.0 { 1.0 / f } else { f64::INFINITY })
+        .collect();
+    let mut seq = vec![0u64; requests.len()];
+    let mut dropped_total = 0u64;
+
+    loop {
+        // Earliest next frame.
+        let (s, &t) = match next_at
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_finite())
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        {
+            Some(x) => x,
+            None => break,
+        };
+        if t > cfg.duration_s {
+            break;
+        }
+        // Pace real time: virtual t maps to real t/scale.
+        let real_target = Duration::from_secs_f64(t / cfg.time_scale);
+        let elapsed = started.elapsed();
+        if real_target > elapsed {
+            std::thread::sleep(real_target - elapsed);
+        }
+        let ev = FrameEvent {
+            stream_idx: s,
+            program: requests[s].program,
+            seq: seq[s],
+            captured_at: Instant::now(),
+            pixels: sources[s].next_frame(),
+        };
+        seq[s] += 1;
+        match senders[route[s]].try_send(ev) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                per_instance_metrics[route[s]].frames_dropped.inc();
+                dropped_total += 1;
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                return Err(Error::serving("executor died"));
+            }
+        }
+        next_at[s] = t + 1.0 / delivered_fps[s];
+    }
+
+    // Close inputs, drain executors.
+    drop(senders);
+    for h in handles {
+        h.join()
+            .map_err(|_| Error::serving("executor panicked"))??;
+    }
+    stop.store(true, Ordering::Relaxed);
+
+    let real_duration_s = started.elapsed().as_secs_f64();
+    let mut instances = Vec::new();
+    let mut total_analyzed = 0;
+    for (inst, m) in plan.instances.iter().zip(&per_instance_metrics) {
+        total_analyzed += m.frames_analyzed.get();
+        instances.push(InstanceReport {
+            slot_id: inst.slot_id,
+            label: inst.label.clone(),
+            streams: inst.streams.len(),
+            frames_in: m.frames_in.get(),
+            frames_analyzed: m.frames_analyzed.get(),
+            frames_dropped: m.frames_dropped.get(),
+            batches: m.batches.get(),
+            mean_batch: m.mean_batch_size(),
+            infer_mean_ms: m.infer_latency.mean_us() / 1e3,
+            e2e_p50_ms: m.e2e_latency.percentile_us(50.0) / 1e3,
+            e2e_p99_ms: m.e2e_latency.percentile_us(99.0) / 1e3,
+        });
+    }
+    Ok(ServeReport {
+        instances,
+        virtual_duration_s: cfg.duration_s,
+        real_duration_s,
+        total_frames_analyzed: total_analyzed,
+        total_frames_dropped: dropped_total,
+        virtual_throughput_fps: total_analyzed as f64 / cfg.duration_s,
+        plan_cost_per_hour: plan.cost_per_hour,
+        detections: detections.load(Ordering::Relaxed),
+        streams_shed: requests.iter().filter(|r| r.feedback.shed_tier > 0).count(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cameras::{camera_at, StreamRequest};
+    use crate::catalog::Catalog;
+    use crate::coordinator::{Planner, PlannerConfig};
+    use crate::geo::cities;
+    use crate::profiles::{Program, Resolution};
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn small_plan() -> (crate::coordinator::Plan, Vec<StreamRequest>) {
+        let requests = vec![
+            StreamRequest::new(
+                camera_at(0, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+                Program::Zf,
+                2.0,
+            ),
+            StreamRequest::new(
+                camera_at(1, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+                Program::Vgg16,
+                1.0,
+            ),
+        ];
+        let catalog =
+            Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let plan = Planner::new(catalog, PlannerConfig::st3()).plan(&requests).unwrap();
+        (plan, requests)
+    }
+
+    #[test]
+    fn serve_small_workload_end_to_end() {
+        let (plan, requests) = small_plan();
+        let fps = plan.delivered_fps(&requests);
+        let cfg = ServeConfig {
+            artifacts_dir: artifacts_dir(),
+            duration_s: 10.0,
+            time_scale: 20.0,
+            batch_window_ms: 20,
+            queue_capacity: 64,
+            seed: 7,
+        };
+        let report = serve(&plan, &requests, &fps, &cfg).unwrap();
+        // 10 virtual seconds at 2 + 1 fps ≈ 30 frames expected.
+        assert!(report.total_frames_analyzed >= 20, "{report:?}");
+        assert!(report.drop_rate() < 0.2, "{report:?}");
+        assert!(report.virtual_throughput_fps > 2.0);
+        assert!(report.plan_cost_per_hour > 0.0);
+        let sum: u64 = report.instances.iter().map(|i| i.frames_analyzed).sum();
+        assert_eq!(sum, report.total_frames_analyzed);
+    }
+
+    #[test]
+    fn serve_rejects_empty_plan() {
+        let (plan, requests) = small_plan();
+        let mut empty = plan.clone();
+        empty.instances.clear();
+        let cfg = ServeConfig { artifacts_dir: artifacts_dir(), ..Default::default() };
+        assert!(serve(&empty, &requests, &[1.0, 1.0], &cfg).is_err());
+    }
+}

@@ -1,0 +1,439 @@
+//! Deterministic serving simulation — the feature-free executor.
+//!
+//! [`SimExecutor`] replays a plan's serving loop as a tick-based fluid
+//! model: each planned instance has a bounded input FIFO and a per-tick
+//! service budget derived from its catalog capacity; each assigned stream
+//! emits frames at its delivered fps via a fractional credit accumulator.
+//! There are no threads, no RNG, and no wall clock, so two runs over the
+//! same inputs are bit-identical — this is what the closed-loop bench and
+//! tier-1 tests drive under default features (the PJRT path in
+//! `super::pjrt` needs compiled artifacts).
+//!
+//! The *true* per-frame cost of a stream is its declared profile cost
+//! multiplied by a caller-supplied `true_cost_scale` — 1.0 models an honest
+//! declaration; < 1.0 an over-declared profile (actual frames are cheaper);
+//! > 1.0 an under-declared one (queues build, frames drop). Per-window
+//! [`StreamWindow`] observations always report the *unscaled* declared cost
+//! next to the measured cost, so the feedback controller can estimate the
+//! ratio without knowing the ground truth.
+
+use super::{InstanceReport, ServeReport};
+use crate::cameras::StreamRequest;
+use crate::catalog::Catalog;
+use crate::coordinator::{Plan, SlotId};
+use crate::error::{Error, Result};
+use crate::metrics::{MetricsWindow, ServingMetrics};
+use std::collections::VecDeque;
+
+/// Simulation knobs.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Virtual seconds to simulate.
+    pub duration_s: f64,
+    /// Simulation step. Frames arriving within one tick are indistinguishable.
+    pub tick_s: f64,
+    /// Observation-window length; one [`InstanceWindow`] per instance per
+    /// window is emitted for the feedback controller.
+    pub window_s: f64,
+    /// Per-instance input FIFO depth; a full queue evicts its *oldest*
+    /// frame (counted as dropped for that frame's stream).
+    pub queue_capacity: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { duration_s: 60.0, tick_s: 0.25, window_s: 5.0, queue_capacity: 64 }
+    }
+}
+
+/// Per-stream observations over one window on one instance.
+#[derive(Clone, Debug)]
+pub struct StreamWindow {
+    /// Index into the request slice.
+    pub stream_idx: usize,
+    pub frames_emitted: u64,
+    pub frames_analyzed: u64,
+    pub frames_dropped: u64,
+    /// Measured (true) analysis seconds consumed by this stream's analyzed
+    /// frames — what a real executor would report from timers.
+    pub measured_cost_s: f64,
+    /// What the declared profile predicts for the same analyzed frames
+    /// (always unscaled by feedback; the controller's denominator).
+    pub declared_cost_s: f64,
+}
+
+/// One instance's observations over one window — the unit the feedback
+/// controller consumes ([`super::feedback::FeedbackController::observe`]).
+#[derive(Clone, Debug)]
+pub struct InstanceWindow {
+    pub slot_id: SlotId,
+    /// Instance-level counter deltas for the window (queue depth is the
+    /// end-of-window reading).
+    pub window: MetricsWindow,
+    pub queue_capacity: usize,
+    /// Served seconds / available service budget over the window.
+    pub utilization: f64,
+    pub streams: Vec<StreamWindow>,
+}
+
+/// The whole simulated run.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    pub report: ServeReport,
+    /// Every instance window, in time order (all instances of window 0,
+    /// then window 1, ...).
+    pub windows: Vec<InstanceWindow>,
+}
+
+struct QueuedFrame {
+    stream: usize,
+    emitted_at: f64,
+}
+
+/// Deterministic per-instance serving simulation (module docs).
+pub struct SimExecutor<'a> {
+    catalog: &'a Catalog,
+    plan: &'a Plan,
+    requests: &'a [StreamRequest],
+    delivered_fps: Vec<f64>,
+    true_cost_scale: Vec<f64>,
+    cfg: SimConfig,
+}
+
+impl<'a> SimExecutor<'a> {
+    /// `true_cost_scale[i]` multiplies stream `i`'s declared per-frame cost
+    /// to obtain its actual cost (1.0 = honest). Must match `requests` in
+    /// length; the plan must assign every stream.
+    pub fn new(
+        catalog: &'a Catalog,
+        plan: &'a Plan,
+        requests: &'a [StreamRequest],
+        true_cost_scale: &[f64],
+        cfg: SimConfig,
+    ) -> Result<Self> {
+        if plan.instances.is_empty() {
+            return Err(Error::serving("plan has no instances"));
+        }
+        if true_cost_scale.len() != requests.len() {
+            return Err(Error::serving("true_cost_scale length != requests length"));
+        }
+        let mut routed = vec![false; requests.len()];
+        for inst in &plan.instances {
+            for &s in &inst.streams {
+                routed[s] = true;
+            }
+        }
+        if routed.iter().any(|&r| !r) {
+            return Err(Error::serving("a stream has no planned instance"));
+        }
+        Ok(SimExecutor {
+            catalog,
+            plan,
+            requests,
+            delivered_fps: plan.delivered_fps(requests),
+            true_cost_scale: true_cost_scale.to_vec(),
+            cfg,
+        })
+    }
+
+    /// Declared per-frame cost of stream `s` on instance `inst`, in the
+    /// instance's service-budget unit (GPU-seconds on GPU instances after
+    /// the device speed factor, vcpu-seconds on CPU instances).
+    fn declared_frame_cost(&self, inst_idx: usize, s: usize) -> f64 {
+        let inst = &self.plan.instances[inst_idx];
+        let req = &self.requests[s];
+        let profile = req.program.profile();
+        let mpix = req.camera.resolution.megapixels();
+        if inst.has_gpu {
+            profile.gpu_sec_per_mpix_frame * mpix / self.catalog.types[inst.type_idx].gpu_speed
+        } else {
+            profile.cpu_sec_per_mpix_frame * mpix
+        }
+    }
+
+    /// Simulate `cfg.duration_s` virtual seconds; deterministic.
+    pub fn run(&self) -> Result<SimOutcome> {
+        let cfg = &self.cfg;
+        let n_req = self.requests.len();
+        let n_inst = self.plan.instances.len();
+        let ticks = (cfg.duration_s / cfg.tick_s).ceil() as u64;
+        let ticks_per_window = ((cfg.window_s / cfg.tick_s).round() as u64).max(1);
+
+        let mut route = vec![usize::MAX; n_req];
+        for (ii, inst) in self.plan.instances.iter().enumerate() {
+            for &s in &inst.streams {
+                route[s] = ii;
+            }
+        }
+        // Per-instance service capacity per second (GPU or vcpu units).
+        let budget_rate: Vec<f64> = self
+            .plan
+            .instances
+            .iter()
+            .map(|inst| {
+                let cap = self.catalog.types[inst.type_idx].capacity;
+                if inst.has_gpu {
+                    cap.gpus
+                } else {
+                    cap.vcpus
+                }
+            })
+            .collect();
+        let declared: Vec<f64> =
+            (0..n_req).map(|s| self.declared_frame_cost(route[s], s)).collect();
+        let true_cost: Vec<f64> =
+            (0..n_req).map(|s| declared[s] * self.true_cost_scale[s].max(0.0)).collect();
+
+        let metrics: Vec<ServingMetrics> = (0..n_inst).map(|_| ServingMetrics::new()).collect();
+        let mut last_window: Vec<MetricsWindow> = vec![MetricsWindow::default(); n_inst];
+        let mut queues: Vec<VecDeque<QueuedFrame>> = (0..n_inst).map(|_| VecDeque::new()).collect();
+        let mut credit = vec![0.0f64; n_req];
+        let mut carry = vec![0.0f64; n_inst];
+        // Window accumulators.
+        let mut w_emitted = vec![0u64; n_req];
+        let mut w_analyzed = vec![0u64; n_req];
+        let mut w_dropped = vec![0u64; n_req];
+        let mut w_measured = vec![0.0f64; n_req];
+        let mut w_declared = vec![0.0f64; n_req];
+        let mut w_busy = vec![0.0f64; n_inst];
+        let mut windows = Vec::new();
+
+        for tick in 0..ticks {
+            let now = (tick + 1) as f64 * cfg.tick_s;
+            // Arrivals: fractional credit accumulates per stream.
+            for s in 0..n_req {
+                credit[s] += self.delivered_fps[s] * cfg.tick_s;
+                while credit[s] >= 1.0 {
+                    credit[s] -= 1.0;
+                    let ii = route[s];
+                    metrics[ii].frames_in.inc();
+                    w_emitted[s] += 1;
+                    if queues[ii].len() >= cfg.queue_capacity {
+                        // Backpressure: evict the oldest queued frame.
+                        if let Some(old) = queues[ii].pop_front() {
+                            metrics[ii].frames_dropped.inc();
+                            w_dropped[old.stream] += 1;
+                        }
+                    }
+                    queues[ii].push_back(QueuedFrame { stream: s, emitted_at: now - cfg.tick_s });
+                }
+            }
+            // Service: spend this tick's budget (plus carry) FIFO-first.
+            for ii in 0..n_inst {
+                let mut budget = carry[ii] + budget_rate[ii] * cfg.tick_s;
+                let mut served = 0usize;
+                while let Some(front) = queues[ii].front() {
+                    let cost = true_cost[front.stream];
+                    if cost > budget {
+                        break;
+                    }
+                    budget -= cost;
+                    let f = queues[ii].pop_front().unwrap();
+                    served += 1;
+                    metrics[ii].frames_analyzed.inc();
+                    metrics[ii].infer_latency.record_us(cost * 1e6);
+                    metrics[ii].e2e_latency.record_us((now - f.emitted_at).max(0.0) * 1e6);
+                    w_analyzed[f.stream] += 1;
+                    w_measured[f.stream] += cost;
+                    w_declared[f.stream] += declared[f.stream];
+                    w_busy[ii] += cost;
+                }
+                if served > 0 {
+                    metrics[ii].record_batch_size(served);
+                }
+                // Unused budget carries only while work is waiting; idle
+                // capacity is lost (a real executor cannot bank idle time).
+                carry[ii] = if queues[ii].is_empty() { 0.0 } else { budget };
+                metrics[ii].queue_depth.set(queues[ii].len() as f64);
+            }
+            // Window roll-up.
+            if (tick + 1) % ticks_per_window == 0 || tick + 1 == ticks {
+                let window_s = cfg.tick_s * (((tick % ticks_per_window) + 1) as f64);
+                for (ii, inst) in self.plan.instances.iter().enumerate() {
+                    let streams = inst
+                        .streams
+                        .iter()
+                        .map(|&s| StreamWindow {
+                            stream_idx: s,
+                            frames_emitted: w_emitted[s],
+                            frames_analyzed: w_analyzed[s],
+                            frames_dropped: w_dropped[s],
+                            measured_cost_s: w_measured[s],
+                            declared_cost_s: w_declared[s],
+                        })
+                        .collect();
+                    windows.push(InstanceWindow {
+                        slot_id: inst.slot_id,
+                        window: metrics[ii].take_window(&mut last_window[ii]),
+                        queue_capacity: cfg.queue_capacity,
+                        utilization: w_busy[ii] / (budget_rate[ii] * window_s).max(1e-12),
+                        streams,
+                    });
+                    w_busy[ii] = 0.0;
+                }
+                w_emitted.fill(0);
+                w_analyzed.fill(0);
+                w_dropped.fill(0);
+                w_measured.fill(0.0);
+                w_declared.fill(0.0);
+            }
+        }
+
+        let mut instances = Vec::new();
+        let mut total_analyzed = 0;
+        let mut total_dropped = 0;
+        for (inst, m) in self.plan.instances.iter().zip(&metrics) {
+            total_analyzed += m.frames_analyzed.get();
+            total_dropped += m.frames_dropped.get();
+            instances.push(InstanceReport {
+                slot_id: inst.slot_id,
+                label: inst.label.clone(),
+                streams: inst.streams.len(),
+                frames_in: m.frames_in.get(),
+                frames_analyzed: m.frames_analyzed.get(),
+                frames_dropped: m.frames_dropped.get(),
+                batches: m.batches.get(),
+                mean_batch: m.mean_batch_size(),
+                infer_mean_ms: m.infer_latency.mean_us() / 1e3,
+                e2e_p50_ms: m.e2e_latency.percentile_us(50.0) / 1e3,
+                e2e_p99_ms: m.e2e_latency.percentile_us(99.0) / 1e3,
+            });
+        }
+        Ok(SimOutcome {
+            report: ServeReport {
+                instances,
+                virtual_duration_s: cfg.duration_s,
+                real_duration_s: 0.0, // simulated; no wall clock
+                total_frames_analyzed: total_analyzed,
+                total_frames_dropped: total_dropped,
+                virtual_throughput_fps: total_analyzed as f64 / cfg.duration_s,
+                plan_cost_per_hour: self.plan.cost_per_hour,
+                detections: 0,
+                streams_shed: self
+                    .requests
+                    .iter()
+                    .filter(|r| r.feedback.shed_tier > 0)
+                    .count(),
+            },
+            windows,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cameras::camera_at;
+    use crate::coordinator::{Planner, PlannerConfig};
+    use crate::geo::cities;
+    use crate::profiles::{Program, Resolution};
+
+    fn small_workload() -> (Catalog, Plan, Vec<StreamRequest>) {
+        let requests = vec![
+            StreamRequest::new(
+                camera_at(0, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+                Program::Zf,
+                2.0,
+            ),
+            StreamRequest::new(
+                camera_at(1, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+                Program::Vgg16,
+                1.0,
+            ),
+        ];
+        let catalog =
+            Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let plan = Planner::new(catalog.clone(), PlannerConfig::st3()).plan(&requests).unwrap();
+        (catalog, plan, requests)
+    }
+
+    #[test]
+    fn honest_declarations_do_not_drop() {
+        let (catalog, plan, requests) = small_workload();
+        let scale = vec![1.0; requests.len()];
+        let sim =
+            SimExecutor::new(&catalog, &plan, &requests, &scale, SimConfig::default()).unwrap();
+        let out = sim.run().unwrap();
+        // 60 virtual seconds at 2 + 1 fps ≈ 180 frames.
+        assert!(out.report.total_frames_analyzed >= 150, "{:?}", out.report);
+        assert!(out.report.drop_rate() < 0.05, "{:?}", out.report);
+        assert_eq!(out.report.streams_shed, 0);
+        let sum: u64 = out.report.instances.iter().map(|i| i.frames_analyzed).sum();
+        assert_eq!(sum, out.report.total_frames_analyzed);
+    }
+
+    #[test]
+    fn simulation_is_deterministic() {
+        let (catalog, plan, requests) = small_workload();
+        let scale = vec![1.3, 0.8];
+        let run = || {
+            SimExecutor::new(&catalog, &plan, &requests, &scale, SimConfig::default())
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.report.total_frames_analyzed, b.report.total_frames_analyzed);
+        assert_eq!(a.report.total_frames_dropped, b.report.total_frames_dropped);
+        assert_eq!(a.windows.len(), b.windows.len());
+        for (wa, wb) in a.windows.iter().zip(&b.windows) {
+            assert_eq!(wa.window, wb.window);
+            assert_eq!(wa.utilization.to_bits(), wb.utilization.to_bits());
+            for (sa, sb) in wa.streams.iter().zip(&wb.streams) {
+                assert_eq!(sa.frames_analyzed, sb.frames_analyzed);
+                assert_eq!(sa.measured_cost_s.to_bits(), sb.measured_cost_s.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn windows_expose_the_true_cost_ratio() {
+        let (catalog, plan, requests) = small_workload();
+        // Both streams over-declared 2x: true frames cost half the profile.
+        let scale = vec![0.5; requests.len()];
+        let sim =
+            SimExecutor::new(&catalog, &plan, &requests, &scale, SimConfig::default()).unwrap();
+        let out = sim.run().unwrap();
+        let mut checked = 0;
+        for w in &out.windows {
+            for s in &w.streams {
+                if s.frames_analyzed > 0 {
+                    let ratio = s.measured_cost_s / s.declared_cost_s;
+                    assert!((ratio - 0.5).abs() < 1e-9, "ratio={ratio}");
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 0);
+    }
+
+    #[test]
+    fn under_declared_streams_build_queues_and_drop() {
+        let (catalog, plan, requests) = small_workload();
+        // True cost far above declared: service cannot keep up.
+        let scale = vec![20.0; requests.len()];
+        let sim =
+            SimExecutor::new(&catalog, &plan, &requests, &scale, SimConfig::default()).unwrap();
+        let out = sim.run().unwrap();
+        assert!(out.report.total_frames_dropped > 0, "{:?}", out.report);
+        assert!(out.report.drop_rate() > 0.2, "{:?}", out.report);
+        // Late windows should show a deep queue on at least one instance.
+        let deep = out
+            .windows
+            .iter()
+            .any(|w| w.window.queue_depth >= 0.5 * w.queue_capacity as f64);
+        assert!(deep);
+    }
+
+    #[test]
+    fn rejects_mismatched_inputs() {
+        let (catalog, plan, requests) = small_workload();
+        assert!(SimExecutor::new(&catalog, &plan, &requests, &[1.0], SimConfig::default()).is_err());
+        let mut empty = plan.clone();
+        empty.instances.clear();
+        assert!(
+            SimExecutor::new(&catalog, &empty, &requests, &[1.0, 1.0], SimConfig::default())
+                .is_err()
+        );
+    }
+}

@@ -386,3 +386,49 @@ fn dims_catalog_geo_contract() {
         assert!((-180.0..=180.0).contains(&r.location.lon));
     }
 }
+
+#[test]
+fn bench_closedloop_fields_are_populated_and_schema_checked() {
+    // `bench_closedloop` and this test call the same library scenarios
+    // (`camflow::bench::closedloop::run`), so the BENCH_closedloop.json
+    // fields cannot drift from what is checked here. Round-trip through
+    // util::json to pin the serialized schema.
+    use camflow::util::json;
+    let outcome = camflow::bench::closedloop::run();
+    let doc = outcome.to_json();
+    let parsed = json::parse(&json::to_string_pretty(&doc)).unwrap();
+    for key in [
+        "over_declared_usd_per_hour",
+        "over_closedloop_usd_per_hour",
+        "over_final_drop_rate",
+        "over_fleet_util_declared",
+        "over_fleet_util_closed",
+        "over_feedback_streams",
+        "under_declared_usd_per_hour",
+        "under_corrected_usd_per_hour",
+        "under_epoch0_drop_rate",
+        "under_final_drop_rate",
+        "under_nofeedback_drop_rate",
+        "under_max_shed_tier",
+        "under_peak_streams_shed",
+        "under_degraded_tier_streams",
+    ] {
+        let v = parsed
+            .get_f64(key)
+            .unwrap_or_else(|e| panic!("BENCH_closedloop field {key} missing: {e}"));
+        assert!(v.is_finite() && v >= 0.0, "{key} = {v}");
+    }
+    // The acceptance bars, re-checked on the parsed document: an
+    // over-declared fleet gets no costlier, an under-declared fleet's drop
+    // rate stays bounded while the open-loop control keeps dropping, and
+    // the new solver counters actually counted.
+    assert!(
+        parsed.get_f64("over_closedloop_usd_per_hour").unwrap()
+            <= parsed.get_f64("over_declared_usd_per_hour").unwrap() + 1e-9
+    );
+    assert!(parsed.get_f64("under_final_drop_rate").unwrap() <= 0.01);
+    assert!(parsed.get_f64("under_nofeedback_drop_rate").unwrap() > 0.1);
+    assert!(parsed.get_f64("under_max_shed_tier").unwrap() >= 1.0);
+    assert!(parsed.get_f64("over_feedback_streams").unwrap() > 0.0);
+    assert!(parsed.get_f64("under_degraded_tier_streams").unwrap() > 0.0);
+}

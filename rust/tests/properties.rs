@@ -1496,3 +1496,153 @@ fn prop_expand_matching_keeps_the_optimal_stream_count() {
         },
     );
 }
+
+/// Explicitly-defaulted feedback through an empty controller is
+/// indistinguishable from no feedback at all: the warm re-plan sees a
+/// bit-identical workload, reports a zero feedback delta, and produces a
+/// bit-identical plan with an untouched fleet.
+#[test]
+fn prop_zero_feedback_delta_is_plan_noop() {
+    use camflow::cameras::DemandFeedback;
+    use camflow::coordinator::adaptive::AdaptiveManager;
+    use camflow::server::feedback::{FeedbackConfig, FeedbackController};
+    let catalog =
+        Catalog::builtin().restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+    check(
+        0xFEEDBAC,
+        15,
+        |rng: &mut Rng| {
+            // Flat encoding: pairs of (is_vgg, fps*100).
+            let n = 1 + rng.index(5);
+            let mut v = Vec::with_capacity(n * 2);
+            for _ in 0..n {
+                v.push(rng.index(2) as u64);
+                v.push((rng.range_f64(0.2, 1.5) * 100.0).round() as u64);
+            }
+            v
+        },
+        |spec: &Vec<u64>| {
+            let requests: Vec<StreamRequest> = spec
+                .chunks_exact(2)
+                .filter(|c| c[1] > 0)
+                .enumerate()
+                .map(|(i, c)| {
+                    StreamRequest::new(
+                        camera_at(i as u64, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+                        if c[0] == 1 { Program::Vgg16 } else { Program::Zf },
+                        c[1] as f64 / 100.0,
+                    )
+                })
+                .collect();
+            if requests.is_empty() {
+                return Ok(());
+            }
+            let mut mgr = AdaptiveManager::new(Planner::new(catalog.clone(), PlannerConfig::st3()));
+            let Ok(first) = mgr.replan(requests.clone()) else {
+                return Ok(()); // infeasible workloads are not the property's concern
+            };
+            // Re-plan the same workload with every feedback field written
+            // explicitly to its default, through a controller that has
+            // observed nothing.
+            let mut defaulted = requests;
+            for r in &mut defaulted {
+                r.feedback = DemandFeedback::default();
+            }
+            let fc = FeedbackController::new(FeedbackConfig::default());
+            let (report, changed) =
+                mgr.replan_with_feedback(defaulted, &fc).map_err(|e| e.to_string())?;
+            if changed != 0 {
+                return Err(format!("empty controller changed {changed} requests"));
+            }
+            if report.cost_after.to_bits() != first.cost_after.to_bits() {
+                return Err(format!(
+                    "zero-delta re-plan changed cost: {} -> {}",
+                    first.cost_after, report.cost_after
+                ));
+            }
+            if report.streams_moved != 0
+                || !report.provision.is_empty()
+                || !report.terminate.is_empty()
+            {
+                return Err(format!("zero-delta re-plan touched the fleet: {report:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Under any observation sequence the degrade controller never exceeds its
+/// configured deepest tier, never publishes a cost scale outside the clamp,
+/// and never sheds a stream to zero (or above its declared) fps.
+#[test]
+fn prop_degrade_tiers_never_silence_streams() {
+    use camflow::metrics::MetricsWindow;
+    use camflow::server::feedback::{FeedbackConfig, FeedbackController};
+    use camflow::server::sim::{InstanceWindow, StreamWindow};
+    check(
+        0xDE64ADE,
+        40,
+        |rng: &mut Rng| {
+            // Flat encoding per window: (queue depth, dropped, util%,
+            // analyzed, measured cost x100).
+            let wins = 1 + rng.index(12);
+            let mut v = Vec::with_capacity(wins * 5);
+            for _ in 0..wins {
+                v.push(rng.index(65) as u64);
+                v.push(rng.index(4) as u64);
+                v.push(rng.index(130) as u64);
+                v.push(1 + rng.index(20) as u64);
+                v.push((rng.range_f64(0.01, 30.0) * 100.0).round() as u64);
+            }
+            v
+        },
+        |spec: &Vec<u64>| {
+            let cfg = FeedbackConfig::default();
+            let mut fc = FeedbackController::new(cfg.clone());
+            let mut req = StreamRequest::new(
+                camera_at(0, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+                Program::Zf,
+                0.2,
+            );
+            for c in spec.chunks_exact(5) {
+                let (depth, dropped, util, analyzed) = (c[0], c[1], c[2], c[3]);
+                let stream = StreamWindow {
+                    stream_idx: 0,
+                    frames_emitted: analyzed + dropped,
+                    frames_analyzed: analyzed,
+                    frames_dropped: dropped,
+                    measured_cost_s: c[4] as f64 / 100.0,
+                    declared_cost_s: analyzed as f64 * 0.5,
+                };
+                fc.observe(&[InstanceWindow {
+                    slot_id: 7,
+                    window: MetricsWindow {
+                        frames_in: analyzed + dropped,
+                        frames_analyzed: analyzed,
+                        frames_dropped: dropped,
+                        batches: 1,
+                        queue_depth: depth as f64,
+                    },
+                    queue_capacity: 64,
+                    utilization: util as f64 / 100.0,
+                    streams: vec![stream],
+                }]);
+                let fb = fc.feedback_for(0);
+                if fb.shed_tier > cfg.max_tier {
+                    return Err(format!("tier {} above max {}", fb.shed_tier, cfg.max_tier));
+                }
+                if !(cfg.scale_min..=cfg.scale_max).contains(&fb.cost_scale) {
+                    return Err(format!("published scale {} escaped the clamp", fb.cost_scale));
+                }
+                req.feedback = fb;
+                if req.effective_fps() <= 0.0 {
+                    return Err(format!("stream shed to zero fps: {fb:?}"));
+                }
+                if req.effective_fps() > req.desired_fps {
+                    return Err("shed raised the frame rate".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
