@@ -15,6 +15,11 @@
 //!   construction (fps >= 32 keeps the 8 basins' coverage circles in
 //!   separate region clusters), so the gate is expected to hold and is
 //!   asserted, not just recorded.
+//! * **multi-group structural deltas** (deterministic) — a whole fps tier
+//!   swapping in one basin (every component loses its 32 fps group and
+//!   gains a 44 fps group at once) must take the structural-delta warm
+//!   path: ghost + appeared counters are asserted, and cost parity against
+//!   the unsharded reference holds under the same certified gate.
 //! * **dirty-shard-bounded wall-clock** — the all-shards price fan-out
 //!   (8 cold re-plans) must cost >= 5x the one-dirty-shard warm re-plan.
 //!   This is the headline event-driven win and is asserted unconditionally;
@@ -212,11 +217,55 @@ fn main() {
         cold.cost_per_hour
     );
 
+    // Mixed vanish+appear: basin 0's whole 32 fps tier moves to 44 fps in
+    // one re-plan. Per component the 32 fps group vanishes entirely while a
+    // 44 fps group appears — the multi-group structural-delta shape: the
+    // vanished group re-enters as a zero-coverage ghost and the appeared
+    // group arrives by block-basis translation, in one certified-or-cold
+    // warm solve (counter-asserted below).
+    let per_basin: usize = TIERS.len() * CAMS_PER_TIER;
+    let basin0_len = METROS_PER_BASIN[0] * per_basin;
+    let mut w_mixed = w0.clone();
+    for r in &mut w_mixed[..basin0_len] {
+        if r.desired_fps == TIERS[0] {
+            r.desired_fps = 44.0;
+        }
+    }
+    let (mixed, warm_mixed_ms) = round(&mut sp, &w_mixed);
+    assert_eq!(mixed.dirty_shards, 1, "the tier swap dirties only basin 0");
+    let mixed_stats = mixed.stats_rollup();
+    assert!(
+        mixed_stats.structural_delta_hits >= 1
+            && mixed_stats.structural_ghost_groups >= 1
+            && mixed_stats.structural_appeared_groups >= 1,
+        "mixed vanish+appear must take the multi-group structural-delta path: {mixed_stats:?}"
+    );
+    let mixed_ref = unsharded(&catalog, &w_mixed);
+    let parity_mixed = assert_parity("mixed", &mixed, &mixed_ref);
+    println!(
+        "mixed: {warm_mixed_ms:8.1} ms  1/8 dirty  ghosts {} appeared {}  $/h {:.3} \
+         (unsharded {:.3})",
+        mixed_stats.structural_ghost_groups,
+        mixed_stats.structural_appeared_groups,
+        mixed.cost_per_hour,
+        mixed_ref.cost_per_hour
+    );
+
+    // Swap the tier back (dirties the same single shard) so the uniform
+    // round below starts from the deployed w0 plans, as before.
+    let (unmixed, _unmix_ms) = round(&mut sp, &w0);
+    assert_eq!(unmixed.dirty_shards, 1);
+    assert!(
+        (unmixed.cost_per_hour - cold.cost_per_hour).abs() < 1e-6,
+        "tier restore must return to the cold cost: {} vs {}",
+        unmixed.cost_per_hour,
+        cold.cost_per_hour
+    );
+
     // Uniform drift: one camera leaves every basin -> all 8 shards replan
     // warm, concurrently.
     let mut w_uniform = w0.clone();
     let mut drop_ids: Vec<u64> = Vec::new();
-    let per_basin: usize = TIERS.len() * CAMS_PER_TIER;
     let mut offset = 0usize;
     for &metros in &METROS_PER_BASIN {
         drop_ids.push(w0[offset].camera.id);
@@ -282,13 +331,17 @@ fn main() {
         ("cold_all_ms", Value::num(cold_all_ms)),
         ("warm_noop_ms", Value::num(warm_noop_ms)),
         ("warm_one_dirty_ms", Value::num(warm_one_dirty_ms)),
+        ("warm_mixed_ms", Value::num(warm_mixed_ms)),
         ("warm_uniform_ms", Value::num(warm_uniform_ms)),
         ("price_fanout_all_ms", Value::num(price_fanout_all_ms)),
         ("fanout_over_one_dirty", Value::num(fanout_over_skew)),
         ("uniform_over_one_dirty", Value::num(uniform_over_skew)),
         ("sharded_usd_per_hour", Value::num(cold.cost_per_hour)),
         ("unsharded_usd_per_hour", Value::num(cold_ref.cost_per_hour)),
-        ("cost_parity", Value::Bool(parity_cold && parity_skew && parity_fanout)),
+        (
+            "cost_parity",
+            Value::Bool(parity_cold && parity_skew && parity_mixed && parity_fanout),
+        ),
         (
             "dirty",
             Value::obj(vec![
@@ -296,8 +349,26 @@ fn main() {
                 ("noop", Value::num(noop.dirty_shards as f64)),
                 ("skew", Value::num(skew.dirty_shards as f64)),
                 ("restore", Value::num(restore.dirty_shards as f64)),
+                ("mixed", Value::num(mixed.dirty_shards as f64)),
                 ("uniform", Value::num(uniform.dirty_shards as f64)),
                 ("fanout", Value::num(fanout.dirty_shards as f64)),
+            ]),
+        ),
+        (
+            "structural",
+            Value::obj(vec![
+                (
+                    "delta_hits",
+                    Value::num(mixed_stats.structural_delta_hits as f64),
+                ),
+                (
+                    "ghost_groups",
+                    Value::num(mixed_stats.structural_ghost_groups as f64),
+                ),
+                (
+                    "appeared_groups",
+                    Value::num(mixed_stats.structural_appeared_groups as f64),
+                ),
             ]),
         ),
         ("exact_complete", Value::Bool(cold.exact_complete())),

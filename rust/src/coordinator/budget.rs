@@ -47,7 +47,11 @@ use crate::packing::mcvbp::SolveOptions;
 /// `BENCH_solver.json`) shows node cost on the wide-and-sparse arc-flow
 /// ILPs (rows ≪ vars) tracking roughly `8 × rows` — FTRAN/BTRAN and the
 /// eta file scale with the basis, not the tableau width — while on
-/// near-square ILPs the dense-era vars proxy still binds first.
+/// near-square ILPs the dense-era vars proxy still binds first. The
+/// weight stays conservative for the partial-pricing default
+/// (`solve_lp_partial`): candidate-list repricing only lowers the
+/// per-node column work below the full-Dantzig sweep this constant was
+/// calibrated against, so budgets derived from it never starve a node.
 pub const NODE_COST_ROWS_WEIGHT: usize = 8;
 
 /// Calibrated per-node LP cost of an ILP with `vars` columns and `rows`

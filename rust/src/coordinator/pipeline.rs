@@ -90,11 +90,17 @@ pub struct PipelineStats {
     /// root LP basis and branching order (delta-solve reuse).
     pub delta_solve_hits: usize,
     /// Subproblems warmed through the *structural* near-match path — a
-    /// cached exact solve whose structure differs by exactly one group
-    /// (vanished → ghost embedding, appeared → block-translated basis).
-    /// Counted separately from `delta_solve_hits`; each structural warm
-    /// step is certified inside the solver and falls cold when it cannot be.
+    /// cached exact solve whose structure differs by a bounded set of
+    /// groups (vanished → ghost embedding, appeared → block-translated
+    /// basis, possibly both in one re-plan). Counted separately from
+    /// `delta_solve_hits`; each structural warm step is certified inside
+    /// the solver and falls cold when it cannot be.
     pub structural_delta_hits: usize,
+    /// Group-level breakdown of the structural path this run: vanished
+    /// groups re-embedded as ghosts, and appeared groups bridged by
+    /// block-basis translation, summed over all structural hits.
+    pub structural_ghost_groups: usize,
+    pub structural_appeared_groups: usize,
     /// True if a previous packing seeded this solve.
     pub warm_started: bool,
     /// Independent per-region subproblems the Solve stage decomposed into.
@@ -180,6 +186,8 @@ impl PipelineStats {
         self.solution_cache_misses += other.solution_cache_misses;
         self.delta_solve_hits += other.delta_solve_hits;
         self.structural_delta_hits += other.structural_delta_hits;
+        self.structural_ghost_groups += other.structural_ghost_groups;
+        self.structural_appeared_groups += other.structural_appeared_groups;
         self.warm_started |= other.warm_started;
         self.components += other.components;
         self.solve_threads += other.solve_threads;
@@ -338,14 +346,14 @@ pub struct PlanContext {
     /// Structure-hash → key of the most recent *exact* solve with that
     /// structure: the near-match index behind the delta-solve path.
     delta_index: FxHashMap<u64, SolveKey>,
-    /// Structure-hash of a cached exact solve *minus one group* → (that
-    /// solve's full structure hash, position of the removed group): the
-    /// secondary index behind the structural delta path. A new subproblem
-    /// whose full hash matches an entry is a cached solve with one group
-    /// vanished; the reverse direction (appeared) probes `delta_index`
-    /// with the new key's own minus-one hashes instead. Values are hashes,
-    /// not keys, so the index stays O(groups) words per cached solve.
-    vanished_index: FxHashMap<u64, (u64, usize)>,
+    /// Family-hash (headroom + bins only) → key of the most recent *exact*
+    /// solve over those bins: the index behind the structural delta path.
+    /// A new subproblem in the same family aligns its group sequence
+    /// against the cached key (order-preserving LCS) to recover which
+    /// groups vanished and which appeared — any bounded mix of both in one
+    /// re-plan — in one probe, replacing the per-position minus-one-hash
+    /// scan the one-group path used.
+    family_index: FxHashMap<u64, SolveKey>,
     /// Per-component solve telemetry feeding the adaptive budget allocator
     /// ([`budget::allocate`]); keyed by the component's bin identity.
     telemetry: FxHashMap<u64, ComponentTelemetry>,
@@ -1127,157 +1135,196 @@ fn delta_hints(
     (delta > 0 && delta <= (total / 20).max(2)).then(|| prev.hints.clone())
 }
 
-/// [`structure_hash`] with the group at `skip` excluded — the probe hash of
-/// the structural delta path. By construction `structure_hash_without(P, i)
-/// == structure_hash(N)` exactly when `N` is `P` minus its `i`-th group.
-fn structure_hash_without(key: &SolveKey, skip: usize) -> u64 {
+/// Hash of a subproblem's *family*: its headroom and bins only. Every
+/// structure over the same bin set shares a family slot; the most recent
+/// exact solve of the family is the structural-delta candidate.
+fn family_hash(key: &SolveKey) -> u64 {
     let mut h = DefaultHasher::new();
     key.headroom.hash(&mut h);
     key.bins.hash(&mut h);
-    (key.items.len() - 1).hash(&mut h);
-    for (i, (_, demands)) in key.items.iter().enumerate() {
-        if i != skip {
-            demands.hash(&mut h);
-        }
-    }
     h.finish()
 }
 
-/// Exact structural check behind the hash probes: `larger` is `smaller`
-/// plus one extra group at position `pos` (same bins, same headroom, and
-/// the remaining groups' demand vectors identical in order). Counts are
-/// deliberately not compared — they are the RHS delta the warm resume
-/// absorbs.
-fn is_minus_one(larger: &SolveKey, smaller: &SolveKey, pos: usize) -> bool {
-    larger.headroom == smaller.headroom
-        && larger.bins == smaller.bins
-        && pos < larger.items.len()
-        && larger.items.len() == smaller.items.len() + 1
-        && larger
-            .items
+/// Order-preserving alignment of two structures' group sequences: the
+/// longest common subsequence over per-group demand-vector identity.
+/// Returns matched `(prev_idx, new_idx)` pairs, ascending in both; the
+/// unmatched remainders are the vanished (prev side) and appeared (new
+/// side) groups of the structural delta.
+fn align_groups(prev: &SolveKey, key: &SolveKey) -> Vec<(usize, usize)> {
+    // Pre-hash each group's demand vector so a DP cell compares one word;
+    // the full vectors break ties so a hash collision cannot mis-align.
+    fn sigs(items: &[(usize, Vec<Option<[u64; NUM_DIMS]>>)]) -> Vec<u64> {
+        items
             .iter()
-            .enumerate()
-            .filter(|(i, _)| *i != pos)
-            .map(|(_, (_, d))| d)
-            .eq(smaller.items.iter().map(|(_, d)| d))
+            .map(|(_, d)| {
+                let mut h = DefaultHasher::new();
+                d.hash(&mut h);
+                h.finish()
+            })
+            .collect()
+    }
+    let a = sigs(&prev.items);
+    let b = sigs(&key.items);
+    let eq = |i: usize, j: usize| a[i] == b[j] && prev.items[i].1 == key.items[j].1;
+    // Suffix-LCS table: dp[i][j] = LCS length of a[i..] vs b[j..]. Sizes
+    // are capped at STRUCTURAL_SCAN_LIMIT, so u16 lengths suffice.
+    let mut dp = vec![vec![0u16; b.len() + 1]; a.len() + 1];
+    for i in (0..a.len()).rev() {
+        for j in (0..b.len()).rev() {
+            dp[i][j] = if eq(i, j) {
+                dp[i + 1][j + 1] + 1
+            } else {
+                dp[i + 1][j].max(dp[i][j + 1])
+            };
+        }
+    }
+    let mut out = Vec::with_capacity(usize::from(dp[0][0]));
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        if eq(i, j) {
+            out.push((i, j));
+            i += 1;
+            j += 1;
+        } else if dp[i + 1][j] >= dp[i][j + 1] {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    out
 }
 
-/// Bounded count drift over the groups two structurally adjacent
-/// subproblems share (`skip_prev`/`skip_new`: position of the unmatched
-/// group on either side). Same bound as the counts-only delta gate; zero
-/// drift is allowed here because the structure itself differs.
-fn structural_drift_bounded(
-    prev_counts: &[usize],
-    key: &SolveKey,
-    skip_prev: Option<usize>,
-    skip_new: Option<usize>,
-) -> bool {
-    let total: usize = key.items.iter().map(|(c, _)| *c).sum();
-    let delta: usize = prev_counts
-        .iter()
-        .enumerate()
-        .filter(|(i, _)| Some(*i) != skip_prev)
-        .map(|(_, &c)| c)
-        .zip(
-            key.items
-                .iter()
-                .enumerate()
-                .filter(|(i, _)| Some(*i) != skip_new)
-                .map(|(_, (c, _))| *c),
-        )
-        .map(|(a, b)| a.abs_diff(b))
-        .sum();
-    delta <= (total / 20).max(2)
-}
-
-/// Groups beyond which the appeared-direction probe (one minus-one hash
-/// per candidate position) is skipped — the scan is O(groups² · bins) in
-/// the worst case and a subproblem that large re-plans through the budget
-/// machinery anyway.
+/// Groups per side beyond which the structural alignment is skipped — the
+/// LCS is O(groups²) and a subproblem that large re-plans through the
+/// budget machinery anyway.
 const STRUCTURAL_SCAN_LIMIT: usize = 256;
+
+/// Vanished + appeared groups beyond which the structural path stands
+/// down: each ghost pads the embedded ILP and each appeared group widens
+/// the translation, so past a handful a cold solve's own warm start is as
+/// good as a heavily patched basis.
+const MAX_STRUCTURAL_GROUPS: usize = 4;
 
 /// Structural near-match lookup, tried only after both the exact memo and
 /// the counts-only delta index missed: hints for a subproblem that differs
-/// from a cached exact solve by exactly one group.
+/// from a cached exact solve by a bounded set of groups.
 ///
-/// *Vanished* (this problem is a cached one minus a group): the cached
-/// basis is re-entered by embedding the missing group as a zero-coverage
-/// *ghost* — the solver reconstructs the old column space exactly and the
-/// structural change collapses to an RHS delta (`mcvbp::GhostGroup`).
-/// *Appeared* (this problem is a cached one plus a group): the cached
-/// basis is translated block-by-block into the wider column space
-/// (`mcvbp::PrevLayout`). Both directions stay certified-or-cold inside
-/// the solver: a hint that fails dual repair is discarded, never adopted.
+/// The family index names the most recent exact solve over the same bins;
+/// [`align_groups`] recovers which of its groups *vanished* and which
+/// groups *appeared*, in one pass that handles any bounded mix of both.
+/// Vanished groups re-embed as zero-coverage *ghosts* so the solver
+/// reconstructs the old column space ([`mcvbp::GhostGroup`]); with no
+/// appeared groups the structural change then collapses to an RHS delta
+/// and the cached basis re-enters directly. Appeared groups translate the
+/// cached basis block-by-block into the wider (ghost-augmented) column
+/// space ([`mcvbp::PrevLayout`]). Every path stays certified-or-cold
+/// inside the solver: a hint that fails dual repair is discarded, never
+/// adopted.
 fn structural_hints(
     solutions: &FxHashMap<SolveKey, CachedSolve>,
-    delta_index: &FxHashMap<u64, SolveKey>,
-    vanished_index: &FxHashMap<u64, (u64, usize)>,
+    family_index: &FxHashMap<u64, SolveKey>,
     key: &SolveKey,
 ) -> Option<DeltaHints> {
-    // Vanished direction: one index probe with this key's own hash.
-    if let Some(&(prev_hash, pos)) = vanished_index.get(&structure_hash(key)) {
-        if let Some(prev_key) = delta_index.get(&prev_hash) {
-            if let Some(prev) = solutions.get(prev_key) {
-                if prev.method == SolveMethod::ExactArcFlow
-                    && prev.hints.root_basis.is_some()
-                    && is_minus_one(prev_key, key, pos)
-                    && structural_drift_bounded(&prev.counts, key, Some(pos), None)
-                {
-                    let (count, demands) = &prev_key.items[pos];
-                    return Some(DeltaHints {
-                        root_basis: prev.hints.root_basis.clone(),
-                        branch_order: prev.hints.branch_order.clone(),
-                        ghost: Some(mcvbp::GhostGroup {
-                            position: pos,
-                            demand_bits: demands.clone(),
-                            count: *count,
-                        }),
-                        appeared: None,
-                    });
-                }
-            }
-        }
+    if key.items.len() > STRUCTURAL_SCAN_LIMIT {
+        return None;
     }
-    // Appeared direction: probe the full-structure index with each of this
-    // key's minus-one hashes (the new group can sit at any position).
-    if key.items.len() <= STRUCTURAL_SCAN_LIMIT {
-        for j in 0..key.items.len() {
-            let Some(prev_key) = delta_index.get(&structure_hash_without(key, j)) else {
-                continue;
-            };
-            let Some(prev) = solutions.get(prev_key) else {
-                continue;
-            };
-            let Some(basis) = prev.hints.root_basis.clone() else {
-                continue;
-            };
-            if prev.method != SolveMethod::ExactArcFlow
-                || prev.blocks.is_empty()
-                || !is_minus_one(key, prev_key, j)
-                || !structural_drift_bounded(&prev.counts, key, None, Some(j))
-                || prev.counts.iter().any(|&c| c == 0)
-            {
-                continue;
+    let prev_key = family_index.get(&family_hash(key))?;
+    if prev_key.items.len() > STRUCTURAL_SCAN_LIMIT
+        || prev_key.headroom != key.headroom
+        || prev_key.bins != key.bins
+    {
+        return None;
+    }
+    let prev = solutions.get(prev_key)?;
+    if prev.method != SolveMethod::ExactArcFlow {
+        return None;
+    }
+    // Both directions start from the cached root basis (re-entered for
+    // pure vanish, translated when groups appeared).
+    let basis = prev.hints.root_basis.clone()?;
+    let matched = align_groups(prev_key, key);
+    let vanished = prev_key.items.len() - matched.len();
+    let appeared = key.items.len() - matched.len();
+    if vanished + appeared == 0 || vanished + appeared > MAX_STRUCTURAL_GROUPS {
+        // Identical structure is the counts-only delta path's job, and
+        // heavy churn solves better cold.
+        return None;
+    }
+    // Count drift over the matched groups stays bounded like the
+    // counts-only delta gate (zero drift allowed: the structure differs).
+    let total: usize = key.items.iter().map(|(c, _)| *c).sum();
+    let drift: usize = matched
+        .iter()
+        .map(|&(i, j)| prev_key.items[i].0.abs_diff(key.items[j].0))
+        .sum();
+    if drift > (total / 20).max(2) {
+        return None;
+    }
+    // Merge-walk the alignment to assign *augmented* coordinates: the
+    // augmented item list is this problem's groups with each vanished
+    // group re-inserted as a ghost, laid out so that deleting the appeared
+    // groups reproduces the previous problem's order exactly. Ghost
+    // positions come out strictly ascending, as `solve_delta` requires.
+    let mut ghosts = Vec::with_capacity(vanished);
+    let mut new_groups = Vec::with_capacity(appeared);
+    let (mut i, mut j, mut ap, mut m) = (0usize, 0usize, 0usize, 0usize);
+    while i < prev_key.items.len() || j < key.items.len() {
+        if m < matched.len() && matched[m] == (i, j) {
+            i += 1;
+            j += 1;
+            m += 1;
+        } else if i < prev_key.items.len() && (m >= matched.len() || i < matched[m].0) {
+            let (count, demands) = &prev_key.items[i];
+            if *count == 0 {
+                // A count-0 group never shaped the cached solve's graphs;
+                // embedding it would desync the layouts. Fall cold.
+                return None;
             }
-            // No root_basis / branch_order passthrough: both index the
-            // previous solve's column space, which the new group shifts —
-            // the block translation rebuilds the basis, and a replayed
-            // branch order over misaligned columns would mislead.
-            return Some(DeltaHints {
-                root_basis: None,
-                branch_order: Vec::new(),
-                ghost: None,
-                appeared: Some(mcvbp::PrevLayout {
-                    basis,
-                    blocks: prev.blocks.clone(),
-                    num_vars: prev.num_vars,
-                    num_groups: prev_key.items.len(),
-                    new_group: j,
-                }),
+            ghosts.push(mcvbp::GhostGroup {
+                position: ap,
+                demand_bits: demands.clone(),
+                count: *count,
             });
+            i += 1;
+        } else {
+            new_groups.push(ap);
+            j += 1;
         }
+        ap += 1;
     }
-    None
+    if new_groups.is_empty() {
+        // Pure vanish: the ghost-augmented ILP is bit-identical to the
+        // cached solve's, so its basis and branch order re-enter directly.
+        return Some(DeltaHints {
+            root_basis: Some(basis),
+            branch_order: prev.hints.branch_order.clone(),
+            ghosts,
+            appeared: None,
+        });
+    }
+    // Appeared groups in play (pure or mixed with ghosts): translate the
+    // cached basis block-by-block. No root_basis / branch_order
+    // passthrough — both index the previous solve's column space, which
+    // the appeared groups shift. The slack-rank arithmetic needs every
+    // group on both sides to own a coverage row (count > 0).
+    if prev.blocks.is_empty()
+        || prev.counts.iter().any(|&c| c == 0)
+        || key.items.iter().any(|(c, _)| *c == 0)
+    {
+        return None;
+    }
+    Some(DeltaHints {
+        root_basis: None,
+        branch_order: Vec::new(),
+        ghosts,
+        appeared: Some(mcvbp::PrevLayout {
+            basis,
+            blocks: prev.blocks.clone(),
+            num_vars: prev.num_vars,
+            num_groups: prev_key.items.len(),
+            new_groups,
+        }),
+    })
 }
 
 /// Post-solve bookkeeping of one subproblem that is not answered by the
@@ -1367,17 +1414,16 @@ fn solve_stage(
                 if hints.is_some() {
                     stats.delta_solve_hits += 1;
                 } else {
-                    // Same structure missed — try one group appeared or
-                    // vanished (tracked by its own counter so the exact
-                    // delta-path telemetry stays untouched).
-                    hints = structural_hints(
-                        &ctx.solutions,
-                        &ctx.delta_index,
-                        &ctx.vanished_index,
-                        &key,
-                    );
-                    if hints.is_some() {
+                    // Same structure missed — try a bounded set of
+                    // appeared and/or vanished groups (tracked by its own
+                    // counters so the exact delta-path telemetry stays
+                    // untouched).
+                    hints = structural_hints(&ctx.solutions, &ctx.family_index, &key);
+                    if let Some(h) = &hints {
                         stats.structural_delta_hits += 1;
+                        stats.structural_ghost_groups += h.ghosts.len();
+                        stats.structural_appeared_groups +=
+                            h.appeared.as_ref().map_or(0, |p| p.new_groups.len());
                     }
                 }
                 resolved.push(None);
@@ -1459,7 +1505,7 @@ fn solve_stage(
     if ctx.solutions.len() + pending.len() > SOLUTION_CACHE_CAPACITY {
         ctx.solutions.clear();
         ctx.delta_index.clear();
-        ctx.vanished_index.clear();
+        ctx.family_index.clear();
     }
     for (p, result) in pending.into_iter().zip(results) {
         let sub = result?;
@@ -1486,7 +1532,7 @@ fn solve_stage(
             .map(|st| DeltaHints {
                 root_basis: st.root_basis.clone(),
                 branch_order: st.branch_order.clone(),
-                ghost: None,
+                ghosts: Vec::new(),
                 appeared: None,
             })
             .unwrap_or_default();
@@ -1496,15 +1542,11 @@ fn solve_stage(
             .map(|st| (st.var_blocks.clone(), st.milp_vars))
             .unwrap_or_default();
         if sub.method == SolveMethod::ExactArcFlow {
-            let full_hash = structure_hash(&p.key);
-            ctx.delta_index.insert(full_hash, p.key.clone());
-            // Index every minus-one-group variant of this structure so a
-            // later re-plan that dropped exactly one group finds it in one
-            // probe (values are hashes — O(groups) words per solve).
-            for i in 0..p.key.items.len() {
-                ctx.vanished_index
-                    .insert(structure_hash_without(&p.key, i), (full_hash, i));
-            }
+            ctx.delta_index.insert(structure_hash(&p.key), p.key.clone());
+            // One family-index insert replaces the old per-position
+            // minus-one-hash fan-out: the structural path re-derives the
+            // vanished/appeared sets by alignment at probe time instead.
+            ctx.family_index.insert(family_hash(&p.key), p.key.clone());
         }
         let counts: Vec<usize> = p.key.items.iter().map(|(c, _)| *c).collect();
         ctx.solutions.insert(
@@ -1835,10 +1877,10 @@ mod tests {
     #[test]
     fn group_vanishing_takes_the_structural_delta_path() {
         // Re-plan with one whole group gone: the exact-structure indexes
-        // miss, but the minus-one index finds the previous solve and the
-        // solver re-enters it through the ghost embedding. The cost must
-        // equal a cold plan's and the counts-only delta telemetry must not
-        // move.
+        // miss, but the family index finds the previous solve, the
+        // alignment reports one vanished group, and the solver re-enters
+        // it through the ghost embedding. The cost must equal a cold
+        // plan's and the counts-only delta telemetry must not move.
         let catalog = crate::catalog::Catalog::builtin()
             .restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
         let cfg = PlannerConfig::st3();
@@ -1847,6 +1889,8 @@ mod tests {
         let warm = plan_with_context(&catalog, &cfg, &two_group_requests(4, 0), &mut ctx).unwrap();
         assert_eq!(ctx.stats.structural_delta_hits, 1, "{:?}", ctx.stats);
         assert_eq!(ctx.stats.delta_solve_hits, 0, "{:?}", ctx.stats);
+        assert_eq!(ctx.stats.structural_ghost_groups, 1, "{:?}", ctx.stats);
+        assert_eq!(ctx.stats.structural_appeared_groups, 0, "{:?}", ctx.stats);
         assert_eq!(ctx.solver.structural_reuses.get(), 1);
         let cold =
             plan_with_context(&catalog, &cfg, &two_group_requests(4, 0), &mut PlanContext::new())
@@ -1861,9 +1905,9 @@ mod tests {
 
     #[test]
     fn group_appearing_takes_the_structural_delta_path() {
-        // The reverse drift: a whole new group joins. The new key's own
-        // minus-one hash finds the previous solve in the full-structure
-        // index and its basis arrives block-translated into the wider
+        // The reverse drift: a whole new group joins. The family index
+        // finds the previous solve, the alignment reports one appeared
+        // group, and its basis arrives block-translated into the wider
         // column space. Certified-or-cold: cost must equal a cold plan's.
         let catalog = crate::catalog::Catalog::builtin()
             .restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
@@ -1873,12 +1917,53 @@ mod tests {
         let warm = plan_with_context(&catalog, &cfg, &two_group_requests(4, 3), &mut ctx).unwrap();
         assert_eq!(ctx.stats.structural_delta_hits, 1, "{:?}", ctx.stats);
         assert_eq!(ctx.stats.delta_solve_hits, 0, "{:?}", ctx.stats);
+        assert_eq!(ctx.stats.structural_ghost_groups, 0, "{:?}", ctx.stats);
+        assert_eq!(ctx.stats.structural_appeared_groups, 1, "{:?}", ctx.stats);
         let cold =
             plan_with_context(&catalog, &cfg, &two_group_requests(4, 3), &mut PlanContext::new())
                 .unwrap();
         assert!(
             (warm.cost_per_hour - cold.cost_per_hour).abs() < 1e-9,
             "appeared-group warm {} != cold {}",
+            warm.cost_per_hour,
+            cold.cost_per_hour
+        );
+    }
+
+    #[test]
+    fn mixed_vanish_and_appear_takes_the_structural_delta_path() {
+        // One group swaps for another in a single re-plan (VGA out, XGA
+        // in): the alignment reports one vanished AND one appeared group,
+        // the vanished one re-embeds as a ghost, and the cached basis
+        // translates into the ghost-augmented column space — one certified
+        // structural delta solve instead of a cold one. Cost parity with a
+        // cold plan is the exactness pin.
+        let catalog = crate::catalog::Catalog::builtin()
+            .restrict(Some(&["c4.2xlarge", "g2.2xlarge"]), Some(&["us-east-2"]));
+        let cfg = PlannerConfig::st3();
+        let swap = |vga: usize, xga: usize| -> Vec<StreamRequest> {
+            let mut reqs = two_group_requests(4, vga);
+            reqs.extend((0..xga).map(|i| {
+                StreamRequest::new(
+                    camera_at(200 + i as u64, "Chicago", cities::CHICAGO, Resolution::XGA, 30.0),
+                    Program::Zf,
+                    1.0,
+                )
+            }));
+            reqs
+        };
+        let mut ctx = PlanContext::new();
+        plan_with_context(&catalog, &cfg, &swap(3, 0), &mut ctx).unwrap();
+        let warm = plan_with_context(&catalog, &cfg, &swap(0, 3), &mut ctx).unwrap();
+        assert_eq!(ctx.stats.structural_delta_hits, 1, "{:?}", ctx.stats);
+        assert_eq!(ctx.stats.delta_solve_hits, 0, "{:?}", ctx.stats);
+        assert_eq!(ctx.stats.structural_ghost_groups, 1, "{:?}", ctx.stats);
+        assert_eq!(ctx.stats.structural_appeared_groups, 1, "{:?}", ctx.stats);
+        assert_eq!(ctx.solver.structural_reuses.get(), 1);
+        let cold = plan_with_context(&catalog, &cfg, &swap(0, 3), &mut PlanContext::new()).unwrap();
+        assert!(
+            (warm.cost_per_hour - cold.cost_per_hour).abs() < 1e-9,
+            "mixed vanish+appear warm {} != cold {}",
             warm.cost_per_hour,
             cold.cost_per_hour
         );

@@ -90,24 +90,39 @@
 //!   order replays in [`solver::bnb`]. Every warm step is certified; the
 //!   uncertifiable ones fall back to the cold path under the same budgets,
 //!   so warm results are exactly as optimal as cold ones.
-//! * **Structural delta-solve (PR 6)** — the delta path also spans
-//!   *bounded structural* drift: one whole group appearing or vanishing.
-//!   A vanished group is re-inserted as a zero-coverage **ghost**
-//!   ([`packing::mcvbp::GhostGroup`]) so the joint ILP reconstructs the
-//!   cached solve's column space exactly and the structural change
-//!   collapses to an RHS delta; an appeared group triggers a
-//!   **block-by-block basis translation** ([`packing::mcvbp::PrevLayout`] →
+//! * **Structural delta-solve (PR 6, widened in PR 9)** — the delta path
+//!   also spans *bounded structural* drift: a small **set** of whole
+//!   groups appearing and/or vanishing in one re-plan. Vanished groups
+//!   are re-inserted as zero-coverage **ghosts**
+//!   ([`packing::mcvbp::GhostGroup`], ascending augmented-list positions)
+//!   so the joint ILP reconstructs the cached solve's column space
+//!   exactly and their change collapses to an RHS delta; appeared groups
+//!   trigger a **block-by-block basis translation**
+//!   ([`packing::mcvbp::PrevLayout`] →
 //!   [`solver::simplex::complete_basis`]) of the cached basis into the
-//!   wider column space. Both directions ride the same certified-or-cold
-//!   machinery and are counted separately
-//!   (`structural_delta_hits` / `structural_reuses`).
+//!   wider column space. A mixed re-plan combines both: ghosts first
+//!   reduce it to a pure appeared-group translation over the augmented
+//!   item list ([`coordinator::pipeline`] aligns the old and new group
+//!   lists by longest-common-subsequence over demand-vector identity).
+//!   Everything rides the same certified-or-cold machinery and is counted
+//!   separately (`structural_delta_hits` / `structural_ghost_groups` /
+//!   `structural_appeared_groups` / `structural_reuses`).
 //!
 //! The LP substrate itself is a *revised* simplex over a product-form eta
 //! factorization ([`solver::factor`]): per-iteration cost scales with basis
-//! size and column sparsity instead of tableau width, with the dense
-//! tableau retained as the bit-for-bit reference
+//! size and column sparsity instead of tableau width. The eta file is
+//! **compacted** (PR 9) — one flat entry arena, exact-identity etas
+//! elided, refactorization triggered by measured fill — a storage-only
+//! change kept provably bit-identical to an append-only replay
+//! (`prop_compacted_eta_matches_reference`). Pricing runs in two modes
+//! ([`solver::simplex::Pricing`]): full Dantzig, pinned to the dense
+//! tableau's bit-for-bit reference
 //! ([`solver::simplex::solve_lp_dense`], property-tested in
-//! `tests/properties.rs`, raced in `bench_solver`).
+//! `tests/properties.rs`), and candidate-list **partial pricing**
+//! ([`solver::simplex::solve_lp_partial`], the exact solver's default) —
+//! repricing a bounded candidate list most iterations and certifying
+//! optimality with a final full sweep, exactness property-tested by
+//! objective parity against dense. All three race in `bench_solver`.
 //!
 //! ## The unified portfolio runtime (PR 5)
 //!
@@ -173,7 +188,8 @@
 //! * `BENCH_scale.json` — 10k-stream warm/cold parity and front-end drift
 //!   proportionality (`bench_scale`),
 //! * `BENCH_planet.json` — metro-sharded planet run (`bench_planet`),
-//! * `BENCH_solver.json` — dense vs revised simplex race (`bench_solver`),
+//! * `BENCH_solver.json` — dense vs full-Dantzig vs partial-pricing
+//!   simplex race plus structural-delta timings (`bench_solver`),
 //! * `BENCH_closedloop.json` — closed-loop feedback bars
 //!   (`bench_closedloop`, scenarios in [`bench::closedloop`]).
 //!

@@ -101,9 +101,15 @@ pub struct SolveStats {
     /// every node LP of the exact phase.
     pub degenerate_pivots: u64,
     /// Per-bin-type layout of the joint ILP's columns/rows, recorded so a
-    /// later re-plan whose structure gained one group can translate the
+    /// later re-plan whose structure gained groups can translate the
     /// surviving blocks of this solve's basis (see [`DeltaHints::appeared`]).
     pub var_blocks: Vec<VarBlock>,
+    /// Vanished groups re-embedded as ghosts in this solve (0 = no
+    /// ghost-embedding took place).
+    pub structural_ghosts: usize,
+    /// Appeared groups bridged by block-basis translation in this solve
+    /// (0 = no translation took place or it could not be certified).
+    pub structural_appeared: usize,
 }
 
 /// One bin type's slice of the joint ILP: its arc variables and its flow
@@ -130,7 +136,11 @@ pub struct VarBlock {
 /// resume_from_basis) path already repairs.
 #[derive(Clone, Debug)]
 pub struct GhostGroup {
-    /// Index in the previous problem's item list where the group sat.
+    /// Index in the *augmented* item list where the group re-inserts:
+    /// ghosts apply in ascending `position` order, each position counted
+    /// after all lower-positioned ghosts have been inserted. With no
+    /// appeared groups in play this is exactly the group's index in the
+    /// previous problem's item list.
     pub position: usize,
     /// Per-bin demand vectors, bit-preserved (`f64::to_bits` per dim;
     /// `None` = incompatible with that bin type).
@@ -140,7 +150,7 @@ pub struct GhostGroup {
 }
 
 /// The previous solve's basis and block layout, for the *appeared*-group
-/// structural delta: bin types the new group cannot use keep bit-identical
+/// structural delta: bin types the new groups cannot use keep bit-identical
 /// graphs, so their basis columns translate 1:1 into the new column space;
 /// the rest are dropped and re-derived by
 /// [`complete_basis`](crate::solver::simplex::complete_basis).
@@ -154,8 +164,9 @@ pub struct PrevLayout {
     pub num_vars: usize,
     /// Its item-group count (coverage-row slacks; the cut slack follows).
     pub num_groups: usize,
-    /// Index in *this* problem of the group the previous solve lacked.
-    pub new_group: usize,
+    /// Indices in *this* solve's (ghost-augmented) item list of the groups
+    /// the previous solve lacked, strictly ascending.
+    pub new_groups: Vec<usize>,
 }
 
 /// Cached warm re-entry state from a previous solve of a *structurally
@@ -169,9 +180,12 @@ pub struct PrevLayout {
 pub struct DeltaHints {
     pub root_basis: Option<Vec<usize>>,
     pub branch_order: Vec<usize>,
-    /// Vanished-group embedding: re-insert this group with zero coverage so
-    /// the ILP structure matches the previous solve's exactly.
-    pub ghost: Option<GhostGroup>,
+    /// Vanished-group embeddings, strictly ascending by `position`: each
+    /// re-inserts its group with zero coverage. Ghosts alone make the ILP
+    /// structure match the previous solve's exactly (use `root_basis`);
+    /// combined with `appeared` they reduce a mixed vanish+appear re-plan
+    /// to a pure appeared-group translation.
+    pub ghosts: Vec<GhostGroup>,
     /// Appeared-group translation: the previous solve's basis + layout,
     /// used only when `root_basis` is absent (the two paths are exclusive).
     pub appeared: Option<PrevLayout>,
@@ -320,25 +334,44 @@ pub fn solve_delta(
         branch_order: Vec::new(),
         degenerate_pivots: 0,
         var_blocks: Vec::new(),
+        structural_ghosts: 0,
+        structural_appeared: 0,
     };
     if !opts.exact {
         return Ok((best_heuristic, stats));
     }
 
     // Vanished-group embedding: when the caller says this problem is the
-    // previous one minus exactly one group, re-insert that group as a ghost
-    // (original demands, original count, zero coverage). Every bin type's
-    // quantized item list — and hence its arc-flow graph and ILP columns —
-    // is then bit-identical to the previous solve's, and the cached basis
-    // re-enters through the certified RHS-repair path. Malformed hints are
-    // dropped here; an uncertifiable basis falls cold inside the solver.
-    let ghost = hints.and_then(|h| h.ghost.as_ref()).filter(|g| {
-        g.position <= qp.items.len() && g.count > 0 && g.demand_bits.len() == qp.bins.len()
-    });
+    // previous one minus a bounded set of groups, re-insert each as a ghost
+    // (original demands, original count, zero coverage). With no appeared
+    // groups in play, every bin type's quantized item list — and hence its
+    // arc-flow graph and ILP columns — is then bit-identical to the previous
+    // solve's, and the cached basis re-enters through the certified
+    // RHS-repair path; with appeared groups alongside, the embedding reduces
+    // the mixed delta to a pure appeared-group translation. Malformed hints
+    // are dropped here; an uncertifiable basis falls cold inside the solver.
+    let ghosts: &[GhostGroup] = match hints {
+        Some(h)
+            if !h.ghosts.is_empty()
+                && h.ghosts.iter().enumerate().all(|(i, g)| {
+                    g.count > 0
+                        && g.demand_bits.len() == qp.bins.len()
+                        && g.position <= qp.items.len() + i
+                        && (i == 0 || h.ghosts[i - 1].position < g.position)
+                }) =>
+        {
+            &h.ghosts
+        }
+        _ => &[],
+    };
+    // Augmented positions of the ghosts, ascending (binary-searchable).
+    let ghost_positions: Vec<usize> = ghosts.iter().map(|g| g.position).collect();
     let xqp_owned;
-    let (xqp, ghost_idx): (&PackingProblem, Option<usize>) = match ghost {
-        Some(g) => {
-            let mut aug = problem.clone();
+    let xqp: &PackingProblem = if ghosts.is_empty() {
+        &qp
+    } else {
+        let mut aug = problem.clone();
+        for g in ghosts {
             aug.items.insert(
                 g.position,
                 ItemGroup {
@@ -351,12 +384,12 @@ pub fn solve_delta(
                         .collect(),
                 },
             );
-            // Quantization is per-item, so the non-ghost items land exactly
-            // where the plain `qp` has them.
-            xqp_owned = quantize_problem(&aug, opts.quant);
-            (&xqp_owned, Some(g.position))
         }
-        None => (&qp, None),
+        // Quantization is per-item, so the non-ghost items land exactly
+        // where the plain `qp` has them.
+        xqp_owned = quantize_problem(&aug, opts.quant);
+        stats.structural_ghosts = ghosts.len();
+        &xqp_owned
     };
 
     // Build one arc-flow graph per bin type over its compatible item groups.
@@ -539,8 +572,9 @@ pub fn solve_delta(
                 }
             }
         }
+        let is_ghost = ghost_positions.binary_search(&g_idx).is_ok();
         if coeffs.is_empty() {
-            if ghost_idx == Some(g_idx) {
+            if is_ghost {
                 // The ghost touches no graph (it was incompatible with the
                 // budgeted types this round): no row. The resulting row
                 // mismatch simply decertifies the resume — still exact.
@@ -551,7 +585,7 @@ pub fn solve_delta(
                 item.label
             )));
         }
-        let rhs = if ghost_idx == Some(g_idx) { 0.0 } else { item.count as f64 };
+        let rhs = if is_ghost { 0.0 } else { item.count as f64 };
         lp.add_constraint(coeffs, Op::Ge, rhs);
     }
     // Incumbent cut: never exceed the best bound known to be feasible on the
@@ -607,12 +641,13 @@ pub fn solve_delta(
         }
         milp_opts.root_basis = h.root_basis.clone();
         // Appeared-group translation: carry the surviving blocks of the
-        // previous basis into this column space and let `complete_basis`
-        // re-derive the rest. Only meaningful without an exact-structure
-        // basis and without a ghost (the two structural paths are disjoint),
-        // and only when every group has a coverage row (count > 0), which
-        // the slack-rank arithmetic below relies on.
-        if milp_opts.root_basis.is_none() && ghost_idx.is_none() {
+        // previous basis into this (possibly ghost-augmented) column space
+        // and let `complete_basis` re-derive the rest. Only meaningful
+        // without an exact-structure basis (the two warm paths are
+        // exclusive), and only when every group has a coverage row
+        // (count > 0), which the slack-rank arithmetic below relies on.
+        // Ghosts compose: `new_groups` are indices into the augmented list.
+        if milp_opts.root_basis.is_none() {
             if let Some(prev) = h.appeared.as_ref() {
                 if xqp.items.iter().all(|it| it.count > 0) {
                     if let Some(partial) = translate_block_basis(
@@ -622,6 +657,9 @@ pub fn solve_delta(
                         xqp.items.len(),
                     ) {
                         milp_opts.root_basis = complete_basis(&milp.lp, &partial);
+                        if milp_opts.root_basis.is_some() {
+                            stats.structural_appeared = prev.new_groups.len();
+                        }
                     }
                 }
             }
@@ -636,7 +674,7 @@ pub fn solve_delta(
     stats.lp_warm = sol.lp_warm;
     stats.lp_cold = sol.lp_cold;
     stats.degenerate_pivots = sol.lp_stats.degenerate_pivots;
-    if ghost_idx.is_none() {
+    if ghost_positions.is_empty() {
         stats.root_basis = sol.root_basis.clone();
         stats.branch_order = sol.branch_order.clone();
         stats.var_blocks = var_blocks;
@@ -692,12 +730,15 @@ pub fn solve_delta(
         }
     }
 
-    // Strip the ghost before validating: its flows (zero-coverage padding)
-    // map to nothing in the real problem, and removing them only frees
-    // capacity, so the stripped packing stays feasible.
-    if let Some(gi) = ghost_idx {
+    // Strip the ghosts before validating: their flows (zero-coverage
+    // padding) map to nothing in the real problem, and removing them only
+    // frees capacity, so the stripped packing stays feasible. Removal runs
+    // descending so earlier positions stay valid as later ones vacate.
+    if !ghost_positions.is_empty() {
         for b in packing.bins.iter_mut() {
-            b.counts.remove(gi);
+            for &gi in ghost_positions.iter().rev() {
+                b.counts.remove(gi);
+            }
         }
         packing.bins.retain(|b| b.num_streams() > 0);
     }
@@ -739,17 +780,33 @@ pub fn solve_delta(
 /// for the appeared-group delta. Structural columns translate through
 /// matching [`VarBlock`]s (same bin type, same graph content); columns of
 /// changed blocks are *dropped* — `complete_basis` re-derives them — and
-/// slack columns re-rank around the inserted group. Returns `None` when the
-/// layouts cannot correspond (the hint was stale), which sends the solve
-/// down the cold path.
+/// slack columns re-rank around the inserted groups (any bounded set, not
+/// just one). Returns `None` when the layouts cannot correspond (the hint
+/// was stale), which sends the solve down the cold path.
 fn translate_block_basis(
     prev: &PrevLayout,
     blocks: &[VarBlock],
     num_vars: usize,
     num_groups: usize,
 ) -> Option<Vec<usize>> {
-    if prev.new_group >= num_groups || prev.num_groups + 1 != num_groups {
+    let inserted = &prev.new_groups;
+    if inserted.is_empty()
+        || prev.num_groups + inserted.len() != num_groups
+        || inserted.windows(2).any(|w| w[0] >= w[1])
+        || *inserted.last()? >= num_groups
+    {
         return None;
+    }
+    // Surviving groups occupy the complement of the inserted positions, in
+    // order: old coverage-row rank k re-ranks to `old_to_new[k]`.
+    let mut old_to_new = Vec::with_capacity(prev.num_groups);
+    let mut next_ins = 0usize;
+    for g in 0..num_groups {
+        if next_ins < inserted.len() && inserted[next_ins] == g {
+            next_ins += 1;
+        } else {
+            old_to_new.push(g);
+        }
     }
     let mut out = Vec::with_capacity(prev.basis.len());
     for &v in &prev.basis {
@@ -763,18 +820,17 @@ fn translate_block_basis(
                     && b.graph_hash == pb.graph_hash
                     && b.num_arcs == pb.num_arcs
             }) else {
-                // This bin type's graph absorbed the new group: its arc
+                // This bin type's graph absorbed a new group: its arc
                 // space changed, so the old column has no referent here.
                 continue;
             };
             out.push(nb.var_offset + (v - pb.var_offset));
         } else {
             // Slack columns: coverage rows in group order, then the
-            // incumbent cut. Groups at or after the inserted one shift up.
+            // incumbent cut. Surviving groups re-rank past the insertions.
             let k = v - prev.num_vars;
             if k < prev.num_groups {
-                let g = if k < prev.new_group { k } else { k + 1 };
-                out.push(num_vars + g);
+                out.push(num_vars + old_to_new[k]);
             } else if k == prev.num_groups {
                 out.push(num_vars + num_groups);
             } else {
@@ -1010,7 +1066,7 @@ mod tests {
         let hints = DeltaHints {
             root_basis: st.root_basis.clone(),
             branch_order: st.branch_order.clone(),
-            ghost: Some(GhostGroup {
+            ghosts: vec![GhostGroup {
                 position: 1,
                 demand_bits: prev.items[1]
                     .demand_per_bin
@@ -1018,7 +1074,7 @@ mod tests {
                     .map(|d| d.map(|dims| dims.as_array().map(f64::to_bits)))
                     .collect(),
                 count: prev.items[1].count,
-            }),
+            }],
             appeared: None,
         };
         let (cold, cold_st) = solve(&now, &opts).unwrap();
@@ -1057,13 +1113,13 @@ mod tests {
         let hints = DeltaHints {
             root_basis: None,
             branch_order: Vec::new(),
-            ghost: None,
+            ghosts: Vec::new(),
             appeared: Some(PrevLayout {
                 basis,
                 blocks: st.var_blocks.clone(),
                 num_vars: st.milp_vars,
                 num_groups: prev.items.len(),
-                new_group: 1,
+                new_groups: vec![1],
             }),
         };
         let (cold, cold_st) = solve(&now, &opts).unwrap();
@@ -1103,7 +1159,7 @@ mod tests {
             blocks: vec![pb, pb2],
             num_vars: 7,
             num_groups: 2,
-            new_group: 1,
+            new_groups: vec![1],
         };
         // Current layout: type 0 unchanged, type 1 absorbed the new group
         // (different hash), 10 structural columns, 3 groups.
@@ -1123,6 +1179,120 @@ mod tests {
         assert_eq!(out, vec![1, 10, 12, 13]);
         // A layout that cannot correspond to this problem is rejected.
         assert!(translate_block_basis(&prev, &[nb], 10, 2).is_none());
+
+        // Two inserted groups: surviving ranks re-rank through the
+        // complement (inserts at 1 and 3 -> old ranks 0,1 become 0,2).
+        let prev2 = PrevLayout { new_groups: vec![1, 3], ..prev.clone() };
+        let out2 = translate_block_basis(&prev2, &[nb, nb2], 10, 4).unwrap();
+        assert_eq!(out2, vec![1, 10, 12, 14]);
+        // Unsorted or out-of-range insertion lists are stale hints.
+        let bad = PrevLayout { new_groups: vec![3, 1], ..prev.clone() };
+        assert!(translate_block_basis(&bad, &[nb, nb2], 10, 4).is_none());
+        let oob = PrevLayout { new_groups: vec![1, 4], ..prev.clone() };
+        assert!(translate_block_basis(&oob, &[nb, nb2], 10, 4).is_none());
+    }
+
+    #[test]
+    fn multi_vanish_ghost_embedding_matches_the_cold_solve() {
+        // Drop TWO groups at once: both re-insert as ghosts, the embedded
+        // ILP is bit-identical to the previous solve's, and the cached
+        // basis re-enters through the certified RHS-repair path.
+        let opts = SolveOptions::default();
+        let prev = simple_problem(
+            &[(2.0, 1.0, 5), (3.0, 2.0, 3), (1.5, 0.8, 4), (2.5, 1.2, 2)],
+            &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)],
+        );
+        let (_, st) = solve(&prev, &opts).unwrap();
+        assert!(st.proven_optimal, "seed solve must prove optimality");
+        // Groups 1 and 3 vanish.
+        let now = simple_problem(
+            &[(2.0, 1.0, 5), (1.5, 0.8, 4)],
+            &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)],
+        );
+        let ghost_of = |g: usize| GhostGroup {
+            position: g,
+            demand_bits: prev.items[g]
+                .demand_per_bin
+                .iter()
+                .map(|d| d.map(|dims| dims.as_array().map(f64::to_bits)))
+                .collect(),
+            count: prev.items[g].count,
+        };
+        let hints = DeltaHints {
+            root_basis: st.root_basis.clone(),
+            branch_order: st.branch_order.clone(),
+            ghosts: vec![ghost_of(1), ghost_of(3)],
+            appeared: None,
+        };
+        let (cold, cold_st) = solve(&now, &opts).unwrap();
+        let (warm, warm_st) = solve_delta(&now, &opts, None, None, Some(&hints)).unwrap();
+        assert!(cold_st.proven_optimal && warm_st.proven_optimal);
+        assert_eq!(warm_st.structural_ghosts, 2);
+        assert!(
+            (warm.total_cost(&now) - cold.total_cost(&now)).abs() < 1e-9,
+            "multi-ghost warm {} != cold {}",
+            warm.total_cost(&now),
+            cold.total_cost(&now)
+        );
+        warm.validate(&now).unwrap();
+    }
+
+    #[test]
+    fn mixed_vanish_and_appear_matches_the_cold_solve() {
+        // One group vanishes AND one appears in the same re-plan: the
+        // vanished group re-inserts as a ghost, reducing the delta to a
+        // pure appeared-group translation over the augmented item list.
+        let opts = SolveOptions::default();
+        let prev = simple_problem(
+            &[(2.0, 1.0, 5), (3.0, 2.0, 3), (1.5, 0.8, 4)],
+            &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)],
+        );
+        let (_, st) = solve(&prev, &opts).unwrap();
+        assert!(st.proven_optimal);
+        let Some(basis) = st.root_basis.clone() else {
+            return; // no root basis recorded: nothing to translate
+        };
+        // Group 1 (3.0-core) vanished; a 2.5-core group appeared in its
+        // place. Augmented list: [old0, ghost(old1), appeared, old2] — the
+        // ghost re-inserts at 1, the appeared group sits at 2.
+        let now = simple_problem(
+            &[(2.0, 1.0, 5), (2.5, 1.2, 2), (1.5, 0.8, 4)],
+            &[(8.0, 15.0, 1.0), (16.0, 30.0, 1.7)],
+        );
+        let hints = DeltaHints {
+            root_basis: None,
+            branch_order: Vec::new(),
+            ghosts: vec![GhostGroup {
+                position: 1,
+                demand_bits: prev.items[1]
+                    .demand_per_bin
+                    .iter()
+                    .map(|d| d.map(|dims| dims.as_array().map(f64::to_bits)))
+                    .collect(),
+                count: prev.items[1].count,
+            }],
+            appeared: Some(PrevLayout {
+                basis,
+                blocks: st.var_blocks.clone(),
+                num_vars: st.milp_vars,
+                num_groups: prev.items.len(),
+                new_groups: vec![2],
+            }),
+        };
+        let (cold, cold_st) = solve(&now, &opts).unwrap();
+        let (warm, warm_st) = solve_delta(&now, &opts, None, None, Some(&hints)).unwrap();
+        assert!(cold_st.proven_optimal && warm_st.proven_optimal);
+        assert_eq!(warm_st.structural_ghosts, 1);
+        assert!(
+            (warm.total_cost(&now) - cold.total_cost(&now)).abs() < 1e-9,
+            "mixed warm {} != cold {}",
+            warm.total_cost(&now),
+            cold.total_cost(&now)
+        );
+        warm.validate(&now).unwrap();
+        // Ghost-embedded solves publish no warm hints.
+        assert!(warm_st.root_basis.is_none());
+        assert!(warm_st.var_blocks.is_empty());
     }
 
     #[test]

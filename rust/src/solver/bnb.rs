@@ -17,7 +17,7 @@
 //! all-cold one.
 
 use super::simplex::{
-    resume_from_basis_with_stats, solve_lp_with_stats, Lp, LpOutcome, LpStats, Op, Resume,
+    resume_from_basis_with_stats, solve_lp_partial_with_stats, Lp, LpOutcome, LpStats, Op, Resume,
 };
 use crate::error::{Error, Result};
 use std::cmp::Ordering;
@@ -221,8 +221,13 @@ pub fn solve_milp(milp: &Milp, opts: &MilpOptions) -> Result<MilpSolution> {
                 o
             }
             None => {
+                // Cold node LPs take the candidate-list partial-pricing
+                // mode: the optimum *cost* is pivot-path independent (the
+                // final full sweep certifies it), and node LPs are the
+                // search's hot path. The bit-parity pins stay on
+                // `solve_lp`'s full-Dantzig mode.
                 lp_cold += 1;
-                solve_lp_with_stats(&lp, &mut lp_stats)?
+                solve_lp_partial_with_stats(&lp, &mut lp_stats)?
             }
         };
         let sol = match outcome {

@@ -23,6 +23,27 @@
 //! choices and certify bit-identical results (see the parity property in
 //! `tests/properties.rs`).
 //!
+//! ## Eta compaction and the measured-fill trigger
+//!
+//! Update etas used to be boxed one `Vec` per pivot and retired only by a
+//! fixed `16·m + 256` nonzero cap. The file is now *compacted*: every eta's
+//! off-row entries live in one flat arena (`EtaFile`), and exact-identity
+//! steps (unit pivot, no off-row entries — a bit-exact no-op, since
+//! `x · 1.0` preserves bits) are elided on push, so unit-column pivots add
+//! zero fill. Both changes are storage-only: the per-entry arithmetic is the
+//! same multiply/subtract sequence in the same order, keeping the bit-parity
+//! guarantee intact (pinned by `prop_compacted_eta_matches_reference` in
+//! `tests/properties.rs`). A true Forrest–Tomlin column merge would break
+//! that guarantee, which is why compaction stops at layout + elision.
+//!
+//! The refactorization trigger is tuned from *measured* fill instead of the
+//! fixed cap: the factorization remembers the nonzero count of its last
+//! rebuilt base file (`base_nnz`) and retires the file once update fill
+//! exceeds `2·base_nnz + 8·m + 256` — a dense base earns proportionally more
+//! update headroom, a near-identity base refactorizes sooner. The high-water
+//! mark of the file ([`Factorization::fill_watermark`]) is exported through
+//! `LpStats` so benches can assert fill stays bounded between rebuilds.
+//!
 //! Positions vs rows: callers index the basis by *position* `p` (the slot in
 //! the row-aligned basis vector, identical to the dense tableau's row). A
 //! crash factorization or refactorization is free to pivot position `p` in
@@ -37,9 +58,10 @@ pub(crate) const EPS: f64 = 1e-9;
 pub(crate) const PIVOT_EPS: f64 = 1e-7;
 /// Refactorize after this many product-form updates.
 const REFACTOR_UPDATES: usize = 64;
-/// ... or when the eta file carries more than `16·m + 256` nonzeros.
-const REFACTOR_FILL_PER_ROW: usize = 16;
-const REFACTOR_FILL_BASE: usize = 256;
+/// ... or when measured fill exceeds `2·base_nnz + 8·m + 256` nonzeros
+/// (see [`Factorization::fill_cap`]).
+const FILL_SLACK_PER_ROW: usize = 8;
+const FILL_SLACK_BASE: usize = 256;
 
 /// One Gauss-Jordan elimination step: pivot in `row`, eliminating the pivot
 /// column from every other row. `entries` holds the pre-elimination column
@@ -47,8 +69,11 @@ const REFACTOR_FILL_BASE: usize = 256;
 /// reciprocal.
 #[derive(Clone, Debug)]
 pub struct Eta {
+    /// Pivot row of this elimination step.
     pub row: usize,
+    /// Reciprocal of the pivot entry.
     pub inv: f64,
+    /// `(row, value)` column entries outside the pivot row.
     pub entries: Vec<(usize, f64)>,
 }
 
@@ -90,6 +115,82 @@ impl Eta {
         }
         Some(Eta { row, inv: 1.0 / piv, entries })
     }
+
+    /// Whether applying this eta is a bit-exact no-op: unit pivot (so
+    /// `x[row] · 1.0` preserves bits) and no off-row entries.
+    fn is_identity(&self) -> bool {
+        self.entries.is_empty() && self.inv.to_bits() == 1.0f64.to_bits()
+    }
+}
+
+/// Compacted eta file: every eta's off-row entries live in one flat arena,
+/// each eta head holding only `(pivot row, pivot reciprocal, arena offset)`.
+/// Exact-identity etas are elided on push. Both are storage-only changes —
+/// the applied arithmetic is [`Eta::apply`]'s loop, entry for entry, in the
+/// same order, so transforms stay bit-for-bit equal to a boxed
+/// `Vec<Eta>` replay of the same pivots.
+#[derive(Clone, Debug, Default)]
+struct EtaFile {
+    /// Per eta: pivot row, pivot reciprocal, start offset into `entries`.
+    heads: Vec<(u32, f64, u32)>,
+    /// Off-row elimination entries of every eta, concatenated in push order.
+    entries: Vec<(u32, f64)>,
+}
+
+impl EtaFile {
+    fn clear(&mut self) {
+        self.heads.clear();
+        self.entries.clear();
+    }
+
+    /// Nonzeros held: one pivot reciprocal per eta plus all off-row entries.
+    fn nnz(&self) -> usize {
+        self.heads.len() + self.entries.len()
+    }
+
+    /// Append an eta, eliding exact identities; returns the nonzeros added.
+    fn push(&mut self, eta: &Eta) -> usize {
+        if eta.is_identity() {
+            return 0;
+        }
+        self.heads.push((eta.row as u32, eta.inv, self.entries.len() as u32));
+        self.entries.extend(eta.entries.iter().map(|&(i, v)| (i as u32, v)));
+        eta.entries.len() + 1
+    }
+
+    /// Arena span of eta `k`.
+    #[inline]
+    fn span(&self, k: usize) -> (usize, usize) {
+        let lo = self.heads[k].2 as usize;
+        let hi = self.heads.get(k + 1).map_or(self.entries.len(), |h| h.2 as usize);
+        (lo, hi)
+    }
+
+    /// FTRAN over the whole file: each eta in push order.
+    fn apply_all(&self, x: &mut [f64]) {
+        for k in 0..self.heads.len() {
+            let (row, inv, _) = self.heads[k];
+            let (lo, hi) = self.span(k);
+            let xr = x[row as usize] * inv;
+            for &(i, v) in &self.entries[lo..hi] {
+                x[i as usize] -= v * xr;
+            }
+            x[row as usize] = xr;
+        }
+    }
+
+    /// BTRAN over the whole file: each transposed eta in reverse order.
+    fn apply_all_transposed(&self, y: &mut [f64]) {
+        for k in (0..self.heads.len()).rev() {
+            let (row, inv, _) = self.heads[k];
+            let (lo, hi) = self.span(k);
+            let mut s = y[row as usize];
+            for &(i, v) in &self.entries[lo..hi] {
+                s -= v * y[i as usize];
+            }
+            y[row as usize] = s * inv;
+        }
+    }
 }
 
 /// Product-form factorization of an `m × m` basis matrix, plus the
@@ -99,8 +200,12 @@ pub struct Factorization {
     m: usize,
     /// Base etas (from the last crash/refactorization) followed by update
     /// etas, applied in order for FTRAN and in reverse for BTRAN.
-    etas: Vec<Eta>,
-    eta_nnz: usize,
+    etas: EtaFile,
+    /// Nonzeros of the base file alone, measured at the last successful
+    /// (re)factorization; sets the fill headroom for update etas.
+    base_nnz: usize,
+    /// High-water mark of the file's nonzero count over the whole solve.
+    fill_watermark: usize,
     /// Updates appended since the last (re)factorization.
     updates: usize,
     row_of_pos: Vec<usize>,
@@ -119,8 +224,9 @@ impl Factorization {
     pub fn identity(m: usize) -> Self {
         Factorization {
             m,
-            etas: Vec::new(),
-            eta_nnz: 0,
+            etas: EtaFile::default(),
+            base_nnz: 0,
+            fill_watermark: 0,
             updates: 0,
             row_of_pos: (0..m).collect(),
             ftran_count: 0,
@@ -153,14 +259,33 @@ impl Factorization {
         self.row_of_pos[p]
     }
 
+    /// Current nonzero count of the eta file (base + update etas).
+    pub fn eta_nnz(&self) -> usize {
+        self.etas.nnz()
+    }
+
+    /// High-water mark of the eta file's nonzero count over the solve so
+    /// far. Bounded by [`fill_cap`](Self::fill_cap)` + m + 1`: the trigger
+    /// is consulted after every pivot and one update eta adds at most
+    /// `m + 1` nonzeros.
+    pub fn fill_watermark(&self) -> usize {
+        self.fill_watermark
+    }
+
+    /// Measured-fill retirement threshold: `2·base_nnz + 8·m + 256`. A
+    /// dense base file earns proportionally more update headroom; a
+    /// near-identity base (compaction elides its unit etas) refactorizes
+    /// as soon as update fill alone passes the slack term.
+    pub fn fill_cap(&self) -> usize {
+        2 * self.base_nnz + FILL_SLACK_PER_ROW * self.m + FILL_SLACK_BASE
+    }
+
     /// Apply the eta file to `x` in place (forward transform): `x` becomes
     /// the tableau column of the original column scattered into `x`, indexed
     /// by internal row (read position `p` at [`row`](Self::row)`(p)`).
     pub fn ftran(&mut self, x: &mut [f64]) {
         self.ftran_count += 1;
-        for e in &self.etas {
-            e.apply(x);
-        }
+        self.etas.apply_all(x);
     }
 
     /// Apply the transposed eta file in reverse (backward transform): for
@@ -168,41 +293,41 @@ impl Factorization {
     /// dot product with an original column prices that column.
     pub fn btran(&mut self, y: &mut [f64]) {
         self.btran_count += 1;
-        for e in self.etas.iter().rev() {
-            e.apply_transposed(y);
-        }
+        self.etas.apply_all_transposed(y);
     }
 
     /// Absorb a basis exchange at position `p`: the entering column's FTRAN
-    /// result `z` becomes one more eta factor pivoted in `row(p)`. Returns
-    /// `false` (leaving the factorization unchanged) when the pivot entry is
-    /// numerically unusable.
+    /// result `z` becomes one more eta factor pivoted in `row(p)` (elided
+    /// when it is an exact identity). Returns `false` (leaving the
+    /// factorization unchanged) when the pivot entry is numerically
+    /// unusable.
     pub fn update(&mut self, p: usize, z: &[f64]) -> bool {
         let Some(eta) = Eta::from_column(z, self.row_of_pos[p]) else {
             return false;
         };
-        self.eta_nnz += eta.entries.len() + 1;
-        self.etas.push(eta);
+        self.etas.push(&eta);
+        self.fill_watermark = self.fill_watermark.max(self.etas.nnz());
         self.updates += 1;
         true
     }
 
-    /// Whether the eta file has grown past the update-count or fill
-    /// thresholds and should be rebuilt from the current basis columns.
+    /// Whether the eta file has grown past the update-count threshold or
+    /// the measured-fill cap and should be rebuilt from the current basis
+    /// columns.
     pub fn should_refactorize(&self) -> bool {
-        self.updates >= REFACTOR_UPDATES
-            || self.eta_nnz > REFACTOR_FILL_PER_ROW * self.m + REFACTOR_FILL_BASE
+        self.updates >= REFACTOR_UPDATES || self.etas.nnz() > self.fill_cap()
     }
 
     /// Rebuild the eta file from the current basis columns, carrying the
-    /// operation counters over. Returns `false` (keeping the existing —
-    /// still valid — eta file and deferring the next rebuild) if the fresh
-    /// factorization fails numerically.
+    /// operation counters and fill watermark over. Returns `false` (keeping
+    /// the existing — still valid — eta file and deferring the next rebuild)
+    /// if the fresh factorization fails numerically.
     pub fn refactorize(&mut self, cols: &[Vec<(usize, f64)>]) -> bool {
         match Self::factorize(self.m, cols) {
             Some(fresh) => {
                 self.etas = fresh.etas;
-                self.eta_nnz = fresh.eta_nnz;
+                self.base_nnz = self.etas.nnz();
+                self.fill_watermark = self.fill_watermark.max(self.etas.nnz());
                 self.updates = 0;
                 self.row_of_pos = fresh.row_of_pos;
                 self.refactorizations += 1;
@@ -210,8 +335,11 @@ impl Factorization {
             }
             None => {
                 // Defer: pretend we just refactorized so the solve makes
-                // progress instead of re-attempting every pivot.
+                // progress instead of re-attempting every pivot. The kept
+                // file becomes the new fill base, so the fill trigger also
+                // re-arms instead of re-firing immediately.
                 self.updates = 0;
+                self.base_nnz = self.etas.nnz();
                 false
             }
         }
@@ -224,8 +352,7 @@ impl Factorization {
 /// shared sub-block of a memoized basis, then fill the unclaimed rows).
 pub struct Builder {
     m: usize,
-    etas: Vec<Eta>,
-    eta_nnz: usize,
+    etas: EtaFile,
     claimed: Vec<bool>,
     /// `(position, row)` pairs in pivot order; positions must form
     /// `0..m` (in any order) by `finish` time.
@@ -234,7 +361,7 @@ pub struct Builder {
 
 impl Builder {
     pub fn new(m: usize) -> Self {
-        Builder { m, etas: Vec::new(), eta_nnz: 0, claimed: vec![false; m], assigned: Vec::new() }
+        Builder { m, etas: EtaFile::default(), claimed: vec![false; m], assigned: Vec::new() }
     }
 
     /// Scatter a sparse column and apply the etas accumulated so far —
@@ -244,9 +371,7 @@ impl Builder {
         for &(i, v) in col {
             x[i] += v;
         }
-        for e in &self.etas {
-            e.apply(&mut x);
-        }
+        self.etas.apply_all(&mut x);
         x
     }
 
@@ -289,8 +414,7 @@ impl Builder {
         let Some(eta) = Eta::from_column(&z, r) else {
             return false;
         };
-        self.eta_nnz += eta.entries.len() + 1;
-        self.etas.push(eta);
+        self.etas.push(&eta);
         self.claimed[r] = true;
         self.assigned.push((p, r));
         true
@@ -309,10 +433,12 @@ impl Builder {
             }
             row_of_pos[p] = r;
         }
+        let base_nnz = self.etas.nnz();
         Some(Factorization {
             m: self.m,
             etas: self.etas,
-            eta_nnz: self.eta_nnz,
+            base_nnz,
+            fill_watermark: base_nnz,
             updates: 0,
             row_of_pos,
             ftran_count: 0,
@@ -414,6 +540,72 @@ mod tests {
         // Back to the original basis: the solve from the first test holds.
         let w = ftran_pos(&mut f, &[3.0, 5.0, 7.0]);
         assert!((w[0] - 1.0).abs() < 1e-12, "{w:?}");
+    }
+
+    #[test]
+    fn identity_etas_are_elided() {
+        // Factorizing the identity basis produces only unit-pivot etas,
+        // all elided: zero fill, and transforms stay exact no-ops.
+        let unit: Vec<Vec<(usize, f64)>> = (0..4).map(|r| vec![(r, 1.0)]).collect();
+        let mut f = Factorization::factorize(4, &unit).expect("nonsingular");
+        assert_eq!(f.eta_nnz(), 0);
+        let mut x = vec![0.25, -0.0, 3.5, 7.125];
+        let before = x.clone();
+        f.ftran(&mut x);
+        let same = x
+            .iter()
+            .zip(&before)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "{x:?} != {before:?}");
+        // An update with a unit column at the pivot row is likewise elided.
+        let mut z = vec![0.0; 4];
+        z[f.row(1)] = 1.0;
+        assert!(f.update(1, &z));
+        assert_eq!(f.eta_nnz(), 0);
+    }
+
+    #[test]
+    fn fill_trigger_fires_at_the_measured_boundary() {
+        // m = 8, identity base: cap = 2·0 + 8·8 + 256 = 320 nonzeros.
+        // Each fully dense update eta (pivot 2.0, seven off-row entries)
+        // adds exactly 8 nonzeros.
+        let mut f = Factorization::identity(8);
+        assert_eq!(f.fill_cap(), 320);
+        let z = vec![2.0; 8];
+        for k in 1..=40 {
+            assert!(f.update(k % 8, &z));
+            assert_eq!(f.eta_nnz(), 8 * k);
+        }
+        // 320 nonzeros == cap exactly: at the boundary, no trigger yet
+        // (and the update-count trigger is far off at 40 < 64).
+        assert!(!f.should_refactorize());
+        assert!(f.update(0, &z));
+        // 328 > 320 with only 41 updates: the fill term fires, not the
+        // update count.
+        assert!(f.should_refactorize());
+        assert_eq!(f.fill_watermark(), 328);
+
+        // A successful rebuild from unit columns drops fill to zero
+        // (identity etas elided), re-arms the trigger, and keeps the
+        // watermark as the recorded high-water mark.
+        let unit: Vec<Vec<(usize, f64)>> = (0..8).map(|r| vec![(r, 1.0)]).collect();
+        assert!(f.refactorize(&unit));
+        assert_eq!(f.eta_nnz(), 0);
+        assert!(!f.should_refactorize());
+        assert_eq!(f.fill_watermark(), 328);
+
+        // Refill past the cap, then fail the rebuild (singular columns):
+        // the defer path keeps the file but re-bases the fill cap on it,
+        // so the trigger re-arms instead of firing every pivot.
+        for k in 1..=41 {
+            assert!(f.update(k % 8, &z));
+        }
+        assert!(f.should_refactorize());
+        let singular: Vec<Vec<(usize, f64)>> = (0..8).map(|_| vec![(0, 1.0)]).collect();
+        assert!(!f.refactorize(&singular));
+        assert_eq!(f.eta_nnz(), 328, "failed rebuild keeps the valid file");
+        assert_eq!(f.fill_cap(), 2 * 328 + 320);
+        assert!(!f.should_refactorize());
     }
 
     #[test]

@@ -30,8 +30,9 @@ pub mod factor;
 pub mod simplex;
 
 pub use bnb::{solve_milp, Milp, MilpOptions, MilpSolution};
+pub use factor::{Eta, Factorization};
 pub use simplex::{
     complete_basis, resume_from_basis, resume_from_basis_with_stats, solve_lp, solve_lp_dense,
-    solve_lp_dense_with_stats, solve_lp_with_stats, Constraint, Lp, LpOutcome, LpSolution,
-    LpStats, Op, Resume,
+    solve_lp_dense_with_stats, solve_lp_partial, solve_lp_partial_with_stats, solve_lp_with_pricing,
+    solve_lp_with_stats, Constraint, Lp, LpOutcome, LpSolution, LpStats, Op, Pricing, Resume,
 };

@@ -17,6 +17,30 @@
 //! revised==dense parity property in `tests/properties.rs` checkable with
 //! `==` rather than tolerances.
 //!
+//! ## Pricing modes
+//!
+//! The revised path prices entering columns in one of two modes
+//! ([`Pricing`]):
+//!
+//! * [`Pricing::Dantzig`] — the default and the *reference* mode: every
+//!   iteration BTRANs the basic costs and prices **all** non-basic columns.
+//!   This is the mode the bit-for-bit revised==dense property is pinned on
+//!   ([`solve_lp`] uses it).
+//! * [`Pricing::PartialCandidates`] — candidate-list partial pricing
+//!   ([`solve_lp_partial`]): a bounded list of attractive columns is built
+//!   by a full sweep, then most iterations reprice *only the list* against
+//!   fresh multipliers, falling back to a full sweep when the list runs
+//!   dry. Per-iteration pricing cost drops from `O(n·nnz)` to the candidate
+//!   budget. Optimality is only ever declared by a full sweep that prices
+//!   every column — the final sweep is the optimality certificate — so the
+//!   mode returns exact optima (same objective as dense to ≤ 1e-9; the
+//!   pivot *path* may differ, so bit-parity is not promised).
+//!
+//! Pricing work is observable through [`LpStats`]: `pricing_iterations`,
+//! `priced_columns` (their ratio is the priced-columns-per-iteration metric
+//! `bench_solver` reports) and `full_sweeps`, alongside the eta-file fill
+//! watermark/cap exported from the factorization.
+//!
 //! [`solve_lp`] reports the optimal basis alongside the solution (when it is
 //! free of artificial columns), and [`resume_from_basis`] re-enters the
 //! simplex from such a basis by *crash-factorizing* it directly — no
@@ -121,6 +145,24 @@ pub struct LpStats {
     pub btran_ops: u64,
     /// Eta-file rebuilds triggered mid-solve (revised path only).
     pub refactorizations: u64,
+    /// Pricing rounds executed (one per simplex iteration on the revised
+    /// path — full sweeps and candidate-list repricings both count).
+    pub pricing_iterations: u64,
+    /// Columns actually priced, summed over all pricing rounds. Divided by
+    /// `pricing_iterations` this is the priced-columns-per-iteration metric:
+    /// ~`n` under full Dantzig, far below `n` under partial pricing.
+    pub priced_columns: u64,
+    /// Pricing rounds that swept every non-basic column (every round under
+    /// full Dantzig; candidate-list refreshes and the final optimality
+    /// certificate under partial pricing).
+    pub full_sweeps: u64,
+    /// High-water mark of the eta file's nonzero count (max-merged on
+    /// [`absorb`](Self::absorb), since it is a watermark, not a flow).
+    pub eta_fill_watermark: u64,
+    /// Measured-fill refactorization cap in force at the end of the solve
+    /// (max-merged on absorb). `eta_fill_watermark` staying within
+    /// `eta_fill_cap + m + 1` is the bounded-fill guarantee.
+    pub eta_fill_cap: u64,
 }
 
 impl LpStats {
@@ -130,7 +172,25 @@ impl LpStats {
         self.ftran_ops += other.ftran_ops;
         self.btran_ops += other.btran_ops;
         self.refactorizations += other.refactorizations;
+        self.pricing_iterations += other.pricing_iterations;
+        self.priced_columns += other.priced_columns;
+        self.full_sweeps += other.full_sweeps;
+        self.eta_fill_watermark = self.eta_fill_watermark.max(other.eta_fill_watermark);
+        self.eta_fill_cap = self.eta_fill_cap.max(other.eta_fill_cap);
     }
+}
+
+/// Entering-column pricing strategy for the revised simplex (see the
+/// module docs' *Pricing modes* section).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Pricing {
+    /// Full Dantzig pricing: every iteration prices all non-basic columns.
+    /// The reference mode the bit-for-bit revised==dense property pins.
+    #[default]
+    Dantzig,
+    /// Candidate-list partial pricing: reprice a bounded list most
+    /// iterations, refresh it (and certify optimality) with full sweeps.
+    PartialCandidates,
 }
 
 const EPS: f64 = 1e-9;
@@ -380,6 +440,15 @@ struct Revised {
     in_basis: Vec<bool>,
     barred: Vec<bool>,
     stats: LpStats,
+    pricing: Pricing,
+    /// Scratch: simplex multipliers (BTRAN output), reused every round.
+    y: Vec<f64>,
+    /// Scratch: reduced costs per column, reused every round.
+    rc: Vec<f64>,
+    /// Scratch: FTRAN column / unit-row BTRAN vector, reused every round.
+    zcol: Vec<f64>,
+    /// Candidate list of attractive non-basic columns (partial pricing).
+    candidates: Vec<usize>,
 }
 
 impl Revised {
@@ -415,6 +484,11 @@ impl Revised {
             in_basis,
             barred: vec![false; n],
             stats: LpStats::default(),
+            pricing: Pricing::Dantzig,
+            y: vec![0.0; m],
+            rc: vec![0.0; n],
+            zcol: vec![0.0; m],
+            candidates: Vec::new(),
         }
     }
 
@@ -457,13 +531,22 @@ impl Revised {
             in_basis: seen,
             barred: vec![false; n],
             stats: LpStats::default(),
+            pricing: Pricing::Dantzig,
+            y: vec![0.0; m],
+            rc: vec![0.0; n],
+            zcol: vec![0.0; m],
+            candidates: Vec::new(),
         })
     }
 
     /// Scatter column `j` and FTRAN it: the tableau column, indexed by
-    /// internal row (read position `p` at `fact.row(p)`).
+    /// internal row (read position `p` at `fact.row(p)`). The returned
+    /// buffer is the `zcol` scratch; [`pivot_update`](Self::pivot_update)
+    /// hands it back, so the steady-state loop allocates nothing.
     fn ftran_col(&mut self, j: usize) -> Vec<f64> {
-        let mut z = vec![0.0; self.m];
+        let mut z = std::mem::take(&mut self.zcol);
+        z.clear();
+        z.resize(self.m, 0.0);
         for &(i, v) in &self.cols[j] {
             z[i] += v;
         }
@@ -471,24 +554,96 @@ impl Revised {
         z
     }
 
-    /// BTRAN the basic costs into simplex multipliers and price every
-    /// non-basic, non-barred column. Recomputed fresh each iteration, so
-    /// reduced costs never accumulate drift across pivots.
-    fn reduced_costs(&mut self) -> Vec<f64> {
-        let mut y = vec![0.0; self.m];
+    /// BTRAN the basic costs into simplex multipliers (the `y` scratch).
+    /// Recomputed fresh each pricing round, so reduced costs never
+    /// accumulate drift across pivots.
+    fn compute_multipliers(&mut self) {
+        self.y.iter_mut().for_each(|v| *v = 0.0);
         for p in 0..self.m {
-            y[self.fact.row(p)] = self.costs[self.basis[p]];
+            self.y[self.fact.row(p)] = self.costs[self.basis[p]];
         }
-        self.fact.btran(&mut y);
-        let mut rc = vec![0.0; self.n];
+        self.fact.btran(&mut self.y);
+    }
+
+    /// Reduced cost of column `j` against the current multipliers.
+    #[inline]
+    fn price(&self, j: usize) -> f64 {
+        let dot: f64 = self.cols[j].iter().map(|&(i, v)| self.y[i] * v).sum();
+        self.costs[j] - dot
+    }
+
+    /// Fresh multipliers plus a full pricing sweep into the `rc` scratch —
+    /// the only pricing that can certify optimality, and the one the
+    /// Dantzig mode runs every iteration.
+    fn full_price(&mut self) {
+        self.compute_multipliers();
+        self.stats.pricing_iterations += 1;
+        self.stats.full_sweeps += 1;
+        let mut priced = 0u64;
+        let mut rc = std::mem::take(&mut self.rc);
         for (j, out) in rc.iter_mut().enumerate() {
+            *out = 0.0;
             if self.in_basis[j] || self.barred[j] {
                 continue;
             }
-            let dot: f64 = self.cols[j].iter().map(|&(i, v)| y[i] * v).sum();
-            *out = self.costs[j] - dot;
+            *out = self.price(j);
+            priced += 1;
         }
-        rc
+        self.rc = rc;
+        self.stats.priced_columns += priced;
+    }
+
+    /// One partial-pricing round: reprice the surviving candidates against
+    /// fresh multipliers, dropping columns that entered the basis or are no
+    /// longer improving; when the list runs dry, run a full sweep and refill
+    /// it with the `cap` most attractive strictly improving columns (kept in
+    /// ascending column order for determinism). Returns `false` when the
+    /// full sweep found no improving column — the optimality certificate.
+    fn prime_candidates(&mut self, cap: usize) -> bool {
+        self.compute_multipliers();
+        self.stats.pricing_iterations += 1;
+        let mut cands = std::mem::take(&mut self.candidates);
+        let mut rc = std::mem::take(&mut self.rc);
+        let mut priced = 0u64;
+        cands.retain(|&j| {
+            if self.in_basis[j] || self.barred[j] {
+                return false;
+            }
+            let r = self.price(j);
+            rc[j] = r;
+            priced += 1;
+            r < -EPS
+        });
+        if cands.is_empty() {
+            self.stats.full_sweeps += 1;
+            for (j, out) in rc.iter_mut().enumerate() {
+                *out = 0.0;
+                if self.in_basis[j] || self.barred[j] {
+                    continue;
+                }
+                let r = self.price(j);
+                *out = r;
+                priced += 1;
+                if r < -EPS {
+                    cands.push(j);
+                }
+            }
+            if cands.len() > cap {
+                cands.sort_by(|&a, &b| {
+                    rc[a]
+                        .partial_cmp(&rc[b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                });
+                cands.truncate(cap);
+                cands.sort_unstable();
+            }
+        }
+        self.stats.priced_columns += priced;
+        let have = !cands.is_empty();
+        self.candidates = cands;
+        self.rc = rc;
+        have
     }
 
     /// Execute the basis exchange: update the basic values with exactly the
@@ -519,6 +674,9 @@ impl Revised {
         self.in_basis[self.basis[p]] = false;
         self.in_basis[col] = true;
         self.basis[p] = col;
+        // Hand the FTRAN scratch back before a possible refactorization
+        // (which borrows it to re-derive the basic values).
+        self.zcol = z;
         if self.fact.should_refactorize() {
             self.refresh_factorization();
         }
@@ -531,23 +689,80 @@ impl Revised {
         let bcols: Vec<Vec<(usize, f64)>> =
             self.basis.iter().map(|&c| self.cols[c].clone()).collect();
         if self.fact.refactorize(&bcols) {
-            let mut z = self.b.clone();
+            let mut z = std::mem::take(&mut self.zcol);
+            z.clear();
+            z.extend_from_slice(&self.b);
             self.fact.ftran(&mut z);
             for p in 0..self.m {
                 self.x[p] = z[self.fact.row(p)];
             }
+            self.zcol = z;
         }
     }
 
-    /// Primal simplex on the current costs. `Ok(true)` at optimality,
-    /// `Ok(false)` on an unbounded direction.
+    /// Primal simplex on the current costs under the configured pricing
+    /// mode. `Ok(true)` at optimality, `Ok(false)` on an unbounded
+    /// direction.
     fn optimize(&mut self, max_iters: usize) -> Result<bool> {
+        match self.pricing {
+            Pricing::Dantzig => self.optimize_dantzig(max_iters),
+            Pricing::PartialCandidates => self.optimize_partial(max_iters),
+        }
+    }
+
+    /// Full-Dantzig loop: every iteration is a full pricing sweep. The
+    /// reference mode — its pivot sequence is what the dense tableau
+    /// reproduces bit for bit.
+    fn optimize_dantzig(&mut self, max_iters: usize) -> Result<bool> {
         for iter in 0..max_iters {
             let bland = iter >= BLAND_AFTER;
-            let rc = self.reduced_costs();
-            let Some(col) = choose_entering(self.n, bland, |j| rc[j]) else {
+            self.full_price();
+            let Some(col) = choose_entering(self.n, bland, |j| self.rc[j]) else {
                 return Ok(true);
             };
+            let z = self.ftran_col(col);
+            let leave =
+                choose_leaving(self.m, &self.basis, |p| z[self.fact.row(p)], |p| self.x[p]);
+            match leave {
+                Some((p, ratio)) => {
+                    if ratio <= EPS {
+                        self.stats.degenerate_pivots += 1;
+                    }
+                    self.stats.iterations += 1;
+                    self.pivot_update(p, col, z)?;
+                }
+                None => return Ok(false),
+            }
+        }
+        Err(Error::solver("simplex iteration limit exceeded"))
+    }
+
+    /// Candidate-list loop: cheap repricing of a bounded list most
+    /// iterations, full sweeps only to refresh it — and any claim of
+    /// optimality comes from a full sweep inside
+    /// [`prime_candidates`](Self::prime_candidates), never from the list
+    /// alone. A degenerate stall falls back to the Dantzig loop (which
+    /// itself escalates to Bland's rule), so termination matches the
+    /// reference mode's guarantee.
+    fn optimize_partial(&mut self, max_iters: usize) -> Result<bool> {
+        let cap = (self.n / 8).clamp(16, 128);
+        self.candidates.clear();
+        for iter in 0..max_iters {
+            if iter >= BLAND_AFTER {
+                return self.optimize_dantzig(max_iters - iter);
+            }
+            if !self.prime_candidates(cap) {
+                return Ok(true);
+            }
+            let pick =
+                choose_entering(self.candidates.len(), false, |k| self.rc[self.candidates[k]]);
+            let Some(k) = pick else {
+                // Every candidate sits inside the EPS window's blind spot;
+                // drop the list and let the next round's full sweep decide.
+                self.candidates.clear();
+                continue;
+            };
+            let col = self.candidates[k];
             let z = self.ftran_col(col);
             let leave =
                 choose_leaving(self.m, &self.basis, |p| z[self.fact.row(p)], |p| self.x[p]);
@@ -583,13 +798,16 @@ impl Revised {
             }
             let Some(p) = leave else { return Ok(true) };
             // Pricing row for the leaving position, via BTRAN of its unit
-            // vector; entering column by the dual ratio test over negative
-            // row entries (first minimum kept — deterministic).
+            // vector (in the reused scratch); entering column by the dual
+            // ratio test over negative row entries (first minimum kept —
+            // deterministic).
             let r = self.fact.row(p);
-            let mut rho = vec![0.0; self.m];
+            let mut rho = std::mem::take(&mut self.zcol);
+            rho.clear();
+            rho.resize(self.m, 0.0);
             rho[r] = 1.0;
             self.fact.btran(&mut rho);
-            let rc = self.reduced_costs();
+            self.full_price();
             let mut col = None;
             let mut best = f64::INFINITY;
             for j in 0..self.n {
@@ -598,13 +816,14 @@ impl Revised {
                 }
                 let arj: f64 = self.cols[j].iter().map(|&(i, v)| rho[i] * v).sum();
                 if arj < -EPS {
-                    let ratio = rc[j].max(0.0) / -arj;
+                    let ratio = self.rc[j].max(0.0) / -arj;
                     if ratio < best {
                         best = ratio;
                         col = Some(j);
                     }
                 }
             }
+            self.zcol = rho;
             match col {
                 Some(c) => {
                     let z = self.ftran_col(c);
@@ -643,6 +862,7 @@ impl Revised {
                         self.pivot_update(p, j, z)?;
                         break;
                     }
+                    self.zcol = z;
                 }
             }
             // No usable column: the row is redundant; the artificial stays
@@ -687,8 +907,8 @@ impl Revised {
         if !primal_feasible {
             // Only the RHS moved: the basis stays dual feasible and a dual
             // simplex pass repairs it. Anything else is not certifiable.
-            let rc = self.reduced_costs();
-            if rc.iter().any(|&v| v < -FEAS_EPS) {
+            self.full_price();
+            if self.rc.iter().any(|&v| v < -FEAS_EPS) {
                 return Ok(Resume::NotCertified);
             }
             match self.dual_optimize() {
@@ -709,24 +929,49 @@ impl Revised {
         finalize_solution(lp, &self.cols, &self.b, &self.basis, self.n_real)
     }
 
-    /// Fold the factorization's operation counters into the solve stats.
+    /// Fold the factorization's operation counters and fill telemetry into
+    /// the solve stats.
     fn merge_fact_stats(&mut self) {
         self.stats.ftran_ops += self.fact.ftran_count;
         self.stats.btran_ops += self.fact.btran_count;
         self.stats.refactorizations += self.fact.refactorizations;
+        self.stats.eta_fill_watermark =
+            self.stats.eta_fill_watermark.max(self.fact.fill_watermark() as u64);
+        self.stats.eta_fill_cap = self.stats.eta_fill_cap.max(self.fact.fill_cap() as u64);
     }
 }
 
 /// Solve the LP with the revised simplex; returns `Optimal`, `Infeasible`,
-/// or `Unbounded`.
+/// or `Unbounded`. Uses full-Dantzig pricing — the reference mode the
+/// bit-for-bit revised==dense property pins.
 pub fn solve_lp(lp: &Lp) -> Result<LpOutcome> {
     solve_lp_with_stats(lp, &mut LpStats::default())
 }
 
-/// [`solve_lp`], accumulating iteration/FTRAN/BTRAN/refactorization counts
-/// into `stats`.
+/// [`solve_lp`], accumulating iteration/pricing/FTRAN/BTRAN/refactorization
+/// counts into `stats`.
 pub fn solve_lp_with_stats(lp: &Lp, stats: &mut LpStats) -> Result<LpOutcome> {
+    solve_lp_with_pricing(lp, Pricing::Dantzig, stats)
+}
+
+/// Solve the LP with the revised simplex under candidate-list partial
+/// pricing — the production hot-path mode: exact optima (certified by a
+/// final full pricing sweep), much less pricing work per iteration, but no
+/// bit-for-bit pivot-path guarantee against the dense reference.
+pub fn solve_lp_partial(lp: &Lp) -> Result<LpOutcome> {
+    solve_lp_partial_with_stats(lp, &mut LpStats::default())
+}
+
+/// [`solve_lp_partial`] with counter accumulation into `stats`.
+pub fn solve_lp_partial_with_stats(lp: &Lp, stats: &mut LpStats) -> Result<LpOutcome> {
+    solve_lp_with_pricing(lp, Pricing::PartialCandidates, stats)
+}
+
+/// Solve the LP with the revised simplex under an explicit [`Pricing`]
+/// mode, accumulating counters into `stats`.
+pub fn solve_lp_with_pricing(lp: &Lp, pricing: Pricing, stats: &mut LpStats) -> Result<LpOutcome> {
     let mut rv = Revised::build_cold(lp);
+    rv.pricing = pricing;
     let out = rv.run_cold(lp);
     rv.merge_fact_stats();
     stats.absorb(&rv.stats);
@@ -909,8 +1154,10 @@ impl Tableau {
             let b = self.basis[r];
             let factor = self.a[self.m][b];
             if factor.abs() > EPS {
-                let row_vals: Vec<f64> = self.a[r].clone();
-                for (obj_v, row_v) in self.a[self.m].iter_mut().zip(row_vals.iter()) {
+                // Split-borrow the objective row from the constraint rows
+                // instead of cloning the row (same subtraction order).
+                let (rows, obj) = self.a.split_at_mut(self.m);
+                for (obj_v, row_v) in obj[0].iter_mut().zip(rows[r].iter()) {
                     *obj_v -= factor * row_v;
                 }
             }
@@ -985,8 +1232,8 @@ pub fn solve_lp_dense_with_stats(lp: &Lp, stats: &mut LpStats) -> Result<LpOutco
             if art_cols.contains(&t.basis[r]) {
                 let factor = t.a[m][t.basis[r]];
                 if factor.abs() > EPS {
-                    let row_vals: Vec<f64> = t.a[r].clone();
-                    for (obj_v, row_v) in t.a[m].iter_mut().zip(row_vals.iter()) {
+                    let (rows, obj) = t.a.split_at_mut(m);
+                    for (obj_v, row_v) in obj[0].iter_mut().zip(rows[r].iter()) {
                         *obj_v -= factor * row_v;
                     }
                 }
@@ -1407,5 +1654,90 @@ mod tests {
         }
         // A hopeless partial (under half the rows) is refused outright.
         assert!(complete_basis(&lp, &[]).is_none());
+    }
+
+    #[test]
+    fn partial_pricing_matches_dense_objectives() {
+        // Partial pricing promises exact optima (certified by a final full
+        // sweep), not bit-identical pivot paths: outcomes must match the
+        // dense reference variant-for-variant, objectives to 1e-9.
+        use crate::util::Rng;
+        let mut rng = Rng::new(0xCA11D);
+        for round in 0..40 {
+            let n = 3 + rng.index(12);
+            let m = 2 + rng.index(6);
+            let mut lp = Lp::new(n);
+            for j in 0..n {
+                lp.set_objective(j, rng.range_f64(0.5, 2.0));
+            }
+            for _ in 0..m {
+                let mut coeffs: Vec<(usize, f64)> = Vec::new();
+                for j in 0..n {
+                    if rng.bool(0.5) {
+                        coeffs.push((j, rng.range_f64(0.1, 1.5)));
+                    }
+                }
+                if coeffs.is_empty() {
+                    continue;
+                }
+                let op = if rng.bool(0.5) { Op::Ge } else { Op::Le };
+                lp.add_constraint(coeffs, op, rng.range_f64(0.5, 4.0));
+            }
+            let p = solve_lp_partial(&lp).unwrap();
+            let d = solve_lp_dense(&lp).unwrap();
+            match (p, d) {
+                (LpOutcome::Optimal(a), LpOutcome::Optimal(b)) => {
+                    assert!(
+                        (a.objective - b.objective).abs() <= 1e-9,
+                        "round {round}: partial {} vs dense {}",
+                        a.objective,
+                        b.objective
+                    );
+                }
+                (LpOutcome::Infeasible, LpOutcome::Infeasible) => {}
+                (LpOutcome::Unbounded, LpOutcome::Unbounded) => {}
+                (p, d) => panic!("round {round}: partial {p:?} vs dense {d:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn partial_pricing_prices_fewer_columns() {
+        // A wide covering LP: full Dantzig prices ~n columns per round,
+        // the candidate list far fewer on average.
+        use crate::util::Rng;
+        let mut rng = Rng::new(77);
+        let n = 400;
+        let m = 12;
+        let mut lp = Lp::new(n);
+        for j in 0..n {
+            lp.set_objective(j, rng.range_f64(0.5, 2.0));
+        }
+        for _ in 0..m {
+            let mut coeffs: Vec<(usize, f64)> = Vec::new();
+            for j in 0..n {
+                if rng.bool(0.2) {
+                    coeffs.push((j, rng.range_f64(0.1, 1.0)));
+                }
+            }
+            lp.add_constraint(coeffs, Op::Ge, rng.range_f64(1.0, 4.0));
+        }
+        let mut full = LpStats::default();
+        assert!(matches!(solve_lp_with_stats(&lp, &mut full).unwrap(), LpOutcome::Optimal(_)));
+        let mut part = LpStats::default();
+        assert!(matches!(
+            solve_lp_partial_with_stats(&lp, &mut part).unwrap(),
+            LpOutcome::Optimal(_)
+        ));
+        assert!(full.pricing_iterations > 0 && part.pricing_iterations > 0);
+        let full_per_iter = full.priced_columns as f64 / full.pricing_iterations as f64;
+        let part_per_iter = part.priced_columns as f64 / part.pricing_iterations as f64;
+        assert!(
+            part_per_iter < full_per_iter,
+            "partial {part_per_iter:.1} cols/iter !< full {full_per_iter:.1}"
+        );
+        assert!(part.full_sweeps < part.pricing_iterations || part.pricing_iterations <= 2);
+        // Fill telemetry flows through on both modes.
+        assert!(full.eta_fill_cap > 0 && part.eta_fill_cap > 0);
     }
 }

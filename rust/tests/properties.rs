@@ -13,7 +13,8 @@ use camflow::packing::heuristic::{self, simple_problem};
 use camflow::packing::mcvbp::{solve, solve_delta, DeltaHints, GhostGroup, PrevLayout, SolveOptions};
 use camflow::profiles::{Program, Resolution};
 use camflow::solver::{
-    solve_lp_dense_with_stats, solve_lp_with_stats, Lp, LpOutcome, LpStats, Op,
+    solve_lp_dense_with_stats, solve_lp_partial_with_stats, solve_lp_with_stats, Eta,
+    Factorization, Lp, LpOutcome, LpStats, Op,
 };
 use camflow::util::json;
 use camflow::util::proptest::check;
@@ -534,10 +535,199 @@ fn prop_revised_simplex_matches_dense_bit_for_bit() {
     );
 }
 
-/// Structural delta-solve is certified-or-cold in both directions: dropping
-/// a whole group from a solved instance (ghost embedding) or adding one to
-/// it (block-translated basis) must reproduce the cold exact cost whenever
-/// both sides prove optimality.
+/// Compacted eta storage (one flat arena plus identity-eta elision) is a
+/// layout change only: FTRAN and BTRAN through a [`Factorization`] driven
+/// by random pivot sequences must match an append-only `Vec<Eta>` replay of
+/// the same pivots bit-for-bit — including sequences with unit-column
+/// pivots, which the compacted file elides entirely.
+#[test]
+fn prop_compacted_eta_matches_reference() {
+    const EPS: f64 = 1e-9; // mirrors the factorization's drop tolerance
+    check(
+        0xE7AF17E,
+        40,
+        |rng: &mut Rng| {
+            let m = 2 + rng.index(7);
+            let pivots = 1 + rng.index(24);
+            let mut v = vec![m as u64, pivots as u64];
+            for _ in 0..pivots {
+                v.push(rng.index(m) as u64); // pivot position
+                v.push(rng.index(4) as u64); // 0 = unit column (identity eta)
+                for _ in 0..m {
+                    // Column entries in milli units; ~1/3 exact zeros.
+                    let z = if rng.index(3) == 0 {
+                        0
+                    } else {
+                        (rng.range_f64(-4.0, 4.0) * 1000.0).round() as i64
+                    };
+                    v.push(z as u64);
+                }
+            }
+            for _ in 0..m {
+                v.push((rng.range_f64(-9.0, 9.0) * 1000.0).round() as i64 as u64);
+            }
+            v
+        },
+        |enc: &Vec<u64>| {
+            let m = enc[0] as usize;
+            let pivots = enc[1] as usize;
+            let mut at = 2;
+            let mut fact = Factorization::identity(m);
+            let mut reference: Vec<Eta> = Vec::new();
+            for _ in 0..pivots {
+                let p = enc[at] as usize;
+                let unit = enc[at + 1] == 0;
+                let mut z: Vec<f64> = enc[at + 2..at + 2 + m]
+                    .iter()
+                    .map(|&u| u as i64 as f64 / 1000.0)
+                    .collect();
+                at += 2 + m;
+                if unit {
+                    // Exact unit column at the pivot row: the eta is an
+                    // exact identity the compacted file elides.
+                    z = vec![0.0; m];
+                    z[p] = 1.0;
+                }
+                // No refactorization happens here, so position p pivots in
+                // internal row p on both sides.
+                let accepted = fact.update(p, &z);
+                if z[p].abs() <= EPS {
+                    if accepted {
+                        return Err(format!("pivot {} accepted below EPS", z[p]));
+                    }
+                    continue;
+                }
+                if !accepted {
+                    return Err(format!("pivot {} rejected above EPS", z[p]));
+                }
+                // Append-only reference: the same entry filter, no elision.
+                let entries: Vec<(usize, f64)> = z
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, v)| i != p && v.abs() >= EPS)
+                    .map(|(i, &v)| (i, v))
+                    .collect();
+                reference.push(Eta { row: p, inv: 1.0 / z[p], entries });
+            }
+            let probe: Vec<f64> = enc[at..at + m]
+                .iter()
+                .map(|&u| u as i64 as f64 / 1000.0)
+                .collect();
+
+            let mut ftran_fact = probe.clone();
+            fact.ftran(&mut ftran_fact);
+            let mut ftran_ref = probe.clone();
+            for e in &reference {
+                e.apply(&mut ftran_ref);
+            }
+            if ftran_fact
+                .iter()
+                .zip(&ftran_ref)
+                .any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return Err(format!("FTRAN differs: {ftran_fact:?} vs {ftran_ref:?}"));
+            }
+
+            let mut btran_fact = probe.clone();
+            fact.btran(&mut btran_fact);
+            let mut btran_ref = probe;
+            for e in reference.iter().rev() {
+                e.apply_transposed(&mut btran_ref);
+            }
+            if btran_fact
+                .iter()
+                .zip(&btran_ref)
+                .any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return Err(format!("BTRAN differs: {btran_fact:?} vs {btran_ref:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Partial-pricing mode must agree with the dense reference on outcome
+/// variant and, for optimal instances, on the objective to ≤ 1e-9 — the
+/// certification the mode's final full pricing sweep provides in place of
+/// full-Dantzig's bit parity.
+#[test]
+fn prop_partial_pricing_matches_dense_objective() {
+    check(
+        0x9A127A1,
+        60,
+        |rng: &mut Rng| {
+            let n = 2 + rng.index(10);
+            let m = 1 + rng.index(6);
+            let mut v = vec![n as u64, m as u64];
+            for _ in 0..n {
+                v.push((rng.range_f64(0.2, 5.0) * 100.0).round() as u64);
+            }
+            for _ in 0..m {
+                v.push(rng.index(2) as u64); // op: 0 = Ge, 1 = Le
+                v.push((rng.range_f64(1.0, 12.0) * 100.0).round() as u64);
+                for _ in 0..n {
+                    let c = if rng.index(3) == 0 {
+                        0
+                    } else {
+                        (rng.range_f64(0.1, 3.0) * 100.0).round() as i64
+                    };
+                    v.push(c as u64);
+                }
+            }
+            v
+        },
+        |enc: &Vec<u64>| {
+            let n = enc[0] as usize;
+            let m = enc[1] as usize;
+            let mut lp = Lp::new(n);
+            for (j, &c) in enc[2..2 + n].iter().enumerate() {
+                lp.set_objective(j, c as f64 / 100.0);
+            }
+            let mut at = 2 + n;
+            for _ in 0..m {
+                let op = if enc[at] == 0 { Op::Ge } else { Op::Le };
+                let rhs = enc[at + 1] as f64 / 100.0;
+                let coeffs: Vec<(usize, f64)> = enc[at + 2..at + 2 + n]
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &c)| c != 0)
+                    .map(|(j, &c)| (j, c as i64 as f64 / 100.0))
+                    .collect();
+                at += 2 + n;
+                if coeffs.is_empty() {
+                    continue;
+                }
+                lp.add_constraint(coeffs, op, rhs);
+            }
+            let dense = solve_lp_dense_with_stats(&lp, &mut LpStats::default())
+                .map_err(|e| format!("dense solve failed: {e}"))?;
+            let partial = solve_lp_partial_with_stats(&lp, &mut LpStats::default())
+                .map_err(|e| format!("partial solve failed: {e}"))?;
+            match (&dense, &partial) {
+                (LpOutcome::Optimal(d), LpOutcome::Optimal(r)) => {
+                    if (d.objective - r.objective).abs() > 1e-9 {
+                        return Err(format!(
+                            "objectives differ: dense {} vs partial {}",
+                            d.objective, r.objective
+                        ));
+                    }
+                    Ok(())
+                }
+                (LpOutcome::Infeasible, LpOutcome::Infeasible)
+                | (LpOutcome::Unbounded, LpOutcome::Unbounded) => Ok(()),
+                _ => Err(format!(
+                    "outcome variants differ: dense {dense:?} vs partial {partial:?}"
+                )),
+            }
+        },
+    );
+}
+
+/// Structural delta-solve is certified-or-cold in every direction: dropping
+/// a whole group from a solved instance (ghost embedding), adding one to it
+/// (block-translated basis), or swapping one for another in a single
+/// re-plan (ghost + translation mixed) must reproduce the cold exact cost
+/// whenever both sides prove optimality.
 #[test]
 fn prop_structural_delta_solve_matches_cold_exact_solve() {
     check(
@@ -545,20 +735,26 @@ fn prop_structural_delta_solve_matches_cold_exact_solve() {
         20,
         |rng: &mut Rng| {
             let groups = 2 + rng.index(2);
-            let mut v = Vec::with_capacity(groups * 3 + 1);
+            let mut v = Vec::with_capacity(groups * 3 + 4);
             for _ in 0..groups {
                 v.push((rng.range_f64(0.4, 5.0) * 100.0).round() as u64);
                 v.push((rng.range_f64(0.4, 7.0) * 100.0).round() as u64);
                 v.push(2 + rng.index(5) as u64);
             }
-            v.push(rng.index(groups) as u64); // the group that appears/vanishes
+            // A replacement group for the mixed direction...
+            v.push((rng.range_f64(0.4, 5.0) * 100.0).round() as u64);
+            v.push((rng.range_f64(0.4, 7.0) * 100.0).round() as u64);
+            v.push(2 + rng.index(5) as u64);
+            v.push(rng.index(groups) as u64); // ...and the group it swaps for
             v
         },
         |enc: &Vec<u64>| {
-            let spec: Vec<(f64, f64, usize)> = enc[..enc.len() - 1]
+            let spec: Vec<(f64, f64, usize)> = enc[..enc.len() - 4]
                 .chunks_exact(3)
                 .map(|c| (c[0] as f64 / 100.0, c[1] as f64 / 100.0, c[2] as usize))
                 .collect();
+            let repl = &enc[enc.len() - 4..enc.len() - 1];
+            let repl = (repl[0] as f64 / 100.0, repl[1] as f64 / 100.0, repl[2] as usize);
             let which = enc[enc.len() - 1] as usize % spec.len();
             let smaller_spec: Vec<(f64, f64, usize)> = spec
                 .iter()
@@ -571,6 +767,16 @@ fn prop_structural_delta_solve_matches_cold_exact_solve() {
             let base = simple_problem(&spec, &bins);
             let smaller = simple_problem(&smaller_spec, &bins);
 
+            let ghost_of = |p: &PackingProblem, g: usize, at: usize| GhostGroup {
+                position: at,
+                demand_bits: p.items[g]
+                    .demand_per_bin
+                    .iter()
+                    .map(|d| d.map(|dims| dims.as_array().map(f64::to_bits)))
+                    .collect(),
+                count: p.items[g].count,
+            };
+
             // Vanished: `base` is the cached solve, `smaller` re-plans warm
             // through the ghost embedding of the dropped group.
             if let Ok((_, big_st)) = solve(&base, &opts) {
@@ -578,15 +784,7 @@ fn prop_structural_delta_solve_matches_cold_exact_solve() {
                     let hints = DeltaHints {
                         root_basis: big_st.root_basis.clone(),
                         branch_order: big_st.branch_order.clone(),
-                        ghost: Some(GhostGroup {
-                            position: which,
-                            demand_bits: base.items[which]
-                                .demand_per_bin
-                                .iter()
-                                .map(|d| d.map(|dims| dims.as_array().map(f64::to_bits)))
-                                .collect(),
-                            count: base.items[which].count,
-                        }),
+                        ghosts: vec![ghost_of(&base, which, which)],
                         appeared: None,
                     };
                     if let Ok((cold, cold_st)) = solve(&smaller, &opts) {
@@ -602,6 +800,40 @@ fn prop_structural_delta_solve_matches_cold_exact_solve() {
                             }
                         }
                     }
+
+                    // Mixed: group `which` swaps for the replacement group
+                    // in one re-plan — the vanished group re-embeds as a
+                    // ghost at its old slot and the cached basis translates
+                    // around the appeared group (at augmented index
+                    // `which + 1`, right after its ghost).
+                    let mut swapped_spec = spec.clone();
+                    swapped_spec[which] = repl;
+                    let swapped = simple_problem(&swapped_spec, &bins);
+                    let hints = DeltaHints {
+                        root_basis: None,
+                        branch_order: Vec::new(),
+                        ghosts: vec![ghost_of(&base, which, which)],
+                        appeared: big_st.root_basis.clone().map(|basis| PrevLayout {
+                            basis,
+                            blocks: big_st.var_blocks.clone(),
+                            num_vars: big_st.milp_vars,
+                            num_groups: spec.len(),
+                            new_groups: vec![which + 1],
+                        }),
+                    };
+                    if let Ok((cold, cold_st)) = solve(&swapped, &opts) {
+                        let (warm, warm_st) =
+                            solve_delta(&swapped, &opts, None, None, Some(&hints))
+                                .map_err(|e| e.to_string())?;
+                        warm.validate(&swapped)
+                            .map_err(|e| format!("mixed warm packing invalid: {e}"))?;
+                        if cold_st.proven_optimal && warm_st.proven_optimal {
+                            let (wc, cc) = (warm.total_cost(&swapped), cold.total_cost(&swapped));
+                            if (wc - cc).abs() > 1e-9 {
+                                return Err(format!("mixed warm cost {wc} != cold {cc}"));
+                            }
+                        }
+                    }
                 }
             }
 
@@ -613,13 +845,13 @@ fn prop_structural_delta_solve_matches_cold_exact_solve() {
                         let hints = DeltaHints {
                             root_basis: None,
                             branch_order: Vec::new(),
-                            ghost: None,
+                            ghosts: Vec::new(),
                             appeared: Some(PrevLayout {
                                 basis,
                                 blocks: small_st.var_blocks.clone(),
                                 num_vars: small_st.milp_vars,
                                 num_groups: smaller.items.len(),
-                                new_group: which,
+                                new_groups: vec![which],
                             }),
                         };
                         if let Ok((cold, cold_st)) = solve(&base, &opts) {
