@@ -376,6 +376,8 @@ fn main() {
         ("donors", Value::num(sp.donors() as f64)),
         ("lenient", Value::Bool(lenient())),
     ]);
+    camflow::bench::schema::validate(&doc, &camflow::bench::schema::PLANET)
+        .unwrap_or_else(|e| panic!("BENCH_planet.json schema drift: {e}"));
     let path = "BENCH_planet.json";
     std::fs::write(path, camflow::util::json::to_string_pretty(&doc))
         .expect("write BENCH_planet.json");

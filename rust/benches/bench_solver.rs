@@ -407,6 +407,8 @@ fn main() {
         ("structural_delta", Value::arr(delta_json)),
         ("calibration", calibration),
     ]);
+    camflow::bench::schema::validate(&doc, &camflow::bench::schema::SOLVER)
+        .unwrap_or_else(|e| panic!("BENCH_solver.json schema drift: {e}"));
     std::fs::write(path, camflow::util::json::to_string_pretty(&doc))
         .expect("write BENCH_solver.json");
     println!("\nwrote {path}");

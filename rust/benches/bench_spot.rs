@@ -1,0 +1,70 @@
+//! Spot-priced deferred-analytics bars (replay in `camflow::bench::spot`):
+//!
+//! * the spot-enabled replay's executed backfill spend is **strictly below**
+//!   the on-demand-only replay's, with the live fleets costing the same
+//!   (live streams never ride revocable capacity),
+//! * the deadline-miss rate under seeded preemption storms stays ≤ 1%,
+//! * revocations fire in the spot replay (and cannot in the on-demand-only
+//!   one), the zero-preemption hour re-plans bit-identically, and a forced
+//!   single-lane revocation re-homes only the stranded placements.
+//!
+//! All bars are deterministic (fixed seeds, no threads, no wall clock) and
+//! asserted inside `camflow::bench::spot::run`, so this binary and
+//! `tests/integration.rs` gate on exactly the same invariants. The only
+//! wall-clock number is the recorded replay timing, which is never asserted.
+//!
+//! Emits `BENCH_spot.json` — validated against
+//! `camflow::bench::schema::SPOT` before writing — so savings and miss
+//! rates are tracked across PRs.
+
+use camflow::bench::{schema, Bench, Table};
+use camflow::util::json::Value;
+
+fn main() {
+    println!("== Spot-priced backfill: diurnal replay with preemption storms ==");
+    let bench = Bench::new(1, 3);
+    let timing = bench.run("spot + on-demand replays", || {
+        let _ = camflow::bench::spot::run();
+    });
+    let o = camflow::bench::spot::run();
+
+    let mut t = Table::new(&["config", "backfill $", "live $", "revoked", "misses", "units"]);
+    t.row(&[
+        "spot-enabled".to_string(),
+        format!("{:.3}", o.spot.backfill_usd),
+        format!("{:.3}", o.spot.live_usd),
+        format!("{}", o.spot.revocations),
+        format!("{}", o.spot.deadline_misses),
+        format!("{}", o.spot.completed_units),
+    ]);
+    t.row(&[
+        "on-demand only".to_string(),
+        format!("{:.3}", o.od_only.backfill_usd),
+        format!("{:.3}", o.od_only.live_usd),
+        format!("{}", o.od_only.revocations),
+        format!("{}", o.od_only.deadline_misses),
+        format!("{}", o.od_only.completed_units),
+    ]);
+    t.print();
+    println!(
+        "savings {:.1}%  miss rate {:.4}  rehomed {}  spot rounds {}  ({:.0} ms per replay pair)",
+        o.savings_frac * 100.0,
+        o.miss_rate,
+        o.spot.rehomed_items,
+        o.spot.spot_rounds,
+        timing.mean_ms
+    );
+
+    let doc = Value::obj(vec![
+        ("bench", Value::str("spot")),
+        ("spot", o.to_json()),
+        ("loop_ms", Value::num(timing.mean_ms)),
+    ]);
+    schema::validate(&doc, &schema::SPOT)
+        .unwrap_or_else(|e| panic!("BENCH_spot.json schema drift: {e}"));
+    let path = "BENCH_spot.json";
+    std::fs::write(path, camflow::util::json::to_string_pretty(&doc))
+        .expect("write BENCH_spot.json");
+    println!("\nwrote {path}");
+    println!("\nbench_spot OK");
+}

@@ -6,6 +6,8 @@
 
 pub mod closedloop;
 pub mod portfolio;
+pub mod schema;
+pub mod spot;
 
 use crate::util::Summary;
 use std::time::Instant;

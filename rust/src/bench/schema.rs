@@ -1,0 +1,392 @@
+//! Canonical bench-artifact schemas.
+//!
+//! Every `BENCH_*.json` artifact a bench binary writes is documented
+//! field-by-field in `docs/BENCH_SCHEMAS.md`. This module is the machine
+//! half of that contract: each [`ArtifactSchema`] lists the exact field
+//! names and JSON kinds an artifact must carry, [`validate`] checks a
+//! just-built document against its schema (the solver / planet / spot
+//! binaries call it right before writing the file), and
+//! `tests/integration.rs` cross-checks every schema field against the
+//! artifact's section of the markdown page — so the JSON, this module, and
+//! the docs cannot drift apart silently in any direction.
+//!
+//! Validation is *exact*: a missing field, a wrong JSON kind, and an
+//! undeclared extra field are all errors. Renaming a bench output without
+//! updating the schema (or documenting it) fails the bench lane, not a
+//! reader three PRs later.
+
+use crate::util::json::Value;
+
+/// Expected JSON kind of one schema field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Num,
+    Bool,
+    Str,
+}
+
+impl Kind {
+    fn matches(self, v: &Value) -> bool {
+        matches!(
+            (self, v),
+            (Kind::Num, Value::Num(_)) | (Kind::Bool, Value::Bool(_)) | (Kind::Str, Value::Str(_))
+        )
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Num => "number",
+            Kind::Bool => "bool",
+            Kind::Str => "string",
+        }
+    }
+}
+
+/// One named scalar field of an artifact object.
+#[derive(Clone, Copy, Debug)]
+pub struct Field {
+    pub name: &'static str,
+    pub kind: Kind,
+}
+
+const fn n(name: &'static str) -> Field {
+    Field { name, kind: Kind::Num }
+}
+
+const fn b(name: &'static str) -> Field {
+    Field { name, kind: Kind::Bool }
+}
+
+const fn s(name: &'static str) -> Field {
+    Field { name, kind: Kind::Str }
+}
+
+/// The full shape of one `BENCH_*.json` artifact: scalar top-level fields,
+/// arrays of uniform objects, and nested scalar objects. Together the three
+/// lists enumerate *every* top-level key the artifact may carry.
+#[derive(Clone, Copy, Debug)]
+pub struct ArtifactSchema {
+    /// Artifact file name, and the heading key in `docs/BENCH_SCHEMAS.md`.
+    pub artifact: &'static str,
+    pub top: &'static [Field],
+    /// `(key, per-entry fields)` — the array must be non-empty and every
+    /// entry must carry exactly the listed fields.
+    pub arrays: &'static [(&'static str, &'static [Field])],
+    /// `(key, fields)` — nested objects with exactly the listed fields.
+    pub objects: &'static [(&'static str, &'static [Field])],
+}
+
+impl ArtifactSchema {
+    /// Every field name the schema mentions (top-level keys, array keys and
+    /// their entry fields, object keys and their fields) — what the docs
+    /// page must mention, one by one.
+    pub fn field_names(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = self.top.iter().map(|f| f.name).collect();
+        for (name, fields) in self.arrays.iter().chain(self.objects.iter()) {
+            out.push(name);
+            out.extend(fields.iter().map(|f| f.name));
+        }
+        out
+    }
+}
+
+const SOLVER_CLASS_FIELDS: &[Field] = &[
+    s("class"),
+    n("rows"),
+    n("cols"),
+    n("nnz_per_col"),
+    n("lps"),
+    n("dense_ms"),
+    n("dantzig_ms"),
+    n("partial_ms"),
+    n("dense_iterations"),
+    n("dantzig_iterations"),
+    n("partial_iterations"),
+    n("dense_iters_per_sec"),
+    n("dantzig_iters_per_sec"),
+    n("partial_iters_per_sec"),
+    n("speedup_partial"),
+    n("priced_cols_per_iter_dantzig"),
+    n("priced_cols_per_iter_partial"),
+    n("full_sweeps_partial"),
+    n("ftran_per_iter"),
+    n("btran_per_iter"),
+    n("refactorizations"),
+    n("eta_fill_watermark"),
+    n("eta_fill_cap"),
+    n("degenerate_pivots"),
+];
+
+const SOLVER_DELTA_FIELDS: &[Field] = &[
+    s("scenario"),
+    n("cold_ms"),
+    n("delta_ms"),
+    n("speedup"),
+    n("ghost_groups"),
+    n("appeared_groups"),
+    n("lp_warm"),
+    n("lp_cold"),
+    n("cost_delta"),
+    n("proven_optimal"),
+];
+
+const SOLVER_CALIBRATION_FIELDS: &[Field] =
+    &[n("node_cost_rows_weight"), s("model"), s("derivation")];
+
+/// `BENCH_solver.json` — written by `bench_solver`.
+pub static SOLVER: ArtifactSchema = ArtifactSchema {
+    artifact: "BENCH_solver.json",
+    top: &[s("bench")],
+    arrays: &[("classes", SOLVER_CLASS_FIELDS), ("structural_delta", SOLVER_DELTA_FIELDS)],
+    objects: &[("calibration", SOLVER_CALIBRATION_FIELDS)],
+};
+
+const PLANET_TOP_FIELDS: &[Field] = &[
+    s("bench"),
+    n("metros"),
+    n("streams"),
+    n("shards"),
+    n("cold_all_ms"),
+    n("warm_noop_ms"),
+    n("warm_one_dirty_ms"),
+    n("warm_mixed_ms"),
+    n("warm_uniform_ms"),
+    n("price_fanout_all_ms"),
+    n("fanout_over_one_dirty"),
+    n("uniform_over_one_dirty"),
+    n("sharded_usd_per_hour"),
+    n("unsharded_usd_per_hour"),
+    b("cost_parity"),
+    b("exact_complete"),
+    b("all_main"),
+    n("donors"),
+    b("lenient"),
+];
+
+const PLANET_DIRTY_FIELDS: &[Field] = &[
+    n("cold"),
+    n("noop"),
+    n("skew"),
+    n("restore"),
+    n("mixed"),
+    n("uniform"),
+    n("fanout"),
+];
+
+const PLANET_STRUCTURAL_FIELDS: &[Field] =
+    &[n("delta_hits"), n("ghost_groups"), n("appeared_groups")];
+
+/// `BENCH_planet.json` — written by `bench_planet`.
+pub static PLANET: ArtifactSchema = ArtifactSchema {
+    artifact: "BENCH_planet.json",
+    top: PLANET_TOP_FIELDS,
+    arrays: &[],
+    objects: &[("dirty", PLANET_DIRTY_FIELDS), ("structural", PLANET_STRUCTURAL_FIELDS)],
+};
+
+const SPOT_FIELDS: &[Field] = &[
+    n("queries"),
+    n("total_units"),
+    n("spot_backfill_usd"),
+    n("spot_live_usd"),
+    n("spot_revocations"),
+    n("spot_rehomed_items"),
+    n("spot_deadline_misses"),
+    n("spot_completed_units"),
+    n("spot_rounds_adopted"),
+    n("od_backfill_usd"),
+    n("od_deadline_misses"),
+    n("od_completed_units"),
+    n("savings_frac"),
+    n("miss_rate"),
+];
+
+/// `BENCH_spot.json` — written by `bench_spot`.
+pub static SPOT: ArtifactSchema = ArtifactSchema {
+    artifact: "BENCH_spot.json",
+    top: &[s("bench"), n("loop_ms")],
+    arrays: &[],
+    objects: &[("spot", SPOT_FIELDS)],
+};
+
+fn kind_of(v: &Value) -> &'static str {
+    match v {
+        Value::Null => "null",
+        Value::Bool(_) => "bool",
+        Value::Num(_) => "number",
+        Value::Str(_) => "string",
+        Value::Arr(_) => "array",
+        Value::Obj(_) => "object",
+    }
+}
+
+fn check_fields(obj: &Value, fields: &[Field], ctx: &str, errs: &mut Vec<String>) {
+    for f in fields {
+        match obj.get(f.name) {
+            Err(_) => errs.push(format!("{ctx}: missing `{}`", f.name)),
+            Ok(v) if !f.kind.matches(v) => errs.push(format!(
+                "{ctx}: `{}` is {}, expected {}",
+                f.name,
+                kind_of(v),
+                f.kind.name()
+            )),
+            Ok(_) => {}
+        }
+    }
+}
+
+/// Flag any key of `obj` that the schema does not declare.
+fn check_no_extras(obj: &Value, declared: &[&str], ctx: &str, errs: &mut Vec<String>) {
+    if let Value::Obj(map) = obj {
+        for key in map.keys() {
+            if !declared.contains(&key.as_str()) {
+                errs.push(format!("{ctx}: undeclared field `{key}`"));
+            }
+        }
+    } else {
+        errs.push(format!("{ctx}: expected a JSON object, got {}", kind_of(obj)));
+    }
+}
+
+/// Check a just-built artifact document against its schema. Returns every
+/// problem at once (joined with `; `) so a drifted bench fails with the
+/// full delta, not one field per run.
+pub fn validate(doc: &Value, schema: &ArtifactSchema) -> Result<(), String> {
+    let mut errs = Vec::new();
+    let ctx = schema.artifact;
+    let declared: Vec<&str> = schema
+        .top
+        .iter()
+        .map(|f| f.name)
+        .chain(schema.arrays.iter().map(|&(name, _)| name))
+        .chain(schema.objects.iter().map(|&(name, _)| name))
+        .collect();
+    check_no_extras(doc, &declared, ctx, &mut errs);
+    check_fields(doc, schema.top, ctx, &mut errs);
+
+    for &(name, fields) in schema.arrays {
+        match doc.get_arr(name) {
+            Err(e) => errs.push(format!("{ctx}: {e}")),
+            Ok(entries) => {
+                if entries.is_empty() {
+                    errs.push(format!("{ctx}: array `{name}` is empty"));
+                }
+                let entry_names: Vec<&str> = fields.iter().map(|f| f.name).collect();
+                for (i, entry) in entries.iter().enumerate() {
+                    let ectx = format!("{ctx} {name}[{i}]");
+                    check_no_extras(entry, &entry_names, &ectx, &mut errs);
+                    check_fields(entry, fields, &ectx, &mut errs);
+                }
+            }
+        }
+    }
+    for &(name, fields) in schema.objects {
+        match doc.get(name) {
+            Err(e) => errs.push(format!("{ctx}: {e}")),
+            Ok(nested) => {
+                let nested_names: Vec<&str> = fields.iter().map(|f| f.name).collect();
+                let nctx = format!("{ctx} {name}");
+                check_no_extras(nested, &nested_names, &nctx, &mut errs);
+                check_fields(nested, fields, &nctx, &mut errs);
+            }
+        }
+    }
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs.join("; "))
+    }
+}
+
+/// Slice the artifact's section (`## \`BENCH_x.json\`` up to the next `##`
+/// heading) out of the `docs/BENCH_SCHEMAS.md` text.
+pub fn doc_section<'a>(doc: &'a str, artifact: &str) -> Option<&'a str> {
+    let needle = format!("## `{artifact}`");
+    let start = doc.find(&needle)?;
+    let rest = &doc[start..];
+    let end = rest[needle.len()..].find("\n## ").map_or(rest.len(), |i| needle.len() + i);
+    Some(&rest[..end])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spot_doc() -> Value {
+        let fields: Vec<(&str, Value)> =
+            SPOT_FIELDS.iter().map(|f| (f.name, Value::num(1.0))).collect();
+        Value::obj(vec![
+            ("bench", Value::str("spot")),
+            ("loop_ms", Value::num(2.5)),
+            ("spot", Value::obj(fields)),
+        ])
+    }
+
+    #[test]
+    fn a_conforming_document_validates() {
+        validate(&spot_doc(), &SPOT).unwrap();
+    }
+
+    #[test]
+    fn missing_extra_and_miskinded_fields_are_all_reported() {
+        let mut doc = spot_doc();
+        if let Value::Obj(map) = &mut doc {
+            map.insert("surprise".into(), Value::num(1.0));
+            map.insert("loop_ms".into(), Value::str("fast"));
+            if let Some(Value::Obj(spot)) = map.get_mut("spot") {
+                spot.remove("miss_rate");
+            }
+        }
+        let err = validate(&doc, &SPOT).unwrap_err();
+        assert!(err.contains("undeclared field `surprise`"), "{err}");
+        assert!(err.contains("`loop_ms` is string, expected number"), "{err}");
+        assert!(err.contains("missing `miss_rate`"), "{err}");
+    }
+
+    #[test]
+    fn empty_arrays_are_rejected() {
+        let doc = Value::obj(vec![
+            ("bench", Value::str("solver")),
+            ("classes", Value::arr(vec![])),
+            ("structural_delta", Value::arr(vec![])),
+            (
+                "calibration",
+                Value::obj(vec![
+                    ("node_cost_rows_weight", Value::num(8.0)),
+                    ("model", Value::str("m")),
+                    ("derivation", Value::str("d")),
+                ]),
+            ),
+        ]);
+        let err = validate(&doc, &SOLVER).unwrap_err();
+        assert!(err.contains("array `classes` is empty"), "{err}");
+    }
+
+    #[test]
+    fn schemas_have_unique_field_names_per_object() {
+        for schema in [&SOLVER, &PLANET, &SPOT] {
+            let groups: Vec<&[Field]> = [schema.top]
+                .into_iter()
+                .chain(schema.arrays.iter().map(|&(_, f)| f))
+                .chain(schema.objects.iter().map(|&(_, f)| f))
+                .collect();
+            for fields in groups {
+                let mut names: Vec<&str> = fields.iter().map(|f| f.name).collect();
+                names.sort_unstable();
+                let before = names.len();
+                names.dedup();
+                assert_eq!(before, names.len(), "{}: duplicate field", schema.artifact);
+            }
+        }
+    }
+
+    #[test]
+    fn doc_section_slices_one_heading() {
+        let md = "intro\n\n## `A.json`\n\n* `x`\n\n## `B.json`\n\n* `y`\n";
+        let a = doc_section(md, "A.json").unwrap();
+        assert!(a.contains("`x`") && !a.contains("`y`"));
+        let b = doc_section(md, "B.json").unwrap();
+        assert!(b.contains("`y`"));
+        assert!(doc_section(md, "C.json").is_none());
+    }
+}

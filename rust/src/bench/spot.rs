@@ -1,0 +1,373 @@
+//! Spot-priced deferred-analytics replay shared by `bench_spot` and the
+//! integration suite.
+//!
+//! A 24-hour diurnal trace (live stream counts swell through the morning and
+//! evening; [`diurnal_backfill`] queries arrive in the matching bursts) is
+//! replayed twice through the joint planner — once with the spot market
+//! enabled and once on-demand-only — over the two-type CPU pool
+//! (`c4.2xlarge` + `c4.8xlarge` @ `us-east-2`). Each simulated hour the
+//! [`SpotPlanner`] re-plans live + backfill from the remaining unit-hours,
+//! the hour's placements execute, and a seeded [`PreemptionInjector`] storm
+//! revokes occupied spot instances (with the 2-minute warning, so the
+//! revoked hour's work checkpoints); revocations are absorbed through
+//! [`SpotPlanner::absorb_revocation`] — the structural-delta path that moves
+//! only the stranded placements.
+//!
+//! The bars, asserted inside [`run`] so the bench binary and
+//! `tests/integration.rs` gate identically:
+//!
+//! * the spot-enabled replay's executed backfill cost is **strictly below**
+//!   the on-demand-only replay's (and the live fleets cost the same —
+//!   live streams never ride revocable capacity),
+//! * the deadline-miss rate under preemption storms stays ≤ 1%,
+//! * the storm actually fires (revocations > 0) in the spot replay and
+//!   cannot fire in the on-demand-only replay,
+//! * a zero-preemption round is a bit-identical no-op: the absorb path
+//!   returns the schedule unchanged and the live fleet reproduces the
+//!   previous hour's slots exactly,
+//! * a forced single-lane revocation re-homes or sheds the stranded item
+//!   while every other item's placements stay bit-identical.
+//!
+//! Everything is deterministic: fixed seeds, no threads, no wall clock.
+//! Emits `BENCH_spot.json` (via the binary) so savings and miss rates are
+//! tracked across PRs.
+
+use crate::cameras::camera_at;
+use crate::cameras::scenarios::{diurnal_backfill, BackfillQuery};
+use crate::cameras::StreamRequest;
+use crate::catalog::Catalog;
+use crate::cloudsim::{CloudSim, InstanceId, PreemptionInjector};
+use crate::coordinator::spot::{JointPlan, SpotPlanner, SpotPlannerConfig};
+use crate::coordinator::PlannerConfig;
+use crate::geo::cities;
+use crate::packing::mcvbp::{BackfillItem, LaneKind};
+use crate::profiles::{Program, Resolution};
+use crate::util::json::Value;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Replay length: arrivals stop at hour 23 and every deadline lands below
+/// 24 + 12, so 36 hours drains the queue completely.
+const REPLAY_HOURS: usize = 36;
+/// The injector is held for one hour mid-morning-burst to pin the
+/// zero-preemption identity bars.
+const QUIET_HOUR: usize = 7;
+/// One hour later a single occupied lane is force-revoked (non-destructively)
+/// to pin the structural-delta re-home bars on live data.
+const FORCED_REHOME_HOUR: usize = 8;
+/// Preemption-rate multiplier: a storm, not the background rate.
+const STORM_INTENSITY: f64 = 6.0;
+const STORM_SEED: u64 = 1901_0634;
+const BACKFILL_QUERIES: usize = 80;
+
+/// Live-fleet stream counts per trace hour (the diurnal curve); the drain
+/// tail past hour 23 stays at the overnight level. Hours 6 and 7 are equal
+/// on purpose: the quiet-hour bar compares their live fleets bit-for-bit.
+const LIVE_COUNTS: [usize; 24] = [
+    2, 2, 2, 2, 2, 3, 4, 4, 5, 6, 6, 5, 4, 4, 4, 4, 5, 6, 6, 6, 5, 4, 3, 2,
+];
+
+/// Executed-cost and outcome counters for one replay configuration.
+#[derive(Clone, Debug)]
+pub struct ReplaySummary {
+    /// Σ over executed hours of the occupied paid lane-hour prices.
+    pub backfill_usd: f64,
+    /// Σ live-plan hourly cost — identical across configurations.
+    pub live_usd: f64,
+    /// Spot instances revoked by the storm over the whole replay.
+    pub revocations: usize,
+    /// Distinct items the absorb path re-homed after a revocation.
+    pub rehomed_items: usize,
+    /// Queries not fully scanned by their deadline (shed or starved).
+    pub deadline_misses: usize,
+    /// Unit-hours executed.
+    pub completed_units: usize,
+    /// Rounds where the certified gate adopted the spot schedule.
+    pub spot_rounds: usize,
+}
+
+/// Both replays plus the derived headline numbers, mirrored into
+/// `BENCH_spot.json` by [`SpotOutcome::to_json`].
+#[derive(Clone, Debug)]
+pub struct SpotOutcome {
+    pub queries: usize,
+    pub total_units: usize,
+    pub spot: ReplaySummary,
+    pub od_only: ReplaySummary,
+    /// `1 − spot.backfill_usd / od_only.backfill_usd` — the headline bar.
+    pub savings_frac: f64,
+    /// Spot-replay `deadline_misses / queries` — the ≤ 1% bar.
+    pub miss_rate: f64,
+}
+
+impl SpotOutcome {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("queries", Value::num(self.queries as f64)),
+            ("total_units", Value::num(self.total_units as f64)),
+            ("spot_backfill_usd", Value::num(self.spot.backfill_usd)),
+            ("spot_live_usd", Value::num(self.spot.live_usd)),
+            ("spot_revocations", Value::num(self.spot.revocations as f64)),
+            ("spot_rehomed_items", Value::num(self.spot.rehomed_items as f64)),
+            ("spot_deadline_misses", Value::num(self.spot.deadline_misses as f64)),
+            ("spot_completed_units", Value::num(self.spot.completed_units as f64)),
+            ("spot_rounds_adopted", Value::num(self.spot.spot_rounds as f64)),
+            ("od_backfill_usd", Value::num(self.od_only.backfill_usd)),
+            ("od_deadline_misses", Value::num(self.od_only.deadline_misses as f64)),
+            ("od_completed_units", Value::num(self.od_only.completed_units as f64)),
+            ("savings_frac", Value::num(self.savings_frac)),
+            ("miss_rate", Value::num(self.miss_rate)),
+        ])
+    }
+}
+
+/// The two Table-I CPU boxes in the Fig-3 region: the small box prices slack
+/// finely, the big box is the only lane that fits heavy VGG16 scan units.
+fn bench_catalog() -> Catalog {
+    Catalog::builtin().restrict(Some(&["c4.2xlarge", "c4.8xlarge"]), Some(&["us-east-2"]))
+}
+
+fn live_requests(hour: usize) -> Vec<StreamRequest> {
+    let n = if hour < LIVE_COUNTS.len() {
+        LIVE_COUNTS[hour]
+    } else {
+        LIVE_COUNTS[0] // drain tail: overnight level
+    };
+    (0..n)
+        .map(|i| {
+            StreamRequest::new(
+                camera_at(i as u64, "Chicago", cities::CHICAGO, Resolution::XGA, 30.0),
+                Program::Zf,
+                0.5,
+            )
+        })
+        .collect()
+}
+
+fn backfill_queries() -> Vec<BackfillQuery> {
+    diurnal_backfill(BACKFILL_QUERIES, 42)
+}
+
+/// Replay the trace with or without the spot market. Panics on any broken
+/// invariant — the bench and the test suite both gate on it.
+fn replay(use_spot: bool) -> ReplaySummary {
+    let catalog = bench_catalog();
+    let spot_cfg = SpotPlannerConfig { horizon_hours: 48, use_spot, lanes_per_offering: 2 };
+    let mut planner = SpotPlanner::new(catalog.clone(), PlannerConfig::st1(), spot_cfg);
+    let mut sim = CloudSim::new(catalog);
+    let mut injector = PreemptionInjector::new(STORM_SEED, STORM_INTENSITY);
+
+    let queries = backfill_queries();
+    let base_items = SpotPlanner::items_from_queries(&queries);
+    let mut remaining: BTreeMap<u64, usize> =
+        base_items.iter().map(|it| (it.id, it.units)).collect();
+    let mut shed: BTreeSet<u64> = BTreeSet::new();
+    let mut rehomed: BTreeSet<u64> = BTreeSet::new();
+    // One persistent sim instance per spot-lane ordinal, provisioned when
+    // the lane first carries work and cleared after a revocation.
+    let mut pool: Vec<Option<InstanceId>> = Vec::new();
+
+    let mut out = ReplaySummary {
+        backfill_usd: 0.0,
+        live_usd: 0.0,
+        revocations: 0,
+        rehomed_items: 0,
+        deadline_misses: 0,
+        completed_units: 0,
+        spot_rounds: 0,
+    };
+    let mut prev_round: Option<(usize, Vec<(u64, String)>, f64)> = None;
+
+    for hour in 0..REPLAY_HOURS {
+        let requests = live_requests(hour);
+        let items: Vec<BackfillItem> = base_items
+            .iter()
+            .zip(&queries)
+            .filter(|(it, q)| {
+                q.arrival_hour <= hour && remaining[&it.id] > 0 && !shed.contains(&it.id)
+            })
+            .map(|(it, _)| BackfillItem { units: remaining[&it.id], ..it.clone() })
+            .collect();
+        let plan = planner.plan(&requests, &items, hour).expect("joint plan");
+        shed.extend(plan.schedule.shed.iter().copied());
+        if plan.spot_adopted {
+            out.spot_rounds += 1;
+        }
+        out.live_usd += plan.live.cost_per_hour;
+        let fleet: Vec<(u64, String)> =
+            plan.live.instances.iter().map(|i| (i.slot_id, i.label.clone())).collect();
+
+        if hour == QUIET_HOUR {
+            // Zero-preemption round: the live fleet reproduces the previous
+            // hour's slots bit-for-bit (the request table is equal there)...
+            let (n, prev_fleet, prev_usd) = prev_round.as_ref().expect("hour 7 has a past");
+            assert_eq!(requests.len(), *n, "LIVE_COUNTS[6] and [7] must match");
+            assert_eq!(&fleet, prev_fleet, "quiet hour must not move the live fleet");
+            assert!((plan.live.cost_per_hour - prev_usd).abs() < 1e-12);
+            // ...and the absorb path with nothing revoked is an identity.
+            let (repaired, moved) = planner.absorb_revocation(&plan, &items, &[], hour + 1);
+            assert!(moved.is_empty(), "no preemption, no re-homing");
+            assert_eq!(repaired, plan.schedule, "zero-preemption absorb must be a no-op");
+        }
+        if hour == FORCED_REHOME_HOUR {
+            forced_rehome_check(&planner, &plan, &items, hour);
+        }
+        prev_round = Some((requests.len(), fleet, plan.live.cost_per_hour));
+
+        // Storm: one sim instance per occupied spot lane, then one injector
+        // step over the hour. Ordinal j is the j-th Spot lane of the grid —
+        // stable across rounds because the paid-lane layout is.
+        let spot_lane_idx: Vec<usize> = plan
+            .lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind == LaneKind::Spot)
+            .map(|(i, _)| i)
+            .collect();
+        pool.resize(spot_lane_idx.len(), None);
+        let occupied: BTreeSet<usize> =
+            plan.schedule.placements.iter().filter(|p| p.hour == hour).map(|p| p.lane).collect();
+        for (j, &li) in spot_lane_idx.iter().enumerate() {
+            if occupied.contains(&li) && pool[j].is_none() {
+                let (ti, ri) = plan.lane_offerings[li].expect("paid lane has an offering");
+                pool[j] = Some(sim.provision_spot(ti, ri).expect("spot pool exists"));
+            }
+        }
+        let revoked_ids = if hour == QUIET_HOUR {
+            Vec::new()
+        } else {
+            injector.step(&mut sim, 3600.0)
+        };
+        sim.advance(3600.0);
+        let revoked_lanes: Vec<usize> = revoked_ids
+            .iter()
+            .filter_map(|id| pool.iter().position(|slot| *slot == Some(*id)))
+            .map(|j| spot_lane_idx[j])
+            .collect();
+        assert_eq!(revoked_lanes.len(), revoked_ids.len(), "every revocation maps to a lane");
+        for slot in pool.iter_mut() {
+            if matches!(slot, Some(id) if revoked_ids.contains(id)) {
+                *slot = None;
+            }
+        }
+        out.revocations += revoked_lanes.len();
+
+        // Absorb the storm as a structural delta: the revoked hour's work
+        // checkpoints under the 2-minute warning, so the cut is at hour + 1.
+        let schedule = if revoked_lanes.is_empty() {
+            plan.schedule.clone()
+        } else {
+            let (repaired, moved) =
+                planner.absorb_revocation(&plan, &items, &revoked_lanes, hour + 1);
+            rehomed.extend(moved);
+            shed.extend(repaired.shed.iter().copied());
+            repaired
+        };
+
+        // Execute the hour: bill each occupied paid lane-hour once, retire
+        // one unit per placement.
+        let mut cells: Vec<usize> =
+            schedule.placements.iter().filter(|p| p.hour == hour).map(|p| p.lane).collect();
+        cells.sort_unstable();
+        cells.dedup();
+        out.backfill_usd += cells.iter().map(|&l| plan.lanes[l].hourly_cost).sum::<f64>();
+        for p in schedule.placements.iter().filter(|p| p.hour == hour) {
+            *remaining.get_mut(&p.item).expect("placed item is tracked") -= 1;
+            out.completed_units += 1;
+        }
+    }
+
+    out.rehomed_items = rehomed.len();
+    out.deadline_misses = remaining.values().filter(|&&u| u > 0).count();
+    out
+}
+
+/// Force-revoke one lane that still carries future work and check the
+/// structural-delta contract on the live schedule (non-destructively — the
+/// round's real plan is not modified).
+fn forced_rehome_check(
+    planner: &SpotPlanner,
+    plan: &JointPlan,
+    items: &[BackfillItem],
+    hour: usize,
+) {
+    let Some(target) = plan.schedule.placements.iter().find(|p| p.hour > hour) else {
+        return; // nothing scheduled past this hour — nothing to strand
+    };
+    let (repaired, moved) = planner.absorb_revocation(plan, items, &[target.lane], hour + 1);
+    assert!(
+        repaired.placements.iter().all(|p| p.lane != target.lane || p.hour <= hour),
+        "the revoked lane must be empty from the cut hour on"
+    );
+    assert!(
+        moved.contains(&target.item) || repaired.shed.contains(&target.item),
+        "the stranded item must be re-homed or shed explicitly, never lost"
+    );
+    for it in items {
+        if moved.contains(&it.id) || repaired.shed.contains(&it.id) {
+            continue;
+        }
+        let before: Vec<_> =
+            plan.schedule.placements.iter().filter(|p| p.item == it.id).collect();
+        let after: Vec<_> = repaired.placements.iter().filter(|p| p.item == it.id).collect();
+        assert_eq!(before, after, "re-home moved non-preempted item {}", it.id);
+    }
+}
+
+/// Run both replays and assert the cross-configuration bars.
+pub fn run() -> SpotOutcome {
+    let spot = replay(true);
+    let od_only = replay(false);
+    let queries = backfill_queries().len();
+    let total_units: usize =
+        SpotPlanner::items_from_queries(&backfill_queries()).iter().map(|i| i.units).sum();
+
+    assert!(
+        spot.backfill_usd < od_only.backfill_usd,
+        "spot-enabled backfill (${:.3}) must undercut on-demand-only (${:.3})",
+        spot.backfill_usd,
+        od_only.backfill_usd
+    );
+    assert!(
+        (spot.live_usd - od_only.live_usd).abs() < 1e-9,
+        "the live fleet never rides the spot market, so its cost cannot move"
+    );
+    assert!(spot.spot_rounds > 0, "the certified gate must adopt spot at least once");
+    assert_eq!(od_only.spot_rounds, 0, "spot adoption with use_spot=false");
+    assert!(spot.revocations > 0, "the storm must actually revoke spot capacity");
+    assert_eq!(od_only.revocations, 0, "an on-demand-only fleet has nothing to revoke");
+
+    let miss_rate = spot.deadline_misses as f64 / queries as f64;
+    assert!(
+        miss_rate <= 0.01,
+        "deadline-miss rate {miss_rate} exceeds 1% under the preemption storm \
+         ({} of {queries} queries)",
+        spot.deadline_misses
+    );
+    let savings_frac = 1.0 - spot.backfill_usd / od_only.backfill_usd;
+    SpotOutcome { queries, total_units, spot, od_only, savings_frac, miss_rate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diurnal_trace_shape() {
+        assert_eq!(LIVE_COUNTS.len(), 24);
+        assert_eq!(LIVE_COUNTS[QUIET_HOUR - 1], LIVE_COUNTS[QUIET_HOUR]);
+        for q in backfill_queries() {
+            assert!(q.arrival_hour + (q.deadline_hours.floor() as usize) < REPLAY_HOURS);
+        }
+    }
+
+    #[test]
+    fn bench_catalog_offers_spot_on_both_types() {
+        let c = bench_catalog();
+        assert_eq!(c.types.len(), 2);
+        assert_eq!(c.regions.len(), 1);
+        for o in &c.offerings {
+            let q = o.spot.expect("both CPU boxes carry spot quotes");
+            assert!(q.hourly_usd < o.hourly_usd);
+        }
+    }
+}

@@ -7,6 +7,9 @@
 //! * Fig 4 — six cameras geographically distributed in America, Europe, and
 //!   Asia/Oceania, used for the location-coverage experiment.
 //! * Fig 6 — a worldwide workload sweep used to compare NL / ARMVAC / GCL.
+//! * Backfill — deferred-analytics queries over stored footage (the
+//!   zero-streaming-cameras workload family from PAPERS.md): diurnal-burst
+//!   and flash-crowd arrival generators for the spot-market planner.
 
 use super::{camera_at, Camera, StreamRequest};
 use crate::geo::cities;
@@ -172,6 +175,88 @@ pub fn fig6_workload(n: usize, target_fps: f64, seed: u64) -> Vec<StreamRequest>
     requests
 }
 
+/// A deferred-analytics query: scan `span_hours` of `camera`'s stored
+/// footage with `program`, sampling frames at `scan_fps`, with results due
+/// `deadline_hours` after the query arrives. Unlike a [`StreamRequest`] the
+/// work is latency-tolerant: footage segments are independent, so the
+/// planner may run them in any order, in parallel, and — when `preemptible`
+/// — on revocable spot capacity.
+#[derive(Clone, Debug)]
+pub struct BackfillQuery {
+    pub id: u64,
+    pub camera: Camera,
+    pub program: Program,
+    /// Stored-footage span to scan, in hours.
+    pub span_hours: f64,
+    /// Frame sampling rate over the stored footage (fps), the same knob as
+    /// a live stream's desired fps — it sets the per-unit demand vector.
+    pub scan_fps: f64,
+    /// Hours from arrival until results are due.
+    pub deadline_hours: f64,
+    /// Hour index (from trace start) at which the query arrives.
+    pub arrival_hour: usize,
+    /// False pins the query to non-revocable (slack / on-demand) capacity.
+    pub preemptible: bool,
+}
+
+/// Diurnal-burst backfill arrivals over a 24-hour trace: overnight-buffered
+/// footage lands as a morning query burst (hours 6–10) with a smaller
+/// evening review burst (hours 18–22), scattered low-rate stragglers in
+/// between. Deadlines are loose (4–12 h) and most queries are preemptible —
+/// the workload spot markets are priced for. Deterministic in `seed`.
+pub fn diurnal_backfill(n: usize, seed: u64) -> Vec<BackfillQuery> {
+    let mut rng = Rng::new(seed);
+    let mut queries = Vec::with_capacity(n);
+    for i in 0..n {
+        let arrival_hour = if rng.bool(0.55) {
+            6 + rng.index(5) // morning burst: 6..=10
+        } else if rng.bool(0.6) {
+            18 + rng.index(5) // evening burst: 18..=22
+        } else {
+            rng.index(24) // stragglers
+        };
+        let res = *rng.choose(&[Resolution::VGA, Resolution::XGA, Resolution::HD720]);
+        let cam = camera_at(9000 + i as u64, "Chicago", cities::CHICAGO, res, 30.0);
+        let program = if rng.bool(0.25) { Program::Vgg16 } else { Program::Zf };
+        queries.push(BackfillQuery {
+            id: i as u64,
+            camera: cam,
+            program,
+            span_hours: 1.0 + rng.index(8) as f64,
+            scan_fps: rng.range_f64(0.2, 1.0),
+            deadline_hours: 4.0 + rng.index(9) as f64,
+            arrival_hour,
+            preemptible: rng.bool(0.8),
+        });
+    }
+    queries
+}
+
+/// Flash-crowd backfill: an incident at `event_hour` triggers a dense burst
+/// of tight-deadline queries re-scanning the hours of footage leading up to
+/// it. Deadlines are 1–3 h and fewer queries tolerate preemption — the
+/// adversarial case for deadline-feasibility checking and explicit shedding.
+/// Deterministic in `seed`.
+pub fn flash_crowd_backfill(n: usize, event_hour: usize, seed: u64) -> Vec<BackfillQuery> {
+    let mut rng = Rng::new(seed);
+    let mut queries = Vec::with_capacity(n);
+    for i in 0..n {
+        let res = *rng.choose(&[Resolution::XGA, Resolution::HD720]);
+        let cam = camera_at(9500 + i as u64, "New York", cities::NEW_YORK, res, 30.0);
+        queries.push(BackfillQuery {
+            id: 10_000 + i as u64,
+            camera: cam,
+            program: if rng.bool(0.5) { Program::Vgg16 } else { Program::Zf },
+            span_hours: 2.0 + rng.index(5) as f64,
+            scan_fps: rng.range_f64(0.5, 2.0),
+            deadline_hours: 1.0 + rng.index(3) as f64,
+            arrival_hour: event_hour + rng.index(2),
+            preemptible: rng.bool(0.6),
+        });
+    }
+    queries
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,6 +310,34 @@ mod tests {
         // Both programs present.
         assert!(a.iter().any(|r| r.program == Program::Vgg16));
         assert!(a.iter().any(|r| r.program == Program::Zf));
+    }
+
+    #[test]
+    fn diurnal_backfill_deterministic_bursty_and_mostly_preemptible() {
+        let a = diurnal_backfill(120, 7);
+        let b = diurnal_backfill(120, 7);
+        assert_eq!(a.len(), 120);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_hour, y.arrival_hour);
+            assert_eq!(x.span_hours, y.span_hours);
+            assert_eq!(x.preemptible, y.preemptible);
+        }
+        assert!(a.iter().all(|q| q.arrival_hour < 24));
+        assert!(a.iter().all(|q| q.span_hours >= 1.0 && q.deadline_hours >= 4.0));
+        let morning = a.iter().filter(|q| (6..=10).contains(&q.arrival_hour)).count();
+        assert!(morning * 2 > a.len(), "morning burst dominates: {morning}/120");
+        let preemptible = a.iter().filter(|q| q.preemptible).count();
+        assert!(preemptible * 2 > a.len(), "most queries tolerate preemption");
+    }
+
+    #[test]
+    fn flash_crowd_backfill_is_tight_and_clustered() {
+        let q = flash_crowd_backfill(40, 13, 3);
+        assert_eq!(q.len(), 40);
+        assert!(q.iter().all(|x| x.arrival_hour == 13 || x.arrival_hour == 14));
+        assert!(q.iter().all(|x| (1.0..=3.0).contains(&x.deadline_hours)));
+        assert!(q.iter().any(|x| !x.preemptible) && q.iter().any(|x| x.preemptible));
     }
 
     #[test]

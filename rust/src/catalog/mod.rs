@@ -26,6 +26,9 @@ pub struct Dims {
 }
 
 impl Dims {
+    /// The all-zero vector.
+    pub const ZERO: Dims = Dims::new(0.0, 0.0, 0.0, 0.0);
+
     pub const fn new(vcpus: f64, mem_gib: f64, gpus: f64, gpu_mem_gib: f64) -> Self {
         Dims { vcpus, mem_gib, gpus, gpu_mem_gib }
     }
@@ -126,12 +129,29 @@ pub struct Region {
     pub location: GeoPoint,
 }
 
-/// A priced offering: (instance type, region, hourly USD).
+/// A spot-market quote for an offering: the discounted hourly price and the
+/// expected revocation rate of the pool. Spot capacity is reclaimable — the
+/// temporal packing axis discounts a spot bin's usable capacity by the
+/// revocation rate, and the simulator's preemption injector revokes spot
+/// instances with a [2-minute warning](crate::cloudsim::SPOT_WARNING_S).
+#[derive(Clone, Copy, Debug)]
+pub struct SpotQuote {
+    /// Discounted hourly price, strictly below the on-demand price.
+    pub hourly_usd: f64,
+    /// Expected revocations per instance-hour, in (0, 1).
+    pub preemption_rate_per_hour: f64,
+}
+
+/// A priced offering: (instance type, region, hourly USD), plus the
+/// spot-market quote when the type has a spot pool in that region. Live
+/// streams are always planned against the on-demand price; only deferred
+/// backfill ([`crate::coordinator::spot`]) ever sees the quote.
 #[derive(Clone, Copy, Debug)]
 pub struct Offering {
     pub type_idx: usize,
     pub region_idx: usize,
     pub hourly_usd: f64,
+    pub spot: Option<SpotQuote>,
 }
 
 /// The full catalog.
@@ -162,6 +182,19 @@ impl Catalog {
             .iter()
             .find(|o| o.type_idx == type_idx && o.region_idx == region_idx)
             .map(|o| o.hourly_usd)
+    }
+
+    /// Spot price of a type in a region, if a spot pool is quoted there.
+    pub fn spot_price(&self, type_idx: usize, region_idx: usize) -> Option<f64> {
+        self.spot_quote(type_idx, region_idx).map(|q| q.hourly_usd)
+    }
+
+    /// Full spot quote (price + revocation rate) of a type in a region.
+    pub fn spot_quote(&self, type_idx: usize, region_idx: usize) -> Option<SpotQuote> {
+        self.offerings
+            .iter()
+            .find(|o| o.type_idx == type_idx && o.region_idx == region_idx)
+            .and_then(|o| o.spot)
     }
 
     /// All offerings in a region.
@@ -210,6 +243,7 @@ impl Catalog {
                 type_idx: type_map[o.type_idx],
                 region_idx: region_map[o.region_idx],
                 hourly_usd: o.hourly_usd,
+                spot: o.spot,
             })
             .collect();
         Catalog { types, regions, offerings }
@@ -350,5 +384,43 @@ mod tests {
             assert!(o.region_idx < c.regions.len());
             assert!(o.hourly_usd > 0.0);
         }
+    }
+
+    #[test]
+    fn spot_quotes_are_strict_discounts_with_bounded_risk() {
+        let c = Catalog::builtin();
+        let mut quoted = 0usize;
+        for o in &c.offerings {
+            if let Some(q) = o.spot {
+                assert!(q.hourly_usd > 0.0, "spot price must be positive");
+                assert!(
+                    q.hourly_usd < o.hourly_usd,
+                    "spot {} must undercut on-demand {}",
+                    q.hourly_usd,
+                    o.hourly_usd
+                );
+                assert!(
+                    q.preemption_rate_per_hour > 0.0 && q.preemption_rate_per_hour < 1.0,
+                    "revocation rate out of (0, 1)"
+                );
+                quoted += 1;
+            }
+        }
+        assert!(quoted > 0, "the builtin catalog quotes at least one spot pool");
+    }
+
+    #[test]
+    fn restrict_carries_spot_quotes_through_the_remap() {
+        let c = Catalog::builtin();
+        let t = c.type_by_name("c4.2xlarge").unwrap();
+        let r = c.region_by_id("us-east-2").unwrap();
+        let full = c.spot_price(t, r).expect("c4.2xlarge has a spot pool");
+        let small = c.restrict(Some(&["c4.2xlarge"]), Some(&["us-east-2"]));
+        assert_eq!(small.spot_price(0, 0), Some(full));
+        let q = small.spot_quote(0, 0).unwrap();
+        assert_eq!(
+            q.preemption_rate_per_hour,
+            c.spot_quote(t, r).unwrap().preemption_rate_per_hour
+        );
     }
 }

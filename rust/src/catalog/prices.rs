@@ -5,7 +5,7 @@
 //! Fig-3 experiment pool prices ($0.419 CPU box, $0.650 g2.2xlarge) quoted by
 //! the paper's evaluation table.
 
-use super::{Catalog, Dims, InstanceType, Offering, Region, Vendor};
+use super::{Catalog, Dims, InstanceType, Offering, Region, SpotQuote, Vendor};
 use crate::geo::GeoPoint;
 
 /// (id, vendor, city, lat, lon, regional price multiplier vs us-east-1)
@@ -77,6 +77,34 @@ const OVERRIDES: &[(&str, &str, f64)] = &[
     ("g2.2xlarge", "us-east-2", 0.650),
 ];
 
+/// Per-type spot quotes: (type, spot price as a fraction of the regional
+/// on-demand price, expected revocations per instance-hour). The era's spot
+/// markets priced steady CPU families near a third of on-demand with rare
+/// revocations; contended GPU pools discounted deeper but revoked far more
+/// often. Azure rows model low-priority VMs (the vendor's spot equivalent):
+/// a flat ~60% off compute families, ~50% off GPU families. A type absent
+/// here has no spot pool anywhere.
+const SPOT: &[(&str, f64, f64)] = &[
+    ("c4.large", 0.35, 0.03),
+    ("c4.xlarge", 0.35, 0.03),
+    ("c4.2xlarge", 0.34, 0.04),
+    ("c4.4xlarge", 0.33, 0.05),
+    ("c4.8xlarge", 0.31, 0.06),
+    ("c5d.9xlarge", 0.32, 0.05),
+    ("g2.2xlarge", 0.30, 0.08),
+    ("g3.8xlarge", 0.28, 0.10),
+    ("p3.2xlarge", 0.30, 0.12),
+    ("p3.8xlarge", 0.30, 0.12),
+    ("D8_v3", 0.40, 0.03),
+    ("D16_v3", 0.40, 0.03),
+    ("D32_v3", 0.40, 0.03),
+    ("NC6", 0.50, 0.08),
+    ("NC12", 0.50, 0.08),
+    ("NC24r", 0.50, 0.10),
+    ("NC6s_v3", 0.50, 0.12),
+    ("NC24s_v3", 0.50, 0.12),
+];
+
 /// Azure types are offered only in Azure regions and vice versa; GPU types are
 /// not offered everywhere (mirrors the paper's N/A cells).
 fn offered(ty: &InstanceType, region: &Region) -> bool {
@@ -126,11 +154,14 @@ pub fn build() -> Catalog {
             if skip {
                 continue;
             }
-            offerings.push(Offering {
-                type_idx: ti,
-                region_idx: ri,
-                hourly_usd: (price * 10000.0).round() / 10000.0,
+            let hourly_usd = (price * 10000.0).round() / 10000.0;
+            let spot = SPOT.iter().find(|&&(n, _, _)| n == *tname).map(|&(_, frac, rate)| {
+                SpotQuote {
+                    hourly_usd: (hourly_usd * frac * 10000.0).round() / 10000.0,
+                    preemption_rate_per_hour: rate,
+                }
             });
+            offerings.push(Offering { type_idx: ti, region_idx: ri, hourly_usd, spot });
         }
     }
     Catalog { types, regions, offerings }

@@ -10,10 +10,16 @@
 use crate::catalog::{Catalog, Dims};
 use crate::coordinator::{Plan, SlotId};
 use crate::error::{Error, Result};
+use crate::util::Rng;
 
 /// Boot latency of a fresh instance (seconds). EC2-era instances took on the
 /// order of a minute to become available.
 pub const DEFAULT_BOOT_DELAY_S: f64 = 60.0;
+
+/// Reclaim notice for a revoked spot instance (seconds): the provider gives
+/// two minutes of warning before pulling a spot instance, and the simulator
+/// keeps billing (and the instance keeps working) until the notice expires.
+pub const SPOT_WARNING_S: f64 = 120.0;
 
 /// Throughput factor once any dimension exceeds the degradation threshold
 /// (the paper: "when any dimension is more than 90% utilized, the
@@ -34,6 +40,12 @@ pub struct SimInstance {
     pub launched_at: f64,
     pub ready_at: f64,
     pub terminated_at: Option<f64>,
+    /// True for spot-market instances: billed at the catalog's spot quote
+    /// and revocable by the provider ([`CloudSim::revoke`]).
+    pub is_spot: bool,
+    /// Pending revocation deadline (absolute sim time): the instance dies
+    /// when the clock reaches it. `None` while the instance is unrevoked.
+    pub revoke_at: Option<f64>,
     /// Current resource load (set by the serving layer / plan application).
     pub load: Dims,
     pub capacity: Dims,
@@ -111,18 +123,33 @@ impl CloudSim {
     }
 
     /// Advance the clock, accruing cost for every alive instance
-    /// (billing is linear $/hour, as the paper's hourly prices).
+    /// (billing is linear $/hour, as the paper's hourly prices). An
+    /// instance whose revocation deadline falls inside the step is billed
+    /// only up to the deadline, then terminated at exactly that time.
     pub fn advance(&mut self, dt_s: f64) {
         assert!(dt_s >= 0.0);
-        for inst in &self.instances {
-            if inst.alive() {
-                self.accrued_usd += inst.hourly_usd * dt_s / 3600.0;
+        let now = self.clock_s;
+        let end = now + dt_s;
+        let mut accrued = 0.0;
+        for inst in &mut self.instances {
+            if !inst.alive() {
+                continue;
+            }
+            match inst.revoke_at {
+                Some(t) if t <= end => {
+                    accrued += inst.hourly_usd * (t - now).max(0.0) / 3600.0;
+                    inst.terminated_at = Some(t);
+                    inst.load = Dims::default();
+                }
+                _ => accrued += inst.hourly_usd * dt_s / 3600.0,
             }
         }
-        self.clock_s += dt_s;
+        self.accrued_usd += accrued;
+        self.clock_s = end;
     }
 
-    /// Provision an instance of `type_idx` in `region_idx`.
+    /// Provision an instance of `type_idx` in `region_idx` at the
+    /// on-demand price.
     pub fn provision(&mut self, type_idx: usize, region_idx: usize) -> Result<InstanceId> {
         let price = self
             .catalog
@@ -132,6 +159,29 @@ impl CloudSim {
                     "no offering for type {type_idx} in region {region_idx}"
                 ))
             })?;
+        Ok(self.provision_with(type_idx, region_idx, price, false))
+    }
+
+    /// Provision a **spot** instance of `type_idx` in `region_idx`, billed
+    /// at the catalog's spot quote. Fails when the offering carries no spot
+    /// pool. The instance runs like any other until the provider revokes it
+    /// ([`CloudSim::revoke`]).
+    pub fn provision_spot(&mut self, type_idx: usize, region_idx: usize) -> Result<InstanceId> {
+        let price = self.catalog.spot_price(type_idx, region_idx).ok_or_else(|| {
+            Error::config(format!(
+                "no spot pool for type {type_idx} in region {region_idx}"
+            ))
+        })?;
+        Ok(self.provision_with(type_idx, region_idx, price, true))
+    }
+
+    fn provision_with(
+        &mut self,
+        type_idx: usize,
+        region_idx: usize,
+        hourly_usd: f64,
+        is_spot: bool,
+    ) -> InstanceId {
         let ty = &self.catalog.types[type_idx];
         let rg = &self.catalog.regions[region_idx];
         let id = self.next_id;
@@ -142,14 +192,34 @@ impl CloudSim {
             type_idx,
             region_idx,
             label: format!("{}@{}", ty.name, rg.id),
-            hourly_usd: price,
+            hourly_usd,
             launched_at: self.clock_s,
             ready_at: self.clock_s + self.boot_delay_s,
             terminated_at: None,
+            is_spot,
+            revoke_at: None,
             load: Dims::default(),
             capacity: ty.capacity,
         });
-        Ok(id)
+        id
+    }
+
+    /// The provider reclaims a spot instance: it keeps running (and
+    /// billing) for `warning_s` more seconds, then terminates during the
+    /// [`advance`](CloudSim::advance) step that crosses the deadline.
+    /// Revoking an already-revoked instance keeps the earlier deadline;
+    /// revoking an on-demand instance is an error (terminate those).
+    pub fn revoke(&mut self, id: InstanceId, warning_s: f64) -> Result<()> {
+        let now = self.clock_s;
+        let inst = self.get_alive_mut(id)?;
+        if !inst.is_spot {
+            return Err(Error::config(format!(
+                "instance {id} is on-demand; revocation is a spot-market event"
+            )));
+        }
+        let at = now + warning_s.max(0.0);
+        inst.revoke_at = Some(inst.revoke_at.map_or(at, |prev| prev.min(at)));
+        Ok(())
     }
 
     /// The instance with `id` iff it is alive.
@@ -275,10 +345,17 @@ impl CloudSim {
             }
         }
         // Pass 2: same-label claims, oldest id first (`instances` is in
-        // provision order, so per-label queues come out id-ascending).
+        // provision order, so per-label queues come out id-ascending). Spot
+        // instances are invisible here: the live plan may never claim
+        // revocable capacity, and the global apply must not terminate the
+        // backfill layer's spot fleet as "surplus".
         let mut pool: std::collections::BTreeMap<&str, std::collections::VecDeque<InstanceId>> =
             std::collections::BTreeMap::new();
-        for inst in self.instances.iter().filter(|i| i.alive() && !claimed.contains(&i.id)) {
+        for inst in self
+            .instances
+            .iter()
+            .filter(|i| i.alive() && !i.is_spot && !claimed.contains(&i.id))
+        {
             pool.entry(inst.label.as_str()).or_default().push_back(inst.id);
         }
         for (pi, planned) in plan.instances.iter().enumerate() {
@@ -423,6 +500,53 @@ impl CloudSim {
             }
         }
         Ok(terminated)
+    }
+}
+
+/// Deterministic seeded preemption-storm injector.
+///
+/// Each [`step`](PreemptionInjector::step) visits every alive, not yet
+/// revoked spot instance in id order and revokes it with probability
+/// `quoted_rate × intensity × dt/3600` (clamped to 1), issuing the standard
+/// [`SPOT_WARNING_S`] reclaim notice. Exactly one rng draw per visited
+/// instance, in a deterministic order — the same seed over the same fleet
+/// history replays the same storm, which is what lets the spot bench gate
+/// on exact deadline-miss and cost numbers.
+pub struct PreemptionInjector {
+    rng: Rng,
+    /// Multiplier on each instance's quoted preemption rate: 1.0 replays
+    /// the market's baseline churn, larger values model storms.
+    pub intensity: f64,
+}
+
+impl PreemptionInjector {
+    pub fn new(seed: u64, intensity: f64) -> Self {
+        PreemptionInjector { rng: Rng::new(seed), intensity }
+    }
+
+    /// Run one injection round covering the next `dt_s` seconds of sim
+    /// time (call it *before* the matching [`CloudSim::advance`]). Returns
+    /// the ids revoked this round.
+    pub fn step(&mut self, sim: &mut CloudSim, dt_s: f64) -> Vec<InstanceId> {
+        let candidates: Vec<(InstanceId, f64)> = sim
+            .alive()
+            .iter()
+            .filter(|i| i.is_spot && i.revoke_at.is_none())
+            .filter_map(|i| {
+                sim.catalog
+                    .spot_quote(i.type_idx, i.region_idx)
+                    .map(|q| (i.id, q.preemption_rate_per_hour))
+            })
+            .collect();
+        let mut revoked = Vec::new();
+        for (id, rate) in candidates {
+            let p = (rate * self.intensity * dt_s / 3600.0).clamp(0.0, 1.0);
+            if self.rng.bool(p) {
+                sim.revoke(id, SPOT_WARNING_S).expect("candidate was alive spot");
+                revoked.push(id);
+            }
+        }
+        revoked
     }
 }
 
@@ -643,6 +767,107 @@ mod tests {
         assert!(ids_small.iter().all(|&id| s.get(id).unwrap().alive()));
         assert_eq!(s.retire_shard(2).unwrap(), 0, "retire is idempotent");
         assert!((s.hourly_rate() - small.cost_per_hour).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spot_billing_runs_at_the_quote_until_the_revocation_deadline() {
+        let mut s = sim();
+        let t = s.catalog.type_by_name("c4.2xlarge").unwrap();
+        let r = s.catalog.region_by_id("us-east-1").unwrap();
+        let id = s.provision_spot(t, r).unwrap();
+        assert!(s.get(id).unwrap().is_spot);
+        // us-east-1 on-demand $0.398, spot fraction 0.34 → $0.1353.
+        s.advance(3600.0);
+        assert!((s.accrued_usd() - 0.1353).abs() < 1e-9);
+        // Reclaim notice: two more minutes of billed runtime, then death
+        // at exactly the deadline inside the crossing advance().
+        s.revoke(id, SPOT_WARNING_S).unwrap();
+        assert!(s.get(id).unwrap().alive(), "warning window keeps it running");
+        s.advance(3600.0);
+        let expect = 0.1353 * (1.0 + SPOT_WARNING_S / 3600.0);
+        assert!((s.accrued_usd() - expect).abs() < 1e-9);
+        let inst = s.get(id).unwrap();
+        assert!(!inst.alive());
+        assert_eq!(inst.terminated_at, Some(3600.0 + SPOT_WARNING_S));
+        let before = s.accrued_usd();
+        s.advance(3600.0);
+        assert_eq!(s.accrued_usd(), before, "revoked instances stop billing");
+    }
+
+    #[test]
+    fn revocation_is_a_spot_only_event_and_keeps_the_earliest_deadline() {
+        let mut s = sim();
+        let t = s.catalog.type_by_name("c4.2xlarge").unwrap();
+        let r = s.catalog.region_by_id("us-east-1").unwrap();
+        let od = s.provision(t, r).unwrap();
+        assert!(s.revoke(od, SPOT_WARNING_S).is_err(), "on-demand terminates, never revokes");
+        let sp = s.provision_spot(t, r).unwrap();
+        s.revoke(sp, 300.0).unwrap();
+        s.revoke(sp, SPOT_WARNING_S).unwrap(); // tighter notice wins
+        s.revoke(sp, 900.0).unwrap(); // a later notice cannot extend the deadline
+        assert_eq!(s.get(sp).unwrap().revoke_at, Some(SPOT_WARNING_S));
+        s.advance(SPOT_WARNING_S + 1.0);
+        assert!(!s.get(sp).unwrap().alive());
+        assert!(s.get(od).unwrap().alive());
+    }
+
+    #[test]
+    fn live_reconciliation_never_claims_or_terminates_the_spot_fleet() {
+        let catalog = Catalog::builtin().restrict(Some(&["c4.2xlarge"]), Some(&["us-east-2"]));
+        let planner = Planner::new(catalog.clone(), PlannerConfig::st1());
+        let mut s = CloudSim::new(catalog);
+        // A spot instance wearing the exact label the live fleet will use.
+        let spot_id = s.provision_spot(0, 0).unwrap();
+        let requests: Vec<StreamRequest> = (0..2)
+            .map(|i| {
+                StreamRequest::new(
+                    camera_at(i, "Chicago", cities::CHICAGO, Resolution::VGA, 30.0),
+                    Program::Zf,
+                    2.0,
+                )
+            })
+            .collect();
+        let plan = planner.plan(&requests).unwrap();
+        let ids = s.apply_plan(&plan).unwrap();
+        assert!(!ids.contains(&spot_id), "a live slot claimed a spot instance");
+        assert!(s.get(spot_id).unwrap().alive(), "global apply terminated the spot fleet");
+        // A second reconciliation pass leaves it untouched too.
+        let ids2 = s.apply_plan(&plan).unwrap();
+        assert_eq!(ids, ids2);
+        assert!(s.get(spot_id).unwrap().alive());
+    }
+
+    #[test]
+    fn preemption_injector_replays_identically_and_only_touches_spot() {
+        let catalog = Catalog::builtin().restrict(Some(&["c4.2xlarge"]), Some(&["us-east-2"]));
+        let run = |seed: u64| -> (Vec<InstanceId>, Vec<InstanceId>) {
+            let mut s = CloudSim::new(catalog.clone());
+            let od = s.provision(0, 0).unwrap();
+            let spots: Vec<InstanceId> =
+                (0..12).map(|_| s.provision_spot(0, 0).unwrap()).collect();
+            // c4.2xlarge quotes 0.04 revocations/hour; intensity 10 makes a
+            // 0.4-per-step storm over hourly steps.
+            let mut inj = PreemptionInjector::new(seed, 10.0);
+            let mut revoked = Vec::new();
+            for _ in 0..6 {
+                revoked.extend(inj.step(&mut s, 3600.0));
+                s.advance(3600.0);
+            }
+            assert!(s.get(od).unwrap().alive(), "the storm revoked an on-demand instance");
+            for &id in &revoked {
+                assert!(!s.get(id).unwrap().alive(), "revoked {id} outlived its notice");
+            }
+            (spots, revoked)
+        };
+        let (spots, a) = run(7);
+        let (_, b) = run(7);
+        assert_eq!(a, b, "same seed must replay the same storm");
+        assert!(!a.is_empty(), "a 0.4-per-step storm over 12 instances revokes someone");
+        assert!(a.iter().all(|id| spots.contains(id)));
+        let mut dedup = a.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), a.len(), "an instance is revoked at most once");
     }
 
     #[test]

@@ -82,13 +82,18 @@ impl PrevAssignment {
 /// against `prev` when present.
 ///
 /// `keys[s]` must be the stable identity of request index `s` for every
-/// index appearing in `members`.
+/// index appearing in `members`. `exact_cert_skipped` is incremented once
+/// per label block where greedy demonstrably left overlap on the table but
+/// the block was too large for the exact certification pass
+/// ([`EXACT_MATCH_CAP`]) — previously a silent skip; the pipeline surfaces
+/// it as [`PipelineStats::exact_cert_skipped`](super::pipeline::PipelineStats).
 pub fn run(
     problem: &PackingProblem,
     packing: &Packing,
     members: &[Vec<usize>],
     keys: &[StreamKey],
     prev: Option<&PrevAssignment>,
+    exact_cert_skipped: &mut usize,
 ) -> Result<Vec<PlannedInstance>> {
     let nb = packing.bins.len();
 
@@ -203,13 +208,20 @@ pub fn run(
             // and its matching is adopted only when *strictly* better — so
             // greedy's tie-breaking, and with it bit-for-bit reproduction
             // of identical re-plans, is preserved.
-            if greedy_total < matching_upper_bound(&cands)
-                && slots.len().max(bins.len()) <= EXACT_MATCH_CAP
-            {
-                if let Some((exact_total, exact_pairs)) = exact_matching(slots, bins, &cands) {
-                    if exact_total > greedy_total {
-                        chosen = exact_pairs;
+            if greedy_total < matching_upper_bound(&cands) {
+                if slots.len().max(bins.len()) <= EXACT_MATCH_CAP {
+                    if let Some((exact_total, exact_pairs)) =
+                        exact_matching(slots, bins, &cands)
+                    {
+                        if exact_total > greedy_total {
+                            chosen = exact_pairs;
+                        }
                     }
+                } else {
+                    // Greedy may be sub-optimal here and the O(n³) check
+                    // can't afford to say — count the blind spot instead of
+                    // skipping silently.
+                    *exact_cert_skipped += 1;
                 }
             }
             for (si, bi) in chosen {
@@ -291,7 +303,7 @@ pub fn run(
 /// Beyond this, greedy stands alone — the O(n³) pass would dominate Expand,
 /// and large blocks are exactly where greedy's per-slot-best bound is
 /// almost always met anyway.
-const EXACT_MATCH_CAP: usize = 96;
+pub const EXACT_MATCH_CAP: usize = 96;
 
 /// Cheap upper bound on any slot↔bin matching's kept-stream total: each
 /// slot contributes at most its best single-bin overlap and each bin at
@@ -463,7 +475,7 @@ mod tests {
             ],
         };
         let members = vec![vec![7, 9, 11]];
-        let instances = run(&problem, &packing, &members, &dummy_keys(12), None).unwrap();
+        let instances = run(&problem, &packing, &members, &dummy_keys(12), None, &mut 0).unwrap();
         assert_eq!(instances.len(), 2);
         assert_eq!(instances[0].streams, vec![7, 9]);
         assert_eq!(instances[1].streams, vec![11]);
@@ -479,7 +491,7 @@ mod tests {
             bins: vec![PackedBin { bin_type: 0, counts: vec![4] }],
         };
         let members = vec![vec![0, 1, 2]];
-        assert!(run(&problem, &packing, &members, &dummy_keys(3), None).is_err());
+        assert!(run(&problem, &packing, &members, &dummy_keys(3), None, &mut 0).is_err());
     }
 
     #[test]
@@ -491,7 +503,7 @@ mod tests {
             bins: vec![PackedBin { bin_type: 0, counts: vec![2] }],
         };
         let members = vec![vec![0, 1, 2]];
-        let err = run(&problem, &packing, &members, &dummy_keys(3), None).unwrap_err();
+        let err = run(&problem, &packing, &members, &dummy_keys(3), None, &mut 0).unwrap_err();
         assert!(err.to_string().contains("under-covers"), "{err}");
     }
 
@@ -514,7 +526,7 @@ mod tests {
                 PrevSlot { slot_id: 90, label: "cpu@r".into(), streams: vec![keys[0], keys[1]] },
             ],
         };
-        let instances = run(&problem, &packing, &members, &keys, Some(&prev)).unwrap();
+        let instances = run(&problem, &packing, &members, &keys, Some(&prev), &mut 0).unwrap();
         assert_eq!(instances[0].slot_id, 70);
         assert_eq!(instances[0].streams, vec![2, 3]);
         assert_eq!(instances[1].slot_id, 90);
@@ -538,7 +550,7 @@ mod tests {
                 PrevSlot { slot_id: 12, label: "cpu@r".into(), streams: vec![keys[2], keys[3]] },
             ],
         };
-        let instances = run(&problem, &packing, &members, &keys[..3], Some(&prev)).unwrap();
+        let instances = run(&problem, &packing, &members, &keys[..3], Some(&prev), &mut 0).unwrap();
         assert_eq!(instances.len(), 1);
         assert_eq!(instances[0].slot_id, 11, "bin pairs with the larger-overlap slot");
         assert_eq!(instances[0].streams, vec![0, 1, 2]);
@@ -561,7 +573,7 @@ mod tests {
                 streams: vec![keys[0], keys[1], keys[2]],
             }],
         };
-        let instances = run(&problem, &packing, &members, &keys, Some(&prev)).unwrap();
+        let instances = run(&problem, &packing, &members, &keys, Some(&prev), &mut 0).unwrap();
         assert_ne!(instances[0].slot_id, u64::MAX, "a different bin type is a new slot");
         assert_eq!(instances[0].streams, vec![0, 1, 2]);
     }
@@ -589,7 +601,7 @@ mod tests {
                 PrevSlot { slot_id: 42, label: "cpu@r".into(), streams: vec![keys[1], keys[2]] },
             ],
         };
-        let instances = run(&problem, &packing, &members, &keys, Some(&prev)).unwrap();
+        let instances = run(&problem, &packing, &members, &keys, Some(&prev), &mut 0).unwrap();
         assert_eq!(instances[0].slot_id, 41);
         assert_eq!(instances[0].streams, vec![0, 3], "out-of-order hosting reproduced");
         assert_eq!(instances[1].slot_id, 42);
@@ -649,7 +661,7 @@ mod tests {
                 },
             ],
         };
-        let instances = run(&problem, &packing, &members, &keys, Some(&prev)).unwrap();
+        let instances = run(&problem, &packing, &members, &keys, Some(&prev), &mut 0).unwrap();
         assert_eq!(instances[0].slot_id, 90, "bin X pairs with slot B, not greedy's A");
         assert_eq!(instances[0].streams, vec![3, 4, 5]);
         assert_eq!(instances[1].slot_id, 70);
@@ -665,6 +677,114 @@ mod tests {
             .map(|i| i.streams.len())
             .sum::<usize>();
         assert_eq!(kept, 6);
+    }
+
+    /// The greedy-suboptimal core of `exact_matching_beats_a_greedy_local_optimum`
+    /// (slots A {3 g0, 2 g1} and B {3 g0}; bins X {3 g0}, Y {1 g0 + 2 g1},
+    /// Z {2 g0}; greedy keeps 5, the optimum keeps 6) padded with `pads`
+    /// perfectly-matched one-stream slot/bin pairs of the same label, so
+    /// the label block is `3 + pads` bins wide while the certification gap
+    /// stays exactly one stream.
+    fn certification_gap_scenario(
+        pads: usize,
+    ) -> (PackingProblem, Packing, Vec<Vec<usize>>, Vec<StreamKey>, PrevAssignment) {
+        let ngroups = 2 + pads;
+        let unit = Dims::new(1.0, 1.0, 0.0, 0.0);
+        let mut groups = vec![
+            ItemGroup { label: "g0".into(), count: 6, demand_per_bin: vec![Some(unit)] },
+            ItemGroup { label: "g1".into(), count: 2, demand_per_bin: vec![Some(unit)] },
+        ];
+        for j in 0..pads {
+            groups.push(ItemGroup {
+                label: format!("pad{j}"),
+                count: 1,
+                demand_per_bin: vec![Some(unit)],
+            });
+        }
+        let problem = PackingProblem::new(
+            groups,
+            vec![BinType {
+                label: "cpu@r".into(),
+                capacity: Dims::new(8.0, 15.0, 0.0, 0.0),
+                cost: 1.0,
+                type_idx: 4,
+                region_idx: 2,
+                has_gpu: false,
+            }],
+        );
+        let mut counts_x = vec![0usize; ngroups];
+        counts_x[0] = 3;
+        let mut counts_y = vec![0usize; ngroups];
+        counts_y[0] = 1;
+        counts_y[1] = 2;
+        let mut counts_z = vec![0usize; ngroups];
+        counts_z[0] = 2;
+        let mut bins = vec![
+            PackedBin { bin_type: 0, counts: counts_x },
+            PackedBin { bin_type: 0, counts: counts_y },
+            PackedBin { bin_type: 0, counts: counts_z },
+        ];
+        for j in 0..pads {
+            let mut c = vec![0usize; ngroups];
+            c[2 + j] = 1;
+            bins.push(PackedBin { bin_type: 0, counts: c });
+        }
+        let packing = Packing { bins };
+        let mut members = vec![(0..6).collect::<Vec<usize>>(), vec![6, 7]];
+        for j in 0..pads {
+            members.push(vec![8 + j]);
+        }
+        let keys = dummy_keys(8 + pads);
+        let mut slots = vec![
+            PrevSlot {
+                slot_id: 70,
+                label: "cpu@r".into(),
+                streams: vec![keys[0], keys[1], keys[2], keys[6], keys[7]],
+            },
+            PrevSlot {
+                slot_id: 90,
+                label: "cpu@r".into(),
+                streams: vec![keys[3], keys[4], keys[5]],
+            },
+        ];
+        for j in 0..pads {
+            slots.push(PrevSlot {
+                slot_id: 1000 + j as u64,
+                label: "cpu@r".into(),
+                streams: vec![keys[8 + j]],
+            });
+        }
+        (problem, packing, members, keys, PrevAssignment { slots })
+    }
+
+    #[test]
+    fn exact_certification_still_runs_at_exactly_the_cap() {
+        // pads = cap - 3 → the label block is exactly EXACT_MATCH_CAP bins
+        // wide (96): the boundary is inclusive, so the Hungarian pass must
+        // still run, recover the optimum, and count no skip.
+        let (problem, packing, members, keys, prev) =
+            certification_gap_scenario(EXACT_MATCH_CAP - 3);
+        let mut skipped = 0usize;
+        let instances =
+            run(&problem, &packing, &members, &keys, Some(&prev), &mut skipped).unwrap();
+        assert_eq!(skipped, 0, "a cap-sized block must still be certified");
+        assert_eq!(instances[0].slot_id, 90, "exact matching recovered the optimum at the cap");
+        assert_eq!(instances[1].slot_id, 70);
+    }
+
+    #[test]
+    fn exact_certification_skip_one_past_the_cap_is_counted() {
+        // pads = cap - 2 → 97 bins, one past the boundary: greedy's local
+        // optimum stands (it demonstrably leaves a stream on the table) and
+        // the formerly-silent skip must now be surfaced in the counter.
+        let (problem, packing, members, keys, prev) =
+            certification_gap_scenario(EXACT_MATCH_CAP - 2);
+        let mut skipped = 0usize;
+        let instances =
+            run(&problem, &packing, &members, &keys, Some(&prev), &mut skipped).unwrap();
+        assert_eq!(skipped, 1, "the certification blind spot must be counted, not silent");
+        assert_eq!(instances[0].slot_id, 70, "greedy's A-X pairing stands past the cap");
+        assert_eq!(instances[2].slot_id, 90, "greedy settles for B-Z");
     }
 
     fn brute_force_best(n: usize, w: &[Vec<u64>]) -> u64 {
@@ -721,9 +841,9 @@ mod tests {
         };
         let members = vec![vec![0, 1, 2, 3, 4]];
         let keys = dummy_keys(5);
-        let first = run(&problem, &packing, &members, &keys, None).unwrap();
+        let first = run(&problem, &packing, &members, &keys, None, &mut 0).unwrap();
         let prev = PrevAssignment::capture(&first, &keys);
-        let second = run(&problem, &packing, &members, &keys, Some(&prev)).unwrap();
+        let second = run(&problem, &packing, &members, &keys, Some(&prev), &mut 0).unwrap();
         for (a, b) in first.iter().zip(&second) {
             assert_eq!(a.slot_id, b.slot_id);
             assert_eq!(a.streams, b.streams);

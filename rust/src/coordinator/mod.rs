@@ -62,6 +62,7 @@ pub mod expand;
 pub mod pipeline;
 pub mod portfolio;
 pub mod shard;
+pub mod spot;
 
 use crate::cameras::StreamRequest;
 use crate::catalog::Catalog;

@@ -136,6 +136,12 @@ pub struct PipelineStats {
     pub pool_jobs: usize,
     /// Over-budget graph builds skipped via the failure watermark.
     pub graph_fail_fastpaths: usize,
+    /// Expand label blocks where greedy demonstrably left kept-stream
+    /// overlap on the table but the block exceeded
+    /// [`expand::EXACT_MATCH_CAP`](super::expand::EXACT_MATCH_CAP), so the
+    /// exact certification pass could not run. Nonzero means the sticky
+    /// assignment may have moved more streams than necessary this re-plan.
+    pub exact_cert_skipped: usize,
     /// Wall-clock of each pipeline stage this run, in milliseconds.
     pub elig_ms: f64,
     pub build_ms: f64,
@@ -201,6 +207,7 @@ impl PipelineStats {
         self.budget_pooled_nodes += other.budget_pooled_nodes;
         self.pool_jobs += other.pool_jobs;
         self.graph_fail_fastpaths += other.graph_fail_fastpaths;
+        self.exact_cert_skipped += other.exact_cert_skipped;
         self.elig_ms += other.elig_ms;
         self.build_ms += other.build_ms;
         self.solve_ms += other.solve_ms;
@@ -647,8 +654,14 @@ pub(crate) fn plan_with_pool(
 
     // Stage 4: Expand — sticky against the previous assignment.
     let t_expand = Instant::now();
-    let instances =
-        expand::run(&problem, &packing, &groups.members, &skeys, ctx.last_assign.as_ref())?;
+    let instances = expand::run(
+        &problem,
+        &packing,
+        &groups.members,
+        &skeys,
+        ctx.last_assign.as_ref(),
+        &mut stats.exact_cert_skipped,
+    )?;
     stats.expand_ms = ms_since(t_expand);
 
     let cost = packing.total_cost(&problem);

@@ -1,0 +1,387 @@
+//! Joint live + deferred-backfill planning over the spot market.
+//!
+//! The live pipeline ([`pipeline`]) keeps its contract untouched: live
+//! streams are planned against **on-demand** offerings only — a live stream
+//! never lands on revocable capacity, so the live half of a joint plan is
+//! bit-identical to what [`Planner::plan_single`](super::Planner::plan_single)
+//! would produce. Deferred backfill ([`BackfillQuery`]) rides the temporal
+//! axis instead ([`crate::packing::mcvbp::pack_backfill`]): its unit-hours
+//! pack first into the slack the live fleet already pays for, then into
+//! spot instances at the catalog's discounted quotes, with plain on-demand
+//! lanes as the overflow for non-preemptible work.
+//!
+//! The spot schedule is adopted through a **certified gate**, mirroring the
+//! exact-vs-greedy adoption rule in the MCVBP core: the planner always
+//! computes the on-demand-only baseline schedule too, and switches to the
+//! spot schedule only when it is strictly cheaper without shedding more
+//! jobs. `prop_spot_plan_never_costlier_than_on_demand_only` pins exactly
+//! this invariant.
+//!
+//! Revocations are absorbed as a *structural delta*
+//! ([`crate::packing::mcvbp::rehome_backfill`], the temporal analogue of the
+//! PR-6 ghost path): revoked lanes are ghost-zeroed from the revocation hour
+//! on and only the stranded placements move — every surviving placement and
+//! the entire on-demand live fleet stay bit-identical.
+
+use super::pipeline::{self, PlanContext};
+use super::{HardwareFilter, Plan, PlannerConfig};
+use crate::cameras::scenarios::BackfillQuery;
+use crate::cameras::StreamRequest;
+use crate::catalog::{Catalog, Dims};
+use crate::error::Result;
+use crate::packing::mcvbp::{
+    pack_backfill, rehome_backfill, BackfillItem, BackfillSchedule, LaneKind, TemporalLane,
+};
+
+/// Spot/backfill planning knobs, on top of the live [`PlannerConfig`].
+#[derive(Clone, Debug)]
+pub struct SpotPlannerConfig {
+    /// Length of the temporal axis, in hours from trace start.
+    pub horizon_hours: usize,
+    /// False disables the spot lanes entirely — the on-demand-only baseline
+    /// configuration the bench compares against.
+    pub use_spot: bool,
+    /// Paid lanes offered per catalog offering (one lane = one instance the
+    /// backfill packer may open).
+    pub lanes_per_offering: usize,
+}
+
+impl Default for SpotPlannerConfig {
+    fn default() -> Self {
+        SpotPlannerConfig { horizon_hours: 48, use_spot: true, lanes_per_offering: 4 }
+    }
+}
+
+/// A joint plan: the on-demand live fleet plus the backfill schedule over
+/// the temporal lane grid.
+#[derive(Clone, Debug)]
+pub struct JointPlan {
+    /// The live plan — on-demand only, byte-for-byte what the plain
+    /// pipeline produces for the same requests.
+    pub live: Plan,
+    /// The temporal lane grid the schedule indexes into: live-slack lanes
+    /// first (aligned with `live.instances`), then the paid lanes.
+    pub lanes: Vec<TemporalLane>,
+    /// Catalog (type, region) behind each paid lane; `None` for live slack.
+    pub lane_offerings: Vec<Option<(usize, usize)>>,
+    /// The adopted backfill schedule.
+    pub schedule: BackfillSchedule,
+    /// Cost of the adopted schedule's paid lane-hours.
+    pub backfill_cost: f64,
+    /// Cost of the certified on-demand-only baseline schedule.
+    pub baseline_cost: f64,
+    /// True when the spot schedule passed the gate (strictly cheaper, no
+    /// extra shedding) and was adopted over the baseline.
+    pub spot_adopted: bool,
+}
+
+impl JointPlan {
+    /// Hourly cost of the paid lanes occupied during `hour` — the billing
+    /// integrand the simulator accrues.
+    pub fn paid_cost_at(&self, hour: usize) -> f64 {
+        let mut lanes: Vec<usize> = self
+            .schedule
+            .placements
+            .iter()
+            .filter(|p| p.hour == hour)
+            .map(|p| p.lane)
+            .collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+        lanes.iter().map(|&l| self.lanes[l].hourly_cost).sum()
+    }
+}
+
+/// The joint live + backfill planner. Owns the persistent [`PlanContext`]
+/// so hourly live re-plans stay sticky and incremental.
+pub struct SpotPlanner {
+    pub catalog: Catalog,
+    pub config: PlannerConfig,
+    pub spot: SpotPlannerConfig,
+    ctx: PlanContext,
+}
+
+impl SpotPlanner {
+    pub fn new(catalog: Catalog, config: PlannerConfig, spot: SpotPlannerConfig) -> Self {
+        SpotPlanner { catalog, config, spot, ctx: PlanContext::new() }
+    }
+
+    /// Quantize queries into temporal work items: scanning one hour of
+    /// stored footage at the query's sampling rate is one unit-hour of work
+    /// at the program's CPU-path demand, the deadline is absolute (trace
+    /// hours), and the preemptible flag rides through.
+    pub fn items_from_queries(queries: &[BackfillQuery]) -> Vec<BackfillItem> {
+        queries
+            .iter()
+            .map(|q| BackfillItem {
+                id: q.id,
+                demand: q.program.profile().demand_cpu(q.scan_fps, q.camera.resolution),
+                units: (q.span_hours.ceil() as usize).max(1),
+                deadline_hour: q.arrival_hour + (q.deadline_hours.floor() as usize).max(1),
+                preemptible: q.preemptible,
+            })
+            .collect()
+    }
+
+    /// Plan both job classes for the state at `now_hour`: the live fleet
+    /// through the sticky pipeline, then backfill over the temporal grid
+    /// (slack + paid lanes, all starting at `now_hour`). The spot schedule
+    /// is adopted only through the certified gate against the
+    /// on-demand-only baseline.
+    pub fn plan(
+        &mut self,
+        requests: &[StreamRequest],
+        items: &[BackfillItem],
+        now_hour: usize,
+    ) -> Result<JointPlan> {
+        let live =
+            pipeline::plan_with_context(&self.catalog, &self.config, requests, &mut self.ctx)?;
+        let horizon = self.spot.horizon_hours;
+
+        // Live-slack lanes, aligned with live.instances (expand builds one
+        // instance per packed bin, index-aligned).
+        let mut slack_lanes = Vec::with_capacity(live.instances.len());
+        for (i, inst) in live.instances.iter().enumerate() {
+            let cap = self.catalog.types[inst.type_idx].capacity.scale(self.config.headroom);
+            let load = live.packing.bins[i].total_demand(&live.problem);
+            let cap = cap.as_array();
+            let load = load.as_array();
+            let mut free = [0.0; crate::catalog::NUM_DIMS];
+            for d in 0..free.len() {
+                free[d] = (cap[d] - load[d]).max(0.0);
+            }
+            slack_lanes.push(TemporalLane {
+                label: inst.label.clone(),
+                kind: LaneKind::LiveSlack,
+                usable: Dims::from_array(free),
+                hourly_cost: 0.0,
+                from_hour: now_hour,
+            });
+        }
+
+        let (spot_paid, od_paid) = self.paid_lanes(now_hour);
+
+        // On-demand-only baseline: slack + on-demand lanes.
+        let mut base_lanes = slack_lanes.clone();
+        let base_paid_start = base_lanes.len();
+        base_lanes.extend(od_paid.iter().map(|(l, _)| l.clone()));
+        let baseline = pack_backfill(&base_lanes, items, horizon);
+
+        // Spot-enabled: slack + spot lanes + on-demand overflow (the only
+        // paid capacity non-preemptible items may use).
+        let adopt_spot = if self.spot.use_spot {
+            let mut lanes = slack_lanes.clone();
+            lanes.extend(spot_paid.iter().map(|(l, _)| l.clone()));
+            lanes.extend(od_paid.iter().map(|(l, _)| l.clone()));
+            let schedule = pack_backfill(&lanes, items, horizon);
+            // Certified gate: strictly cheaper, and no extra shedding.
+            if schedule.cost < baseline.cost && schedule.shed.len() <= baseline.shed.len() {
+                let mut lane_offerings: Vec<Option<(usize, usize)>> =
+                    vec![None; slack_lanes.len()];
+                lane_offerings.extend(spot_paid.iter().map(|&(_, o)| Some(o)));
+                lane_offerings.extend(od_paid.iter().map(|&(_, o)| Some(o)));
+                Some((lanes, lane_offerings, schedule))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+
+        let baseline_cost = baseline.cost;
+        let (lanes, lane_offerings, schedule, spot_adopted) = match adopt_spot {
+            Some((lanes, offs, schedule)) => (lanes, offs, schedule, true),
+            None => {
+                let mut offs: Vec<Option<(usize, usize)>> = vec![None; base_paid_start];
+                offs.extend(od_paid.iter().map(|&(_, o)| Some(o)));
+                (base_lanes, offs, baseline, false)
+            }
+        };
+        let backfill_cost = schedule.cost;
+        Ok(JointPlan {
+            live,
+            lanes,
+            lane_offerings,
+            schedule,
+            backfill_cost,
+            baseline_cost,
+            spot_adopted,
+        })
+    }
+
+    /// Absorb a revocation storm: ghost-zero the revoked lanes from `hour`
+    /// on and re-home only the stranded placements. The live fleet is not
+    /// consulted, let alone touched. Returns the repaired schedule and the
+    /// moved item ids.
+    pub fn absorb_revocation(
+        &self,
+        plan: &JointPlan,
+        items: &[BackfillItem],
+        revoked_lanes: &[usize],
+        hour: usize,
+    ) -> (BackfillSchedule, Vec<u64>) {
+        rehome_backfill(
+            &plan.lanes,
+            items,
+            &plan.schedule,
+            revoked_lanes,
+            hour,
+            self.spot.horizon_hours,
+        )
+    }
+
+    /// The paid lane candidates at `now_hour`: `lanes_per_offering` copies
+    /// per hardware-eligible offering — spot lanes (risk-discounted usable
+    /// capacity, quoted price) and on-demand lanes (full usable capacity,
+    /// listed price). Catalog order keeps the grid deterministic.
+    #[allow(clippy::type_complexity)]
+    fn paid_lanes(
+        &self,
+        now_hour: usize,
+    ) -> (Vec<(TemporalLane, (usize, usize))>, Vec<(TemporalLane, (usize, usize))>) {
+        let mut spot = Vec::new();
+        let mut od = Vec::new();
+        for o in &self.catalog.offerings {
+            let ty = &self.catalog.types[o.type_idx];
+            let allowed = match self.config.hardware {
+                HardwareFilter::CpuOnly => !ty.has_gpu(),
+                HardwareFilter::GpuOnly => ty.has_gpu(),
+                HardwareFilter::Both => true,
+            };
+            if !allowed {
+                continue;
+            }
+            let label =
+                format!("{}@{}", ty.name, self.catalog.regions[o.region_idx].id);
+            let usable = ty.capacity.scale(self.config.headroom);
+            for _ in 0..self.spot.lanes_per_offering {
+                od.push((
+                    TemporalLane {
+                        label: label.clone(),
+                        kind: LaneKind::OnDemand,
+                        usable,
+                        hourly_cost: o.hourly_usd,
+                        from_hour: now_hour,
+                    },
+                    (o.type_idx, o.region_idx),
+                ));
+                if let Some(q) = o.spot {
+                    spot.push((
+                        TemporalLane {
+                            label: label.clone(),
+                            kind: LaneKind::Spot,
+                            usable: usable.scale(1.0 - q.preemption_rate_per_hour),
+                            hourly_cost: q.hourly_usd,
+                            from_hour: now_hour,
+                        },
+                        (o.type_idx, o.region_idx),
+                    ));
+                }
+            }
+        }
+        (spot, od)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cameras::camera_at;
+    use crate::cameras::scenarios::{diurnal_backfill, flash_crowd_backfill};
+    use crate::geo::cities;
+    use crate::profiles::{Program, Resolution};
+
+    fn small_catalog() -> Catalog {
+        Catalog::builtin().restrict(Some(&["c4.2xlarge"]), Some(&["us-east-2"]))
+    }
+
+    fn live_requests(n: usize) -> Vec<StreamRequest> {
+        (0..n)
+            .map(|i| {
+                StreamRequest::new(
+                    camera_at(i as u64, "Chicago", cities::CHICAGO, Resolution::XGA, 30.0),
+                    Program::Zf,
+                    0.5,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn live_fleet_never_lands_on_spot() {
+        let catalog = small_catalog();
+        let mut p = SpotPlanner::new(catalog.clone(), PlannerConfig::st1(), Default::default());
+        let items = SpotPlanner::items_from_queries(&diurnal_backfill(20, 5));
+        let jp = p.plan(&live_requests(3), &items, 0).unwrap();
+        let od = catalog.price(0, 0).unwrap();
+        for inst in &jp.live.instances {
+            assert_eq!(inst.hourly_cost, od, "live instance billed off the on-demand sheet");
+        }
+        // Slack lanes mirror the live fleet one-to-one and are free.
+        let slack = jp.lanes.iter().filter(|l| l.kind == LaneKind::LiveSlack).count();
+        assert_eq!(slack, jp.live.instances.len());
+        assert!(jp
+            .lanes
+            .iter()
+            .filter(|l| l.kind == LaneKind::LiveSlack)
+            .all(|l| l.hourly_cost == 0.0));
+    }
+
+    #[test]
+    fn certified_gate_never_adopts_a_costlier_spot_schedule() {
+        let catalog = small_catalog();
+        let mut p = SpotPlanner::new(catalog, PlannerConfig::st1(), Default::default());
+        let items = SpotPlanner::items_from_queries(&diurnal_backfill(40, 11));
+        let jp = p.plan(&live_requests(2), &items, 0).unwrap();
+        assert!(jp.backfill_cost <= jp.baseline_cost + 1e-9);
+        if jp.spot_adopted {
+            assert!(jp.backfill_cost < jp.baseline_cost);
+        }
+    }
+
+    #[test]
+    fn joint_plan_respects_deadlines_or_sheds_explicitly() {
+        let catalog = small_catalog();
+        let mut p = SpotPlanner::new(catalog, PlannerConfig::st1(), Default::default());
+        let queries = flash_crowd_backfill(25, 2, 9);
+        let items = SpotPlanner::items_from_queries(&queries);
+        let jp = p.plan(&live_requests(2), &items, 0).unwrap();
+        for item in &items {
+            let placed =
+                jp.schedule.placements.iter().filter(|pl| pl.item == item.id).count();
+            if jp.schedule.shed.contains(&item.id) {
+                assert_eq!(placed, 0, "shed item {} holds capacity", item.id);
+            } else {
+                assert_eq!(placed, item.units, "item {} under-scheduled", item.id);
+                assert!(jp
+                    .schedule
+                    .placements
+                    .iter()
+                    .filter(|pl| pl.item == item.id)
+                    .all(|pl| pl.hour < item.deadline_hour));
+            }
+        }
+    }
+
+    #[test]
+    fn non_preemptible_overflow_uses_on_demand_lanes() {
+        let catalog = small_catalog();
+        let mut p = SpotPlanner::new(catalog, PlannerConfig::st1(), Default::default());
+        // No live fleet slack to hide in: tiny live load, heavy
+        // non-preemptible backfill.
+        let mut queries = diurnal_backfill(30, 3);
+        for q in &mut queries {
+            q.preemptible = false;
+            q.arrival_hour = 0;
+        }
+        let items = SpotPlanner::items_from_queries(&queries);
+        let jp = p.plan(&live_requests(1), &items, 0).unwrap();
+        for pl in &jp.schedule.placements {
+            assert_ne!(
+                jp.lanes[pl.lane].kind,
+                LaneKind::Spot,
+                "non-preemptible unit on a spot lane"
+            );
+        }
+    }
+}

@@ -841,6 +841,304 @@ fn translate_block_basis(
     (!out.is_empty()).then_some(out)
 }
 
+// ---------------------------------------------------------------------------
+// Temporal capacity axis — deferred backfill packed into hour-indexed slack
+// ---------------------------------------------------------------------------
+//
+// The live MCVBP above answers "which bins, right now". Deferred backfill
+// (`cameras::scenarios::BackfillQuery`) adds a time axis: work is a budget of
+// unit-hours with a deadline, and capacity is an hour-indexed grid of lanes —
+// the slack live bins leave unused (already paid for), spot instances
+// (cheap, but their usable capacity is discounted by the pool's revocation
+// rate), and plain on-demand instances (the baseline the certified gate in
+// `coordinator::spot` compares against). The packer is a deterministic
+// earliest-deadline-first greedy: items either schedule completely before
+// their deadline or are shed whole — a shed item never holds capacity.
+// Revocations re-enter through [`rehome_backfill`], the temporal analogue of
+// the ghost path: revoked lanes are zero-capacity from the revocation hour
+// on, and only the placements stranded on them move.
+
+/// Where a temporal lane's capacity comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneKind {
+    /// Headroom a live on-demand bin leaves unused — already paid for, so
+    /// occupied hours bill nothing.
+    LiveSlack,
+    /// A spot instance: cheap, revocable; `usable` is risk-discounted.
+    Spot,
+    /// An on-demand instance opened purely for backfill.
+    OnDemand,
+}
+
+/// One hour-indexed capacity lane of the temporal packing axis.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TemporalLane {
+    /// Bin identity ("type@region"), mirroring [`BinType`]'s label.
+    pub label: String,
+    pub kind: LaneKind,
+    /// Usable capacity per occupied hour. Spot lanes carry
+    /// `capacity × headroom × (1 − preemption rate)` — the expected fraction
+    /// of the hour the instance actually survives.
+    pub usable: Dims,
+    /// Price of one occupied hour (0 for live slack).
+    pub hourly_cost: f64,
+    /// First hour the lane exists (lanes opened mid-trace start late).
+    pub from_hour: usize,
+}
+
+/// One backfill job, quantized into unit-hours of work: scanning one hour of
+/// stored footage at the query's sampling rate is one unit, and units are
+/// independent footage segments — they may run in any order and in parallel.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BackfillItem {
+    pub id: u64,
+    /// Demand of one unit for one hour.
+    pub demand: Dims,
+    /// Remaining unit-hours of work.
+    pub units: usize,
+    /// Every unit must land in an hour strictly below this.
+    pub deadline_hour: usize,
+    /// Non-preemptible items never pack onto [`LaneKind::Spot`] lanes.
+    pub preemptible: bool,
+}
+
+/// One placed unit-hour: one unit of item `item` runs on `lane` during
+/// `hour`. Multiple units (of any items) may share a lane-hour as long as
+/// their summed demand fits the lane's usable capacity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BackfillPlacement {
+    pub item: u64,
+    pub lane: usize,
+    pub hour: usize,
+}
+
+/// A backfill schedule over the temporal axis.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BackfillSchedule {
+    /// Placed unit-hours, in deterministic (EDF item, placement) order.
+    pub placements: Vec<BackfillPlacement>,
+    /// Items shed whole: their deadline was infeasible under the offered
+    /// capacity. Shedding is explicit — a shed id holds no placements.
+    pub shed: Vec<u64>,
+    /// Σ `hourly_cost` over *occupied* paid lane-hours: slack hours are
+    /// free, and a paid lane-hour bills once however many units share it.
+    pub cost: f64,
+}
+
+impl BackfillSchedule {
+    /// Recompute `cost` from the placements (used after schedule surgery).
+    fn rebill(&mut self, lanes: &[TemporalLane]) {
+        let mut cells: Vec<(usize, usize)> =
+            self.placements.iter().map(|p| (p.lane, p.hour)).collect();
+        cells.sort_unstable();
+        cells.dedup();
+        self.cost = cells.iter().map(|&(l, _)| lanes[l].hourly_cost).sum();
+    }
+}
+
+/// Hour-indexed occupancy of the lane grid during packing.
+#[derive(Clone)]
+struct LaneGrid {
+    /// `used[l][h]`: demand already placed on lane `l` during hour `h`.
+    used: Vec<Vec<Dims>>,
+    /// `open[l][h]`: whether the paid lane-hour is already billed.
+    open: Vec<Vec<bool>>,
+}
+
+impl LaneGrid {
+    fn new(lanes: &[TemporalLane], horizon: usize) -> LaneGrid {
+        LaneGrid {
+            used: vec![vec![Dims::ZERO; horizon]; lanes.len()],
+            open: vec![vec![false; horizon]; lanes.len()],
+        }
+    }
+
+    /// Marginal cost of placing one more unit on (lane, hour): zero when the
+    /// lane is free or the lane-hour is already billed.
+    fn marginal(&self, lanes: &[TemporalLane], l: usize, h: usize) -> f64 {
+        if self.open[l][h] {
+            0.0
+        } else {
+            lanes[l].hourly_cost
+        }
+    }
+
+    fn fits(&self, lanes: &[TemporalLane], item: &BackfillItem, l: usize, h: usize) -> bool {
+        let lane = &lanes[l];
+        if h < lane.from_hour {
+            return false;
+        }
+        if lane.kind == LaneKind::Spot && !item.preemptible {
+            return false;
+        }
+        self.used[l][h].add(&item.demand).fits_in(&lane.usable)
+    }
+
+    fn place(&mut self, item: &BackfillItem, l: usize, h: usize) {
+        self.used[l][h] = self.used[l][h].add(&item.demand);
+        self.open[l][h] = true;
+    }
+}
+
+/// Place every unit of `item` into the grid between `from_hour` (inclusive)
+/// and its deadline (exclusive, capped at `horizon`). Each unit takes the
+/// cheapest feasible cell, ties broken by (hour, lane) — so free slack and
+/// already-billed lane-hours absorb work before a new paid hour opens, and
+/// the placement order is deterministic. Returns the placements, or `None`
+/// if any unit cannot be placed (the item must then be shed whole).
+fn place_item(
+    lanes: &[TemporalLane],
+    grid: &mut LaneGrid,
+    item: &BackfillItem,
+    from_hour: usize,
+    horizon: usize,
+) -> Option<Vec<BackfillPlacement>> {
+    let end = item.deadline_hour.min(horizon);
+    let mut placed = Vec::with_capacity(item.units);
+    for _ in 0..item.units {
+        let mut best: Option<(f64, usize, usize)> = None;
+        for h in from_hour..end {
+            for l in 0..lanes.len() {
+                if !grid.fits(lanes, item, l, h) {
+                    continue;
+                }
+                let cost = grid.marginal(lanes, l, h);
+                let cand = (cost, h, l);
+                if best.is_none_or(|b| cand.0 < b.0 || (cand.0 == b.0 && (h, l) < (b.1, b.2))) {
+                    best = Some(cand);
+                }
+            }
+        }
+        let (_, h, l) = best?;
+        grid.place(item, l, h);
+        placed.push(BackfillPlacement { item: item.id, lane: l, hour: h });
+    }
+    Some(placed)
+}
+
+/// Pack backfill items into the temporal lane grid, earliest deadline first
+/// (ties by id). Each item is placed atomically on a scratch overlay: either
+/// every unit lands before the deadline and the overlay commits, or the item
+/// is shed whole and holds nothing. Deterministic — same inputs, same
+/// schedule, bit for bit.
+pub fn pack_backfill(
+    lanes: &[TemporalLane],
+    items: &[BackfillItem],
+    horizon: usize,
+) -> BackfillSchedule {
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    order.sort_by_key(|&i| (items[i].deadline_hour, items[i].id));
+    let mut grid = LaneGrid::new(lanes, horizon);
+    let mut schedule = BackfillSchedule::default();
+    for &i in &order {
+        let item = &items[i];
+        if item.units == 0 {
+            continue;
+        }
+        // Tentative placement: clone-on-attempt keeps shed items capacity-free.
+        let mut scratch = grid.clone();
+        match place_item(lanes, &mut scratch, item, 0, horizon) {
+            Some(mut placed) => {
+                grid = scratch;
+                schedule.placements.append(&mut placed);
+            }
+            None => schedule.shed.push(item.id),
+        }
+    }
+    schedule.rebill(lanes);
+    schedule
+}
+
+/// Absorb a revocation as a *structural delta* on the temporal axis: lanes
+/// in `revoked` are ghost-zeroed from `hour` on (their history stands — work
+/// already executed is sunk and stays in the schedule), and only the
+/// placements stranded on them are re-homed. Every placement of an untouched
+/// item survives bit-identically; stranded items re-place their lost units
+/// EDF into the remaining grid, and an item whose deadline no longer fits is
+/// shed explicitly — its pending (hour ≥ `hour`) placements are withdrawn,
+/// its completed ones stand.
+///
+/// Returns the repaired schedule and the ids of the items that moved
+/// (re-homed or shed).
+pub fn rehome_backfill(
+    lanes: &[TemporalLane],
+    items: &[BackfillItem],
+    schedule: &BackfillSchedule,
+    revoked: &[usize],
+    hour: usize,
+    horizon: usize,
+) -> (BackfillSchedule, Vec<u64>) {
+    let is_revoked = |l: usize| revoked.contains(&l);
+    // Partition: placements that stand vs stranded unit-hours per item.
+    let mut kept: Vec<BackfillPlacement> = Vec::with_capacity(schedule.placements.len());
+    let mut stranded: Vec<(u64, usize)> = Vec::new(); // (item id, lost units)
+    for p in &schedule.placements {
+        if p.hour >= hour && is_revoked(p.lane) {
+            match stranded.iter_mut().find(|(id, _)| *id == p.item) {
+                Some((_, n)) => *n += 1,
+                None => stranded.push((p.item, 1)),
+            }
+        } else {
+            kept.push(*p);
+        }
+    }
+    if stranded.is_empty() {
+        let mut out = schedule.clone();
+        out.rebill(lanes);
+        return (out, Vec::new());
+    }
+    stranded.sort_by_key(|&(id, _)| {
+        (items.iter().find(|it| it.id == id).map_or(usize::MAX, |it| it.deadline_hour), id)
+    });
+    // Rebuild occupancy from the kept placements; revoked lanes are
+    // ghost-zeroed from `hour` by a from_hour/usable mask on lookup.
+    let masked: Vec<TemporalLane> = lanes
+        .iter()
+        .enumerate()
+        .map(|(l, lane)| {
+            let mut lane = lane.clone();
+            if is_revoked(l) {
+                // Zero capacity from the revocation hour on: from_hour can't
+                // express "until", so mask by shrinking usable to zero and
+                // re-adding kept history below (kept cells on revoked lanes
+                // are all pre-`hour` and never re-packed into).
+                lane.usable = Dims::ZERO;
+            }
+            lane
+        })
+        .collect();
+    let mut grid = LaneGrid::new(&masked, horizon);
+    for p in &kept {
+        if let Some(item) = items.iter().find(|it| it.id == p.item) {
+            grid.used[p.lane][p.hour] = grid.used[p.lane][p.hour].add(&item.demand);
+        }
+        grid.open[p.lane][p.hour] = true;
+    }
+    let mut moved: Vec<u64> = Vec::new();
+    let mut shed: Vec<u64> = schedule.shed.clone();
+    for &(id, lost) in &stranded {
+        let Some(item) = items.iter().find(|it| it.id == id) else { continue };
+        moved.push(id);
+        let remnant = BackfillItem { units: lost, ..item.clone() };
+        let mut scratch = grid.clone();
+        match place_item(&masked, &mut scratch, &remnant, hour, horizon) {
+            Some(mut placed) => {
+                grid = scratch;
+                kept.append(&mut placed);
+            }
+            None => {
+                // Deadline infeasible after the storm: shed explicitly.
+                // Withdraw the item's pending placements; history stands.
+                kept.retain(|p| p.item != id || p.hour < hour);
+                shed.push(id);
+            }
+        }
+    }
+    let mut out = BackfillSchedule { placements: kept, shed, cost: 0.0 };
+    out.rebill(lanes);
+    (out, moved)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1325,5 +1623,133 @@ mod tests {
                 stats.ffd_cost
             );
         }
+    }
+
+    fn slack_lane(cpu: f64) -> TemporalLane {
+        TemporalLane {
+            label: "cpu@r".into(),
+            kind: LaneKind::LiveSlack,
+            usable: Dims::new(cpu, 2.0 * cpu, 0.0, 0.0),
+            hourly_cost: 0.0,
+            from_hour: 0,
+        }
+    }
+
+    fn spot_lane(cpu: f64, cost: f64) -> TemporalLane {
+        TemporalLane {
+            label: "cpu@r".into(),
+            kind: LaneKind::Spot,
+            usable: Dims::new(cpu, 2.0 * cpu, 0.0, 0.0),
+            hourly_cost: cost,
+            from_hour: 0,
+        }
+    }
+
+    fn unit_item(id: u64, units: usize, deadline: usize) -> BackfillItem {
+        BackfillItem {
+            id,
+            demand: Dims::new(1.0, 1.0, 0.0, 0.0),
+            units,
+            deadline_hour: deadline,
+            preemptible: true,
+        }
+    }
+
+    #[test]
+    fn backfill_prefers_free_slack_before_opening_paid_hours() {
+        // 4 units fit entirely into the free slack lane (2/hour × 2 hours);
+        // the spot lane must stay unbilled.
+        let lanes = vec![slack_lane(2.0), spot_lane(8.0, 0.14)];
+        let items = vec![unit_item(1, 4, 4)];
+        let s = pack_backfill(&lanes, &items, 24);
+        assert!(s.shed.is_empty());
+        assert_eq!(s.placements.len(), 4);
+        assert!(s.placements.iter().all(|p| p.lane == 0));
+        assert_eq!(s.cost, 0.0);
+    }
+
+    #[test]
+    fn backfill_bills_paid_lane_hours_once() {
+        // 6 units, no slack: a 3-wide spot lane fills 2 hours — cost is two
+        // lane-hours, not six unit placements.
+        let lanes = vec![spot_lane(3.0, 0.5)];
+        let items = vec![unit_item(1, 6, 8)];
+        let s = pack_backfill(&lanes, &items, 24);
+        assert!(s.shed.is_empty());
+        assert_eq!(s.placements.len(), 6);
+        assert!((s.cost - 1.0).abs() < 1e-12, "two billed hours at 0.5: {}", s.cost);
+    }
+
+    #[test]
+    fn infeasible_deadline_sheds_whole_item_and_holds_no_capacity() {
+        // Item 1 needs 5 units before hour 2 on a 2-wide lane (max 4) —
+        // shed. Item 2's 4 units must then still fit (no half-placed ghost).
+        let lanes = vec![spot_lane(2.0, 0.3)];
+        let items = vec![unit_item(1, 5, 2), unit_item(2, 4, 2)];
+        let s = pack_backfill(&lanes, &items, 24);
+        assert_eq!(s.shed, vec![1]);
+        assert!(s.placements.iter().all(|p| p.item == 2));
+        assert_eq!(s.placements.len(), 4);
+    }
+
+    #[test]
+    fn non_preemptible_items_never_land_on_spot() {
+        let lanes = vec![spot_lane(8.0, 0.2), slack_lane(1.0)];
+        let mut item = unit_item(7, 3, 12);
+        item.preemptible = false;
+        let s = pack_backfill(&lanes, &[item], 24);
+        assert!(s.shed.is_empty());
+        assert!(s.placements.iter().all(|p| p.lane == 1), "{:?}", s.placements);
+    }
+
+    #[test]
+    fn rehome_moves_only_stranded_items_and_rebills() {
+        // Two spot lanes; item 1 lands on lane 0, item 2 on lane 0/1 mix is
+        // avoided by capacity: lane 0 takes 2/hour, so EDF puts item 1
+        // (deadline 4) and item 2 (deadline 8) across both lanes.
+        let lanes = vec![spot_lane(1.0, 0.2), spot_lane(1.0, 0.2)];
+        let items = vec![unit_item(1, 2, 4), unit_item(2, 2, 8)];
+        let s = pack_backfill(&lanes, &items, 24);
+        assert!(s.shed.is_empty());
+        // Revoke lane 0 from hour 0: every unit on lane 0 is stranded.
+        let (r, moved) = rehome_backfill(&lanes, &items, &s, &[0], 0, 24);
+        assert!(r.shed.is_empty(), "lane 1 alone still meets both deadlines");
+        assert!(r.placements.iter().all(|p| p.lane == 1));
+        // Untouched placements (those already on lane 1) survive verbatim.
+        for p in s.placements.iter().filter(|p| p.lane == 1) {
+            assert!(r.placements.contains(p), "surviving placement moved: {p:?}");
+        }
+        let stranded: Vec<u64> =
+            s.placements.iter().filter(|p| p.lane == 0).map(|p| p.item).collect();
+        assert!(moved.iter().all(|id| stranded.contains(id)));
+        assert!(!moved.is_empty());
+    }
+
+    #[test]
+    fn rehome_without_revocations_is_bit_identical() {
+        let lanes = vec![slack_lane(2.0), spot_lane(2.0, 0.4)];
+        let items = vec![unit_item(1, 5, 6), unit_item(2, 3, 4)];
+        let s = pack_backfill(&lanes, &items, 24);
+        let (r, moved) = rehome_backfill(&lanes, &items, &s, &[], 3, 24);
+        assert!(moved.is_empty());
+        assert_eq!(r, s, "zero-revocation rehome must be a bit-identical no-op");
+    }
+
+    #[test]
+    fn rehome_sheds_when_the_deadline_no_longer_fits() {
+        // One 1-wide spot lane, item needs 3 units by hour 3 — exactly
+        // feasible. Revoking the lane's hours from hour 1 strands 2 units
+        // with nowhere to go: the item is shed, its pending placements
+        // withdrawn, and the executed hour-0 unit stands as sunk work.
+        let lanes = vec![spot_lane(1.0, 0.25)];
+        let items = vec![unit_item(9, 3, 3)];
+        let s = pack_backfill(&lanes, &items, 24);
+        assert!(s.shed.is_empty());
+        assert_eq!(s.placements.len(), 3);
+        let (r, moved) = rehome_backfill(&lanes, &items, &s, &[0], 1, 24);
+        assert_eq!(moved, vec![9]);
+        assert_eq!(r.shed, vec![9]);
+        assert_eq!(r.placements.len(), 1, "only the executed hour survives");
+        assert_eq!(r.placements[0].hour, 0);
     }
 }

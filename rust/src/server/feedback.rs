@@ -296,6 +296,44 @@ mod tests {
     }
 
     #[test]
+    fn restore_hysteresis_pins_the_exact_tier_trajectory() {
+        let cfg = FeedbackConfig::default();
+        assert_eq!(cfg.restore_windows, 3, "trajectory below is pinned to the 3-window streak");
+        let mut fc = FeedbackController::new(cfg);
+        let pressure = || window(52.0, 0, 0.95, vec![stream(0, 5, 5.0, 5.0)]);
+        let calm = || window(0.0, 0, 0.2, vec![stream(0, 5, 5.0, 5.0)]);
+        // Not pressured, but utilization above `util_restore`: such a window
+        // neither sheds nor counts toward the calm streak — it resets it.
+        let neutral = || window(0.0, 0, 0.7, vec![stream(0, 5, 5.0, 5.0)]);
+
+        let steps: Vec<(InstanceWindow, u8)> = vec![
+            (pressure(), 1),
+            (pressure(), 2),
+            (calm(), 2),     // streak 1 of 3
+            (calm(), 2),     // streak 2 of 3
+            (pressure(), 3), // pressure wipes the streak and sheds
+            (calm(), 3),
+            (calm(), 3),
+            (pressure(), 3), // capped at max_tier; streak wiped again
+            (calm(), 3),     // the full streak must be re-earned...
+            (calm(), 3),
+            (calm(), 2),     // ...and the 3rd consecutive calm window restores
+            (calm(), 1),     // restore credit: one further tier per calm window
+            (pressure(), 2), // a climb is interrupted immediately
+            (calm(), 2),
+            (calm(), 2),
+            (neutral(), 2), // neither calm nor pressured: streak resets
+            (calm(), 2),
+            (calm(), 2),
+            (calm(), 1), // restore again waits the full three calm windows
+        ];
+        for (i, (w, want)) in steps.into_iter().enumerate() {
+            fc.observe(&[w]);
+            assert_eq!(fc.feedback_for(0).shed_tier, want, "window {i}");
+        }
+    }
+
+    #[test]
     fn drop_rate_alone_triggers_a_shed() {
         let mut fc = FeedbackController::new(FeedbackConfig::default());
         // 2% drops with an empty queue still counts as pressure.

@@ -205,6 +205,14 @@ const FEAS_EPS: f64 = 1e-7;
 const RC_DEGEN_BAND: f64 = 1e-7;
 /// Iterations of Dantzig pricing before switching to Bland's rule.
 const BLAND_AFTER: usize = 5_000;
+
+/// Candidate-list size for partial pricing: an eighth of the columns,
+/// clamped to `[16, 128]`. Small LPs keep enough candidates to certify
+/// cheaply; huge LPs bound the per-refill sort and the list's repricing
+/// cost.
+pub(crate) fn partial_candidate_cap(n: usize) -> usize {
+    (n / 8).clamp(16, 128)
+}
 const MAX_ITERS: usize = 200_000;
 /// Iteration budget for the warm-path dual repair. A genuine RHS-only delta
 /// repairs in a handful of pivots; a degenerate stall must fail fast to
@@ -449,6 +457,9 @@ struct Revised {
     zcol: Vec<f64>,
     /// Candidate list of attractive non-basic columns (partial pricing).
     candidates: Vec<usize>,
+    /// Iterations before falling back to Bland's rule ([`BLAND_AFTER`]
+    /// everywhere except tests, which lower it to pin the fallback path).
+    bland_after: usize,
 }
 
 impl Revised {
@@ -489,6 +500,7 @@ impl Revised {
             rc: vec![0.0; n],
             zcol: vec![0.0; m],
             candidates: Vec::new(),
+            bland_after: BLAND_AFTER,
         }
     }
 
@@ -536,6 +548,7 @@ impl Revised {
             rc: vec![0.0; n],
             zcol: vec![0.0; m],
             candidates: Vec::new(),
+            bland_after: BLAND_AFTER,
         })
     }
 
@@ -715,7 +728,7 @@ impl Revised {
     /// reproduces bit for bit.
     fn optimize_dantzig(&mut self, max_iters: usize) -> Result<bool> {
         for iter in 0..max_iters {
-            let bland = iter >= BLAND_AFTER;
+            let bland = iter >= self.bland_after;
             self.full_price();
             let Some(col) = choose_entering(self.n, bland, |j| self.rc[j]) else {
                 return Ok(true);
@@ -745,10 +758,10 @@ impl Revised {
     /// itself escalates to Bland's rule), so termination matches the
     /// reference mode's guarantee.
     fn optimize_partial(&mut self, max_iters: usize) -> Result<bool> {
-        let cap = (self.n / 8).clamp(16, 128);
+        let cap = partial_candidate_cap(self.n);
         self.candidates.clear();
         for iter in 0..max_iters {
-            if iter >= BLAND_AFTER {
+            if iter >= self.bland_after {
                 return self.optimize_dantzig(max_iters - iter);
             }
             if !self.prime_candidates(cap) {
@@ -1739,5 +1752,109 @@ mod tests {
         assert!(part.full_sweeps < part.pricing_iterations || part.pricing_iterations <= 2);
         // Fill telemetry flows through on both modes.
         assert!(full.eta_fill_cap > 0 && part.eta_fill_cap > 0);
+    }
+
+    /// Random feasible covering LP: positive costs, `Ge` rows only — so the
+    /// cold layout carries one surplus and one artificial per row and the
+    /// total column count is exactly `cols + 2 * rows`.
+    fn covering_lp_sized(cols: usize, rows: usize, seed: u64) -> Lp {
+        use crate::util::Rng;
+        let mut rng = Rng::new(seed);
+        let mut lp = Lp::new(cols);
+        for j in 0..cols {
+            lp.set_objective(j, rng.range_f64(1.0, 2.0));
+        }
+        for r in 0..rows {
+            let mut coeffs: Vec<(usize, f64)> = Vec::new();
+            for j in 0..cols {
+                if rng.bool(0.25) {
+                    coeffs.push((j, rng.range_f64(0.5, 1.5)));
+                }
+            }
+            if coeffs.is_empty() {
+                coeffs.push((r % cols, 1.0));
+            }
+            lp.add_constraint(coeffs, Op::Ge, rng.range_f64(1.0, 4.0));
+        }
+        lp
+    }
+
+    #[test]
+    fn partial_candidate_cap_clamps_at_the_documented_edges() {
+        // Lower clamp: any n up to 16*8 prices at least 16 candidates.
+        assert_eq!(partial_candidate_cap(0), 16);
+        assert_eq!(partial_candidate_cap(127), 16);
+        assert_eq!(partial_candidate_cap(128), 16);
+        assert_eq!(partial_candidate_cap(135), 16);
+        // First value past the lower clamp.
+        assert_eq!(partial_candidate_cap(136), 17);
+        // Upper clamp: n/8 saturates at 128 from n = 1024 on.
+        assert_eq!(partial_candidate_cap(1023), 127);
+        assert_eq!(partial_candidate_cap(1024), 128);
+        assert_eq!(partial_candidate_cap(1025), 128);
+        assert_eq!(partial_candidate_cap(1 << 20), 128);
+    }
+
+    #[test]
+    fn partial_pricing_is_exact_at_both_cap_clamp_edges() {
+        // Column counts landing exactly on the clamp edges: 96 + 2*16 = 128
+        // (last LP still floored to 16 candidates) and 896 + 2*64 = 1024
+        // (first LP ceilinged to 128).
+        for &(cols, rows) in &[(96usize, 16usize), (896, 64)] {
+            let lp = covering_lp_sized(cols, rows, 42);
+            let n = cols + 2 * rows;
+            let cap = partial_candidate_cap(n);
+            let mut ds = LpStats::default();
+            let dantzig = match solve_lp_with_stats(&lp, &mut ds).unwrap() {
+                LpOutcome::Optimal(sol) => sol.objective,
+                other => panic!("reference not optimal: {other:?}"),
+            };
+            let mut ps = LpStats::default();
+            let partial = match solve_lp_partial_with_stats(&lp, &mut ps).unwrap() {
+                LpOutcome::Optimal(sol) => sol.objective,
+                other => panic!("partial not optimal: {other:?}"),
+            };
+            assert!(
+                (partial - dantzig).abs() < 1e-6,
+                "objective drift at n={n}: {partial} vs {dantzig}"
+            );
+            // Optimality was certified by at least one full sweep, and no
+            // pricing round ever priced more than a sweep plus a full
+            // candidate list.
+            assert!(ps.full_sweeps >= 1, "no certificate sweep at n={n}");
+            let bound = ps.full_sweeps * n as u64 + ps.pricing_iterations * cap as u64;
+            assert!(
+                ps.priced_columns <= bound,
+                "n={n}: priced {} > bound {bound} (cap {cap})",
+                ps.priced_columns
+            );
+        }
+    }
+
+    #[test]
+    fn partial_pricing_stall_falls_back_through_dantzig_to_bland() {
+        // Force the stall escape hatch on from iteration zero: the partial
+        // loop must hand over to the Dantzig loop, which itself starts in
+        // Bland mode — and the chained fallback must still certify the same
+        // optimum the reference mode finds.
+        let lp = covering_lp_sized(32, 8, 7);
+        let want = match solve_lp(&lp).unwrap() {
+            LpOutcome::Optimal(sol) => sol.objective,
+            other => panic!("reference not optimal: {other:?}"),
+        };
+        let mut rv = Revised::build_cold(&lp);
+        rv.pricing = Pricing::PartialCandidates;
+        rv.bland_after = 0;
+        match rv.run_cold(&lp).unwrap() {
+            LpOutcome::Optimal(sol) => {
+                assert!(
+                    (sol.objective - want).abs() < 1e-6,
+                    "fallback chain lost the optimum: {} vs {want}",
+                    sol.objective
+                );
+            }
+            other => panic!("fallback chain must stay exact, got {other:?}"),
+        }
+        assert!(rv.stats.iterations > 0, "the fallback path did no work");
     }
 }

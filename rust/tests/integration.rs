@@ -432,3 +432,73 @@ fn bench_closedloop_fields_are_populated_and_schema_checked() {
     assert!(parsed.get_f64("over_feedback_streams").unwrap() > 0.0);
     assert!(parsed.get_f64("under_degraded_tier_streams").unwrap() > 0.0);
 }
+
+#[test]
+fn bench_spot_fields_are_populated_and_schema_checked() {
+    // `bench_spot` and this test call the same library replay
+    // (`camflow::bench::spot::run`), so the BENCH_spot.json fields cannot
+    // drift from what is checked here. The binary-shaped document is also
+    // validated against the canonical schema the binary itself gates on.
+    use camflow::bench::schema;
+    use camflow::util::json::{self, Value};
+    let outcome = camflow::bench::spot::run();
+    let doc = Value::obj(vec![
+        ("bench", Value::str("spot")),
+        ("spot", outcome.to_json()),
+        ("loop_ms", Value::num(1.0)),
+    ]);
+    schema::validate(&doc, &schema::SPOT).unwrap();
+    let parsed = json::parse(&json::to_string_pretty(&doc)).unwrap();
+    let spot = parsed.get("spot").unwrap();
+    for key in [
+        "queries",
+        "total_units",
+        "spot_backfill_usd",
+        "spot_live_usd",
+        "spot_revocations",
+        "spot_rehomed_items",
+        "spot_deadline_misses",
+        "spot_completed_units",
+        "spot_rounds_adopted",
+        "od_backfill_usd",
+        "od_deadline_misses",
+        "od_completed_units",
+        "savings_frac",
+        "miss_rate",
+    ] {
+        let v = spot
+            .get_f64(key)
+            .unwrap_or_else(|e| panic!("BENCH_spot field {key} missing: {e}"));
+        assert!(v.is_finite() && v >= 0.0, "{key} = {v}");
+    }
+    // The acceptance bars, re-checked on the parsed document: spot backfill
+    // strictly cheaper than the on-demand-only control, the storm actually
+    // revoked capacity, the certified gate adopted spot schedules, and the
+    // deadline-miss rate held under the storms.
+    assert!(spot.get_f64("spot_backfill_usd").unwrap() < spot.get_f64("od_backfill_usd").unwrap());
+    assert!(spot.get_f64("savings_frac").unwrap() > 0.0);
+    assert!(spot.get_f64("miss_rate").unwrap() <= 0.01);
+    assert!(spot.get_f64("spot_revocations").unwrap() > 0.0);
+    assert!(spot.get_f64("spot_rounds_adopted").unwrap() > 0.0);
+}
+
+#[test]
+fn bench_schemas_are_documented_field_by_field() {
+    // Every field each artifact schema declares must be documented in the
+    // artifact's own section of docs/BENCH_SCHEMAS.md (the conventions
+    // preamble covers page-wide fields like `bench`). Renaming a bench
+    // output without updating the docs page fails here, not in review.
+    use camflow::bench::schema::{self, PLANET, SOLVER, SPOT};
+    let md = include_str!("../../docs/BENCH_SCHEMAS.md");
+    let preamble = &md[..md.find("\n## ").expect("BENCH_SCHEMAS.md has sections")];
+    for s in [&SOLVER, &PLANET, &SPOT] {
+        let section = schema::doc_section(md, s.artifact)
+            .unwrap_or_else(|| panic!("{} has no section in BENCH_SCHEMAS.md", s.artifact));
+        for name in s.field_names() {
+            let documented = section.contains(&format!("`{name}`"))
+                || section.contains(&format!("`{name}[]`"))
+                || preamble.contains(&format!("`{name}`"));
+            assert!(documented, "{}: `{name}` undocumented in BENCH_SCHEMAS.md", s.artifact);
+        }
+    }
+}

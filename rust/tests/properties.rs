@@ -1,16 +1,18 @@
 //! Property-based tests over coordinator/packing/solver invariants, driven
 //! by the in-crate property harness (`util::proptest`).
 
-use camflow::cameras::{camera_at, StreamKey, StreamRequest};
+use camflow::cameras::{camera_at, scenarios, StreamKey, StreamRequest};
 use camflow::catalog::{Catalog, Dims};
 use camflow::coordinator::budget::{self, ComponentTelemetry};
 use camflow::coordinator::expand::{self, PrevAssignment, PrevSlot};
 use camflow::coordinator::shard::ShardedPlanner;
+use camflow::coordinator::spot::{SpotPlanner, SpotPlannerConfig};
 use camflow::coordinator::{Planner, PlannerConfig};
 use camflow::packing::{BinType, ItemGroup, PackedBin, Packing, PackingProblem};
 use camflow::geo::{self, cities, GeoPoint};
 use camflow::packing::heuristic::{self, simple_problem};
 use camflow::packing::mcvbp::{solve, solve_delta, DeltaHints, GhostGroup, PrevLayout, SolveOptions};
+use camflow::packing::mcvbp::{pack_backfill, rehome_backfill, BackfillItem, LaneKind, TemporalLane};
 use camflow::profiles::{Program, Resolution};
 use camflow::solver::{
     solve_lp_dense_with_stats, solve_lp_partial_with_stats, solve_lp_with_stats, Eta,
@@ -19,6 +21,7 @@ use camflow::solver::{
 use camflow::util::json;
 use camflow::util::proptest::check;
 use camflow::util::Rng;
+use std::collections::BTreeSet;
 
 /// Any feasible FFD packing respects headroom, covers every stream exactly
 /// once, and the exact solver never costs more.
@@ -1872,6 +1875,188 @@ fn prop_degrade_tiers_never_silence_streams() {
                 }
                 if req.effective_fps() > req.desired_fps {
                     return Err("shed raised the frame rate".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A preemption absorbed as a structural delta on the temporal axis moves
+/// only the preempted jobs: no surviving placement sits on a revoked lane at
+/// or after the cut hour, every untouched item keeps its placements
+/// bit-identically, every moved id really was stranded, fresh sheds come
+/// only from moved items, and the repaired bill re-prices exactly the
+/// occupied paid lane-hours.
+#[test]
+fn prop_preemption_absorb_moves_only_preempted_jobs() {
+    check(
+        0x5B07_0001,
+        80,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed: &u64| {
+            let mut rng = Rng::new(seed);
+            let horizon = 10 + rng.index(6);
+            // One free slack lane plus 1-4 paid lanes, mostly spot.
+            let mut lanes = vec![TemporalLane {
+                label: "slack".to_string(),
+                kind: LaneKind::LiveSlack,
+                usable: Dims::new(rng.range_f64(1.0, 6.0), rng.range_f64(2.0, 8.0), 0.0, 0.0),
+                hourly_cost: 0.0,
+                from_hour: 0,
+            }];
+            for l in 0..1 + rng.index(4) {
+                let spot = rng.bool(0.6);
+                lanes.push(TemporalLane {
+                    label: format!("paid{l}"),
+                    kind: if spot { LaneKind::Spot } else { LaneKind::OnDemand },
+                    usable: Dims::new(
+                        rng.range_f64(2.0, 12.0),
+                        rng.range_f64(4.0, 24.0),
+                        0.0,
+                        0.0,
+                    ),
+                    hourly_cost: rng.range_f64(0.05, 1.5),
+                    from_hour: 0,
+                });
+            }
+            let items: Vec<BackfillItem> = (0..3 + rng.index(8) as u64)
+                .map(|id| BackfillItem {
+                    id,
+                    demand: Dims::new(rng.range_f64(0.3, 3.0), rng.range_f64(0.3, 3.0), 0.0, 0.0),
+                    units: 1 + rng.index(5),
+                    deadline_hour: 2 + rng.index(horizon),
+                    preemptible: rng.bool(0.7),
+                })
+                .collect();
+            let schedule = pack_backfill(&lanes, &items, horizon);
+
+            // Revoke 1-2 paid lanes at a random cut hour.
+            let mut revoked: Vec<usize> = Vec::new();
+            for _ in 0..1 + rng.index(2) {
+                let l = 1 + rng.index(lanes.len() - 1);
+                if !revoked.contains(&l) {
+                    revoked.push(l);
+                }
+            }
+            let hour = rng.index(horizon);
+            let (repaired, moved) =
+                rehome_backfill(&lanes, &items, &schedule, &revoked, hour, horizon);
+
+            for p in &repaired.placements {
+                if p.hour >= hour && revoked.contains(&p.lane) {
+                    return Err(format!("{p:?} survived on a revoked lane"));
+                }
+            }
+            let stranded: BTreeSet<u64> = schedule
+                .placements
+                .iter()
+                .filter(|p| p.hour >= hour && revoked.contains(&p.lane))
+                .map(|p| p.item)
+                .collect();
+            for id in &moved {
+                if !stranded.contains(id) {
+                    return Err(format!("item {id} moved without being stranded"));
+                }
+            }
+            for item in &items {
+                if moved.contains(&item.id) {
+                    continue;
+                }
+                let before: Vec<_> =
+                    schedule.placements.iter().filter(|p| p.item == item.id).collect();
+                let after: Vec<_> =
+                    repaired.placements.iter().filter(|p| p.item == item.id).collect();
+                if before != after {
+                    return Err(format!("untouched item {} was rearranged", item.id));
+                }
+            }
+            for id in &repaired.shed {
+                if !schedule.shed.contains(id) && !moved.contains(id) {
+                    return Err(format!("item {id} shed without being preempted"));
+                }
+            }
+            if moved.is_empty() && repaired.placements != schedule.placements {
+                return Err("no-op absorb changed the schedule".to_string());
+            }
+            let mut cells: Vec<(usize, usize)> =
+                repaired.placements.iter().map(|p| (p.lane, p.hour)).collect();
+            cells.sort_unstable();
+            cells.dedup();
+            let bill: f64 = cells.iter().map(|&(l, _)| lanes[l].hourly_cost).sum();
+            if (bill - repaired.cost).abs() > 1e-9 {
+                return Err(format!("cost {} != rebill {bill}", repaired.cost));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// On identical live streams and backfill queries, the certified gate makes
+/// the spot-enabled planner's backfill schedule never costlier — and never
+/// more shedding — than the on-demand-only planner's; the live fleets are
+/// identical (live never rides revocable capacity), the on-demand-only plan
+/// offers no spot lanes at all, and non-preemptible items never land on one.
+#[test]
+fn prop_spot_plan_never_costlier_than_on_demand_only() {
+    let catalog =
+        Catalog::builtin().restrict(Some(&["c4.2xlarge", "c4.8xlarge"]), Some(&["us-east-2"]));
+    check(
+        0x5B07_0002,
+        25,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed: &u64| {
+            let mut rng = Rng::new(seed);
+            let queries = scenarios::diurnal_backfill(4 + rng.index(21), rng.next_u64());
+            let items = SpotPlanner::items_from_queries(&queries);
+            let requests: Vec<StreamRequest> = (0..1 + rng.index(3) as u64)
+                .map(|i| {
+                    StreamRequest::new(
+                        camera_at(i, "Chicago", cities::CHICAGO, Resolution::XGA, 30.0),
+                        Program::Zf,
+                        0.5,
+                    )
+                })
+                .collect();
+            let now_hour = rng.index(4);
+
+            let spot_cfg =
+                SpotPlannerConfig { horizon_hours: 48, use_spot: true, lanes_per_offering: 2 };
+            let od_cfg = SpotPlannerConfig { use_spot: false, ..spot_cfg };
+            let mut sp = SpotPlanner::new(catalog.clone(), PlannerConfig::st1(), spot_cfg);
+            let mut od = SpotPlanner::new(catalog.clone(), PlannerConfig::st1(), od_cfg);
+            let sp_plan = sp.plan(&requests, &items, now_hour).map_err(|e| e.to_string())?;
+            let od_plan = od.plan(&requests, &items, now_hour).map_err(|e| e.to_string())?;
+
+            if sp_plan.backfill_cost > od_plan.backfill_cost + 1e-9 {
+                return Err(format!(
+                    "spot backfill {} costlier than on-demand-only {}",
+                    sp_plan.backfill_cost, od_plan.backfill_cost
+                ));
+            }
+            if sp_plan.backfill_cost > sp_plan.baseline_cost + 1e-9 {
+                return Err("adopted schedule costlier than its own baseline".to_string());
+            }
+            if sp_plan.schedule.shed.len() > od_plan.schedule.shed.len() {
+                return Err(format!(
+                    "spot plan sheds {} items, on-demand-only {}",
+                    sp_plan.schedule.shed.len(),
+                    od_plan.schedule.shed.len()
+                ));
+            }
+            if (sp_plan.live.cost_per_hour - od_plan.live.cost_per_hour).abs() > 1e-9 {
+                return Err("live fleet cost diverged between configurations".to_string());
+            }
+            if od_plan.lanes.iter().any(|l| l.kind == LaneKind::Spot) {
+                return Err("on-demand-only plan offered a spot lane".to_string());
+            }
+            for p in &sp_plan.schedule.placements {
+                if sp_plan.lanes[p.lane].kind != LaneKind::Spot {
+                    continue;
+                }
+                let item = items.iter().find(|it| it.id == p.item).expect("placed item exists");
+                if !item.preemptible {
+                    return Err(format!("non-preemptible item {} on a spot lane", p.item));
                 }
             }
             Ok(())
